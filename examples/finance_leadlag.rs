@@ -1,0 +1,166 @@
+//! Financial featurisation with lead-lag signatures (the workload the
+//! paper's §4 motivates): predict the forward realised volatility of a
+//! synthetic price series from the signature of its lead-lag transform,
+//! with a plain ridge regression on top — signatures as features for a
+//! linear model (the universal-approximation use-case).
+//!
+//!     cargo run --release --example finance_leadlag
+
+use pysiglib::sig::{batch_signature, sig_length, SigOptions};
+use pysiglib::transforms::Transform;
+use pysiglib::util::rng::Rng;
+
+/// Synthetic market: log-price with regime-switching volatility. Returns
+/// (windows `[n, len, 1]`, forward realised vol per window).
+fn make_dataset(rng: &mut Rng, n: usize, len: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut windows = Vec::with_capacity(n * len);
+    let mut targets = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Per-window stochastic volatility level, persistent within window.
+        let base_vol = 0.005 + 0.03 * rng.uniform();
+        let mut price: f64 = 0.0;
+        let mut vol = base_vol;
+        let mut win = Vec::with_capacity(len);
+        for _ in 0..len {
+            vol = (vol + 0.1 * base_vol * rng.normal()).clamp(0.2 * base_vol, 5.0 * base_vol);
+            price += vol * rng.normal();
+            win.push(price);
+        }
+        // Forward vol is driven by the same regime: realised vol of a fresh
+        // continuation (what a trader would want to predict).
+        let mut fwd = 0.0;
+        for _ in 0..len {
+            let r = vol * rng.normal();
+            fwd += r * r;
+        }
+        targets.push((fwd / len as f64).sqrt());
+        windows.extend(win);
+    }
+    (windows, targets)
+}
+
+/// Ridge regression via normal equations (features are a few hundred wide).
+fn ridge_fit(x: &[f64], y: &[f64], n: usize, p: usize, lambda: f64) -> Vec<f64> {
+    // A = XᵀX + λI (p×p), b = Xᵀy.
+    let mut a = vec![0.0; p * p];
+    let mut b = vec![0.0; p];
+    for i in 0..n {
+        let row = &x[i * p..(i + 1) * p];
+        for j in 0..p {
+            b[j] += row[j] * y[i];
+            for k in j..p {
+                a[j * p + k] += row[j] * row[k];
+            }
+        }
+    }
+    for j in 0..p {
+        for k in 0..j {
+            a[j * p + k] = a[k * p + j];
+        }
+        a[j * p + j] += lambda;
+    }
+    // Cholesky solve.
+    let mut l = vec![0.0; p * p];
+    for i in 0..p {
+        for j in 0..=i {
+            let mut s = a[i * p + j];
+            for k in 0..j {
+                s -= l[i * p + k] * l[j * p + k];
+            }
+            if i == j {
+                l[i * p + i] = s.max(1e-12).sqrt();
+            } else {
+                l[i * p + j] = s / l[j * p + j];
+            }
+        }
+    }
+    let mut z = vec![0.0; p];
+    for i in 0..p {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * p + k] * z[k];
+        }
+        z[i] = s / l[i * p + i];
+    }
+    let mut w = vec![0.0; p];
+    for i in (0..p).rev() {
+        let mut s = z[i];
+        for k in i + 1..p {
+            s -= l[k * p + i] * w[k];
+        }
+        w[i] = s / l[i * p + i];
+    }
+    w
+}
+
+fn r2(pred: &[f64], y: &[f64]) -> f64 {
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    let ss_tot: f64 = y.iter().map(|v| (v - mean) * (v - mean)).sum();
+    let ss_res: f64 = pred.iter().zip(y).map(|(p, v)| (p - v) * (p - v)).sum();
+    1.0 - ss_res / ss_tot
+}
+
+fn main() {
+    let mut rng = Rng::new(2024);
+    let (n_train, n_test, len) = (512, 256, 64);
+    let (xtr, ytr) = make_dataset(&mut rng, n_train, len);
+    let (xte, yte) = make_dataset(&mut rng, n_test, len);
+
+    // Feature map: signature of the lead-lag(+time) path, depth 3 — the QV
+    // information lives in the lead/lag cross terms (Itô-signature proxy).
+    let depth = 3;
+    let tr = Transform::LeadLagTimeAug;
+    let opts = SigOptions::new(depth).transform(tr);
+    let p = sig_length(tr.out_dim(1), depth);
+    let t = std::time::Instant::now();
+    let ftr = batch_signature(&xtr, n_train, len, 1, &opts);
+    let fte = batch_signature(&xte, n_test, len, 1, &opts);
+    println!(
+        "lead-lag signature features: {p} per window, {:.3}s for {} windows",
+        t.elapsed().as_secs_f64(),
+        n_train + n_test
+    );
+
+    let w = ridge_fit(&ftr, &ytr, n_train, p, 1e-6);
+    let pred: Vec<f64> = (0..n_test)
+        .map(|i| {
+            fte[i * p..(i + 1) * p]
+                .iter()
+                .zip(&w)
+                .map(|(f, w)| f * w)
+                .sum()
+        })
+        .collect();
+    let r2_sig = r2(&pred, &yte);
+
+    // Baseline 1: constant predictor (R² = 0 by construction).
+    // Baseline 2: plain increment features (endpoint + abs-increment mean) —
+    // what you get without signatures.
+    let mut fb_tr = Vec::with_capacity(n_train * 3);
+    let mut fb_te = Vec::with_capacity(n_test * 3);
+    let naive_feats = |x: &[f64], out: &mut Vec<f64>| {
+        let l = len;
+        let total = x[l - 1] - x[0];
+        let mav: f64 = (0..l - 1).map(|i| (x[i + 1] - x[i]).abs()).sum::<f64>() / (l - 1) as f64;
+        out.extend([1.0, total, mav]);
+    };
+    for i in 0..n_train {
+        naive_feats(&xtr[i * len..(i + 1) * len], &mut fb_tr);
+    }
+    for i in 0..n_test {
+        naive_feats(&xte[i * len..(i + 1) * len], &mut fb_te);
+    }
+    let wb = ridge_fit(&fb_tr, &ytr, n_train, 3, 1e-8);
+    let pred_b: Vec<f64> = (0..n_test)
+        .map(|i| fb_te[i * 3..(i + 1) * 3].iter().zip(&wb).map(|(f, w)| f * w).sum())
+        .collect();
+    let r2_naive = r2(&pred_b, &yte);
+
+    println!("test R²: lead-lag signature features = {r2_sig:.4}, naive features = {r2_naive:.4}");
+    assert!(
+        r2_sig > r2_naive,
+        "signature features should beat naive features"
+    );
+    assert!(r2_sig > 0.5, "signature features should be predictive");
+    println!("finance_leadlag OK");
+}

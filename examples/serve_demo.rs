@@ -1,0 +1,110 @@
+//! Serving demo: start the coordinator in-process, drive it with concurrent
+//! clients over loopback TCP, and report throughput / latency / batching
+//! metrics — the L3 story end-to-end.
+//!
+//!     cargo run --release --example serve_demo
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pysiglib::coordinator::{serve, Batcher, BatcherConfig, Client, Op, Router};
+use pysiglib::runtime::RuntimeHandle;
+use pysiglib::util::rng::Rng;
+
+fn main() {
+    // Prefer the PJRT artifacts when present (exercises the AOT path for
+    // matching shapes); the native backend serves everything else.
+    let router = match RuntimeHandle::spawn("artifacts") {
+        Ok(rt) => {
+            println!(
+                "PJRT runtime: platform={}, {} artifacts",
+                rt.platform(),
+                rt.manifest().len()
+            );
+            Router::with_runtime(rt)
+        }
+        Err(_) => {
+            println!("artifacts/ not built; serving with the native backend only");
+            Router::native_only()
+        }
+    };
+    let batcher = Arc::new(Batcher::start(
+        Arc::new(router),
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(800),
+        },
+    ));
+    let handle = serve("127.0.0.1:0", batcher.clone()).expect("bind");
+    println!("coordinator listening on {}", handle.addr);
+
+    let n_clients = 6;
+    let per_client = 200;
+    let (len, dim) = (64usize, 3usize);
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = handle.addr;
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut rng = Rng::new(7000 + c as u64);
+                let mut lat_us: Vec<u64> = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let x = rng.brownian_path(len, dim, 0.3);
+                    let t = Instant::now();
+                    let r = match i % 3 {
+                        0 => client.signature(&x, len, dim, 4).map(|r| r.map(|_| ())),
+                        1 => {
+                            let y = rng.brownian_path(len, dim, 0.3);
+                            client.sig_kernel(&x, &y, len, dim).map(|r| r.map(|_| ()))
+                        }
+                        _ => client
+                            .call(
+                                Op::Signature {
+                                    depth: 4,
+                                    transform: 2, // lead-lag
+                                },
+                                len,
+                                dim,
+                                x,
+                            )
+                            .map(|r| r.map(|_| ())),
+                    };
+                    match r {
+                        Ok(Ok(())) => lat_us.push(t.elapsed().as_micros() as u64),
+                        Ok(Err(e)) => panic!("server error: {e}"),
+                        Err(e) => panic!("io error: {e}"),
+                    }
+                }
+                lat_us
+            })
+        })
+        .collect();
+
+    let mut all_lat: Vec<u64> = Vec::new();
+    for w in workers {
+        all_lat.extend(w.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all_lat.sort_unstable();
+    let total = all_lat.len();
+    let p = |q: f64| all_lat[((total - 1) as f64 * q) as usize];
+    println!("\n{} requests over {} clients in {wall:.2}s", total, n_clients);
+    println!("throughput: {:.0} req/s", total as f64 / wall);
+    println!(
+        "latency: p50={}µs p90={}µs p99={}µs max={}µs",
+        p(0.50),
+        p(0.90),
+        p(0.99),
+        p(1.0)
+    );
+    println!("server metrics: {}", batcher.metrics.summary());
+    assert_eq!(
+        batcher
+            .metrics
+            .responses_total
+            .load(std::sync::atomic::Ordering::Relaxed),
+        total as u64
+    );
+    println!("serve_demo OK");
+}

@@ -1,0 +1,105 @@
+"""AOT lowering: jit → StableHLO → XLA HLO **text** under artifacts/.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Each artifact gets a sidecar line in ``artifacts/manifest.txt``:
+    name|input0_shape,input1_shape,...|output_dtype
+so the Rust runtime can validate shapes before dispatch.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Artifact registry: name -> (callable, example specs). Shapes are the
+# serving shapes the Rust coordinator batches to (see coordinator::batcher).
+def registry():
+    f = jnp.float32
+    return {
+        # Paired signature-kernel batch: x[B,L,d], y[B,L,d] -> k[B].
+        "sigkernel_b8_l16_d3": (
+            lambda x, y: (model.sig_kernel_batch(x, y, 0, 0),),
+            [spec(8, 16, 3, dtype=f), spec(8, 16, 3, dtype=f)],
+        ),
+        # Exact kernel vjp bundled with the forward (value, grad_x, grad_y).
+        "sigkernel_vjp_b4_l16_d3": (
+            lambda x, y: _kernel_value_and_grads(x, y),
+            [spec(4, 16, 3, dtype=f), spec(4, 16, 3, dtype=f)],
+        ),
+        # Truncated signatures: paths[B,L,d] -> sig[B,S].
+        "signature_b8_l32_d2_n4": (
+            lambda p: (model.signature_batch(p, 4),),
+            [spec(8, 32, 2, dtype=f)],
+        ),
+        # Lead-lag signature featuriser.
+        "signature_leadlag_b8_l16_d2_n3": (
+            lambda p: (model.signature_batch_leadlag(p, 3),),
+            [spec(8, 16, 2, dtype=f)],
+        ),
+        # MMD² loss + generator gradient — the e2e training step core.
+        "mmd2_grad_b4_l12_d2": (
+            lambda x, y: model.mmd2_loss_and_grad(x, y, 0, 0),
+            [spec(4, 12, 2, dtype=f), spec(4, 12, 2, dtype=f)],
+        ),
+    }
+
+
+def _kernel_value_and_grads(x, y):
+    k = model.sig_kernel_batch(x, y, 0, 0)
+    # Sum-of-kernels cotangent: per-pair unit gradients.
+    gx, gy = jax.grad(
+        lambda xx, yy: model.sig_kernel_batch(xx, yy, 0, 0).sum(), argnums=(0, 1)
+    )(x, y)
+    return k, gx, gy
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, specs) in registry().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        shapes = ",".join("x".join(map(str, s.shape)) for s in specs)
+        manifest.append(f"{name}|{shapes}|f32")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

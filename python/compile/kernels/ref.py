@@ -1,0 +1,152 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything here is written for clarity, not speed: naive level-by-level
+tensor products for signatures and a plain double loop (via ``lax.scan``)
+for the Goursat PDE. These are the correctness anchors — the Pallas kernels
+in this package and the Rust native implementations are both validated
+against them (the latter through golden values exported by the test suite).
+
+All functions are differentiable with ``jax.grad``, which gives reference
+gradients for the custom-vjp wiring in ``model.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def level_offsets(dim: int, depth: int) -> list[int]:
+    """Flat offsets of levels 0..depth (+ total) for dimension ``dim``."""
+    offs = [0]
+    size = 1
+    for _ in range(depth + 1):
+        offs.append(offs[-1] + size)
+        size *= dim
+    return offs
+
+
+def sig_length(dim: int, depth: int) -> int:
+    """Flat signature length including the scalar level."""
+    return level_offsets(dim, depth)[-1]
+
+
+def exp_increment(z: jnp.ndarray, depth: int) -> list[jnp.ndarray]:
+    """Tensor exponential of a level-1 increment, as a list of levels."""
+    levels = [jnp.ones(()), z]
+    for k in range(2, depth + 1):
+        levels.append(jnp.tensordot(levels[-1], z, axes=0) / k)
+    return levels
+
+
+def tensor_prod_levels(a: list[jnp.ndarray], b: list[jnp.ndarray], depth: int):
+    """Truncated tensor-algebra product of two level lists."""
+    out = []
+    for n_ in range(depth + 1):
+        acc = jnp.zeros((a[1].shape[0],) * n_) if n_ > 0 else jnp.zeros(())
+        for i in range(n_ + 1):
+            term = jnp.tensordot(a[i], b[n_ - i], axes=0)
+            acc = acc + term.reshape(acc.shape) if n_ > 0 else acc + term
+        out.append(acc)
+    return out
+
+
+def signature_ref(path: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Truncated signature of one path ``[L, d]`` -> flat ``[sig_length]``.
+
+    Naive Chen products of segment exponentials.
+    """
+    length, dim = path.shape
+    z0 = path[1] - path[0]
+    levels = exp_increment(z0, depth)
+    for step in range(1, length - 1):
+        z = path[step + 1] - path[step]
+        levels = tensor_prod_levels(levels, exp_increment(z, depth), depth)
+    flat = [lv.reshape(-1) for lv in levels]
+    flat[0] = jnp.ones((1,))
+    return jnp.concatenate(flat)
+
+
+def signature_batch_ref(paths: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Batched [B, L, d] -> [B, sig_length]."""
+    return jax.vmap(lambda p: signature_ref(p, depth))(paths)
+
+
+def solve_pde_ref(
+    delta: jnp.ndarray, lam1: int = 0, lam2: int = 0
+) -> jnp.ndarray:
+    """Goursat PDE terminal value from the increment-product matrix ``[m, n]``.
+
+    Row-by-row scan; within a row the recurrence is a sequential carry, also
+    a scan. Differentiable, dyadic refinement applied by index arithmetic.
+    """
+    m, n = delta.shape
+    rows, cols = m << lam1, n << lam2
+    scale = 1.0 / (1 << (lam1 + lam2))
+
+    t_idx = jnp.arange(cols) >> lam2  # cell column -> delta column
+
+    def row_step(prev_row, s):
+        drow = delta[s >> lam1]  # [n]
+        p = drow[t_idx] * scale  # [cols]
+        a = 1.0 + 0.5 * p + p * p / 12.0
+        b = 1.0 - p * p / 12.0
+
+        def cell(kleft, t):
+            v = (kleft + prev_row[t + 1]) * a[t] - prev_row[t] * b[t]
+            return v, v
+
+        _, new_tail = jax.lax.scan(cell, jnp.asarray(1.0), jnp.arange(cols))
+        new_row = jnp.concatenate([jnp.ones((1,)), new_tail])
+        return new_row, None
+
+    init = jnp.ones(cols + 1)
+    final_row, _ = jax.lax.scan(row_step, init, jnp.arange(rows))
+    return final_row[-1]
+
+
+def delta_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Increment inner-product matrix of two paths [Lx,d], [Ly,d]."""
+    dx = x[1:] - x[:-1]
+    dy = y[1:] - y[:-1]
+    return dx @ dy.T
+
+
+def sig_kernel_ref(
+    x: jnp.ndarray, y: jnp.ndarray, lam1: int = 0, lam2: int = 0
+) -> jnp.ndarray:
+    """Signature kernel k(x, y) of two paths."""
+    return solve_pde_ref(delta_ref(x, y), lam1, lam2)
+
+
+def sig_kernel_batch_ref(x, y, lam1: int = 0, lam2: int = 0):
+    """Paired batch [B,Lx,d] x [B,Ly,d] -> [B]."""
+    return jax.vmap(lambda a, b: sig_kernel_ref(a, b, lam1, lam2))(x, y)
+
+
+def gram_ref(x, y, lam1: int = 0, lam2: int = 0):
+    """Gram matrix [Bx, By]."""
+    return jax.vmap(
+        lambda a: jax.vmap(lambda b: sig_kernel_ref(a, b, lam1, lam2))(y)
+    )(x)
+
+
+def truncated_kernel_ref(x, y, depth: int):
+    """<S(x), S(y)> truncated at ``depth`` — series check for the PDE."""
+    return jnp.dot(signature_ref(x, depth), signature_ref(y, depth))
+
+
+def time_augment_ref(path: jnp.ndarray) -> jnp.ndarray:
+    """Append a uniform time channel."""
+    length = path.shape[0]
+    t = jnp.linspace(0.0, 1.0, length)[:, None]
+    return jnp.concatenate([path, t], axis=1)
+
+
+def lead_lag_ref(path: jnp.ndarray) -> jnp.ndarray:
+    """Lead-lag transform: [L, d] -> [2L-1, 2d]."""
+    length = path.shape[0]
+    idx = jnp.arange(2 * length - 1)
+    lead = path[(idx + 1) // 2]
+    lag = path[idx // 2]
+    return jnp.concatenate([lead, lag], axis=1)

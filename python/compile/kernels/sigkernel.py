@@ -1,0 +1,207 @@
+"""Layer-1 Pallas kernels for the signature-kernel Goursat PDE.
+
+TPU adaptation of the paper's CUDA scheme (§3.3) — see DESIGN.md
+§Hardware-Adaptation:
+
+* one *program instance* per batch pair (CUDA: one thread block per pair);
+* the anti-diagonal is a VMEM *vector*, updated by fused VPU ops (CUDA:
+  32 threads of a warp, one per entry);
+* only the current anti-diagonal and the two before it are live, rotated
+  through the ``fori_loop`` carry (CUDA: three shared-memory buffers);
+* the Δ precompute is a batched matmul on the MXU (CUDA: cuBLAS).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so correctness is validated on CPU and real-TPU
+performance is estimated from the VMEM/MXU model in DESIGN.md.
+
+The backward kernel implements Algorithm 4 (the paper's exact-gradient
+scheme): one reverse wavefront computing the adjoint d1 and scattering
+∂F/∂Δ per refined cell.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wavefront(delta, lam1: int, lam2: int):
+    """Forward anti-diagonal sweep. ``delta``: [m, n]. Returns (kRC, diags).
+
+    ``diags`` stacks every anti-diagonal (indexed by row i), so the stored
+    grid is recovered as k[i, j] = diags[i + j, i]; the backward kernel reads
+    it in the same diagonal form it was produced.
+    """
+    m, n = delta.shape
+    rows, cols = m << lam1, n << lam2
+    scale = 1.0 / (1 << (lam1 + lam2))
+    idx = jnp.arange(rows + 1)
+
+    # Cell lookup for node (i, j): p = Δ[(i-1) >> λ1, (j-1) >> λ2] · scale.
+    def p_for_diag(mdiag):
+        j = mdiag - idx
+        ci = jnp.clip((idx - 1) >> lam1, 0, m - 1)
+        cj = jnp.clip((j - 1) >> lam2, 0, n - 1)
+        return delta[ci, cj] * scale, j
+
+    ones = jnp.ones(rows + 1, delta.dtype)
+
+    def body(mdiag, carry):
+        prev2, prev, diags = carry
+        p, j = p_for_diag(mdiag)
+        a = 1.0 + 0.5 * p + p * p / 12.0
+        b = 1.0 - p * p / 12.0
+        prev_im1 = jnp.concatenate([jnp.ones((1,), delta.dtype), prev[:-1]])
+        prev2_im1 = jnp.concatenate([jnp.ones((1,), delta.dtype), prev2[:-1]])
+        val = (prev_im1 + prev) * a - prev2_im1 * b
+        boundary = (idx == 0) | (j <= 0) | (j > cols) | (idx > rows)
+        cur = jnp.where(boundary, 1.0, val)
+        diags = jax.lax.dynamic_update_index_in_dim(diags, cur, mdiag, 0)
+        return prev2, prev, diags  # rotated below
+
+    def rotated(mdiag, carry):
+        prev2, prev, diags = carry
+        _, _, diags = body(mdiag, (prev2, prev, diags))
+        cur = diags[mdiag]
+        return prev, cur, diags
+
+    diags0 = jnp.ones((rows + cols + 1, rows + 1), delta.dtype)
+    carry = (ones, ones, diags0)  # diag -1 (dummy), diag 0 (all boundary = 1)
+    carry = jax.lax.fori_loop(1, rows + cols + 1, rotated, carry)
+    diags = carry[2]
+    return diags[rows + cols, rows], diags
+
+
+def _sweep_light(delta, lam1: int, lam2: int):
+    """Forward sweep keeping only the three rotating diagonals (the exact
+    shared-memory footprint of the paper's CUDA kernel)."""
+    m, n = delta.shape
+    rows, cols = m << lam1, n << lam2
+    scale = 1.0 / (1 << (lam1 + lam2))
+    idx = jnp.arange(rows + 1)
+    ones = jnp.ones(rows + 1, delta.dtype)
+
+    def body(mdiag, carry):
+        prev2, prev = carry
+        j = mdiag - idx
+        ci = jnp.clip((idx - 1) >> lam1, 0, m - 1)
+        cj = jnp.clip((j - 1) >> lam2, 0, n - 1)
+        p = delta[ci, cj] * scale
+        a = 1.0 + 0.5 * p + p * p / 12.0
+        b = 1.0 - p * p / 12.0
+        prev_im1 = jnp.concatenate([jnp.ones((1,), delta.dtype), prev[:-1]])
+        prev2_im1 = jnp.concatenate([jnp.ones((1,), delta.dtype), prev2[:-1]])
+        val = (prev_im1 + prev) * a - prev2_im1 * b
+        boundary = (idx == 0) | (j <= 0) | (j > cols)
+        cur = jnp.where(boundary, 1.0, val)
+        return prev, cur
+
+    _, last = jax.lax.fori_loop(1, rows + cols + 1, body, (ones, ones))
+    return last[rows]
+
+
+def _fwd_kernel(delta_ref, out_ref, *, lam1: int, lam2: int):
+    delta = delta_ref[0]
+    out_ref[0] = _sweep_light(delta, lam1, lam2)
+
+
+@functools.partial(jax.jit, static_argnames=("lam1", "lam2"))
+def sig_kernel_pallas(delta: jnp.ndarray, lam1: int = 0, lam2: int = 0):
+    """Batched signature-kernel PDE solve: Δ ``[B, m, n]`` -> k ``[B]``."""
+    batch, m, n = delta.shape
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, lam1=lam1, lam2=lam2),
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, m, n), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), delta.dtype),
+        interpret=True,
+    )(delta)
+
+
+def _bwd_kernel(delta_ref, gout_ref, d2_ref, *, lam1: int, lam2: int):
+    """Algorithm 4: reverse wavefront -> exact ∂F/∂Δ for one pair."""
+    delta = delta_ref[0]
+    gout = gout_ref[0]
+    m, n = delta.shape
+    rows, cols = m << lam1, n << lam2
+    scale = 1.0 / (1 << (lam1 + lam2))
+    _, kdiags = _wavefront(delta, lam1, lam2)  # k[i,j] = kdiags[i+j, i]
+    idx = jnp.arange(rows + 1)
+
+    def p_at(ci, cj):
+        # p for cell (ci, cj), with masking handled by callers.
+        cci = jnp.clip(ci >> lam1, 0, m - 1)
+        ccj = jnp.clip(cj >> lam2, 0, n - 1)
+        return delta[cci, ccj] * scale
+
+    def body(step, carry):
+        # step counts down: diagonal mdiag = rows + cols - step.
+        next1, next2, d2 = carry
+        mdiag = rows + cols - step
+        j = mdiag - idx
+        interior = (idx >= 1) & (j >= 1) & (idx <= rows) & (j <= cols)
+        # d1[i,j] = d1[i+1,j]·A(p_{i,j-1}) + d1[i,j+1]·A(p_{i-1,j})
+        #         − d1[i+1,j+1]·B(p_{i,j})  (+ gout at the terminal node).
+        n1_ip1 = jnp.concatenate([next1[1:], jnp.zeros((1,), delta.dtype)])
+        n2_ip1 = jnp.concatenate([next2[1:], jnp.zeros((1,), delta.dtype)])
+        p_r = p_at(idx, j - 1)  # cell (i, j-1) feeding node (i+1, j)
+        p_d = p_at(idx - 1, j)  # cell (i-1, j) feeding node (i, j+1)
+        p_c = p_at(idx, j)  # cell (i, j) feeding node (i+1, j+1)
+        a_r = 1.0 + 0.5 * p_r + p_r * p_r / 12.0
+        a_d = 1.0 + 0.5 * p_d + p_d * p_d / 12.0
+        b_c = 1.0 - p_c * p_c / 12.0
+        term1 = jnp.where(idx < rows, n1_ip1 * a_r, 0.0)
+        term2 = jnp.where(j < cols, next1 * a_d, 0.0)
+        term3 = jnp.where((idx < rows) & (j < cols), n2_ip1 * b_c, 0.0)
+        val = term1 + term2 - term3
+        val = val + jnp.where((idx == rows) & (j == cols), gout, 0.0)
+        d1 = jnp.where(interior, val, 0.0)
+        # ∂F/∂Δ for cell (i-1, j-1) whose output node is (i, j):
+        # d1[i,j]·[(k[i,j-1] + k[i-1,j])·A'(p) − k[i-1,j-1]·B'(p)]·scale.
+        p = p_at(idx - 1, j - 1)
+        k_l = kdiags[jnp.clip(mdiag - 1, 0, rows + cols), idx]  # k[i, j-1]
+        k_u = kdiags[
+            jnp.clip(mdiag - 1, 0, rows + cols), jnp.clip(idx - 1, 0, rows)
+        ]  # k[i-1, j]
+        k_ul = kdiags[
+            jnp.clip(mdiag - 2, 0, rows + cols), jnp.clip(idx - 1, 0, rows)
+        ]  # k[i-1, j-1]
+        dk_dp = (k_l + k_u) * (0.5 + p / 6.0) + k_ul * (p / 6.0)
+        contrib = jnp.where(interior, d1 * dk_dp * scale, 0.0)
+        ci = jnp.clip((idx - 1) >> lam1, 0, m - 1)
+        cj = jnp.clip((j - 1) >> lam2, 0, n - 1)
+        flat = ci * n + cj
+        d2 = d2.at[flat].add(contrib)
+        return next1, d1, d2  # rotate: next2 <- next1 <- d1... see swap below
+
+    def rotated(step, carry):
+        next1, next2, d2 = carry
+        _, d1, d2 = body(step, (next1, next2, d2))
+        return d1, next1, d2
+
+    zeros = jnp.zeros(rows + 1, delta.dtype)
+    d2 = jnp.zeros(m * n, delta.dtype)
+    carry = (zeros, zeros, d2)  # diagonals beyond the terminal are 0
+    carry = jax.lax.fori_loop(0, rows + cols - 1, rotated, carry)
+    d2_ref[0] = carry[2].reshape(m, n)
+
+
+@functools.partial(jax.jit, static_argnames=("lam1", "lam2"))
+def sig_kernel_vjp_pallas(delta: jnp.ndarray, gout: jnp.ndarray, lam1: int = 0, lam2: int = 0):
+    """Batched exact ∂F/∂Δ: Δ ``[B,m,n]``, ∂F/∂k ``[B]`` -> ``[B,m,n]``."""
+    batch, m, n = delta.shape
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, lam1=lam1, lam2=lam2),
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, m, n), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, m, n), delta.dtype),
+        interpret=True,
+    )(delta, gout)

@@ -1,0 +1,122 @@
+"""Layer-2 JAX model: batched signature / signature-kernel computations with
+the Pallas kernels on the hot spots, path transformations, and the
+signature-kernel MMD loss head used by the end-to-end driver.
+
+This module is build-time only: `aot.py` lowers the jitted entry points to
+HLO text once; the Rust runtime executes the artifacts via PJRT and Python
+never appears on the request path.
+
+The kernel vjp is wired with ``jax.custom_vjp``: the forward pass is the
+Pallas wavefront solver, the backward pass is the Pallas Algorithm-4 kernel
+(exact gradients), chained to the paths with two einsum contractions (MXU)
+and a difference-adjoint scatter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sigkernel import sig_kernel_pallas, sig_kernel_vjp_pallas
+from .kernels.signature import signature_pallas
+
+
+# ---------------------------------------------------------------------------
+# Path transformations (paper §4)
+# ---------------------------------------------------------------------------
+
+def time_augment(paths: jnp.ndarray) -> jnp.ndarray:
+    """[B, L, d] -> [B, L, d+1], uniform time channel in [0, 1]."""
+    b, length, _ = paths.shape
+    t = jnp.broadcast_to(jnp.linspace(0.0, 1.0, length)[None, :, None], (b, length, 1))
+    return jnp.concatenate([paths, t.astype(paths.dtype)], axis=2)
+
+
+def lead_lag(paths: jnp.ndarray) -> jnp.ndarray:
+    """[B, L, d] -> [B, 2L-1, 2d] lead-lag transform."""
+    length = paths.shape[1]
+    idx = jnp.arange(2 * length - 1)
+    lead = paths[:, (idx + 1) // 2, :]
+    lag = paths[:, idx // 2, :]
+    return jnp.concatenate([lead, lag], axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Signature kernel with exact custom vjp
+# ---------------------------------------------------------------------------
+
+def _delta_batch(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Δ[b,i,j] = <dx_i, dy_j> — one batched matmul (MXU)."""
+    dx = x[:, 1:] - x[:, :-1]
+    dy = y[:, 1:] - y[:, :-1]
+    return jnp.einsum("bid,bjd->bij", dx, dy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def sig_kernel_batch(x: jnp.ndarray, y: jnp.ndarray, lam1: int = 0, lam2: int = 0):
+    """Paired signature kernels k(x_b, y_b): [B,Lx,d] × [B,Ly,d] -> [B]."""
+    return sig_kernel_pallas(_delta_batch(x, y), lam1, lam2)
+
+
+def _sk_fwd(x, y, lam1, lam2):
+    return sig_kernel_batch(x, y, lam1, lam2), (x, y)
+
+
+def _sk_bwd(lam1, lam2, res, gk):
+    x, y = res
+    delta = _delta_batch(x, y)
+    d2 = sig_kernel_vjp_pallas(delta, gk, lam1, lam2)  # [B, m, n]
+    dx = x[:, 1:] - x[:, :-1]
+    dy = y[:, 1:] - y[:, :-1]
+    gdx = jnp.einsum("bij,bjd->bid", d2, dy)
+    gdy = jnp.einsum("bij,bid->bjd", d2, dx)
+    gx = jnp.zeros_like(x).at[:, 1:].add(gdx).at[:, :-1].add(-gdx)
+    gy = jnp.zeros_like(y).at[:, 1:].add(gdy).at[:, :-1].add(-gdy)
+    return gx, gy
+
+
+sig_kernel_batch.defvjp(_sk_fwd, _sk_bwd)
+
+
+def sig_kernel_gram(x: jnp.ndarray, y: jnp.ndarray, lam1: int = 0, lam2: int = 0):
+    """Gram matrix [Bx, By] of pairwise signature kernels.
+
+    Materialises the pair batch and reuses the paired kernel, so the whole
+    Gram shares one Pallas dispatch — the batch dimension is what keeps the
+    device busy (paper §3.3: blocks of different kernels run asynchronously).
+    """
+    bx, lx, d = x.shape
+    by, ly, _ = y.shape
+    xr = jnp.repeat(x, by, axis=0)  # [Bx*By, Lx, d]
+    yr = jnp.tile(y, (bx, 1, 1))  # [Bx*By, Ly, d]
+    return sig_kernel_batch(xr, yr, lam1, lam2).reshape(bx, by)
+
+
+def mmd2_loss(x: jnp.ndarray, y: jnp.ndarray, lam1: int = 0, lam2: int = 0):
+    """Biased signature-kernel MMD²: the training loss for generative models
+    on time series (the paper's headline application)."""
+    kxx = sig_kernel_gram(x, x, lam1, lam2)
+    kxy = sig_kernel_gram(x, y, lam1, lam2)
+    kyy = sig_kernel_gram(y, y, lam1, lam2)
+    return kxx.mean() - 2.0 * kxy.mean() + kyy.mean()
+
+
+def mmd2_loss_and_grad(x: jnp.ndarray, y: jnp.ndarray, lam1: int = 0, lam2: int = 0):
+    """(loss, ∂loss/∂x) — the generator-training step's compute core."""
+    return jax.value_and_grad(lambda xx: mmd2_loss(xx, y, lam1, lam2))(x)
+
+
+# ---------------------------------------------------------------------------
+# Truncated signatures
+# ---------------------------------------------------------------------------
+
+def signature_batch(paths: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Batched truncated signature (Pallas Horner kernel): [B,L,d] -> [B,S]."""
+    return signature_pallas(paths, depth)
+
+
+def signature_batch_leadlag(paths: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Signature of the lead-lag-transformed batch (financial featuriser)."""
+    return signature_pallas(lead_lag(paths), depth)

@@ -1,0 +1,5 @@
+import jax
+
+# f64 everywhere in tests: the oracles are compared against each other and
+# against finite differences, where f32 noise would mask real bugs.
+jax.config.update("jax_enable_x64", True)

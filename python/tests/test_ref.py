@@ -1,0 +1,105 @@
+"""Sanity checks for the pure-jnp oracle itself: algebraic identities that
+hold independently of any implementation choice."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def brownian(key_seed, length, dim, scale=0.5):
+    rng = np.random.default_rng(key_seed)
+    steps = rng.normal(size=(length - 1, dim)) * scale
+    return jnp.asarray(np.vstack([np.zeros((1, dim)), np.cumsum(steps, 0)]))
+
+
+def test_sig_length_formula():
+    assert ref.sig_length(1, 6) == 7
+    assert ref.sig_length(3, 4) == 1 + 3 + 9 + 27 + 81
+    assert ref.level_offsets(2, 3) == [0, 1, 3, 7, 15]
+
+
+def test_linear_path_signature_is_exponential():
+    path = jnp.array([[0.0, 0.0], [1.0, 2.0]])
+    s = ref.signature_ref(path, 3)
+    # levels: 1, z, z⊗z/2, z⊗z⊗z/6
+    z = jnp.array([1.0, 2.0])
+    lvl2 = (jnp.outer(z, z) / 2).reshape(-1)
+    np.testing.assert_allclose(s[0], 1.0)
+    np.testing.assert_allclose(s[1:3], z)
+    np.testing.assert_allclose(s[3:7], lvl2, rtol=1e-12)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    st.integers(2, 8),
+    st.integers(1, 3),
+    st.integers(1, 4),
+    st.integers(0, 10_000),
+)
+def test_chen_identity(length, dim, depth, seed):
+    """S(x * y) = S(x) ⊗ S(y) — checked via concatenated paths."""
+    x = brownian(seed, length, dim)
+    y = brownian(seed + 1, length, dim) + x[-1]
+    full = jnp.vstack([x, y[1:] + (x[-1] - y[0])])
+    sx = ref.signature_ref(x, depth)
+    sy = ref.signature_ref(y, depth)
+    sfull = ref.signature_ref(full, depth)
+    # tensor product on flat arrays, via level lists
+    offs = ref.level_offsets(dim, depth)
+    lx = [sx[offs[k]:offs[k + 1]].reshape((dim,) * k) for k in range(depth + 1)]
+    ly = [sy[offs[k]:offs[k + 1]].reshape((dim,) * k) for k in range(depth + 1)]
+    prod = ref.tensor_prod_levels(
+        [l.reshape(l.shape) for l in lx], [l.reshape(l.shape) for l in ly], depth
+    )
+    flat = jnp.concatenate([p.reshape(-1) for p in prod])
+    np.testing.assert_allclose(np.asarray(sfull), np.asarray(flat), atol=1e-9)
+
+
+def test_pde_single_cell_closed_form():
+    p = 0.37
+    k = ref.solve_pde_ref(jnp.array([[p]]))
+    want = 2 * (1 + p / 2 + p * p / 12) - (1 - p * p / 12)
+    np.testing.assert_allclose(float(k), want, rtol=1e-12)
+
+
+def test_pde_zero_delta_is_one():
+    assert float(ref.solve_pde_ref(jnp.zeros((3, 4)))) == 1.0
+    assert float(ref.solve_pde_ref(jnp.zeros((3, 4)), 2, 1)) == 1.0
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(0, 10_000))
+def test_kernel_symmetry(length, dim, seed):
+    x = brownian(seed, length, dim)
+    y = brownian(seed + 7, length, dim)
+    kxy = ref.sig_kernel_ref(x, y)
+    kyx = ref.sig_kernel_ref(y, x)
+    np.testing.assert_allclose(float(kxy), float(kyx), rtol=1e-12)
+
+
+def test_kernel_matches_truncated_series():
+    x = brownian(3, 4, 2, scale=0.2)
+    y = brownian(4, 4, 2, scale=0.2)
+    k = ref.sig_kernel_ref(x, y, 6, 6)
+    ip = ref.truncated_kernel_ref(x, y, 10)
+    np.testing.assert_allclose(float(k), float(ip), rtol=2e-3)
+
+
+def test_lead_lag_shape_and_values():
+    p = jnp.array([[1.0], [2.0], [3.0]])
+    ll = ref.lead_lag_ref(p)
+    assert ll.shape == (5, 2)
+    np.testing.assert_allclose(
+        np.asarray(ll),
+        [[1, 1], [2, 1], [2, 2], [3, 2], [3, 3]],
+    )
+
+
+def test_time_augment():
+    p = jnp.zeros((5, 2))
+    ta = ref.time_augment_ref(p)
+    assert ta.shape == (5, 3)
+    np.testing.assert_allclose(np.asarray(ta[:, 2]), np.linspace(0, 1, 5))

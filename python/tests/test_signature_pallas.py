@@ -1,0 +1,60 @@
+"""Pallas Horner signature kernel vs the naive-Chen oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.signature import signature_pallas
+
+
+def brownian_batch(seed, b, length, dim, scale=0.5, dtype=jnp.float64):
+    rng = np.random.default_rng(seed)
+    steps = rng.normal(size=(b, length - 1, dim)) * scale
+    paths = np.concatenate(
+        [np.zeros((b, 1, dim)), np.cumsum(steps, axis=1)], axis=1
+    )
+    return jnp.asarray(paths, dtype=dtype)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    st.integers(1, 4),
+    st.integers(2, 10),
+    st.integers(1, 3),
+    st.integers(1, 5),
+    st.integers(0, 10_000),
+)
+def test_matches_ref(b, length, dim, depth, seed):
+    paths = brownian_batch(seed, b, length, dim)
+    got = signature_pallas(paths, depth)
+    want = ref.signature_batch_ref(paths, depth)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-10)
+
+
+def test_two_point_path_is_exponential():
+    paths = jnp.array([[[0.0, 0.0], [1.0, 2.0]]])
+    s = signature_pallas(paths, 3)[0]
+    z = jnp.array([1.0, 2.0])
+    np.testing.assert_allclose(float(s[0]), 1.0)
+    np.testing.assert_allclose(np.asarray(s[1:3]), np.asarray(z))
+    np.testing.assert_allclose(
+        np.asarray(s[3:7]), np.asarray(jnp.outer(z, z).reshape(-1) / 2), rtol=1e-12
+    )
+
+
+def test_f32_close_to_f64():
+    p64 = brownian_batch(3, 2, 8, 2)
+    p32 = p64.astype(jnp.float32)
+    s64 = signature_pallas(p64, 4)
+    s32 = signature_pallas(p32, 4)
+    np.testing.assert_allclose(
+        np.asarray(s32), np.asarray(s64), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_depth_one_is_total_increment():
+    paths = brownian_batch(9, 3, 6, 2)
+    s = signature_pallas(paths, 1)
+    want = paths[:, -1] - paths[:, 0]
+    np.testing.assert_allclose(np.asarray(s[:, 1:]), np.asarray(want), atol=1e-12)

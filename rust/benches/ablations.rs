@@ -1,0 +1,217 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!   1. Horner (Alg 2) vs direct (Alg 1) vs naive products — same output,
+//!      different multiplication counts and memory traffic.
+//!   2. On-the-fly dyadic refinement vs materialised refined Δ.
+//!   3. Fused (on-the-fly) lead-lag vs materialised lead-lag.
+//!   4. Row-sweep vs blocked anti-diagonal solver on CPU.
+//!   5. GEMM Δ precompute vs naive per-cell dot products.
+//!   6. Batch-parallel scaling over worker threads.
+
+use pysiglib::baselines::{full_grid_kernel, naive_signature};
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::kernel::{batch_kernel, delta_matrix, solve_pde, KernelOptions, SolverKind};
+use pysiglib::sig::{batch_signature, SigMethod, SigOptions};
+use pysiglib::transforms::Transform;
+use pysiglib::util::pool::parallel_for;
+use pysiglib::util::rng::Rng;
+
+fn main() {
+    let runs = bench_runs(5);
+    let mut suite = Suite::new("ablations");
+    let mut rng = Rng::new(51);
+
+    // --- 1. signature algorithm ---
+    {
+        let (b, l, d, n) = (64, 256, 4, 6);
+        let paths = rng.brownian_batch(b, l, d, 0.2);
+        suite.time("sig_algo/naive(esig-like)", 1, || {
+            parallel_for(b, |i| {
+                std::hint::black_box(naive_signature(&paths[i * l * d..(i + 1) * l * d], l, d, n));
+            });
+        });
+        suite.time("sig_algo/direct(alg1)", runs, || {
+            std::hint::black_box(batch_signature(
+                &paths,
+                b,
+                l,
+                d,
+                &SigOptions::new(n).method(SigMethod::Direct),
+            ));
+        });
+        suite.time("sig_algo/horner(alg2)", runs, || {
+            std::hint::black_box(batch_signature(&paths, b, l, d, &SigOptions::new(n)));
+        });
+    }
+
+    // --- 2. dyadic refinement strategy ---
+    {
+        let (l, d, lam) = (128usize, 4usize, 2u32);
+        let x = rng.brownian_path(l, d, 0.1);
+        let y = rng.brownian_path(l, d, 0.1);
+        let (m, n, delta) = delta_matrix(&x, &y, l, l, d, Transform::None);
+        suite.time("dyadic/materialised(fullgrid)", runs, || {
+            std::hint::black_box(full_grid_kernel(&delta, m, n, lam, lam).unwrap());
+        });
+        suite.time("dyadic/on-the-fly(row-sweep)", runs, || {
+            std::hint::black_box(solve_pde(&delta, m, n, lam, lam));
+        });
+    }
+
+    // --- 3. lead-lag: fused vs materialised ---
+    {
+        let (b, l, d, n) = (64, 256, 3, 4);
+        let paths = rng.brownian_batch(b, l, d, 0.2);
+        suite.time("leadlag/fused(on-the-fly)", runs, || {
+            std::hint::black_box(batch_signature(
+                &paths,
+                b,
+                l,
+                d,
+                &SigOptions::new(n).transform(Transform::LeadLag),
+            ));
+        });
+        suite.time("leadlag/materialised", runs, || {
+            parallel_for(b, |i| {
+                let mat = pysiglib::transforms::lead_lag(&paths[i * l * d..(i + 1) * l * d], l, d);
+                std::hint::black_box(pysiglib::sig::sig(&mat, 2 * l - 1, 2 * d, n));
+            });
+        });
+    }
+
+    // --- 4. solver schedule ---
+    {
+        let (b, l, d) = (64, 512, 8);
+        let scale = 1.0 / (l as f64).sqrt();
+        let xs = rng.brownian_batch(b, l, d, scale);
+        let ys = rng.brownian_batch(b, l, d, scale);
+        suite.time("solver/row", runs, || {
+            std::hint::black_box(batch_kernel(&xs, &ys, b, l, l, d, &KernelOptions::default()));
+        });
+        suite.time("solver/blocked(gpu-dataflow)", runs, || {
+            std::hint::black_box(batch_kernel(
+                &xs,
+                &ys,
+                b,
+                l,
+                l,
+                d,
+                &KernelOptions::default().solver(SolverKind::Blocked),
+            ));
+        });
+    }
+
+    // --- 5. Δ precompute: GEMM vs naive ---
+    {
+        let (l, d) = (1024usize, 32usize);
+        let x = rng.brownian_path(l, d, 0.1);
+        let y = rng.brownian_path(l, d, 0.1);
+        suite.time("delta/gemm", runs, || {
+            std::hint::black_box(delta_matrix(&x, &y, l, l, d, Transform::None));
+        });
+        suite.time("delta/naive-dots", runs, || {
+            // per-cell dot products with strided access (what a naive
+            // implementation inside the PDE loop would pay)
+            let m = l - 1;
+            let mut out = vec![0.0; m * m];
+            for i in 0..m {
+                for j in 0..m {
+                    let mut acc = 0.0;
+                    for c in 0..d {
+                        acc += (x[(i + 1) * d + c] - x[i * d + c])
+                            * (y[(j + 1) * d + c] - y[j * d + c]);
+                    }
+                    out[i * m + j] = acc;
+                }
+            }
+            std::hint::black_box(out);
+        });
+    }
+
+    // --- 5b. PDE sweep structure: the shipped fused single-pass loop vs
+    //         the two-pass restructure that was tried and reverted during
+    //         the perf pass (EXPERIMENTS.md §Perf).
+    {
+        let m = 1023usize;
+        let mut delta = vec![0.0; m * m];
+        let mut r = Rng::new(77);
+        r.fill_normal(&mut delta);
+        for v in delta.iter_mut() {
+            *v *= 0.001;
+        }
+        suite.time("pde_sweep/fused-single-pass(shipped)", runs, || {
+            std::hint::black_box(solve_pde(&delta, m, m, 0, 0));
+        });
+        suite.time("pde_sweep/two-pass(tried+reverted)", runs, || {
+            std::hint::black_box(solve_pde_two_pass_reference(&delta, m, m));
+        });
+    }
+
+    // --- 6. thread scaling ---
+    {
+        let (b, l, d, n) = (128, 512, 8, 5);
+        let paths = rng.brownian_batch(b, l, d, 0.2);
+        for threads in [1usize, 2, 4, 8, 0] {
+            let label = if threads == 0 {
+                "threads/all".to_string()
+            } else {
+                format!("threads/{threads}")
+            };
+            if threads == 0 {
+                std::env::remove_var("PYSIGLIB_THREADS");
+            } else {
+                std::env::set_var("PYSIGLIB_THREADS", threads.to_string());
+            }
+            suite.time(&label, runs, || {
+                std::hint::black_box(batch_signature(&paths, b, l, d, &SigOptions::new(n)));
+            });
+        }
+        std::env::remove_var("PYSIGLIB_THREADS");
+    }
+
+    println!("\nratios:");
+    for (a, b_, what) in [
+        ("sig_algo/direct(alg1)", "sig_algo/horner(alg2)", "direct/horner"),
+        ("dyadic/materialised(fullgrid)", "dyadic/on-the-fly(row-sweep)", "materialised/on-the-fly"),
+        ("leadlag/materialised", "leadlag/fused(on-the-fly)", "materialised/fused"),
+        ("delta/naive-dots", "delta/gemm", "naive/gemm"),
+        ("pde_sweep/two-pass(tried+reverted)", "pde_sweep/fused-single-pass(shipped)", "two-pass/fused-sweep"),
+        ("threads/1", "threads/all", "1-thread/all-threads"),
+    ] {
+        if let (Some(x), Some(y)) = (suite.get(a), suite.get(b_)) {
+            println!("  {what}: {:.2}x", x / y);
+        }
+    }
+}
+
+/// The §Perf candidate that was tried and *reverted*: split the sweep into
+/// a vectorisable pass (prev-row combination) and a minimal serial FMA
+/// chain. Kept verbatim so the regression stays measurable (EXPERIMENTS.md
+/// §Perf): the extra coefficient/cterm memory traffic costs more than the
+/// shorter dependency chain saves on this testbed.
+fn solve_pde_two_pass_reference(delta: &[f64], m: usize, n: usize) -> f64 {
+    let mut prev = vec![1.0; n + 1];
+    let mut cur = vec![1.0; n + 1];
+    let mut acoef = vec![0.0; n];
+    let mut bcoef = vec![0.0; n];
+    let mut cterm = vec![0.0; n];
+    for s in 0..m {
+        let drow = &delta[s * n..(s + 1) * n];
+        for t in 0..n {
+            let p = drow[t];
+            let p2 = p * p * (1.0 / 12.0);
+            acoef[t] = 1.0 + 0.5 * p + p2;
+            bcoef[t] = 1.0 - p2;
+        }
+        for t in 0..n {
+            cterm[t] = prev[t + 1] * acoef[t] - prev[t] * bcoef[t];
+        }
+        let mut k_left = 1.0;
+        for t in 0..n {
+            k_left = k_left * acoef[t] + cterm[t];
+            cur[t + 1] = k_left;
+        }
+        cur[0] = 1.0;
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[n]
+}

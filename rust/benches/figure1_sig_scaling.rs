@@ -1,0 +1,75 @@
+//! Figure 1: signature forward/backward runtime as a function of the
+//! truncation level N, for a batch of 32 paths of length 1024, dimension 5
+//! (the paper's exact figure workload). Series: esig-like naive, direct
+//! (Algorithm 1), Horner (Algorithm 2) forward; recompute-based vs
+//! deconstruction-based backward.
+
+use pysiglib::baselines::{iisig_backward, naive_signature};
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::sig::{batch_signature, batch_signature_vjp, sig_length, SigMethod, SigOptions};
+use pysiglib::util::pool::parallel_for;
+use pysiglib::util::rng::Rng;
+
+fn main() {
+    let runs = bench_runs(3);
+    let (b, l, d) = (32usize, 1024usize, 5usize);
+    let mut rng = Rng::new(11);
+    let paths = rng.brownian_batch(b, l, d, 0.2);
+    let mut suite = Suite::new("figure1_sig_scaling");
+
+    for n in 1..=6 {
+        let slen = sig_length(d, n);
+        let mut gs = vec![0.0; b * slen];
+        Rng::new(12).fill_normal(&mut gs);
+
+        if n <= 5 {
+            // esig-like naive blows up fast; cap its depth like the figure's
+            // cut-off axis.
+            suite.time(&format!("N{n}/fwd/esig-like(naive)"), 1, || {
+                parallel_for(b, |i| {
+                    std::hint::black_box(naive_signature(
+                        &paths[i * l * d..(i + 1) * l * d],
+                        l,
+                        d,
+                        n,
+                    ));
+                });
+            });
+        } else {
+            suite.record(&format!("N{n}/fwd/esig-like(naive)"), f64::NAN);
+        }
+        suite.time(&format!("N{n}/fwd/direct"), runs, || {
+            std::hint::black_box(batch_signature(
+                &paths,
+                b,
+                l,
+                d,
+                &SigOptions::new(n).method(SigMethod::Direct),
+            ));
+        });
+        suite.time(&format!("N{n}/fwd/pysiglib(horner)"), runs, || {
+            std::hint::black_box(batch_signature(&paths, b, l, d, &SigOptions::new(n)));
+        });
+        suite.time(&format!("N{n}/bwd/recompute-based"), runs, || {
+            parallel_for(b, |i| {
+                std::hint::black_box(iisig_backward(
+                    &paths[i * l * d..(i + 1) * l * d],
+                    l,
+                    d,
+                    n,
+                    &gs[i * slen..(i + 1) * slen],
+                ));
+            });
+        });
+        suite.time(&format!("N{n}/bwd/pysiglib"), runs, || {
+            std::hint::black_box(batch_signature_vjp(
+                &paths,
+                &gs,
+                b,
+                l,
+                d,
+                &SigOptions::new(n),
+            ));
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! Figure 2: signature-kernel forward/backward runtime as a function of
+//! stream length, for a batch of 32 paths of dimension 5 (the paper's
+//! figure workload). Series: sigkernel-like full grid vs pysiglib row sweep
+//! (forward), approximate-PDE vs exact Algorithm-4 (backward); the blocked
+//! GPU-scheme sweep rides along to show its scaling.
+
+use pysiglib::baselines::full_grid_kernel;
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::kernel::{
+    batch_kernel, batch_kernel_vjp, delta_matrix, sig_kernel_vjp_pde_approx, KernelOptions,
+    SolverKind,
+};
+use pysiglib::transforms::Transform;
+use pysiglib::util::pool::parallel_for;
+use pysiglib::util::rng::Rng;
+
+fn main() {
+    let runs = bench_runs(3);
+    let (b, d) = (32usize, 5usize);
+    let mut suite = Suite::new("figure2_kernel_scaling");
+    for l in [64usize, 128, 256, 512, 1024, 2048] {
+        let tag = format!("L{l}");
+        let mut rng = Rng::new(31);
+        let scale = 1.0 / (l as f64).sqrt();
+        let xs = rng.brownian_batch(b, l, d, scale);
+        let ys = rng.brownian_batch(b, l, d, scale);
+        let gk = vec![1.0; b];
+
+        suite.time(&format!("{tag}/fwd/sigkernel-like(fullgrid)"), runs, || {
+            parallel_for(b, |i| {
+                let (m, n, delta) = delta_matrix(
+                    &xs[i * l * d..(i + 1) * l * d],
+                    &ys[i * l * d..(i + 1) * l * d],
+                    l,
+                    l,
+                    d,
+                    Transform::None,
+                );
+                std::hint::black_box(full_grid_kernel(&delta, m, n, 0, 0).unwrap());
+            });
+        });
+        suite.time(&format!("{tag}/fwd/pysiglib(row)"), runs, || {
+            std::hint::black_box(batch_kernel(&xs, &ys, b, l, l, d, &KernelOptions::default()));
+        });
+        suite.time(&format!("{tag}/fwd/pysiglib(blocked)"), runs, || {
+            std::hint::black_box(batch_kernel(
+                &xs,
+                &ys,
+                b,
+                l,
+                l,
+                d,
+                &KernelOptions::default().solver(SolverKind::Blocked),
+            ));
+        });
+        suite.time(&format!("{tag}/bwd/sigkernel-like(pde-approx)"), runs, || {
+            parallel_for(b, |i| {
+                std::hint::black_box(sig_kernel_vjp_pde_approx(
+                    &xs[i * l * d..(i + 1) * l * d],
+                    &ys[i * l * d..(i + 1) * l * d],
+                    l,
+                    l,
+                    d,
+                    &KernelOptions::default(),
+                    1.0,
+                ));
+            });
+        });
+        suite.time(&format!("{tag}/bwd/pysiglib(exact)"), runs, || {
+            std::hint::black_box(batch_kernel_vjp(
+                &xs,
+                &ys,
+                &gk,
+                b,
+                l,
+                l,
+                d,
+                &KernelOptions::default(),
+            ));
+        });
+    }
+}

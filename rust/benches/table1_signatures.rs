@@ -1,0 +1,114 @@
+//! Table 1: truncated-signature runtime, forward and backward, serial and
+//! parallel, against reimplementations of the comparator libraries'
+//! algorithms (esig → naive out-of-place products; iisignature → direct
+//! Algorithm 1, with forward recomputation in the backward pass;
+//! signatory/pySigLib → Horner Algorithm 2).
+//!
+//! Paper shapes: (B, L, d, N) ∈ {(128,256,4,6), (128,512,8,5),
+//! (128,1024,16,4)}. Protocol: minimum over runs (paper: 50; default here 3,
+//! override with PYSIGLIB_BENCH_RUNS).
+
+use pysiglib::baselines::{iisig_backward, naive_signature};
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::sig::{batch_signature, batch_signature_vjp, sig_length, SigMethod, SigOptions};
+use pysiglib::util::pool::parallel_for;
+use pysiglib::util::rng::Rng;
+
+fn main() {
+    let runs = bench_runs(3);
+    let slow_runs = bench_runs(1);
+    let mut suite = Suite::new("table1_signatures");
+    let configs = [(128usize, 256usize, 4usize, 6usize), (128, 512, 8, 5), (128, 1024, 16, 4)];
+    for (b, l, d, n) in configs {
+        let tag = format!("B{b}_L{l}_d{d}_N{n}");
+        let mut rng = Rng::new(1);
+        let paths = rng.brownian_batch(b, l, d, 0.2);
+        let slen = sig_length(d, n);
+
+        // ---------------- forward, serial ----------------
+        suite.time(&format!("{tag}/fwd/serial/esig-like(naive)"), slow_runs, || {
+            for i in 0..b {
+                std::hint::black_box(naive_signature(&paths[i * l * d..(i + 1) * l * d], l, d, n));
+            }
+        });
+        suite.time(&format!("{tag}/fwd/serial/iisig-like(direct)"), runs, || {
+            std::hint::black_box(batch_signature(
+                &paths,
+                b,
+                l,
+                d,
+                &SigOptions::new(n).method(SigMethod::Direct).serial(),
+            ));
+        });
+        suite.time(&format!("{tag}/fwd/serial/pysiglib(horner)"), runs, || {
+            std::hint::black_box(batch_signature(&paths, b, l, d, &SigOptions::new(n).serial()));
+        });
+
+        // ---------------- forward, parallel ----------------
+        suite.time(&format!("{tag}/fwd/parallel/signatory-like(direct)"), runs, || {
+            std::hint::black_box(batch_signature(
+                &paths,
+                b,
+                l,
+                d,
+                &SigOptions::new(n).method(SigMethod::Direct),
+            ));
+        });
+        suite.time(&format!("{tag}/fwd/parallel/pysiglib(horner)"), runs, || {
+            std::hint::black_box(batch_signature(&paths, b, l, d, &SigOptions::new(n)));
+        });
+
+        // ---------------- backward ----------------
+        let mut gs = vec![0.0; b * slen];
+        Rng::new(2).fill_normal(&mut gs);
+
+        suite.time(&format!("{tag}/bwd/serial/iisig-like(recompute)"), slow_runs, || {
+            for i in 0..b {
+                std::hint::black_box(iisig_backward(
+                    &paths[i * l * d..(i + 1) * l * d],
+                    l,
+                    d,
+                    n,
+                    &gs[i * slen..(i + 1) * slen],
+                ));
+            }
+        });
+        suite.time(&format!("{tag}/bwd/serial/pysiglib"), runs, || {
+            std::hint::black_box(batch_signature_vjp(
+                &paths,
+                &gs,
+                b,
+                l,
+                d,
+                &SigOptions::new(n).serial(),
+            ));
+        });
+        suite.time(&format!("{tag}/bwd/parallel/signatory-like(recompute)"), runs, || {
+            // Parallel version of the recompute-based backward.
+            parallel_for(b, |i| {
+                std::hint::black_box(iisig_backward(
+                    &paths[i * l * d..(i + 1) * l * d],
+                    l,
+                    d,
+                    n,
+                    &gs[i * slen..(i + 1) * slen],
+                ));
+            });
+        });
+        suite.time(&format!("{tag}/bwd/parallel/pysiglib"), runs, || {
+            std::hint::black_box(batch_signature_vjp(&paths, &gs, b, l, d, &SigOptions::new(n)));
+        });
+    }
+
+    // Paper-shape summary: who wins and by what factor.
+    println!("\nspeedup summary (comparator / pysiglib):");
+    for (b, l, d, n) in configs {
+        let tag = format!("B{b}_L{l}_d{d}_N{n}");
+        let naive = suite.get(&format!("{tag}/fwd/serial/esig-like(naive)"));
+        let direct = suite.get(&format!("{tag}/fwd/serial/iisig-like(direct)"));
+        let horner = suite.get(&format!("{tag}/fwd/serial/pysiglib(horner)"));
+        if let (Some(a), Some(b_), Some(h)) = (naive, direct, horner) {
+            println!("  {tag}: fwd serial esig/pysiglib = {:.2}x, iisig/pysiglib = {:.2}x", a / h, b_ / h);
+        }
+    }
+}

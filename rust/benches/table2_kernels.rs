@@ -1,0 +1,139 @@
+//! Table 2: signature-kernel runtime, forward and backward, "CPU" and
+//! "GPU"-scheme, against the sigkernel package's algorithmic choices.
+//!
+//! Paper shapes: (B, L, d) ∈ {(128,256,8), (128,512,16), (128,1024,32)},
+//! dyadic order 0.
+//!
+//! Mapping (no GPU in this container — see DESIGN.md §Substitutions):
+//!   CPU / sigkernel-like : full-grid solver with materialised refinement
+//!   CPU / pysiglib       : two-row sweep, on-the-fly refinement
+//!   GPU / sigkernel-like : one-thread-per-diagonal-entry scheme — *refuses*
+//!                          L ≥ 1024 (the paper's dash), else the same sweep
+//!   GPU / pysiglib       : blocked anti-diagonal scheme (32-row blocks,
+//!                          3 rotating diagonals — the CUDA dataflow)
+//!   bwd / sigkernel-like : approximate second-PDE gradients
+//!   bwd / pysiglib       : exact Algorithm-4 gradients
+
+use pysiglib::baselines::{full_grid_kernel, gpu_style_kernel};
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::kernel::{
+    batch_kernel, batch_kernel_vjp, delta_matrix, sig_kernel_vjp_pde_approx, KernelOptions,
+    SolverKind,
+};
+use pysiglib::transforms::Transform;
+use pysiglib::util::pool::parallel_for;
+use pysiglib::util::rng::Rng;
+
+fn main() {
+    let runs = bench_runs(3);
+    let mut suite = Suite::new("table2_kernels");
+    let configs = [(128usize, 256usize, 8usize), (128, 512, 16), (128, 1024, 32)];
+    for (b, l, d) in configs {
+        let tag = format!("B{b}_L{l}_d{d}");
+        let mut rng = Rng::new(21);
+        let scale = 1.0 / (l as f64).sqrt(); // keep kernel values sane
+        let xs = rng.brownian_batch(b, l, d, scale);
+        let ys = rng.brownian_batch(b, l, d, scale);
+
+        // Precompute per-pair deltas once for the baselines that take Δ
+        // directly (they'd pay the same GEMM; excluding it isolates the
+        // solver comparison — the GEMM is identical for both sides).
+        // ---------------- forward, CPU ----------------
+        suite.time(&format!("{tag}/fwd/cpu/sigkernel-like(fullgrid)"), runs, || {
+            parallel_for(b, |i| {
+                let (m, n, delta) = delta_matrix(
+                    &xs[i * l * d..(i + 1) * l * d],
+                    &ys[i * l * d..(i + 1) * l * d],
+                    l,
+                    l,
+                    d,
+                    Transform::None,
+                );
+                std::hint::black_box(full_grid_kernel(&delta, m, n, 0, 0).unwrap());
+            });
+        });
+        suite.time(&format!("{tag}/fwd/cpu/pysiglib(row)"), runs, || {
+            std::hint::black_box(batch_kernel(
+                &xs,
+                &ys,
+                b,
+                l,
+                l,
+                d,
+                &KernelOptions::default(),
+            ));
+        });
+
+        // ---------------- forward, GPU-scheme ----------------
+        // sigkernel's GPU kernel refuses diagonals beyond 1024 threads.
+        let diag_len = l; // rows == cols == l-1, diagonal l
+        if diag_len >= 1024 {
+            suite.record(&format!("{tag}/fwd/gpu/sigkernel-like(thread-limited)"), f64::NAN);
+        } else {
+            suite.time(&format!("{tag}/fwd/gpu/sigkernel-like(thread-limited)"), runs, || {
+                parallel_for(b, |i| {
+                    let (m, n, delta) = delta_matrix(
+                        &xs[i * l * d..(i + 1) * l * d],
+                        &ys[i * l * d..(i + 1) * l * d],
+                        l,
+                        l,
+                        d,
+                        Transform::None,
+                    );
+                    std::hint::black_box(gpu_style_kernel(&delta, m, n, 0, 0).unwrap());
+                });
+            });
+        }
+        suite.time(&format!("{tag}/fwd/gpu/pysiglib(blocked)"), runs, || {
+            std::hint::black_box(batch_kernel(
+                &xs,
+                &ys,
+                b,
+                l,
+                l,
+                d,
+                &KernelOptions::default().solver(SolverKind::Blocked),
+            ));
+        });
+
+        // ---------------- backward ----------------
+        let gk = vec![1.0; b];
+        suite.time(&format!("{tag}/bwd/cpu/sigkernel-like(pde-approx)"), runs, || {
+            parallel_for(b, |i| {
+                std::hint::black_box(sig_kernel_vjp_pde_approx(
+                    &xs[i * l * d..(i + 1) * l * d],
+                    &ys[i * l * d..(i + 1) * l * d],
+                    l,
+                    l,
+                    d,
+                    &KernelOptions::default(),
+                    1.0,
+                ));
+            });
+        });
+        suite.time(&format!("{tag}/bwd/cpu/pysiglib(exact)"), runs, || {
+            std::hint::black_box(batch_kernel_vjp(
+                &xs,
+                &ys,
+                &gk,
+                b,
+                l,
+                l,
+                d,
+                &KernelOptions::default(),
+            ));
+        });
+    }
+
+    println!("\nspeedup summary (sigkernel-like / pysiglib):");
+    for (b, l, d) in configs {
+        let tag = format!("B{b}_L{l}_d{d}");
+        let base_f = suite.get(&format!("{tag}/fwd/cpu/sigkernel-like(fullgrid)"));
+        let py_f = suite.get(&format!("{tag}/fwd/cpu/pysiglib(row)"));
+        let base_b = suite.get(&format!("{tag}/bwd/cpu/sigkernel-like(pde-approx)"));
+        let py_b = suite.get(&format!("{tag}/bwd/cpu/pysiglib(exact)"));
+        if let (Some(bf), Some(pf), Some(bb), Some(pb)) = (base_f, py_f, base_b, py_b) {
+            println!("  {tag}: fwd {:.2}x, bwd {:.2}x", bf / pf, bb / pb);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Reimplementations of the comparator libraries' *algorithmic choices*, used
+//! by the benchmark harness to reproduce the paper's tables. The speedups
+//! pySigLib reports are algorithmic (memory layout, Horner factorisation,
+//! on-the-fly refinement, exact vjp), so faithful reimplementations of the
+//! baselines' strategies isolate exactly those effects:
+//!
+//! * [`naive_signature`] — esig-style: out-of-place tensor products with
+//!   fresh allocations every step, no in-place update ordering.
+//! * `sig::direct` (Algorithm 1) — iisignature-style direct updates.
+//! * [`full_grid_kernel`] — sigkernel-style: *materialises* the dyadically
+//!   refined Δ and keeps the whole PDE grid allocated; fails (like the real
+//!   package, a dash in Table 2) when the grid exceeds a memory budget.
+//! * [`gpu_style_kernel`] — sigkernel's GPU scheme assigns one thread per
+//!   anti-diagonal entry, so streams longer than the 1024-thread block are
+//!   refused; reproduced structurally here.
+//! * [`iisig_backward`] — iisignature recomputes the signature during the
+//!   backward pass (the asterisk in Table 1); modeled by a forward
+//!   recomputation followed by the standard vjp.
+
+use crate::tensor::{exp_increment, tensor_prod, LevelLayout};
+use crate::transforms::Transform;
+
+/// Errors mirroring the comparator packages' failure modes (the dashes in
+/// the paper's Table 2).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum BaselineError {
+    #[error("PDE grid of {0} nodes exceeds the full-grid memory budget")]
+    GridTooLarge(usize),
+    #[error("anti-diagonal of {0} entries exceeds the 1024-thread GPU block")]
+    ThreadLimit(usize),
+}
+
+/// esig-style truncated signature: mathematically identical to
+/// `sig::signature`, but with the naive memory strategy — a full out-of-place
+/// truncated tensor product (and two fresh allocations) per path step.
+pub fn naive_signature(path: &[f64], len: usize, dim: usize, depth: usize) -> Vec<f64> {
+    assert!(len >= 1 && depth >= 1);
+    let layout = LevelLayout::new(dim, depth);
+    if len < 2 {
+        let mut a = vec![0.0; layout.total()];
+        a[0] = 1.0;
+        return a;
+    }
+    let mut z = vec![0.0; dim];
+    for j in 0..dim {
+        z[j] = path[dim + j] - path[j];
+    }
+    let mut acc = vec![0.0; layout.total()];
+    exp_increment(&layout, &z, &mut acc);
+    for i in 1..len - 1 {
+        for j in 0..dim {
+            z[j] = path[(i + 1) * dim + j] - path[i * dim + j];
+        }
+        // Naive: materialise exp(z), multiply out-of-place, replace.
+        let mut e = vec![0.0; layout.total()];
+        exp_increment(&layout, &z, &mut e);
+        let mut next = vec![0.0; layout.total()];
+        tensor_prod(&layout, &acc, &e, &mut next);
+        acc = next;
+    }
+    acc
+}
+
+/// Memory budget for the full-grid baseline, in grid nodes (f64s). Matches
+/// the order of magnitude at which `sigkernel`'s CPU path starts failing on
+/// a 32 GB machine in the paper's Table 2 (dash at B=128, L=1024, λ=0 once
+/// the batch is accounted for: 128 · 1025² ≈ 1.3e8 nodes · 8 B ≈ 1 GB per
+/// stored tensor, with autograd copies pushing past RAM).
+pub const FULL_GRID_NODE_BUDGET: usize = 1 << 27;
+
+/// sigkernel-style CPU kernel: precompute the *refined* Δ (2^{λ1+λ2}·m·n
+/// entries — pySigLib's on-the-fly indexing avoids this) and keep the whole
+/// PDE grid resident. Returns the kernel value, or the failure the real
+/// package would hit.
+pub fn full_grid_kernel(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+) -> Result<f64, BaselineError> {
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let nodes = (rows + 1) * (cols + 1);
+    if nodes > FULL_GRID_NODE_BUDGET {
+        return Err(BaselineError::GridTooLarge(nodes));
+    }
+    // Materialise the refined Δ — the allocation pySigLib skips.
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+    let mut refined = vec![0.0; rows * cols];
+    for s in 0..rows {
+        for t in 0..cols {
+            refined[s * cols + t] = delta[(s >> lam1) * n + (t >> lam2)] * scale;
+        }
+    }
+    // Full-grid solve.
+    let w = cols + 1;
+    let mut k = vec![1.0; (rows + 1) * w];
+    for s in 0..rows {
+        for t in 0..cols {
+            let p = refined[s * cols + t];
+            let p2 = p * p / 12.0;
+            let a = 1.0 + 0.5 * p + p2;
+            let b = 1.0 - p2;
+            k[(s + 1) * w + t + 1] = (k[(s + 1) * w + t] + k[s * w + t + 1]) * a - k[s * w + t] * b;
+        }
+    }
+    Ok(k[(rows + 1) * w - 1])
+}
+
+/// Thread budget of one CUDA block in the comparator's GPU scheme.
+pub const GPU_THREAD_LIMIT: usize = 1024;
+
+/// sigkernel-style GPU kernel: one thread per anti-diagonal entry, so the
+/// computation is refused outright when the diagonal exceeds the block's
+/// 1024 threads (the paper's Table 2 dash at L = 1024 with λ = 0 ⇒ diagonal
+/// 1024 ≥ limit once boundaries are counted). pySigLib's block-of-32 scheme
+/// (see [`crate::kernel::blocked`]) removes the limit.
+pub fn gpu_style_kernel(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+) -> Result<f64, BaselineError> {
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let diag = rows.min(cols) + 1;
+    if diag > GPU_THREAD_LIMIT {
+        return Err(BaselineError::ThreadLimit(diag));
+    }
+    Ok(crate::kernel::solver::solve_pde(delta, m, n, lam1, lam2))
+}
+
+/// iisignature-style backward pass: the package recomputes the signature
+/// during the backward pass (Table 1's asterisk), so its cost is forward +
+/// vjp. Functionally identical gradients.
+pub fn iisig_backward(
+    path: &[f64],
+    len: usize,
+    dim: usize,
+    depth: usize,
+    grad_sig: &[f64],
+) -> Vec<f64> {
+    // Forced recomputation of the forward signature...
+    let s = crate::sig::signature(
+        path,
+        len,
+        dim,
+        depth,
+        Transform::None,
+        crate::sig::SigMethod::Direct,
+    );
+    // ...then the standard deconstruction-based vjp.
+    crate::sig::backward::signature_vjp_with_sig(
+        path,
+        len,
+        dim,
+        depth,
+        Transform::None,
+        &s,
+        grad_sig,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::max_abs_diff;
+    use crate::util::prop::check;
+
+    #[test]
+    fn naive_matches_horner() {
+        check("naive == horner signature", 20, |g| {
+            let len = g.usize_in(2, 12);
+            let dim = g.usize_in(1, 3);
+            let depth = g.usize_in(1, 4);
+            let p = g.path(len, dim, 0.5);
+            let a = naive_signature(&p, len, dim, depth);
+            let b = crate::sig::sig(&p, len, dim, depth);
+            assert!(max_abs_diff(&a, &b) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn full_grid_matches_streaming_solver() {
+        check("full grid == two-row solver", 20, |g| {
+            let m = g.usize_in(1, 10);
+            let n = g.usize_in(1, 10);
+            let lam = g.usize_in(0, 2) as u32;
+            let delta: Vec<f64> = g.normal_vec(m * n).iter().map(|v| v * 0.3).collect();
+            let a = full_grid_kernel(&delta, m, n, lam, lam).unwrap();
+            let b = crate::kernel::solve_pde(&delta, m, n, lam, lam);
+            assert!((a - b).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn full_grid_fails_above_budget() {
+        // 2^14 × 2^14 nodes > 2^27: must refuse, like the real package OOMs.
+        let delta = vec![0.0; 1];
+        let r = full_grid_kernel(&delta, 1, 1, 14, 14);
+        assert!(matches!(r, Err(BaselineError::GridTooLarge(_))));
+    }
+
+    #[test]
+    fn gpu_style_fails_beyond_thread_limit() {
+        let m = 1100;
+        let delta = vec![0.01; m * m];
+        let r = gpu_style_kernel(&delta, m, m, 0, 0);
+        assert!(matches!(r, Err(BaselineError::ThreadLimit(_))));
+        // pySigLib's blocked scheme handles the same input fine.
+        let k = crate::kernel::solve_pde_blocked(&delta, m, m, 0, 0);
+        assert!(k.is_finite());
+    }
+
+    #[test]
+    fn iisig_backward_matches_pysiglib_backward() {
+        let mut rng = crate::util::rng::Rng::new(55);
+        let p = rng.brownian_path(7, 2, 0.5);
+        let slen = crate::sig::sig_length(2, 3);
+        let mut gs = vec![0.0; slen];
+        rng.fill_normal(&mut gs);
+        let a = iisig_backward(&p, 7, 2, 3, &gs);
+        let b = crate::sig::signature_vjp(&p, 7, 2, 3, Transform::None, &gs);
+        assert!(max_abs_diff(&a, &b) < 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! Benchmark harness (the offline stand-in for criterion), following the
+//! paper's measurement protocol: *minimum* wall-clock over R runs after a
+//! warmup (§5: "the minimum runtime is taken over 50 runs").
+//!
+//! Rows print aligned for terminal reading and are also appended as CSV to
+//! `bench_results/<suite>.csv` so EXPERIMENTS.md can quote exact numbers.
+
+use std::io::Write;
+use std::time::Instant;
+
+/// Number of timed runs (the paper uses 50; override with PYSIGLIB_BENCH_RUNS
+/// to trade precision for wall-clock when sweeping large shapes).
+pub fn bench_runs(default: usize) -> usize {
+    std::env::var("PYSIGLIB_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// A benchmark suite: prints a header, times closures, writes CSV.
+pub struct Suite {
+    name: String,
+    rows: Vec<(String, f64)>,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Suite {
+        println!("\n== {name} ==");
+        println!("{:<56} {:>12}", "case", "min time (s)");
+        Suite {
+            name: name.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Minimum time over `runs` of `f` (after one warmup), recorded+printed.
+    /// Set PYSIGLIB_BENCH_NOWARMUP=1 to skip the warmup execution (useful
+    /// when a full-suite capture must fit a wall-clock budget).
+    pub fn time<F: FnMut()>(&mut self, case: &str, runs: usize, mut f: F) -> f64 {
+        if std::env::var("PYSIGLIB_BENCH_NOWARMUP").as_deref() != Ok("1") {
+            f(); // warmup
+        }
+        let mut best = f64::INFINITY;
+        for _ in 0..runs.max(1) {
+            let t = Instant::now();
+            f();
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        println!("{case:<56} {best:>12.6}");
+        self.rows.push((case.to_string(), best));
+        best
+    }
+
+    /// Record a precomputed timing (e.g. a failure marker uses NaN).
+    pub fn record(&mut self, case: &str, secs: f64) {
+        if secs.is_nan() {
+            println!("{case:<56} {:>12}", "-");
+        } else {
+            println!("{case:<56} {secs:>12.6}");
+        }
+        self.rows.push((case.to_string(), secs));
+    }
+
+    /// Look up a recorded row (for derived ratios).
+    pub fn get(&self, case: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(c, _)| c == case)
+            .map(|(_, t)| *t)
+    }
+}
+
+impl Drop for Suite {
+    fn drop(&mut self) {
+        if self.rows.is_empty() {
+            return;
+        }
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let path = dir.join(format!("{}.csv", self.name));
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let _ = writeln!(f, "case,min_seconds");
+            for (case, secs) in &self.rows {
+                let _ = writeln!(f, "{case},{secs}");
+            }
+            println!("[wrote {}]", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_records_and_queries() {
+        let mut s = Suite::new("selftest");
+        let t = s.time("noop", 3, || {});
+        assert!(t >= 0.0);
+        s.record("marker", f64::NAN);
+        assert!(s.get("noop").is_some());
+        assert!(s.get("missing").is_none());
+        // prevent the CSV drop from polluting the repo during tests
+        s.rows.clear();
+    }
+
+    #[test]
+    fn runs_override_respects_default() {
+        assert!(bench_runs(7) >= 1);
+    }
+}

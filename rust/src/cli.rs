@@ -1,0 +1,416 @@
+//! Command-line interface (hand-rolled arg parsing; clap is unavailable
+//! offline). `pysiglib help` for usage.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::coordinator::{serve, Batcher, BatcherConfig, Router};
+use crate::kernel::{KernelOptions, SolverKind};
+use crate::sig::{SigMethod, SigOptions};
+use crate::transforms::Transform;
+use crate::util::rng::Rng;
+
+const HELP: &str = "pysiglib — fast signature-based computations (paper reproduction)
+
+USAGE:
+  pysiglib <command> [flags]
+
+COMMANDS:
+  sig        compute a batch of truncated signatures on synthetic paths
+             --batch N --len L --dim D --depth N --transform none|time|leadlag
+             --method horner|direct --serial
+  logsig     compute log-signatures       (same flags as sig)
+  kernel     compute a batch of signature kernels
+             --batch N --len L --dim D --dyadic λ --dyadic2 λ2
+             --solver row|blocked --transform ...
+  grad       exact signature-kernel gradients for a batch of pairs
+  serve      run the serving coordinator
+             --bind ADDR --max-batch N --max-wait-us U --pjrt --config FILE
+  client     demo client: fires requests at a running server
+             --addr ADDR --requests N --len L --dim D
+  artifacts  list + compile + smoke-run the AOT artifacts  --dir PATH
+  selfcheck  cross-check native vs baselines (and PJRT if artifacts exist)
+  help       this text
+";
+
+/// Parse `--key value` and `--flag` style arguments.
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let takes_value = i + 1 < args.len() && !args[i + 1].starts_with("--");
+            if takes_value {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn flag_usize(f: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    f.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn flag_transform(f: &HashMap<String, String>) -> Transform {
+    f.get("transform")
+        .and_then(|v| Transform::parse(v))
+        .unwrap_or(Transform::None)
+}
+
+/// CLI entry point; returns the process exit code.
+pub fn cli_main(args: &[String]) -> i32 {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[] } else { &args[1..] };
+    let (_pos, flags) = parse_flags(rest);
+    match cmd {
+        "sig" | "logsig" => cmd_sig(cmd == "logsig", &flags),
+        "kernel" => cmd_kernel(&flags),
+        "grad" => cmd_grad(&flags),
+        "serve" => cmd_serve(&flags),
+        "client" => cmd_client(&flags),
+        "artifacts" => cmd_artifacts(&flags),
+        "selfcheck" => cmd_selfcheck(),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            2
+        }
+    }
+}
+
+fn cmd_sig(log: bool, flags: &HashMap<String, String>) -> i32 {
+    let batch = flag_usize(flags, "batch", 32);
+    let len = flag_usize(flags, "len", 128);
+    let dim = flag_usize(flags, "dim", 4);
+    let depth = flag_usize(flags, "depth", 4);
+    let tr = flag_transform(flags);
+    let method = match flags.get("method").map(String::as_str) {
+        Some("direct") => SigMethod::Direct,
+        _ => SigMethod::Horner,
+    };
+    let mut rng = Rng::new(42);
+    let paths = rng.brownian_batch(batch, len, dim, 0.3);
+    let opts = {
+        let mut o = SigOptions::new(depth).transform(tr).method(method);
+        if flags.contains_key("serial") {
+            o = o.serial();
+        }
+        o
+    };
+    let t = std::time::Instant::now();
+    let (rows, width, checksum);
+    if log {
+        let mut out = Vec::new();
+        for b in 0..batch {
+            out.extend(crate::sig::log_signature(
+                &paths[b * len * dim..(b + 1) * len * dim],
+                len,
+                dim,
+                depth,
+                tr,
+            ));
+        }
+        width = out.len() / batch;
+        rows = batch;
+        checksum = out.iter().sum::<f64>();
+    } else {
+        let out = crate::sig::batch_signature(&paths, batch, len, dim, &opts);
+        width = out.len() / batch;
+        rows = batch;
+        checksum = out.iter().sum::<f64>();
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "{} batch={rows} len={len} dim={dim} depth={depth} transform={tr:?} width={width}",
+        if log { "logsig" } else { "sig" }
+    );
+    println!("time={dt:.6}s  throughput={:.1} paths/s  checksum={checksum:.6e}",
+        rows as f64 / dt);
+    0
+}
+
+fn cmd_kernel(flags: &HashMap<String, String>) -> i32 {
+    let batch = flag_usize(flags, "batch", 32);
+    let len = flag_usize(flags, "len", 128);
+    let dim = flag_usize(flags, "dim", 4);
+    let lam1 = flag_usize(flags, "dyadic", 0) as u32;
+    let lam2 = flag_usize(flags, "dyadic2", lam1 as usize) as u32;
+    let solver = match flags.get("solver").map(String::as_str) {
+        Some("blocked") => SolverKind::Blocked,
+        _ => SolverKind::Row,
+    };
+    let tr = flag_transform(flags);
+    let mut rng = Rng::new(43);
+    let x = rng.brownian_batch(batch, len, dim, 0.3);
+    let y = rng.brownian_batch(batch, len, dim, 0.3);
+    let opts = KernelOptions::default()
+        .dyadic(lam1, lam2)
+        .solver(solver)
+        .transform(tr);
+    let t = std::time::Instant::now();
+    let ks = crate::kernel::batch_kernel(&x, &y, batch, len, len, dim, &opts);
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "kernel batch={batch} len={len} dim={dim} dyadic=({lam1},{lam2}) solver={solver:?} transform={tr:?}"
+    );
+    println!(
+        "time={dt:.6}s  throughput={:.1} kernels/s  mean_k={:.6}",
+        batch as f64 / dt,
+        ks.iter().sum::<f64>() / batch as f64
+    );
+    0
+}
+
+fn cmd_grad(flags: &HashMap<String, String>) -> i32 {
+    let batch = flag_usize(flags, "batch", 16);
+    let len = flag_usize(flags, "len", 64);
+    let dim = flag_usize(flags, "dim", 4);
+    let lam = flag_usize(flags, "dyadic", 0) as u32;
+    let mut rng = Rng::new(44);
+    let x = rng.brownian_batch(batch, len, dim, 0.3);
+    let y = rng.brownian_batch(batch, len, dim, 0.3);
+    let gk = vec![1.0; batch];
+    let opts = KernelOptions::default().dyadic(lam, lam);
+    let t = std::time::Instant::now();
+    let (gx, gy) = crate::kernel::batch_kernel_vjp(&x, &y, &gk, batch, len, len, dim, &opts);
+    let dt = t.elapsed().as_secs_f64();
+    println!("grad batch={batch} len={len} dim={dim} dyadic={lam}");
+    println!(
+        "time={dt:.6}s  |gx|={:.6e} |gy|={:.6e}",
+        crate::util::linalg::norm2(&gx),
+        crate::util::linalg::norm2(&gy)
+    );
+    0
+}
+
+fn build_config(flags: &HashMap<String, String>) -> Result<Config, String> {
+    let mut cfg = Config::default();
+    if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        cfg.apply_file_text(&text).map_err(|e| e.to_string())?;
+    }
+    cfg.apply_env().map_err(|e| e.to_string())?;
+    if let Some(v) = flags.get("bind") {
+        cfg.bind = v.clone();
+    }
+    if let Some(v) = flags.get("max-batch") {
+        cfg.set("max_batch", v).map_err(|e| e.to_string())?;
+    }
+    if let Some(v) = flags.get("max-wait-us") {
+        cfg.set("max_wait_us", v).map_err(|e| e.to_string())?;
+    }
+    if flags.contains_key("pjrt") {
+        cfg.use_pjrt = true;
+    }
+    if let Some(v) = flags.get("artifacts") {
+        cfg.artifacts_dir = v.clone();
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    let cfg = match build_config(flags) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let router = if cfg.use_pjrt {
+        match crate::runtime::RuntimeHandle::spawn(&cfg.artifacts_dir) {
+            Ok(rt) => {
+                println!("PJRT runtime on {} ({} artifacts)", rt.platform(), rt.manifest().len());
+                Router::with_runtime(rt)
+            }
+            Err(e) => {
+                eprintln!("warning: PJRT unavailable ({e:#}); native backend only");
+                Router::native_only()
+            }
+        }
+    } else {
+        Router::native_only()
+    };
+    let batcher = Arc::new(Batcher::start(
+        Arc::new(router),
+        BatcherConfig {
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+        },
+    ));
+    let handle = match serve(cfg.bind.as_str(), batcher.clone()) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("bind {}: {e}", cfg.bind);
+            return 1;
+        }
+    };
+    println!("serving on {} (max_batch={}, max_wait={:?})", handle.addr, cfg.max_batch, cfg.max_wait);
+    // Periodic metrics until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        println!("{}", batcher.metrics.summary());
+    }
+}
+
+fn cmd_client(flags: &HashMap<String, String>) -> i32 {
+    let addr = flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7462".to_string());
+    let n = flag_usize(flags, "requests", 64);
+    let len = flag_usize(flags, "len", 64);
+    let dim = flag_usize(flags, "dim", 3);
+    let mut client = match crate::coordinator::Client::connect(addr.as_str()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect {addr}: {e}");
+            return 1;
+        }
+    };
+    let mut rng = Rng::new(45);
+    let t = std::time::Instant::now();
+    let mut ok = 0usize;
+    for i in 0..n {
+        let x = rng.brownian_path(len, dim, 0.3);
+        let y = rng.brownian_path(len, dim, 0.3);
+        let r = if i % 2 == 0 {
+            client.signature(&x, len, dim, 4).map(|r| r.map(|_| ()))
+        } else {
+            client.sig_kernel(&x, &y, len, dim).map(|r| r.map(|_| ()))
+        };
+        match r {
+            Ok(Ok(())) => ok += 1,
+            Ok(Err(e)) => eprintln!("server error: {e}"),
+            Err(e) => {
+                eprintln!("io error: {e}");
+                return 1;
+            }
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!("{ok}/{n} ok in {dt:.3}s ({:.1} req/s)", n as f64 / dt);
+    0
+}
+
+fn cmd_artifacts(flags: &HashMap<String, String>) -> i32 {
+    let dir = flags
+        .get("dir")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let rt = match crate::runtime::Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let mut failures = 0;
+    for info in rt.manifest().to_vec() {
+        // Smoke-run with deterministic inputs.
+        let inputs: Vec<Vec<f32>> = info
+            .input_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let n: usize = s.iter().product();
+                (0..n).map(|j| ((j + i) % 17) as f32 * 0.01).collect()
+            })
+            .collect();
+        match rt.execute_f32(&info.name, &inputs) {
+            Ok(outs) => {
+                let sizes: Vec<usize> = outs.iter().map(|o| o.len()).collect();
+                println!("  {} inputs={:?} outputs={sizes:?} OK", info.name, info.input_shapes);
+            }
+            Err(e) => {
+                println!("  {} FAILED: {e:#}", info.name);
+                failures += 1;
+            }
+        }
+    }
+    failures
+}
+
+fn cmd_selfcheck() -> i32 {
+    let mut rng = Rng::new(46);
+    let mut bad = 0;
+    // Signature: horner vs direct vs naive.
+    let p = rng.brownian_path(32, 3, 0.4);
+    let h = crate::sig::signature(&p, 32, 3, 4, Transform::None, SigMethod::Horner);
+    let d = crate::sig::signature(&p, 32, 3, 4, Transform::None, SigMethod::Direct);
+    let n = crate::baselines::naive_signature(&p, 32, 3, 4);
+    let e1 = crate::util::linalg::max_abs_diff(&h, &d);
+    let e2 = crate::util::linalg::max_abs_diff(&h, &n);
+    println!("signature horner-vs-direct: {e1:.2e}, horner-vs-naive: {e2:.2e}");
+    if e1 > 1e-9 || e2 > 1e-9 {
+        bad += 1;
+    }
+    // Kernel: row vs blocked vs full-grid baseline.
+    let x = rng.brownian_path(40, 3, 0.3);
+    let y = rng.brownian_path(36, 3, 0.3);
+    let (m, nn, delta) = crate::kernel::delta_matrix(&x, &y, 40, 36, 3, Transform::None);
+    let kr = crate::kernel::solve_pde(&delta, m, nn, 1, 1);
+    let kb = crate::kernel::solve_pde_blocked(&delta, m, nn, 1, 1);
+    let kf = crate::baselines::full_grid_kernel(&delta, m, nn, 1, 1).unwrap();
+    println!("kernel row={kr:.9} blocked={kb:.9} fullgrid={kf:.9}");
+    if (kr - kb).abs() > 1e-9 || (kr - kf).abs() > 1e-9 {
+        bad += 1;
+    }
+    // PJRT parity if artifacts are present.
+    if let Ok(rt) = crate::runtime::Runtime::new("artifacts") {
+        if rt.info("sigkernel_b8_l16_d3").is_some() {
+            let b = 8;
+            let (l, dim) = (16, 3);
+            let xs = rng.brownian_batch(b, l, dim, 0.3);
+            let ys = rng.brownian_batch(b, l, dim, 0.3);
+            let native = crate::kernel::batch_kernel(
+                &xs,
+                &ys,
+                b,
+                l,
+                l,
+                dim,
+                &KernelOptions::default(),
+            );
+            let xf: Vec<f32> = xs.iter().map(|&v| v as f32).collect();
+            let yf: Vec<f32> = ys.iter().map(|&v| v as f32).collect();
+            match rt.execute_f32("sigkernel_b8_l16_d3", &[xf, yf]) {
+                Ok(outs) => {
+                    let got: Vec<f64> = outs[0].iter().map(|&v| v as f64).collect();
+                    let rel = crate::util::linalg::rel_err(&got, &native);
+                    println!("pjrt-vs-native sigkernel rel err: {rel:.2e}");
+                    if rel > 1e-4 {
+                        bad += 1;
+                    }
+                }
+                Err(e) => {
+                    println!("pjrt execution failed: {e:#}");
+                    bad += 1;
+                }
+            }
+        }
+    } else {
+        println!("(artifacts not built; skipping PJRT parity — run `make artifacts`)");
+    }
+    if bad == 0 {
+        println!("selfcheck OK");
+        0
+    } else {
+        println!("selfcheck FAILED ({bad} problems)");
+        1
+    }
+}

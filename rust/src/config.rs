@@ -1,0 +1,175 @@
+//! Configuration system: defaults ← config file (KEY=VALUE) ← environment
+//! (`PYSIGLIB_*`) ← CLI flags, in increasing precedence. A from-scratch
+//! stand-in for serde+figment, with typed accessors and validation.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Fully-resolved service/compute configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// Worker threads for batch compute (0 = all cores).
+    pub threads: usize,
+    /// Dynamic batcher: flush at this many queued items per shape group.
+    pub max_batch: usize,
+    /// Dynamic batcher: flush a group when its head has waited this long.
+    pub max_wait: Duration,
+    /// TCP bind address for `serve`.
+    pub bind: String,
+    /// Artifact directory for the PJRT runtime.
+    pub artifacts_dir: String,
+    /// Prefer PJRT artifacts when shapes match.
+    pub use_pjrt: bool,
+    /// Default truncation depth for signature ops.
+    pub default_depth: usize,
+    /// Default dyadic order for kernel ops.
+    pub default_dyadic: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            threads: 0,
+            max_batch: 128,
+            max_wait: Duration::from_millis(2),
+            bind: "127.0.0.1:7462".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            use_pjrt: false,
+            default_depth: 4,
+            default_dyadic: 0,
+        }
+    }
+}
+
+/// Error with the offending key, for actionable messages.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ConfigError {
+    #[error("invalid value for {key}: {value:?} ({reason})")]
+    Invalid {
+        key: String,
+        value: String,
+        reason: String,
+    },
+    #[error("unknown configuration key {0:?}")]
+    UnknownKey(String),
+}
+
+impl Config {
+    /// Apply `KEY=VALUE` lines (comments with '#', blank lines ignored).
+    pub fn apply_file_text(&mut self, text: &str) -> Result<(), ConfigError> {
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ConfigError::Invalid {
+                key: line.to_string(),
+                value: String::new(),
+                reason: "expected KEY=VALUE".into(),
+            })?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Apply `PYSIGLIB_*` environment variables.
+    pub fn apply_env(&mut self) -> Result<(), ConfigError> {
+        let vars: HashMap<String, String> = std::env::vars().collect();
+        for (key, cfg_key) in [
+            ("PYSIGLIB_THREADS", "threads"),
+            ("PYSIGLIB_MAX_BATCH", "max_batch"),
+            ("PYSIGLIB_MAX_WAIT_US", "max_wait_us"),
+            ("PYSIGLIB_BIND", "bind"),
+            ("PYSIGLIB_ARTIFACTS", "artifacts_dir"),
+            ("PYSIGLIB_USE_PJRT", "use_pjrt"),
+        ] {
+            if let Some(v) = vars.get(key) {
+                self.set(cfg_key, v)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Set one key from its string form.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        let bad = |reason: &str| ConfigError::Invalid {
+            key: key.to_string(),
+            value: value.to_string(),
+            reason: reason.to_string(),
+        };
+        match key {
+            "threads" => self.threads = value.parse().map_err(|_| bad("not an integer"))?,
+            "max_batch" => {
+                self.max_batch = value.parse().map_err(|_| bad("not an integer"))?;
+                if self.max_batch == 0 {
+                    return Err(bad("must be >= 1"));
+                }
+            }
+            "max_wait_us" => {
+                let us: u64 = value.parse().map_err(|_| bad("not an integer"))?;
+                self.max_wait = Duration::from_micros(us);
+            }
+            "bind" => self.bind = value.to_string(),
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "use_pjrt" => {
+                self.use_pjrt = match value {
+                    "1" | "true" | "yes" => true,
+                    "0" | "false" | "no" => false,
+                    _ => return Err(bad("expected true/false")),
+                }
+            }
+            "default_depth" => {
+                self.default_depth = value.parse().map_err(|_| bad("not an integer"))?;
+                if self.default_depth == 0 {
+                    return Err(bad("must be >= 1"));
+                }
+            }
+            "default_dyadic" => {
+                self.default_dyadic = value.parse().map_err(|_| bad("not an integer"))?;
+                if self.default_dyadic > 12 {
+                    return Err(bad("dyadic order > 12 is certainly a mistake"));
+                }
+            }
+            other => return Err(ConfigError::UnknownKey(other.to_string())),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.max_batch >= 1);
+        assert!(c.default_depth >= 1);
+    }
+
+    #[test]
+    fn file_text_applies_in_order() {
+        let mut c = Config::default();
+        c.apply_file_text("# comment\nmax_batch=64\nthreads = 3\nuse_pjrt=true\n")
+            .unwrap();
+        assert_eq!(c.max_batch, 64);
+        assert_eq!(c.threads, 3);
+        assert!(c.use_pjrt);
+    }
+
+    #[test]
+    fn invalid_values_are_rejected_with_key() {
+        let mut c = Config::default();
+        let e = c.set("max_batch", "0").unwrap_err();
+        assert!(matches!(e, ConfigError::Invalid { .. }));
+        let e = c.set("nonsense", "1").unwrap_err();
+        assert_eq!(e, ConfigError::UnknownKey("nonsense".into()));
+    }
+
+    #[test]
+    fn wait_is_microseconds() {
+        let mut c = Config::default();
+        c.set("max_wait_us", "1500").unwrap();
+        assert_eq!(c.max_wait, Duration::from_micros(1500));
+    }
+}

@@ -1,0 +1,358 @@
+//! Shape-grouped dynamic batcher — the serving-side heart of the
+//! coordinator. Requests for the same (op, len, dim) are queued together
+//! and flushed when the group reaches `max_batch` or its oldest request has
+//! waited `max_wait`; the flushed batch runs on the data-parallel compute
+//! backend, and each requester gets its slice of the result.
+//!
+//! The same policy (batch by shape, bound queueing delay) is what dynamic
+//! batchers in LLM inference routers do; here the "model" is the signature /
+//! signature-kernel computation.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Metrics, Op, Request, Response, Router};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush a group at this many items.
+    pub max_batch: usize,
+    /// Flush a group when its oldest item has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 128,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Grouping key: identical shapes and parameters batch together.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct GroupKey {
+    op: Op,
+    len: usize,
+    dim: usize,
+}
+
+struct Pending {
+    req: Request,
+    enqueued: Instant,
+}
+
+struct Shared {
+    queues: Mutex<HashMap<GroupKey, Vec<Pending>>>,
+    wake: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// The dynamic batcher. Submissions are non-blocking; a background flusher
+/// thread owns the flush policy.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    config: BatcherConfig,
+    router: Arc<Router>,
+    pub metrics: Arc<Metrics>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Start the batcher with its background flusher.
+    pub fn start(router: Arc<Router>, config: BatcherConfig) -> Batcher {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(HashMap::new()),
+            wake: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let flusher = {
+            let shared = shared.clone();
+            let router = router.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || flusher_loop(shared, router, metrics, config))
+        };
+        Batcher {
+            shared,
+            config,
+            router,
+            metrics,
+            flusher: Some(flusher),
+        }
+    }
+
+    /// Enqueue a request. The response arrives on `req.reply`.
+    pub fn submit(&self, req: Request) {
+        self.metrics.record_request();
+        let key = GroupKey {
+            op: req.op,
+            len: req.len,
+            dim: req.dim,
+        };
+        let flush_now = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            let q = queues.entry(key).or_default();
+            q.push(Pending {
+                req,
+                enqueued: Instant::now(),
+            });
+            q.len() >= self.config.max_batch
+        };
+        if flush_now {
+            // Opportunistic inline flush keeps tail latency flat when load
+            // is high (the flusher thread alone would serialise flushes).
+            let batch = {
+                let mut queues = self.shared.queues.lock().unwrap();
+                queues.remove(&key)
+            };
+            if let Some(batch) = batch {
+                execute_group(&self.router, &self.metrics, key, batch);
+            }
+        } else {
+            self.shared.wake.notify_one();
+        }
+    }
+
+    /// Flush everything immediately (used by tests and shutdown).
+    pub fn flush_all(&self) {
+        let drained: Vec<(GroupKey, Vec<Pending>)> = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            queues.drain().collect()
+        };
+        for (key, batch) in drained {
+            execute_group(&self.router, &self.metrics, key, batch);
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.wake.notify_all();
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+        self.flush_all();
+    }
+}
+
+fn flusher_loop(
+    shared: Arc<Shared>,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    config: BatcherConfig,
+) {
+    loop {
+        if *shared.shutdown.lock().unwrap() {
+            return;
+        }
+        // Collect groups whose oldest entry is past the deadline.
+        let mut due: Vec<(GroupKey, Vec<Pending>)> = Vec::new();
+        {
+            let mut queues = shared.queues.lock().unwrap();
+            let now = Instant::now();
+            let keys: Vec<GroupKey> = queues
+                .iter()
+                .filter(|(_, q)| {
+                    !q.is_empty()
+                        && (q.len() >= config.max_batch
+                            || now.duration_since(q[0].enqueued) >= config.max_wait)
+                })
+                .map(|(k, _)| *k)
+                .collect();
+            for k in keys {
+                if let Some(q) = queues.remove(&k) {
+                    due.push((k, q));
+                }
+            }
+            if due.is_empty() {
+                // Sleep until woken or the shortest remaining deadline.
+                let wait = queues
+                    .values()
+                    .filter_map(|q| q.first())
+                    .map(|p| {
+                        config
+                            .max_wait
+                            .saturating_sub(Instant::now().duration_since(p.enqueued))
+                    })
+                    .min()
+                    .unwrap_or(config.max_wait);
+                let _unused = shared
+                    .wake
+                    .wait_timeout(queues, wait.max(Duration::from_micros(100)))
+                    .unwrap();
+                continue;
+            }
+        }
+        for (key, batch) in due {
+            execute_group(&router, &metrics, key, batch);
+        }
+    }
+}
+
+/// Run one flushed group on the compute backend and fan results back.
+fn execute_group(router: &Router, metrics: &Metrics, key: GroupKey, batch: Vec<Pending>) {
+    metrics.record_batch(batch.len());
+    let started = Instant::now();
+    let queue_us: Vec<u64> = batch
+        .iter()
+        .map(|p| started.duration_since(p.enqueued).as_micros() as u64)
+        .collect();
+    let reqs: Vec<&Request> = batch.iter().map(|p| &p.req).collect();
+    let results = router.execute_batch(key.op, key.len, key.dim, &reqs);
+    let compute_us = started.elapsed().as_micros() as u64;
+    for ((p, result), q_us) in batch.iter().zip(results).zip(queue_us) {
+        let is_err = matches!(result, Response::Error(_));
+        metrics.record_response(q_us + compute_us, q_us, is_err);
+        let _ = p.req.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transform_to_u8;
+    use crate::transforms::Transform;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc;
+
+    fn submit_one(batcher: &Batcher, op: Op, len: usize, dim: usize, rng: &mut Rng) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let data = rng.brownian_path(len, dim, 0.5);
+        let data2 = match op {
+            Op::SigKernel { .. } | Op::SigKernelGrad { .. } => {
+                Some(rng.brownian_path(len, dim, 0.5))
+            }
+            _ => None,
+        };
+        batcher.submit(Request {
+            op,
+            len,
+            dim,
+            data,
+            data2,
+            reply: tx,
+        });
+        rx
+    }
+
+    #[test]
+    fn every_request_gets_exactly_one_response() {
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(
+            router,
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let op = Op::Signature {
+            depth: 3,
+            transform: transform_to_u8(Transform::None),
+        };
+        let mut rng = Rng::new(1);
+        let rxs: Vec<_> = (0..23).map(|_| submit_one(&batcher, op, 10, 2, &mut rng)).collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+            match resp {
+                Response::Values(v) => assert_eq!(v.len(), crate::sig::sig_length(2, 3)),
+                Response::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(
+            batcher
+                .metrics
+                .responses_total
+                .load(std::sync::atomic::Ordering::Relaxed),
+            23
+        );
+    }
+
+    #[test]
+    fn different_shapes_batch_separately_but_all_complete() {
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(router, BatcherConfig::default());
+        let op = Op::SigKernel {
+            lam1: 0,
+            lam2: 0,
+            transform: 0,
+        };
+        let mut rng = Rng::new(2);
+        let rx1 = submit_one(&batcher, op, 8, 2, &mut rng);
+        let rx2 = submit_one(&batcher, op, 12, 3, &mut rng);
+        batcher.flush_all();
+        for rx in [rx1, rx2] {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                Response::Values(v) => assert_eq!(v.len(), 1),
+                Response::Error(e) => panic!("{e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_flush_fires_without_filling_batch() {
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(
+            router,
+            BatcherConfig {
+                max_batch: 1000,
+                max_wait: Duration::from_millis(5),
+            },
+        );
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(3);
+        let rx = submit_one(&batcher, op, 6, 2, &mut rng);
+        // No explicit flush: the deadline must trigger it.
+        let resp = rx.recv_timeout(Duration::from_secs(5)).expect("deadline flush");
+        assert!(matches!(resp, Response::Values(_)));
+    }
+
+    #[test]
+    fn batch_results_match_direct_computation() {
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(
+            router,
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let op = Op::Signature {
+            depth: 4,
+            transform: 0,
+        };
+        let mut rng = Rng::new(4);
+        let paths: Vec<Vec<f64>> = (0..8).map(|_| rng.brownian_path(9, 2, 0.5)).collect();
+        let rxs: Vec<_> = paths
+            .iter()
+            .map(|p| {
+                let (tx, rx) = mpsc::channel();
+                batcher.submit(Request {
+                    op,
+                    len: 9,
+                    dim: 2,
+                    data: p.clone(),
+                    data2: None,
+                    reply: tx,
+                });
+                rx
+            })
+            .collect();
+        for (p, rx) in paths.iter().zip(rxs) {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                Response::Values(v) => {
+                    let want = crate::sig::sig(p, 9, 2, 4);
+                    assert!(crate::util::linalg::max_abs_diff(&v, &want) < 1e-12);
+                }
+                Response::Error(e) => panic!("{e}"),
+            }
+        }
+    }
+}

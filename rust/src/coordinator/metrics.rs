@@ -1,0 +1,111 @@
+//! Serving metrics: request / batch counters and latency aggregates,
+//! lock-free on the hot path (atomics; latencies in integer microseconds).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregated service metrics. All methods are thread-safe.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub responses_total: AtomicU64,
+    pub errors_total: AtomicU64,
+    pub batches_total: AtomicU64,
+    pub batched_items_total: AtomicU64,
+    /// Sum of request latencies (µs) and max, for mean/max reporting.
+    lat_sum_us: AtomicU64,
+    lat_max_us: AtomicU64,
+    /// Queue-time share of latency (µs).
+    queue_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, items: usize) {
+        self.batches_total.fetch_add(1, Ordering::Relaxed);
+        self.batched_items_total
+            .fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_response(&self, latency_us: u64, queue_us: u64, is_err: bool) {
+        self.responses_total.fetch_add(1, Ordering::Relaxed);
+        if is_err {
+            self.errors_total.fetch_add(1, Ordering::Relaxed);
+        }
+        self.lat_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        self.queue_sum_us.fetch_add(queue_us, Ordering::Relaxed);
+        self.lat_max_us.fetch_max(latency_us, Ordering::Relaxed);
+    }
+
+    /// Mean items per flushed batch — the batching efficiency signal.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches_total.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_items_total.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses_total.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.lat_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn max_latency_us(&self) -> u64 {
+        self.lat_max_us.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_queue_us(&self) -> f64 {
+        let n = self.responses_total.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.queue_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0}",
+            self.requests_total.load(Ordering::Relaxed),
+            self.responses_total.load(Ordering::Relaxed),
+            self.errors_total.load(Ordering::Relaxed),
+            self.batches_total.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.max_latency_us(),
+            self.mean_queue_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2);
+        m.record_response(100, 40, false);
+        m.record_response(300, 60, true);
+        assert_eq!(m.requests_total.load(Ordering::Relaxed), 2);
+        assert_eq!(m.errors_total.load(Ordering::Relaxed), 1);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        assert_eq!(m.mean_latency_us(), 200.0);
+        assert_eq!(m.max_latency_us(), 300);
+        assert_eq!(m.mean_queue_us(), 50.0);
+        assert!(m.summary().contains("batches=1"));
+    }
+}

@@ -1,0 +1,127 @@
+//! L3 serving coordinator: a request router + shape-grouped dynamic batcher
+//! + TCP server in the style of an inference router (vLLM-like), built on
+//! std::net + threads (no async runtime is available offline; a blocking
+//! threaded design is also the right fit for a compute-bound service).
+//!
+//! Life of a request:
+//!   client → wire protocol → [`server`] → [`router::Router`] validates and
+//!   normalises → [`batcher::Batcher`] groups same-shape work and flushes by
+//!   size or deadline → compute backend (native Rust kernels, or a PJRT
+//!   artifact when one matches the batch shape) → responses fan back out.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod wire;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::{serve, Client};
+
+use crate::transforms::Transform;
+
+/// Operations the coordinator serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Truncated signature of one path.
+    Signature { depth: u32, transform: u8 },
+    /// Expanded log-signature of one path.
+    LogSignature { depth: u32, transform: u8 },
+    /// Signature kernel of a pair of equal-length paths.
+    SigKernel { lam1: u32, lam2: u32, transform: u8 },
+    /// Exact gradient of the signature kernel w.r.t. both paths.
+    SigKernelGrad { lam1: u32, lam2: u32 },
+}
+
+impl Op {
+    pub fn code(&self) -> u32 {
+        match self {
+            Op::Signature { .. } => 1,
+            Op::LogSignature { .. } => 2,
+            Op::SigKernel { .. } => 3,
+            Op::SigKernelGrad { .. } => 4,
+        }
+    }
+}
+
+/// Decode the transform byte used on the wire.
+pub fn transform_from_u8(v: u8) -> Option<Transform> {
+    match v {
+        0 => Some(Transform::None),
+        1 => Some(Transform::TimeAug),
+        2 => Some(Transform::LeadLag),
+        3 => Some(Transform::LeadLagTimeAug),
+        _ => None,
+    }
+}
+
+/// Encode a transform for the wire.
+pub fn transform_to_u8(t: Transform) -> u8 {
+    match t {
+        Transform::None => 0,
+        Transform::TimeAug => 1,
+        Transform::LeadLag => 2,
+        Transform::LeadLagTimeAug => 3,
+    }
+}
+
+/// A single in-flight request: one path (or pair), plus the reply channel.
+pub struct Request {
+    pub op: Op,
+    pub len: usize,
+    pub dim: usize,
+    /// Primary path, row-major `[len, dim]`.
+    pub data: Vec<f64>,
+    /// Second path for kernel ops.
+    pub data2: Option<Vec<f64>>,
+    pub reply: std::sync::mpsc::Sender<Response>,
+}
+
+/// Response payload.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Values(Vec<f64>),
+    Error(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transform_roundtrip() {
+        for t in [
+            Transform::None,
+            Transform::TimeAug,
+            Transform::LeadLag,
+            Transform::LeadLagTimeAug,
+        ] {
+            assert_eq!(transform_from_u8(transform_to_u8(t)), Some(t));
+        }
+        assert_eq!(transform_from_u8(9), None);
+    }
+
+    #[test]
+    fn op_codes_distinct() {
+        let ops = [
+            Op::Signature {
+                depth: 3,
+                transform: 0,
+            },
+            Op::LogSignature {
+                depth: 3,
+                transform: 0,
+            },
+            Op::SigKernel {
+                lam1: 0,
+                lam2: 0,
+                transform: 0,
+            },
+            Op::SigKernelGrad { lam1: 0, lam2: 0 },
+        ];
+        let codes: std::collections::HashSet<u32> = ops.iter().map(|o| o.code()).collect();
+        assert_eq!(codes.len(), ops.len());
+    }
+}

@@ -1,0 +1,330 @@
+//! Request router: validates requests, picks a compute backend for each
+//! flushed batch (native Rust kernels always; a PJRT artifact when one
+//! matches the op + batch shape exactly), and runs it.
+
+use std::sync::Arc;
+
+use crate::coordinator::{transform_from_u8, Op, Request, Response};
+use crate::kernel::KernelOptions;
+use crate::runtime::RuntimeHandle;
+use crate::sig::SigOptions;
+
+/// Compute backend selection per batch.
+pub struct Router {
+    /// Optional PJRT runtime over `artifacts/`; `None` = native only.
+    runtime: Option<Arc<RuntimeHandle>>,
+}
+
+impl Router {
+    /// Native Rust kernels only (no artifacts needed).
+    pub fn native_only() -> Router {
+        Router { runtime: None }
+    }
+
+    /// Prefer PJRT artifacts when shapes match; fall back to native.
+    pub fn with_runtime(runtime: Arc<RuntimeHandle>) -> Router {
+        Router {
+            runtime: Some(runtime),
+        }
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Name of the PJRT artifact that can serve this batch, if any.
+    /// Artifact naming convention (see aot.py): op_b{B}_l{L}_d{D}[...].
+    pub fn artifact_for(&self, op: Op, batch: usize, len: usize, dim: usize) -> Option<String> {
+        let rt = self.runtime.as_ref()?;
+        let name = match op {
+            Op::SigKernel {
+                lam1: 0,
+                lam2: 0,
+                transform: 0,
+            } => format!("sigkernel_b{batch}_l{len}_d{dim}"),
+            Op::Signature {
+                depth,
+                transform: 0,
+            } => format!("signature_b{batch}_l{len}_d{dim}_n{depth}"),
+            _ => return None,
+        };
+        rt.info(&name).map(|_| name)
+    }
+
+    /// Execute one shape-homogeneous batch of requests.
+    pub fn execute_batch(
+        &self,
+        op: Op,
+        len: usize,
+        dim: usize,
+        reqs: &[&Request],
+    ) -> Vec<Response> {
+        // Validate payload sizes up front; a malformed request must not sink
+        // the whole batch.
+        let expect = len * dim;
+        let bad: Vec<bool> = reqs
+            .iter()
+            .map(|r| {
+                r.data.len() != expect
+                    || match op {
+                        Op::SigKernel { .. } | Op::SigKernelGrad { .. } => {
+                            r.data2.as_ref().map(|d| d.len()) != Some(expect)
+                        }
+                        _ => r.data2.is_some(),
+                    }
+            })
+            .collect();
+        let good_idx: Vec<usize> = (0..reqs.len()).filter(|&i| !bad[i]).collect();
+
+        // Try the PJRT path for an exactly-matching artifact.
+        if good_idx.len() == reqs.len() {
+            if let Some(name) = self.artifact_for(op, reqs.len(), len, dim) {
+                if let Some(resps) = self.execute_pjrt(&name, op, len, dim, reqs) {
+                    return resps;
+                }
+            }
+        }
+
+        let computed = self.execute_native(op, len, dim, reqs, &good_idx);
+        let mut out: Vec<Response> = Vec::with_capacity(reqs.len());
+        let mut it = computed.into_iter();
+        for i in 0..reqs.len() {
+            if bad[i] {
+                out.push(Response::Error(format!(
+                    "payload size mismatch: expected {} values per path",
+                    expect
+                )));
+            } else {
+                out.push(it.next().unwrap());
+            }
+        }
+        out
+    }
+
+    fn execute_native(
+        &self,
+        op: Op,
+        len: usize,
+        dim: usize,
+        reqs: &[&Request],
+        good_idx: &[usize],
+    ) -> Vec<Response> {
+        let b = good_idx.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        let mut paths = Vec::with_capacity(b * len * dim);
+        for &i in good_idx {
+            paths.extend_from_slice(&reqs[i].data);
+        }
+        match op {
+            Op::Signature { depth, transform } | Op::LogSignature { depth, transform } => {
+                let tr = match transform_from_u8(transform) {
+                    Some(t) => t,
+                    None => {
+                        return good_idx
+                            .iter()
+                            .map(|_| Response::Error("bad transform".into()))
+                            .collect()
+                    }
+                };
+                let opts = SigOptions::new(depth as usize).transform(tr);
+                let slen = crate::sig::sig_length(tr.out_dim(dim), depth as usize);
+                if matches!(op, Op::Signature { .. }) {
+                    let sigs = crate::sig::batch_signature(&paths, b, len, dim, &opts);
+                    sigs.chunks(slen)
+                        .map(|c| Response::Values(c.to_vec()))
+                        .collect()
+                } else {
+                    // Log-signatures: per-path (tensor log after the batch
+                    // signature sweep).
+                    good_idx
+                        .iter()
+                        .map(|&i| {
+                            Response::Values(crate::sig::log_signature(
+                                &reqs[i].data,
+                                len,
+                                dim,
+                                depth as usize,
+                                tr,
+                            ))
+                        })
+                        .collect()
+                }
+            }
+            Op::SigKernel {
+                lam1,
+                lam2,
+                transform,
+            } => {
+                let tr = match transform_from_u8(transform) {
+                    Some(t) => t,
+                    None => {
+                        return good_idx
+                            .iter()
+                            .map(|_| Response::Error("bad transform".into()))
+                            .collect()
+                    }
+                };
+                let mut ys = Vec::with_capacity(b * len * dim);
+                for &i in good_idx {
+                    ys.extend_from_slice(reqs[i].data2.as_ref().unwrap());
+                }
+                let opts = KernelOptions::default().dyadic(lam1, lam2).transform(tr);
+                let ks = crate::kernel::batch_kernel(&paths, &ys, b, len, len, dim, &opts);
+                ks.iter().map(|&k| Response::Values(vec![k])).collect()
+            }
+            Op::SigKernelGrad { lam1, lam2 } => {
+                let mut ys = Vec::with_capacity(b * len * dim);
+                for &i in good_idx {
+                    ys.extend_from_slice(reqs[i].data2.as_ref().unwrap());
+                }
+                let opts = KernelOptions::default().dyadic(lam1, lam2);
+                let gk = vec![1.0; b];
+                let (gx, gy) =
+                    crate::kernel::batch_kernel_vjp(&paths, &ys, &gk, b, len, len, dim, &opts);
+                (0..b)
+                    .map(|i| {
+                        let mut v = gx[i * len * dim..(i + 1) * len * dim].to_vec();
+                        v.extend_from_slice(&gy[i * len * dim..(i + 1) * len * dim]);
+                        Response::Values(v)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Execute via a PJRT artifact. Returns None (falls back to native) on
+    /// any runtime error — the artifacts are an accelerator, not a
+    /// correctness dependency.
+    fn execute_pjrt(
+        &self,
+        name: &str,
+        op: Op,
+        len: usize,
+        dim: usize,
+        reqs: &[&Request],
+    ) -> Option<Vec<Response>> {
+        let rt = self.runtime.as_ref()?;
+        let b = reqs.len();
+        let mut xs = Vec::with_capacity(b * len * dim);
+        for r in reqs {
+            xs.extend(r.data.iter().map(|&v| v as f32));
+        }
+        let inputs: Vec<Vec<f32>> = match op {
+            Op::SigKernel { .. } => {
+                let mut ys = Vec::with_capacity(b * len * dim);
+                for r in reqs {
+                    ys.extend(r.data2.as_ref().unwrap().iter().map(|&v| v as f32));
+                }
+                vec![xs, ys]
+            }
+            _ => vec![xs],
+        };
+        let outputs = rt.execute_f32(name, inputs).ok()?;
+        let flat = &outputs[0];
+        let per = flat.len() / b;
+        Some(
+            flat.chunks(per)
+                .map(|c| Response::Values(c.iter().map(|&v| v as f64).collect()))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc;
+
+    fn req(op: Op, len: usize, dim: usize, rng: &mut Rng, pair: bool) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        // keep receiver alive is unnecessary: router never sends; batcher does
+        std::mem::forget(_rx);
+        Request {
+            op,
+            len,
+            dim,
+            data: rng.brownian_path(len, dim, 0.5),
+            data2: pair.then(|| rng.brownian_path(len, dim, 0.5)),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn signature_batch_matches_direct() {
+        let router = Router::native_only();
+        let op = Op::Signature {
+            depth: 3,
+            transform: 0,
+        };
+        let mut rng = Rng::new(7);
+        let reqs: Vec<Request> = (0..5).map(|_| req(op, 8, 2, &mut rng, false)).collect();
+        let refs: Vec<&Request> = reqs.iter().collect();
+        let out = router.execute_batch(op, 8, 2, &refs);
+        for (r, o) in reqs.iter().zip(&out) {
+            match o {
+                Response::Values(v) => {
+                    let want = crate::sig::sig(&r.data, 8, 2, 3);
+                    assert!(crate::util::linalg::max_abs_diff(v, &want) < 1e-12);
+                }
+                Response::Error(e) => panic!("{e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_grad_returns_both_gradients() {
+        let router = Router::native_only();
+        let op = Op::SigKernelGrad { lam1: 0, lam2: 0 };
+        let mut rng = Rng::new(8);
+        let reqs: Vec<Request> = (0..3).map(|_| req(op, 6, 2, &mut rng, true)).collect();
+        let refs: Vec<&Request> = reqs.iter().collect();
+        let out = router.execute_batch(op, 6, 2, &refs);
+        for o in &out {
+            match o {
+                Response::Values(v) => assert_eq!(v.len(), 2 * 6 * 2),
+                Response::Error(e) => panic!("{e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_request_errors_without_sinking_batch() {
+        let router = Router::native_only();
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(9);
+        let good = req(op, 8, 2, &mut rng, false);
+        let mut bad = req(op, 8, 2, &mut rng, false);
+        bad.data.truncate(3); // wrong payload
+        let refs: Vec<&Request> = vec![&good, &bad];
+        let out = router.execute_batch(op, 8, 2, &refs);
+        assert!(matches!(out[0], Response::Values(_)));
+        assert!(matches!(out[1], Response::Error(_)));
+    }
+
+    #[test]
+    fn logsignature_served() {
+        let router = Router::native_only();
+        let op = Op::LogSignature {
+            depth: 3,
+            transform: 0,
+        };
+        let mut rng = Rng::new(10);
+        let r = req(op, 7, 2, &mut rng, false);
+        let refs: Vec<&Request> = vec![&r];
+        let out = router.execute_batch(op, 7, 2, &refs);
+        match &out[0] {
+            Response::Values(v) => {
+                let want =
+                    crate::sig::log_signature(&r.data, 7, 2, 3, crate::transforms::Transform::None);
+                assert!(crate::util::linalg::max_abs_diff(v, &want) < 1e-12);
+            }
+            Response::Error(e) => panic!("{e}"),
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! TCP front-end for the coordinator: one reader thread per connection,
+//! requests flow into the shared dynamic batcher, responses return in
+//! request order per connection (concurrency comes from multiple
+//! connections and from batching across them).
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::wire::{read_request, read_response, write_request, write_response, Frame};
+use crate::coordinator::{Batcher, Op, Request, Response};
+
+/// Handle to a running server (drop or call `stop()` to shut down).
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the accept loop awake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Start serving on `addr` (use port 0 for an ephemeral port). Returns after
+/// binding; connections are handled on background threads.
+pub fn serve(addr: impl ToSocketAddrs, batcher: Arc<Batcher>) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let accept_thread = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let batcher = batcher.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(stream, batcher);
+                    });
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        accept_thread: Some(accept_thread),
+    })
+}
+
+fn split_payload(frame: &Frame) -> Result<(Vec<f64>, Option<Vec<f64>>), String> {
+    let per = frame.len * frame.dim;
+    match frame.op {
+        Op::SigKernel { .. } | Op::SigKernelGrad { .. } => {
+            if frame.values.len() != 2 * per {
+                return Err(format!(
+                    "kernel op expects 2·len·dim = {} values, got {}",
+                    2 * per,
+                    frame.values.len()
+                ));
+            }
+            Ok((
+                frame.values[..per].to_vec(),
+                Some(frame.values[per..].to_vec()),
+            ))
+        }
+        _ => {
+            if frame.values.len() != per {
+                return Err(format!(
+                    "expected len·dim = {per} values, got {}",
+                    frame.values.len()
+                ));
+            }
+            Ok((frame.values.clone(), None))
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, batcher: Arc<Batcher>) -> std::io::Result<()> {
+    let mut out = stream.try_clone()?;
+    while let Some(frame) = read_request(&mut stream)? {
+        let result = match split_payload(&frame) {
+            Ok((data, data2)) => {
+                let (tx, rx) = mpsc::channel();
+                batcher.submit(Request {
+                    op: frame.op,
+                    len: frame.len,
+                    dim: frame.dim,
+                    data,
+                    data2,
+                    reply: tx,
+                });
+                match rx.recv() {
+                    Ok(Response::Values(v)) => Ok(v),
+                    Ok(Response::Error(e)) => Err(e),
+                    Err(_) => Err("server shutting down".to_string()),
+                }
+            }
+            Err(e) => Err(e),
+        };
+        write_response(&mut out, &result)?;
+    }
+    Ok(())
+}
+
+/// Blocking client for the wire protocol.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        Ok(Client {
+            stream: TcpStream::connect(addr)?,
+        })
+    }
+
+    /// Send one request and wait for its response.
+    pub fn call(
+        &mut self,
+        op: Op,
+        len: usize,
+        dim: usize,
+        values: Vec<f64>,
+    ) -> std::io::Result<Result<Vec<f64>, String>> {
+        write_request(
+            &mut self.stream,
+            &Frame {
+                op,
+                len,
+                dim,
+                values,
+            },
+        )?;
+        read_response(&mut self.stream)
+    }
+
+    /// Convenience: truncated signature of one path.
+    pub fn signature(
+        &mut self,
+        path: &[f64],
+        len: usize,
+        dim: usize,
+        depth: u32,
+    ) -> std::io::Result<Result<Vec<f64>, String>> {
+        self.call(
+            Op::Signature {
+                depth,
+                transform: 0,
+            },
+            len,
+            dim,
+            path.to_vec(),
+        )
+    }
+
+    /// Convenience: signature kernel of a pair of equal-shape paths.
+    pub fn sig_kernel(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        len: usize,
+        dim: usize,
+    ) -> std::io::Result<Result<f64, String>> {
+        let mut values = x.to_vec();
+        values.extend_from_slice(y);
+        let r = self.call(
+            Op::SigKernel {
+                lam1: 0,
+                lam2: 0,
+                transform: 0,
+            },
+            len,
+            dim,
+            values,
+        )?;
+        Ok(r.map(|v| v[0]))
+    }
+}

@@ -1,0 +1,210 @@
+//! Length-prefixed little-endian binary wire protocol for the coordinator
+//! (a from-scratch stand-in for serde/bincode, unavailable offline).
+//!
+//! Request frame:
+//!   u32 magic "SIGL" | u32 op | u32 p1 | u32 p2 | u32 transform |
+//!   u32 len | u32 dim | u32 n_values | n_values × f64
+//! (kernel ops carry x followed by y, so n_values = 2·len·dim).
+//!
+//! Response frame:
+//!   u32 status (0 = ok, 1 = error) | u32 n | payload
+//!   (ok: n × f64; error: n utf-8 bytes).
+
+use std::io::{Read, Write};
+
+use crate::coordinator::Op;
+
+pub const MAGIC: u32 = 0x5349_474C; // "SIGL"
+
+/// A decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub op: Op,
+    pub len: usize,
+    pub dim: usize,
+    pub values: Vec<f64>,
+}
+
+fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
+    match op {
+        Op::Signature { depth, transform } => (1, depth, 0, transform as u32),
+        Op::LogSignature { depth, transform } => (2, depth, 0, transform as u32),
+        Op::SigKernel {
+            lam1,
+            lam2,
+            transform,
+        } => (3, lam1, lam2, transform as u32),
+        Op::SigKernelGrad { lam1, lam2 } => (4, lam1, lam2, 0),
+    }
+}
+
+fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Option<Op> {
+    let transform = u8::try_from(tr).ok()?;
+    match code {
+        1 => Some(Op::Signature {
+            depth: p1,
+            transform,
+        }),
+        2 => Some(Op::LogSignature {
+            depth: p1,
+            transform,
+        }),
+        3 => Some(Op::SigKernel {
+            lam1: p1,
+            lam2: p2,
+            transform,
+        }),
+        4 => Some(Op::SigKernelGrad { lam1: p1, lam2: p2 }),
+        _ => None,
+    }
+}
+
+pub fn write_request<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    let (code, p1, p2, tr) = op_to_parts(frame.op);
+    let header = [
+        MAGIC,
+        code,
+        p1,
+        p2,
+        tr,
+        frame.len as u32,
+        frame.dim as u32,
+        frame.values.len() as u32,
+    ];
+    let mut buf = Vec::with_capacity(32 + frame.values.len() * 8);
+    for h in header {
+        buf.extend_from_slice(&h.to_le_bytes());
+    }
+    for v in &frame.values {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+/// Read one request frame; Ok(None) on clean EOF at a frame boundary.
+pub fn read_request<R: Read>(r: &mut R) -> std::io::Result<Option<Frame>> {
+    let mut header = [0u8; 32];
+    match r.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let u = |i: usize| u32::from_le_bytes(header[i * 4..i * 4 + 4].try_into().unwrap());
+    if u(0) != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad magic",
+        ));
+    }
+    let op = op_from_parts(u(1), u(2), u(3), u(4)).ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "unknown op code")
+    })?;
+    let len = u(5) as usize;
+    let dim = u(6) as usize;
+    let n = u(7) as usize;
+    // Refuse absurd frames before allocating (simple DoS guard).
+    if n > (1 << 28) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame too large",
+        ));
+    }
+    let mut data = vec![0u8; n * 8];
+    r.read_exact(&mut data)?;
+    let values = data
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Some(Frame {
+        op,
+        len,
+        dim,
+        values,
+    }))
+}
+
+pub fn write_response<W: Write>(
+    w: &mut W,
+    result: &Result<Vec<f64>, String>,
+) -> std::io::Result<()> {
+    let mut buf = Vec::new();
+    match result {
+        Ok(values) => {
+            buf.extend_from_slice(&0u32.to_le_bytes());
+            buf.extend_from_slice(&(values.len() as u32).to_le_bytes());
+            for v in values {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Err(msg) => {
+            buf.extend_from_slice(&1u32.to_le_bytes());
+            buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+            buf.extend_from_slice(msg.as_bytes());
+        }
+    }
+    w.write_all(&buf)
+}
+
+pub fn read_response<R: Read>(r: &mut R) -> std::io::Result<Result<Vec<f64>, String>> {
+    let mut header = [0u8; 8];
+    r.read_exact(&mut header)?;
+    let status = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let n = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if status == 0 {
+        let mut data = vec![0u8; n * 8];
+        r.read_exact(&mut data)?;
+        Ok(Ok(data
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect()))
+    } else {
+        let mut data = vec![0u8; n];
+        r.read_exact(&mut data)?;
+        Ok(Err(String::from_utf8_lossy(&data).into_owned()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let frame = Frame {
+            op: Op::SigKernel {
+                lam1: 1,
+                lam2: 2,
+                transform: 1,
+            },
+            len: 4,
+            dim: 2,
+            values: vec![1.0, -2.5, 3.25, 0.0, 5.0, 6.0, 7.0, 8.0],
+        };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &frame).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!(got, frame);
+    }
+
+    #[test]
+    fn response_roundtrip_ok_and_err() {
+        for result in [Ok(vec![1.5, -2.0]), Err("boom".to_string())] {
+            let mut buf = Vec::new();
+            write_response(&mut buf, &result).unwrap();
+            let got = read_response(&mut buf.as_slice()).unwrap();
+            assert_eq!(got, result);
+        }
+    }
+
+    #[test]
+    fn eof_at_boundary_is_none() {
+        let empty: &[u8] = &[];
+        assert!(read_request(&mut &*empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = vec![0u8; 32];
+        assert!(read_request(&mut buf.as_slice()).is_err());
+    }
+}

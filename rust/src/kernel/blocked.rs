@@ -1,0 +1,124 @@
+//! The paper's GPU scheme (§3.3), faithfully simulated on CPU: anti-diagonal
+//! wavefront over the PDE grid, processed in **row-blocks of 32**, with only
+//! **three rotating anti-diagonal buffers** live (the GPU keeps them in
+//! shared memory). The initial-condition row in "global memory" is
+//! overwritten by each block's final row, becoming the next block's initial
+//! condition — so stream length is never limited by the 32-thread allocation.
+//!
+//! Numerics are identical to the row solver; this module exists (a) as the
+//! correctness model for the CUDA/Pallas dataflow, and (b) to let the
+//! ablation benches compare the two schedules on CPU.
+
+/// Rows processed per block — the warp width in the paper's CUDA kernel.
+pub const BLOCK_ROWS: usize = 32;
+
+/// Solve the Goursat PDE with the blocked anti-diagonal schedule.
+/// Same contract as [`super::solver::solve_pde`].
+pub fn solve_pde_blocked(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> f64 {
+    assert_eq!(delta.len(), m * n);
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+
+    // "Global memory": the carried initial-condition row (row r0 of the
+    // current block), initially all ones.
+    let mut init_row = vec![1.0; cols + 1];
+
+    // "Shared memory": three rotating anti-diagonals. Buffer index i holds
+    // k[r0 + i, j] for the cell of the current diagonal at local row i.
+    let bcap = BLOCK_ROWS + 1;
+    let mut d_prev2 = vec![0.0; bcap];
+    let mut d_prev = vec![0.0; bcap];
+    let mut d_cur = vec![0.0; bcap];
+
+    let mut r0 = 0; // first (known) row of the block
+    while r0 < rows {
+        let b = BLOCK_ROWS.min(rows - r0); // new rows computed in this block
+        // Diagonal m_idx contains local cells (i, m_idx - i), i = 0..=b.
+        // i = 0 is the init row; j = 0 is the unit left boundary.
+        for m_idx in 0..=(b + cols) {
+            // Rotate buffers: cur -> prev -> prev2.
+            std::mem::swap(&mut d_prev2, &mut d_prev);
+            std::mem::swap(&mut d_prev, &mut d_cur);
+            let lo = m_idx.saturating_sub(cols);
+            let hi = m_idx.min(b);
+            // (In CUDA this loop is the 32 threads of the warp, one per i.)
+            for i in lo..=hi {
+                let j = m_idx - i;
+                let v = if i == 0 {
+                    init_row[j]
+                } else if j == 0 {
+                    1.0
+                } else {
+                    let gi = r0 + i; // global row of the node
+                    let p = delta[((gi - 1) >> lam1) * n + ((j - 1) >> lam2)] * scale;
+                    let p2 = p * p * (1.0 / 12.0);
+                    let a = 1.0 + 0.5 * p + p2;
+                    let bb = 1.0 - p2;
+                    // k[i-1,j] and k[i,j-1] live on the previous diagonal;
+                    // k[i-1,j-1] on the one before.
+                    (d_prev[i - 1] + d_prev[i]) * a - d_prev2[i - 1] * bb
+                };
+                d_cur[i] = v;
+                // The block's last row streams back to "global memory" and
+                // becomes the next block's initial condition.
+                if i == b {
+                    init_row[j] = v;
+                }
+            }
+        }
+        r0 += b;
+    }
+    init_row[cols]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::solver::solve_pde;
+    use crate::util::prop::check;
+
+    #[test]
+    fn matches_row_solver_across_sizes() {
+        check("blocked == row", 30, |g| {
+            // Cross the 32-row block boundary in both dimensions.
+            let m = g.usize_in(1, 80);
+            let n = g.usize_in(1, 80);
+            let delta: Vec<f64> = g.normal_vec(m * n).iter().map(|v| v * 0.2).collect();
+            let kr = solve_pde(&delta, m, n, 0, 0);
+            let kb = solve_pde_blocked(&delta, m, n, 0, 0);
+            assert!(
+                (kr - kb).abs() <= 1e-9 * kr.abs().max(1.0),
+                "m={m} n={n}: {kr} vs {kb}"
+            );
+        });
+    }
+
+    #[test]
+    fn matches_with_dyadic_refinement() {
+        check("blocked == row (dyadic)", 15, |g| {
+            let m = g.usize_in(1, 20);
+            let n = g.usize_in(1, 20);
+            let lam1 = g.usize_in(0, 3) as u32;
+            let lam2 = g.usize_in(0, 3) as u32;
+            let delta: Vec<f64> = g.normal_vec(m * n).iter().map(|v| v * 0.2).collect();
+            let kr = solve_pde(&delta, m, n, lam1, lam2);
+            let kb = solve_pde_blocked(&delta, m, n, lam1, lam2);
+            assert!(
+                (kr - kb).abs() <= 1e-9 * kr.abs().max(1.0),
+                "m={m} n={n} λ=({lam1},{lam2}): {kr} vs {kb}"
+            );
+        });
+    }
+
+    #[test]
+    fn exact_block_boundary_sizes() {
+        // rows exactly 32, 64: the init-row carry is exercised end-to-end.
+        for &m in &[32usize, 33, 64, 65] {
+            let delta: Vec<f64> = (0..m * 3).map(|i| ((i % 7) as f64 - 3.0) * 0.05).collect();
+            let kr = solve_pde(&delta, m, 3, 0, 0);
+            let kb = solve_pde_blocked(&delta, m, 3, 0, 0);
+            assert!((kr - kb).abs() < 1e-10, "m={m}");
+        }
+    }
+}

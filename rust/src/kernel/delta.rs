@@ -1,0 +1,221 @@
+//! The increment inner-product matrix Δ[i,j] = ⟨dx_i, dy_j⟩ that drives the
+//! Goursat PDE, with path transformations fused in rather than materialised
+//! (paper design note (2): when d is large this matmul is almost all of the
+//! runtime — it is a single blocked GEMM here, torch.bmm in pySigLib).
+
+use crate::transforms::Transform;
+use crate::util::linalg::gemm_nt;
+
+/// Increments of `path` (`[len, dim]`): `[len-1, dim]`.
+pub fn increments(path: &[f64], len: usize, dim: usize) -> Vec<f64> {
+    assert_eq!(path.len(), len * dim);
+    assert!(len >= 2);
+    let mut out = vec![0.0; (len - 1) * dim];
+    for i in 0..len - 1 {
+        for j in 0..dim {
+            out[i * dim + j] = path[(i + 1) * dim + j] - path[i * dim + j];
+        }
+    }
+    out
+}
+
+/// Δ matrix for the *transformed* paths, built without materialising them.
+///
+/// Returns `(rows, cols, delta)` where `rows`/`cols` are the number of
+/// increments of the transformed x/y and `delta` is row-major `[rows, cols]`.
+///
+/// * `None`:     Δ[i,j] = ⟨dx_i, dy_j⟩ — one GEMM.
+/// * `TimeAug`:  Δ'[i,j] = Δ[i,j] + dt_x · dt_y (the time channels are
+///   uniform, so their product is a constant shift).
+/// * `LeadLag`:  the transformed increments alternate lead/lag moves; cross
+///   parities are orthogonal, equal parities reduce to the base Δ:
+///   Δ'[a,b] = (a ≡ b mod 2) ? Δ[⌊a/2⌋, ⌊b/2⌋] : 0.
+/// * `LeadLagTimeAug`: lead-lag structure plus the constant time shift.
+pub fn delta_matrix(
+    x: &[f64],
+    y: &[f64],
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    transform: Transform,
+) -> (usize, usize, Vec<f64>) {
+    let dx = increments(x, lx, dim);
+    let dy = increments(y, ly, dim);
+    let m = lx - 1;
+    let n = ly - 1;
+    let mut base = vec![0.0; m * n];
+    gemm_nt(m, dim, n, &dx, &dy, &mut base);
+    match transform {
+        Transform::None => (m, n, base),
+        Transform::TimeAug => {
+            let shift = (1.0 / m as f64) * (1.0 / n as f64);
+            for v in base.iter_mut() {
+                *v += shift;
+            }
+            (m, n, base)
+        }
+        Transform::LeadLag | Transform::LeadLagTimeAug => {
+            let rows = 2 * lx - 2;
+            let cols = 2 * ly - 2;
+            let shift = if transform == Transform::LeadLagTimeAug {
+                (1.0 / rows as f64) * (1.0 / cols as f64)
+            } else {
+                0.0
+            };
+            let mut out = vec![shift; rows * cols];
+            for a in 0..rows {
+                for b in 0..cols {
+                    if a % 2 == b % 2 {
+                        out[a * cols + b] += base[(a / 2) * n + (b / 2)];
+                    }
+                }
+            }
+            (rows, cols, out)
+        }
+    }
+}
+
+/// Adjoint of [`delta_matrix`]: given ∂F/∂Δ' (`[rows, cols]` of the
+/// transformed Δ), accumulate ∂F/∂x and ∂F/∂y (`[lx, dim]`, `[ly, dim]`).
+pub fn delta_vjp_to_paths(
+    grad_delta: &[f64],
+    x: &[f64],
+    y: &[f64],
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    transform: Transform,
+    grad_x: &mut [f64],
+    grad_y: &mut [f64],
+) {
+    let m = lx - 1;
+    let n = ly - 1;
+    // Reduce the transformed ∂F/∂Δ' to the base ∂F/∂Δ (the constant time
+    // shift has zero derivative w.r.t. the paths).
+    let mut gd = vec![0.0; m * n];
+    match transform {
+        Transform::None | Transform::TimeAug => {
+            assert_eq!(grad_delta.len(), m * n);
+            gd.copy_from_slice(grad_delta);
+        }
+        Transform::LeadLag | Transform::LeadLagTimeAug => {
+            let rows = 2 * lx - 2;
+            let cols = 2 * ly - 2;
+            assert_eq!(grad_delta.len(), rows * cols);
+            for a in 0..rows {
+                for b in 0..cols {
+                    if a % 2 == b % 2 {
+                        gd[(a / 2) * n + (b / 2)] += grad_delta[a * cols + b];
+                    }
+                }
+            }
+        }
+    }
+    // Δ[i,j] = ⟨dx_i, dy_j⟩ ⇒ ∂F/∂dx_i = Σ_j gd[i,j]·dy_j, and symmetric.
+    let dx = increments(x, lx, dim);
+    let dy = increments(y, ly, dim);
+    let mut gdx = vec![0.0; m * dim];
+    let mut gdy = vec![0.0; n * dim];
+    for i in 0..m {
+        for j in 0..n {
+            let g = gd[i * n + j];
+            if g == 0.0 {
+                continue;
+            }
+            for c in 0..dim {
+                gdx[i * dim + c] += g * dy[j * dim + c];
+                gdy[j * dim + c] += g * dx[i * dim + c];
+            }
+        }
+    }
+    // Difference adjoint: dx_i = x_{i+1} - x_i.
+    for i in 0..m {
+        for c in 0..dim {
+            grad_x[(i + 1) * dim + c] += gdx[i * dim + c];
+            grad_x[i * dim + c] -= gdx[i * dim + c];
+        }
+    }
+    for j in 0..n {
+        for c in 0..dim {
+            grad_y[(j + 1) * dim + c] += gdy[j * dim + c];
+            grad_y[j * dim + c] -= gdy[j * dim + c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn delta_matches_materialised_transform() {
+        check("fused Δ == materialised Δ", 25, |g| {
+            let lx = g.usize_in(2, 8);
+            let ly = g.usize_in(2, 8);
+            let d = g.usize_in(1, 4);
+            let x = g.path(lx, d, 0.7);
+            let y = g.path(ly, d, 0.7);
+            for tr in [
+                Transform::None,
+                Transform::TimeAug,
+                Transform::LeadLag,
+                Transform::LeadLagTimeAug,
+            ] {
+                let (r, c, fused) = delta_matrix(&x, &y, lx, ly, d, tr);
+                let xm = crate::transforms::apply(tr, &x, lx, d);
+                let ym = crate::transforms::apply(tr, &y, ly, d);
+                let (rm, cm, mat) = delta_matrix(
+                    &xm,
+                    &ym,
+                    tr.out_len(lx),
+                    tr.out_len(ly),
+                    tr.out_dim(d),
+                    Transform::None,
+                );
+                assert_eq!((r, c), (rm, cm), "tr={tr:?}");
+                let err = crate::util::linalg::max_abs_diff(&fused, &mat);
+                assert!(err < 1e-12, "tr={tr:?}: {err}");
+            }
+        });
+    }
+
+    #[test]
+    fn delta_vjp_matches_finite_difference() {
+        check("Δ vjp", 10, |g| {
+            let lx = g.usize_in(2, 5);
+            let ly = g.usize_in(2, 5);
+            let d = g.usize_in(1, 3);
+            let x = g.path(lx, d, 0.7);
+            let y = g.path(ly, d, 0.7);
+            for tr in [Transform::None, Transform::TimeAug, Transform::LeadLag] {
+                let (r, c, _) = delta_matrix(&x, &y, lx, ly, d, tr);
+                let gd = g.normal_vec(r * c);
+                let mut gx = vec![0.0; lx * d];
+                let mut gy = vec![0.0; ly * d];
+                delta_vjp_to_paths(&gd, &x, &y, lx, ly, d, tr, &mut gx, &mut gy);
+                let f = |xx: &[f64], yy: &[f64]| -> f64 {
+                    let (_, _, dm) = delta_matrix(xx, yy, lx, ly, d, tr);
+                    dm.iter().zip(gd.iter()).map(|(a, b)| a * b).sum()
+                };
+                let eps = 1e-6;
+                for i in 0..lx * d {
+                    let mut xp = x.to_vec();
+                    xp[i] += eps;
+                    let mut xm_ = x.to_vec();
+                    xm_[i] -= eps;
+                    let fd = (f(&xp, &y) - f(&xm_, &y)) / (2.0 * eps);
+                    assert!((fd - gx[i]).abs() < 1e-4, "tr={tr:?} x[{i}]: {fd} vs {}", gx[i]);
+                }
+                for j in 0..ly * d {
+                    let mut yp = y.to_vec();
+                    yp[j] += eps;
+                    let mut ym_ = y.to_vec();
+                    ym_[j] -= eps;
+                    let fd = (f(&x, &yp) - f(&x, &ym_)) / (2.0 * eps);
+                    assert!((fd - gy[j]).abs() < 1e-4, "tr={tr:?} y[{j}]: {fd} vs {}", gy[j]);
+                }
+            }
+        });
+    }
+}

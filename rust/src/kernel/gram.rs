@@ -1,0 +1,421 @@
+//! Batched signature-kernel computations: paired batches, Gram matrices,
+//! their vjps, and the signature-kernel MMD used for two-sample testing and
+//! generative-model training (the paper's headline application).
+
+use crate::kernel::backward::sig_kernel_vjp;
+use crate::kernel::{sig_kernel, KernelOptions};
+use crate::util::pool::{num_threads, parallel_for_mut};
+
+/// Paired batch: k(x_i, y_i) for i = 0..batch.
+/// `x` is `[batch, lx, dim]`, `y` is `[batch, ly, dim]`; returns `[batch]`.
+pub fn batch_kernel(
+    x: &[f64],
+    y: &[f64],
+    batch: usize,
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    opts: &KernelOptions,
+) -> Vec<f64> {
+    assert_eq!(x.len(), batch * lx * dim);
+    assert_eq!(y.len(), batch * ly * dim);
+    let mut out = vec![0.0; batch];
+    if batch == 0 {
+        return out;
+    }
+    let work = |i: usize, slot: &mut [f64]| {
+        slot[0] = sig_kernel(
+            &x[i * lx * dim..(i + 1) * lx * dim],
+            &y[i * ly * dim..(i + 1) * ly * dim],
+            lx,
+            ly,
+            dim,
+            opts,
+        );
+    };
+    if opts.parallel {
+        parallel_for_mut(&mut out, 1, work);
+    } else {
+        for i in 0..batch {
+            let mut slot = [0.0];
+            work(i, &mut slot);
+            out[i] = slot[0];
+        }
+    }
+    out
+}
+
+/// Paired-batch vjp: given ∂F/∂k_i, return (∂F/∂x, ∂F/∂y).
+pub fn batch_kernel_vjp(
+    x: &[f64],
+    y: &[f64],
+    grad_k: &[f64],
+    batch: usize,
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    opts: &KernelOptions,
+) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(grad_k.len(), batch);
+    let mut gx = vec![0.0; batch * lx * dim];
+    let gy = std::sync::Mutex::new(vec![0.0; batch * ly * dim]);
+    let sy = ly * dim;
+    parallel_for_mut(&mut gx, lx * dim, |i, gxrow| {
+        let (gxi, gyi) = sig_kernel_vjp(
+            &x[i * lx * dim..(i + 1) * lx * dim],
+            &y[i * sy..(i + 1) * sy],
+            lx,
+            ly,
+            dim,
+            opts,
+            grad_k[i],
+        );
+        gxrow.copy_from_slice(&gxi);
+        gy.lock().unwrap()[i * sy..(i + 1) * sy].copy_from_slice(&gyi);
+    });
+    (gx, gy.into_inner().unwrap())
+}
+
+/// Full Gram matrix: `[bx, by]` of k(x_i, y_j). Parallel over all pairs.
+pub fn gram(
+    x: &[f64],
+    y: &[f64],
+    bx: usize,
+    by: usize,
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    opts: &KernelOptions,
+) -> Vec<f64> {
+    assert_eq!(x.len(), bx * lx * dim);
+    assert_eq!(y.len(), by * ly * dim);
+    let mut out = vec![0.0; bx * by];
+    if bx * by == 0 {
+        return out;
+    }
+    let work = |p: usize, slot: &mut [f64]| {
+        let i = p / by;
+        let j = p % by;
+        slot[0] = sig_kernel(
+            &x[i * lx * dim..(i + 1) * lx * dim],
+            &y[j * ly * dim..(j + 1) * ly * dim],
+            lx,
+            ly,
+            dim,
+            opts,
+        );
+    };
+    if opts.parallel {
+        parallel_for_mut(&mut out, 1, work);
+    } else {
+        for p in 0..bx * by {
+            let mut slot = [0.0];
+            work(p, &mut slot);
+            out[p] = slot[0];
+        }
+    }
+    out
+}
+
+/// Gram vjp: given W = ∂F/∂Gram (`[bx, by]`), return
+/// (∂F/∂x `[bx,lx,dim]`, ∂F/∂y `[by,ly,dim]`).
+///
+/// Parallelised over x-rows with per-thread accumulation buffers for the
+/// shared ∂F/∂y (merged once at the end) — no lock on the hot path.
+pub fn gram_vjp(
+    x: &[f64],
+    y: &[f64],
+    weights: &[f64],
+    bx: usize,
+    by: usize,
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    opts: &KernelOptions,
+) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(weights.len(), bx * by);
+    let sx = lx * dim;
+    let sy = ly * dim;
+    let mut gx = vec![0.0; bx * sx];
+    let nt = num_threads().min(bx.max(1));
+    let mut gy_parts = vec![vec![0.0; by * sy]; nt];
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    // gx rows are claimed exactly once per i (disjoint writes through the
+    // base pointer, as in `parallel_for_mut`); gy is accumulated into
+    // per-thread buffers and merged below — no lock on the hot path.
+    let gx_base = gx.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        let next = &next;
+        for part in gy_parts.iter_mut() {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= bx {
+                    break;
+                }
+                // SAFETY: row i is written by exactly one worker; `gx`
+                // outlives the scope.
+                let gxrow = unsafe {
+                    std::slice::from_raw_parts_mut((gx_base as *mut f64).add(i * sx), sx)
+                };
+                for j in 0..by {
+                    let w = weights[i * by + j];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let (gxi, gyj) = sig_kernel_vjp(
+                        &x[i * sx..(i + 1) * sx],
+                        &y[j * sy..(j + 1) * sy],
+                        lx,
+                        ly,
+                        dim,
+                        opts,
+                        w,
+                    );
+                    for (o, v) in gxrow.iter_mut().zip(gxi.iter()) {
+                        *o += v;
+                    }
+                    for (o, v) in part[j * sy..(j + 1) * sy].iter_mut().zip(gyj.iter()) {
+                        *o += v;
+                    }
+                }
+            });
+        }
+    });
+    let mut gy = vec![0.0; by * sy];
+    for part in gy_parts {
+        for (o, v) in gy.iter_mut().zip(part.iter()) {
+            *o += v;
+        }
+    }
+    (gx, gy)
+}
+
+/// Squared signature-kernel MMD between two path distributions (biased
+/// V-statistic): mean(Kxx) − 2·mean(Kxy) + mean(Kyy).
+pub fn mmd2(
+    x: &[f64],
+    y: &[f64],
+    bx: usize,
+    by: usize,
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    opts: &KernelOptions,
+) -> f64 {
+    let kxx = gram(x, x, bx, bx, lx, lx, dim, opts);
+    let kxy = gram(x, y, bx, by, lx, ly, dim, opts);
+    let kyy = gram(y, y, by, by, ly, ly, dim, opts);
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    mean(&kxx) - 2.0 * mean(&kxy) + mean(&kyy)
+}
+
+/// Unbiased MMD² (U-statistic): excludes the diagonals of Kxx and Kyy.
+/// This is the estimator used for two-sample hypothesis testing.
+pub fn mmd2_unbiased(
+    x: &[f64],
+    y: &[f64],
+    bx: usize,
+    by: usize,
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    opts: &KernelOptions,
+) -> f64 {
+    assert!(bx >= 2 && by >= 2);
+    let kxx = gram(x, x, bx, bx, lx, lx, dim, opts);
+    let kxy = gram(x, y, bx, by, lx, ly, dim, opts);
+    let kyy = gram(y, y, by, by, ly, ly, dim, opts);
+    let off_mean = |v: &[f64], b: usize| {
+        let total: f64 = v.iter().sum();
+        let diag: f64 = (0..b).map(|i| v[i * b + i]).sum();
+        (total - diag) / (b * (b - 1)) as f64
+    };
+    let mean_xy = kxy.iter().sum::<f64>() / (bx * by) as f64;
+    off_mean(&kxx, bx) - 2.0 * mean_xy + off_mean(&kyy, by)
+}
+
+/// MMD² and its exact gradient with respect to the x-paths (the generator
+/// sample in training): uses Algorithm 4 end-to-end through both Gram terms.
+pub fn mmd2_with_grad(
+    x: &[f64],
+    y: &[f64],
+    bx: usize,
+    by: usize,
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    opts: &KernelOptions,
+) -> (f64, Vec<f64>) {
+    let value = mmd2(x, y, bx, by, lx, ly, dim, opts);
+    // ∂/∂x_i [ (1/bx²)ΣΣ k(x_a,x_b) ] = (2/bx²) Σ_b ∇₁k(x_i, x_b) (symmetry).
+    let wxx = vec![2.0 / (bx * bx) as f64; bx * bx];
+    let (gxx, _) = gram_vjp(x, x, &wxx, bx, bx, lx, lx, dim, opts);
+    let wxy = vec![-2.0 / (bx * by) as f64; bx * by];
+    let (gxy, _) = gram_vjp(x, y, &wxy, bx, by, lx, ly, dim, opts);
+    let grad: Vec<f64> = gxx.iter().zip(gxy.iter()).map(|(a, b)| a + b).collect();
+    (value, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(41);
+        let (b, l, d) = (6, 8, 2);
+        let x = rng.brownian_batch(b, l, d, 0.4);
+        let y = rng.brownian_batch(b, l, d, 0.4);
+        let opts = KernelOptions::default();
+        let ks = batch_kernel(&x, &y, b, l, l, d, &opts);
+        for i in 0..b {
+            let k = sig_kernel(
+                &x[i * l * d..(i + 1) * l * d],
+                &y[i * l * d..(i + 1) * l * d],
+                l,
+                l,
+                d,
+                &opts,
+            );
+            assert!((ks[i] - k).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_for_same_batch() {
+        let mut rng = Rng::new(42);
+        let (b, l, d) = (5, 6, 2);
+        let x = rng.brownian_batch(b, l, d, 0.4);
+        let g = gram(&x, &x, b, b, l, l, d, &KernelOptions::default());
+        for i in 0..b {
+            for j in 0..b {
+                assert!((g[i * b + j] - g[j * b + i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_psd_via_quadratic_form() {
+        // vᵀ K v ≥ 0 for the self-Gram (PSD kernel matrix).
+        let mut rng = Rng::new(43);
+        let (b, l, d) = (6, 6, 2);
+        let x = rng.brownian_batch(b, l, d, 0.3);
+        let g = gram(&x, &x, b, b, l, l, d, &KernelOptions::default().dyadic(2, 2));
+        for trial in 0..5 {
+            let mut v = vec![0.0; b];
+            let mut r2 = Rng::new(100 + trial);
+            r2.fill_normal(&mut v);
+            let mut q = 0.0;
+            for i in 0..b {
+                for j in 0..b {
+                    q += v[i] * g[i * b + j] * v[j];
+                }
+            }
+            assert!(q > -1e-8, "quadratic form {q}");
+        }
+    }
+
+    #[test]
+    fn serial_parallel_gram_agree() {
+        let mut rng = Rng::new(44);
+        let (b, l, d) = (4, 7, 2);
+        let x = rng.brownian_batch(b, l, d, 0.4);
+        let y = rng.brownian_batch(b, l, d, 0.4);
+        let par = gram(&x, &y, b, b, l, l, d, &KernelOptions::default());
+        let ser = gram(&x, &y, b, b, l, l, d, &KernelOptions::default().serial());
+        assert!(max_abs_diff(&par, &ser) < 1e-15);
+    }
+
+    #[test]
+    fn gram_vjp_matches_pairwise_sum() {
+        let mut rng = Rng::new(45);
+        let (bx, by, l, d) = (3, 4, 5, 2);
+        let x = rng.brownian_batch(bx, l, d, 0.4);
+        let y = rng.brownian_batch(by, l, d, 0.4);
+        let mut w = vec![0.0; bx * by];
+        rng.fill_normal(&mut w);
+        let opts = KernelOptions::default();
+        let (gx, gy) = gram_vjp(&x, &y, &w, bx, by, l, l, d, &opts);
+        // Reference: accumulate pairwise vjps serially.
+        let mut gx_ref = vec![0.0; bx * l * d];
+        let mut gy_ref = vec![0.0; by * l * d];
+        for i in 0..bx {
+            for j in 0..by {
+                let (a, b) = sig_kernel_vjp(
+                    &x[i * l * d..(i + 1) * l * d],
+                    &y[j * l * d..(j + 1) * l * d],
+                    l,
+                    l,
+                    d,
+                    &opts,
+                    w[i * by + j],
+                );
+                for (o, v) in gx_ref[i * l * d..(i + 1) * l * d].iter_mut().zip(a.iter()) {
+                    *o += v;
+                }
+                for (o, v) in gy_ref[j * l * d..(j + 1) * l * d].iter_mut().zip(b.iter()) {
+                    *o += v;
+                }
+            }
+        }
+        assert!(max_abs_diff(&gx, &gx_ref) < 1e-12);
+        assert!(max_abs_diff(&gy, &gy_ref) < 1e-12);
+    }
+
+    #[test]
+    fn mmd_of_identical_distributions_is_small() {
+        let mut rng = Rng::new(46);
+        let (b, l, d) = (8, 6, 2);
+        let x = rng.brownian_batch(b, l, d, 0.4);
+        // identical samples: biased MMD² of x with itself is exactly 0
+        let m = mmd2(&x, &x, b, b, l, l, d, &KernelOptions::default());
+        assert!(m.abs() < 1e-10, "mmd²(x,x) = {m}");
+    }
+
+    #[test]
+    fn mmd_separates_different_scales() {
+        let mut rng = Rng::new(47);
+        let (b, l, d) = (10, 8, 2);
+        let x = rng.brownian_batch(b, l, d, 0.3);
+        let y = rng.brownian_batch(b, l, d, 1.0);
+        let same = mmd2_unbiased(
+            &x,
+            &rng.brownian_batch(b, l, d, 0.3),
+            b,
+            b,
+            l,
+            l,
+            d,
+            &KernelOptions::default(),
+        );
+        let diff = mmd2_unbiased(&x, &y, b, b, l, l, d, &KernelOptions::default());
+        assert!(diff > same, "diff {diff} vs same {same}");
+    }
+
+    #[test]
+    fn mmd_grad_matches_finite_differences() {
+        let mut rng = Rng::new(48);
+        let (bx, by, l, d) = (3, 3, 4, 2);
+        let x = rng.brownian_batch(bx, l, d, 0.4);
+        let y = rng.brownian_batch(by, l, d, 0.5);
+        let opts = KernelOptions::default();
+        let (_, grad) = mmd2_with_grad(&x, &y, bx, by, l, l, d, &opts);
+        let eps = 1e-5;
+        for idx in [0usize, 3, 7, 11, 23 % (bx * l * d)] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fp = mmd2(&xp, &y, bx, by, l, l, d, &opts);
+            let fm = mmd2(&xm, &y, bx, by, l, l, d, &opts);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - grad[idx]).abs() < 1e-5 * (1.0 + fd.abs()),
+                "idx={idx}: fd={fd} grad={}",
+                grad[idx]
+            );
+        }
+    }
+}

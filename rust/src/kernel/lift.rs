@@ -1,0 +1,144 @@
+//! Static-kernel lifts for signature kernels (the sigkernel package's
+//! "static kernel" option): instead of the Euclidean inner product
+//! ⟨dx_i, dy_j⟩, drive the Goursat PDE with the second-order finite
+//! difference of a static kernel κ on path *values*:
+//!
+//!   Δ^κ[i,j] = κ(x_{i+1}, y_{j+1}) − κ(x_{i+1}, y_j)
+//!            − κ(x_i,     y_{j+1}) + κ(x_i,     y_j),
+//!
+//! which equals ⟨dx_i, dy_j⟩ exactly for the linear kernel and lifts the
+//! paths into an RBF feature space otherwise — the standard trick for
+//! high-dimensional state spaces.
+
+use crate::kernel::solver::solve_pde;
+
+/// Static kernel choices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StaticKernel {
+    /// κ(u, v) = ⟨u, v⟩ — recovers the plain signature kernel.
+    Linear,
+    /// κ(u, v) = exp(−‖u−v‖² / (2σ²)).
+    Rbf { sigma: f64 },
+}
+
+impl StaticKernel {
+    #[inline]
+    pub fn eval(&self, u: &[f64], v: &[f64]) -> f64 {
+        match self {
+            StaticKernel::Linear => crate::util::linalg::dot(u, v),
+            StaticKernel::Rbf { sigma } => {
+                let mut d2 = 0.0;
+                for (a, b) in u.iter().zip(v.iter()) {
+                    d2 += (a - b) * (a - b);
+                }
+                (-d2 / (2.0 * sigma * sigma)).exp()
+            }
+        }
+    }
+}
+
+/// Δ^κ matrix from the static-kernel second difference: `[lx-1, ly-1]`.
+pub fn lifted_delta(
+    x: &[f64],
+    y: &[f64],
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    kappa: StaticKernel,
+) -> Vec<f64> {
+    assert_eq!(x.len(), lx * dim);
+    assert_eq!(y.len(), ly * dim);
+    // Gram of point values, then second difference. One pass, O(lx·ly·d).
+    let mut g = vec![0.0; lx * ly];
+    for i in 0..lx {
+        for j in 0..ly {
+            g[i * ly + j] = kappa.eval(&x[i * dim..(i + 1) * dim], &y[j * dim..(j + 1) * dim]);
+        }
+    }
+    let m = lx - 1;
+    let n = ly - 1;
+    let mut delta = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            delta[i * n + j] = g[(i + 1) * ly + (j + 1)] - g[(i + 1) * ly + j]
+                - g[i * ly + (j + 1)]
+                + g[i * ly + j];
+        }
+    }
+    delta
+}
+
+/// Signature kernel with a static-kernel lift.
+pub fn sig_kernel_lifted(
+    x: &[f64],
+    y: &[f64],
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    kappa: StaticKernel,
+    lam1: u32,
+    lam2: u32,
+) -> f64 {
+    let delta = lifted_delta(x, y, lx, ly, dim, kappa);
+    solve_pde(&delta, lx - 1, ly - 1, lam1, lam2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{sig_kernel, KernelOptions};
+    use crate::util::prop::check;
+
+    #[test]
+    fn linear_lift_recovers_plain_kernel() {
+        check("linear lift == plain kernel", 15, |g| {
+            let lx = g.usize_in(2, 10);
+            let ly = g.usize_in(2, 10);
+            let d = g.usize_in(1, 3);
+            let x = g.path(lx, d, 0.4);
+            let y = g.path(ly, d, 0.4);
+            let k1 = sig_kernel_lifted(&x, &y, lx, ly, d, StaticKernel::Linear, 1, 1);
+            let k2 = sig_kernel(&x, &y, lx, ly, d, &KernelOptions::default().dyadic(1, 1));
+            assert!((k1 - k2).abs() < 1e-10 * k2.abs().max(1.0));
+        });
+    }
+
+    #[test]
+    fn rbf_lift_is_symmetric_and_bounded_by_selfkernels() {
+        check("rbf lift symmetry", 10, |g| {
+            let l = g.usize_in(2, 8);
+            let d = g.usize_in(1, 3);
+            let x = g.path(l, d, 0.5);
+            let y = g.path(l, d, 0.5);
+            let kap = StaticKernel::Rbf { sigma: 1.0 };
+            let kxy = sig_kernel_lifted(&x, &y, l, l, d, kap, 0, 0);
+            let kyx = sig_kernel_lifted(&y, &x, l, l, d, kap, 0, 0);
+            assert!((kxy - kyx).abs() < 1e-10);
+            // Cauchy–Schwarz in the lifted RKHS.
+            let kxx = sig_kernel_lifted(&x, &x, l, l, d, kap, 0, 0);
+            let kyy = sig_kernel_lifted(&y, &y, l, l, d, kap, 0, 0);
+            assert!(kxy * kxy <= kxx * kyy * (1.0 + 1e-6), "CS violated");
+        });
+    }
+
+    #[test]
+    fn rbf_large_sigma_approaches_degenerate_kernel() {
+        // σ → ∞: κ → 1 everywhere ⇒ Δ^κ → 0 ⇒ k → 1.
+        let mut rng = crate::util::rng::Rng::new(81);
+        let x = rng.brownian_path(6, 2, 0.5);
+        let y = rng.brownian_path(6, 2, 0.5);
+        let k = sig_kernel_lifted(&x, &y, 6, 6, 2, StaticKernel::Rbf { sigma: 1e6 }, 0, 0);
+        assert!((k - 1.0).abs() < 1e-6, "k = {k}");
+    }
+
+    #[test]
+    fn rbf_kernel_scale_invariance_breaks_linearity() {
+        // The RBF lift must genuinely differ from the linear kernel.
+        let mut rng = crate::util::rng::Rng::new(82);
+        let x = rng.brownian_path(6, 2, 0.8);
+        let y = rng.brownian_path(6, 2, 0.8);
+        let kl = sig_kernel_lifted(&x, &y, 6, 6, 2, StaticKernel::Linear, 0, 0);
+        let kr = sig_kernel_lifted(&x, &y, 6, 6, 2, StaticKernel::Rbf { sigma: 0.5 }, 0, 0);
+        assert!((kl - kr).abs() > 1e-6);
+    }
+}

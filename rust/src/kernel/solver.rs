@@ -1,0 +1,143 @@
+//! Algorithm 3 — the CPU Goursat-PDE sweep for signature kernels.
+//!
+//! Solves k(s,t) over the grid refined dyadically to order (λ1, λ2), using
+//! the second-order discretisation of eq. (1):
+//!
+//!   k[s+1,t+1] = (k[s+1,t] + k[s,t+1])·A(p) − k[s,t]·B(p),
+//!   A(p) = 1 + p/2 + p²/12,  B(p) = 1 − p²/12,
+//!   p = Δ[s ≫ λ1, t ≫ λ2] / 2^{λ1+λ2}.
+//!
+//! Design choices (paper §3.2): (1) λ1 and λ2 are independent; (2) Δ is
+//! precomputed by one GEMM (see [`super::delta`]); (3) dyadic refinement is
+//! applied *on-the-fly* via the index shift `s ≫ λ1` — the refined path and
+//! refined Δ are never materialised (other packages precompute them, paying
+//! 4^λ memory).
+
+/// Solve the PDE and return the terminal value k(1,1).
+///
+/// `delta` is the `[m, n]` increment inner-product matrix (m = lx−1,
+/// n = ly−1); the refined grid has `(m·2^λ1 + 1) × (n·2^λ2 + 1)` nodes but
+/// only two rows are ever live.
+pub fn solve_pde(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> f64 {
+    assert_eq!(delta.len(), m * n);
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+    let mut prev = vec![1.0; cols + 1];
+    let mut cur = vec![1.0; cols + 1];
+    // NOTE (§Perf): a "two-pass" restructure of this loop (vectorisable
+    // prev-row combination + minimal serial FMA chain) was tried and
+    // *reverted* — on this testbed it is ~20% slower than the fused loop
+    // (extra coefficient/cterm memory traffic outweighs the shorter
+    // dependency chain). See EXPERIMENTS.md §Perf and the
+    // `pde_sweep/*` rows of the ablations bench.
+    for s in 0..rows {
+        let drow = &delta[(s >> lam1) * n..(s >> lam1) * n + n];
+        cur[0] = 1.0;
+        // Inner loop: contiguous over t, three streams (cur, prev) — the
+        // memory-bound hot loop of the paper's CPU algorithm.
+        let mut k_left = 1.0; // cur[t]
+        for t in 0..cols {
+            let p = drow[t >> lam2] * scale;
+            let p2 = p * p * (1.0 / 12.0);
+            let a = 1.0 + 0.5 * p + p2;
+            let b = 1.0 - p2;
+            let v = (k_left + prev[t + 1]) * a - prev[t] * b;
+            cur[t + 1] = v;
+            k_left = v;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[cols]
+}
+
+/// Solve the PDE keeping the whole grid — needed by the exact backward pass
+/// (Algorithm 4). Returns the `[(rows+1) × (cols+1)]` grid row-major, where
+/// rows = m·2^λ1, cols = n·2^λ2.
+pub fn solve_pde_grid(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> Vec<f64> {
+    assert_eq!(delta.len(), m * n);
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+    let w = cols + 1;
+    let mut k = vec![1.0; (rows + 1) * w];
+    for s in 0..rows {
+        let drow = &delta[(s >> lam1) * n..(s >> lam1) * n + n];
+        let (top, bot) = k.split_at_mut((s + 1) * w);
+        let prev = &top[s * w..(s + 1) * w];
+        let cur = &mut bot[..w];
+        let mut k_left = 1.0;
+        for t in 0..cols {
+            let p = drow[t >> lam2] * scale;
+            let p2 = p * p * (1.0 / 12.0);
+            let a = 1.0 + 0.5 * p + p2;
+            let b = 1.0 - p2;
+            let v = (k_left + prev[t + 1]) * a - prev[t] * b;
+            cur[t + 1] = v;
+            k_left = v;
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn zero_delta_gives_one() {
+        // ⟨dx, dy⟩ ≡ 0 ⇒ k ≡ 1 (orthogonal paths).
+        let d = vec![0.0; 12];
+        assert_eq!(solve_pde(&d, 3, 4, 0, 0), 1.0);
+        assert_eq!(solve_pde(&d, 3, 4, 2, 1), 1.0);
+    }
+
+    #[test]
+    fn grid_terminal_matches_scalar_solver() {
+        check("grid[-1,-1] == solve_pde", 25, |g| {
+            let m = g.usize_in(1, 10);
+            let n = g.usize_in(1, 10);
+            let lam1 = g.usize_in(0, 2) as u32;
+            let lam2 = g.usize_in(0, 2) as u32;
+            let delta: Vec<f64> = g.normal_vec(m * n).iter().map(|v| v * 0.3).collect();
+            let k = solve_pde(&delta, m, n, lam1, lam2);
+            let grid = solve_pde_grid(&delta, m, n, lam1, lam2);
+            let last = *grid.last().unwrap();
+            assert!((k - last).abs() < 1e-12, "{k} vs {last}");
+        });
+    }
+
+    #[test]
+    fn single_cell_quadrature() {
+        // One cell, Δ = p: k = A(p)·2 − B(p) with k-neighbours 1 ⇒
+        // k = 2(1 + p/2 + p²/12) − (1 − p²/12) = 1 + p + p²/4.
+        let p = 0.37;
+        let k = solve_pde(&[p], 1, 1, 0, 0);
+        let want = 2.0 * (1.0 + 0.5 * p + p * p / 12.0) - (1.0 - p * p / 12.0);
+        assert!((k - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn monotone_in_delta_for_positive_delta() {
+        // For Δ ≥ 0 the kernel increases with Δ.
+        let k1 = solve_pde(&[0.1, 0.1, 0.1, 0.1], 2, 2, 0, 0);
+        let k2 = solve_pde(&[0.2, 0.2, 0.2, 0.2], 2, 2, 0, 0);
+        assert!(k2 > k1);
+    }
+
+    #[test]
+    fn grid_boundaries_are_one() {
+        let delta = [0.3, -0.2, 0.15, 0.4];
+        let grid = solve_pde_grid(&delta, 2, 2, 1, 0);
+        let rows = 2 << 1;
+        let cols = 2;
+        let w = cols + 1;
+        for s in 0..=rows {
+            assert_eq!(grid[s * w], 1.0);
+        }
+        for t in 0..=cols {
+            assert_eq!(grid[t], 1.0);
+        }
+    }
+}

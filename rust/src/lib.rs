@@ -1,0 +1,21 @@
+//! # pySigLib (Rust reproduction)
+//!
+//! High-performance signature-based computations: truncated path signatures
+//! and signature kernels, with exact backpropagation, batched parallel
+//! execution, path transformations, a PJRT runtime for AOT-compiled JAX/Pallas
+//! artifacts, and a serving coordinator.
+//!
+//! Reproduces: Shmelev & Salvi, "pySigLib — Fast Signature-Based Computations
+//! on CPU and GPU" (2025).
+
+pub mod tensor;
+pub mod util;
+pub mod sig;
+pub mod kernel;
+pub mod transforms;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod config;
+pub mod bench;
+pub mod cli;

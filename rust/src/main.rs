@@ -1,0 +1,7 @@
+//! pysiglib CLI: compute signatures / kernels, run the serving coordinator,
+//! and drive workloads. See `pysiglib help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(pysiglib::cli::cli_main(&args));
+}

@@ -1,0 +1,275 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! This is the stand-in for the paper's CUDA backend: the L2/L1 JAX+Pallas
+//! computation is compiled once at build time; at run time the coordinator
+//! dispatches batches to compiled executables with no Python anywhere.
+//!
+//! Wiring (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// One artifact from `artifacts/manifest.txt`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    /// Shapes of the (f32) inputs, e.g. [[8,16,3],[8,16,3]].
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactInfo {
+    /// Parse one `name|8x16x3,8x16x3|f32` manifest line.
+    pub fn parse(line: &str) -> Result<ArtifactInfo> {
+        let mut parts = line.trim().split('|');
+        let name = parts.next().ok_or_else(|| anyhow!("empty manifest line"))?;
+        let shapes = parts
+            .next()
+            .ok_or_else(|| anyhow!("manifest line missing shapes: {line}"))?;
+        let input_shapes = shapes
+            .split(',')
+            .map(|s| {
+                s.split('x')
+                    .map(|v| v.parse::<usize>().context("bad shape dim"))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactInfo {
+            name: name.to_string(),
+            input_shapes,
+        })
+    }
+
+    pub fn input_len(&self, i: usize) -> usize {
+        self.input_shapes[i].iter().product()
+    }
+}
+
+/// PJRT-backed executor with a compile-once cache per artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactInfo>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`) on the CPU PJRT
+    /// client.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts` first"))?;
+        let manifest = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(ArtifactInfo::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact metadata.
+    pub fn manifest(&self) -> &[ArtifactInfo] {
+        &self.manifest
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.manifest.iter().find(|a| a.name == name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an artifact, cached.
+    pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 inputs; returns every tuple output
+    /// flattened. Input lengths are validated against the manifest.
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let info = self
+            .info(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != info.input_shapes.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                info.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            if data.len() != info.input_len(i) {
+                return Err(anyhow!(
+                    "{name}: input {i} has {} elements, expected {} ({:?})",
+                    data.len(),
+                    info.input_len(i),
+                    info.input_shapes[i]
+                ));
+            }
+            let dims: Vec<i64> = info.input_shapes[i].iter().map(|&v| v as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack every element.
+        let elements = literal
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result: {e:?}"))?;
+        elements
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// The xla crate's client/executable types are `!Send` (Rc + raw PJRT
+/// pointers), so the multi-threaded coordinator cannot hold a [`Runtime`]
+/// directly. `RuntimeHandle` confines the whole PJRT stack to one dedicated
+/// worker thread and exposes a `Send + Sync` façade: calls are serialised
+/// through a channel (PJRT CPU execution is internally parallel anyway, so
+/// one dispatcher thread is not a throughput limit at our batch sizes).
+pub struct RuntimeHandle {
+    manifest: Vec<ArtifactInfo>,
+    platform: String,
+    tx: std::sync::Mutex<std::sync::mpsc::Sender<Job>>,
+}
+
+struct Job {
+    name: String,
+    inputs: Vec<Vec<f32>>,
+    reply: std::sync::mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+impl RuntimeHandle {
+    /// Start the PJRT worker thread over an artifact directory.
+    pub fn spawn(dir: impl AsRef<Path>) -> Result<Arc<RuntimeHandle>> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let (init_tx, init_rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let runtime = match Runtime::new(&dir) {
+                Ok(rt) => {
+                    let _ = init_tx.send(Ok((rt.manifest().to_vec(), rt.platform())));
+                    rt
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                let result = runtime.execute_f32(&job.name, &job.inputs);
+                let _ = job.reply.send(result);
+            }
+        });
+        let (manifest, platform) = init_rx
+            .recv()
+            .map_err(|_| anyhow!("PJRT worker died during init"))??;
+        Ok(Arc::new(RuntimeHandle {
+            manifest,
+            platform,
+            tx: std::sync::Mutex::new(tx),
+        }))
+    }
+
+    pub fn manifest(&self) -> &[ArtifactInfo] {
+        &self.manifest
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.manifest.iter().find(|a| a.name == name)
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Execute an artifact on the worker thread (blocking).
+    pub fn execute_f32(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("PJRT worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("PJRT worker died"))?
+    }
+
+    /// f64 convenience wrapper (native code is f64; artifacts are f32).
+    pub fn execute_f64(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let f32_inputs: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|x| x.iter().map(|&v| v as f32).collect())
+            .collect();
+        Ok(self
+            .execute_f32(name, f32_inputs)?
+            .into_iter()
+            .map(|o| o.into_iter().map(|v| v as f64).collect())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_line_parses() {
+        let a = ArtifactInfo::parse("sigkernel_b8_l16_d3|8x16x3,8x16x3|f32").unwrap();
+        assert_eq!(a.name, "sigkernel_b8_l16_d3");
+        assert_eq!(a.input_shapes, vec![vec![8, 16, 3], vec![8, 16, 3]]);
+        assert_eq!(a.input_len(0), 384);
+    }
+
+    #[test]
+    fn bad_manifest_line_errors() {
+        assert!(ArtifactInfo::parse("justaname").is_err());
+        assert!(ArtifactInfo::parse("n|axb|f32").is_err());
+    }
+}

@@ -1,0 +1,302 @@
+//! Backpropagation through truncated signatures (paper §2.4).
+//!
+//! The forward pass is a product of segment exponentials,
+//! S_ℓ = S_{ℓ-1} ⊗ exp(z_ℓ). The backward pass walks the path in reverse,
+//! *deconstructing* the signature with the time-reversed path —
+//! S_{ℓ-1} = S_ℓ ⊗ exp(−z_ℓ), itself one Horner step (the paper's
+//! modification of Reizenstein's algorithm) — so the intermediate signatures
+//! never need to be stored. At each step the chain rule through
+//! S_ℓ = S_{ℓ-1} ⊗ E(z_ℓ) yields three level-wise contractions:
+//!
+//! * ∂F/∂E_j   = Σ_i  S_{ℓ-1,i} ⌟ G_{i+j}      (left contraction)
+//! * ∂F/∂S_i   = Σ_j  G_{i+j} ⌞ E_j             (right contraction)
+//! * ∂F/∂z     from ∂F/∂E_j via d(z^{⊗j}/j!)/dz
+//!
+//! all realised as contiguous gemv-like loops over the flat layout.
+
+use crate::sig::horner::horner_step;
+use crate::tensor::{exp_increment, LevelLayout};
+use crate::transforms::{increments_vjp, IncrementStream, Transform};
+
+/// Vector–Jacobian product of the truncated signature.
+///
+/// Given `grad_sig` = ∂F/∂S(x) (flat, length `sig_length(out_dim, depth)`),
+/// returns ∂F/∂x as a `[len, dim]` row-major vector. The signature is
+/// recomputed internally (one forward sweep) unless provided via
+/// [`signature_vjp_with_sig`].
+pub fn signature_vjp(
+    path: &[f64],
+    len: usize,
+    dim: usize,
+    depth: usize,
+    transform: Transform,
+    grad_sig: &[f64],
+) -> Vec<f64> {
+    let s = crate::sig::signature(path, len, dim, depth, transform, crate::sig::SigMethod::Horner);
+    signature_vjp_with_sig(path, len, dim, depth, transform, &s, grad_sig)
+}
+
+/// [`signature_vjp`] given the precomputed forward signature `sig` (must be
+/// the signature of the *transformed* path at the same depth).
+pub fn signature_vjp_with_sig(
+    path: &[f64],
+    len: usize,
+    dim: usize,
+    depth: usize,
+    transform: Transform,
+    sig: &[f64],
+    grad_sig: &[f64],
+) -> Vec<f64> {
+    assert!(depth >= 1);
+    let od = transform.out_dim(dim);
+    let layout = LevelLayout::new(od, depth);
+    assert_eq!(sig.len(), layout.total());
+    assert_eq!(grad_sig.len(), layout.total());
+    let mut grad_x = vec![0.0; len * dim];
+    if len < 2 {
+        return grad_x;
+    }
+
+    // Materialise the (transformed) increments once; the backward sweep
+    // needs them in reverse order.
+    let mut stream = IncrementStream::new(path, len, dim, transform);
+    let steps = stream.num_steps();
+    let mut zs = vec![0.0; steps * od];
+    for s_idx in 0..steps {
+        let ok = stream.next_into(&mut zs[s_idx * od..(s_idx + 1) * od]);
+        debug_assert!(ok);
+    }
+
+    let total = layout.total();
+    let mut s_cur = sig.to_vec(); // S_ℓ, deconstructed as we walk back
+    let mut g = grad_sig.to_vec(); // ∂F/∂S_ℓ
+    let mut e = vec![0.0; total];
+    let mut grad_e = vec![0.0; total];
+    let mut new_g = vec![0.0; total];
+    let mut negz = vec![0.0; od];
+    let bcap = layout.level_size(depth.saturating_sub(1)).max(1);
+    let mut b = vec![0.0; bcap];
+    let mut grad_z = vec![0.0; steps * od];
+    // factorials 1/j!
+    let mut inv_fact = vec![1.0; depth + 1];
+    for j in 1..=depth {
+        inv_fact[j] = inv_fact[j - 1] / j as f64;
+    }
+    // scratch for the z-contractions
+    let mut contract_a = vec![0.0; layout.level_size(depth)];
+    let mut contract_b = vec![0.0; layout.level_size(depth)];
+
+    for step in (0..steps).rev() {
+        let z = &zs[step * od..(step + 1) * od];
+        // 1. Deconstruct: S_{ℓ-1} = S_ℓ ⊗ exp(−z) — one Horner step.
+        for j in 0..od {
+            negz[j] = -z[j];
+        }
+        horner_step(&layout, &mut s_cur, &negz, &mut b);
+        // 2. E = exp(z).
+        exp_increment(&layout, z, &mut e);
+
+        // 3. grad_E_j = Σ_{i} S_i ⌟ G_{i+j}:
+        //    grad_E_j[v] += S_i[u] * G_{i+j}[u*d^j + v].
+        grad_e.fill(0.0);
+        for j in 1..=depth {
+            let (js, je) = layout.level_range(j);
+            let lj = je - js;
+            let ge = &mut grad_e[js..je];
+            for i in 0..=depth - j {
+                let (is_, ie) = layout.level_range(i);
+                let (ns, _ne) = layout.level_range(i + j);
+                let sv = &s_cur[is_..ie];
+                for (u, &su) in sv.iter().enumerate() {
+                    if su == 0.0 {
+                        continue;
+                    }
+                    let gr = &g[ns + u * lj..ns + (u + 1) * lj];
+                    for (o, &gv) in ge.iter_mut().zip(gr.iter()) {
+                        *o += su * gv;
+                    }
+                }
+            }
+        }
+
+        // 4. New adjoint: grad_S_i[u] = Σ_j ⟨G_{i+j}[u·d^j ..], E_j⟩.
+        new_g.fill(0.0);
+        for i in 0..=depth {
+            let (is_, ie) = layout.level_range(i);
+            let li = ie - is_;
+            let ng = &mut new_g[is_..ie];
+            for j in 0..=depth - i {
+                let (js, je) = layout.level_range(j);
+                let lj = je - js;
+                let (ns, _ne) = layout.level_range(i + j);
+                let ev = &e[js..je];
+                for u in 0..li {
+                    let gr = &g[ns + u * lj..ns + (u + 1) * lj];
+                    let mut acc = 0.0;
+                    for (&gv, &evv) in gr.iter().zip(ev.iter()) {
+                        acc += gv * evv;
+                    }
+                    ng[u] += acc;
+                }
+            }
+        }
+
+        // 5. grad_z from grad_E: E_j = z^{⊗j}/j!, so
+        //    ∂F/∂z_a = Σ_j (1/j!) Σ_{m=1..j} ⟨grad_E_j, z^{m-1} ⊗ e_a ⊗ z^{j-m}⟩.
+        let gz = &mut grad_z[step * od..(step + 1) * od];
+        for j in 1..=depth {
+            let (js, je) = layout.level_range(j);
+            let cj = inv_fact[j];
+            // Walk m = 1..j keeping "left contraction so far" in contract_a:
+            // after m-1 left contractions the live block has d^{j-m+1} entries.
+            let mut cur_len = je - js;
+            contract_a[..cur_len].copy_from_slice(&grad_e[js..je]);
+            for m in 1..=j {
+                // Right-contract (j - m) times from contract_a into a d-vector.
+                {
+                    let src = &contract_a[..cur_len];
+                    let mut tmp_len = cur_len;
+                    contract_b[..tmp_len].copy_from_slice(src);
+                    for _ in 0..j - m {
+                        let nlen = tmp_len / od;
+                        for w in 0..nlen {
+                            let row = &contract_b[w * od..(w + 1) * od];
+                            let mut acc = 0.0;
+                            for (&t, &zz) in row.iter().zip(z.iter()) {
+                                acc += t * zz;
+                            }
+                            contract_b[w] = acc;
+                        }
+                        tmp_len = nlen;
+                    }
+                    debug_assert_eq!(tmp_len, od);
+                    for a_ in 0..od {
+                        gz[a_] += cj * contract_b[a_];
+                    }
+                }
+                // Left-contract once more for the next m (if any).
+                if m < j {
+                    let nlen = cur_len / od;
+                    for w in 0..nlen {
+                        let mut acc = 0.0;
+                        for (u, &zz) in z.iter().enumerate() {
+                            acc += zz * contract_a[u * nlen + w];
+                        }
+                        contract_b[w] = acc;
+                    }
+                    contract_a[..nlen].copy_from_slice(&contract_b[..nlen]);
+                    cur_len = nlen;
+                }
+            }
+        }
+
+        std::mem::swap(&mut g, &mut new_g);
+    }
+
+    // 6. Scatter increment gradients back to path points through the
+    //    transform adjoint.
+    increments_vjp(transform, &grad_z, len, dim, &mut grad_x);
+    grad_x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sig::sig;
+    use crate::util::prop::check;
+
+    /// Central-difference check of the full vjp for all transforms.
+    #[test]
+    fn vjp_matches_finite_differences() {
+        check("signature vjp vs finite differences", 12, |g| {
+            let len = g.usize_in(2, 7);
+            let dim = g.usize_in(1, 3);
+            let depth = g.usize_in(1, 4);
+            let path = g.path(len, dim, 0.5);
+            for tr in [Transform::None, Transform::TimeAug, Transform::LeadLag] {
+                let od = tr.out_dim(dim);
+                let slen = crate::sig::sig_length(od, depth);
+                let gs = g.normal_vec(slen);
+                let gx = signature_vjp(&path, len, dim, depth, tr, &gs);
+                let f = |p: &[f64]| -> f64 {
+                    let s = crate::sig::signature(
+                        p,
+                        len,
+                        dim,
+                        depth,
+                        tr,
+                        crate::sig::SigMethod::Horner,
+                    );
+                    s.iter().zip(gs.iter()).map(|(a, b)| a * b).sum()
+                };
+                let eps = 1e-5;
+                for i in 0..len * dim {
+                    let mut pp = path.to_vec();
+                    pp[i] += eps;
+                    let mut pm = path.to_vec();
+                    pm[i] -= eps;
+                    let fd = (f(&pp) - f(&pm)) / (2.0 * eps);
+                    let tol = 1e-4 * (1.0 + fd.abs());
+                    assert!(
+                        (fd - gx[i]).abs() < tol,
+                        "tr={tr:?} len={len} dim={dim} depth={depth} i={i}: fd={fd} vjp={}",
+                        gx[i]
+                    );
+                }
+            }
+        });
+    }
+
+    /// Gradient of level-1 coordinates is exactly endpoint-minus-start.
+    #[test]
+    fn level_one_gradient_is_telescoping() {
+        let len = 6;
+        let dim = 2;
+        let depth = 3;
+        let mut rng = crate::util::rng::Rng::new(17);
+        let path = rng.brownian_path(len, dim, 1.0);
+        // F = S^{(1)}_0 (first level-1 coordinate) = x_{L-1,0} - x_{0,0}.
+        let slen = crate::sig::sig_length(dim, depth);
+        let mut gs = vec![0.0; slen];
+        gs[1] = 1.0;
+        let gx = signature_vjp(&path, len, dim, depth, Transform::None, &gs);
+        for i in 0..len {
+            for j in 0..dim {
+                let want = if j != 0 {
+                    0.0
+                } else if i == 0 {
+                    -1.0
+                } else if i == len - 1 {
+                    1.0
+                } else {
+                    0.0
+                };
+                assert!(
+                    (gx[i * dim + j] - want).abs() < 1e-10,
+                    "i={i} j={j}: {}",
+                    gx[i * dim + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_cotangent_gives_zero_gradient() {
+        let path = [0.0, 0.0, 1.0, 2.0, 0.5, -1.0];
+        let gs = vec![0.0; crate::sig::sig_length(2, 3)];
+        let gx = signature_vjp(&path, 3, 2, 3, Transform::None, &gs);
+        assert!(gx.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn with_sig_variant_matches() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let path = rng.brownian_path(8, 2, 0.7);
+        let s = sig(&path, 8, 2, 4);
+        let mut gs = vec![0.0; s.len()];
+        rng.fill_normal(&mut gs);
+        let a = signature_vjp(&path, 8, 2, 4, Transform::None, &gs);
+        let b = signature_vjp_with_sig(&path, 8, 2, 4, Transform::None, &s, &gs);
+        assert!(crate::util::linalg::max_abs_diff(&a, &b) < 1e-12);
+    }
+}

@@ -1,0 +1,234 @@
+//! Batched signature APIs: one output row per path, optionally parallel over
+//! the batch (the paper's Table 1 "serial" vs "parallel" columns).
+
+use crate::sig::{SigMethod, sig_length, signature, signature_vjp};
+use crate::transforms::Transform;
+use crate::util::pool::{parallel_for_mut, parallel_for};
+
+/// Options for batched signature computation.
+#[derive(Clone, Copy, Debug)]
+pub struct SigOptions {
+    pub depth: usize,
+    pub transform: Transform,
+    pub method: SigMethod,
+    /// Parallelise over the batch dimension.
+    pub parallel: bool,
+}
+
+impl SigOptions {
+    pub fn new(depth: usize) -> Self {
+        SigOptions {
+            depth,
+            transform: Transform::None,
+            method: SigMethod::Horner,
+            parallel: true,
+        }
+    }
+    pub fn transform(mut self, t: Transform) -> Self {
+        self.transform = t;
+        self
+    }
+    pub fn method(mut self, m: SigMethod) -> Self {
+        self.method = m;
+        self
+    }
+    pub fn serial(mut self) -> Self {
+        self.parallel = false;
+        self
+    }
+}
+
+/// Signatures of a batch of paths.
+///
+/// * `paths` — row-major `[batch, len, dim]`.
+/// * returns `[batch, sig_length(out_dim, depth)]`.
+pub fn batch_signature(
+    paths: &[f64],
+    batch: usize,
+    len: usize,
+    dim: usize,
+    opts: &SigOptions,
+) -> Vec<f64> {
+    assert_eq!(paths.len(), batch * len * dim);
+    let od = opts.transform.out_dim(dim);
+    let slen = sig_length(od, opts.depth);
+    let mut out = vec![0.0; batch * slen];
+    if batch == 0 {
+        return out;
+    }
+    let work = |i: usize, row: &mut [f64]| {
+        let p = &paths[i * len * dim..(i + 1) * len * dim];
+        let s = signature(p, len, dim, opts.depth, opts.transform, opts.method);
+        row.copy_from_slice(&s);
+    };
+    if opts.parallel {
+        parallel_for_mut(&mut out, slen, work);
+    } else {
+        for (i, row) in out.chunks_mut(slen).enumerate() {
+            work(i, row);
+        }
+    }
+    out
+}
+
+/// Batched vjp: given ∂F/∂signatures `[batch, slen]`, return ∂F/∂paths
+/// `[batch, len, dim]`.
+pub fn batch_signature_vjp(
+    paths: &[f64],
+    grad_sigs: &[f64],
+    batch: usize,
+    len: usize,
+    dim: usize,
+    opts: &SigOptions,
+) -> Vec<f64> {
+    assert_eq!(paths.len(), batch * len * dim);
+    let od = opts.transform.out_dim(dim);
+    let slen = sig_length(od, opts.depth);
+    assert_eq!(grad_sigs.len(), batch * slen);
+    let mut out = vec![0.0; batch * len * dim];
+    if batch == 0 {
+        return out;
+    }
+    let stride = len * dim;
+    let work = |i: usize, row: &mut [f64]| {
+        let p = &paths[i * stride..(i + 1) * stride];
+        let gs = &grad_sigs[i * slen..(i + 1) * slen];
+        let gx = signature_vjp(p, len, dim, opts.depth, opts.transform, gs);
+        row.copy_from_slice(&gx);
+    };
+    if opts.parallel {
+        parallel_for_mut(&mut out, stride, work);
+    } else {
+        for (i, row) in out.chunks_mut(stride).enumerate() {
+            work(i, row);
+        }
+    }
+    out
+}
+
+/// Convenience: mean of signatures over the batch — the "expected signature",
+/// used by the MMD/two-sample example. Parallel reduction over chunks.
+pub fn expected_signature(
+    paths: &[f64],
+    batch: usize,
+    len: usize,
+    dim: usize,
+    opts: &SigOptions,
+) -> Vec<f64> {
+    let od = opts.transform.out_dim(dim);
+    let slen = sig_length(od, opts.depth);
+    let sigs = batch_signature(paths, batch, len, dim, opts);
+    let mut mean = vec![0.0; slen];
+    for row in sigs.chunks(slen) {
+        for (m, &v) in mean.iter_mut().zip(row.iter()) {
+            *m += v;
+        }
+    }
+    let inv = 1.0 / batch.max(1) as f64;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    mean
+}
+
+/// Stream large batches through a bounded amount of memory: calls `sink`
+/// with (index, signature) instead of materialising `[batch, slen]`.
+pub fn batch_signature_streaming<F: Fn(usize, &[f64]) + Sync>(
+    paths: &[f64],
+    batch: usize,
+    len: usize,
+    dim: usize,
+    opts: &SigOptions,
+    sink: F,
+) {
+    assert_eq!(paths.len(), batch * len * dim);
+    parallel_for(batch, |i| {
+        let p = &paths[i * len * dim..(i + 1) * len * dim];
+        let s = signature(p, len, dim, opts.depth, opts.transform, opts.method);
+        sink(i, &s);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(2);
+        let (b, l, d, n) = (7, 12, 3, 4);
+        let paths = rng.brownian_batch(b, l, d, 0.5);
+        let opts = SigOptions::new(n);
+        let out = batch_signature(&paths, b, l, d, &opts);
+        let slen = sig_length(d, n);
+        for i in 0..b {
+            let single = crate::sig::sig(&paths[i * l * d..(i + 1) * l * d], l, d, n);
+            assert!(max_abs_diff(&out[i * slen..(i + 1) * slen], &single) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let mut rng = Rng::new(4);
+        let (b, l, d, n) = (16, 20, 2, 5);
+        let paths = rng.brownian_batch(b, l, d, 0.5);
+        let par = batch_signature(&paths, b, l, d, &SigOptions::new(n));
+        let ser = batch_signature(&paths, b, l, d, &SigOptions::new(n).serial());
+        assert!(max_abs_diff(&par, &ser) < 1e-15);
+    }
+
+    #[test]
+    fn batch_vjp_matches_single() {
+        let mut rng = Rng::new(8);
+        let (b, l, d, n) = (5, 8, 2, 3);
+        let paths = rng.brownian_batch(b, l, d, 0.5);
+        let slen = sig_length(d, n);
+        let mut gs = vec![0.0; b * slen];
+        rng.fill_normal(&mut gs);
+        let opts = SigOptions::new(n);
+        let gx = batch_signature_vjp(&paths, &gs, b, l, d, &opts);
+        for i in 0..b {
+            let single = signature_vjp(
+                &paths[i * l * d..(i + 1) * l * d],
+                l,
+                d,
+                n,
+                Transform::None,
+                &gs[i * slen..(i + 1) * slen],
+            );
+            assert!(max_abs_diff(&gx[i * l * d..(i + 1) * l * d], &single) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn expected_signature_is_mean() {
+        let mut rng = Rng::new(12);
+        let (b, l, d, n) = (4, 6, 2, 3);
+        let paths = rng.brownian_batch(b, l, d, 0.5);
+        let opts = SigOptions::new(n);
+        let es = expected_signature(&paths, b, l, d, &opts);
+        let sigs = batch_signature(&paths, b, l, d, &opts);
+        let slen = sig_length(d, n);
+        for j in 0..slen {
+            let mean: f64 = (0..b).map(|i| sigs[i * slen + j]).sum::<f64>() / b as f64;
+            assert!((es[j] - mean).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let mut rng = Rng::new(13);
+        let (b, l, d, n) = (6, 10, 2, 3);
+        let paths = rng.brownian_batch(b, l, d, 0.5);
+        let opts = SigOptions::new(n);
+        let batchout = batch_signature(&paths, b, l, d, &opts);
+        let slen = sig_length(d, n);
+        let collected = std::sync::Mutex::new(vec![0.0; b * slen]);
+        batch_signature_streaming(&paths, b, l, d, &opts, |i, s| {
+            collected.lock().unwrap()[i * slen..(i + 1) * slen].copy_from_slice(s);
+        });
+        assert!(max_abs_diff(&collected.into_inner().unwrap(), &batchout) < 1e-15);
+    }
+}

@@ -1,0 +1,93 @@
+//! Algorithm 1 — the direct signature update, as used by iisignature.
+//!
+//! Design choices (paper §2.2): (1) the signature lives in one flat
+//! contiguous array; (2) levels are updated in reverse order (N down to 1)
+//! so the update can be written in place — level k reads only levels i < k,
+//! which have not been touched yet in this step.
+
+use crate::tensor::{exp_increment, LevelLayout};
+
+/// One Chen step of the direct algorithm: `a ← a ⊗ exp(z)`, in place.
+///
+/// `e` is caller-provided scratch of length `layout.total()` that receives
+/// exp(z) (kept across calls to avoid reallocation).
+pub fn direct_step(layout: &LevelLayout, a: &mut [f64], z: &[f64], e: &mut [f64]) {
+    debug_assert_eq!(a.len(), layout.total());
+    debug_assert_eq!(z.len(), layout.dim);
+    exp_increment(layout, z, e);
+    let depth = layout.depth;
+    for k in (1..=depth).rev() {
+        let (ks, ke) = layout.level_range(k);
+        // A_k += Σ_{i=1..k-1} A_i ⊗ E_{k-i}  (i = 0 term is E_k added below;
+        // i = k term is A_k ⊗ E_0 = A_k, already in place).
+        for i in 1..k {
+            let j = k - i;
+            let (is_, ie) = layout.level_range(i);
+            let (js, je) = layout.level_range(j);
+            let lj = je - js;
+            // Split-borrow: levels i and j are strictly below level k.
+            let (lower, upper) = a.split_at_mut(ks);
+            let av = &lower[is_..ie];
+            let ev = &e[js..je];
+            let out = &mut upper[..ke - ks];
+            for (u, &au) in av.iter().enumerate() {
+                if au == 0.0 {
+                    continue;
+                }
+                let dst = &mut out[u * lj..(u + 1) * lj];
+                for (o, &evv) in dst.iter_mut().zip(ev.iter()) {
+                    *o += au * evv;
+                }
+            }
+        }
+        // A_k += E_k
+        let ev = &e[ks..ke];
+        let av = &mut a[ks..ke];
+        for (o, &v) in av.iter_mut().zip(ev.iter()) {
+            *o += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::tensor_prod;
+    use crate::util::linalg::max_abs_diff;
+    use crate::util::prop::check;
+
+    /// The in-place step must equal the out-of-place tensor product with
+    /// exp(z) — the definitional Chen update.
+    #[test]
+    fn step_equals_tensor_product_with_exp() {
+        check("direct step == A ⊗ exp(z)", 30, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 5);
+            let layout = LevelLayout::new(d, n);
+            let mut a = g.normal_vec(layout.total());
+            a[0] = 1.0;
+            let z = g.normal_vec(d);
+            let mut e = vec![0.0; layout.total()];
+            exp_increment(&layout, &z, &mut e);
+            let mut want = vec![0.0; layout.total()];
+            tensor_prod(&layout, &a, &e, &mut want);
+            let mut scratch = vec![0.0; layout.total()];
+            direct_step(&layout, &mut a, &z, &mut scratch);
+            let err = max_abs_diff(&a, &want);
+            assert!(err < 1e-10, "err {err}");
+        });
+    }
+
+    #[test]
+    fn zero_increment_is_noop() {
+        let layout = LevelLayout::new(3, 3);
+        let mut a = vec![0.0; layout.total()];
+        a[0] = 1.0;
+        a[2] = 0.5;
+        a[7] = -1.25;
+        let before = a.clone();
+        let mut e = vec![0.0; layout.total()];
+        direct_step(&layout, &mut a, &[0.0, 0.0, 0.0], &mut e);
+        assert_eq!(a, before);
+    }
+}

@@ -1,0 +1,142 @@
+//! Algorithm 2 — Horner's scheme for the signature update, as used by
+//! signatory and pySigLib.
+//!
+//! For each level k (N down to 2) the update
+//!   A_k ← Σ_{i=0..k} A_i ⊗ z^{⊗(k-i)}/(k-i)!
+//! is factored as
+//!   A_k ← (B_k + A_{k-1}) ⊗ z + A_k,
+//!   B_k = ((…((z/k + A_1) ⊗ z/(k-1) + A_2) ⊗ z/(k-2) + …) ⊗ z/2,
+//! which minimises tensor multiplications and memory traffic.
+//!
+//! Design choices (paper §2.3): (3) one contiguous scratch block sized for
+//! B_N is reused by every level's B_k, and the in-place multiplication
+//! `B ← B ⊗ z/(k-i)` runs in *reverse* index order so old entries are only
+//! overwritten after their last read; (4) the final `(B + A_{k-1}) ⊗ z` is
+//! accumulated directly into A_k.
+
+use crate::tensor::LevelLayout;
+
+/// One Chen step by Horner's algorithm: `a ← a ⊗ exp(z)`, in place.
+///
+/// `b` is caller-provided scratch of length ≥ d^(N-1) (i.e.
+/// `layout.level_size(N-1)`), reused across calls — design choice (3).
+pub fn horner_step(layout: &LevelLayout, a: &mut [f64], z: &[f64], b: &mut [f64]) {
+    let d = layout.dim;
+    let depth = layout.depth;
+    debug_assert_eq!(a.len(), layout.total());
+    debug_assert_eq!(z.len(), d);
+    if depth >= 2 {
+        debug_assert!(b.len() >= layout.level_size(depth - 1));
+    }
+    for k in (2..=depth).rev() {
+        // B = z / k  (level-1 content)
+        let inv_k = 1.0 / k as f64;
+        for j in 0..d {
+            b[j] = z[j] * inv_k;
+        }
+        let mut cur = d; // current number of live entries in b (level i+1 has d^{i+1})
+        for i in 1..=k.saturating_sub(2) {
+            // B += A_i
+            let (is_, ie) = layout.level_range(i);
+            let av = &a[is_..ie];
+            for (bv, &avv) in b[..cur].iter_mut().zip(av.iter()) {
+                *bv += avv;
+            }
+            // B ← B ⊗ z/(k-i), in place, reverse order over u (design
+            // choice (3)): u descending guarantees b[u] is read before the
+            // write range [u·d, u·d+d) can touch it. Within one u the read
+            // happens first, so j ascends — contiguous stores vectorize.
+            let scale = 1.0 / (k - i) as f64;
+            for u in (0..cur).rev() {
+                let v = b[u] * scale;
+                let dst = u * d;
+                for j in 0..d {
+                    b[dst + j] = v * z[j];
+                }
+            }
+            cur *= d;
+        }
+        // B += A_{k-1}
+        let (ps, pe) = layout.level_range(k - 1);
+        debug_assert_eq!(cur, pe - ps);
+        {
+            let (lower, _) = a.split_at(pe);
+            let av = &lower[ps..pe];
+            for (bv, &avv) in b[..cur].iter_mut().zip(av.iter()) {
+                *bv += avv;
+            }
+        }
+        // A_k += B ⊗ z  (design choice (4): written directly into A_k).
+        let (ks, _ke) = layout.level_range(k);
+        let out = &mut a[ks..ks + cur * d];
+        for u in 0..cur {
+            let bu = b[u];
+            if bu == 0.0 {
+                continue;
+            }
+            let dst = &mut out[u * d..(u + 1) * d];
+            for (o, &zj) in dst.iter_mut().zip(z.iter()) {
+                *o += bu * zj;
+            }
+        }
+    }
+    // A_1 += z
+    if depth >= 1 {
+        for j in 0..d {
+            a[1 + j] += z[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{exp_increment, tensor_prod};
+    use crate::util::linalg::max_abs_diff;
+    use crate::util::prop::check;
+
+    #[test]
+    fn step_equals_tensor_product_with_exp() {
+        check("horner step == A ⊗ exp(z)", 40, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 6);
+            let layout = LevelLayout::new(d, n);
+            let mut a = g.normal_vec(layout.total());
+            a[0] = 1.0;
+            let z = g.normal_vec(d);
+            let mut e = vec![0.0; layout.total()];
+            exp_increment(&layout, &z, &mut e);
+            let mut want = vec![0.0; layout.total()];
+            tensor_prod(&layout, &a, &e, &mut want);
+            let bcap = layout.level_size(n.saturating_sub(1)).max(1);
+            let mut b = vec![0.0; bcap];
+            horner_step(&layout, &mut a, &z, &mut b);
+            let err = max_abs_diff(&a, &want);
+            assert!(err < 1e-10, "err {err}");
+        });
+    }
+
+    #[test]
+    fn depth_one_only_updates_level_one() {
+        let layout = LevelLayout::new(2, 1);
+        let mut a = vec![1.0, 0.5, -0.5];
+        let mut b = vec![0.0; 1];
+        horner_step(&layout, &mut a, &[1.0, 2.0], &mut b);
+        assert_eq!(a, vec![1.0, 1.5, 1.5]);
+    }
+
+    #[test]
+    fn dim_one_paths_work() {
+        // d = 1: every level has a single entry; exercises the u*d == u
+        // aliasing edge of the in-place reverse multiply.
+        let layout = LevelLayout::new(1, 6);
+        let mut a = vec![0.0; layout.total()];
+        exp_increment(&layout, &[0.5], &mut a);
+        let mut b = vec![0.0; 1];
+        horner_step(&layout, &mut a, &[0.25], &mut b);
+        // Signature of a 1-d path depends only on total increment: exp(0.75).
+        let mut want = vec![0.0; layout.total()];
+        exp_increment(&layout, &[0.75], &mut want);
+        assert!(max_abs_diff(&a, &want) < 1e-12);
+    }
+}

@@ -1,0 +1,185 @@
+//! Log-signatures: the tensor logarithm of the signature, plus the
+//! Lyndon-word compressed representation (signatory's "words" mode — the
+//! coefficients of the expanded log at Lyndon-word indices form coordinates
+//! in a basis of the free Lie algebra, since the Lyndon basis expansion is
+//! unitriangular with respect to its own words).
+
+use crate::tensor::{tensor_log, LevelLayout};
+use crate::transforms::Transform;
+
+/// Expanded (tensor-form) log-signature of a path: flat layout identical to
+/// the signature's; the scalar level is always 0.
+pub fn log_signature(path: &[f64], len: usize, dim: usize, depth: usize, tr: Transform) -> Vec<f64> {
+    let s = crate::sig::signature(path, len, dim, depth, tr, crate::sig::SigMethod::Horner);
+    let layout = LevelLayout::new(tr.out_dim(dim), depth);
+    let mut out = vec![0.0; layout.total()];
+    tensor_log(&layout, &s, &mut out);
+    out
+}
+
+/// Enumerate all Lyndon words over alphabet {0,..,dim-1} with length in
+/// [1, depth], in lexicographic order, via Duval's algorithm.
+pub fn lyndon_words(dim: usize, depth: usize) -> Vec<Vec<usize>> {
+    assert!(dim >= 1 && depth >= 1);
+    let mut out = Vec::new();
+    if dim == 1 {
+        // Single-letter alphabet: the only Lyndon word is "0".
+        return vec![vec![0]];
+    }
+    let mut w = vec![0usize];
+    loop {
+        if w.len() <= depth {
+            out.push(w.clone());
+        }
+        // Duval: extend periodically to length `depth`, then increment.
+        let m = w.len();
+        while w.len() < depth {
+            let c = w[w.len() - m];
+            w.push(c);
+        }
+        while let Some(&last) = w.last() {
+            if last == dim - 1 {
+                w.pop();
+            } else {
+                break;
+            }
+        }
+        if w.is_empty() {
+            break;
+        }
+        *w.last_mut().unwrap() += 1;
+    }
+    out
+}
+
+/// Flat index of a word (i_1,...,i_k) inside level k of the layout.
+fn word_index(layout: &LevelLayout, word: &[usize]) -> usize {
+    let d = layout.dim;
+    let mut idx = 0usize;
+    for &c in word {
+        idx = idx * d + c;
+    }
+    layout.offset(word.len()) + idx
+}
+
+/// Compressed log-signature: coefficients of the expanded log at Lyndon-word
+/// indices, ordered as [`lyndon_words`]. Length = number of Lyndon words of
+/// length ≤ depth (the dimension of the truncated free Lie algebra).
+pub fn log_signature_words(
+    path: &[f64],
+    len: usize,
+    dim: usize,
+    depth: usize,
+    tr: Transform,
+) -> Vec<f64> {
+    let od = tr.out_dim(dim);
+    let layout = LevelLayout::new(od, depth);
+    let expanded = log_signature(path, len, dim, depth, tr);
+    lyndon_words(od, depth)
+        .iter()
+        .map(|w| expanded[word_index(&layout, w)])
+        .collect()
+}
+
+/// Dimension of the free Lie algebra truncated at `depth` over `dim`
+/// letters (Witt's formula): Σ_{k≤N} (1/k) Σ_{e|k} μ(e) d^{k/e}.
+pub fn lie_dim(dim: usize, depth: usize) -> usize {
+    fn mobius(mut n: usize) -> i64 {
+        let mut mu = 1i64;
+        let mut p = 2;
+        while p * p <= n {
+            if n % p == 0 {
+                n /= p;
+                if n % p == 0 {
+                    return 0;
+                }
+                mu = -mu;
+            }
+            p += 1;
+        }
+        if n > 1 {
+            mu = -mu;
+        }
+        mu
+    }
+    let mut total = 0i64;
+    for k in 1..=depth {
+        let mut acc = 0i64;
+        for e in 1..=k {
+            if k % e == 0 {
+                acc += mobius(e) * (dim as i64).pow((k / e) as u32);
+            }
+        }
+        total += acc / k as i64;
+    }
+    total as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn lyndon_count_matches_witt_formula() {
+        for d in 1..=4 {
+            for n in 1..=5 {
+                let words = lyndon_words(d, n);
+                assert_eq!(words.len(), lie_dim(d, n), "d={d} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lyndon_words_d2_n3_known() {
+        // Lyndon words over {0,1} up to length 3: 0, 001, 01, 011, 1.
+        let w = lyndon_words(2, 3);
+        let want: Vec<Vec<usize>> = vec![
+            vec![0],
+            vec![0, 0, 1],
+            vec![0, 1],
+            vec![0, 1, 1],
+            vec![1],
+        ];
+        assert_eq!(w, want);
+    }
+
+    #[test]
+    fn linear_path_log_is_level_one_only() {
+        // log S(linear segment) = increment (primitive element).
+        let path = [0.0, 0.0, 2.0, -1.0];
+        let l = log_signature(&path, 2, 2, 4, Transform::None);
+        assert!(l[0].abs() < 1e-14);
+        assert!((l[1] - 2.0).abs() < 1e-12);
+        assert!((l[2] + 1.0).abs() < 1e-12);
+        assert!(l[3..].iter().all(|&v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn level2_log_is_antisymmetric() {
+        // The level-2 part of log S is the Lévy area — antisymmetric.
+        check("log-sig level-2 antisymmetry", 20, |g| {
+            let len = g.usize_in(3, 10);
+            let dim = g.usize_in(2, 4);
+            let path = g.path(len, dim, 0.7);
+            let l = log_signature(&path, len, dim, 2, Transform::None);
+            let layout = crate::tensor::LevelLayout::new(dim, 2);
+            let (o2, _) = layout.level_range(2);
+            for i in 0..dim {
+                for j in 0..dim {
+                    let a = l[o2 + i * dim + j];
+                    let b = l[o2 + j * dim + i];
+                    assert!((a + b).abs() < 1e-9, "i={i} j={j}: {a} {b}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn words_mode_has_lie_dimension() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let path = rng.brownian_path(10, 3, 0.5);
+        let w = log_signature_words(&path, 10, 3, 4, Transform::None);
+        assert_eq!(w.len(), lie_dim(3, 4));
+    }
+}

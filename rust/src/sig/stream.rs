@@ -1,0 +1,216 @@
+//! Streaming and windowed signatures: the online complement to the batch
+//! APIs. `StreamingSignature` maintains S(x_{0..t}) under point-by-point
+//! arrival (one Horner step per point — O(sig_length · d) amortised), which
+//! is the natural deployment mode for the financial data streams the paper
+//! targets; `sliding_signatures` featurises every window of a long series.
+
+use crate::sig::horner::horner_step;
+use crate::tensor::{group_inverse, tensor_prod, LevelLayout};
+
+/// Online signature accumulator over a stream of points in R^d.
+pub struct StreamingSignature {
+    layout: LevelLayout,
+    sig: Vec<f64>,
+    scratch: Vec<f64>,
+    last: Option<Vec<f64>>,
+    count: usize,
+}
+
+impl StreamingSignature {
+    pub fn new(dim: usize, depth: usize) -> Self {
+        assert!(depth >= 1);
+        let layout = LevelLayout::new(dim, depth);
+        let mut sig = vec![0.0; layout.total()];
+        sig[0] = 1.0;
+        let bcap = layout.level_size(depth.saturating_sub(1)).max(1);
+        StreamingSignature {
+            layout,
+            sig,
+            scratch: vec![0.0; bcap],
+            last: None,
+            count: 0,
+        }
+    }
+
+    /// Feed the next point; updates the running signature by one Chen step.
+    pub fn push(&mut self, point: &[f64]) {
+        assert_eq!(point.len(), self.layout.dim);
+        if let Some(last) = &self.last {
+            let z: Vec<f64> = point.iter().zip(last.iter()).map(|(a, b)| a - b).collect();
+            horner_step(&self.layout, &mut self.sig, &z, &mut self.scratch);
+        }
+        self.last = Some(point.to_vec());
+        self.count += 1;
+    }
+
+    /// Current signature of everything seen so far (identity before two
+    /// points have arrived).
+    pub fn signature(&self) -> &[f64] {
+        &self.sig
+    }
+
+    /// Points consumed.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Reset to the empty-path state.
+    pub fn reset(&mut self) {
+        self.sig.fill(0.0);
+        self.sig[0] = 1.0;
+        self.last = None;
+        self.count = 0;
+    }
+}
+
+/// Signatures of every sliding window `[i, i+window)` of a path, advancing
+/// by `stride`. Uses Chen's identity incrementally: the signature of the
+/// next window is  S(w') = S(seg_dropped)^{-1} ⊗ S(w) ⊗ S(seg_added),
+/// costing two group operations per slide instead of recomputing the
+/// window from scratch — an O(window/stride)-fold saving for dense strides.
+///
+/// Returns `[n_windows, sig_length]` row-major.
+pub fn sliding_signatures(
+    path: &[f64],
+    len: usize,
+    dim: usize,
+    depth: usize,
+    window: usize,
+    stride: usize,
+) -> Vec<f64> {
+    assert!(window >= 2 && window <= len && stride >= 1);
+    assert_eq!(path.len(), len * dim);
+    let layout = LevelLayout::new(dim, depth);
+    let total = layout.total();
+    let n_windows = (len - window) / stride + 1;
+    let mut out = vec![0.0; n_windows * total];
+    let bcap = layout.level_size(depth.saturating_sub(1)).max(1);
+    let mut b = vec![0.0; bcap];
+
+    // First window directly.
+    let mut cur = crate::sig::sig(&path[..window * dim], window, dim, depth);
+    out[..total].copy_from_slice(&cur);
+
+    let mut seg = vec![0.0; total]; // signature of the dropped prefix
+    let mut inv = vec![0.0; total];
+    let mut tmp = vec![0.0; total];
+    for w in 1..n_windows {
+        let prev_start = (w - 1) * stride;
+        let start = w * stride;
+        // S(dropped prefix) = signature over points [prev_start, start].
+        seg.fill(0.0);
+        seg[0] = 1.0;
+        for i in prev_start..start {
+            let z: Vec<f64> = (0..dim)
+                .map(|j| path[(i + 1) * dim + j] - path[i * dim + j])
+                .collect();
+            horner_step(&layout, &mut seg, &z, &mut b);
+        }
+        group_inverse(&layout, &seg, &mut inv);
+        tensor_prod(&layout, &inv, &cur, &mut tmp);
+        // Append the new tail points [prev_end, end].
+        cur.copy_from_slice(&tmp);
+        let prev_end = prev_start + window - 1;
+        let end = start + window - 1;
+        for i in prev_end..end {
+            let z: Vec<f64> = (0..dim)
+                .map(|j| path[(i + 1) * dim + j] - path[i * dim + j])
+                .collect();
+            horner_step(&layout, &mut cur, &z, &mut b);
+        }
+        out[w * total..(w + 1) * total].copy_from_slice(&cur);
+    }
+    out
+}
+
+/// Expanding-window signatures: S(x_{0..k}) for every prefix end k in
+/// `2..=len`, one Horner step each — `[len-1, sig_length]`.
+pub fn expanding_signatures(path: &[f64], len: usize, dim: usize, depth: usize) -> Vec<f64> {
+    assert!(len >= 2);
+    let layout = LevelLayout::new(dim, depth);
+    let total = layout.total();
+    let mut out = vec![0.0; (len - 1) * total];
+    let mut stream = StreamingSignature::new(dim, depth);
+    stream.push(&path[..dim]);
+    for i in 1..len {
+        stream.push(&path[i * dim..(i + 1) * dim]);
+        out[(i - 1) * total..i * total].copy_from_slice(stream.signature());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::max_abs_diff;
+    use crate::util::prop::check;
+
+    #[test]
+    fn streaming_matches_batch() {
+        check("streaming == batch signature", 20, |g| {
+            let len = g.usize_in(2, 20);
+            let dim = g.usize_in(1, 3);
+            let depth = g.usize_in(1, 4);
+            let path = g.path(len, dim, 0.5);
+            let mut s = StreamingSignature::new(dim, depth);
+            for i in 0..len {
+                s.push(&path[i * dim..(i + 1) * dim]);
+            }
+            let want = crate::sig::sig(&path, len, dim, depth);
+            assert!(max_abs_diff(s.signature(), &want) < 1e-11);
+        });
+    }
+
+    #[test]
+    fn streaming_reset_restarts() {
+        let mut s = StreamingSignature::new(2, 3);
+        s.push(&[0.0, 0.0]);
+        s.push(&[1.0, 1.0]);
+        s.reset();
+        assert!(s.is_empty());
+        assert_eq!(s.signature()[0], 1.0);
+        assert!(s.signature()[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sliding_matches_direct_window_computation() {
+        check("sliding windows == per-window signatures", 12, |g| {
+            let len = g.usize_in(6, 24);
+            let dim = g.usize_in(1, 3);
+            let depth = g.usize_in(1, 3);
+            let window = g.usize_in(3, len.min(8));
+            let stride = g.usize_in(1, 3);
+            let path = g.path(len, dim, 0.4);
+            let got = sliding_signatures(&path, len, dim, depth, window, stride);
+            let layout = LevelLayout::new(dim, depth);
+            let total = layout.total();
+            let n_windows = (len - window) / stride + 1;
+            assert_eq!(got.len(), n_windows * total);
+            for w in 0..n_windows {
+                let s = w * stride;
+                let want =
+                    crate::sig::sig(&path[s * dim..(s + window) * dim], window, dim, depth);
+                let err = max_abs_diff(&got[w * total..(w + 1) * total], &want);
+                assert!(err < 1e-8, "window {w}: {err}");
+            }
+        });
+    }
+
+    #[test]
+    fn expanding_prefixes_match() {
+        let mut rng = crate::util::rng::Rng::new(61);
+        let (len, dim, depth) = (10, 2, 3);
+        let path = rng.brownian_path(len, dim, 0.5);
+        let out = expanding_signatures(&path, len, dim, depth);
+        let total = crate::sig::sig_length(dim, depth);
+        for k in 2..=len {
+            let want = crate::sig::sig(&path[..k * dim], k, dim, depth);
+            let got = &out[(k - 2) * total..(k - 1) * total];
+            assert!(max_abs_diff(got, &want) < 1e-12, "prefix {k}");
+        }
+    }
+}

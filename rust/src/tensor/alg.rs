@@ -1,0 +1,344 @@
+//! Flat-storage operations on the truncated free tensor algebra T^N(R^d).
+//!
+//! Level k of an element lives at `offsets[k] .. offsets[k+1]` of the flat
+//! array, with `d^k` entries indexed lexicographically: the multi-index
+//! (i_1,...,i_k) maps to `((i_1*d + i_2)*d + ...)*d + i_k`. Under this
+//! indexing the tensor product of a level-i block `a` and a level-j block `b`
+//! is the outer product `out[u*d^j + v] = a[u]*b[v]` — contiguous in `v`,
+//! which is what every inner loop below exploits.
+
+/// Shape descriptor for a truncated tensor sequence: dimension `d` and
+/// truncation depth `N`, with precomputed level offsets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LevelLayout {
+    pub dim: usize,
+    pub depth: usize,
+    /// offsets[k] = start index of level k; offsets[depth+1] = total length.
+    offsets: Vec<usize>,
+}
+
+impl LevelLayout {
+    /// Build the layout for dimension `dim`, truncation `depth`.
+    ///
+    /// Panics if the flat size overflows or exceeds 2^31 entries (16 GiB of
+    /// f64) — far beyond any practical signature computation.
+    pub fn new(dim: usize, depth: usize) -> Self {
+        assert!(dim >= 1, "dimension must be >= 1");
+        let mut offsets = Vec::with_capacity(depth + 2);
+        let mut total: usize = 0;
+        let mut level_size: usize = 1;
+        for _k in 0..=depth {
+            offsets.push(total);
+            total = total.checked_add(level_size).expect("layout overflow");
+            level_size = level_size.checked_mul(dim).expect("layout overflow");
+            assert!(total < (1usize << 31), "signature too large to store");
+        }
+        offsets.push(total);
+        LevelLayout {
+            dim,
+            depth,
+            offsets,
+        }
+    }
+
+    /// Total flat length = (d^{N+1}-1)/(d-1).
+    #[inline]
+    pub fn total(&self) -> usize {
+        self.offsets[self.depth + 1]
+    }
+
+    /// Number of entries in level k (= d^k).
+    #[inline]
+    pub fn level_size(&self, k: usize) -> usize {
+        self.offsets[k + 1] - self.offsets[k]
+    }
+
+    /// Half-open range of level k in the flat array.
+    #[inline]
+    pub fn level_range(&self, k: usize) -> (usize, usize) {
+        (self.offsets[k], self.offsets[k + 1])
+    }
+
+    /// Start offset of level k.
+    #[inline]
+    pub fn offset(&self, k: usize) -> usize {
+        self.offsets[k]
+    }
+}
+
+/// out = exp(z) truncated: (1, z, z^{⊗2}/2!, ..., z^{⊗N}/N!).
+/// `z` has length `layout.dim`; `out` has length `layout.total()`.
+pub fn exp_increment(layout: &LevelLayout, z: &[f64], out: &mut [f64]) {
+    assert_eq!(z.len(), layout.dim);
+    assert_eq!(out.len(), layout.total());
+    let d = layout.dim;
+    out[0] = 1.0;
+    if layout.depth == 0 {
+        return;
+    }
+    out[1..1 + d].copy_from_slice(z);
+    for k in 2..=layout.depth {
+        let (ps, pe) = layout.level_range(k - 1);
+        let (cs, _ce) = layout.level_range(k);
+        let inv_k = 1.0 / k as f64;
+        // out_k = out_{k-1} ⊗ z / k, built forward (reads previous level only).
+        let prev_len = pe - ps;
+        for u in 0..prev_len {
+            let a = out[ps + u] * inv_k;
+            let dst = cs + u * d;
+            for j in 0..d {
+                out[dst + j] = a * z[j];
+            }
+        }
+    }
+}
+
+/// General tensor exponential of a truncated element with zero scalar part:
+/// out = 1 + x + x⊗x/2! + ... (series terminates at depth N).
+pub fn tensor_exp(layout: &LevelLayout, x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), layout.total());
+    assert!(x[0].abs() < 1e-14, "tensor_exp requires zero scalar part");
+    let n = layout.total();
+    out.fill(0.0);
+    out[0] = 1.0;
+    // Horner: out = 1 + x(1 + x/2 (1 + x/3 (...)))
+    let mut acc = vec![0.0; n];
+    acc[0] = 1.0;
+    for k in (1..=layout.depth).rev() {
+        // acc = 1 + (x/k) ⊗ acc
+        let mut next = vec![0.0; n];
+        tensor_prod(layout, x, &acc, &mut next);
+        for v in next.iter_mut() {
+            *v /= k as f64;
+        }
+        next[0] += 1.0;
+        acc = next;
+    }
+    out.copy_from_slice(&acc);
+}
+
+/// Truncated tensor product: out_n = Σ_{i+j=n} a_i ⊗ b_j for n = 0..=N.
+/// `out` must not alias `a` or `b`.
+pub fn tensor_prod(layout: &LevelLayout, a: &[f64], b: &[f64], out: &mut [f64]) {
+    assert_eq!(a.len(), layout.total());
+    assert_eq!(b.len(), layout.total());
+    assert_eq!(out.len(), layout.total());
+    out.fill(0.0);
+    tensor_prod_accum(layout, a, b, out);
+}
+
+/// out += a ⊗ b (truncated). `out` must not alias `a` or `b`.
+pub fn tensor_prod_accum(layout: &LevelLayout, a: &[f64], b: &[f64], out: &mut [f64]) {
+    for n in 0..=layout.depth {
+        let (os, _oe) = layout.level_range(n);
+        for i in 0..=n {
+            let j = n - i;
+            let (as_, ae) = layout.level_range(i);
+            let (bs, be) = layout.level_range(j);
+            let bj = be - bs;
+            let av = &a[as_..ae];
+            let bv = &b[bs..be];
+            // out_n[u*d^j + v] += a_i[u] * b_j[v]
+            for (u, &au) in av.iter().enumerate() {
+                if au == 0.0 {
+                    continue;
+                }
+                let dst = os + u * bj;
+                let orow = &mut out[dst..dst + bj];
+                for (o, &bvv) in orow.iter_mut().zip(bv.iter()) {
+                    *o += au * bvv;
+                }
+            }
+        }
+    }
+}
+
+/// Group inverse of a group-like (scalar part 1) element:
+/// (1 + x)^{-1} = Σ_{n≤N} (-x)^{⊗n}, computed by Horner.
+pub fn group_inverse(layout: &LevelLayout, a: &[f64], out: &mut [f64]) {
+    assert!((a[0] - 1.0).abs() < 1e-12, "group_inverse needs scalar 1");
+    let n = layout.total();
+    // x = a - 1 (zero scalar part), negated.
+    let mut negx = a.to_vec();
+    negx[0] = 0.0;
+    for v in negx.iter_mut() {
+        *v = -*v;
+    }
+    // Horner: inv = 1 + (-x)(1 + (-x)(1 + ...))
+    let mut acc = vec![0.0; n];
+    acc[0] = 1.0;
+    for _ in 0..layout.depth {
+        let mut next = vec![0.0; n];
+        tensor_prod(layout, &negx, &acc, &mut next);
+        next[0] += 1.0;
+        acc = next;
+    }
+    out.copy_from_slice(&acc);
+}
+
+/// Tensor logarithm of a group-like element:
+/// log(1 + x) = Σ_{n=1..N} (-1)^{n+1} x^{⊗n} / n, computed by Horner:
+/// log(1+x) = x ⊗ (1 - x/2 ⊗ (1 - 2x/3 ⊗ (...))) — we use the direct
+/// alternating Horner form 1 - x(1/2 - x(1/3 - ...)) multiplied by x.
+pub fn tensor_log(layout: &LevelLayout, a: &[f64], out: &mut [f64]) {
+    assert!((a[0] - 1.0).abs() < 1e-12, "tensor_log needs scalar 1");
+    let n = layout.total();
+    let mut x = a.to_vec();
+    x[0] = 0.0;
+    // Horner over coefficients c_n = (-1)^{n+1}/n:
+    // log = x(c1 + x(c2/c1... )) — simpler: acc = c_N; for k=N-1..1: acc = c_k + x ⊗ acc
+    // then log = x ⊗ acc... but that computes Σ c_k x^{k} with one extra x.
+    // Directly: acc = c_N * 1; for k = N-1 down to 1: acc = c_k + x⊗acc; out = x⊗acc.
+    let depth = layout.depth;
+    if depth == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let coef = |k: usize| -> f64 {
+        let s = if k % 2 == 1 { 1.0 } else { -1.0 };
+        s / k as f64
+    };
+    let mut acc = vec![0.0; n];
+    acc[0] = coef(depth);
+    for k in (1..depth).rev() {
+        let mut next = vec![0.0; n];
+        tensor_prod(layout, &x, &acc, &mut next);
+        next[0] += coef(k);
+        acc = next;
+    }
+    tensor_prod(layout, &x, &acc, out);
+}
+
+/// Full inner product ⟨a, b⟩ = Σ_k ⟨a_k, b_k⟩ over the flat arrays (the
+/// truncated signature-kernel inner product with the standard Euclidean
+/// pairing on each level).
+#[inline]
+pub fn inner_product(a: &[f64], b: &[f64]) -> f64 {
+    crate::util::linalg::dot(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn layout_sizes() {
+        let l = LevelLayout::new(3, 4);
+        assert_eq!(l.total(), 1 + 3 + 9 + 27 + 81);
+        assert_eq!(l.level_size(0), 1);
+        assert_eq!(l.level_size(3), 27);
+        assert_eq!(l.level_range(2), (4, 13));
+    }
+
+    #[test]
+    fn layout_dim_one() {
+        let l = LevelLayout::new(1, 6);
+        assert_eq!(l.total(), 7);
+    }
+
+    #[test]
+    fn exp_increment_matches_tensor_exp() {
+        let layout = LevelLayout::new(3, 5);
+        let z = [0.4, -0.2, 0.9];
+        let mut fast = vec![0.0; layout.total()];
+        exp_increment(&layout, &z, &mut fast);
+        let mut x = vec![0.0; layout.total()];
+        x[1..4].copy_from_slice(&z);
+        let mut slow = vec![0.0; layout.total()];
+        tensor_exp(&layout, &x, &mut slow);
+        for i in 0..fast.len() {
+            assert!((fast[i] - slow[i]).abs() < 1e-12, "i={i}");
+        }
+    }
+
+    #[test]
+    fn prod_is_associative() {
+        check("tensor product associativity", 30, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 4);
+            let layout = LevelLayout::new(d, n);
+            let t = layout.total();
+            let a = g.normal_vec(t);
+            let b = g.normal_vec(t);
+            let c = g.normal_vec(t);
+            let mut ab = vec![0.0; t];
+            let mut bc = vec![0.0; t];
+            let mut ab_c = vec![0.0; t];
+            let mut a_bc = vec![0.0; t];
+            tensor_prod(&layout, &a, &b, &mut ab);
+            tensor_prod(&layout, &b, &c, &mut bc);
+            tensor_prod(&layout, &ab, &c, &mut ab_c);
+            tensor_prod(&layout, &a, &bc, &mut a_bc);
+            let err = crate::util::linalg::max_abs_diff(&ab_c, &a_bc);
+            assert!(err < 1e-9, "associativity violated: {err}");
+        });
+    }
+
+    #[test]
+    fn prod_distributes_over_addition() {
+        check("tensor product bilinearity", 30, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let layout = LevelLayout::new(d, n);
+            let t = layout.total();
+            let a = g.normal_vec(t);
+            let b = g.normal_vec(t);
+            let c = g.normal_vec(t);
+            let bc: Vec<f64> = b.iter().zip(&c).map(|(x, y)| x + y).collect();
+            let mut left = vec![0.0; t];
+            tensor_prod(&layout, &a, &bc, &mut left);
+            let mut r1 = vec![0.0; t];
+            let mut r2 = vec![0.0; t];
+            tensor_prod(&layout, &a, &b, &mut r1);
+            tensor_prod(&layout, &a, &c, &mut r2);
+            let right: Vec<f64> = r1.iter().zip(&r2).map(|(x, y)| x + y).collect();
+            assert!(crate::util::linalg::max_abs_diff(&left, &right) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn inverse_is_two_sided() {
+        check("group inverse", 20, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let layout = LevelLayout::new(d, n);
+            let t = layout.total();
+            let mut a = g.normal_vec(t);
+            a[0] = 1.0;
+            // keep entries modest so the truncated inverse is well-conditioned
+            for v in a[1..].iter_mut() {
+                *v *= 0.3;
+            }
+            let mut inv = vec![0.0; t];
+            group_inverse(&layout, &a, &mut inv);
+            let mut prod = vec![0.0; t];
+            tensor_prod(&layout, &a, &inv, &mut prod);
+            let mut one = vec![0.0; t];
+            one[0] = 1.0;
+            assert!(crate::util::linalg::max_abs_diff(&prod, &one) < 1e-8);
+            tensor_prod(&layout, &inv, &a, &mut prod);
+            assert!(crate::util::linalg::max_abs_diff(&prod, &one) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn exp_log_roundtrip() {
+        check("exp/log roundtrip", 20, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let layout = LevelLayout::new(d, n);
+            let t = layout.total();
+            let mut x = g.normal_vec(t);
+            x[0] = 0.0;
+            for v in x.iter_mut() {
+                *v *= 0.3;
+            }
+            let mut e = vec![0.0; t];
+            tensor_exp(&layout, &x, &mut e);
+            let mut l = vec![0.0; t];
+            tensor_log(&layout, &e, &mut l);
+            assert!(crate::util::linalg::max_abs_diff(&l, &x) < 1e-8);
+        });
+    }
+}

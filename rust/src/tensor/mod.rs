@@ -1,0 +1,147 @@
+//! The free tensor algebra substrate.
+//!
+//! Truncated elements of T((R^d)) = ⊕_k (R^d)^{⊗k} are stored as one flat,
+//! contiguous `Vec<f64>` — level k occupies `d^k` consecutive entries — the
+//! layout the paper's design choice (1) calls for ("the signature
+//! (A_0,...,A_N) is stored as a single flattened contiguous array").
+
+pub mod alg;
+
+pub use alg::{
+    exp_increment, group_inverse, inner_product, tensor_exp, tensor_log, tensor_prod,
+    tensor_prod_accum, LevelLayout,
+};
+
+/// An element of the truncated free tensor algebra, owning its flat storage.
+///
+/// This is the value returned by the signature APIs; most hot-path code works
+/// on raw slices with a shared [`LevelLayout`] instead.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSeq {
+    pub layout: LevelLayout,
+    pub data: Vec<f64>,
+}
+
+impl TensorSeq {
+    /// The identity element (1, 0, 0, ...).
+    pub fn one(dim: usize, depth: usize) -> Self {
+        let layout = LevelLayout::new(dim, depth);
+        let mut data = vec![0.0; layout.total()];
+        data[0] = 1.0;
+        TensorSeq { layout, data }
+    }
+
+    /// Zero element.
+    pub fn zero(dim: usize, depth: usize) -> Self {
+        let layout = LevelLayout::new(dim, depth);
+        TensorSeq {
+            data: vec![0.0; layout.total()],
+            layout,
+        }
+    }
+
+    /// View of level k.
+    pub fn level(&self, k: usize) -> &[f64] {
+        let (s, e) = self.layout.level_range(k);
+        &self.data[s..e]
+    }
+
+    /// Mutable view of level k.
+    pub fn level_mut(&mut self, k: usize) -> &mut [f64] {
+        let (s, e) = self.layout.level_range(k);
+        &mut self.data[s..e]
+    }
+
+    /// Chen product: self ⊗ other (truncated).
+    pub fn prod(&self, other: &TensorSeq) -> TensorSeq {
+        assert_eq!(self.layout, other.layout);
+        let mut out = TensorSeq::zero(self.layout.dim, self.layout.depth);
+        tensor_prod(&self.layout, &self.data, &other.data, &mut out.data);
+        out
+    }
+
+    /// Group inverse (requires scalar part 1).
+    pub fn inverse(&self) -> TensorSeq {
+        let mut out = TensorSeq::zero(self.layout.dim, self.layout.depth);
+        group_inverse(&self.layout, &self.data, &mut out.data);
+        out
+    }
+
+    /// Tensor logarithm (requires scalar part 1).
+    pub fn log(&self) -> TensorSeq {
+        let mut out = TensorSeq::zero(self.layout.dim, self.layout.depth);
+        tensor_log(&self.layout, &self.data, &mut out.data);
+        out
+    }
+
+    /// Inner product ⟨self, other⟩ = Σ_k ⟨self_k, other_k⟩.
+    pub fn inner(&self, other: &TensorSeq) -> f64 {
+        assert_eq!(self.layout, other.layout);
+        inner_product(&self.data, &other.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_is_identity_for_prod() {
+        let one = TensorSeq::one(3, 4);
+        let mut x = TensorSeq::one(3, 4);
+        x.data.iter_mut().enumerate().for_each(|(i, v)| {
+            if i > 0 {
+                *v = (i as f64).sin();
+            }
+        });
+        let y = one.prod(&x);
+        let z = x.prod(&one);
+        for i in 0..x.data.len() {
+            assert!((y.data[i] - x.data[i]).abs() < 1e-14);
+            assert!((z.data[i] - x.data[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn inverse_of_exp_is_exp_of_negative() {
+        let layout = LevelLayout::new(2, 5);
+        let z = [0.3, -0.7];
+        let mut e = vec![0.0; layout.total()];
+        exp_increment(&layout, &z, &mut e);
+        let seq = TensorSeq {
+            layout: layout.clone(),
+            data: e,
+        };
+        let inv = seq.inverse();
+        let zn = [-0.3, 0.7];
+        let mut en = vec![0.0; layout.total()];
+        exp_increment(&layout, &zn, &mut en);
+        for i in 0..en.len() {
+            assert!((inv.data[i] - en[i]).abs() < 1e-12, "i={i}");
+        }
+    }
+
+    #[test]
+    fn log_of_exp_recovers_increment() {
+        let layout = LevelLayout::new(3, 4);
+        let z = [0.2, 0.1, -0.4];
+        let mut e = vec![0.0; layout.total()];
+        exp_increment(&layout, &z, &mut e);
+        let seq = TensorSeq {
+            layout: layout.clone(),
+            data: e,
+        };
+        let l = seq.log();
+        // log(exp(z)) = z exactly (z is level-1 only, primitive).
+        assert!((l.data[0]).abs() < 1e-14);
+        for j in 0..3 {
+            assert!((l.level(1)[j] - z[j]).abs() < 1e-12);
+        }
+        // Higher levels of log vanish.
+        for k in 2..=4 {
+            for &v in seq.log().level(k) {
+                assert!(v.abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Path-to-path transformations (paper §4): time-augmentation, lead-lag and
+//! basepoint, each available in two forms:
+//!
+//! 1. **Materialised** — produce the transformed path explicitly.
+//! 2. **On-the-fly** — the signature / kernel algorithms only ever consume
+//!    path *increments* (signatures) or increment *inner products* (kernels),
+//!    so both transforms can be fused into the sweep without materialising
+//!    the transformed path. This is the paper's "adapting the algorithms
+//!    internally", and is both faster and more memory-efficient.
+//!
+//! Conventions: paths are row-major `[len, dim]`. Time augmentation appends
+//! a uniform time channel t_i = i/(len-1) (so the total time increment is 1).
+//! Lead-lag maps a length-L path to a length-(2L-1), dimension-2d path
+//! `(lead, lag)` per the paper's definition.
+
+/// Which transformation to apply before the transform under computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transform {
+    /// Use the path as-is.
+    None,
+    /// Append a time channel: x̂_i = (x_i, t_i), dim d+1.
+    TimeAug,
+    /// Lead-lag: X^LL_i = (lead_i, lag_i), 2L-1 points of dim 2d.
+    LeadLag,
+    /// Lead-lag then time augmentation: 2L-1 points of dim 2d+1.
+    LeadLagTimeAug,
+}
+
+impl Transform {
+    /// Length of the transformed path given input length.
+    pub fn out_len(&self, len: usize) -> usize {
+        match self {
+            Transform::None | Transform::TimeAug => len,
+            Transform::LeadLag | Transform::LeadLagTimeAug => 2 * len - 1,
+        }
+    }
+
+    /// Dimension of the transformed path given input dimension.
+    pub fn out_dim(&self, dim: usize) -> usize {
+        match self {
+            Transform::None => dim,
+            Transform::TimeAug => dim + 1,
+            Transform::LeadLag => 2 * dim,
+            Transform::LeadLagTimeAug => 2 * dim + 1,
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<Transform> {
+        match s {
+            "none" => Some(Transform::None),
+            "time" | "timeaug" | "time_aug" => Some(Transform::TimeAug),
+            "leadlag" | "lead_lag" => Some(Transform::LeadLag),
+            "leadlag_time" | "leadlagtimeaug" => Some(Transform::LeadLagTimeAug),
+            _ => None,
+        }
+    }
+}
+
+/// Materialise the time-augmented path `[len, dim+1]`.
+pub fn time_augment(path: &[f64], len: usize, dim: usize) -> Vec<f64> {
+    assert_eq!(path.len(), len * dim);
+    let mut out = Vec::with_capacity(len * (dim + 1));
+    let denom = (len.max(2) - 1) as f64;
+    for i in 0..len {
+        out.extend_from_slice(&path[i * dim..(i + 1) * dim]);
+        out.push(i as f64 / denom);
+    }
+    out
+}
+
+/// Materialise the lead-lag path `[2*len-1, 2*dim]`.
+///
+/// Point i has lead = x_{ceil(i/2)}, lag = x_{floor(i/2)}: even points are
+/// (x_k, x_k), odd points are (x_{k+1}, x_k).
+pub fn lead_lag(path: &[f64], len: usize, dim: usize) -> Vec<f64> {
+    assert_eq!(path.len(), len * dim);
+    assert!(len >= 1);
+    let olen = 2 * len - 1;
+    let mut out = Vec::with_capacity(olen * 2 * dim);
+    for i in 0..olen {
+        let lead = (i + 1) / 2;
+        let lag = i / 2;
+        out.extend_from_slice(&path[lead * dim..(lead + 1) * dim]);
+        out.extend_from_slice(&path[lag * dim..(lag + 1) * dim]);
+    }
+    out
+}
+
+/// Materialise an arbitrary [`Transform`].
+pub fn apply(transform: Transform, path: &[f64], len: usize, dim: usize) -> Vec<f64> {
+    match transform {
+        Transform::None => path.to_vec(),
+        Transform::TimeAug => time_augment(path, len, dim),
+        Transform::LeadLag => lead_lag(path, len, dim),
+        Transform::LeadLagTimeAug => {
+            let ll = lead_lag(path, len, dim);
+            time_augment(&ll, 2 * len - 1, 2 * dim)
+        }
+    }
+}
+
+/// Prepend a basepoint (the origin) to the path: `[len+1, dim]`. Standard
+/// trick to make the signature sensitive to the starting level of the path.
+pub fn basepoint(path: &[f64], len: usize, dim: usize) -> Vec<f64> {
+    assert_eq!(path.len(), len * dim);
+    let mut out = vec![0.0; (len + 1) * dim];
+    out[dim..].copy_from_slice(path);
+    out
+}
+
+/// Streaming increment source: yields the increments of the *transformed*
+/// path without materialising it. This is what the signature algorithms
+/// consume for on-the-fly transforms.
+pub struct IncrementStream<'a> {
+    path: &'a [f64],
+    len: usize,
+    dim: usize,
+    transform: Transform,
+    step: usize,
+}
+
+impl<'a> IncrementStream<'a> {
+    pub fn new(path: &'a [f64], len: usize, dim: usize, transform: Transform) -> Self {
+        assert_eq!(path.len(), len * dim);
+        assert!(len >= 2, "need at least two points");
+        IncrementStream {
+            path,
+            len,
+            dim,
+            transform,
+            step: 0,
+        }
+    }
+
+    /// Number of increments of the transformed path.
+    pub fn num_steps(&self) -> usize {
+        self.transform.out_len(self.len) - 1
+    }
+
+    /// Dimension of each increment.
+    pub fn out_dim(&self) -> usize {
+        self.transform.out_dim(self.dim)
+    }
+
+    /// Write the next increment into `z` (length `out_dim()`).
+    /// Returns false when exhausted.
+    pub fn next_into(&mut self, z: &mut [f64]) -> bool {
+        let s = self.step;
+        if s >= self.num_steps() {
+            return false;
+        }
+        let d = self.dim;
+        let p = self.path;
+        let diff = |k: usize, out: &mut [f64]| {
+            for j in 0..d {
+                out[j] = p[(k + 1) * d + j] - p[k * d + j];
+            }
+        };
+        match self.transform {
+            Transform::None => {
+                debug_assert_eq!(z.len(), d);
+                diff(s, z);
+            }
+            Transform::TimeAug => {
+                debug_assert_eq!(z.len(), d + 1);
+                diff(s, &mut z[..d]);
+                z[d] = 1.0 / (self.len - 1) as f64;
+            }
+            Transform::LeadLag => {
+                debug_assert_eq!(z.len(), 2 * d);
+                z.fill(0.0);
+                let k = s / 2;
+                if s % 2 == 0 {
+                    // lead moves: z = (dx_k, 0)
+                    diff(k, &mut z[..d]);
+                } else {
+                    // lag moves: z = (0, dx_k)
+                    diff(k, &mut z[d..]);
+                }
+            }
+            Transform::LeadLagTimeAug => {
+                debug_assert_eq!(z.len(), 2 * d + 1);
+                z.fill(0.0);
+                let k = s / 2;
+                if s % 2 == 0 {
+                    diff(k, &mut z[..d]);
+                } else {
+                    diff(k, &mut z[d..2 * d]);
+                }
+                z[2 * d] = 1.0 / (2 * (self.len - 1)) as f64;
+            }
+        }
+        self.step += 1;
+        true
+    }
+}
+
+/// Adjoint of the transformed-increment map: scatter a gradient with respect
+/// to the increments of the *transformed* path back onto the original path
+/// points. `grad_z` is `[num_steps, out_dim]` row-major; output is
+/// `[len, dim]`, accumulated into `grad_x`.
+pub fn increments_vjp(
+    transform: Transform,
+    grad_z: &[f64],
+    len: usize,
+    dim: usize,
+    grad_x: &mut [f64],
+) {
+    let steps = transform.out_len(len) - 1;
+    let od = transform.out_dim(dim);
+    assert_eq!(grad_z.len(), steps * od);
+    assert_eq!(grad_x.len(), len * dim);
+    // For every step s, the transformed increment is (x_{k+1} - x_k) routed
+    // into some block of coordinates; the adjoint adds +g to x_{k+1} and -g
+    // to x_k for the routed block (the time channel has zero dependence on x).
+    for s in 0..steps {
+        let g = &grad_z[s * od..(s + 1) * od];
+        match transform {
+            Transform::None | Transform::TimeAug => {
+                let k = s;
+                for j in 0..dim {
+                    grad_x[(k + 1) * dim + j] += g[j];
+                    grad_x[k * dim + j] -= g[j];
+                }
+            }
+            Transform::LeadLag | Transform::LeadLagTimeAug => {
+                let k = s / 2;
+                let block = if s % 2 == 0 { 0 } else { dim };
+                for j in 0..dim {
+                    grad_x[(k + 1) * dim + j] += g[block + j];
+                    grad_x[k * dim + j] -= g[block + j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn time_augment_shapes_and_values() {
+        let p = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 points, d=2
+        let t = time_augment(&p, 3, 2);
+        assert_eq!(t.len(), 9);
+        assert_eq!(&t[0..3], &[1.0, 2.0, 0.0]);
+        assert_eq!(&t[3..6], &[3.0, 4.0, 0.5]);
+        assert_eq!(&t[6..9], &[5.0, 6.0, 1.0]);
+    }
+
+    #[test]
+    fn lead_lag_matches_definition() {
+        let p = [1.0, 2.0, 3.0]; // 3 points, d=1
+        let ll = lead_lag(&p, 3, 1);
+        // points: (1,1) (2,1) (2,2) (3,2) (3,3)
+        assert_eq!(ll, vec![1.0, 1.0, 2.0, 1.0, 2.0, 2.0, 3.0, 2.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn stream_matches_materialised_increments() {
+        check("on-the-fly increments == materialised", 40, |g| {
+            let len = g.usize_in(2, 12);
+            let dim = g.usize_in(1, 4);
+            let path = g.path(len, dim, 1.0);
+            for tr in [
+                Transform::None,
+                Transform::TimeAug,
+                Transform::LeadLag,
+                Transform::LeadLagTimeAug,
+            ] {
+                let mat = apply(tr, &path, len, dim);
+                let olen = tr.out_len(len);
+                let od = tr.out_dim(dim);
+                let mut stream = IncrementStream::new(&path, len, dim, tr);
+                let mut z = vec![0.0; od];
+                for s in 0..olen - 1 {
+                    assert!(stream.next_into(&mut z));
+                    for j in 0..od {
+                        let want = mat[(s + 1) * od + j] - mat[s * od + j];
+                        assert!(
+                            (z[j] - want).abs() < 1e-12,
+                            "tr={tr:?} s={s} j={j}: {} vs {want}",
+                            z[j]
+                        );
+                    }
+                }
+                assert!(!stream.next_into(&mut z));
+            }
+        });
+    }
+
+    #[test]
+    fn basepoint_prepends_origin() {
+        let p = [1.0, 2.0];
+        let b = basepoint(&p, 1, 2);
+        assert_eq!(b, vec![0.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn increments_vjp_matches_finite_difference() {
+        check("transform increment vjp", 20, |g| {
+            let len = g.usize_in(2, 6);
+            let dim = g.usize_in(1, 3);
+            let path = g.path(len, dim, 1.0);
+            for tr in [Transform::None, Transform::TimeAug, Transform::LeadLag] {
+                let steps = tr.out_len(len) - 1;
+                let od = tr.out_dim(dim);
+                // random cotangent on increments
+                let gz = g.normal_vec(steps * od);
+                let mut gx = vec![0.0; len * dim];
+                increments_vjp(tr, &gz, len, dim, &mut gx);
+                // F(x) = sum_s <gz_s, z_s(x)>; check dF/dx via finite diff
+                let f = |p: &[f64]| -> f64 {
+                    let mut stream = IncrementStream::new(p, len, dim, tr);
+                    let mut z = vec![0.0; od];
+                    let mut acc = 0.0;
+                    let mut s = 0;
+                    while stream.next_into(&mut z) {
+                        for j in 0..od {
+                            acc += gz[s * od + j] * z[j];
+                        }
+                        s += 1;
+                    }
+                    acc
+                };
+                let eps = 1e-6;
+                for i in 0..len * dim {
+                    let mut pp = path.to_vec();
+                    pp[i] += eps;
+                    let mut pm = path.to_vec();
+                    pm[i] -= eps;
+                    let fd = (f(&pp) - f(&pm)) / (2.0 * eps);
+                    assert!(
+                        (fd - gx[i]).abs() < 1e-5,
+                        "tr={tr:?} i={i}: fd={fd} vjp={}",
+                        gx[i]
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal dense linear algebra: a cache-blocked GEMM used to precompute the
+//! increment inner-product matrix Δ = dx · dyᵀ for signature kernels
+//! (pySigLib realises this with torch.bmm; here it is a hand-rolled blocked
+//! kernel), plus small helpers for the examples.
+
+/// C[m,n] = A[m,k] · B[k,n]ᵀ-free row-major GEMM: C = A * B.
+/// Plain ijk with k-blocking and an unrolled inner loop; enough to keep the
+/// Δ precompute off the profile at bench sizes.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let kend = (k0 + BK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for p in k0..kend {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                // Autovectorises: contiguous fused multiply-add over n.
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// C = A · Bᵀ with A[m,k], B[n,k] row-major (the Δ = dx·dyᵀ case).
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            crow[j] = acc;
+        }
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Relative L2 error ‖a-b‖/(‖b‖+eps).
+pub fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    num.sqrt() / (den.sqrt() + 1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut r = Rng::new(5);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 128, 32)] {
+            let mut a = vec![0.0; m * k];
+            let mut b = vec![0.0; k * n];
+            r.fill_normal(&mut a);
+            r.fill_normal(&mut b);
+            let mut c = vec![0.0; m * n];
+            gemm(m, k, n, &a, &b, &mut c);
+            let want = naive_gemm(m, k, n, &a, &b);
+            assert!(max_abs_diff(&c, &want) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_transposed_gemm() {
+        let mut r = Rng::new(6);
+        let (m, k, n) = (7, 5, 11);
+        let mut a = vec![0.0; m * k];
+        let mut bt = vec![0.0; n * k];
+        r.fill_normal(&mut a);
+        r.fill_normal(&mut bt);
+        // b = btᵀ
+        let mut b = vec![0.0; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                b[p * n + j] = bt[j * k + p];
+            }
+        }
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm_nt(m, k, n, &a, &bt, &mut c1);
+        gemm(m, k, n, &a, &b, &mut c2);
+        assert!(max_abs_diff(&c1, &c2) < 1e-10);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared substrates: RNG, thread pool, timing, small linear algebra.
+//!
+//! The build environment is fully offline, so the usual crates (`rand`,
+//! `rayon`, `criterion`, `proptest`) are unavailable; each substrate here is
+//! a from-scratch implementation of the minimal functionality this library
+//! needs, with the same observable semantics.
+
+pub mod rng;
+pub mod pool;
+pub mod timing;
+pub mod linalg;
+pub mod prop;
+
+pub use pool::{parallel_for, ThreadPool};
+pub use rng::Rng;
+pub use timing::{min_time_over, Stopwatch};

@@ -1,0 +1,204 @@
+//! A work-stealing-free, chunked data-parallel executor built on
+//! `std::thread::scope` — the stand-in for `rayon` in this offline build.
+//!
+//! `parallel_for` splits an index range over worker threads with an atomic
+//! chunk cursor, so uneven per-item cost (e.g. signature kernels over paths
+//! of different lengths) still balances.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: respects `PYSIGLIB_THREADS`, else the
+/// machine's available parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("PYSIGLIB_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `body(i)` for every `i in 0..n`, distributing indices over threads in
+/// dynamically-claimed chunks. `body` must be `Sync` (it is shared by
+/// reference across workers) and is responsible for disjoint writes — use
+/// [`parallel_for_mut`] when each index owns a mutable output slice.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
+    parallel_for_chunked(n, 1, &body);
+}
+
+/// Like [`parallel_for`], but lets the caller pick a chunk granularity to
+/// amortise the atomic fetch for very cheap bodies.
+pub fn parallel_for_chunked<F: Fn(usize) + Sync>(n: usize, chunk: usize, body: &F) {
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let chunk = chunk.max(1);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Split `out` into `n` equal consecutive chunks of length `stride` and run
+/// `body(i, chunk_i)` in parallel — the common "one output row per item"
+/// pattern for batched signatures/kernels.
+pub fn parallel_for_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    out: &mut [T],
+    stride: usize,
+    body: F,
+) {
+    assert!(stride > 0 && out.len() % stride == 0);
+    let n = out.len() / stride;
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, c) in out.chunks_mut(stride).enumerate() {
+            body(i, c);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    // Hand each worker the base pointer; chunks are disjoint by construction.
+    let base = out.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: chunk i is out[i*stride .. (i+1)*stride], disjoint
+                // across i, and `out` outlives the scope.
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut((base as *mut T).add(i * stride), stride)
+                };
+                body(i, chunk);
+            });
+        }
+    });
+}
+
+/// A persistent pool of workers for the serving path, where per-request
+/// thread spawning would dominate. Jobs are boxed closures; the pool drains
+/// on drop.
+pub struct ThreadPool {
+    tx: Option<std::sync::mpsc::Sender<Box<dyn FnOnce() + Send>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = std::sync::mpsc::channel::<Box<dyn FnOnce() + Send>>();
+        let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rx = rx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => job(),
+                    Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("workers gone");
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_mut_disjoint_chunks() {
+        let mut out = vec![0.0f64; 64 * 17];
+        parallel_for_mut(&mut out, 17, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v = i as f64;
+            }
+        });
+        for (i, c) in out.chunks(17).enumerate() {
+            assert!(c.iter().all(|&v| v == i as f64));
+        }
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = std::sync::Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = counter.clone();
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop waits for drain
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        parallel_for(0, |_| panic!("must not run"));
+    }
+}

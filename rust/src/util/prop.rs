@@ -1,0 +1,131 @@
+//! A miniature property-based testing harness (the offline stand-in for
+//! `proptest`): run a property over many randomly generated cases, report the
+//! seed and case on failure so it can be replayed deterministically.
+//!
+//! Usage:
+//! ```
+//! use pysiglib::util::prop::{check, Gen};
+//! check("addition commutes", 200, |g| {
+//!     let a = g.f64_in(-10.0, 10.0);
+//!     let b = g.f64_in(-10.0, 10.0);
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to properties. Wraps the RNG with convenience
+/// samplers for the domain (path shapes, truncation levels, dyadic orders).
+pub struct Gen {
+    rng: Rng,
+    /// Human-readable trace of everything drawn, printed on failure.
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            trace: Vec::new(),
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range(lo, hi);
+        self.trace.push(format!("usize_in({lo},{hi}) = {v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform_in(lo, hi);
+        self.trace.push(format!("f64_in({lo},{hi}) = {v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.trace.push(format!("bool = {v}"));
+        v
+    }
+
+    /// Standard-normal vector of length n.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v);
+        self.trace.push(format!("normal_vec(len={n})"));
+        v
+    }
+
+    /// A random path: `len` points in `dim` dims, Brownian-like so increments
+    /// are O(scale) — keeps truncated signatures in a numerically sane range.
+    pub fn path(&mut self, len: usize, dim: usize, scale: f64) -> Vec<f64> {
+        let p = self.rng.brownian_path(len, dim, scale);
+        self.trace.push(format!("path(len={len},dim={dim})"));
+        p
+    }
+
+    /// Access the raw RNG for anything else.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics (failing the enclosing
+/// `#[test]`) with the seed and the generator trace of the first failing
+/// case. Honours `PYSIGLIB_PROP_SEED` to replay one specific case.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    if let Ok(s) = std::env::var("PYSIGLIB_PROP_SEED") {
+        let seed: u64 = s.parse().expect("PYSIGLIB_PROP_SEED must be u64");
+        let mut g = Gen::new(seed);
+        prop(&mut g);
+        return;
+    }
+    let base = 0xD1CE_5EED_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+            g
+        });
+        if let Err(err) = result {
+            // Re-run to recover the trace (prop may have panicked midway).
+            let mut g = Gen::new(seed);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}).\n\
+                 replay with PYSIGLIB_PROP_SEED={seed}\n\
+                 draws: {:#?}\npanic: {msg}",
+                g.trace
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_g| panic!("nope"));
+        });
+        let err = r.expect_err("should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("PYSIGLIB_PROP_SEED="), "got: {msg}");
+    }
+}

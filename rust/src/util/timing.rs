@@ -1,0 +1,83 @@
+//! Timing helpers shared by the bench harness and the coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// The paper reports the *minimum* runtime over 50 runs; this mirrors that
+/// protocol with a configurable run count and a warmup run.
+pub fn min_time_over<F: FnMut()>(runs: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..runs {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Mean/min/max of repeated timings (used for coordinator metrics snapshots).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TimeStats {
+    pub n: usize,
+    pub total: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl TimeStats {
+    pub fn record(&mut self, secs: f64) {
+        if self.n == 0 {
+            self.min = secs;
+            self.max = secs;
+        } else {
+            self.min = self.min.min(secs);
+            self.max = self.max.max(secs);
+        }
+        self.n += 1;
+        self.total += secs;
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.total / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_time_is_positive_and_small_for_noop() {
+        let t = min_time_over(3, || {});
+        assert!(t >= 0.0 && t < 0.1);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = TimeStats::default();
+        s.record(1.0);
+        s.record(3.0);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,55 @@
+//! CLI smoke tests through the library entry point (no subprocess spawn).
+
+#[test]
+fn help_exits_zero() {
+    assert_eq!(pysiglib::cli::cli_main(&["help".into()]), 0);
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    assert_ne!(pysiglib::cli::cli_main(&["frobnicate".into()]), 0);
+}
+
+#[test]
+fn sig_command_runs() {
+    let args: Vec<String> = ["sig", "--batch", "4", "--len", "16", "--dim", "2", "--depth", "3"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_eq!(pysiglib::cli::cli_main(&args), 0);
+}
+
+#[test]
+fn kernel_command_runs_with_blocked_solver() {
+    let args: Vec<String> = [
+        "kernel", "--batch", "4", "--len", "24", "--dim", "2", "--solver", "blocked",
+        "--transform", "leadlag",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(pysiglib::cli::cli_main(&args), 0);
+}
+
+#[test]
+fn grad_command_runs() {
+    let args: Vec<String> = ["grad", "--batch", "2", "--len", "12", "--dim", "2"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_eq!(pysiglib::cli::cli_main(&args), 0);
+}
+
+#[test]
+fn logsig_command_runs() {
+    let args: Vec<String> = ["logsig", "--batch", "2", "--len", "10", "--dim", "2", "--depth", "3"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_eq!(pysiglib::cli::cli_main(&args), 0);
+}
+
+#[test]
+fn selfcheck_passes() {
+    assert_eq!(pysiglib::cli::cli_main(&["selfcheck".into()]), 0);
+}

@@ -1,0 +1,139 @@
+//! PJRT ↔ native parity: every AOT artifact must reproduce the native Rust
+//! computation to f32 accuracy. Tests skip (pass trivially with a notice)
+//! when `artifacts/` has not been built — run `make artifacts` first.
+
+use pysiglib::kernel::KernelOptions;
+use pysiglib::runtime::Runtime;
+use pysiglib::sig::SigOptions;
+use pysiglib::transforms::Transform;
+use pysiglib::util::linalg::rel_err;
+use pysiglib::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(_) => {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+fn to_f64(v: &[f32]) -> Vec<f64> {
+    v.iter().map(|&x| x as f64).collect()
+}
+
+#[test]
+fn sigkernel_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (b, l, d) = (8, 16, 3);
+    let mut rng = Rng::new(301);
+    let x = rng.brownian_batch(b, l, d, 0.3);
+    let y = rng.brownian_batch(b, l, d, 0.3);
+    let native = pysiglib::kernel::batch_kernel(&x, &y, b, l, l, d, &KernelOptions::default());
+    let outs = rt
+        .execute_f32("sigkernel_b8_l16_d3", &[to_f32(&x), to_f32(&y)])
+        .unwrap();
+    let got = to_f64(&outs[0]);
+    let e = rel_err(&got, &native);
+    assert!(e < 1e-4, "rel err {e}");
+}
+
+#[test]
+fn sigkernel_vjp_artifact_matches_native_gradients() {
+    let Some(rt) = runtime() else { return };
+    let (b, l, d) = (4, 16, 3);
+    let mut rng = Rng::new(302);
+    let x = rng.brownian_batch(b, l, d, 0.3);
+    let y = rng.brownian_batch(b, l, d, 0.3);
+    let outs = rt
+        .execute_f32("sigkernel_vjp_b4_l16_d3", &[to_f32(&x), to_f32(&y)])
+        .unwrap();
+    assert_eq!(outs.len(), 3, "k, gx, gy");
+    let gk = vec![1.0; b];
+    let (gx, gy) = pysiglib::kernel::batch_kernel_vjp(
+        &x,
+        &y,
+        &gk,
+        b,
+        l,
+        l,
+        d,
+        &KernelOptions::default(),
+    );
+    let e1 = rel_err(&to_f64(&outs[1]), &gx);
+    let e2 = rel_err(&to_f64(&outs[2]), &gy);
+    assert!(e1 < 1e-3 && e2 < 1e-3, "grad rel errs {e1} {e2}");
+}
+
+#[test]
+fn signature_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (b, l, d, n) = (8, 32, 2, 4);
+    let mut rng = Rng::new(303);
+    let paths = rng.brownian_batch(b, l, d, 0.3);
+    let native = pysiglib::sig::batch_signature(&paths, b, l, d, &SigOptions::new(n));
+    let outs = rt
+        .execute_f32("signature_b8_l32_d2_n4", &[to_f32(&paths)])
+        .unwrap();
+    let e = rel_err(&to_f64(&outs[0]), &native);
+    assert!(e < 1e-4, "rel err {e}");
+}
+
+#[test]
+fn leadlag_signature_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (b, l, d, n) = (8, 16, 2, 3);
+    let mut rng = Rng::new(304);
+    let paths = rng.brownian_batch(b, l, d, 0.3);
+    let native = pysiglib::sig::batch_signature(
+        &paths,
+        b,
+        l,
+        d,
+        &SigOptions::new(n).transform(Transform::LeadLag),
+    );
+    let outs = rt
+        .execute_f32("signature_leadlag_b8_l16_d2_n3", &[to_f32(&paths)])
+        .unwrap();
+    let e = rel_err(&to_f64(&outs[0]), &native);
+    assert!(e < 1e-4, "rel err {e}");
+}
+
+#[test]
+fn mmd_grad_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (b, l, d) = (4, 12, 2);
+    let mut rng = Rng::new(305);
+    let x = rng.brownian_batch(b, l, d, 0.3);
+    let y = rng.brownian_batch(b, l, d, 0.3);
+    let outs = rt
+        .execute_f32("mmd2_grad_b4_l12_d2", &[to_f32(&x), to_f32(&y)])
+        .unwrap();
+    let (val, grad) =
+        pysiglib::kernel::mmd2_with_grad(&x, &y, b, b, l, l, d, &KernelOptions::default());
+    let got_val = outs[0][0] as f64;
+    assert!(
+        (got_val - val).abs() < 1e-4 * (1.0 + val.abs()),
+        "mmd {got_val} vs {val}"
+    );
+    let e = rel_err(&to_f64(&outs[1]), &grad);
+    assert!(e < 1e-3, "grad rel err {e}");
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.execute_f32("nope", &[]).is_err());
+}
+
+#[test]
+fn wrong_input_shape_is_rejected_before_dispatch() {
+    let Some(rt) = runtime() else { return };
+    let r = rt.execute_f32("sigkernel_b8_l16_d3", &[vec![0.0; 3], vec![0.0; 3]]);
+    assert!(r.is_err());
+}

@@ -1,0 +1,163 @@
+//! End-to-end serving tests: TCP server + dynamic batcher + router, driven
+//! by real clients over loopback, checked against direct native computation.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pysiglib::coordinator::{serve, Batcher, BatcherConfig, Client, Op, Router};
+use pysiglib::transforms::Transform;
+use pysiglib::util::rng::Rng;
+
+fn start_server(max_batch: usize, max_wait_us: u64) -> (pysiglib::coordinator::server::ServerHandle, std::net::SocketAddr, Arc<Batcher>) {
+    let router = Arc::new(Router::native_only());
+    let batcher = Arc::new(Batcher::start(
+        router,
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us),
+        },
+    ));
+    let handle = serve("127.0.0.1:0", batcher.clone()).expect("bind");
+    let addr = handle.addr;
+    (handle, addr, batcher)
+}
+
+#[test]
+fn signature_request_roundtrip_matches_native() {
+    let (_h, addr, _b) = start_server(8, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(100);
+    let path = rng.brownian_path(12, 3, 0.5);
+    let resp = client.signature(&path, 12, 3, 4).unwrap().unwrap();
+    let want = pysiglib::sig::sig(&path, 12, 3, 4);
+    assert_eq!(resp.len(), want.len());
+    let err = pysiglib::util::linalg::max_abs_diff(&resp, &want);
+    assert!(err < 1e-12, "served vs native: {err}");
+}
+
+#[test]
+fn kernel_request_roundtrip_matches_native() {
+    let (_h, addr, _b) = start_server(8, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(101);
+    let x = rng.brownian_path(10, 2, 0.5);
+    let y = rng.brownian_path(10, 2, 0.5);
+    let k = client.sig_kernel(&x, &y, 10, 2).unwrap().unwrap();
+    let want = pysiglib::kernel::sig_kernel(
+        &x,
+        &y,
+        10,
+        10,
+        2,
+        &pysiglib::kernel::KernelOptions::default(),
+    );
+    assert!((k - want).abs() < 1e-12, "{k} vs {want}");
+}
+
+#[test]
+fn concurrent_clients_all_served_correctly() {
+    let (_h, addr, batcher) = start_server(16, 2000);
+    let n_clients = 8;
+    let per_client = 12;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut rng = Rng::new(200 + c as u64);
+                for _ in 0..per_client {
+                    let path = rng.brownian_path(16, 2, 0.5);
+                    let resp = client.signature(&path, 16, 2, 3).unwrap().unwrap();
+                    let want = pysiglib::sig::sig(&path, 16, 2, 3);
+                    let err = pysiglib::util::linalg::max_abs_diff(&resp, &want);
+                    assert!(err < 1e-12);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = batcher
+        .metrics
+        .responses_total
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(total, (n_clients * per_client) as u64);
+    // With identical shapes and concurrent clients, batching must engage.
+    assert!(
+        batcher.metrics.mean_batch_size() >= 1.0,
+        "mean batch {}",
+        batcher.metrics.mean_batch_size()
+    );
+}
+
+#[test]
+fn transform_and_grad_ops_over_the_wire() {
+    let (_h, addr, _b) = start_server(4, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(102);
+    let x = rng.brownian_path(8, 2, 0.5);
+    // Lead-lag signature.
+    let resp = client
+        .call(
+            Op::Signature {
+                depth: 3,
+                transform: pysiglib::coordinator::transform_to_u8(Transform::LeadLag),
+            },
+            8,
+            2,
+            x.clone(),
+        )
+        .unwrap()
+        .unwrap();
+    let want = pysiglib::sig::signature(
+        &x,
+        8,
+        2,
+        3,
+        Transform::LeadLag,
+        pysiglib::sig::SigMethod::Horner,
+    );
+    assert!(pysiglib::util::linalg::max_abs_diff(&resp, &want) < 1e-12);
+    // Kernel gradient returns grad_x ++ grad_y.
+    let y = rng.brownian_path(8, 2, 0.5);
+    let mut values = x.clone();
+    values.extend_from_slice(&y);
+    let resp = client
+        .call(Op::SigKernelGrad { lam1: 0, lam2: 0 }, 8, 2, values)
+        .unwrap()
+        .unwrap();
+    assert_eq!(resp.len(), 2 * 8 * 2);
+    let (gx, gy) = pysiglib::kernel::sig_kernel_vjp(
+        &x,
+        &y,
+        8,
+        8,
+        2,
+        &pysiglib::kernel::KernelOptions::default(),
+        1.0,
+    );
+    assert!(pysiglib::util::linalg::max_abs_diff(&resp[..16], &gx) < 1e-12);
+    assert!(pysiglib::util::linalg::max_abs_diff(&resp[16..], &gy) < 1e-12);
+}
+
+#[test]
+fn malformed_payload_gets_error_response() {
+    let (_h, addr, _b) = start_server(4, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let r = client
+        .call(
+            Op::Signature {
+                depth: 3,
+                transform: 0,
+            },
+            10,
+            2,
+            vec![1.0; 7], // wrong size
+        )
+        .unwrap();
+    assert!(r.is_err());
+    // The connection stays usable afterwards.
+    let mut rng = Rng::new(103);
+    let path = rng.brownian_path(10, 2, 0.5);
+    assert!(client.signature(&path, 10, 2, 2).unwrap().is_ok());
+}

@@ -1,0 +1,167 @@
+//! Cross-module property tests: invariants that tie signatures, kernels,
+//! transforms and gradients together.
+
+use pysiglib::kernel::{mmd2, mmd2_with_grad, sig_kernel, KernelOptions};
+use pysiglib::sig::{sig, sig_length, SigOptions};
+use pysiglib::tensor::inner_product;
+use pysiglib::transforms::Transform;
+use pysiglib::util::prop::check;
+use pysiglib::util::rng::Rng;
+
+/// The PDE kernel and the explicit truncated signature inner product agree
+/// once the truncation is deep enough and the PDE grid fine enough.
+#[test]
+fn kernel_equals_signature_inner_product_in_the_limit() {
+    check("kernel == <S,S> limit", 8, |g| {
+        let lx = g.usize_in(2, 4);
+        let ly = g.usize_in(2, 4);
+        let d = g.usize_in(1, 3);
+        let x = g.path(lx, d, 0.2);
+        let y = g.path(ly, d, 0.2);
+        let k = sig_kernel(&x, &y, lx, ly, d, &KernelOptions::default().dyadic(6, 6));
+        let sx = sig(&x, lx, d, 12);
+        let sy = sig(&y, ly, d, 12);
+        let ip = inner_product(&sx, &sy);
+        assert!(
+            (k - ip).abs() < 3e-3 * ip.abs().max(1.0),
+            "kernel {k} vs inner product {ip}"
+        );
+    });
+}
+
+/// Time-augmenting both paths changes the kernel exactly as materialising
+/// the transform would (fused == materialised through the whole kernel).
+#[test]
+fn kernel_transform_consistency_via_signatures() {
+    check("transformed kernel == transformed sig inner product", 5, |g| {
+        let l = g.usize_in(2, 4);
+        let d = g.usize_in(1, 2);
+        let x = g.path(l, d, 0.15);
+        let y = g.path(l, d, 0.15);
+        let opts = KernelOptions::default()
+            .dyadic(6, 6)
+            .transform(Transform::TimeAug);
+        let k = sig_kernel(&x, &y, l, l, d, &opts);
+        let xm = pysiglib::transforms::time_augment(&x, l, d);
+        let ym = pysiglib::transforms::time_augment(&y, l, d);
+        let sx = sig(&xm, l, d + 1, 12);
+        let sy = sig(&ym, l, d + 1, 12);
+        let ip = inner_product(&sx, &sy);
+        assert!(
+            (k - ip).abs() < 5e-3 * ip.abs().max(1.0),
+            "kernel {k} vs ip {ip}"
+        );
+    });
+}
+
+/// One gradient-descent step on MMD² must reduce the loss (for a small
+/// enough step) — the end-to-end training-signal sanity check.
+#[test]
+fn mmd_gradient_descends() {
+    let mut rng = Rng::new(400);
+    let (bx, by, l, d) = (4, 4, 6, 2);
+    let mut x = rng.brownian_batch(bx, l, d, 0.8);
+    let y = rng.brownian_batch(by, l, d, 0.3);
+    let opts = KernelOptions::default();
+    let (before, grad) = mmd2_with_grad(&x, &y, bx, by, l, l, d, &opts);
+    let gnorm = pysiglib::util::linalg::norm2(&grad);
+    assert!(gnorm > 0.0);
+    let step = 0.01 / gnorm.max(1.0);
+    for (xi, gi) in x.iter_mut().zip(grad.iter()) {
+        *xi -= step * gi;
+    }
+    let after = mmd2(&x, &y, bx, by, l, l, d, &opts);
+    assert!(
+        after < before,
+        "MMD did not decrease: {before} -> {after}"
+    );
+}
+
+/// Batched signatures of lead-lag paths have the dimension the transform
+/// promises, and level-2 of the lead-lag signature encodes quadratic
+/// variation on the anti-diagonal blocks (nonzero for rough paths).
+#[test]
+fn leadlag_signature_quadratic_variation_block() {
+    let mut rng = Rng::new(401);
+    let (l, d) = (64, 1);
+    let path = rng.brownian_path(l, d, 0.5);
+    let s = pysiglib::sig::signature(
+        &path,
+        l,
+        d,
+        2,
+        Transform::LeadLag,
+        pysiglib::sig::SigMethod::Horner,
+    );
+    assert_eq!(s.len(), sig_length(2, 2));
+    // Lead-lag level 2: S^{(2)}[lead,lag] - S^{(2)}[lag,lead] ≈ QV (Lévy
+    // area between lead and lag equals half the quadratic variation; the
+    // antisymmetric part must be nonzero for a Brownian-like path).
+    let o2 = 1 + 2; // offsets: level0 (1) + level1 (2)
+    let area = s[o2 + 1] - s[o2 + 2]; // indices (0,1) and (1,0)
+    let qv: f64 = (0..l - 1)
+        .map(|i| (path[i + 1] - path[i]).powi(2))
+        .sum();
+    assert!(
+        (area.abs() - qv).abs() < 0.5 * qv,
+        "lead-lag area {area} vs QV {qv}"
+    );
+}
+
+/// Serving options equivalence: serial and parallel batch APIs with every
+/// transform produce identical results.
+#[test]
+fn batch_parallel_serial_equivalence_all_transforms() {
+    check("batch parallel == serial (all transforms)", 6, |g| {
+        let b = g.usize_in(1, 6);
+        let l = g.usize_in(2, 10);
+        let d = g.usize_in(1, 3);
+        let mut paths = Vec::new();
+        for _ in 0..b {
+            paths.extend(g.path(l, d, 0.4));
+        }
+        for tr in [Transform::None, Transform::TimeAug, Transform::LeadLag] {
+            let par = pysiglib::sig::batch_signature(
+                &paths,
+                b,
+                l,
+                d,
+                &SigOptions::new(3).transform(tr),
+            );
+            let ser = pysiglib::sig::batch_signature(
+                &paths,
+                b,
+                l,
+                d,
+                &SigOptions::new(3).transform(tr).serial(),
+            );
+            assert_eq!(par, ser);
+        }
+    });
+}
+
+/// Scaling the path scales level k of the signature by λ^k (homogeneity).
+#[test]
+fn signature_homogeneity() {
+    check("signature homogeneity", 10, |g| {
+        let l = g.usize_in(2, 8);
+        let d = g.usize_in(1, 3);
+        let depth = g.usize_in(1, 4);
+        let lam = g.f64_in(0.3, 2.0);
+        let path = g.path(l, d, 0.5);
+        let scaled: Vec<f64> = path.iter().map(|v| v * lam).collect();
+        let s1 = sig(&path, l, d, depth);
+        let s2 = sig(&scaled, l, d, depth);
+        let layout = pysiglib::tensor::LevelLayout::new(d, depth);
+        for k in 0..=depth {
+            let (a, b) = layout.level_range(k);
+            let f = lam.powi(k as i32);
+            for i in a..b {
+                assert!(
+                    (s2[i] - f * s1[i]).abs() < 1e-9 * (1.0 + (f * s1[i]).abs()),
+                    "level {k}"
+                );
+            }
+        }
+    });
+}
