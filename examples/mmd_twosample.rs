@@ -10,9 +10,10 @@
 //!
 //!     cargo run --release --example mmd_twosample
 
-use pysiglib::kernel::{gram, KernelOptions};
+use pysiglib::kernel::{try_gram, KernelOptions};
 use pysiglib::transforms::Transform;
 use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
 
 /// MMD² (unbiased) from precomputed joint Gram of the pooled sample.
 fn mmd2_from_gram(k: &[f64], n: usize, m: usize, perm: &[usize]) -> f64 {
@@ -79,12 +80,15 @@ fn pooled_gram(
     dim: usize,
     opts: &KernelOptions,
 ) -> Vec<f64> {
+    // Typed batch view over the pooled sample (uniform here, but the same
+    // call serves ragged pools — see PathBatch::ragged).
     let tot = paths.len();
     let mut flat = Vec::with_capacity(tot * len * dim);
     for p in paths {
         flat.extend_from_slice(p);
     }
-    gram(&flat, &flat, tot, tot, len, len, dim, opts)
+    let batch = PathBatch::uniform(&flat, tot, len, dim).expect("pooled sample shape");
+    try_gram(&batch, &batch, opts).expect("pooled Gram")
 }
 
 fn main() {

@@ -1,11 +1,15 @@
-//! Quickstart: the five core operations on a couple of small paths.
+//! Quickstart: the core operations on a couple of small paths, plus the
+//! typed `Path`/`PathBatch` API with a ragged (variable-length) batch.
 //!
 //!     cargo run --release --example quickstart
 
-use pysiglib::kernel::{sig_kernel, sig_kernel_vjp, KernelOptions};
-use pysiglib::sig::{log_signature, sig, sig_length, signature_vjp};
+use pysiglib::kernel::{
+    sig_kernel, sig_kernel_vjp, try_gram, try_mmd2, try_sig_kernel, KernelOptions,
+};
+use pysiglib::sig::{log_signature, sig, sig_length, signature_vjp, try_batch_signature, SigOptions};
 use pysiglib::transforms::Transform;
 use pysiglib::util::rng::Rng;
+use pysiglib::{Path, PathBatch};
 
 fn main() {
     // Two Brownian-like paths in R^3.
@@ -58,5 +62,41 @@ fn main() {
         "lead-lag signature (fused, never materialised): {} coefficients",
         sll.len()
     );
+
+    // 6. The typed, fallible API: shape checks happen at construction, and
+    //    every entry point returns Result instead of panicking.
+    let xp = Path::new(&x, len, dim).expect("valid shape");
+    let yp = Path::new(&y, len, dim).expect("valid shape");
+    let k2 = try_sig_kernel(xp, yp, &opts).expect("same dims");
+    assert_eq!(k2, k);
+    println!("typed API: try_sig_kernel(Path, Path) == sig_kernel(slices)");
+
+    // 7. Ragged batches: variable-length paths, no padding. One flat buffer
+    //    plus per-path lengths; Gram and MMD pair every length with every
+    //    other.
+    let lengths = [32usize, 7, 64, 18];
+    let mut flat = Vec::new();
+    for &l in &lengths {
+        flat.extend(rng.brownian_path(l, dim, 0.3));
+    }
+    let batch = PathBatch::ragged(&flat, &lengths, dim).expect("valid ragged batch");
+    let sigs = try_batch_signature(&batch, &SigOptions::new(depth)).expect("signatures");
+    println!(
+        "ragged batch: {} paths (lengths {:?}) → {} signature rows of {}",
+        batch.batch(),
+        lengths,
+        sigs.len() / sig_length(dim, depth),
+        sig_length(dim, depth)
+    );
+    let g = try_gram(&batch, &batch, &opts).expect("gram");
+    println!(
+        "ragged Gram: {}×{} kernel matrix, k(x0,x0) = {:.4}",
+        batch.batch(),
+        batch.batch(),
+        g[0]
+    );
+    let uniform = PathBatch::uniform(&x, 1, len, dim).expect("valid");
+    let m = try_mmd2(&batch, &uniform, &opts).expect("mmd");
+    println!("ragged MMD²(batch, {{x}}) = {m:.6}");
     println!("quickstart OK");
 }

@@ -22,13 +22,26 @@ use crate::transforms::Transform;
 
 /// Errors mirroring the comparator packages' failure modes (the dashes in
 /// the paper's Table 2).
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum BaselineError {
-    #[error("PDE grid of {0} nodes exceeds the full-grid memory budget")]
     GridTooLarge(usize),
-    #[error("anti-diagonal of {0} entries exceeds the 1024-thread GPU block")]
     ThreadLimit(usize),
 }
+
+impl std::fmt::Display for BaselineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BaselineError::GridTooLarge(n) => {
+                write!(f, "PDE grid of {n} nodes exceeds the full-grid memory budget")
+            }
+            BaselineError::ThreadLimit(n) => {
+                write!(f, "anti-diagonal of {n} entries exceeds the 1024-thread GPU block")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BaselineError {}
 
 /// esig-style truncated signature: mathematically identical to
 /// `sig::signature`, but with the naive memory strategy — a full out-of-place

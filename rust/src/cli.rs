@@ -20,10 +20,13 @@ COMMANDS:
   sig        compute a batch of truncated signatures on synthetic paths
              --batch N --len L --dim D --depth N --transform none|time|leadlag
              --method horner|direct --serial
+             --ragged   variable-length paths in [L/2, L] (typed PathBatch
+                        API, no padding)
   logsig     compute log-signatures       (same flags as sig)
   kernel     compute a batch of signature kernels
              --batch N --len L --dim D --dyadic λ --dyadic2 λ2
              --solver row|blocked --transform ...
+             --ragged   variable-length (x, y) pairs in [L/2, L]
   grad       exact signature-kernel gradients for a batch of pairs
   serve      run the serving coordinator
              --bind ADDR --max-batch N --max-wait-us U --pjrt --config FILE
@@ -103,7 +106,6 @@ fn cmd_sig(log: bool, flags: &HashMap<String, String>) -> i32 {
         _ => SigMethod::Horner,
     };
     let mut rng = Rng::new(42);
-    let paths = rng.brownian_batch(batch, len, dim, 0.3);
     let opts = {
         let mut o = SigOptions::new(depth).transform(tr).method(method);
         if flags.contains_key("serial") {
@@ -111,6 +113,10 @@ fn cmd_sig(log: bool, flags: &HashMap<String, String>) -> i32 {
         }
         o
     };
+    if flags.contains_key("ragged") {
+        return cmd_sig_ragged(log, batch, len, dim, &opts, &mut rng);
+    }
+    let paths = rng.brownian_batch(batch, len, dim, 0.3);
     let t = std::time::Instant::now();
     let (rows, width, checksum);
     if log {
@@ -143,6 +149,60 @@ fn cmd_sig(log: bool, flags: &HashMap<String, String>) -> i32 {
     0
 }
 
+/// Ragged variant of `sig`/`logsig`: variable-length paths through the typed
+/// `PathBatch` API — no padding, one flat buffer plus an offset table.
+fn cmd_sig_ragged(
+    log: bool,
+    batch: usize,
+    len: usize,
+    dim: usize,
+    opts: &SigOptions,
+    rng: &mut Rng,
+) -> i32 {
+    let lo = (len / 2).max(1);
+    let lengths: Vec<usize> = (0..batch).map(|_| rng.range(lo, len.max(lo))).collect();
+    let mut data = Vec::new();
+    for &l in &lengths {
+        data.extend(rng.brownian_path(l, dim, 0.3));
+    }
+    let pb = match crate::path::PathBatch::ragged(&data, &lengths, dim) {
+        Ok(pb) => pb,
+        Err(e) => {
+            eprintln!("invalid ragged batch: {e}");
+            return 2;
+        }
+    };
+    let t = std::time::Instant::now();
+    let result = if log {
+        crate::sig::try_batch_log_signature(&pb, opts)
+    } else {
+        crate::sig::try_batch_signature(&pb, opts)
+    };
+    let out = match result {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let dt = t.elapsed().as_secs_f64();
+    let total = pb.total_points();
+    let padded = batch * len;
+    println!(
+        "{} ragged batch={batch} len∈[{lo},{len}] dim={dim} depth={} width={}",
+        if log { "logsig" } else { "sig" },
+        opts.depth,
+        if batch == 0 { 0 } else { out.len() / batch },
+    );
+    println!(
+        "time={dt:.6}s  throughput={:.1} paths/s  points={total} ({:.0}% of padded)  checksum={:.6e}",
+        batch as f64 / dt,
+        100.0 * total as f64 / padded.max(1) as f64,
+        out.iter().sum::<f64>()
+    );
+    0
+}
+
 fn cmd_kernel(flags: &HashMap<String, String>) -> i32 {
     let batch = flag_usize(flags, "batch", 32);
     let len = flag_usize(flags, "len", 128);
@@ -155,22 +215,56 @@ fn cmd_kernel(flags: &HashMap<String, String>) -> i32 {
     };
     let tr = flag_transform(flags);
     let mut rng = Rng::new(43);
-    let x = rng.brownian_batch(batch, len, dim, 0.3);
-    let y = rng.brownian_batch(batch, len, dim, 0.3);
     let opts = KernelOptions::default()
         .dyadic(lam1, lam2)
         .solver(solver)
         .transform(tr);
-    let t = std::time::Instant::now();
-    let ks = crate::kernel::batch_kernel(&x, &y, batch, len, len, dim, &opts);
-    let dt = t.elapsed().as_secs_f64();
+    let (ks, dt, desc) = if flags.contains_key("ragged") {
+        // Variable-length (x, y) pairs through the typed API — each pair is
+        // solved on its own (lx−1) × (ly−1) grid, no padding anywhere.
+        let lo = (len / 2).max(2);
+        let hi = len.max(lo);
+        let make = |rng: &mut Rng| -> (Vec<usize>, Vec<f64>) {
+            let lengths: Vec<usize> = (0..batch).map(|_| rng.range(lo, hi)).collect();
+            let mut data = Vec::new();
+            for &l in &lengths {
+                data.extend(rng.brownian_path(l, dim, 0.3));
+            }
+            (lengths, data)
+        };
+        let (xl, xdata) = make(&mut rng);
+        let (yl, ydata) = make(&mut rng);
+        let t = std::time::Instant::now();
+        let xb = crate::path::PathBatch::ragged(&xdata, &xl, dim);
+        let yb = crate::path::PathBatch::ragged(&ydata, &yl, dim);
+        let ks = match (xb, yb) {
+            (Ok(xb), Ok(yb)) => match crate::kernel::try_batch_kernel(&xb, &yb, &opts) {
+                Ok(ks) => ks,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            },
+            _ => {
+                eprintln!("invalid ragged batch");
+                return 2;
+            }
+        };
+        (ks, t.elapsed().as_secs_f64(), format!("len∈[{lo},{hi}]"))
+    } else {
+        let x = rng.brownian_batch(batch, len, dim, 0.3);
+        let y = rng.brownian_batch(batch, len, dim, 0.3);
+        let t = std::time::Instant::now();
+        let ks = crate::kernel::batch_kernel(&x, &y, batch, len, len, dim, &opts);
+        (ks, t.elapsed().as_secs_f64(), format!("len={len}"))
+    };
     println!(
-        "kernel batch={batch} len={len} dim={dim} dyadic=({lam1},{lam2}) solver={solver:?} transform={tr:?}"
+        "kernel batch={batch} {desc} dim={dim} dyadic=({lam1},{lam2}) solver={solver:?} transform={tr:?}"
     );
     println!(
         "time={dt:.6}s  throughput={:.1} kernels/s  mean_k={:.6}",
         batch as f64 / dt,
-        ks.iter().sum::<f64>() / batch as f64
+        ks.iter().sum::<f64>() / batch.max(1) as f64
     );
     0
 }

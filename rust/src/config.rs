@@ -42,17 +42,28 @@ impl Default for Config {
 }
 
 /// Error with the offending key, for actionable messages.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum ConfigError {
-    #[error("invalid value for {key}: {value:?} ({reason})")]
     Invalid {
         key: String,
         value: String,
         reason: String,
     },
-    #[error("unknown configuration key {0:?}")]
     UnknownKey(String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Invalid { key, value, reason } => {
+                write!(f, "invalid value for {key}: {value:?} ({reason})")
+            }
+            ConfigError::UnknownKey(key) => write!(f, "unknown configuration key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Config {
     /// Apply `KEY=VALUE` lines (comments with '#', blank lines ignored).

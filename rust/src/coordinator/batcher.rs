@@ -117,6 +117,29 @@ impl Batcher {
         }
     }
 
+    /// Execute a ragged-batch frame synchronously on the compute backend.
+    /// A ragged frame *is* a batch already, so it bypasses the shape-grouped
+    /// queues and goes straight to the router; metrics still see it as one
+    /// batch of `frame.batch()` requests.
+    pub fn execute_ragged(
+        &self,
+        frame: &crate::coordinator::wire::RaggedFrame,
+    ) -> Result<Vec<f64>, crate::path::SigError> {
+        let b = frame.batch();
+        for _ in 0..b {
+            self.metrics.record_request();
+        }
+        self.metrics.record_batch(b);
+        let started = Instant::now();
+        let result = self.router.execute_ragged(frame);
+        let compute_us = started.elapsed().as_micros() as u64;
+        let is_err = result.is_err();
+        for _ in 0..b {
+            self.metrics.record_response(compute_us, 0, is_err);
+        }
+        result
+    }
+
     /// Flush everything immediately (used by tests and shutdown).
     pub fn flush_all(&self) {
         let drained: Vec<(GroupKey, Vec<Pending>)> = {
@@ -220,7 +243,13 @@ mod tests {
     use crate::util::rng::Rng;
     use std::sync::mpsc;
 
-    fn submit_one(batcher: &Batcher, op: Op, len: usize, dim: usize, rng: &mut Rng) -> mpsc::Receiver<Response> {
+    fn submit_one(
+        batcher: &Batcher,
+        op: Op,
+        len: usize,
+        dim: usize,
+        rng: &mut Rng,
+    ) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         let data = rng.brownian_path(len, dim, 0.5);
         let data2 = match op {

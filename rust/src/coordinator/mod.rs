@@ -4,10 +4,14 @@
 //! threaded design is also the right fit for a compute-bound service).
 //!
 //! Life of a request:
-//!   client → wire protocol → [`server`] → [`router::Router`] validates and
-//!   normalises → [`batcher::Batcher`] groups same-shape work and flushes by
-//!   size or deadline → compute backend (native Rust kernels, or a PJRT
-//!   artifact when one matches the batch shape) → responses fan back out.
+//!   client → wire protocol (validated on decode; malformed frames become
+//!   `Err` responses, never panics) → [`server`] → single-path requests go
+//!   through [`batcher::Batcher`], which groups same-shape work and flushes
+//!   by size or deadline; ragged-batch frames are already batches and route
+//!   straight to [`router::Router`] → the router executes each batch as a
+//!   typed [`PathBatch`](crate::path::PathBatch) on the compute backend
+//!   (native Rust kernels, or a PJRT artifact when one matches the batch
+//!   shape) → responses fan back out.
 
 pub mod batcher;
 pub mod metrics;
@@ -19,6 +23,7 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use router::Router;
 pub use server::{serve, Client};
+pub use wire::{Frame, RaggedFrame, RequestFrame};
 
 use crate::transforms::Transform;
 

@@ -1,13 +1,36 @@
 //! Request router: validates requests, picks a compute backend for each
 //! flushed batch (native Rust kernels always; a PJRT artifact when one
 //! matches the op + batch shape exactly), and runs it.
+//!
+//! All native execution goes through the typed [`PathBatch`] API, so a
+//! malformed or shape-inconsistent request can only ever produce a
+//! [`Response::Error`] — no panic is reachable from the request path.
 
 use std::sync::Arc;
 
+use crate::coordinator::wire::RaggedFrame;
 use crate::coordinator::{transform_from_u8, Op, Request, Response};
 use crate::kernel::KernelOptions;
+use crate::path::{PathBatch, SigError};
 use crate::runtime::RuntimeHandle;
 use crate::sig::SigOptions;
+use crate::util::pool::{parallel_for_mut, parallel_for_mut_ragged};
+
+/// Pre-validate every (x_i, y_i) pair's refined PDE grid so that the
+/// parallel per-pair kernel calls below cannot fail (grid size is monotone
+/// in path length, so the longest pair bounds all).
+fn check_pair_grids(
+    pb: &PathBatch<'_>,
+    pairs: usize,
+    opts: &KernelOptions,
+) -> Result<(), SigError> {
+    let mx = (0..pairs).map(|i| pb.len_of(2 * i)).max().unwrap_or(0);
+    let my = (0..pairs).map(|i| pb.len_of(2 * i + 1)).max().unwrap_or(0);
+    if mx >= 2 && my >= 2 {
+        crate::kernel::check_grid_size(mx, my, opts)?;
+    }
+    Ok(())
+}
 
 /// Compute backend selection per batch.
 pub struct Router {
@@ -59,6 +82,16 @@ impl Router {
         dim: usize,
         reqs: &[&Request],
     ) -> Vec<Response> {
+        // A degenerate shape poisons the whole group — answer every request
+        // with an error rather than panicking anywhere downstream.
+        if len == 0 || dim == 0 {
+            let e = if dim == 0 {
+                SigError::ZeroDim
+            } else {
+                SigError::EmptyPath
+            };
+            return reqs.iter().map(|_| Response::Error(e.to_string())).collect();
+        }
         // Validate payload sizes up front; a malformed request must not sink
         // the whole batch.
         let expect = len * dim;
@@ -76,12 +109,18 @@ impl Router {
             .collect();
         let good_idx: Vec<usize> = (0..reqs.len()).filter(|&i| !bad[i]).collect();
 
-        // Try the PJRT path for an exactly-matching artifact.
+        // Try the PJRT path for an exactly-matching artifact. Runtime
+        // failures are propagated to every client in the batch as wire
+        // errors — not silently swallowed, not silently re-routed.
         if good_idx.len() == reqs.len() {
             if let Some(name) = self.artifact_for(op, reqs.len(), len, dim) {
-                if let Some(resps) = self.execute_pjrt(&name, op, len, dim, reqs) {
-                    return resps;
-                }
+                return match self.execute_pjrt(&name, op, len, dim, reqs) {
+                    Ok(resps) => resps,
+                    Err(e) => reqs
+                        .iter()
+                        .map(|_| Response::Error(e.to_string()))
+                        .collect(),
+                };
             }
         }
 
@@ -95,10 +134,83 @@ impl Router {
                     expect
                 )));
             } else {
-                out.push(it.next().unwrap());
+                out.push(it.next().unwrap_or_else(|| {
+                    Response::Error("internal: missing batch result".to_string())
+                }));
             }
         }
         out
+    }
+
+    /// Execute a ragged-batch frame directly (it is already a batch): one
+    /// flat result vector for the whole frame, or one error for the frame.
+    pub fn execute_ragged(&self, frame: &RaggedFrame) -> Result<Vec<f64>, SigError> {
+        if crate::coordinator::wire::op_is_paired(frame.op) && frame.lengths.len() % 2 != 0 {
+            return Err(SigError::Protocol(format!(
+                "kernel ops need (x, y) length pairs; got {} lengths",
+                frame.lengths.len()
+            )));
+        }
+        match frame.op {
+            Op::Signature { depth, transform } => {
+                let tr = transform_from_u8(transform)
+                    .ok_or(SigError::BadTransform(transform))?;
+                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
+                let opts = SigOptions::new(depth as usize).transform(tr);
+                crate::sig::try_batch_signature(&pb, &opts)
+            }
+            Op::LogSignature { depth, transform } => {
+                let tr = transform_from_u8(transform)
+                    .ok_or(SigError::BadTransform(transform))?;
+                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
+                let opts = SigOptions::new(depth as usize).transform(tr);
+                crate::sig::try_batch_log_signature(&pb, &opts)
+            }
+            Op::SigKernel {
+                lam1,
+                lam2,
+                transform,
+            } => {
+                let tr = transform_from_u8(transform)
+                    .ok_or(SigError::BadTransform(transform))?;
+                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
+                let opts = KernelOptions::default().dyadic(lam1, lam2).transform(tr);
+                let b = frame.batch();
+                check_pair_grids(&pb, b, &opts)?;
+                let mut out = vec![0.0; b];
+                // Pairs (x_i, y_i) interleave as paths (2i, 2i+1); lengths
+                // were validated even at decode, grid sizes just above.
+                parallel_for_mut(&mut out, 1, |i, slot| {
+                    let (x, y) = (pb.path(2 * i), pb.path(2 * i + 1));
+                    slot[0] = crate::kernel::try_sig_kernel(x, y, &opts).expect("validated");
+                });
+                Ok(out)
+            }
+            Op::SigKernelGrad { lam1, lam2 } => {
+                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
+                let opts = KernelOptions::default().dyadic(lam1, lam2);
+                let b = frame.batch();
+                check_pair_grids(&pb, b, &opts)?;
+                // Per pair, output is grad_x ++ grad_y — exactly the pair's
+                // own slice of the input layout, so the ragged output bounds
+                // are the pairwise element offsets.
+                let eo = pb.element_offsets();
+                let bounds: Vec<usize> = (0..=b).map(|i| eo[2 * i]).collect();
+                let mut out = vec![0.0; pb.total_points() * frame.dim];
+                parallel_for_mut_ragged(&mut out, &bounds, |i, chunk| {
+                    let (gx, gy) = crate::kernel::try_sig_kernel_vjp(
+                        pb.path(2 * i),
+                        pb.path(2 * i + 1),
+                        &opts,
+                        1.0,
+                    )
+                    .expect("validated");
+                    chunk[..gx.len()].copy_from_slice(&gx);
+                    chunk[gx.len()..].copy_from_slice(&gy);
+                });
+                Ok(out)
+            }
+        }
     }
 
     fn execute_native(
@@ -113,43 +225,50 @@ impl Router {
         if b == 0 {
             return Vec::new();
         }
+        let errs = |msg: String| -> Vec<Response> {
+            good_idx.iter().map(|_| Response::Error(msg.clone())).collect()
+        };
         let mut paths = Vec::with_capacity(b * len * dim);
         for &i in good_idx {
             paths.extend_from_slice(&reqs[i].data);
         }
+        let pb = match PathBatch::uniform(&paths, b, len, dim) {
+            Ok(pb) => pb,
+            Err(e) => return errs(e.to_string()),
+        };
+        // Gather the second paths for paired ops (validated present above).
+        let gather_ys = |reqs: &[&Request]| -> Result<Vec<f64>, String> {
+            let mut ys = Vec::with_capacity(b * len * dim);
+            for &i in good_idx {
+                match reqs[i].data2.as_ref() {
+                    Some(d) => ys.extend_from_slice(d),
+                    None => return Err("kernel op missing second path".to_string()),
+                }
+            }
+            Ok(ys)
+        };
         match op {
             Op::Signature { depth, transform } | Op::LogSignature { depth, transform } => {
                 let tr = match transform_from_u8(transform) {
                     Some(t) => t,
-                    None => {
-                        return good_idx
-                            .iter()
-                            .map(|_| Response::Error("bad transform".into()))
-                            .collect()
-                    }
+                    None => return errs("bad transform".to_string()),
                 };
                 let opts = SigOptions::new(depth as usize).transform(tr);
-                let slen = crate::sig::sig_length(tr.out_dim(dim), depth as usize);
-                if matches!(op, Op::Signature { .. }) {
-                    let sigs = crate::sig::batch_signature(&paths, b, len, dim, &opts);
-                    sigs.chunks(slen)
-                        .map(|c| Response::Values(c.to_vec()))
-                        .collect()
+                let slen = match crate::sig::try_sig_length(tr.out_dim(dim), depth as usize) {
+                    Ok(slen) => slen,
+                    Err(e) => return errs(e.to_string()),
+                };
+                let result = if matches!(op, Op::Signature { .. }) {
+                    crate::sig::try_batch_signature(&pb, &opts)
                 } else {
-                    // Log-signatures: per-path (tensor log after the batch
-                    // signature sweep).
-                    good_idx
-                        .iter()
-                        .map(|&i| {
-                            Response::Values(crate::sig::log_signature(
-                                &reqs[i].data,
-                                len,
-                                dim,
-                                depth as usize,
-                                tr,
-                            ))
-                        })
-                        .collect()
+                    crate::sig::try_batch_log_signature(&pb, &opts)
+                };
+                match result {
+                    Ok(rows) => rows
+                        .chunks(slen)
+                        .map(|c| Response::Values(c.to_vec()))
+                        .collect(),
+                    Err(e) => errs(e.to_string()),
                 }
             }
             Op::SigKernel {
@@ -159,44 +278,51 @@ impl Router {
             } => {
                 let tr = match transform_from_u8(transform) {
                     Some(t) => t,
-                    None => {
-                        return good_idx
-                            .iter()
-                            .map(|_| Response::Error("bad transform".into()))
-                            .collect()
-                    }
+                    None => return errs("bad transform".to_string()),
                 };
-                let mut ys = Vec::with_capacity(b * len * dim);
-                for &i in good_idx {
-                    ys.extend_from_slice(reqs[i].data2.as_ref().unwrap());
-                }
+                let ys = match gather_ys(reqs) {
+                    Ok(ys) => ys,
+                    Err(e) => return errs(e),
+                };
+                let yb = match PathBatch::uniform(&ys, b, len, dim) {
+                    Ok(yb) => yb,
+                    Err(e) => return errs(e.to_string()),
+                };
                 let opts = KernelOptions::default().dyadic(lam1, lam2).transform(tr);
-                let ks = crate::kernel::batch_kernel(&paths, &ys, b, len, len, dim, &opts);
-                ks.iter().map(|&k| Response::Values(vec![k])).collect()
+                match crate::kernel::try_batch_kernel(&pb, &yb, &opts) {
+                    Ok(ks) => ks.iter().map(|&k| Response::Values(vec![k])).collect(),
+                    Err(e) => errs(e.to_string()),
+                }
             }
             Op::SigKernelGrad { lam1, lam2 } => {
-                let mut ys = Vec::with_capacity(b * len * dim);
-                for &i in good_idx {
-                    ys.extend_from_slice(reqs[i].data2.as_ref().unwrap());
-                }
+                let ys = match gather_ys(reqs) {
+                    Ok(ys) => ys,
+                    Err(e) => return errs(e),
+                };
+                let yb = match PathBatch::uniform(&ys, b, len, dim) {
+                    Ok(yb) => yb,
+                    Err(e) => return errs(e.to_string()),
+                };
                 let opts = KernelOptions::default().dyadic(lam1, lam2);
                 let gk = vec![1.0; b];
-                let (gx, gy) =
-                    crate::kernel::batch_kernel_vjp(&paths, &ys, &gk, b, len, len, dim, &opts);
-                (0..b)
-                    .map(|i| {
-                        let mut v = gx[i * len * dim..(i + 1) * len * dim].to_vec();
-                        v.extend_from_slice(&gy[i * len * dim..(i + 1) * len * dim]);
-                        Response::Values(v)
-                    })
-                    .collect()
+                match crate::kernel::try_batch_kernel_vjp(&pb, &yb, &gk, &opts) {
+                    Ok((gx, gy)) => (0..b)
+                        .map(|i| {
+                            let mut v = gx[i * len * dim..(i + 1) * len * dim].to_vec();
+                            v.extend_from_slice(&gy[i * len * dim..(i + 1) * len * dim]);
+                            Response::Values(v)
+                        })
+                        .collect(),
+                    Err(e) => errs(e.to_string()),
+                }
             }
         }
     }
 
-    /// Execute via a PJRT artifact. Returns None (falls back to native) on
-    /// any runtime error — the artifacts are an accelerator, not a
-    /// correctness dependency.
+    /// Execute via a PJRT artifact. Any runtime failure is returned as an
+    /// error (and surfaces to every client in the batch as a wire `Err`
+    /// response) — the artifacts are an accelerator, not an excuse to
+    /// swallow failures.
     fn execute_pjrt(
         &self,
         name: &str,
@@ -204,9 +330,15 @@ impl Router {
         len: usize,
         dim: usize,
         reqs: &[&Request],
-    ) -> Option<Vec<Response>> {
-        let rt = self.runtime.as_ref()?;
+    ) -> Result<Vec<Response>, SigError> {
+        let rt = self
+            .runtime
+            .as_ref()
+            .ok_or_else(|| SigError::Backend("no PJRT runtime attached".to_string()))?;
         let b = reqs.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
         let mut xs = Vec::with_capacity(b * len * dim);
         for r in reqs {
             xs.extend(r.data.iter().map(|&v| v as f32));
@@ -215,20 +347,32 @@ impl Router {
             Op::SigKernel { .. } => {
                 let mut ys = Vec::with_capacity(b * len * dim);
                 for r in reqs {
-                    ys.extend(r.data2.as_ref().unwrap().iter().map(|&v| v as f32));
+                    let d2 = r.data2.as_ref().ok_or_else(|| {
+                        SigError::Backend("kernel op missing second path".to_string())
+                    })?;
+                    ys.extend(d2.iter().map(|&v| v as f32));
                 }
                 vec![xs, ys]
             }
             _ => vec![xs],
         };
-        let outputs = rt.execute_f32(name, inputs).ok()?;
-        let flat = &outputs[0];
+        let outputs = rt
+            .execute_f32(name, inputs)
+            .map_err(|e| SigError::Backend(format!("pjrt artifact '{name}': {e}")))?;
+        let flat = outputs.first().ok_or_else(|| {
+            SigError::Backend(format!("pjrt artifact '{name}' returned no outputs"))
+        })?;
+        if flat.is_empty() || flat.len() % b != 0 {
+            return Err(SigError::Backend(format!(
+                "pjrt artifact '{name}' returned {} values for a batch of {b}",
+                flat.len()
+            )));
+        }
         let per = flat.len() / b;
-        Some(
-            flat.chunks(per)
-                .map(|c| Response::Values(c.iter().map(|&v| v as f64).collect()))
-                .collect(),
-        )
+        Ok(flat
+            .chunks(per)
+            .map(|c| Response::Values(c.iter().map(|&v| v as f64).collect()))
+            .collect())
     }
 }
 
@@ -307,6 +451,76 @@ mod tests {
         assert!(matches!(out[1], Response::Error(_)));
     }
 
+    /// Degenerate group shapes (zero dim / zero len) must answer every
+    /// request with an error — never panic (the coordinator's no-panic
+    /// contract).
+    #[test]
+    fn degenerate_shapes_error_instead_of_panicking() {
+        let router = Router::native_only();
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(10);
+        let r = req(op, 4, 2, &mut rng, false);
+        let refs: Vec<&Request> = vec![&r];
+        for (len, dim) in [(0usize, 2usize), (4, 0), (0, 0)] {
+            let out = router.execute_batch(op, len, dim, &refs);
+            assert_eq!(out.len(), 1);
+            assert!(matches!(out[0], Response::Error(_)), "len={len} dim={dim}");
+        }
+        // A kernel request without its second path errors cleanly too.
+        let kop = Op::SigKernel {
+            lam1: 0,
+            lam2: 0,
+            transform: 0,
+        };
+        let k = req(kop, 4, 2, &mut rng, false); // pair missing
+        let refs: Vec<&Request> = vec![&k];
+        let out = router.execute_batch(kop, 4, 2, &refs);
+        assert!(matches!(out[0], Response::Error(_)));
+    }
+
+    /// A well-formed frame with an absurd depth must answer with an error,
+    /// not overflow inside the tensor layout and kill the flush thread.
+    #[test]
+    fn huge_depth_errors_instead_of_panicking() {
+        let router = Router::native_only();
+        for depth in [64u32, 1000, u32::MAX] {
+            let op = Op::Signature {
+                depth,
+                transform: 0,
+            };
+            let mut rng = Rng::new(20);
+            let r = req(op, 4, 2, &mut rng, false);
+            let refs: Vec<&Request> = vec![&r];
+            let out = router.execute_batch(op, 4, 2, &refs);
+            assert!(matches!(out[0], Response::Error(_)), "depth={depth}");
+        }
+        // Same through the ragged route, plus an absurd dyadic order.
+        let frame = RaggedFrame {
+            op: Op::Signature {
+                depth: 64,
+                transform: 0,
+            },
+            dim: 2,
+            lengths: vec![2],
+            values: vec![0.0; 4],
+        };
+        assert!(router.execute_ragged(&frame).is_err());
+        let frame = RaggedFrame {
+            op: Op::SigKernel {
+                lam1: 60,
+                lam2: 60,
+                transform: 0,
+            },
+            dim: 1,
+            lengths: vec![4, 4],
+            values: vec![0.0; 8],
+        };
+        assert!(router.execute_ragged(&frame).is_err());
+    }
+
     #[test]
     fn logsignature_served() {
         let router = Router::native_only();
@@ -326,5 +540,109 @@ mod tests {
             }
             Response::Error(e) => panic!("{e}"),
         }
+    }
+
+    /// Ragged frames execute against the typed API and match per-path
+    /// computation exactly.
+    #[test]
+    fn ragged_frame_signature_matches_per_path() {
+        let router = Router::native_only();
+        let mut rng = Rng::new(11);
+        let d = 2;
+        let lengths = [5usize, 1, 8];
+        let mut values = Vec::new();
+        for &l in &lengths {
+            values.extend(rng.brownian_path(l, d, 0.5));
+        }
+        let frame = RaggedFrame {
+            op: Op::Signature {
+                depth: 3,
+                transform: 0,
+            },
+            dim: d,
+            lengths: lengths.to_vec(),
+            values: values.clone(),
+        };
+        let out = router.execute_ragged(&frame).unwrap();
+        let slen = crate::sig::sig_length(d, 3);
+        assert_eq!(out.len(), lengths.len() * slen);
+        let mut off = 0;
+        for (i, &l) in lengths.iter().enumerate() {
+            let want = crate::sig::sig(&values[off * d..(off + l) * d], l, d, 3);
+            assert_eq!(&out[i * slen..(i + 1) * slen], &want[..]);
+            off += l;
+        }
+    }
+
+    #[test]
+    fn ragged_frame_kernel_pairs_match_sig_kernel() {
+        let router = Router::native_only();
+        let mut rng = Rng::new(12);
+        let d = 2;
+        let lengths = [4usize, 6, 3, 5]; // two (x, y) pairs
+        let mut values = Vec::new();
+        for &l in &lengths {
+            values.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let frame = RaggedFrame {
+            op: Op::SigKernel {
+                lam1: 1,
+                lam2: 0,
+                transform: 0,
+            },
+            dim: d,
+            lengths: lengths.to_vec(),
+            values: values.clone(),
+        };
+        let out = router.execute_ragged(&frame).unwrap();
+        assert_eq!(out.len(), 2);
+        let opts = KernelOptions::default().dyadic(1, 0);
+        let o: Vec<usize> = {
+            let mut acc = vec![0];
+            for &l in &lengths {
+                acc.push(acc.last().unwrap() + l);
+            }
+            acc
+        };
+        for p in 0..2 {
+            let (lx, ly) = (lengths[2 * p], lengths[2 * p + 1]);
+            let want = crate::kernel::sig_kernel(
+                &values[o[2 * p] * d..o[2 * p + 1] * d],
+                &values[o[2 * p + 1] * d..o[2 * p + 2] * d],
+                lx,
+                ly,
+                d,
+                &opts,
+            );
+            assert_eq!(out[p], want, "pair {p}");
+        }
+    }
+
+    #[test]
+    fn ragged_frame_with_bad_shape_is_an_error() {
+        let router = Router::native_only();
+        let frame = RaggedFrame {
+            op: Op::Signature {
+                depth: 3,
+                transform: 0,
+            },
+            dim: 2,
+            lengths: vec![3],
+            values: vec![0.0; 5], // needs 6
+        };
+        assert!(router.execute_ragged(&frame).is_err());
+        let frame = RaggedFrame {
+            op: Op::Signature {
+                depth: 3,
+                transform: 7, // unknown
+            },
+            dim: 2,
+            lengths: vec![2],
+            values: vec![0.0; 4],
+        };
+        assert_eq!(
+            router.execute_ragged(&frame),
+            Err(SigError::BadTransform(7))
+        );
     }
 }

@@ -2,12 +2,19 @@
 //! requests flow into the shared dynamic batcher, responses return in
 //! request order per connection (concurrency comes from multiple
 //! connections and from batching across them).
+//!
+//! Malformed-but-framed requests (validated at wire decode) are answered
+//! with an `Err` response and the connection keeps serving; only
+//! framing-destroying input (bad magic, absurd sizes) drops the connection.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
-use crate::coordinator::wire::{read_request, read_response, write_request, write_response, Frame};
+use crate::coordinator::wire::{
+    read_request, read_response, write_ragged_request, write_request, write_response, Frame,
+    RaggedFrame, RequestFrame,
+};
 use crate::coordinator::{Batcher, Op, Request, Response};
 
 /// Handle to a running server (drop or call `stop()` to shut down).
@@ -95,27 +102,36 @@ fn split_payload(frame: &Frame) -> Result<(Vec<f64>, Option<Vec<f64>>), String> 
     }
 }
 
+fn handle_single(frame: Frame, batcher: &Batcher) -> Result<Vec<f64>, String> {
+    let (data, data2) = split_payload(&frame)?;
+    let (tx, rx) = mpsc::channel();
+    batcher.submit(Request {
+        op: frame.op,
+        len: frame.len,
+        dim: frame.dim,
+        data,
+        data2,
+        reply: tx,
+    });
+    match rx.recv() {
+        Ok(Response::Values(v)) => Ok(v),
+        Ok(Response::Error(e)) => Err(e),
+        Err(_) => Err("server shutting down".to_string()),
+    }
+}
+
 fn handle_connection(mut stream: TcpStream, batcher: Arc<Batcher>) -> std::io::Result<()> {
     let mut out = stream.try_clone()?;
-    while let Some(frame) = read_request(&mut stream)? {
-        let result = match split_payload(&frame) {
-            Ok((data, data2)) => {
-                let (tx, rx) = mpsc::channel();
-                batcher.submit(Request {
-                    op: frame.op,
-                    len: frame.len,
-                    dim: frame.dim,
-                    data,
-                    data2,
-                    reply: tx,
-                });
-                match rx.recv() {
-                    Ok(Response::Values(v)) => Ok(v),
-                    Ok(Response::Error(e)) => Err(e),
-                    Err(_) => Err("server shutting down".to_string()),
-                }
+    while let Some(decoded) = read_request(&mut stream)? {
+        let result: Result<Vec<f64>, String> = match decoded {
+            // Malformed but framed: answer with the decode error and keep
+            // the connection alive.
+            Err(e) => Err(e.to_string()),
+            Ok(RequestFrame::Single(frame)) => handle_single(frame, &batcher),
+            // A ragged frame is already a batch: run it directly.
+            Ok(RequestFrame::Ragged(frame)) => {
+                batcher.execute_ragged(&frame).map_err(|e| e.to_string())
             }
-            Err(e) => Err(e),
         };
         write_response(&mut out, &result)?;
     }
@@ -154,6 +170,27 @@ impl Client {
         read_response(&mut self.stream)
     }
 
+    /// Send one ragged-batch request (paths back-to-back, per-path lengths)
+    /// and wait for its flat response.
+    pub fn call_ragged(
+        &mut self,
+        op: Op,
+        dim: usize,
+        lengths: Vec<usize>,
+        values: Vec<f64>,
+    ) -> std::io::Result<Result<Vec<f64>, String>> {
+        write_ragged_request(
+            &mut self.stream,
+            &RaggedFrame {
+                op,
+                dim,
+                lengths,
+                values,
+            },
+        )?;
+        read_response(&mut self.stream)
+    }
+
     /// Convenience: truncated signature of one path.
     pub fn signature(
         &mut self,
@@ -170,6 +207,31 @@ impl Client {
             len,
             dim,
             path.to_vec(),
+        )
+    }
+
+    /// Convenience: signatures of a ragged batch of paths in one round trip.
+    /// Returns `[batch, sig_length(dim, depth)]` flattened.
+    pub fn batch_signature_ragged(
+        &mut self,
+        paths: &[&[f64]],
+        dim: usize,
+        depth: u32,
+    ) -> std::io::Result<Result<Vec<f64>, String>> {
+        let mut lengths = Vec::with_capacity(paths.len());
+        let mut values = Vec::new();
+        for p in paths {
+            lengths.push(if dim == 0 { 0 } else { p.len() / dim });
+            values.extend_from_slice(p);
+        }
+        self.call_ragged(
+            Op::Signature {
+                depth,
+                transform: 0,
+            },
+            dim,
+            lengths,
+            values,
         )
     }
 
@@ -194,5 +256,32 @@ impl Client {
             values,
         )?;
         Ok(r.map(|v| v[0]))
+    }
+
+    /// Convenience: signature kernels of (x_i, y_i) pairs of arbitrary
+    /// lengths in one round trip. Returns `[pairs]`.
+    pub fn sig_kernel_ragged(
+        &mut self,
+        pairs: &[(&[f64], &[f64])],
+        dim: usize,
+    ) -> std::io::Result<Result<Vec<f64>, String>> {
+        let mut lengths = Vec::with_capacity(2 * pairs.len());
+        let mut values = Vec::new();
+        for (x, y) in pairs {
+            lengths.push(if dim == 0 { 0 } else { x.len() / dim });
+            lengths.push(if dim == 0 { 0 } else { y.len() / dim });
+            values.extend_from_slice(x);
+            values.extend_from_slice(y);
+        }
+        self.call_ragged(
+            Op::SigKernel {
+                lam1: 0,
+                lam2: 0,
+                transform: 0,
+            },
+            dim,
+            lengths,
+            values,
+        )
     }
 }

@@ -1,28 +1,84 @@
 //! Length-prefixed little-endian binary wire protocol for the coordinator
 //! (a from-scratch stand-in for serde/bincode, unavailable offline).
 //!
-//! Request frame:
-//!   u32 magic "SIGL" | u32 op | u32 p1 | u32 p2 | u32 transform |
+//! Single-path request frame (magic `SIGL`):
+//!   u32 magic | u32 op | u32 p1 | u32 p2 | u32 transform |
 //!   u32 len | u32 dim | u32 n_values | n_values × f64
 //! (kernel ops carry x followed by y, so n_values = 2·len·dim).
+//!
+//! Ragged-batch request frame (magic `SIGR`):
+//!   u32 magic | u32 op | u32 p1 | u32 p2 | u32 transform |
+//!   u32 n_lengths | u32 dim | u32 n_values |
+//!   n_lengths × u32 path lengths | n_values × f64
+//! Paths live back-to-back in the value payload; kernel ops interleave
+//! (x_i, y_i) pairs, so n_lengths must be even for them.
 //!
 //! Response frame:
 //!   u32 status (0 = ok, 1 = error) | u32 n | payload
 //!   (ok: n × f64; error: n utf-8 bytes).
+//!
+//! **Headers are validated on decode.** A malformed-but-framed request
+//! (unknown op, zero dim, `n_values` disagreeing with the declared shape, …)
+//! consumes exactly its declared payload and surfaces as a decode-level
+//! `Err(SigError)`, so the server can answer with a wire error response and
+//! keep the connection alive. Only errors that destroy framing (bad magic,
+//! absurd sizes) tear the connection down.
 
 use std::io::{Read, Write};
 
 use crate::coordinator::Op;
+use crate::path::SigError;
 
 pub const MAGIC: u32 = 0x5349_474C; // "SIGL"
+pub const MAGIC_RAGGED: u32 = 0x5349_4752; // "SIGR"
 
-/// A decoded request frame.
+/// Refuse single frames above this many f64 values before allocating
+/// (simple DoS guard).
+const MAX_VALUES: usize = 1 << 28;
+/// Refuse ragged frames with more than this many length entries.
+const MAX_LENGTHS: usize = 1 << 22;
+
+/// A decoded single-path request frame.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
     pub op: Op,
     pub len: usize,
     pub dim: usize,
     pub values: Vec<f64>,
+}
+
+/// A decoded ragged-batch request frame: paths of different lengths,
+/// back-to-back in `values`. Kernel ops interleave (x_i, y_i) pairs in
+/// `lengths`/`values`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RaggedFrame {
+    pub op: Op,
+    pub dim: usize,
+    pub lengths: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl RaggedFrame {
+    /// Number of requests in the frame (pairs count once for kernel ops).
+    pub fn batch(&self) -> usize {
+        if op_is_paired(self.op) {
+            self.lengths.len() / 2
+        } else {
+            self.lengths.len()
+        }
+    }
+}
+
+/// Either kind of request the wire can carry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestFrame {
+    Single(Frame),
+    Ragged(RaggedFrame),
+}
+
+/// Does this op carry a pair of paths per request?
+pub fn op_is_paired(op: Op) -> bool {
+    matches!(op, Op::SigKernel { .. } | Op::SigKernelGrad { .. })
 }
 
 fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
@@ -38,25 +94,39 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
     }
 }
 
-fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Option<Op> {
-    let transform = u8::try_from(tr).ok()?;
+fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
+    let transform = u8::try_from(tr)
+        .ok()
+        .filter(|&t| t <= 3)
+        .ok_or(SigError::BadTransform(tr.min(255) as u8))?;
     match code {
-        1 => Some(Op::Signature {
+        1 => Ok(Op::Signature {
             depth: p1,
             transform,
         }),
-        2 => Some(Op::LogSignature {
+        2 => Ok(Op::LogSignature {
             depth: p1,
             transform,
         }),
-        3 => Some(Op::SigKernel {
+        3 => Ok(Op::SigKernel {
             lam1: p1,
             lam2: p2,
             transform,
         }),
-        4 => Some(Op::SigKernelGrad { lam1: p1, lam2: p2 }),
-        _ => None,
+        4 => Ok(Op::SigKernelGrad { lam1: p1, lam2: p2 }),
+        other => Err(SigError::Protocol(format!("unknown op code {other}"))),
     }
+}
+
+/// A header field must fit u32 exactly — refuse to encode (and silently
+/// truncate into a desynchronized frame) otherwise.
+fn fit_u32(v: usize, what: &str) -> std::io::Result<u32> {
+    u32::try_from(v).map_err(|_| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("{what} ({v}) does not fit the wire's u32 header field"),
+        )
+    })
 }
 
 pub fn write_request<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
@@ -67,9 +137,9 @@ pub fn write_request<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> 
         p1,
         p2,
         tr,
-        frame.len as u32,
-        frame.dim as u32,
-        frame.values.len() as u32,
+        fit_u32(frame.len, "path length")?,
+        fit_u32(frame.dim, "path dimension")?,
+        fit_u32(frame.values.len(), "value count")?,
     ];
     let mut buf = Vec::with_capacity(32 + frame.values.len() * 8);
     for h in header {
@@ -81,8 +151,122 @@ pub fn write_request<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> 
     w.write_all(&buf)
 }
 
-/// Read one request frame; Ok(None) on clean EOF at a frame boundary.
-pub fn read_request<R: Read>(r: &mut R) -> std::io::Result<Option<Frame>> {
+/// Encode a ragged-batch request frame.
+pub fn write_ragged_request<W: Write>(w: &mut W, frame: &RaggedFrame) -> std::io::Result<()> {
+    let (code, p1, p2, tr) = op_to_parts(frame.op);
+    let header = [
+        MAGIC_RAGGED,
+        code,
+        p1,
+        p2,
+        tr,
+        fit_u32(frame.lengths.len(), "path count")?,
+        fit_u32(frame.dim, "path dimension")?,
+        fit_u32(frame.values.len(), "value count")?,
+    ];
+    let mut buf = Vec::with_capacity(32 + frame.lengths.len() * 4 + frame.values.len() * 8);
+    for h in header {
+        buf.extend_from_slice(&h.to_le_bytes());
+    }
+    for &l in &frame.lengths {
+        buf.extend_from_slice(&fit_u32(l, "path length")?.to_le_bytes());
+    }
+    for v in &frame.values {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn hard_err(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+fn read_f64s<R: Read>(r: &mut R, n: usize) -> std::io::Result<Vec<f64>> {
+    let mut data = vec![0u8; n * 8];
+    r.read_exact(&mut data)?;
+    Ok(data
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Validate a single frame's shape against its op. The payload has already
+/// been consumed, so a failure here leaves the stream at a frame boundary.
+fn validate_single(op: Op, len: usize, dim: usize, n_values: usize) -> Result<(), SigError> {
+    if dim == 0 {
+        return Err(SigError::ZeroDim);
+    }
+    if len == 0 {
+        return Err(SigError::EmptyPath);
+    }
+    // Checked arithmetic: a wrapped multiplication here would let a crafted
+    // header bypass the shape check entirely.
+    let per = len
+        .checked_mul(dim)
+        .ok_or(SigError::TooLarge("frame shape"))?;
+    let expected = if op_is_paired(op) {
+        per.checked_mul(2).ok_or(SigError::TooLarge("frame shape"))?
+    } else {
+        per
+    };
+    if n_values != expected {
+        return Err(SigError::Protocol(format!(
+            "header declares len={len} dim={dim} but carries {n_values} values \
+             (expected {expected})"
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a ragged frame's lengths against its op and payload size.
+fn validate_ragged(
+    op: Op,
+    dim: usize,
+    lengths: &[usize],
+    n_values: usize,
+) -> Result<(), SigError> {
+    if dim == 0 {
+        return Err(SigError::ZeroDim);
+    }
+    if op_is_paired(op) && lengths.len() % 2 != 0 {
+        return Err(SigError::Protocol(format!(
+            "kernel ops need (x, y) length pairs; got {} lengths",
+            lengths.len()
+        )));
+    }
+    let mut total = 0usize;
+    for &l in lengths {
+        if l == 0 {
+            return Err(SigError::EmptyPath);
+        }
+        total = total
+            .checked_add(l)
+            .ok_or(SigError::TooLarge("ragged frame size"))?;
+    }
+    let expected = total
+        .checked_mul(dim)
+        .ok_or(SigError::TooLarge("ragged frame size"))?;
+    if expected != n_values {
+        return Err(SigError::Protocol(format!(
+            "lengths sum to {total} points × dim {dim} but frame carries \
+             {n_values} values"
+        )));
+    }
+    Ok(())
+}
+
+/// Read one request frame.
+///
+/// * `Ok(None)` — clean EOF at a frame boundary.
+/// * `Ok(Some(Ok(frame)))` — a validated frame.
+/// * `Ok(Some(Err(e)))` — a malformed but correctly framed request; its
+///   payload has been consumed, the connection is still usable, and `e`
+///   should be sent back as a wire error response.
+/// * `Err(_)` — I/O failure or a frame that destroys framing (bad magic,
+///   absurd sizes); the connection must be dropped.
+pub fn read_request<R: Read>(
+    r: &mut R,
+) -> std::io::Result<Option<Result<RequestFrame, SigError>>> {
     let mut header = [0u8; 32];
     match r.read_exact(&mut header) {
         Ok(()) => {}
@@ -90,37 +274,55 @@ pub fn read_request<R: Read>(r: &mut R) -> std::io::Result<Option<Frame>> {
         Err(e) => return Err(e),
     }
     let u = |i: usize| u32::from_le_bytes(header[i * 4..i * 4 + 4].try_into().unwrap());
-    if u(0) != MAGIC {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "bad magic",
-        ));
+    let magic = u(0);
+    if magic != MAGIC && magic != MAGIC_RAGGED {
+        return Err(hard_err("bad magic"));
     }
-    let op = op_from_parts(u(1), u(2), u(3), u(4)).ok_or_else(|| {
-        std::io::Error::new(std::io::ErrorKind::InvalidData, "unknown op code")
-    })?;
-    let len = u(5) as usize;
-    let dim = u(6) as usize;
-    let n = u(7) as usize;
-    // Refuse absurd frames before allocating (simple DoS guard).
-    if n > (1 << 28) {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "frame too large",
-        ));
+    let op = op_from_parts(u(1), u(2), u(3), u(4));
+    let n_values = u(7) as usize;
+    if n_values > MAX_VALUES {
+        return Err(hard_err("frame too large"));
     }
-    let mut data = vec![0u8; n * 8];
-    r.read_exact(&mut data)?;
-    let values = data
-        .chunks_exact(8)
-        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    Ok(Some(Frame {
-        op,
-        len,
-        dim,
-        values,
-    }))
+    if magic == MAGIC {
+        let len = u(5) as usize;
+        let dim = u(6) as usize;
+        // Consume the payload first so that validation failures keep the
+        // stream at a frame boundary.
+        let values = read_f64s(r, n_values)?;
+        let frame = op.and_then(|op| {
+            validate_single(op, len, dim, n_values)?;
+            Ok(RequestFrame::Single(Frame {
+                op,
+                len,
+                dim,
+                values,
+            }))
+        });
+        Ok(Some(frame))
+    } else {
+        let n_lengths = u(5) as usize;
+        let dim = u(6) as usize;
+        if n_lengths > MAX_LENGTHS {
+            return Err(hard_err("too many paths in ragged frame"));
+        }
+        let mut lbytes = vec![0u8; n_lengths * 4];
+        r.read_exact(&mut lbytes)?;
+        let lengths: Vec<usize> = lbytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        let values = read_f64s(r, n_values)?;
+        let frame = op.and_then(|op| {
+            validate_ragged(op, dim, &lengths, n_values)?;
+            Ok(RequestFrame::Ragged(RaggedFrame {
+                op,
+                dim,
+                lengths,
+                values,
+            }))
+        });
+        Ok(Some(frame))
+    }
 }
 
 pub fn write_response<W: Write>(
@@ -168,6 +370,10 @@ pub fn read_response<R: Read>(r: &mut R) -> std::io::Result<Result<Vec<f64>, Str
 mod tests {
     use super::*;
 
+    fn ok_frame<R: Read>(r: &mut R) -> RequestFrame {
+        read_request(r).unwrap().unwrap().unwrap()
+    }
+
     #[test]
     fn request_roundtrip() {
         let frame = Frame {
@@ -178,12 +384,55 @@ mod tests {
             },
             len: 4,
             dim: 2,
-            values: vec![1.0, -2.5, 3.25, 0.0, 5.0, 6.0, 7.0, 8.0],
+            values: (0..16).map(|v| v as f64).collect(),
         };
         let mut buf = Vec::new();
         write_request(&mut buf, &frame).unwrap();
-        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
-        assert_eq!(got, frame);
+        assert_eq!(
+            ok_frame(&mut buf.as_slice()),
+            RequestFrame::Single(frame)
+        );
+    }
+
+    #[test]
+    fn ragged_request_roundtrip() {
+        let frame = RaggedFrame {
+            op: Op::Signature {
+                depth: 3,
+                transform: 0,
+            },
+            dim: 2,
+            lengths: vec![3, 1, 2],
+            values: (0..12).map(|v| v as f64 * 0.5).collect(),
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        assert_eq!(frame.batch(), 3);
+        assert_eq!(
+            ok_frame(&mut buf.as_slice()),
+            RequestFrame::Ragged(frame)
+        );
+    }
+
+    #[test]
+    fn ragged_kernel_pairs_roundtrip() {
+        let frame = RaggedFrame {
+            op: Op::SigKernel {
+                lam1: 0,
+                lam2: 0,
+                transform: 0,
+            },
+            dim: 1,
+            lengths: vec![2, 3, 4, 2],
+            values: (0..11).map(|v| v as f64).collect(),
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        assert_eq!(frame.batch(), 2);
+        assert_eq!(
+            ok_frame(&mut buf.as_slice()),
+            RequestFrame::Ragged(frame)
+        );
     }
 
     #[test]
@@ -203,8 +452,117 @@ mod tests {
     }
 
     #[test]
-    fn bad_magic_rejected() {
+    fn bad_magic_tears_down_the_connection() {
         let buf = vec![0u8; 32];
         assert!(read_request(&mut buf.as_slice()).is_err());
+    }
+
+    /// The satellite requirement: a frame whose header disagrees with its
+    /// payload size decodes to a soft error, consumes exactly its payload,
+    /// and the next frame on the stream still parses.
+    #[test]
+    fn malformed_frame_roundtrip_preserves_framing() {
+        let mut buf = Vec::new();
+        // Frame 1: declares len=4 dim=2 (expects 8 values) but carries 3.
+        let bad = Frame {
+            op: Op::Signature {
+                depth: 2,
+                transform: 0,
+            },
+            len: 4,
+            dim: 2,
+            values: vec![1.0, 2.0, 3.0],
+        };
+        write_request(&mut buf, &bad).unwrap();
+        // Frame 2: well-formed.
+        let good = Frame {
+            op: Op::Signature {
+                depth: 2,
+                transform: 0,
+            },
+            len: 2,
+            dim: 2,
+            values: vec![0.0, 0.0, 1.0, 1.0],
+        };
+        write_request(&mut buf, &good).unwrap();
+        let mut r = buf.as_slice();
+        let first = read_request(&mut r).unwrap().unwrap();
+        assert!(matches!(first, Err(SigError::Protocol(_))), "{first:?}");
+        let second = ok_frame(&mut r);
+        assert_eq!(second, RequestFrame::Single(good));
+        assert!(read_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn zero_dim_and_zero_len_are_soft_errors() {
+        for (len, dim, want_zero_dim) in [(4usize, 0usize, true), (0, 2, false)] {
+            let mut buf = Vec::new();
+            let f = Frame {
+                op: Op::Signature {
+                    depth: 2,
+                    transform: 0,
+                },
+                len,
+                dim,
+                values: vec![],
+            };
+            write_request(&mut buf, &f).unwrap();
+            let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+            if want_zero_dim {
+                assert_eq!(got, Err(SigError::ZeroDim));
+            } else {
+                assert_eq!(got, Err(SigError::EmptyPath));
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_op_and_bad_transform_are_soft_errors() {
+        // Unknown op code 9.
+        let mut buf = Vec::new();
+        for h in [MAGIC, 9, 0, 0, 0, 2, 1, 2u32] {
+            buf.extend_from_slice(&h.to_le_bytes());
+        }
+        buf.extend_from_slice(&1.0f64.to_le_bytes());
+        buf.extend_from_slice(&2.0f64.to_le_bytes());
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+        // Known op, unknown transform code 9.
+        let mut buf = Vec::new();
+        for h in [MAGIC, 1, 2, 0, 9, 2, 1, 2u32] {
+            buf.extend_from_slice(&h.to_le_bytes());
+        }
+        buf.extend_from_slice(&1.0f64.to_le_bytes());
+        buf.extend_from_slice(&2.0f64.to_le_bytes());
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!(got, Err(SigError::BadTransform(9)));
+    }
+
+    #[test]
+    fn ragged_shape_mismatch_is_a_soft_error() {
+        let frame = RaggedFrame {
+            op: Op::Signature {
+                depth: 2,
+                transform: 0,
+            },
+            dim: 2,
+            lengths: vec![3, 2],
+            values: vec![0.0; 9], // should be 10
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+        // Odd pair count for a kernel op.
+        let frame = RaggedFrame {
+            op: Op::SigKernelGrad { lam1: 0, lam2: 0 },
+            dim: 1,
+            lengths: vec![2, 3, 4],
+            values: vec![0.0; 9],
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
     }
 }

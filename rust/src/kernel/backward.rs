@@ -91,10 +91,52 @@ pub fn sig_kernel_vjp_delta(
     d2
 }
 
-/// Exact vjp of the signature kernel with respect to both paths.
+/// Typed, fallible exact vjp of the signature kernel with respect to both
+/// paths. Returns `(grad_x, grad_y)` in the paths' own `[len, dim]` layouts,
+/// already chained through the path transform in `opts.exec.transform`.
+/// A path with fewer than two points makes the kernel constant (1), so its
+/// gradient is zero.
+pub fn try_sig_kernel_vjp(
+    x: crate::path::Path<'_>,
+    y: crate::path::Path<'_>,
+    opts: &KernelOptions,
+    grad_out: f64,
+) -> Result<(Vec<f64>, Vec<f64>), crate::path::SigError> {
+    if x.dim() != y.dim() {
+        return Err(crate::path::SigError::DimMismatch {
+            left: x.dim(),
+            right: y.dim(),
+        });
+    }
+    let (lx, ly, dim) = (x.len(), y.len(), x.dim());
+    if lx < 2 || ly < 2 {
+        return Ok((vec![0.0; lx * dim], vec![0.0; ly * dim]));
+    }
+    crate::kernel::check_grid_size(lx, ly, opts)?;
+    let (m, n, delta) = delta_matrix(x.data(), y.data(), lx, ly, dim, opts.exec.transform);
+    let grid = solve_pde_grid(&delta, m, n, opts.dyadic_x, opts.dyadic_y);
+    let d2 = sig_kernel_vjp_delta(&delta, m, n, opts.dyadic_x, opts.dyadic_y, &grid, grad_out);
+    let mut gx = vec![0.0; lx * dim];
+    let mut gy = vec![0.0; ly * dim];
+    delta_vjp_to_paths(
+        &d2,
+        x.data(),
+        y.data(),
+        lx,
+        ly,
+        dim,
+        opts.exec.transform,
+        &mut gx,
+        &mut gy,
+    );
+    Ok((gx, gy))
+}
+
+/// Exact vjp of the signature kernel with respect to both paths (flat-slice
+/// wrapper over [`try_sig_kernel_vjp`]; panics on malformed shapes).
 ///
 /// Returns `(grad_x, grad_y)` with shapes `[lx, dim]`, `[ly, dim]`,
-/// already chained through the path transform in `opts.transform`.
+/// already chained through the path transform in `opts.exec.transform`.
 pub fn sig_kernel_vjp(
     x: &[f64],
     y: &[f64],
@@ -104,13 +146,9 @@ pub fn sig_kernel_vjp(
     opts: &KernelOptions,
     grad_out: f64,
 ) -> (Vec<f64>, Vec<f64>) {
-    let (m, n, delta) = delta_matrix(x, y, lx, ly, dim, opts.transform);
-    let grid = solve_pde_grid(&delta, m, n, opts.dyadic_x, opts.dyadic_y);
-    let d2 = sig_kernel_vjp_delta(&delta, m, n, opts.dyadic_x, opts.dyadic_y, &grid, grad_out);
-    let mut gx = vec![0.0; lx * dim];
-    let mut gy = vec![0.0; ly * dim];
-    delta_vjp_to_paths(&d2, x, y, lx, ly, dim, opts.transform, &mut gx, &mut gy);
-    (gx, gy)
+    let xp = crate::path::Path::new(x, lx, dim).expect("sig_kernel_vjp: invalid x shape");
+    let yp = crate::path::Path::new(y, ly, dim).expect("sig_kernel_vjp: invalid y shape");
+    try_sig_kernel_vjp(xp, yp, opts, grad_out).expect("sig_kernel_vjp")
 }
 
 #[cfg(test)]

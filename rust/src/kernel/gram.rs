@@ -1,12 +1,72 @@
 //! Batched signature-kernel computations: paired batches, Gram matrices,
 //! their vjps, and the signature-kernel MMD used for two-sample testing and
 //! generative-model training (the paper's headline application).
+//!
+//! The typed entry points take [`PathBatch`]es and therefore support
+//! **ragged** batches: every pair (x_i, y_j) is solved on its own
+//! (len_x_i − 1) × (len_y_j − 1) PDE grid, so mixed-length corpora need no
+//! padding, and gradients come back in each batch's own ragged layout.
 
-use crate::kernel::backward::sig_kernel_vjp;
-use crate::kernel::{sig_kernel, KernelOptions};
-use crate::util::pool::{num_threads, parallel_for_mut};
+use crate::kernel::backward::try_sig_kernel_vjp;
+use crate::kernel::{try_sig_kernel, KernelOptions};
+use crate::path::{PathBatch, SigError};
+use crate::util::pool::{num_threads, parallel_for_mut, parallel_for_mut_ragged};
 
-/// Paired batch: k(x_i, y_i) for i = 0..batch.
+fn check_dims(x: &PathBatch<'_>, y: &PathBatch<'_>, opts: &KernelOptions) -> Result<(), SigError> {
+    if x.dim() != y.dim() {
+        return Err(SigError::DimMismatch {
+            left: x.dim(),
+            right: y.dim(),
+        });
+    }
+    // Grid sizes are monotone in path length, so validating the longest
+    // (x, y) pair bounds every pair — after this, per-pair `try_sig_kernel`
+    // calls cannot fail and the parallel closures may unwrap.
+    let mx = (0..x.batch()).map(|i| x.len_of(i)).max().unwrap_or(0);
+    let my = (0..y.batch()).map(|j| y.len_of(j)).max().unwrap_or(0);
+    if mx >= 2 && my >= 2 {
+        crate::kernel::check_grid_size(mx, my, opts)?;
+    }
+    Ok(())
+}
+
+/// Typed paired batch: k(x_i, y_i) for i = 0..batch, ragged-capable.
+/// Returns `[batch]`.
+pub fn try_batch_kernel(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    opts: &KernelOptions,
+) -> Result<Vec<f64>, SigError> {
+    check_dims(x, y, opts)?;
+    if x.batch() != y.batch() {
+        return Err(SigError::BatchMismatch {
+            left: x.batch(),
+            right: y.batch(),
+        });
+    }
+    let b = x.batch();
+    let mut out = vec![0.0; b];
+    if b == 0 {
+        return Ok(out);
+    }
+    let work = |i: usize, slot: &mut [f64]| {
+        // Cannot fail: dims were validated above.
+        slot[0] = try_sig_kernel(x.path(i), y.path(i), opts).expect("validated");
+    };
+    if opts.exec.parallel {
+        parallel_for_mut(&mut out, 1, work);
+    } else {
+        for i in 0..b {
+            let mut slot = [0.0];
+            work(i, &mut slot);
+            out[i] = slot[0];
+        }
+    }
+    Ok(out)
+}
+
+/// Paired batch: k(x_i, y_i) for i = 0..batch (flat-slice wrapper over
+/// [`try_batch_kernel`]; panics on malformed shapes).
 /// `x` is `[batch, lx, dim]`, `y` is `[batch, ly, dim]`; returns `[batch]`.
 pub fn batch_kernel(
     x: &[f64],
@@ -17,35 +77,52 @@ pub fn batch_kernel(
     dim: usize,
     opts: &KernelOptions,
 ) -> Vec<f64> {
-    assert_eq!(x.len(), batch * lx * dim);
-    assert_eq!(y.len(), batch * ly * dim);
-    let mut out = vec![0.0; batch];
-    if batch == 0 {
-        return out;
-    }
-    let work = |i: usize, slot: &mut [f64]| {
-        slot[0] = sig_kernel(
-            &x[i * lx * dim..(i + 1) * lx * dim],
-            &y[i * ly * dim..(i + 1) * ly * dim],
-            lx,
-            ly,
-            dim,
-            opts,
-        );
-    };
-    if opts.parallel {
-        parallel_for_mut(&mut out, 1, work);
-    } else {
-        for i in 0..batch {
-            let mut slot = [0.0];
-            work(i, &mut slot);
-            out[i] = slot[0];
-        }
-    }
-    out
+    let xb = PathBatch::uniform(x, batch, lx, dim).expect("batch_kernel: invalid x shape");
+    let yb = PathBatch::uniform(y, batch, ly, dim).expect("batch_kernel: invalid y shape");
+    try_batch_kernel(&xb, &yb, opts).expect("batch_kernel")
 }
 
-/// Paired-batch vjp: given ∂F/∂k_i, return (∂F/∂x, ∂F/∂y).
+/// Typed paired-batch vjp: given ∂F/∂k_i, return (∂F/∂x, ∂F/∂y) in each
+/// batch's own (possibly ragged) flat layout.
+pub fn try_batch_kernel_vjp(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    grad_k: &[f64],
+    opts: &KernelOptions,
+) -> Result<(Vec<f64>, Vec<f64>), SigError> {
+    check_dims(x, y, opts)?;
+    if x.batch() != y.batch() {
+        return Err(SigError::BatchMismatch {
+            left: x.batch(),
+            right: y.batch(),
+        });
+    }
+    let b = x.batch();
+    if grad_k.len() != b {
+        return Err(SigError::CotangentLen {
+            expected: b,
+            got: grad_k.len(),
+        });
+    }
+    let dim = x.dim();
+    let mut gx = vec![0.0; x.total_points() * dim];
+    let gy = std::sync::Mutex::new(vec![0.0; y.total_points() * dim]);
+    if b == 0 {
+        return Ok((gx, gy.into_inner().unwrap()));
+    }
+    let xb = x.element_offsets();
+    let yb = y.element_offsets();
+    parallel_for_mut_ragged(&mut gx, &xb, |i, gxrow| {
+        let (gxi, gyi) =
+            try_sig_kernel_vjp(x.path(i), y.path(i), opts, grad_k[i]).expect("validated");
+        gxrow.copy_from_slice(&gxi);
+        gy.lock().unwrap()[yb[i]..yb[i + 1]].copy_from_slice(&gyi);
+    });
+    Ok((gx, gy.into_inner().unwrap()))
+}
+
+/// Paired-batch vjp (flat-slice wrapper over [`try_batch_kernel_vjp`]):
+/// given ∂F/∂k_i, return (∂F/∂x, ∂F/∂y).
 pub fn batch_kernel_vjp(
     x: &[f64],
     y: &[f64],
@@ -56,27 +133,43 @@ pub fn batch_kernel_vjp(
     dim: usize,
     opts: &KernelOptions,
 ) -> (Vec<f64>, Vec<f64>) {
-    assert_eq!(grad_k.len(), batch);
-    let mut gx = vec![0.0; batch * lx * dim];
-    let gy = std::sync::Mutex::new(vec![0.0; batch * ly * dim]);
-    let sy = ly * dim;
-    parallel_for_mut(&mut gx, lx * dim, |i, gxrow| {
-        let (gxi, gyi) = sig_kernel_vjp(
-            &x[i * lx * dim..(i + 1) * lx * dim],
-            &y[i * sy..(i + 1) * sy],
-            lx,
-            ly,
-            dim,
-            opts,
-            grad_k[i],
-        );
-        gxrow.copy_from_slice(&gxi);
-        gy.lock().unwrap()[i * sy..(i + 1) * sy].copy_from_slice(&gyi);
-    });
-    (gx, gy.into_inner().unwrap())
+    let xb = PathBatch::uniform(x, batch, lx, dim).expect("batch_kernel_vjp: invalid x shape");
+    let yb = PathBatch::uniform(y, batch, ly, dim).expect("batch_kernel_vjp: invalid y shape");
+    try_batch_kernel_vjp(&xb, &yb, grad_k, opts).expect("batch_kernel_vjp")
 }
 
-/// Full Gram matrix: `[bx, by]` of k(x_i, y_j). Parallel over all pairs.
+/// Typed full Gram matrix: `[bx, by]` of k(x_i, y_j), ragged-capable —
+/// every pair is solved on its own grid. Parallel over all pairs.
+pub fn try_gram(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    opts: &KernelOptions,
+) -> Result<Vec<f64>, SigError> {
+    check_dims(x, y, opts)?;
+    let (bx, by) = (x.batch(), y.batch());
+    let mut out = vec![0.0; bx * by];
+    if bx * by == 0 {
+        return Ok(out);
+    }
+    let work = |p: usize, slot: &mut [f64]| {
+        let i = p / by;
+        let j = p % by;
+        slot[0] = try_sig_kernel(x.path(i), y.path(j), opts).expect("validated");
+    };
+    if opts.exec.parallel {
+        parallel_for_mut(&mut out, 1, work);
+    } else {
+        for p in 0..bx * by {
+            let mut slot = [0.0];
+            work(p, &mut slot);
+            out[p] = slot[0];
+        }
+    }
+    Ok(out)
+}
+
+/// Full Gram matrix: `[bx, by]` of k(x_i, y_j) (flat-slice wrapper over
+/// [`try_gram`]; panics on malformed shapes). Parallel over all pairs.
 pub fn gram(
     x: &[f64],
     y: &[f64],
@@ -87,41 +180,91 @@ pub fn gram(
     dim: usize,
     opts: &KernelOptions,
 ) -> Vec<f64> {
-    assert_eq!(x.len(), bx * lx * dim);
-    assert_eq!(y.len(), by * ly * dim);
-    let mut out = vec![0.0; bx * by];
-    if bx * by == 0 {
-        return out;
-    }
-    let work = |p: usize, slot: &mut [f64]| {
-        let i = p / by;
-        let j = p % by;
-        slot[0] = sig_kernel(
-            &x[i * lx * dim..(i + 1) * lx * dim],
-            &y[j * ly * dim..(j + 1) * ly * dim],
-            lx,
-            ly,
-            dim,
-            opts,
-        );
-    };
-    if opts.parallel {
-        parallel_for_mut(&mut out, 1, work);
-    } else {
-        for p in 0..bx * by {
-            let mut slot = [0.0];
-            work(p, &mut slot);
-            out[p] = slot[0];
-        }
-    }
-    out
+    let xb = PathBatch::uniform(x, bx, lx, dim).expect("gram: invalid x shape");
+    let yb = PathBatch::uniform(y, by, ly, dim).expect("gram: invalid y shape");
+    try_gram(&xb, &yb, opts).expect("gram")
 }
 
-/// Gram vjp: given W = ∂F/∂Gram (`[bx, by]`), return
-/// (∂F/∂x `[bx,lx,dim]`, ∂F/∂y `[by,ly,dim]`).
+/// Typed Gram vjp: given W = ∂F/∂Gram (`[bx, by]`), return
+/// (∂F/∂x, ∂F/∂y) in each batch's own (possibly ragged) flat layout.
 ///
 /// Parallelised over x-rows with per-thread accumulation buffers for the
 /// shared ∂F/∂y (merged once at the end) — no lock on the hot path.
+pub fn try_gram_vjp(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    weights: &[f64],
+    opts: &KernelOptions,
+) -> Result<(Vec<f64>, Vec<f64>), SigError> {
+    check_dims(x, y, opts)?;
+    let (bx, by) = (x.batch(), y.batch());
+    if weights.len() != bx * by {
+        return Err(SigError::CotangentLen {
+            expected: bx * by,
+            got: weights.len(),
+        });
+    }
+    let dim = x.dim();
+    let mut gx = vec![0.0; x.total_points() * dim];
+    let gy_total = y.total_points() * dim;
+    if bx == 0 || by == 0 {
+        return Ok((gx, vec![0.0; gy_total]));
+    }
+    let xo = x.element_offsets();
+    let yo = y.element_offsets();
+    let nt = num_threads().min(bx);
+    let mut gy_parts = vec![vec![0.0; gy_total]; nt];
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    // gx rows are claimed exactly once per i (disjoint writes through the
+    // base pointer, as in `parallel_for_mut_ragged`); gy is accumulated into
+    // per-thread buffers and merged below — no lock on the hot path.
+    let gx_base = gx.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        let next = &next;
+        let (xo, yo) = (&xo, &yo);
+        for part in gy_parts.iter_mut() {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= bx {
+                    break;
+                }
+                // SAFETY: row i is gx[xo[i]..xo[i+1]], written by exactly one
+                // worker (offsets are non-decreasing); `gx` outlives the scope.
+                let gxrow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (gx_base as *mut f64).add(xo[i]),
+                        xo[i + 1] - xo[i],
+                    )
+                };
+                for j in 0..by {
+                    let w = weights[i * by + j];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let (gxi, gyj) = try_sig_kernel_vjp(x.path(i), y.path(j), opts, w)
+                        .expect("validated");
+                    for (o, v) in gxrow.iter_mut().zip(gxi.iter()) {
+                        *o += v;
+                    }
+                    for (o, v) in part[yo[j]..yo[j + 1]].iter_mut().zip(gyj.iter()) {
+                        *o += v;
+                    }
+                }
+            });
+        }
+    });
+    let mut gy = vec![0.0; gy_total];
+    for part in gy_parts {
+        for (o, v) in gy.iter_mut().zip(part.iter()) {
+            *o += v;
+        }
+    }
+    Ok((gx, gy))
+}
+
+/// Gram vjp (flat-slice wrapper over [`try_gram_vjp`]): given
+/// W = ∂F/∂Gram (`[bx, by]`), return
+/// (∂F/∂x `[bx,lx,dim]`, ∂F/∂y `[by,ly,dim]`).
 pub fn gram_vjp(
     x: &[f64],
     y: &[f64],
@@ -133,65 +276,33 @@ pub fn gram_vjp(
     dim: usize,
     opts: &KernelOptions,
 ) -> (Vec<f64>, Vec<f64>) {
-    assert_eq!(weights.len(), bx * by);
-    let sx = lx * dim;
-    let sy = ly * dim;
-    let mut gx = vec![0.0; bx * sx];
-    let nt = num_threads().min(bx.max(1));
-    let mut gy_parts = vec![vec![0.0; by * sy]; nt];
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    // gx rows are claimed exactly once per i (disjoint writes through the
-    // base pointer, as in `parallel_for_mut`); gy is accumulated into
-    // per-thread buffers and merged below — no lock on the hot path.
-    let gx_base = gx.as_mut_ptr() as usize;
-    std::thread::scope(|s| {
-        let next = &next;
-        for part in gy_parts.iter_mut() {
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= bx {
-                    break;
-                }
-                // SAFETY: row i is written by exactly one worker; `gx`
-                // outlives the scope.
-                let gxrow = unsafe {
-                    std::slice::from_raw_parts_mut((gx_base as *mut f64).add(i * sx), sx)
-                };
-                for j in 0..by {
-                    let w = weights[i * by + j];
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let (gxi, gyj) = sig_kernel_vjp(
-                        &x[i * sx..(i + 1) * sx],
-                        &y[j * sy..(j + 1) * sy],
-                        lx,
-                        ly,
-                        dim,
-                        opts,
-                        w,
-                    );
-                    for (o, v) in gxrow.iter_mut().zip(gxi.iter()) {
-                        *o += v;
-                    }
-                    for (o, v) in part[j * sy..(j + 1) * sy].iter_mut().zip(gyj.iter()) {
-                        *o += v;
-                    }
-                }
-            });
-        }
-    });
-    let mut gy = vec![0.0; by * sy];
-    for part in gy_parts {
-        for (o, v) in gy.iter_mut().zip(part.iter()) {
-            *o += v;
-        }
-    }
-    (gx, gy)
+    let xb = PathBatch::uniform(x, bx, lx, dim).expect("gram_vjp: invalid x shape");
+    let yb = PathBatch::uniform(y, by, ly, dim).expect("gram_vjp: invalid y shape");
+    try_gram_vjp(&xb, &yb, weights, opts).expect("gram_vjp")
 }
 
-/// Squared signature-kernel MMD between two path distributions (biased
-/// V-statistic): mean(Kxx) − 2·mean(Kxy) + mean(Kyy).
+/// Typed squared signature-kernel MMD between two path distributions (biased
+/// V-statistic): mean(Kxx) − 2·mean(Kxy) + mean(Kyy). Ragged-capable.
+pub fn try_mmd2(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    opts: &KernelOptions,
+) -> Result<f64, SigError> {
+    check_dims(x, y, opts)?;
+    if x.is_empty() || y.is_empty() {
+        return Err(SigError::InsufficientBatch {
+            need: 1,
+            got: x.batch().min(y.batch()),
+        });
+    }
+    let kxx = try_gram(x, x, opts)?;
+    let kxy = try_gram(x, y, opts)?;
+    let kyy = try_gram(y, y, opts)?;
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    Ok(mean(&kxx) - 2.0 * mean(&kxy) + mean(&kyy))
+}
+
+/// Squared signature-kernel MMD (flat-slice wrapper over [`try_mmd2`]).
 pub fn mmd2(
     x: &[f64],
     y: &[f64],
@@ -202,15 +313,39 @@ pub fn mmd2(
     dim: usize,
     opts: &KernelOptions,
 ) -> f64 {
-    let kxx = gram(x, x, bx, bx, lx, lx, dim, opts);
-    let kxy = gram(x, y, bx, by, lx, ly, dim, opts);
-    let kyy = gram(y, y, by, by, ly, ly, dim, opts);
-    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
-    mean(&kxx) - 2.0 * mean(&kxy) + mean(&kyy)
+    let xb = PathBatch::uniform(x, bx, lx, dim).expect("mmd2: invalid x shape");
+    let yb = PathBatch::uniform(y, by, ly, dim).expect("mmd2: invalid y shape");
+    try_mmd2(&xb, &yb, opts).expect("mmd2")
 }
 
-/// Unbiased MMD² (U-statistic): excludes the diagonals of Kxx and Kyy.
+/// Typed unbiased MMD² (U-statistic): excludes the diagonals of Kxx and Kyy.
 /// This is the estimator used for two-sample hypothesis testing.
+pub fn try_mmd2_unbiased(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    opts: &KernelOptions,
+) -> Result<f64, SigError> {
+    check_dims(x, y, opts)?;
+    let (bx, by) = (x.batch(), y.batch());
+    if bx < 2 || by < 2 {
+        return Err(SigError::InsufficientBatch {
+            need: 2,
+            got: bx.min(by),
+        });
+    }
+    let kxx = try_gram(x, x, opts)?;
+    let kxy = try_gram(x, y, opts)?;
+    let kyy = try_gram(y, y, opts)?;
+    let off_mean = |v: &[f64], b: usize| {
+        let total: f64 = v.iter().sum();
+        let diag: f64 = (0..b).map(|i| v[i * b + i]).sum();
+        (total - diag) / (b * (b - 1)) as f64
+    };
+    let mean_xy = kxy.iter().sum::<f64>() / (bx * by) as f64;
+    Ok(off_mean(&kxx, bx) - 2.0 * mean_xy + off_mean(&kyy, by))
+}
+
+/// Unbiased MMD² (flat-slice wrapper over [`try_mmd2_unbiased`]).
 pub fn mmd2_unbiased(
     x: &[f64],
     y: &[f64],
@@ -221,21 +356,32 @@ pub fn mmd2_unbiased(
     dim: usize,
     opts: &KernelOptions,
 ) -> f64 {
-    assert!(bx >= 2 && by >= 2);
-    let kxx = gram(x, x, bx, bx, lx, lx, dim, opts);
-    let kxy = gram(x, y, bx, by, lx, ly, dim, opts);
-    let kyy = gram(y, y, by, by, ly, ly, dim, opts);
-    let off_mean = |v: &[f64], b: usize| {
-        let total: f64 = v.iter().sum();
-        let diag: f64 = (0..b).map(|i| v[i * b + i]).sum();
-        (total - diag) / (b * (b - 1)) as f64
-    };
-    let mean_xy = kxy.iter().sum::<f64>() / (bx * by) as f64;
-    off_mean(&kxx, bx) - 2.0 * mean_xy + off_mean(&kyy, by)
+    let xb = PathBatch::uniform(x, bx, lx, dim).expect("mmd2_unbiased: invalid x shape");
+    let yb = PathBatch::uniform(y, by, ly, dim).expect("mmd2_unbiased: invalid y shape");
+    try_mmd2_unbiased(&xb, &yb, opts).expect("mmd2_unbiased")
 }
 
-/// MMD² and its exact gradient with respect to the x-paths (the generator
-/// sample in training): uses Algorithm 4 end-to-end through both Gram terms.
+/// Typed MMD² and its exact gradient with respect to the x-paths (the
+/// generator sample in training): uses Algorithm 4 end-to-end through both
+/// Gram terms. The gradient comes back in x's own (possibly ragged) layout.
+pub fn try_mmd2_with_grad(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    opts: &KernelOptions,
+) -> Result<(f64, Vec<f64>), SigError> {
+    let value = try_mmd2(x, y, opts)?;
+    let (bx, by) = (x.batch(), y.batch());
+    // ∂/∂x_i [ (1/bx²)ΣΣ k(x_a,x_b) ] = (2/bx²) Σ_b ∇₁k(x_i, x_b) (symmetry).
+    let wxx = vec![2.0 / (bx * bx) as f64; bx * bx];
+    let (gxx, _) = try_gram_vjp(x, x, &wxx, opts)?;
+    let wxy = vec![-2.0 / (bx * by) as f64; bx * by];
+    let (gxy, _) = try_gram_vjp(x, y, &wxy, opts)?;
+    let grad: Vec<f64> = gxx.iter().zip(gxy.iter()).map(|(a, b)| a + b).collect();
+    Ok((value, grad))
+}
+
+/// MMD² and its exact gradient with respect to the x-paths (flat-slice
+/// wrapper over [`try_mmd2_with_grad`]).
 pub fn mmd2_with_grad(
     x: &[f64],
     y: &[f64],
@@ -246,19 +392,16 @@ pub fn mmd2_with_grad(
     dim: usize,
     opts: &KernelOptions,
 ) -> (f64, Vec<f64>) {
-    let value = mmd2(x, y, bx, by, lx, ly, dim, opts);
-    // ∂/∂x_i [ (1/bx²)ΣΣ k(x_a,x_b) ] = (2/bx²) Σ_b ∇₁k(x_i, x_b) (symmetry).
-    let wxx = vec![2.0 / (bx * bx) as f64; bx * bx];
-    let (gxx, _) = gram_vjp(x, x, &wxx, bx, bx, lx, lx, dim, opts);
-    let wxy = vec![-2.0 / (bx * by) as f64; bx * by];
-    let (gxy, _) = gram_vjp(x, y, &wxy, bx, by, lx, ly, dim, opts);
-    let grad: Vec<f64> = gxx.iter().zip(gxy.iter()).map(|(a, b)| a + b).collect();
-    (value, grad)
+    let xb = PathBatch::uniform(x, bx, lx, dim).expect("mmd2_with_grad: invalid x shape");
+    let yb = PathBatch::uniform(y, by, ly, dim).expect("mmd2_with_grad: invalid y shape");
+    try_mmd2_with_grad(&xb, &yb, opts).expect("mmd2_with_grad")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernel::backward::sig_kernel_vjp;
+    use crate::kernel::sig_kernel;
     use crate::util::linalg::max_abs_diff;
     use crate::util::rng::Rng;
 
@@ -417,5 +560,125 @@ mod tests {
                 grad[idx]
             );
         }
+    }
+
+    /// Ragged Gram bit-matches the per-pair loop over `sig_kernel`,
+    /// including length-1 paths (kernel exactly 1).
+    #[test]
+    fn ragged_gram_bitmatches_per_pair_loop() {
+        let mut rng = Rng::new(49);
+        let d = 2;
+        let xl = [4usize, 1, 9];
+        let yl = [2usize, 7, 1, 5];
+        let mut xdata = Vec::new();
+        for &l in &xl {
+            xdata.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let mut ydata = Vec::new();
+        for &l in &yl {
+            ydata.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let xb = PathBatch::ragged(&xdata, &xl, d).unwrap();
+        let yb = PathBatch::ragged(&ydata, &yl, d).unwrap();
+        let opts = KernelOptions::default().dyadic(1, 0);
+        for opts in [opts, opts.serial()] {
+            let g = try_gram(&xb, &yb, &opts).unwrap();
+            let mut xo = 0;
+            for (i, &lx) in xl.iter().enumerate() {
+                let mut yo = 0;
+                for (j, &ly) in yl.iter().enumerate() {
+                    let want = if lx < 2 || ly < 2 {
+                        1.0
+                    } else {
+                        sig_kernel(
+                            &xdata[xo * d..(xo + lx) * d],
+                            &ydata[yo * d..(yo + ly) * d],
+                            lx,
+                            ly,
+                            d,
+                            &opts,
+                        )
+                    };
+                    assert_eq!(g[i * yl.len() + j], want, "pair ({i},{j})");
+                    yo += ly;
+                }
+                xo += lx;
+            }
+        }
+    }
+
+    /// Ragged Gram vjp matches serially accumulated per-pair vjps.
+    #[test]
+    fn ragged_gram_vjp_matches_pairwise_sum() {
+        let mut rng = Rng::new(50);
+        let d = 2;
+        let xl = [3usize, 6];
+        let yl = [5usize, 2, 4];
+        let mut xdata = Vec::new();
+        for &l in &xl {
+            xdata.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let mut ydata = Vec::new();
+        for &l in &yl {
+            ydata.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let xb = PathBatch::ragged(&xdata, &xl, d).unwrap();
+        let yb = PathBatch::ragged(&ydata, &yl, d).unwrap();
+        let mut w = vec![0.0; xl.len() * yl.len()];
+        rng.fill_normal(&mut w);
+        let opts = KernelOptions::default();
+        let (gx, gy) = try_gram_vjp(&xb, &yb, &w, &opts).unwrap();
+        let mut gx_ref = vec![0.0; xb.total_points() * d];
+        let mut gy_ref = vec![0.0; yb.total_points() * d];
+        let xo = xb.element_offsets();
+        let yo = yb.element_offsets();
+        for i in 0..xl.len() {
+            for j in 0..yl.len() {
+                let (a, b) = sig_kernel_vjp(
+                    xb.values_of(i),
+                    yb.values_of(j),
+                    xl[i],
+                    yl[j],
+                    d,
+                    &opts,
+                    w[i * yl.len() + j],
+                );
+                for (o, v) in gx_ref[xo[i]..xo[i + 1]].iter_mut().zip(a.iter()) {
+                    *o += v;
+                }
+                for (o, v) in gy_ref[yo[j]..yo[j + 1]].iter_mut().zip(b.iter()) {
+                    *o += v;
+                }
+            }
+        }
+        assert!(max_abs_diff(&gx, &gx_ref) < 1e-12);
+        assert!(max_abs_diff(&gy, &gy_ref) < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_mismatched_batches_error_cleanly() {
+        let data = [0.0, 0.0, 1.0, 1.0];
+        let one = PathBatch::uniform(&data, 1, 2, 2).unwrap();
+        let empty = PathBatch::ragged(&[], &[], 2).unwrap();
+        let opts = KernelOptions::default();
+        // Empty Gram is fine (an empty matrix) …
+        assert!(try_gram(&empty, &one, &opts).unwrap().is_empty());
+        // … but MMD over an empty sample is an error, not NaN.
+        assert!(matches!(
+            try_mmd2(&empty, &one, &opts),
+            Err(SigError::InsufficientBatch { .. })
+        ));
+        // Paired ops need equal batch sizes.
+        assert!(matches!(
+            try_batch_kernel(&empty, &one, &opts),
+            Err(SigError::BatchMismatch { .. })
+        ));
+        // Dim mismatch is caught before any compute.
+        let d3 = [0.0; 6];
+        let three = PathBatch::uniform(&d3, 1, 2, 3).unwrap();
+        assert!(matches!(
+            try_gram(&one, &three, &opts),
+            Err(SigError::DimMismatch { .. })
+        ));
     }
 }

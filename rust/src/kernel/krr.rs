@@ -5,8 +5,13 @@
 //! with cross-Gram rows; includes the kernel-normalisation option
 //! k̃(x,y) = k(x,y)/√(k(x,x)k(y,y)) that keeps signature kernels of long
 //! paths in a numerically sane range.
+//!
+//! Training and query sets may be **ragged** (paths of different lengths):
+//! fit with [`KernelRidge::try_fit`] on a [`PathBatch`] and predict on any
+//! other batch — the cross-Gram pairs every length with every other.
 
-use crate::kernel::{gram, KernelOptions};
+use crate::kernel::{try_batch_kernel, try_gram, KernelOptions};
+use crate::path::{PathBatch, SigError};
 
 /// Cholesky of A + λI; None if a pivot fails (not PD at this ridge).
 fn try_cholesky(a0: &[f64], n: usize, lam: f64) -> Option<Vec<f64>> {
@@ -35,11 +40,14 @@ fn try_cholesky(a0: &[f64], n: usize, lam: f64) -> Option<Vec<f64>> {
 
 /// Fitted signature-kernel ridge regressor.
 pub struct KernelRidge {
-    /// Training paths, flattened `[n, len, dim]` (owned copy).
+    /// Training paths, flat (possibly ragged) buffer (owned copy).
     train: Vec<f64>,
-    n: usize,
-    len: usize,
+    /// Per-path lengths of the training set.
+    train_lengths: Vec<usize>,
     dim: usize,
+    /// Shared training length when the fit batch was uniform — required by
+    /// the legacy [`KernelRidge::predict`] wrapper.
+    uniform_len: Option<usize>,
     alpha: Vec<f64>,
     opts: KernelOptions,
     normalize: bool,
@@ -51,7 +59,7 @@ pub struct KernelRidge {
 /// λ is *relative* to the mean diagonal so the same value works for raw and
 /// normalised kernels; the PDE-discretised Gram can carry small negative
 /// eigenvalues (quadrature error), which the ridge must dominate.
-fn solve_ridge(a: Vec<f64>, n: usize, lambda: f64, y: &[f64]) -> Vec<f64> {
+fn solve_ridge(a: Vec<f64>, n: usize, lambda: f64, y: &[f64]) -> Result<Vec<f64>, SigError> {
     let mean_diag = (0..n).map(|i| a[i * n + i]).sum::<f64>() / n as f64;
     // The discretised Gram can have negative eigenvalues larger than the
     // requested ridge (coarse dyadic orders); escalate λ until Cholesky
@@ -63,7 +71,11 @@ fn solve_ridge(a: Vec<f64>, n: usize, lambda: f64, y: &[f64]) -> Vec<f64> {
             Some(l) => break l,
             None => {
                 attempt += 1;
-                assert!(attempt <= 8, "ridge system not PD even at λ = {lam}");
+                if attempt > 8 {
+                    return Err(SigError::NonFinite(
+                        "ridge system not positive definite even after escalating λ",
+                    ));
+                }
                 lam *= 10.0;
             }
         }
@@ -86,31 +98,38 @@ fn solve_ridge(a: Vec<f64>, n: usize, lambda: f64, y: &[f64]) -> Vec<f64> {
         }
         x[i] = s / a[i * n + i];
     }
-    x
+    Ok(x)
 }
 
 impl KernelRidge {
-    /// Fit on training paths `[n, len, dim]` with targets `[n]`.
-    pub fn fit(
-        paths: &[f64],
+    /// Typed, fallible fit on a (possibly ragged) batch of training paths
+    /// with targets `[n]`.
+    pub fn try_fit(
+        paths: &PathBatch<'_>,
         y: &[f64],
-        n: usize,
-        len: usize,
-        dim: usize,
         lambda: f64,
         normalize: bool,
         opts: &KernelOptions,
-    ) -> KernelRidge {
-        assert_eq!(paths.len(), n * len * dim);
-        assert_eq!(y.len(), n);
-        assert!(lambda > 0.0);
-        let mut k = gram(paths, paths, n, n, len, len, dim, opts);
-        assert!(
-            k.iter().all(|v| v.is_finite()),
-            "signature-kernel Gram overflowed f64; rescale the paths (the \
-             kernel grows exponentially in path 1-variation) or increase \
-             the dyadic order"
-        );
+    ) -> Result<KernelRidge, SigError> {
+        let n = paths.batch();
+        if y.len() != n {
+            return Err(SigError::CotangentLen {
+                expected: n,
+                got: y.len(),
+            });
+        }
+        if n == 0 {
+            return Err(SigError::InsufficientBatch { need: 1, got: 0 });
+        }
+        if !(lambda > 0.0) {
+            return Err(SigError::NonFinite("ridge λ must be positive"));
+        }
+        let mut k = try_gram(paths, paths, opts)?;
+        if !k.iter().all(|v| v.is_finite()) {
+            // The kernel grows exponentially in path 1-variation; rescale the
+            // paths or increase the dyadic order.
+            return Err(SigError::NonFinite("signature-kernel Gram overflowed f64"));
+        }
         let mut train_norms = vec![1.0; n];
         if normalize {
             for i in 0..n {
@@ -122,45 +141,87 @@ impl KernelRidge {
                 }
             }
         }
-        let alpha = solve_ridge(k, n, lambda, y);
-        KernelRidge {
-            train: paths.to_vec(),
-            n,
-            len,
-            dim,
+        let alpha = solve_ridge(k, n, lambda, y)?;
+        let train_lengths: Vec<usize> = (0..n).map(|i| paths.len_of(i)).collect();
+        Ok(KernelRidge {
+            train: paths.data().to_vec(),
+            train_lengths,
+            dim: paths.dim(),
+            uniform_len: paths.uniform_len(),
             alpha,
             opts: *opts,
             normalize,
             train_norms,
-        }
+        })
     }
 
-    /// Predict for query paths `[m, len, dim]` -> `[m]`.
-    pub fn predict(&self, paths: &[f64], m: usize) -> Vec<f64> {
-        assert_eq!(paths.len(), m * self.len * self.dim);
-        let mut kx = gram(
-            paths, &self.train, m, self.n, self.len, self.len, self.dim, &self.opts,
-        );
+    /// Fit on uniform training paths `[n, len, dim]` with targets `[n]`
+    /// (flat-slice wrapper over [`KernelRidge::try_fit`]; panics on
+    /// malformed shapes).
+    pub fn fit(
+        paths: &[f64],
+        y: &[f64],
+        n: usize,
+        len: usize,
+        dim: usize,
+        lambda: f64,
+        normalize: bool,
+        opts: &KernelOptions,
+    ) -> KernelRidge {
+        let pb = PathBatch::uniform(paths, n, len, dim).expect("KernelRidge::fit: invalid shape");
+        KernelRidge::try_fit(&pb, y, lambda, normalize, opts).expect("KernelRidge::fit")
+    }
+
+    /// The training batch as a typed view over the owned copy.
+    fn train_batch(&self) -> PathBatch<'_> {
+        PathBatch::ragged(&self.train, &self.train_lengths, self.dim)
+            .expect("internal: stored training batch is valid")
+    }
+
+    /// Typed, fallible prediction for a (possibly ragged) batch of query
+    /// paths; returns `[paths.batch()]`.
+    pub fn try_predict(&self, paths: &PathBatch<'_>) -> Result<Vec<f64>, SigError> {
+        if paths.dim() != self.dim {
+            return Err(SigError::DimMismatch {
+                left: paths.dim(),
+                right: self.dim,
+            });
+        }
+        let m = paths.batch();
+        let n = self.train_lengths.len();
+        let train = self.train_batch();
+        let mut kx = try_gram(paths, &train, &self.opts)?;
         if self.normalize {
-            let kqq = crate::kernel::batch_kernel(
-                paths, paths, m, self.len, self.len, self.dim, &self.opts,
-            );
+            let kqq = try_batch_kernel(paths, paths, &self.opts)?;
             for i in 0..m {
                 let qi = kqq[i].max(1e-300).sqrt();
-                for j in 0..self.n {
-                    kx[i * self.n + j] /= qi * self.train_norms[j];
+                for j in 0..n {
+                    kx[i * n + j] /= qi * self.train_norms[j];
                 }
             }
         }
-        (0..m)
+        Ok((0..m)
             .map(|i| {
-                kx[i * self.n..(i + 1) * self.n]
+                kx[i * n..(i + 1) * n]
                     .iter()
                     .zip(&self.alpha)
                     .map(|(k, a)| k * a)
                     .sum()
             })
-            .collect()
+            .collect())
+    }
+
+    /// Predict for uniform query paths `[m, len, dim]` -> `[m]`, where `len`
+    /// is the (uniform) training length (flat-slice wrapper over
+    /// [`KernelRidge::try_predict`]; panics on malformed shapes or when the
+    /// model was fitted on a ragged training set).
+    pub fn predict(&self, paths: &[f64], m: usize) -> Vec<f64> {
+        let len = self
+            .uniform_len
+            .expect("KernelRidge::predict: model fitted on a ragged batch; use try_predict");
+        let pb = PathBatch::uniform(paths, m, len, self.dim)
+            .expect("KernelRidge::predict: invalid shape");
+        self.try_predict(&pb).expect("KernelRidge::predict")
     }
 }
 
@@ -254,10 +315,40 @@ mod tests {
         let k = vec![2.0, 1.0, 1.0, 2.0];
         let y = [5.0, 7.0];
         // λ is relative to mean(diag) = 2, so λ = 0.5 adds identity·1.
-        let alpha = solve_ridge(k, 2, 0.5, &y);
+        let alpha = solve_ridge(k, 2, 0.5, &y).unwrap();
         // inverse of [[3,1],[1,3]] = 1/8 [[3,-1],[-1,3]]
         let want = [(3.0 * 5.0 - 7.0) / 8.0, (-5.0 + 3.0 * 7.0) / 8.0];
         assert!((alpha[0] - want[0]).abs() < 1e-12);
         assert!((alpha[1] - want[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fits_and_predicts_on_ragged_paths() {
+        // Variable-length training set: target = squared endpoint
+        // displacement of the first channel (length-independent).
+        let mut rng = Rng::new(94);
+        let dim = 2;
+        let lengths: Vec<usize> = (0..20).map(|i| 5 + (i % 7)).collect();
+        let mut data = Vec::new();
+        let mut y = Vec::new();
+        for &l in &lengths {
+            let p = rng.brownian_path(l, dim, 0.25);
+            let d0 = p[(l - 1) * dim] - p[0];
+            y.push(d0 * d0);
+            data.extend(p);
+        }
+        let pb = PathBatch::ragged(&data, &lengths, dim).unwrap();
+        let opts = KernelOptions::default().transform(Transform::TimeAug);
+        let model = KernelRidge::try_fit(&pb, &y, 1e-6, true, &opts).unwrap();
+        let pred = model.try_predict(&pb).unwrap();
+        let err = crate::util::linalg::rel_err(&pred, &y);
+        assert!(err < 1e-2, "ragged train rel err {err}");
+        // The uniform `predict` wrapper refuses ragged-trained models via
+        // panic; the typed route must also reject dim mismatches cleanly.
+        let bad = PathBatch::uniform(&[0.0; 6], 1, 2, 3).unwrap();
+        assert!(matches!(
+            model.try_predict(&bad),
+            Err(SigError::DimMismatch { .. })
+        ));
     }
 }

@@ -13,16 +13,22 @@ pub mod lift;
 pub mod pde_baseline;
 pub mod solver;
 
-pub use backward::{sig_kernel_vjp, sig_kernel_vjp_delta};
+pub use backward::{sig_kernel_vjp, sig_kernel_vjp_delta, try_sig_kernel_vjp};
 pub use blocked::solve_pde_blocked;
 pub use delta::{delta_matrix, delta_vjp_to_paths};
-pub use gram::{batch_kernel, batch_kernel_vjp, gram, gram_vjp, mmd2, mmd2_with_grad};
+pub use gram::{
+    batch_kernel, batch_kernel_vjp, gram, gram_vjp, mmd2, mmd2_with_grad, try_batch_kernel,
+    try_batch_kernel_vjp, try_gram, try_gram_vjp, try_mmd2, try_mmd2_unbiased,
+    try_mmd2_with_grad,
+};
 pub use krr::KernelRidge;
 pub use lift::{lifted_delta, sig_kernel_lifted, StaticKernel};
 pub use pde_baseline::sig_kernel_vjp_pde_approx;
 pub use solver::{solve_pde, solve_pde_grid};
 
-use crate::transforms::Transform;
+pub use crate::path::KernelOptions;
+
+use crate::path::{Path, SigError};
 
 /// Which PDE sweep to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,53 +40,62 @@ pub enum SolverKind {
     Blocked,
 }
 
-/// Options for signature-kernel computations.
-#[derive(Clone, Copy, Debug)]
-pub struct KernelOptions {
-    /// Dyadic refinement order for the first path (λ1).
-    pub dyadic_x: u32,
-    /// Dyadic refinement order for the second path (λ2). The paper allows
-    /// λ1 ≠ λ2 — useful when x and y have very different lengths.
-    pub dyadic_y: u32,
-    pub solver: SolverKind,
-    pub transform: Transform,
-    /// Parallelise batched computations over pairs.
-    pub parallel: bool,
+/// Hard cap on refined PDE grid cells reachable from the fallible API
+/// (2^30 ≈ 1e9 cells) — guards wire-supplied dyadic orders and lengths
+/// against shift overflow and absurd allocations.
+const MAX_GRID_CELLS: u128 = 1 << 30;
+
+/// Validate that the dyadically refined grid for an (lx, ly) pair is sane.
+pub(crate) fn check_grid_size(
+    lx: usize,
+    ly: usize,
+    opts: &KernelOptions,
+) -> Result<(), SigError> {
+    if opts.dyadic_x > 32 || opts.dyadic_y > 32 {
+        return Err(SigError::TooLarge("dyadic refinement order"));
+    }
+    // The transform can lengthen the paths (lead-lag: 2L−1); bound the grid
+    // the solver actually sees.
+    let tlx = opts.exec.transform.out_len(lx);
+    let tly = opts.exec.transform.out_len(ly);
+    let rows = ((tlx - 1) as u128) << opts.dyadic_x;
+    let cols = ((tly - 1) as u128) << opts.dyadic_y;
+    if (rows + 1) * (cols + 1) > MAX_GRID_CELLS {
+        return Err(SigError::TooLarge("refined PDE grid"));
+    }
+    Ok(())
 }
 
-impl Default for KernelOptions {
-    fn default() -> Self {
-        KernelOptions {
-            dyadic_x: 0,
-            dyadic_y: 0,
-            solver: SolverKind::Row,
-            transform: Transform::None,
-            parallel: true,
-        }
+/// Typed, fallible signature kernel k(x, y). The paths must share a
+/// dimension; a path with fewer than two points has the identity signature,
+/// so the kernel degenerates to 1.
+pub fn try_sig_kernel(x: Path<'_>, y: Path<'_>, opts: &KernelOptions) -> Result<f64, SigError> {
+    if x.dim() != y.dim() {
+        return Err(SigError::DimMismatch {
+            left: x.dim(),
+            right: y.dim(),
+        });
     }
+    if x.len() < 2 || y.len() < 2 {
+        return Ok(1.0);
+    }
+    check_grid_size(x.len(), y.len(), opts)?;
+    let (rows, cols, d) = delta_matrix(
+        x.data(),
+        y.data(),
+        x.len(),
+        y.len(),
+        x.dim(),
+        opts.exec.transform,
+    );
+    Ok(match opts.solver {
+        SolverKind::Row => solve_pde(&d, rows, cols, opts.dyadic_x, opts.dyadic_y),
+        SolverKind::Blocked => solve_pde_blocked(&d, rows, cols, opts.dyadic_x, opts.dyadic_y),
+    })
 }
 
-impl KernelOptions {
-    pub fn dyadic(mut self, l1: u32, l2: u32) -> Self {
-        self.dyadic_x = l1;
-        self.dyadic_y = l2;
-        self
-    }
-    pub fn solver(mut self, s: SolverKind) -> Self {
-        self.solver = s;
-        self
-    }
-    pub fn transform(mut self, t: Transform) -> Self {
-        self.transform = t;
-        self
-    }
-    pub fn serial(mut self) -> Self {
-        self.parallel = false;
-        self
-    }
-}
-
-/// Signature kernel k(x, y) of two paths (`[lx, d]`, `[ly, d]` row-major).
+/// Signature kernel k(x, y) of two paths (`[lx, d]`, `[ly, d]` row-major) —
+/// flat-slice wrapper over [`try_sig_kernel`]; panics on malformed shapes.
 pub fn sig_kernel(
     x: &[f64],
     y: &[f64],
@@ -89,18 +104,34 @@ pub fn sig_kernel(
     dim: usize,
     opts: &KernelOptions,
 ) -> f64 {
-    let (rows, cols, d) = delta_matrix(x, y, lx, ly, dim, opts.transform);
-    match opts.solver {
-        SolverKind::Row => solve_pde(&d, rows, cols, opts.dyadic_x, opts.dyadic_y),
-        SolverKind::Blocked => solve_pde_blocked(&d, rows, cols, opts.dyadic_x, opts.dyadic_y),
-    }
+    let xp = Path::new(x, lx, dim).expect("sig_kernel: invalid x shape");
+    let yp = Path::new(y, ly, dim).expect("sig_kernel: invalid y shape");
+    try_sig_kernel(xp, yp, opts).expect("sig_kernel")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transforms::Transform;
     use crate::util::prop::check;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn typed_kernel_degenerate_and_mismatched_paths() {
+        let x = [0.0, 0.0]; // single point in R^2
+        let y = [0.0, 0.0, 1.0, 2.0];
+        let xp = Path::new(&x, 1, 2).unwrap();
+        let yp = Path::new(&y, 2, 2).unwrap();
+        let opts = KernelOptions::default();
+        // Identity signature ⇒ k == 1 exactly.
+        assert_eq!(try_sig_kernel(xp, yp, &opts), Ok(1.0));
+        let z = [0.0, 1.0, 2.0];
+        let zp = Path::new(&z, 1, 3).unwrap();
+        assert!(matches!(
+            try_sig_kernel(yp, zp, &opts),
+            Err(SigError::DimMismatch { .. })
+        ));
+    }
 
     /// k(x, y) for linear 1-d paths x_t = a·t, y_t = b·t on [0,1] is
     /// Σ_n (ab)^n / (n!)^2 (the signature inner product in closed form).

@@ -62,12 +62,12 @@ pub fn sig_kernel_vjp_pde_approx(
     opts: &KernelOptions,
     grad_out: f64,
 ) -> (Vec<f64>, Vec<f64>) {
-    let (m, n, delta) = delta_matrix(x, y, lx, ly, dim, opts.transform);
+    let (m, n, delta) = delta_matrix(x, y, lx, ly, dim, opts.exec.transform);
     let d2 =
         sig_kernel_vjp_delta_pde_approx(&delta, m, n, opts.dyadic_x, opts.dyadic_y, grad_out);
     let mut gx = vec![0.0; lx * dim];
     let mut gy = vec![0.0; ly * dim];
-    delta_vjp_to_paths(&d2, x, y, lx, ly, dim, opts.transform, &mut gx, &mut gy);
+    delta_vjp_to_paths(&d2, x, y, lx, ly, dim, opts.exec.transform, &mut gx, &mut gy);
     (gx, gy)
 }
 

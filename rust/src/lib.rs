@@ -7,9 +7,31 @@
 //!
 //! Reproduces: Shmelev & Salvi, "pySigLib — Fast Signature-Based Computations
 //! on CPU and GPU" (2025).
+//!
+//! ## API layers
+//!
+//! * [`path`] — the typed core API: [`Path`](path::Path) /
+//!   [`PathBatch`](path::PathBatch) views (uniform **and ragged** batches),
+//!   the [`SigError`](path::SigError) error type, and the options layer
+//!   shared by both subsystems. Every computation has a fallible `try_*`
+//!   entry point taking these types; nothing on that route panics on
+//!   malformed input.
+//! * [`sig`] — truncated signatures, log-signatures, streaming/batched
+//!   variants and exact vjps (plus the flat-slice convenience wrappers).
+//! * [`kernel`] — signature kernels via the Goursat PDE, Gram matrices,
+//!   MMD², kernel ridge regression and exact vjps.
+//! * [`transforms`] — time-augmentation / lead-lag / basepoint, fused
+//!   on-the-fly into every sweep.
+//! * [`coordinator`] — the serving layer: a validated binary wire protocol
+//!   (single-path and ragged-batch frames), shape-grouped dynamic batching,
+//!   and a router that executes [`PathBatch`](path::PathBatch)es natively or
+//!   on PJRT artifacts.
+//! * [`runtime`] — PJRT execution of AOT artifacts (behind the `pjrt`
+//!   feature; the default build has no external dependencies).
 
 pub mod tensor;
 pub mod util;
+pub mod path;
 pub mod sig;
 pub mod kernel;
 pub mod transforms;
@@ -19,3 +41,5 @@ pub mod coordinator;
 pub mod config;
 pub mod bench;
 pub mod cli;
+
+pub use path::{ExecOptions, Path, PathBatch, SigError};

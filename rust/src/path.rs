@@ -1,0 +1,527 @@
+//! Typed core API: paths, path batches and the unified options layer.
+//!
+//! Every public computation in this crate is available in two forms:
+//!
+//! 1. **Typed, fallible** — take a [`Path`] / [`PathBatch`] (shape-checked at
+//!    construction) and return `Result<_, SigError>`. These are the primary
+//!    implementations; nothing on this route panics on malformed input, which
+//!    is what the serving coordinator requires (a bad frame must become an
+//!    `Err` response, not kill a worker).
+//! 2. **Flat slices + scalars** — the original `&[f64]` + `len/dim/batch`
+//!    entry points, kept as thin wrappers that construct the typed views and
+//!    unwrap (panicking on shape errors, as they always did).
+//!
+//! [`PathBatch`] supports **ragged** batches via an offset table: paths of
+//! different lengths live back-to-back in one flat buffer, so variable-length
+//! corpora no longer need padding. Signature rows stay uniform (the signature
+//! length depends only on `dim` and `depth`), Gram matrices pair every length
+//! with every other, and gradients come back in the same ragged layout.
+
+use crate::kernel::SolverKind;
+use crate::sig::SigMethod;
+use crate::transforms::Transform;
+
+/// Errors from the typed API. Shape problems are caught at `Path`/`PathBatch`
+/// construction or entry-point validation; `Protocol`/`Backend` carry the
+/// serving-layer failure modes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SigError {
+    /// A path must have at least one point.
+    EmptyPath,
+    /// Path dimension must be at least 1.
+    ZeroDim,
+    /// Truncation depth must be at least 1.
+    ZeroDepth,
+    /// Flat buffer length disagrees with the declared shape.
+    DataLen { expected: usize, got: usize },
+    /// Two batches that must pair up have different sizes.
+    BatchMismatch { left: usize, right: usize },
+    /// Two paths/batches that must share a dimension do not.
+    DimMismatch { left: usize, right: usize },
+    /// A cotangent / weight buffer has the wrong length.
+    CotangentLen { expected: usize, got: usize },
+    /// An estimator needs more paths than the batch provides.
+    InsufficientBatch { need: usize, got: usize },
+    /// Unknown transform code (wire encoding).
+    BadTransform(u8),
+    /// A size computation overflowed or exceeded the hard cap — hostile or
+    /// absurd shape parameters (e.g. an enormous depth from the wire).
+    TooLarge(&'static str),
+    /// Numerical failure (overflow / not positive definite).
+    NonFinite(&'static str),
+    /// Malformed wire frame or header.
+    Protocol(String),
+    /// Compute-backend failure (e.g. PJRT execution).
+    Backend(String),
+}
+
+impl std::fmt::Display for SigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SigError::EmptyPath => write!(f, "path must have at least one point"),
+            SigError::ZeroDim => write!(f, "path dimension must be at least 1"),
+            SigError::ZeroDepth => write!(f, "truncation depth must be at least 1"),
+            SigError::DataLen { expected, got } => {
+                write!(f, "path buffer has {got} values, expected {expected}")
+            }
+            SigError::BatchMismatch { left, right } => {
+                write!(f, "batch sizes differ: {left} vs {right}")
+            }
+            SigError::DimMismatch { left, right } => {
+                write!(f, "path dimensions differ: {left} vs {right}")
+            }
+            SigError::CotangentLen { expected, got } => {
+                write!(f, "cotangent buffer has {got} values, expected {expected}")
+            }
+            SigError::InsufficientBatch { need, got } => {
+                write!(f, "estimator needs at least {need} paths, got {got}")
+            }
+            SigError::BadTransform(code) => write!(f, "unknown transform code {code}"),
+            SigError::TooLarge(what) => write!(f, "size overflow in {what}"),
+            SigError::NonFinite(what) => write!(f, "numerical failure: {what}"),
+            SigError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            SigError::Backend(msg) => write!(f, "backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SigError {}
+
+/// A borrowed, shape-checked view of one path: row-major `[len, dim]` with
+/// `len >= 1` and `dim >= 1` guaranteed by construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Path<'a> {
+    data: &'a [f64],
+    len: usize,
+    dim: usize,
+}
+
+impl<'a> Path<'a> {
+    /// Validate `data` as a `[len, dim]` path.
+    pub fn new(data: &'a [f64], len: usize, dim: usize) -> Result<Path<'a>, SigError> {
+        if dim == 0 {
+            return Err(SigError::ZeroDim);
+        }
+        if len == 0 {
+            return Err(SigError::EmptyPath);
+        }
+        let expected = len * dim;
+        if data.len() != expected {
+            return Err(SigError::DataLen {
+                expected,
+                got: data.len(),
+            });
+        }
+        Ok(Path { data, len, dim })
+    }
+
+    /// Infer the length from the buffer: `data.len()` must be a non-zero
+    /// multiple of `dim`.
+    pub fn from_flat(data: &'a [f64], dim: usize) -> Result<Path<'a>, SigError> {
+        if dim == 0 {
+            return Err(SigError::ZeroDim);
+        }
+        if data.is_empty() {
+            return Err(SigError::EmptyPath);
+        }
+        if data.len() % dim != 0 {
+            return Err(SigError::DataLen {
+                expected: (data.len() / dim + 1) * dim,
+                got: data.len(),
+            });
+        }
+        Path::new(data, data.len() / dim, dim)
+    }
+
+    /// Flat `[len, dim]` row-major values.
+    pub fn data(&self) -> &'a [f64] {
+        self.data
+    }
+
+    /// Number of points (at least 1).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Always false: a `Path` has at least one point by construction.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Dimension of each point (at least 1).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Point `i` as a `dim`-slice.
+    pub fn point(&self, i: usize) -> &'a [f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// A borrowed batch of paths sharing one dimension, uniform or **ragged**.
+///
+/// Paths live back-to-back in one flat buffer; an offset table (in points)
+/// records where each starts. Uniform batches are the special case where all
+/// lengths agree, and constructors record that so downstream code can keep
+/// its uniform fast paths.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PathBatch<'a> {
+    data: &'a [f64],
+    dim: usize,
+    /// Point offsets: path `i` spans points `offsets[i]..offsets[i+1]`.
+    /// Always `batch + 1` entries, starting at 0, non-decreasing.
+    offsets: Vec<usize>,
+    /// `Some(len)` when every path has exactly `len` points.
+    uniform: Option<usize>,
+}
+
+impl<'a> PathBatch<'a> {
+    /// A uniform batch: `data` is row-major `[batch, len, dim]`.
+    pub fn uniform(
+        data: &'a [f64],
+        batch: usize,
+        len: usize,
+        dim: usize,
+    ) -> Result<PathBatch<'a>, SigError> {
+        if dim == 0 {
+            return Err(SigError::ZeroDim);
+        }
+        if len == 0 {
+            return Err(SigError::EmptyPath);
+        }
+        let expected = batch
+            .checked_mul(len)
+            .and_then(|v| v.checked_mul(dim))
+            .ok_or(SigError::TooLarge("uniform batch size"))?;
+        if data.len() != expected {
+            return Err(SigError::DataLen {
+                expected,
+                got: data.len(),
+            });
+        }
+        Ok(PathBatch {
+            data,
+            dim,
+            offsets: (0..=batch).map(|i| i * len).collect(),
+            uniform: Some(len),
+        })
+    }
+
+    /// A ragged batch: path `i` has `lengths[i]` points, all back-to-back in
+    /// `data`. Every length must be at least 1.
+    pub fn ragged(
+        data: &'a [f64],
+        lengths: &[usize],
+        dim: usize,
+    ) -> Result<PathBatch<'a>, SigError> {
+        if dim == 0 {
+            return Err(SigError::ZeroDim);
+        }
+        let mut offsets = Vec::with_capacity(lengths.len() + 1);
+        let mut total = 0usize;
+        offsets.push(0);
+        for &l in lengths {
+            if l == 0 {
+                return Err(SigError::EmptyPath);
+            }
+            total = total
+                .checked_add(l)
+                .ok_or(SigError::TooLarge("ragged batch size"))?;
+            offsets.push(total);
+        }
+        let expected = total
+            .checked_mul(dim)
+            .ok_or(SigError::TooLarge("ragged batch size"))?;
+        if data.len() != expected {
+            return Err(SigError::DataLen {
+                expected,
+                got: data.len(),
+            });
+        }
+        let uniform = match lengths.first() {
+            Some(&l0) if lengths.iter().all(|&l| l == l0) => Some(l0),
+            _ => None,
+        };
+        Ok(PathBatch {
+            data,
+            dim,
+            offsets,
+            uniform,
+        })
+    }
+
+    /// Number of paths.
+    pub fn batch(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batch() == 0
+    }
+
+    /// Shared dimension of every path.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// `Some(len)` when every path has the same number of points (always the
+    /// case for [`PathBatch::uniform`]; `None` for genuinely ragged batches
+    /// and for empty ragged batches).
+    pub fn uniform_len(&self) -> Option<usize> {
+        self.uniform
+    }
+
+    /// Total number of points across the batch.
+    pub fn total_points(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Number of points of path `i`.
+    pub fn len_of(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Path `i` as a typed view.
+    pub fn path(&self, i: usize) -> Path<'a> {
+        Path {
+            data: self.values_of(i),
+            len: self.len_of(i),
+            dim: self.dim,
+        }
+    }
+
+    /// Flat values of path `i` (`[len_of(i), dim]` row-major).
+    pub fn values_of(&self, i: usize) -> &'a [f64] {
+        &self.data[self.offsets[i] * self.dim..self.offsets[i + 1] * self.dim]
+    }
+
+    /// Point offsets (length `batch + 1`, starting at 0).
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// The whole flat buffer.
+    pub fn data(&self) -> &'a [f64] {
+        self.data
+    }
+
+    /// Iterate over the paths.
+    pub fn iter(&self) -> impl Iterator<Item = Path<'a>> + '_ {
+        (0..self.batch()).map(move |i| self.path(i))
+    }
+
+    /// Element offsets (in `f64`s, not points) — chunk `i` of a flat ragged
+    /// per-point output spans `element_offsets[i]..element_offsets[i+1]`.
+    pub fn element_offsets(&self) -> Vec<usize> {
+        self.offsets.iter().map(|&o| o * self.dim).collect()
+    }
+}
+
+/// Execution policy shared by every batched entry point in both subsystems
+/// (signatures and kernels): which path transform to fuse on-the-fly, and
+/// whether to parallelise over the batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecOptions {
+    /// Applied on-the-fly; the transformed path is never materialised.
+    pub transform: Transform,
+    /// Parallelise over the batch dimension.
+    pub parallel: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            transform: Transform::None,
+            parallel: true,
+        }
+    }
+}
+
+impl ExecOptions {
+    pub fn transform(mut self, t: Transform) -> Self {
+        self.transform = t;
+        self
+    }
+    pub fn serial(mut self) -> Self {
+        self.parallel = false;
+        self
+    }
+}
+
+/// Options for (batched) signature computation. The transform/parallel policy
+/// lives in [`ExecOptions`], shared with [`KernelOptions`].
+#[derive(Clone, Copy, Debug)]
+pub struct SigOptions {
+    pub depth: usize,
+    pub method: SigMethod,
+    pub exec: ExecOptions,
+}
+
+impl SigOptions {
+    pub fn new(depth: usize) -> Self {
+        SigOptions {
+            depth,
+            method: SigMethod::Horner,
+            exec: ExecOptions::default(),
+        }
+    }
+    pub fn transform(mut self, t: Transform) -> Self {
+        self.exec.transform = t;
+        self
+    }
+    pub fn method(mut self, m: SigMethod) -> Self {
+        self.method = m;
+        self
+    }
+    pub fn serial(mut self) -> Self {
+        self.exec.parallel = false;
+        self
+    }
+    /// Error unless the options are usable (depth at least 1).
+    pub fn validate(&self) -> Result<(), SigError> {
+        if self.depth == 0 {
+            return Err(SigError::ZeroDepth);
+        }
+        Ok(())
+    }
+}
+
+/// Options for signature-kernel computations. The transform/parallel policy
+/// lives in [`ExecOptions`], shared with [`SigOptions`].
+#[derive(Clone, Copy, Debug)]
+pub struct KernelOptions {
+    /// Dyadic refinement order for the first path (λ1).
+    pub dyadic_x: u32,
+    /// Dyadic refinement order for the second path (λ2). The paper allows
+    /// λ1 ≠ λ2 — useful when x and y have very different lengths.
+    pub dyadic_y: u32,
+    pub solver: SolverKind,
+    pub exec: ExecOptions,
+}
+
+impl Default for KernelOptions {
+    fn default() -> Self {
+        KernelOptions {
+            dyadic_x: 0,
+            dyadic_y: 0,
+            solver: SolverKind::Row,
+            exec: ExecOptions::default(),
+        }
+    }
+}
+
+impl KernelOptions {
+    pub fn dyadic(mut self, l1: u32, l2: u32) -> Self {
+        self.dyadic_x = l1;
+        self.dyadic_y = l2;
+        self
+    }
+    pub fn solver(mut self, s: SolverKind) -> Self {
+        self.solver = s;
+        self
+    }
+    pub fn transform(mut self, t: Transform) -> Self {
+        self.exec.transform = t;
+        self
+    }
+    pub fn serial(mut self) -> Self {
+        self.exec.parallel = false;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_rejects_bad_shapes() {
+        assert_eq!(Path::new(&[1.0, 2.0], 1, 0), Err(SigError::ZeroDim));
+        assert_eq!(Path::new(&[], 0, 2), Err(SigError::EmptyPath));
+        assert_eq!(
+            Path::new(&[1.0, 2.0, 3.0], 2, 2),
+            Err(SigError::DataLen {
+                expected: 4,
+                got: 3
+            })
+        );
+        let data = [1.0, 2.0, 3.0, 4.0];
+        let p = Path::new(&data, 2, 2).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.dim(), 2);
+        assert_eq!(p.point(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn from_flat_infers_length() {
+        let data = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let p = Path::from_flat(&data, 3).unwrap();
+        assert_eq!(p.len(), 2);
+        assert!(Path::from_flat(&data, 4).is_err());
+        assert!(Path::from_flat(&[], 2).is_err());
+    }
+
+    #[test]
+    fn uniform_batch_offsets() {
+        let data = [0.0; 12]; // 2 paths × 3 points × 2 dims
+        let b = PathBatch::uniform(&data, 2, 3, 2).unwrap();
+        assert_eq!(b.batch(), 2);
+        assert_eq!(b.uniform_len(), Some(3));
+        assert_eq!(b.offsets(), &[0, 3, 6]);
+        assert_eq!(b.total_points(), 6);
+        assert_eq!(b.path(1).len(), 3);
+    }
+
+    #[test]
+    fn ragged_batch_offsets_and_views() {
+        let data: Vec<f64> = (0..10).map(|v| v as f64).collect(); // 5 points in R^2
+        let b = PathBatch::ragged(&data, &[2, 1, 2], 2).unwrap();
+        assert_eq!(b.batch(), 3);
+        assert_eq!(b.uniform_len(), None);
+        assert_eq!(b.len_of(1), 1);
+        assert_eq!(b.values_of(1), &[4.0, 5.0]);
+        assert_eq!(b.path(2).point(1), &[8.0, 9.0]);
+        assert_eq!(b.element_offsets(), vec![0, 4, 6, 10]);
+    }
+
+    #[test]
+    fn ragged_batch_rejects_bad_shapes() {
+        let data = [0.0; 4];
+        assert_eq!(
+            PathBatch::ragged(&data, &[2, 0], 2),
+            Err(SigError::EmptyPath)
+        );
+        assert!(PathBatch::ragged(&data, &[3], 2).is_err());
+        assert_eq!(PathBatch::ragged(&data, &[2], 0), Err(SigError::ZeroDim));
+    }
+
+    #[test]
+    fn empty_batches_are_fine() {
+        let b = PathBatch::ragged(&[], &[], 2).unwrap();
+        assert_eq!(b.batch(), 0);
+        assert_eq!(b.uniform_len(), None);
+        assert_eq!(b.total_points(), 0);
+        let u = PathBatch::uniform(&[], 0, 4, 2).unwrap();
+        assert_eq!(u.batch(), 0);
+        assert_eq!(u.uniform_len(), Some(4));
+    }
+
+    #[test]
+    fn ragged_with_equal_lengths_reports_uniform() {
+        let data = [0.0; 8];
+        let b = PathBatch::ragged(&data, &[2, 2], 2).unwrap();
+        assert_eq!(b.uniform_len(), Some(2));
+    }
+
+    #[test]
+    fn options_share_the_exec_layer() {
+        let s = SigOptions::new(3).transform(Transform::TimeAug).serial();
+        assert_eq!(s.exec.transform, Transform::TimeAug);
+        assert!(!s.exec.parallel);
+        let k = KernelOptions::default().transform(Transform::LeadLag);
+        assert_eq!(k.exec.transform, Transform::LeadLag);
+        assert!(k.exec.parallel);
+        assert!(SigOptions::new(0).validate().is_err());
+    }
+}

@@ -9,11 +9,24 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! HLO *text* is the interchange format — jax ≥ 0.5 serialized protos use
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects.
+//!
+//! The PJRT backend sits behind the **`pjrt` cargo feature** (it needs the
+//! `xla` crate, which must be vendored — it is not available in the offline
+//! build). The default build compiles a stub whose constructors return an
+//! error, so every caller's "artifacts unavailable → native backend"
+//! fallback path engages; the manifest parser and the thread-confined
+//! [`RuntimeHandle`] façade are feature-independent.
 
-use anyhow::{anyhow, Context, Result};
+use crate::format_err as anyhow;
+use crate::util::error::{Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+use std::sync::Mutex;
 
 /// One artifact from `artifacts/manifest.txt`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -51,6 +64,7 @@ impl ArtifactInfo {
 }
 
 /// PJRT-backed executor with a compile-once cache per artifact.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -58,6 +72,43 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+/// Stub executor compiled when the `pjrt` feature is off: construction
+/// always fails, so callers take their native-backend fallback path.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    manifest: Vec<ArtifactInfo>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = dir;
+        Err(anyhow!(
+            "PJRT backend not compiled in; rebuild with `--features pjrt` \
+             (requires vendoring the `xla` crate)"
+        ))
+    }
+
+    pub fn manifest(&self) -> &[ArtifactInfo] {
+        &self.manifest
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.manifest.iter().find(|a| a.name == name)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let _ = (name, inputs);
+        Err(anyhow!("PJRT backend not compiled in"))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open the artifact directory (reads `manifest.txt`) on the CPU PJRT
     /// client.

@@ -14,11 +14,42 @@
 //!
 //! all realised as contiguous gemv-like loops over the flat layout.
 
+use crate::path::{Path, SigError, SigOptions};
 use crate::sig::horner::horner_step;
 use crate::tensor::{exp_increment, LevelLayout};
 use crate::transforms::{increments_vjp, IncrementStream, Transform};
 
-/// Vector–Jacobian product of the truncated signature.
+/// Typed, fallible vector–Jacobian product of the truncated signature:
+/// given `grad_sig` = ∂F/∂S(x) (flat, length `sig_length(out_dim, depth)`),
+/// returns ∂F/∂x as a `[len, dim]` row-major vector.
+pub fn try_signature_vjp(
+    path: Path<'_>,
+    opts: &SigOptions,
+    grad_sig: &[f64],
+) -> Result<Vec<f64>, SigError> {
+    opts.validate()?;
+    let od = opts.exec.transform.out_dim(path.dim());
+    let slen = crate::sig::try_sig_length(od, opts.depth)?;
+    if grad_sig.len() != slen {
+        return Err(SigError::CotangentLen {
+            expected: slen,
+            got: grad_sig.len(),
+        });
+    }
+    let s = crate::sig::try_signature(path, opts)?;
+    Ok(signature_vjp_with_sig(
+        path.data(),
+        path.len(),
+        path.dim(),
+        opts.depth,
+        opts.exec.transform,
+        &s,
+        grad_sig,
+    ))
+}
+
+/// Vector–Jacobian product of the truncated signature (flat-slice wrapper
+/// over [`try_signature_vjp`]; panics on malformed shapes).
 ///
 /// Given `grad_sig` = ∂F/∂S(x) (flat, length `sig_length(out_dim, depth)`),
 /// returns ∂F/∂x as a `[len, dim]` row-major vector. The signature is
@@ -32,8 +63,9 @@ pub fn signature_vjp(
     transform: Transform,
     grad_sig: &[f64],
 ) -> Vec<f64> {
-    let s = crate::sig::signature(path, len, dim, depth, transform, crate::sig::SigMethod::Horner);
-    signature_vjp_with_sig(path, len, dim, depth, transform, &s, grad_sig)
+    let p = Path::new(path, len, dim).expect("signature_vjp: invalid path shape");
+    try_signature_vjp(p, &SigOptions::new(depth).transform(transform), grad_sig)
+        .expect("signature_vjp: invalid cotangent")
 }
 
 /// [`signature_vjp`] given the precomputed forward signature `sig` (must be

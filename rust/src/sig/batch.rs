@@ -1,44 +1,102 @@
 //! Batched signature APIs: one output row per path, optionally parallel over
 //! the batch (the paper's Table 1 "serial" vs "parallel" columns).
+//!
+//! The typed entry points take a [`PathBatch`] and therefore support
+//! **ragged** batches (paths of different lengths, no padding): signature
+//! rows stay uniform — the signature length depends only on the (transformed)
+//! dimension and the depth — while vjps come back in the batch's own ragged
+//! layout.
 
-use crate::sig::{SigMethod, sig_length, signature, signature_vjp};
-use crate::transforms::Transform;
-use crate::util::pool::{parallel_for_mut, parallel_for};
+pub use crate::path::SigOptions;
+use crate::path::{PathBatch, SigError};
+use crate::sig::{sig_length, signature_vjp, try_sig_length, try_signature};
+use crate::util::pool::{parallel_for, parallel_for_mut, parallel_for_mut_ragged};
 
-/// Options for batched signature computation.
-#[derive(Clone, Copy, Debug)]
-pub struct SigOptions {
-    pub depth: usize,
-    pub transform: Transform,
-    pub method: SigMethod,
-    /// Parallelise over the batch dimension.
-    pub parallel: bool,
-}
+/// Hard cap on the number of f64s a batched output may hold (2^30 = 8 GiB) —
+/// a wire-reachable allocation guard, not a practical limitation.
+const MAX_BATCH_OUT: usize = 1 << 30;
 
-impl SigOptions {
-    pub fn new(depth: usize) -> Self {
-        SigOptions {
-            depth,
-            transform: Transform::None,
-            method: SigMethod::Horner,
-            parallel: true,
+/// Signatures of a typed (possibly ragged) batch of paths.
+///
+/// Returns `[batch, sig_length(out_dim, depth)]` row-major — rows are
+/// uniform even for ragged batches.
+pub fn try_batch_signature(
+    paths: &PathBatch<'_>,
+    opts: &SigOptions,
+) -> Result<Vec<f64>, SigError> {
+    opts.validate()?;
+    let od = opts.exec.transform.out_dim(paths.dim());
+    let slen = try_sig_length(od, opts.depth)?;
+    let b = paths.batch();
+    let total = b
+        .checked_mul(slen)
+        .filter(|&t| t <= MAX_BATCH_OUT)
+        .ok_or(SigError::TooLarge("batched signature output"))?;
+    let mut out = vec![0.0; total];
+    if b == 0 {
+        return Ok(out);
+    }
+    let work = |i: usize, row: &mut [f64]| {
+        // Cannot fail: the batch and options were validated above.
+        let s = try_signature(paths.path(i), opts).expect("validated");
+        row.copy_from_slice(&s);
+    };
+    if opts.exec.parallel {
+        parallel_for_mut(&mut out, slen, work);
+    } else {
+        for (i, row) in out.chunks_mut(slen).enumerate() {
+            work(i, row);
         }
     }
-    pub fn transform(mut self, t: Transform) -> Self {
-        self.transform = t;
-        self
-    }
-    pub fn method(mut self, m: SigMethod) -> Self {
-        self.method = m;
-        self
-    }
-    pub fn serial(mut self) -> Self {
-        self.parallel = false;
-        self
-    }
+    Ok(out)
 }
 
-/// Signatures of a batch of paths.
+/// Batched vjp over a typed (possibly ragged) batch: given ∂F/∂signatures
+/// `[batch, slen]`, return ∂F/∂paths in the batch's flat (ragged) layout.
+pub fn try_batch_signature_vjp(
+    paths: &PathBatch<'_>,
+    grad_sigs: &[f64],
+    opts: &SigOptions,
+) -> Result<Vec<f64>, SigError> {
+    opts.validate()?;
+    let od = opts.exec.transform.out_dim(paths.dim());
+    let slen = try_sig_length(od, opts.depth)?;
+    let b = paths.batch();
+    let expected = b
+        .checked_mul(slen)
+        .filter(|&t| t <= MAX_BATCH_OUT)
+        .ok_or(SigError::TooLarge("batched signature cotangent"))?;
+    if grad_sigs.len() != expected {
+        return Err(SigError::CotangentLen {
+            expected,
+            got: grad_sigs.len(),
+        });
+    }
+    let dim = paths.dim();
+    let mut out = vec![0.0; paths.total_points() * dim];
+    if b == 0 {
+        return Ok(out);
+    }
+    let bounds = paths.element_offsets();
+    let work = |i: usize, row: &mut [f64]| {
+        let p = paths.path(i);
+        let gs = &grad_sigs[i * slen..(i + 1) * slen];
+        let gx = signature_vjp(p.data(), p.len(), p.dim(), opts.depth, opts.exec.transform, gs);
+        row.copy_from_slice(&gx);
+    };
+    if opts.exec.parallel {
+        parallel_for_mut_ragged(&mut out, &bounds, work);
+    } else {
+        for i in 0..b {
+            let (lo, hi) = (bounds[i], bounds[i + 1]);
+            work(i, &mut out[lo..hi]);
+        }
+    }
+    Ok(out)
+}
+
+/// Signatures of a uniform batch of paths (flat-slice wrapper over
+/// [`try_batch_signature`]; panics on malformed shapes).
 ///
 /// * `paths` — row-major `[batch, len, dim]`.
 /// * returns `[batch, sig_length(out_dim, depth)]`.
@@ -49,30 +107,13 @@ pub fn batch_signature(
     dim: usize,
     opts: &SigOptions,
 ) -> Vec<f64> {
-    assert_eq!(paths.len(), batch * len * dim);
-    let od = opts.transform.out_dim(dim);
-    let slen = sig_length(od, opts.depth);
-    let mut out = vec![0.0; batch * slen];
-    if batch == 0 {
-        return out;
-    }
-    let work = |i: usize, row: &mut [f64]| {
-        let p = &paths[i * len * dim..(i + 1) * len * dim];
-        let s = signature(p, len, dim, opts.depth, opts.transform, opts.method);
-        row.copy_from_slice(&s);
-    };
-    if opts.parallel {
-        parallel_for_mut(&mut out, slen, work);
-    } else {
-        for (i, row) in out.chunks_mut(slen).enumerate() {
-            work(i, row);
-        }
-    }
-    out
+    let pb = PathBatch::uniform(paths, batch, len, dim)
+        .expect("batch_signature: invalid batch shape");
+    try_batch_signature(&pb, opts).expect("batch_signature: invalid options")
 }
 
-/// Batched vjp: given ∂F/∂signatures `[batch, slen]`, return ∂F/∂paths
-/// `[batch, len, dim]`.
+/// Batched vjp (flat-slice wrapper over [`try_batch_signature_vjp`]): given
+/// ∂F/∂signatures `[batch, slen]`, return ∂F/∂paths `[batch, len, dim]`.
 pub fn batch_signature_vjp(
     paths: &[f64],
     grad_sigs: &[f64],
@@ -81,29 +122,9 @@ pub fn batch_signature_vjp(
     dim: usize,
     opts: &SigOptions,
 ) -> Vec<f64> {
-    assert_eq!(paths.len(), batch * len * dim);
-    let od = opts.transform.out_dim(dim);
-    let slen = sig_length(od, opts.depth);
-    assert_eq!(grad_sigs.len(), batch * slen);
-    let mut out = vec![0.0; batch * len * dim];
-    if batch == 0 {
-        return out;
-    }
-    let stride = len * dim;
-    let work = |i: usize, row: &mut [f64]| {
-        let p = &paths[i * stride..(i + 1) * stride];
-        let gs = &grad_sigs[i * slen..(i + 1) * slen];
-        let gx = signature_vjp(p, len, dim, opts.depth, opts.transform, gs);
-        row.copy_from_slice(&gx);
-    };
-    if opts.parallel {
-        parallel_for_mut(&mut out, stride, work);
-    } else {
-        for (i, row) in out.chunks_mut(stride).enumerate() {
-            work(i, row);
-        }
-    }
-    out
+    let pb = PathBatch::uniform(paths, batch, len, dim)
+        .expect("batch_signature_vjp: invalid batch shape");
+    try_batch_signature_vjp(&pb, grad_sigs, opts).expect("batch_signature_vjp: invalid cotangent")
 }
 
 /// Convenience: mean of signatures over the batch — the "expected signature",
@@ -115,7 +136,7 @@ pub fn expected_signature(
     dim: usize,
     opts: &SigOptions,
 ) -> Vec<f64> {
-    let od = opts.transform.out_dim(dim);
+    let od = opts.exec.transform.out_dim(dim);
     let slen = sig_length(od, opts.depth);
     let sigs = batch_signature(paths, batch, len, dim, opts);
     let mut mean = vec![0.0; slen];
@@ -141,10 +162,10 @@ pub fn batch_signature_streaming<F: Fn(usize, &[f64]) + Sync>(
     opts: &SigOptions,
     sink: F,
 ) {
-    assert_eq!(paths.len(), batch * len * dim);
+    let pb = PathBatch::uniform(paths, batch, len, dim)
+        .expect("batch_signature_streaming: invalid batch shape");
     parallel_for(batch, |i| {
-        let p = &paths[i * len * dim..(i + 1) * len * dim];
-        let s = signature(p, len, dim, opts.depth, opts.transform, opts.method);
+        let s = try_signature(pb.path(i), opts).expect("validated");
         sink(i, &s);
     });
 }
@@ -152,6 +173,8 @@ pub fn batch_signature_streaming<F: Fn(usize, &[f64]) + Sync>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sig::SigMethod;
+    use crate::transforms::Transform;
     use crate::util::linalg::max_abs_diff;
     use crate::util::rng::Rng;
 
@@ -230,5 +253,92 @@ mod tests {
             collected.lock().unwrap()[i * slen..(i + 1) * slen].copy_from_slice(s);
         });
         assert!(max_abs_diff(&collected.into_inner().unwrap(), &batchout) < 1e-15);
+    }
+
+    /// Ragged batches bit-match a per-path loop over `sig` — including
+    /// length-1 paths (identity signature).
+    #[test]
+    fn ragged_batch_bitmatches_per_path_loop() {
+        let mut rng = Rng::new(14);
+        let (d, n) = (2, 3);
+        let lengths = [5usize, 1, 12, 2, 7];
+        let mut data = Vec::new();
+        for &l in &lengths {
+            data.extend(rng.brownian_path(l, d, 0.5));
+        }
+        let pb = PathBatch::ragged(&data, &lengths, d).unwrap();
+        for opts in [SigOptions::new(n), SigOptions::new(n).serial()] {
+            let out = try_batch_signature(&pb, &opts).unwrap();
+            let slen = sig_length(d, n);
+            let mut off = 0;
+            for (i, &l) in lengths.iter().enumerate() {
+                let want = crate::sig::sig(&data[off * d..(off + l) * d], l, d, n);
+                assert_eq!(&out[i * slen..(i + 1) * slen], &want[..], "path {i}");
+                off += l;
+            }
+        }
+    }
+
+    /// Ragged vjp bit-matches the per-path loop, in the ragged layout.
+    #[test]
+    fn ragged_vjp_bitmatches_per_path_loop() {
+        let mut rng = Rng::new(15);
+        let (d, n) = (2, 3);
+        let lengths = [4usize, 1, 9, 3];
+        let mut data = Vec::new();
+        for &l in &lengths {
+            data.extend(rng.brownian_path(l, d, 0.5));
+        }
+        let pb = PathBatch::ragged(&data, &lengths, d).unwrap();
+        let slen = sig_length(d, n);
+        let mut gs = vec![0.0; lengths.len() * slen];
+        rng.fill_normal(&mut gs);
+        let gx = try_batch_signature_vjp(&pb, &gs, &SigOptions::new(n)).unwrap();
+        assert_eq!(gx.len(), pb.total_points() * d);
+        let mut off = 0;
+        for (i, &l) in lengths.iter().enumerate() {
+            let want = signature_vjp(
+                &data[off * d..(off + l) * d],
+                l,
+                d,
+                n,
+                Transform::None,
+                &gs[i * slen..(i + 1) * slen],
+            );
+            assert_eq!(&gx[off * d..(off + l) * d], &want[..], "path {i}");
+            off += l;
+        }
+    }
+
+    #[test]
+    fn empty_ragged_batch_yields_empty_output() {
+        let pb = PathBatch::ragged(&[], &[], 3).unwrap();
+        let out = try_batch_signature(&pb, &SigOptions::new(4)).unwrap();
+        assert!(out.is_empty());
+        let gx = try_batch_signature_vjp(&pb, &[], &SigOptions::new(4)).unwrap();
+        assert!(gx.is_empty());
+    }
+
+    #[test]
+    fn bad_cotangent_length_is_an_error() {
+        let data = [0.0, 0.0, 1.0, 1.0];
+        let pb = PathBatch::uniform(&data, 1, 2, 2).unwrap();
+        let r = try_batch_signature_vjp(&pb, &[1.0, 2.0], &SigOptions::new(2));
+        assert!(matches!(r, Err(SigError::CotangentLen { .. })));
+    }
+
+    #[test]
+    fn methods_agree_on_ragged_batches() {
+        let mut rng = Rng::new(16);
+        let d = 2;
+        let lengths = [3usize, 6, 2];
+        let mut data = Vec::new();
+        for &l in &lengths {
+            data.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let pb = PathBatch::ragged(&data, &lengths, d).unwrap();
+        let h = try_batch_signature(&pb, &SigOptions::new(3)).unwrap();
+        let dr = try_batch_signature(&pb, &SigOptions::new(3).method(SigMethod::Direct)).unwrap();
+        assert!(max_abs_diff(&h, &dr) < 1e-10);
     }
 }

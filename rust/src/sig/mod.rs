@@ -3,6 +3,11 @@
 //! paper's optimised scheme), exact backpropagation via time-reversed
 //! deconstruction (§2.4), log-signatures, and batched parallel APIs —
 //! all with optional on-the-fly path transformations (§4).
+//!
+//! The typed, fallible entry points ([`try_signature`],
+//! [`try_batch_signature`], [`try_signature_vjp`], …) take
+//! [`Path`]/[`PathBatch`](crate::path::PathBatch) views and never panic on
+//! malformed input; the flat-slice functions are thin wrappers over them.
 
 pub mod backward;
 pub mod batch;
@@ -11,13 +16,18 @@ pub mod horner;
 pub mod logsig;
 pub mod stream;
 
-pub use backward::signature_vjp;
-pub use batch::{batch_signature, batch_signature_vjp, SigOptions};
+pub use backward::{signature_vjp, try_signature_vjp};
+pub use batch::{
+    batch_signature, batch_signature_vjp, try_batch_signature, try_batch_signature_vjp,
+};
 pub use direct::direct_step;
 pub use horner::horner_step;
-pub use logsig::{log_signature, log_signature_words, lyndon_words};
+pub use logsig::{log_signature, log_signature_words, lyndon_words, try_batch_log_signature};
 pub use stream::{expanding_signatures, sliding_signatures, StreamingSignature};
 
+pub use crate::path::SigOptions;
+
+use crate::path::{Path, SigError};
 use crate::tensor::{exp_increment, LevelLayout};
 use crate::transforms::{IncrementStream, Transform};
 
@@ -36,40 +46,73 @@ pub fn sig_length(dim: usize, depth: usize) -> usize {
     LevelLayout::new(dim, depth).total()
 }
 
-/// Compute the truncated signature of a single path.
-///
-/// * `path` — row-major `[len, dim]`.
-/// * `depth` — truncation level N ≥ 1.
-/// * `transform` — applied on-the-fly (the path is never materialised).
-/// * `method` — direct or Horner.
+/// Hard cap on the number of signature coefficients any fallible entry point
+/// will compute (2^27 f64s = 1 GiB per signature).
+pub const MAX_SIG_LEN: usize = 1 << 27;
+
+/// Checked [`sig_length`]: returns an error instead of overflowing (and
+/// panicking inside `LevelLayout`) or allocating absurdly when `dim`/`depth`
+/// are hostile — e.g. taken from a wire header. Every `try_*` entry point
+/// validates through this before touching the tensor layout.
+pub fn try_sig_length(dim: usize, depth: usize) -> Result<usize, SigError> {
+    if dim == 0 {
+        return Err(SigError::ZeroDim);
+    }
+    if depth == 0 {
+        return Err(SigError::ZeroDepth);
+    }
+    if dim == 1 {
+        // Every level has one coefficient; closed form avoids a long loop.
+        let total = depth
+            .checked_add(1)
+            .filter(|&t| t <= MAX_SIG_LEN)
+            .ok_or(SigError::TooLarge("signature length"))?;
+        return Ok(total);
+    }
+    // dim ≥ 2: the running total at least doubles per level, so this loop
+    // exits (via the cap) within ~27 iterations.
+    let mut total = 1usize;
+    let mut level = 1usize;
+    for _ in 0..depth {
+        level = level
+            .checked_mul(dim)
+            .ok_or(SigError::TooLarge("signature length"))?;
+        total = total
+            .checked_add(level)
+            .ok_or(SigError::TooLarge("signature length"))?;
+        if total > MAX_SIG_LEN {
+            return Err(SigError::TooLarge("signature length"));
+        }
+    }
+    Ok(total)
+}
+
+/// Compute the truncated signature of a single typed path. This is the core
+/// implementation; it never panics on malformed input.
 ///
 /// Returns the flat signature of length [`sig_length`] *of the transformed
-/// path's dimension*.
-pub fn signature(
-    path: &[f64],
-    len: usize,
-    dim: usize,
-    depth: usize,
-    transform: Transform,
-    method: SigMethod,
-) -> Vec<f64> {
-    assert!(depth >= 1, "depth must be >= 1");
-    assert!(len >= 1, "need at least one point");
-    let od = transform.out_dim(dim);
-    let layout = LevelLayout::new(od, depth);
+/// path's dimension* (`opts.exec.transform`), or an error when
+/// `opts.depth == 0`.
+pub fn try_signature(path: Path<'_>, opts: &SigOptions) -> Result<Vec<f64>, SigError> {
+    opts.validate()?;
+    let (data, len, dim) = (path.data(), path.len(), path.dim());
+    let od = opts.exec.transform.out_dim(dim);
+    try_sig_length(od, opts.depth)?;
+    let layout = LevelLayout::new(od, opts.depth);
     let mut a = vec![0.0; layout.total()];
     if len < 2 {
         a[0] = 1.0;
-        return a;
+        return Ok(a);
     }
-    let mut stream = IncrementStream::new(path, len, dim, transform);
+    let mut stream = IncrementStream::new(data, len, dim, opts.exec.transform);
     let mut z = vec![0.0; od];
     // Initialise with the first segment: A = exp(z_1).
-    assert!(stream.next_into(&mut z));
+    let has_first = stream.next_into(&mut z);
+    debug_assert!(has_first);
     exp_increment(&layout, &z, &mut a);
-    match method {
+    match opts.method {
         SigMethod::Horner => {
-            let bcap = layout.level_size(depth.saturating_sub(1)).max(1);
+            let bcap = layout.level_size(opts.depth.saturating_sub(1)).max(1);
             let mut b = vec![0.0; bcap];
             while stream.next_into(&mut z) {
                 horner_step(&layout, &mut a, &z, &mut b);
@@ -82,7 +125,27 @@ pub fn signature(
             }
         }
     }
-    a
+    Ok(a)
+}
+
+/// Compute the truncated signature of a single path (flat-slice wrapper over
+/// [`try_signature`]; panics on malformed shapes).
+///
+/// * `path` — row-major `[len, dim]`.
+/// * `depth` — truncation level N ≥ 1.
+/// * `transform` — applied on-the-fly (the path is never materialised).
+/// * `method` — direct or Horner.
+pub fn signature(
+    path: &[f64],
+    len: usize,
+    dim: usize,
+    depth: usize,
+    transform: Transform,
+    method: SigMethod,
+) -> Vec<f64> {
+    let p = Path::new(path, len, dim).expect("signature: invalid path shape");
+    try_signature(p, &SigOptions::new(depth).transform(transform).method(method))
+        .expect("signature: invalid options")
 }
 
 /// Convenience: signature with no transform, Horner method.
@@ -129,31 +192,27 @@ mod tests {
             let depth = g.usize_in(1, 4);
             let l1 = g.usize_in(2, 10);
             let l2 = g.usize_in(2, 10);
-            let mut p1 = g.path(l1, dim, 0.5);
-            let p2raw = g.path(l2, dim, 0.5);
-            // Concatenate: shift p2 to start at p1's endpoint.
+            let p1 = g.path(l1, dim, 0.5);
+            let p2 = g.path(l2, dim, 0.5);
+            // Concatenate: translate p2 so it starts at p1's endpoint, and
+            // skip its first point (which coincides with p1's last). The
+            // signature is translation-invariant, so S(translated p2) = S(p2)
+            // and Chen's identity reads S(p1 · p2) = S(p1) ⊗ S(p2).
             let mut full = p1.clone();
-            let last: Vec<f64> = p1[(l1 - 1) * dim..].to_vec();
-            for i in 0..l2 {
+            let last = &p1[(l1 - 1) * dim..];
+            for i in 1..l2 {
                 for j in 0..dim {
-                    full.push(last[j] + p2raw[i * dim + j] - p2raw[j]);
+                    full.push(last[j] + p2[i * dim + j] - p2[j]);
                 }
             }
-            // p2 path (shifted copy), skipping its first point in `full` is
-            // handled by signature invariance to translation: S(p2raw) works.
             let s1 = sig(&p1, l1, dim, depth);
-            let s2 = sig(&p2raw, l2, dim, depth);
-            // full has l1 + l2 points but point l1 equals point l1-1's
-            // continuation: the segment between p1-end and shifted-p2-start
-            // has zero increment, contributing identity. So S(full) = s1 ⊗ s2.
-            let sfull = sig(&full, l1 + l2, dim, depth);
+            let s2 = sig(&p2, l2, dim, depth);
+            let sfull = sig(&full, l1 + l2 - 1, dim, depth);
             let layout = LevelLayout::new(dim, depth);
             let mut prod = vec![0.0; layout.total()];
             tensor_prod(&layout, &s1, &s2, &mut prod);
             let err = max_abs_diff(&sfull, &prod);
             assert!(err < 1e-9, "Chen violated: {err}");
-            // keep p1 alive for clarity
-            p1.clear();
         });
     }
 
@@ -245,5 +304,40 @@ mod tests {
                 assert!(err < 1e-10, "tr={tr:?}: {err}");
             }
         });
+    }
+
+    #[test]
+    fn try_sig_length_matches_and_bounds() {
+        assert_eq!(try_sig_length(2, 4).unwrap(), sig_length(2, 4));
+        assert_eq!(try_sig_length(1, 7).unwrap(), sig_length(1, 7));
+        assert_eq!(try_sig_length(3, 1).unwrap(), 4);
+        // Hostile shapes error instead of overflowing the tensor layout.
+        assert!(matches!(
+            try_sig_length(2, 64),
+            Err(crate::path::SigError::TooLarge(_))
+        ));
+        assert!(matches!(
+            try_sig_length(1, usize::MAX),
+            Err(crate::path::SigError::TooLarge(_))
+        ));
+        assert!(matches!(
+            try_sig_length(usize::MAX, 2),
+            Err(crate::path::SigError::TooLarge(_))
+        ));
+        assert!(try_sig_length(0, 3).is_err());
+        assert!(try_sig_length(3, 0).is_err());
+    }
+
+    #[test]
+    fn try_signature_rejects_zero_depth_and_matches_wrapper() {
+        let path = [0.0, 0.0, 1.0, 2.0, 3.0, 1.0];
+        let p = Path::new(&path, 3, 2).unwrap();
+        assert_eq!(
+            try_signature(p, &SigOptions::new(0)),
+            Err(crate::path::SigError::ZeroDepth)
+        );
+        let typed = try_signature(p, &SigOptions::new(3)).unwrap();
+        let flat = sig(&path, 3, 2, 3);
+        assert_eq!(typed, flat);
     }
 }

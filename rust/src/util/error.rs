@@ -1,0 +1,70 @@
+//! Minimal string-context error type — the from-scratch stand-in for
+//! `anyhow` (unavailable offline). Provides [`Error`], a [`Result`] alias,
+//! the [`format_err!`](crate::format_err) constructor macro (importable as
+//! `use crate::format_err as anyhow;` for drop-in `anyhow!(..)` call sites),
+//! and a [`Context`] extension trait for wrapping underlying errors with a
+//! human-readable prefix.
+
+use std::fmt;
+
+/// A boxed-free, message-carrying error. Context wrapping concatenates into
+/// the message, so `{e}` and `{e:#}` both print the full chain.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-style constructor: `format_err!("parsing {path:?}: {e:?}")`.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Attach context to an underlying error, `anyhow::Context`-style.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<S: fmt::Display, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Debug> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e:?}")))
+    }
+    fn with_context<S: fmt::Display, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e:?}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_wraps_and_displays() {
+        let r: std::result::Result<(), std::num::ParseIntError> =
+            "x".parse::<i32>().map(|_| ());
+        let e = r.context("parsing x").unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("parsing x: "), "{s}");
+        let e2 = format_err!("plain {}", 42);
+        assert_eq!(format!("{e2:#}"), "plain 42");
+    }
+}

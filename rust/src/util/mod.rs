@@ -5,6 +5,7 @@
 //! a from-scratch implementation of the minimal functionality this library
 //! needs, with the same observable semantics.
 
+pub mod error;
 pub mod rng;
 pub mod pool;
 pub mod timing;

@@ -96,6 +96,53 @@ pub fn parallel_for_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     });
 }
 
+/// Like [`parallel_for_mut`], but with explicit per-chunk bounds: chunk `i`
+/// is `out[bounds[i]..bounds[i+1]]`. This is the ragged-batch counterpart —
+/// one output chunk per path, chunks of different sizes. `bounds` must be
+/// non-decreasing, start at 0 and end at `out.len()`.
+pub fn parallel_for_mut_ragged<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    out: &mut [T],
+    bounds: &[usize],
+    body: F,
+) {
+    assert!(
+        !bounds.is_empty() && bounds[0] == 0 && *bounds.last().unwrap() == out.len(),
+        "bounds must span the output"
+    );
+    debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+    let n = bounds.len() - 1;
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            let (lo, hi) = (bounds[i], bounds[i + 1]);
+            body(i, &mut out[lo..hi]);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    // Hand each worker the base pointer; chunks are disjoint by construction
+    // (bounds are non-decreasing).
+    let base = out.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let (lo, hi) = (bounds[i], bounds[i + 1]);
+                // SAFETY: chunk i is out[lo..hi]; the bounds are
+                // non-decreasing so chunks are disjoint across i, and `out`
+                // outlives the scope.
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut((base as *mut T).add(lo), hi - lo)
+                };
+                body(i, chunk);
+            });
+        }
+    });
+}
+
 /// A persistent pool of workers for the serving path, where per-request
 /// thread spawning would dominate. Jobs are boxed closures; the pool drains
 /// on drop.
@@ -179,6 +226,22 @@ mod tests {
         });
         for (i, c) in out.chunks(17).enumerate() {
             assert!(c.iter().all(|&v| v == i as f64));
+        }
+    }
+
+    #[test]
+    fn parallel_for_mut_ragged_disjoint_chunks() {
+        let bounds = [0usize, 3, 3, 10, 24, 25];
+        let mut out = vec![0.0f64; 25];
+        parallel_for_mut_ragged(&mut out, &bounds, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v = i as f64 + 1.0;
+            }
+        });
+        for i in 0..bounds.len() - 1 {
+            assert!(out[bounds[i]..bounds[i + 1]]
+                .iter()
+                .all(|&v| v == i as f64 + 1.0));
         }
     }
 

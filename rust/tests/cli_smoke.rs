@@ -50,6 +50,28 @@ fn logsig_command_runs() {
 }
 
 #[test]
+fn sig_command_runs_ragged() {
+    let args: Vec<String> = [
+        "sig", "--batch", "6", "--len", "16", "--dim", "2", "--depth", "3", "--ragged",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(pysiglib::cli::cli_main(&args), 0);
+}
+
+#[test]
+fn kernel_command_runs_ragged() {
+    let args: Vec<String> = [
+        "kernel", "--batch", "4", "--len", "12", "--dim", "2", "--ragged",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(pysiglib::cli::cli_main(&args), 0);
+}
+
+#[test]
 fn selfcheck_passes() {
     assert_eq!(pysiglib::cli::cli_main(&["selfcheck".into()]), 0);
 }

@@ -8,7 +8,14 @@ use pysiglib::coordinator::{serve, Batcher, BatcherConfig, Client, Op, Router};
 use pysiglib::transforms::Transform;
 use pysiglib::util::rng::Rng;
 
-fn start_server(max_batch: usize, max_wait_us: u64) -> (pysiglib::coordinator::server::ServerHandle, std::net::SocketAddr, Arc<Batcher>) {
+fn start_server(
+    max_batch: usize,
+    max_wait_us: u64,
+) -> (
+    pysiglib::coordinator::server::ServerHandle,
+    std::net::SocketAddr,
+    Arc<Batcher>,
+) {
     let router = Arc::new(Router::native_only());
     let batcher = Arc::new(Batcher::start(
         router,
@@ -160,4 +167,134 @@ fn malformed_payload_gets_error_response() {
     let mut rng = Rng::new(103);
     let path = rng.brownian_path(10, 2, 0.5);
     assert!(client.signature(&path, 10, 2, 2).unwrap().is_ok());
+}
+
+/// The no-panic contract: every malformed-but-framed request — zero dim,
+/// zero length, unknown op code, unknown transform, shape-inconsistent
+/// header — yields an `Err` response and the server keeps serving on the
+/// same connection.
+#[test]
+fn malformed_frames_error_and_server_keeps_serving() {
+    use std::io::Write;
+    let (_h, addr, _b) = start_server(4, 500);
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+
+    // Hand-crafted frames: (header words after magic, payload values).
+    // Header: op, p1, p2, transform, len, dim, n_values.
+    let cases: [([u32; 7], usize); 5] = [
+        ([1, 3, 0, 0, 2, 0, 0], 0),  // zero dim
+        ([1, 3, 0, 0, 0, 2, 0], 0),  // zero len
+        ([9, 3, 0, 0, 2, 2, 4], 4),  // unknown op code
+        ([1, 3, 0, 9, 2, 2, 4], 4),  // unknown transform
+        ([1, 3, 0, 0, 4, 2, 3], 3),  // n_values != len·dim
+    ];
+    for (words, n) in &cases {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&pysiglib::coordinator::wire::MAGIC.to_le_bytes());
+        for w in words {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        for v in 0..*n {
+            buf.extend_from_slice(&(v as f64).to_le_bytes());
+        }
+        stream.write_all(&buf).unwrap();
+        let resp = pysiglib::coordinator::wire::read_response(&mut stream).unwrap();
+        assert!(resp.is_err(), "case {words:?} should error: {resp:?}");
+    }
+
+    // Same connection still serves a well-formed request.
+    let mut rng = Rng::new(104);
+    let path = rng.brownian_path(8, 2, 0.5);
+    let frame = pysiglib::coordinator::Frame {
+        op: Op::Signature {
+            depth: 3,
+            transform: 0,
+        },
+        len: 8,
+        dim: 2,
+        values: path.clone(),
+    };
+    pysiglib::coordinator::wire::write_request(&mut stream, &frame).unwrap();
+    let resp = pysiglib::coordinator::wire::read_response(&mut stream).unwrap().unwrap();
+    let want = pysiglib::sig::sig(&path, 8, 2, 3);
+    assert!(pysiglib::util::linalg::max_abs_diff(&resp, &want) < 1e-12);
+}
+
+/// Ragged batch frames round-trip: one request carries paths of different
+/// lengths and the response matches per-path native computation exactly.
+#[test]
+fn ragged_batch_signature_over_the_wire() {
+    let (_h, addr, _b) = start_server(4, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(105);
+    let d = 2;
+    let lengths = [6usize, 1, 11, 3];
+    let paths: Vec<Vec<f64>> = lengths
+        .iter()
+        .map(|&l| rng.brownian_path(l, d, 0.5))
+        .collect();
+    let refs: Vec<&[f64]> = paths.iter().map(|p| p.as_slice()).collect();
+    let resp = client
+        .batch_signature_ragged(&refs, d, 3)
+        .unwrap()
+        .unwrap();
+    let slen = pysiglib::sig::sig_length(d, 3);
+    assert_eq!(resp.len(), lengths.len() * slen);
+    for (i, p) in paths.iter().enumerate() {
+        let want = pysiglib::sig::sig(p, lengths[i], d, 3);
+        assert_eq!(&resp[i * slen..(i + 1) * slen], &want[..], "path {i}");
+    }
+}
+
+#[test]
+fn ragged_kernel_pairs_over_the_wire() {
+    let (_h, addr, _b) = start_server(4, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(106);
+    let d = 2;
+    let shapes = [(5usize, 9usize), (3, 3), (12, 2)];
+    let data: Vec<(Vec<f64>, Vec<f64>)> = shapes
+        .iter()
+        .map(|&(lx, ly)| (rng.brownian_path(lx, d, 0.4), rng.brownian_path(ly, d, 0.4)))
+        .collect();
+    let pairs: Vec<(&[f64], &[f64])> = data
+        .iter()
+        .map(|(x, y)| (x.as_slice(), y.as_slice()))
+        .collect();
+    let resp = client.sig_kernel_ragged(&pairs, d).unwrap().unwrap();
+    assert_eq!(resp.len(), shapes.len());
+    for (i, ((x, y), &(lx, ly))) in data.iter().zip(shapes.iter()).enumerate() {
+        let want = pysiglib::kernel::sig_kernel(
+            x,
+            y,
+            lx,
+            ly,
+            d,
+            &pysiglib::kernel::KernelOptions::default(),
+        );
+        assert_eq!(resp[i], want, "pair {i}");
+    }
+}
+
+/// A malformed ragged frame (lengths disagreeing with the payload) errors
+/// without killing the connection.
+#[test]
+fn malformed_ragged_frame_gets_error_response() {
+    let (_h, addr, _b) = start_server(4, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let r = client
+        .call_ragged(
+            Op::Signature {
+                depth: 3,
+                transform: 0,
+            },
+            2,
+            vec![3, 2],      // 5 points → 10 values expected
+            vec![0.0; 9], // one short
+        )
+        .unwrap();
+    assert!(r.is_err());
+    let mut rng = Rng::new(107);
+    let path = rng.brownian_path(6, 2, 0.5);
+    assert!(client.signature(&path, 6, 2, 2).unwrap().is_ok());
 }

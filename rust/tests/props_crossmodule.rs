@@ -1,12 +1,13 @@
 //! Cross-module property tests: invariants that tie signatures, kernels,
 //! transforms and gradients together.
 
-use pysiglib::kernel::{mmd2, mmd2_with_grad, sig_kernel, KernelOptions};
-use pysiglib::sig::{sig, sig_length, SigOptions};
+use pysiglib::kernel::{mmd2, mmd2_with_grad, sig_kernel, try_gram, KernelOptions};
+use pysiglib::sig::{sig, sig_length, try_batch_signature, SigOptions};
 use pysiglib::tensor::inner_product;
 use pysiglib::transforms::Transform;
 use pysiglib::util::prop::check;
 use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
 
 /// The PDE kernel and the explicit truncated signature inner product agree
 /// once the truncation is deep enough and the PDE grid fine enough.
@@ -136,6 +137,84 @@ fn batch_parallel_serial_equivalence_all_transforms() {
                 &SigOptions::new(3).transform(tr).serial(),
             );
             assert_eq!(par, ser);
+        }
+    });
+}
+
+/// The ragged-batch contract (acceptance criterion): `PathBatch::ragged`
+/// batch-signature results exactly bit-match a per-path loop over `sig`,
+/// across random shapes — including the empty batch and length-1 paths.
+#[test]
+fn ragged_batch_signature_bitmatches_per_path_loop() {
+    check("ragged batch signature == per-path loop", 20, |g| {
+        let b = g.usize_in(0, 6); // 0 ⇒ empty-batch case
+        let d = g.usize_in(1, 3);
+        let depth = g.usize_in(1, 4);
+        let mut lengths = Vec::with_capacity(b);
+        let mut data = Vec::new();
+        for _ in 0..b {
+            let l = g.usize_in(1, 12); // 1 ⇒ trivial-path case
+            lengths.push(l);
+            data.extend(g.path(l, d, 0.5));
+        }
+        let pb = PathBatch::ragged(&data, &lengths, d).unwrap();
+        let out = try_batch_signature(&pb, &SigOptions::new(depth)).unwrap();
+        let slen = sig_length(d, depth);
+        assert_eq!(out.len(), b * slen);
+        let mut off = 0;
+        for (i, &l) in lengths.iter().enumerate() {
+            let want = sig(&data[off * d..(off + l) * d], l, d, depth);
+            assert_eq!(&out[i * slen..(i + 1) * slen], &want[..], "path {i}");
+            off += l;
+        }
+    });
+}
+
+/// Same contract for the Gram matrix: every ragged pair bit-matches
+/// `sig_kernel` on the pair's own lengths (length-1 paths give exactly 1).
+#[test]
+fn ragged_gram_bitmatches_per_pair_loop() {
+    check("ragged gram == per-pair loop", 12, |g| {
+        let bx = g.usize_in(0, 4);
+        let by = g.usize_in(0, 4);
+        let d = g.usize_in(1, 3);
+        let mut build = |b: usize| {
+            let mut lengths = Vec::with_capacity(b);
+            let mut data = Vec::new();
+            for _ in 0..b {
+                let l = g.usize_in(1, 8);
+                lengths.push(l);
+                data.extend(g.path(l, d, 0.4));
+            }
+            (lengths, data)
+        };
+        let (xl, xdata) = build(bx);
+        let (yl, ydata) = build(by);
+        let xb = PathBatch::ragged(&xdata, &xl, d).unwrap();
+        let yb = PathBatch::ragged(&ydata, &yl, d).unwrap();
+        let opts = KernelOptions::default();
+        let gm = try_gram(&xb, &yb, &opts).unwrap();
+        assert_eq!(gm.len(), bx * by);
+        let mut xo = 0;
+        for (i, &lx) in xl.iter().enumerate() {
+            let mut yo = 0;
+            for (j, &ly) in yl.iter().enumerate() {
+                let want = if lx < 2 || ly < 2 {
+                    1.0
+                } else {
+                    sig_kernel(
+                        &xdata[xo * d..(xo + lx) * d],
+                        &ydata[yo * d..(yo + ly) * d],
+                        lx,
+                        ly,
+                        d,
+                        &opts,
+                    )
+                };
+                assert_eq!(gm[i * by + j], want, "pair ({i},{j})");
+                yo += ly;
+            }
+            xo += lx;
         }
     });
 }
