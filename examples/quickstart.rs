@@ -98,5 +98,31 @@ fn main() {
     let uniform = PathBatch::uniform(&x, 1, len, dim).expect("valid");
     let m = try_mmd2(&batch, &uniform, &opts).expect("mmd");
     println!("ragged MMD²(batch, {{x}}) = {m:.6}");
+
+    // 8. Compile once, execute many: a `Plan` does all validation, layout
+    //    and workspace setup up front; repeat executions on the same shape
+    //    class allocate nothing and the record's retained forward state
+    //    feeds exact gradients without re-running the forward sweep.
+    use pysiglib::engine::{Gradients, OpSpec, Plan, ShapeClass};
+    let plan = Plan::compile(OpSpec::Sig(SigOptions::new(depth)), ShapeClass::uniform(dim, len))
+        .expect("compile");
+    let xb = PathBatch::uniform(&x, 1, len, dim).expect("valid");
+    let record = plan.execute(&xb).expect("execute");
+    let cold = plan.allocations();
+    drop(record);
+    let mut checksum = 0.0;
+    for _ in 0..100 {
+        let record = plan.execute(&xb).expect("execute");
+        checksum += record.values()[1];
+        let g = match record.vjp(&cot).expect("vjp") {
+            Gradients::Single(g) => g,
+            _ => unreachable!(),
+        };
+        checksum += g[0];
+    }
+    println!(
+        "plan reuse: 100 executions, {} arena allocations after warmup (checksum {checksum:.3})",
+        plan.allocations() - cold
+    );
     println!("quickstart OK");
 }

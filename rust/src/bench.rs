@@ -2,8 +2,11 @@
 //! paper's measurement protocol: *minimum* wall-clock over R runs after a
 //! warmup (§5: "the minimum runtime is taken over 50 runs").
 //!
-//! Rows print aligned for terminal reading and are also appended as CSV to
-//! `bench_results/<suite>.csv` so EXPERIMENTS.md can quote exact numbers.
+//! Rows print aligned for terminal reading and are persisted twice on drop:
+//! as CSV (`bench_results/<suite>.csv`, the historical format) and as
+//! machine-readable JSON (`bench_results/BENCH_<suite>.json` with min and
+//! median seconds, run counts and the git revision) so the perf trajectory
+//! can be tracked across PRs.
 
 use std::io::Write;
 use std::time::Instant;
@@ -17,10 +20,18 @@ pub fn bench_runs(default: usize) -> usize {
         .unwrap_or(default)
 }
 
-/// A benchmark suite: prints a header, times closures, writes CSV.
+/// One timed case: name plus the aggregate of its runs.
+struct Row {
+    case: String,
+    min: f64,
+    median: f64,
+    runs: usize,
+}
+
+/// A benchmark suite: prints a header, times closures, writes CSV + JSON.
 pub struct Suite {
     name: String,
-    rows: Vec<(String, f64)>,
+    rows: Vec<Row>,
 }
 
 impl Suite {
@@ -33,21 +44,35 @@ impl Suite {
         }
     }
 
-    /// Minimum time over `runs` of `f` (after one warmup), recorded+printed.
-    /// Set PYSIGLIB_BENCH_NOWARMUP=1 to skip the warmup execution (useful
-    /// when a full-suite capture must fit a wall-clock budget).
+    /// Minimum time over `runs` of `f` (after one warmup), recorded+printed;
+    /// the median is kept alongside for the JSON trajectory. Set
+    /// PYSIGLIB_BENCH_NOWARMUP=1 to skip the warmup execution (useful when a
+    /// full-suite capture must fit a wall-clock budget).
     pub fn time<F: FnMut()>(&mut self, case: &str, runs: usize, mut f: F) -> f64 {
         if std::env::var("PYSIGLIB_BENCH_NOWARMUP").as_deref() != Ok("1") {
             f(); // warmup
         }
-        let mut best = f64::INFINITY;
-        for _ in 0..runs.max(1) {
+        let runs = runs.max(1);
+        let mut samples = Vec::with_capacity(runs);
+        for _ in 0..runs {
             let t = Instant::now();
             f();
-            best = best.min(t.elapsed().as_secs_f64());
+            samples.push(t.elapsed().as_secs_f64());
         }
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("timings are finite"));
+        let best = samples[0];
+        let median = if samples.len() % 2 == 1 {
+            samples[samples.len() / 2]
+        } else {
+            0.5 * (samples[samples.len() / 2 - 1] + samples[samples.len() / 2])
+        };
         println!("{case:<56} {best:>12.6}");
-        self.rows.push((case.to_string(), best));
+        self.rows.push(Row {
+            case: case.to_string(),
+            min: best,
+            median,
+            runs,
+        });
         best
     }
 
@@ -58,16 +83,70 @@ impl Suite {
         } else {
             println!("{case:<56} {secs:>12.6}");
         }
-        self.rows.push((case.to_string(), secs));
+        self.rows.push(Row {
+            case: case.to_string(),
+            min: secs,
+            median: secs,
+            runs: 0,
+        });
     }
 
-    /// Look up a recorded row (for derived ratios).
+    /// Look up a recorded row's min time (for derived ratios).
     pub fn get(&self, case: &str) -> Option<f64> {
-        self.rows
-            .iter()
-            .find(|(c, _)| c == case)
-            .map(|(_, t)| *t)
+        self.rows.iter().find(|r| r.case == case).map(|r| r.min)
     }
+
+    /// Drop the recorded rows without persisting (used by self-tests).
+    pub fn discard(&mut self) {
+        self.rows.clear();
+    }
+
+    /// The JSON document written on drop (public for testing).
+    pub fn json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(&self.name)));
+        s.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&git_rev())));
+        s.push_str("  \"cases\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"case\": \"{}\", \"min_seconds\": {}, \"median_seconds\": {}, \"runs\": {}}}{}\n",
+                json_escape(&r.case),
+                json_num(r.min),
+                json_num(r.median),
+                r.runs,
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// JSON has no NaN/Inf: failure markers become null.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Current git revision (short), or "unknown" outside a work tree.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 impl Drop for Suite {
@@ -79,13 +158,18 @@ impl Drop for Suite {
         if std::fs::create_dir_all(dir).is_err() {
             return;
         }
-        let path = dir.join(format!("{}.csv", self.name));
-        if let Ok(mut f) = std::fs::File::create(&path) {
+        let csv = dir.join(format!("{}.csv", self.name));
+        if let Ok(mut f) = std::fs::File::create(&csv) {
             let _ = writeln!(f, "case,min_seconds");
-            for (case, secs) in &self.rows {
-                let _ = writeln!(f, "{case},{secs}");
+            for r in &self.rows {
+                let _ = writeln!(f, "{},{}", r.case, r.min);
             }
-            println!("[wrote {}]", path.display());
+            println!("[wrote {}]", csv.display());
+        }
+        let json = dir.join(format!("BENCH_{}.json", self.name));
+        if let Ok(mut f) = std::fs::File::create(&json) {
+            let _ = f.write_all(self.json().as_bytes());
+            println!("[wrote {}]", json.display());
         }
     }
 }
@@ -102,12 +186,41 @@ mod tests {
         s.record("marker", f64::NAN);
         assert!(s.get("noop").is_some());
         assert!(s.get("missing").is_none());
-        // prevent the CSV drop from polluting the repo during tests
-        s.rows.clear();
+        // prevent the CSV/JSON drop from polluting the repo during tests
+        s.discard();
     }
 
     #[test]
     fn runs_override_respects_default() {
         assert!(bench_runs(7) >= 1);
+    }
+
+    #[test]
+    fn json_document_is_well_formed() {
+        let mut s = Suite::new("jsontest");
+        s.time("a \"quoted\" case", 2, || {});
+        s.record("failed", f64::NAN);
+        let j = s.json();
+        assert!(j.contains("\"suite\": \"jsontest\""));
+        assert!(j.contains("\"git_rev\": \""));
+        assert!(j.contains("a \\\"quoted\\\" case"));
+        assert!(j.contains("\"min_seconds\": null"));
+        assert!(j.contains("\"runs\": 2"));
+        // Balanced braces/brackets as a cheap structural check.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        s.discard();
+    }
+
+    #[test]
+    fn median_is_between_min_and_max() {
+        let mut s = Suite::new("medtest");
+        s.time("spin", 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        let r = &s.rows[0];
+        assert!(r.median >= r.min);
+        assert_eq!(r.runs, 5);
+        s.discard();
     }
 }

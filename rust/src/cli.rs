@@ -20,12 +20,14 @@ COMMANDS:
   sig        compute a batch of truncated signatures on synthetic paths
              --batch N --len L --dim D --depth N --transform none|time|leadlag
              --method horner|direct --serial
+             --repeat R compile the plan once, execute it R times (the
+                        engine's compile-once/execute-many session API)
              --ragged   variable-length paths in [L/2, L] (typed PathBatch
                         API, no padding)
   logsig     compute log-signatures       (same flags as sig)
   kernel     compute a batch of signature kernels
              --batch N --len L --dim D --dyadic λ --dyadic2 λ2
-             --solver row|blocked --transform ...
+             --solver row|blocked --transform ... --repeat R
              --ragged   variable-length (x, y) pairs in [L/2, L]
   grad       exact signature-kernel gradients for a batch of pairs
   serve      run the serving coordinator
@@ -116,36 +118,54 @@ fn cmd_sig(log: bool, flags: &HashMap<String, String>) -> i32 {
     if flags.contains_key("ragged") {
         return cmd_sig_ragged(log, batch, len, dim, &opts, &mut rng);
     }
+    // The engine's session API: compile the shape class's plan once, then
+    // execute it --repeat times — the steady state allocates nothing.
+    let repeat = flag_usize(flags, "repeat", 1).max(1);
     let paths = rng.brownian_batch(batch, len, dim, 0.3);
-    let t = std::time::Instant::now();
-    let (rows, width, checksum);
-    if log {
-        let mut out = Vec::new();
-        for b in 0..batch {
-            out.extend(crate::sig::log_signature(
-                &paths[b * len * dim..(b + 1) * len * dim],
-                len,
-                dim,
-                depth,
-                tr,
-            ));
-        }
-        width = out.len() / batch;
-        rows = batch;
-        checksum = out.iter().sum::<f64>();
+    let session = crate::engine::Session::new();
+    let spec = if log {
+        crate::engine::OpSpec::LogSig(opts)
     } else {
-        let out = crate::sig::batch_signature(&paths, batch, len, dim, &opts);
-        width = out.len() / batch;
-        rows = batch;
-        checksum = out.iter().sum::<f64>();
+        crate::engine::OpSpec::Sig(opts)
+    };
+    let plan = match session.forward_plan(spec, crate::engine::ShapeClass::uniform(dim, len)) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("plan compilation failed: {e}");
+            return 2;
+        }
+    };
+    let pb = match crate::path::PathBatch::uniform(&paths, batch, len, dim) {
+        Ok(pb) => pb,
+        Err(e) => {
+            eprintln!("invalid batch: {e}");
+            return 2;
+        }
+    };
+    let t = std::time::Instant::now();
+    let (mut width, mut checksum) = (0usize, 0.0);
+    for _ in 0..repeat {
+        match plan.execute(&pb) {
+            Ok(rec) => {
+                width = if batch == 0 { 0 } else { rec.values().len() / batch };
+                checksum = rec.values().iter().sum::<f64>();
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
     }
     let dt = t.elapsed().as_secs_f64();
     println!(
-        "{} batch={rows} len={len} dim={dim} depth={depth} transform={tr:?} width={width}",
+        "{} batch={batch} len={len} dim={dim} depth={depth} transform={tr:?} width={width} repeat={repeat}",
         if log { "logsig" } else { "sig" }
     );
-    println!("time={dt:.6}s  throughput={:.1} paths/s  checksum={checksum:.6e}",
-        rows as f64 / dt);
+    println!(
+        "time={dt:.6}s  throughput={:.1} paths/s  arena_allocs={}  checksum={checksum:.6e}",
+        (batch * repeat) as f64 / dt,
+        plan.allocations(),
+    );
     0
 }
 
@@ -252,11 +272,47 @@ fn cmd_kernel(flags: &HashMap<String, String>) -> i32 {
         };
         (ks, t.elapsed().as_secs_f64(), format!("len∈[{lo},{hi}]"))
     } else {
+        // Session-compiled plan, executed --repeat times on the same shape.
+        let repeat = flag_usize(flags, "repeat", 1).max(1);
         let x = rng.brownian_batch(batch, len, dim, 0.3);
         let y = rng.brownian_batch(batch, len, dim, 0.3);
+        let session = crate::engine::Session::new();
+        let plan = match session.forward_plan(
+            crate::engine::OpSpec::SigKernel(opts),
+            crate::engine::ShapeClass::uniform(dim, len),
+        ) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("plan compilation failed: {e}");
+                return 2;
+            }
+        };
+        let (xb, yb) = match (
+            crate::path::PathBatch::uniform(&x, batch, len, dim),
+            crate::path::PathBatch::uniform(&y, batch, len, dim),
+        ) {
+            (Ok(xb), Ok(yb)) => (xb, yb),
+            _ => {
+                eprintln!("invalid batch");
+                return 2;
+            }
+        };
         let t = std::time::Instant::now();
-        let ks = crate::kernel::batch_kernel(&x, &y, batch, len, len, dim, &opts);
-        (ks, t.elapsed().as_secs_f64(), format!("len={len}"))
+        let mut ks = Vec::new();
+        for r in 0..repeat {
+            match plan.execute_pair(&xb, &yb) {
+                // Only the final record detaches its buffer; intermediate
+                // ones return theirs to the arena so the steady state stays
+                // allocation-free.
+                Ok(rec) if r + 1 == repeat => ks = rec.into_values(),
+                Ok(_) => {}
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            }
+        }
+        (ks, t.elapsed().as_secs_f64(), format!("len={len} repeat={repeat}"))
     };
     println!(
         "kernel batch={batch} {desc} dim={dim} dyadic=({lam1},{lam2}) solver={solver:?} transform={tr:?}"

@@ -137,6 +137,7 @@ impl Batcher {
         for _ in 0..b {
             self.metrics.record_response(compute_us, 0, is_err);
         }
+        self.metrics.set_plan_cache(self.router.plan_cache_stats());
         result
     }
 
@@ -227,6 +228,7 @@ fn execute_group(router: &Router, metrics: &Metrics, key: GroupKey, batch: Vec<P
         .collect();
     let reqs: Vec<&Request> = batch.iter().map(|p| &p.req).collect();
     let results = router.execute_batch(key.op, key.len, key.dim, &reqs);
+    metrics.set_plan_cache(router.plan_cache_stats());
     let compute_us = started.elapsed().as_micros() as u64;
     for ((p, result), q_us) in batch.iter().zip(results).zip(queue_us) {
         let is_err = matches!(result, Response::Error(_));

@@ -16,6 +16,12 @@ pub struct Metrics {
     lat_max_us: AtomicU64,
     /// Queue-time share of latency (µs).
     queue_sum_us: AtomicU64,
+    /// Plan-cache counters, mirrored from the router's
+    /// [`PlanCache`](crate::engine::PlanCache) after each batch so the
+    /// snapshot/summary always reflects the serving path's cache behaviour.
+    pub plan_hits_total: AtomicU64,
+    pub plan_misses_total: AtomicU64,
+    pub plan_evictions_total: AtomicU64,
 }
 
 impl Metrics {
@@ -41,6 +47,15 @@ impl Metrics {
         self.lat_sum_us.fetch_add(latency_us, Ordering::Relaxed);
         self.queue_sum_us.fetch_add(queue_us, Ordering::Relaxed);
         self.lat_max_us.fetch_max(latency_us, Ordering::Relaxed);
+    }
+
+    /// Mirror the router's plan-cache counters into the snapshot (the cache
+    /// owns the live values; this keeps the metrics surface one-stop).
+    pub fn set_plan_cache(&self, stats: crate::engine::CacheStats) {
+        self.plan_hits_total.store(stats.hits, Ordering::Relaxed);
+        self.plan_misses_total.store(stats.misses, Ordering::Relaxed);
+        self.plan_evictions_total
+            .store(stats.evictions, Ordering::Relaxed);
     }
 
     /// Mean items per flushed batch — the batching efficiency signal.
@@ -75,7 +90,7 @@ impl Metrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0}",
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={}",
             self.requests_total.load(Ordering::Relaxed),
             self.responses_total.load(Ordering::Relaxed),
             self.errors_total.load(Ordering::Relaxed),
@@ -84,6 +99,9 @@ impl Metrics {
             self.mean_latency_us(),
             self.max_latency_us(),
             self.mean_queue_us(),
+            self.plan_hits_total.load(Ordering::Relaxed),
+            self.plan_misses_total.load(Ordering::Relaxed),
+            self.plan_evictions_total.load(Ordering::Relaxed),
         )
     }
 }
@@ -107,5 +125,22 @@ mod tests {
         assert_eq!(m.max_latency_us(), 300);
         assert_eq!(m.mean_queue_us(), 50.0);
         assert!(m.summary().contains("batches=1"));
+    }
+
+    #[test]
+    fn plan_cache_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.set_plan_cache(crate::engine::CacheStats {
+            hits: 7,
+            misses: 2,
+            evictions: 1,
+        });
+        assert_eq!(m.plan_hits_total.load(Ordering::Relaxed), 7);
+        assert_eq!(m.plan_misses_total.load(Ordering::Relaxed), 2);
+        assert_eq!(m.plan_evictions_total.load(Ordering::Relaxed), 1);
+        let s = m.summary();
+        assert!(s.contains("plan_hits=7"), "{s}");
+        assert!(s.contains("plan_misses=2"), "{s}");
+        assert!(s.contains("plan_evictions=1"), "{s}");
     }
 }

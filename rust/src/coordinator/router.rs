@@ -2,57 +2,92 @@
 //! flushed batch (native Rust kernels always; a PJRT artifact when one
 //! matches the op + batch shape exactly), and runs it.
 //!
-//! All native execution goes through the typed [`PathBatch`] API, so a
-//! malformed or shape-inconsistent request can only ever produce a
-//! [`Response::Error`] — no panic is reachable from the request path.
+//! All native execution goes through compiled engine
+//! [`Plan`](crate::engine::Plan)s held in an LRU [`PlanCache`] keyed by
+//! shape group, so repeated traffic classes skip validation/layout work and
+//! reuse warm workspaces. A malformed or shape-inconsistent request can only
+//! ever produce a [`Response::Error`] — no panic is reachable from the
+//! request path.
 
 use std::sync::Arc;
 
 use crate::coordinator::wire::RaggedFrame;
 use crate::coordinator::{transform_from_u8, Op, Request, Response};
+use crate::engine::{CacheStats, OpSpec, PlanCache, ShapeClass};
 use crate::kernel::KernelOptions;
 use crate::path::{PathBatch, SigError};
 use crate::runtime::RuntimeHandle;
 use crate::sig::SigOptions;
-use crate::util::pool::{parallel_for_mut, parallel_for_mut_ragged};
 
-/// Pre-validate every (x_i, y_i) pair's refined PDE grid so that the
-/// parallel per-pair kernel calls below cannot fail (grid size is monotone
-/// in path length, so the longest pair bounds all).
-fn check_pair_grids(
-    pb: &PathBatch<'_>,
-    pairs: usize,
-    opts: &KernelOptions,
-) -> Result<(), SigError> {
-    let mx = (0..pairs).map(|i| pb.len_of(2 * i)).max().unwrap_or(0);
-    let my = (0..pairs).map(|i| pb.len_of(2 * i + 1)).max().unwrap_or(0);
-    if mx >= 2 && my >= 2 {
-        crate::kernel::check_grid_size(mx, my, opts)?;
-    }
-    Ok(())
-}
+/// Plans cached per router (shape groups recur heavily under load; 64
+/// classes is far beyond any realistic concurrent working set).
+const PLAN_CACHE_CAPACITY: usize = 64;
 
 /// Compute backend selection per batch.
 pub struct Router {
     /// Optional PJRT runtime over `artifacts/`; `None` = native only.
     runtime: Option<Arc<RuntimeHandle>>,
+    /// Warm compiled plans keyed by (op, shape class).
+    plans: PlanCache,
 }
 
 impl Router {
     /// Native Rust kernels only (no artifacts needed).
     pub fn native_only() -> Router {
-        Router { runtime: None }
+        Router {
+            runtime: None,
+            plans: PlanCache::new(PLAN_CACHE_CAPACITY),
+        }
     }
 
     /// Prefer PJRT artifacts when shapes match; fall back to native.
     pub fn with_runtime(runtime: Arc<RuntimeHandle>) -> Router {
         Router {
             runtime: Some(runtime),
+            plans: PlanCache::new(PLAN_CACHE_CAPACITY),
         }
     }
 
     pub fn has_runtime(&self) -> bool {
         self.runtime.is_some()
+    }
+
+    /// Plan-cache hit/miss/eviction counters (surfaced in server metrics).
+    pub fn plan_cache_stats(&self) -> CacheStats {
+        self.plans.stats()
+    }
+
+    /// Decode an op's wire transform + options into an engine spec.
+    /// `retain` selects a record-keeping plan (gradient ops).
+    fn op_spec(op: Op) -> Result<(OpSpec, bool), SigError> {
+        match op {
+            Op::Signature { depth, transform } => {
+                let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
+                Ok((OpSpec::Sig(SigOptions::new(depth as usize).transform(tr)), false))
+            }
+            Op::LogSignature { depth, transform } => {
+                let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
+                Ok((
+                    OpSpec::LogSig(SigOptions::new(depth as usize).transform(tr)),
+                    false,
+                ))
+            }
+            Op::SigKernel {
+                lam1,
+                lam2,
+                transform,
+            } => {
+                let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
+                Ok((
+                    OpSpec::SigKernel(KernelOptions::default().dyadic(lam1, lam2).transform(tr)),
+                    false,
+                ))
+            }
+            Op::SigKernelGrad { lam1, lam2 } => Ok((
+                OpSpec::SigKernel(KernelOptions::default().dyadic(lam1, lam2)),
+                true,
+            )),
+        }
     }
 
     /// Name of the PJRT artifact that can serve this batch, if any.
@@ -151,63 +186,57 @@ impl Router {
                 frame.lengths.len()
             )));
         }
+        let (spec, retain) = Self::op_spec(frame.op)?;
+        let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
         match frame.op {
-            Op::Signature { depth, transform } => {
-                let tr = transform_from_u8(transform)
-                    .ok_or(SigError::BadTransform(transform))?;
-                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
-                let opts = SigOptions::new(depth as usize).transform(tr);
-                crate::sig::try_batch_signature(&pb, &opts)
+            Op::Signature { .. } | Op::LogSignature { .. } => {
+                let plan = self.plans.get_or_compile(
+                    spec,
+                    ShapeClass::for_batch(&pb).bucketed(),
+                    retain,
+                    None,
+                )?;
+                Ok(plan.execute(&pb)?.into_values())
             }
-            Op::LogSignature { depth, transform } => {
-                let tr = transform_from_u8(transform)
-                    .ok_or(SigError::BadTransform(transform))?;
-                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
-                let opts = SigOptions::new(depth as usize).transform(tr);
-                crate::sig::try_batch_log_signature(&pb, &opts)
-            }
-            Op::SigKernel {
-                lam1,
-                lam2,
-                transform,
-            } => {
-                let tr = transform_from_u8(transform)
-                    .ok_or(SigError::BadTransform(transform))?;
-                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
-                let opts = KernelOptions::default().dyadic(lam1, lam2).transform(tr);
+            Op::SigKernel { .. } | Op::SigKernelGrad { .. } => {
+                // Pairs (x_i, y_i) interleave as paths (2i, 2i+1);
+                // de-interleave into the paired plan's two batches (one
+                // pre-sized copy of the already-validated payload).
                 let b = frame.batch();
-                check_pair_grids(&pb, b, &opts)?;
-                let mut out = vec![0.0; b];
-                // Pairs (x_i, y_i) interleave as paths (2i, 2i+1); lengths
-                // were validated even at decode, grid sizes just above.
-                parallel_for_mut(&mut out, 1, |i, slot| {
-                    let (x, y) = (pb.path(2 * i), pb.path(2 * i + 1));
-                    slot[0] = crate::kernel::try_sig_kernel(x, y, &opts).expect("validated");
-                });
-                Ok(out)
-            }
-            Op::SigKernelGrad { lam1, lam2 } => {
-                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
-                let opts = KernelOptions::default().dyadic(lam1, lam2);
-                let b = frame.batch();
-                check_pair_grids(&pb, b, &opts)?;
-                // Per pair, output is grad_x ++ grad_y — exactly the pair's
-                // own slice of the input layout, so the ragged output bounds
-                // are the pairwise element offsets.
-                let eo = pb.element_offsets();
-                let bounds: Vec<usize> = (0..=b).map(|i| eo[2 * i]).collect();
-                let mut out = vec![0.0; pb.total_points() * frame.dim];
-                parallel_for_mut_ragged(&mut out, &bounds, |i, chunk| {
-                    let (gx, gy) = crate::kernel::try_sig_kernel_vjp(
-                        pb.path(2 * i),
-                        pb.path(2 * i + 1),
-                        &opts,
-                        1.0,
-                    )
-                    .expect("validated");
-                    chunk[..gx.len()].copy_from_slice(&gx);
-                    chunk[gx.len()..].copy_from_slice(&gy);
-                });
+                let dim = frame.dim;
+                let (mut xl, mut yl) = (Vec::with_capacity(b), Vec::with_capacity(b));
+                let half = pb.total_points() * dim / 2 + dim;
+                let (mut xdata, mut ydata) =
+                    (Vec::with_capacity(half), Vec::with_capacity(half));
+                for i in 0..b {
+                    xl.push(pb.len_of(2 * i));
+                    xdata.extend_from_slice(pb.values_of(2 * i));
+                    yl.push(pb.len_of(2 * i + 1));
+                    ydata.extend_from_slice(pb.values_of(2 * i + 1));
+                }
+                let xb = PathBatch::ragged(&xdata, &xl, dim)?;
+                let yb = PathBatch::ragged(&ydata, &yl, dim)?;
+                let shape = ShapeClass::for_pair(&xb, &yb).bucketed();
+                let plan = self.plans.get_or_compile(spec, shape, retain, None)?;
+                let rec = plan.execute_pair(&xb, &yb)?;
+                if matches!(frame.op, Op::SigKernel { .. }) {
+                    return Ok(rec.into_values());
+                }
+                // Gradient frames: re-interleave (grad_x_i ++ grad_y_i) per
+                // pair — exactly each pair's slice of the input layout.
+                let (gx, gy) = rec.vjp(&vec![1.0; b])?.into_pair()?;
+                let xo = xb.element_offsets();
+                let yo = yb.element_offsets();
+                let mut out = vec![0.0; pb.total_points() * dim];
+                let mut pos = 0;
+                for i in 0..b {
+                    let xs = &gx[xo[i]..xo[i + 1]];
+                    out[pos..pos + xs.len()].copy_from_slice(xs);
+                    pos += xs.len();
+                    let ys = &gy[yo[i]..yo[i + 1]];
+                    out[pos..pos + ys.len()].copy_from_slice(ys);
+                    pos += ys.len();
+                }
                 Ok(out)
             }
         }
@@ -247,39 +276,35 @@ impl Router {
             }
             Ok(ys)
         };
+        // Warm (or compile) the shape group's plan — repeated traffic
+        // classes skip validation and layout work entirely.
+        let (spec, retain) = match Self::op_spec(op) {
+            Ok(s) => s,
+            Err(e) => return errs(e.to_string()),
+        };
+        let plan = match self
+            .plans
+            .get_or_compile(spec, ShapeClass::uniform(dim, len), retain, None)
+        {
+            Ok(p) => p,
+            Err(e) => return errs(e.to_string()),
+        };
         match op {
-            Op::Signature { depth, transform } | Op::LogSignature { depth, transform } => {
-                let tr = match transform_from_u8(transform) {
-                    Some(t) => t,
-                    None => return errs("bad transform".to_string()),
-                };
-                let opts = SigOptions::new(depth as usize).transform(tr);
-                let slen = match crate::sig::try_sig_length(tr.out_dim(dim), depth as usize) {
-                    Ok(slen) => slen,
-                    Err(e) => return errs(e.to_string()),
-                };
-                let result = if matches!(op, Op::Signature { .. }) {
-                    crate::sig::try_batch_signature(&pb, &opts)
-                } else {
-                    crate::sig::try_batch_log_signature(&pb, &opts)
-                };
-                match result {
-                    Ok(rows) => rows
+            Op::Signature { .. } | Op::LogSignature { .. } => {
+                // Row length was precomputed at plan compilation; borrowing
+                // `values()` (rather than detaching them) lets the record
+                // return its output buffer to the warm plan's arena.
+                let slen = plan.row_len();
+                match plan.execute(&pb) {
+                    Ok(rec) => rec
+                        .values()
                         .chunks(slen)
                         .map(|c| Response::Values(c.to_vec()))
                         .collect(),
                     Err(e) => errs(e.to_string()),
                 }
             }
-            Op::SigKernel {
-                lam1,
-                lam2,
-                transform,
-            } => {
-                let tr = match transform_from_u8(transform) {
-                    Some(t) => t,
-                    None => return errs("bad transform".to_string()),
-                };
+            Op::SigKernel { .. } => {
                 let ys = match gather_ys(reqs) {
                     Ok(ys) => ys,
                     Err(e) => return errs(e),
@@ -288,13 +313,16 @@ impl Router {
                     Ok(yb) => yb,
                     Err(e) => return errs(e.to_string()),
                 };
-                let opts = KernelOptions::default().dyadic(lam1, lam2).transform(tr);
-                match crate::kernel::try_batch_kernel(&pb, &yb, &opts) {
-                    Ok(ks) => ks.iter().map(|&k| Response::Values(vec![k])).collect(),
+                match plan.execute_pair(&pb, &yb) {
+                    Ok(rec) => rec
+                        .values()
+                        .iter()
+                        .map(|&k| Response::Values(vec![k]))
+                        .collect(),
                     Err(e) => errs(e.to_string()),
                 }
             }
-            Op::SigKernelGrad { lam1, lam2 } => {
+            Op::SigKernelGrad { .. } => {
                 let ys = match gather_ys(reqs) {
                     Ok(ys) => ys,
                     Err(e) => return errs(e),
@@ -303,9 +331,12 @@ impl Router {
                     Ok(yb) => yb,
                     Err(e) => return errs(e.to_string()),
                 };
-                let opts = KernelOptions::default().dyadic(lam1, lam2);
                 let gk = vec![1.0; b];
-                match crate::kernel::try_batch_kernel_vjp(&pb, &yb, &gk, &opts) {
+                let vjp = plan
+                    .execute_pair(&pb, &yb)
+                    .and_then(|rec| rec.vjp(&gk))
+                    .and_then(|g| g.into_pair());
+                match vjp {
                     Ok((gx, gy)) => (0..b)
                         .map(|i| {
                             let mut v = gx[i * len * dim..(i + 1) * len * dim].to_vec();

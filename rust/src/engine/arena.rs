@@ -1,0 +1,202 @@
+//! The workspace arena behind compiled [`Plan`](super::Plan)s: a shared pool
+//! of reusable buffers with an allocation counter, so steady-state
+//! `plan.execute(..)` performs **zero shape-dependent heap allocation** —
+//! every buffer whose size depends on the batch shape (outputs, increment
+//! scratch, Δ matrices, PDE rows and grids, offset tables) is checked out of
+//! the pool and returned when the [`ExecutionRecord`](super::ExecutionRecord)
+//! drops.
+//!
+//! The counter only moves when a checkout cannot be served from the free
+//! list; the engine's unit tests assert it stays flat across repeated
+//! executions of the same plan on same-shape inputs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Keep at most this many idle buffers per pool; beyond it, returned buffers
+/// are simply dropped (bounds memory held by long-lived cached plans).
+const MAX_FREE: usize = 256;
+
+/// Also bound the *total capacity* a pool may hold idle (2^27 f64s = 1 GiB):
+/// long-lived cached plans (the serving router keeps plans for the process
+/// lifetime) must not pin a one-off worst-case workspace forever. Working
+/// sets under the cap keep the zero-allocation steady state; a single
+/// monster request beyond it trades steady-state reuse for bounded RSS.
+const MAX_POOLED: usize = 1 << 27;
+
+#[derive(Default)]
+struct ArenaInner {
+    f64s: Mutex<Vec<Vec<f64>>>,
+    usizes: Mutex<Vec<Vec<usize>>>,
+    allocations: AtomicU64,
+}
+
+/// Pool a returned buffer if both the count and total-capacity bounds allow
+/// it; otherwise drop it.
+fn give_bounded<T>(free: &mut Vec<Vec<T>>, buf: Vec<T>, max_free: usize, max_pooled: usize) {
+    let held: usize = free.iter().map(|b| b.capacity()).sum();
+    if free.len() < max_free && held + buf.capacity() <= max_pooled {
+        free.push(buf);
+    }
+}
+
+/// Cheaply clonable handle to a buffer pool shared by a plan and the records
+/// it produces.
+#[derive(Clone, Default)]
+pub struct Arena {
+    inner: Arc<ArenaInner>,
+}
+
+/// Best-fit checkout: the free buffer with the smallest sufficient capacity.
+/// With identical request multisets across runs this is order-independent —
+/// a warm pool always serves a repeat execution without allocating.
+fn best_fit<T>(free: &mut Vec<Vec<T>>, len: usize) -> Option<Vec<T>> {
+    let mut best: Option<usize> = None;
+    for (i, buf) in free.iter().enumerate() {
+        let cap = buf.capacity();
+        if cap < len {
+            continue;
+        }
+        match best {
+            Some(b) if free[b].capacity() <= cap => {}
+            _ => best = Some(i),
+        }
+    }
+    best.map(|i| free.swap_remove(i))
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Number of fresh heap allocations the arena has performed. Flat across
+    /// two executions of the same plan on same-shape inputs (the zero-alloc
+    /// steady-state contract).
+    pub fn allocations(&self) -> u64 {
+        self.inner.allocations.load(Ordering::Relaxed)
+    }
+
+    /// Check out a zeroed `f64` buffer of exactly `len` elements.
+    ///
+    /// Reused buffers are deliberately re-zeroed even though most hot-path
+    /// consumers fully overwrite them: several (signature rows on the len<2
+    /// path, per-pair Δ regions around degenerate pairs) rely on zeroed
+    /// storage, and a non-zeroing variant would make that invariant
+    /// per-call-site instead of structural. Revisit only with a benchmark
+    /// showing the memset on the largest (grid) buffers matters.
+    pub(crate) fn take(&self, len: usize) -> Vec<f64> {
+        if len == 0 {
+            return Vec::new(); // never touches the pool, never counts
+        }
+        let reused = best_fit(&mut self.inner.f64s.lock().unwrap(), len);
+        match reused {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0.0); // within capacity: no allocation
+                buf
+            }
+            None => {
+                self.inner.allocations.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Check out a zeroed `usize` buffer of exactly `len` elements.
+    pub(crate) fn take_usize(&self, len: usize) -> Vec<usize> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let reused = best_fit(&mut self.inner.usizes.lock().unwrap(), len);
+        match reused {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0);
+                buf
+            }
+            None => {
+                self.inner.allocations.fetch_add(1, Ordering::Relaxed);
+                vec![0; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the pool (no-op for never-allocated buffers;
+    /// dropped instead of pooled past the count/byte bounds).
+    pub(crate) fn give(&self, buf: Vec<f64>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut free = self.inner.f64s.lock().unwrap();
+        give_bounded(&mut free, buf, MAX_FREE, MAX_POOLED);
+    }
+
+    pub(crate) fn give_usize(&self, buf: Vec<usize>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut free = self.inner.usizes.lock().unwrap();
+        give_bounded(&mut free, buf, MAX_FREE, MAX_POOLED);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_does_not_allocate() {
+        let a = Arena::new();
+        let b1 = a.take(100);
+        let b2 = a.take(10);
+        assert_eq!(a.allocations(), 2);
+        a.give(b1);
+        a.give(b2);
+        // Same request multiset, different order: served from the pool.
+        let c1 = a.take(10);
+        let c2 = a.take(100);
+        assert_eq!(a.allocations(), 2);
+        assert_eq!(c1.len(), 10);
+        assert!(c2.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let a = Arena::new();
+        let small = a.take(8);
+        let big = a.take(1000);
+        a.give(big);
+        a.give(small);
+        let got = a.take(4);
+        assert!(got.capacity() < 1000, "best fit must pick the small buffer");
+        a.give(got);
+        assert_eq!(a.allocations(), 2);
+    }
+
+    #[test]
+    fn give_bounded_enforces_count_and_capacity_caps() {
+        // Count cap: a third buffer is dropped.
+        let mut free: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..3 {
+            give_bounded(&mut free, vec![0.0; 4], 2, usize::MAX);
+        }
+        assert_eq!(free.len(), 2);
+        // Capacity cap: a one-off monster buffer must not be pinned by a
+        // long-lived pool.
+        let mut free: Vec<Vec<f64>> = Vec::new();
+        give_bounded(&mut free, vec![0.0; 10], 256, 16);
+        give_bounded(&mut free, vec![0.0; 10], 256, 16);
+        assert_eq!(free.len(), 1, "second buffer exceeds the byte bound");
+    }
+
+    #[test]
+    fn usize_pool_is_separate() {
+        let a = Arena::new();
+        let u = a.take_usize(5);
+        a.give_usize(u);
+        let u2 = a.take_usize(3);
+        assert_eq!(a.allocations(), 1);
+        assert_eq!(u2.len(), 3);
+    }
+}

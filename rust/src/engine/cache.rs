@@ -1,0 +1,214 @@
+//! The LRU plan cache and the user-facing [`Session`].
+//!
+//! A [`Session`] is the compile-once/execute-many front door: ask it for a
+//! plan and repeated requests for the same (op, shape class) return the same
+//! warm [`Plan`] — workspaces already sized, layout tables already built.
+//! The serving router holds one cache per process so repeated traffic
+//! classes skip compilation entirely; its hit/miss/eviction counters are
+//! surfaced in the server metrics snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::path::SigError;
+use crate::runtime::RuntimeHandle;
+
+use super::{OpSpec, Plan, PlanKey, ShapeClass};
+
+/// Cache observability counters (monotonic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// A bounded LRU cache of compiled plans keyed by (op, shape class,
+/// retention). Thread-safe; lookups move the entry to the back, inserts
+/// evict from the front.
+pub struct PlanCache {
+    capacity: usize,
+    entries: Mutex<Vec<(PlanKey, Arc<Plan>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity: capacity.max(1),
+            entries: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Warm lookup or compile-and-insert. Non-cacheable specs (KRR, which
+    /// carries an `f64` hyperparameter) compile fresh and count as misses.
+    pub fn get_or_compile(
+        &self,
+        spec: OpSpec,
+        shape: ShapeClass,
+        retain: bool,
+        runtime: Option<Arc<RuntimeHandle>>,
+    ) -> Result<Arc<Plan>, SigError> {
+        let Some(key) = spec.cache_key(shape, retain) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Plan::compile_custom(spec, shape, retain, runtime).map(Arc::new);
+        };
+        {
+            let mut entries = self.entries.lock().unwrap();
+            if let Some(pos) = entries.iter().position(|(k, _)| *k == key) {
+                let entry = entries.remove(pos);
+                let plan = entry.1.clone();
+                entries.push(entry);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(plan);
+            }
+        }
+        // Compile outside the lock; a racing duplicate insert is harmless
+        // (last one wins, the loser is just dropped on eviction).
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(Plan::compile_custom(spec, shape, retain, runtime)?);
+        let mut entries = self.entries.lock().unwrap();
+        entries.push((key, plan.clone()));
+        while entries.len() > self.capacity {
+            entries.remove(0);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(plan)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A compile-once/execute-many session: a plan cache plus an optional PJRT
+/// runtime for backend dispatch. Use it when the same shape classes recur
+/// (training loops, serving); use the `try_*` convenience wrappers for
+/// one-off calls.
+pub struct Session {
+    cache: PlanCache,
+    runtime: Option<Arc<RuntimeHandle>>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session::new()
+    }
+}
+
+impl Session {
+    /// Native-backend session with a default-sized plan cache.
+    pub fn new() -> Session {
+        Session::with_capacity(32)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Session {
+        Session {
+            cache: PlanCache::new(capacity),
+            runtime: None,
+        }
+    }
+
+    /// Session that dispatches to PJRT artifacts when shapes match.
+    pub fn with_runtime(runtime: Arc<RuntimeHandle>) -> Session {
+        Session {
+            cache: PlanCache::new(32),
+            runtime: Some(runtime),
+        }
+    }
+
+    /// A record-keeping plan (supports [`vjp`](super::ExecutionRecord::vjp)).
+    pub fn plan(&self, spec: OpSpec, shape: ShapeClass) -> Result<Arc<Plan>, SigError> {
+        self.cache
+            .get_or_compile(spec, shape, true, self.runtime.clone())
+    }
+
+    /// A forward-only plan — the cheapest steady state for serving.
+    pub fn forward_plan(&self, spec: OpSpec, shape: ShapeClass) -> Result<Arc<Plan>, SigError> {
+        self.cache
+            .get_or_compile(spec, shape, false, self.runtime.clone())
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::path::SigOptions;
+
+    #[test]
+    fn repeat_lookups_hit() {
+        let s = Session::new();
+        let spec = OpSpec::Sig(SigOptions::new(3));
+        let shape = ShapeClass::uniform(2, 16);
+        let p1 = s.plan(spec, shape).unwrap();
+        let p2 = s.plan(spec, shape).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup must be the warm plan");
+        let st = s.cache_stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        // A different shape class is a different plan.
+        let p3 = s.plan(spec, ShapeClass::uniform(2, 17)).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p3));
+    }
+
+    #[test]
+    fn forward_and_retained_plans_are_distinct() {
+        let s = Session::new();
+        let spec = OpSpec::Sig(SigOptions::new(2));
+        let shape = ShapeClass::uniform(2, 8);
+        let a = s.plan(spec, shape).unwrap();
+        let b = s.forward_plan(spec, shape).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let c = PlanCache::new(2);
+        let spec = OpSpec::Sig(SigOptions::new(2));
+        for len in [4usize, 5, 6] {
+            c.get_or_compile(spec, ShapeClass::uniform(2, len), false, None)
+                .unwrap();
+        }
+        assert_eq!(c.len(), 2);
+        let st = c.stats();
+        assert_eq!(st.evictions, 1);
+        // len=4 was evicted: looking it up again is a miss.
+        c.get_or_compile(spec, ShapeClass::uniform(2, 4), false, None)
+            .unwrap();
+        assert_eq!(c.stats().misses, 4);
+        // len=6 is still warm.
+        c.get_or_compile(spec, ShapeClass::uniform(2, 6), false, None)
+            .unwrap();
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn compile_errors_are_not_cached() {
+        let c = PlanCache::new(4);
+        let bad = OpSpec::Sig(SigOptions::new(0));
+        assert!(c
+            .get_or_compile(bad, ShapeClass::uniform(2, 8), false, None)
+            .is_err());
+        assert_eq!(c.len(), 0);
+    }
+}

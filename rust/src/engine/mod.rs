@@ -1,0 +1,1550 @@
+//! Compile-once / execute-many sessions (the engine layer).
+//!
+//! The convenience entry points in [`sig`](crate::sig) and
+//! [`kernel`](crate::kernel) re-derive tensor-algebra layout, re-validate
+//! options and freshly allocate every workspace on every call. For serving
+//! and training loops that execute the *same* shape class thousands of
+//! times, that per-call overhead is pure waste. This module splits the work:
+//!
+//! * [`Plan::compile`] does all shape-dependent work **once**: validation,
+//!   layout tables ([`LevelLayout`] / signature lengths, Horner scratch
+//!   sizing, PDE grid geometry, transform output shapes), backend selection
+//!   (threaded native vs a PJRT artifact when a runtime is attached), and a
+//!   reusable workspace [`Arena`].
+//! * `plan.execute(&batch)` then performs **zero shape-dependent heap
+//!   allocation** in the steady state — every buffer is checked out of the
+//!   arena and returned when the produced [`ExecutionRecord`] drops (the
+//!   arena's allocation counter stays flat; asserted in unit tests).
+//! * The [`ExecutionRecord`] retains the forward intermediates the paper's
+//!   differentiation scheme needs (forward signatures; per-pair Δ matrices
+//!   and PDE grids), so [`ExecutionRecord::vjp`] computes exact signature
+//!   and kernel gradients without re-running the forward sweep — one API
+//!   unifying the previously disjoint `sig::backward` / `kernel::backward`
+//!   entry points, bit-for-bit identical to them (Gram/MMD² gradients route
+//!   through the same weighted-Gram backward as `try_gram_vjp`; see
+//!   [`ExecutionRecord::vjp`] for exactly what is reused).
+//! * [`Session`] adds an LRU [`PlanCache`] keyed by (op, shape class), used
+//!   by the serving router so repeated traffic classes hit a warm plan.
+//!
+//! ```no_run
+//! use pysiglib::engine::{OpSpec, Plan, ShapeClass};
+//! use pysiglib::{PathBatch, SigOptions};
+//!
+//! let plan = Plan::compile(OpSpec::Sig(SigOptions::new(4)), ShapeClass::uniform(3, 64))?;
+//! # let data = vec![0.0; 8 * 64 * 3];
+//! let batch = PathBatch::uniform(&data, 8, 64, 3)?;
+//! for _ in 0..1000 {
+//!     let record = plan.execute(&batch)?; // no shape-dependent allocation
+//!     let _sigs = record.values();
+//! }
+//! # Ok::<(), pysiglib::SigError>(())
+//! ```
+
+pub mod arena;
+pub mod cache;
+
+pub use arena::Arena;
+pub use cache::{CacheStats, PlanCache, Session};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::kernel::krr::KernelRidge;
+use crate::kernel::{KernelOptions, SolverKind};
+use crate::path::{PathBatch, SigError, SigOptions};
+use crate::runtime::RuntimeHandle;
+use crate::sig::SigMethod;
+use crate::tensor::LevelLayout;
+use crate::transforms::Transform;
+use crate::util::pool::num_threads;
+
+/// Hard cap on the number of f64s a batched output may hold (2^30 = 8 GiB) —
+/// a wire-reachable allocation guard, not a practical limitation.
+pub(crate) const MAX_BATCH_OUT: usize = 1 << 30;
+
+/// What a plan computes. Carries the same option types as the convenience
+/// layer, so `OpSpec::Sig(SigOptions::new(4).transform(..))` reads naturally.
+#[derive(Clone, Copy, Debug)]
+pub enum OpSpec {
+    /// Truncated signatures, one row per path.
+    Sig(SigOptions),
+    /// Expanded log-signatures, one row per path (always Horner forward).
+    LogSig(SigOptions),
+    /// Paired signature kernels k(x_i, y_i).
+    SigKernel(KernelOptions),
+    /// Full Gram matrix k(x_i, y_j).
+    Gram(KernelOptions),
+    /// Biased MMD² estimator between two path distributions.
+    Mmd2(KernelOptions),
+    /// Kernel ridge regression fit (alpha coefficients as output values).
+    Krr {
+        opts: KernelOptions,
+        lambda: f64,
+        normalize: bool,
+    },
+}
+
+impl OpSpec {
+    /// Short name for diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpSpec::Sig(_) => "sig",
+            OpSpec::LogSig(_) => "logsig",
+            OpSpec::SigKernel(_) => "sig_kernel",
+            OpSpec::Gram(_) => "gram",
+            OpSpec::Mmd2(_) => "mmd2",
+            OpSpec::Krr { .. } => "krr",
+        }
+    }
+
+    /// Cache key for cacheable specs (`Krr` carries an `f64` and is compiled
+    /// fresh each time). The key embeds the option structs whole, so any
+    /// field added to `SigOptions`/`KernelOptions`/`ExecOptions` later
+    /// participates automatically — no hand-maintained digest to drift.
+    pub(crate) fn cache_key(&self, shape: ShapeClass, retain: bool) -> Option<PlanKey> {
+        let (kind, sig, kernel) = match self {
+            OpSpec::Sig(o) => (0u8, Some(*o), None),
+            OpSpec::LogSig(o) => (1, Some(*o), None),
+            OpSpec::SigKernel(k) => (2, None, Some(*k)),
+            OpSpec::Gram(k) => (3, None, Some(*k)),
+            OpSpec::Mmd2(k) => (4, None, Some(*k)),
+            OpSpec::Krr { .. } => return None,
+        };
+        Some(PlanKey {
+            kind,
+            sig,
+            kernel,
+            shape,
+            retain,
+        })
+    }
+}
+
+/// Hashable key of an [`OpSpec`] + [`ShapeClass`] + retention flag — the
+/// LRU cache key for shape groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    kind: u8,
+    sig: Option<SigOptions>,
+    kernel: Option<KernelOptions>,
+    shape: ShapeClass,
+    retain: bool,
+}
+
+/// The length profile of a shape class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LenProfile {
+    /// Every path has exactly this many points.
+    Uniform(usize),
+    /// Ragged batches whose paths have at most this many points.
+    Ragged { max_len: usize },
+}
+
+/// The shape class a plan is compiled for: path dimension plus length
+/// profile. Batch size is *not* part of the class — the same plan serves any
+/// batch count (workspaces grow once to the largest batch seen, then stay).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeClass {
+    pub dim: usize,
+    pub lens: LenProfile,
+}
+
+impl ShapeClass {
+    /// Uniform-length class: every path has exactly `len` points.
+    pub fn uniform(dim: usize, len: usize) -> ShapeClass {
+        ShapeClass {
+            dim,
+            lens: LenProfile::Uniform(len),
+        }
+    }
+
+    /// Ragged class: paths of up to `max_len` points.
+    pub fn ragged(dim: usize, max_len: usize) -> ShapeClass {
+        ShapeClass {
+            dim,
+            lens: LenProfile::Ragged { max_len },
+        }
+    }
+
+    /// The tightest class containing `b`.
+    pub fn for_batch(b: &PathBatch<'_>) -> ShapeClass {
+        match b.uniform_len() {
+            Some(l) => ShapeClass::uniform(b.dim(), l),
+            None => {
+                let max = (0..b.batch()).map(|i| b.len_of(i)).max().unwrap_or(0);
+                ShapeClass::ragged(b.dim(), max)
+            }
+        }
+    }
+
+    /// The tightest class containing both sides of a pair op.
+    pub fn for_pair(x: &PathBatch<'_>, y: &PathBatch<'_>) -> ShapeClass {
+        match (x.uniform_len(), y.uniform_len()) {
+            (Some(a), Some(b)) if a == b => ShapeClass::uniform(x.dim(), a),
+            _ => {
+                let mx = (0..x.batch()).map(|i| x.len_of(i)).max().unwrap_or(0);
+                let my = (0..y.batch()).map(|j| y.len_of(j)).max().unwrap_or(0);
+                ShapeClass::ragged(x.dim(), mx.max(my))
+            }
+        }
+    }
+
+    /// Widen a ragged class's max length to the next power of two (uniform
+    /// classes stay exact) — the cache-key form, so nearby ragged traffic
+    /// shares a warm plan. A plan's class is an upper bound; refined-grid
+    /// limits are still checked against actual lengths at execute.
+    pub fn bucketed(self) -> ShapeClass {
+        match self.lens {
+            LenProfile::Uniform(_) => self,
+            LenProfile::Ragged { max_len } => {
+                ShapeClass::ragged(self.dim, max_len.next_power_of_two())
+            }
+        }
+    }
+}
+
+/// Execution backend a plan selected at compile time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Threaded native Rust kernels.
+    Native,
+    /// A PJRT artifact may serve matching batches (native fallback when the
+    /// exact batch size has no compiled artifact).
+    Pjrt,
+}
+
+/// A compiled computation: validated spec + shape class, precomputed layout
+/// tables, selected backend, and a reusable workspace arena. `execute` takes
+/// `&self` — a plan is shared freely across threads (the router's plan cache
+/// hands out `Arc<Plan>`).
+pub struct Plan {
+    spec: OpSpec,
+    shape: ShapeClass,
+    retain: bool,
+    backend: Backend,
+    runtime: Option<Arc<RuntimeHandle>>,
+    /// Tensor-algebra layout of the transformed dimension (signature ops).
+    layout: Option<LevelLayout>,
+    /// Signature row length (signature ops).
+    slen: usize,
+    arena: Arena,
+}
+
+fn validate_kernel_spec(k: &KernelOptions, shape: &ShapeClass) -> Result<(), SigError> {
+    match shape.lens {
+        LenProfile::Uniform(l) if l >= 2 => crate::kernel::check_grid_size(l, l, k),
+        // Short or ragged classes: the refined-grid bound is re-checked
+        // against the actual lengths at execute; the dyadic orders are
+        // checked here so compilation still catches hostile parameters.
+        _ => {
+            if k.dyadic_x > 32 || k.dyadic_y > 32 {
+                return Err(SigError::TooLarge("dyadic refinement order"));
+            }
+            Ok(())
+        }
+    }
+}
+
+impl Plan {
+    /// Compile a record-keeping plan: forward executions retain the
+    /// intermediates [`ExecutionRecord::vjp`] needs.
+    pub fn compile(spec: OpSpec, shape: ShapeClass) -> Result<Plan, SigError> {
+        Plan::compile_custom(spec, shape, true, None)
+    }
+
+    /// Compile a forward-only plan: no input copies, no retained grids —
+    /// the cheapest steady state for serving. `vjp` on its records errors.
+    pub fn compile_forward(spec: OpSpec, shape: ShapeClass) -> Result<Plan, SigError> {
+        Plan::compile_custom(spec, shape, false, None)
+    }
+
+    /// Full-control compilation: retention flag plus an optional PJRT
+    /// runtime for artifact dispatch.
+    pub fn compile_custom(
+        spec: OpSpec,
+        shape: ShapeClass,
+        retain: bool,
+        runtime: Option<Arc<RuntimeHandle>>,
+    ) -> Result<Plan, SigError> {
+        if shape.dim == 0 {
+            return Err(SigError::ZeroDim);
+        }
+        if let LenProfile::Uniform(l) = shape.lens {
+            if l == 0 {
+                return Err(SigError::EmptyPath);
+            }
+        }
+        let mut layout = None;
+        let mut slen = 0;
+        match &spec {
+            OpSpec::Sig(o) | OpSpec::LogSig(o) => {
+                o.validate()?;
+                let od = o.exec.transform.out_dim(shape.dim);
+                slen = crate::sig::try_sig_length(od, o.depth)?;
+                layout = Some(LevelLayout::new(od, o.depth));
+            }
+            OpSpec::SigKernel(k) | OpSpec::Gram(k) | OpSpec::Mmd2(k) => {
+                validate_kernel_spec(k, &shape)?;
+            }
+            OpSpec::Krr { opts, lambda, .. } => {
+                validate_kernel_spec(opts, &shape)?;
+                if !(*lambda > 0.0) {
+                    return Err(SigError::NonFinite("ridge λ must be positive"));
+                }
+            }
+        }
+        let backend = match (&runtime, &spec, shape.lens) {
+            (Some(_), OpSpec::Sig(o), LenProfile::Uniform(_))
+                if o.exec.transform == Transform::None =>
+            {
+                Backend::Pjrt
+            }
+            (Some(_), OpSpec::SigKernel(k), LenProfile::Uniform(_))
+                if k.dyadic_x == 0 && k.dyadic_y == 0 && k.exec.transform == Transform::None =>
+            {
+                Backend::Pjrt
+            }
+            _ => Backend::Native,
+        };
+        Ok(Plan {
+            spec,
+            shape,
+            retain,
+            backend,
+            runtime,
+            layout,
+            slen,
+            arena: Arena::new(),
+        })
+    }
+
+    pub fn spec(&self) -> &OpSpec {
+        &self.spec
+    }
+
+    pub fn shape(&self) -> ShapeClass {
+        self.shape
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Output row length of a signature / log-signature plan (0 for other
+    /// ops) — precomputed at compilation, so callers chunking batched
+    /// output need not re-derive it.
+    pub fn row_len(&self) -> usize {
+        self.slen
+    }
+
+    /// Fresh heap allocations the workspace arena has performed — flat
+    /// across repeated executions on same-shape inputs.
+    pub fn allocations(&self) -> u64 {
+        self.arena.allocations()
+    }
+
+    /// Does the input batch belong to this plan's shape class?
+    fn check_batch(&self, b: &PathBatch<'_>) -> Result<(), SigError> {
+        if b.dim() != self.shape.dim {
+            return Err(SigError::DimMismatch {
+                left: b.dim(),
+                right: self.shape.dim,
+            });
+        }
+        match self.shape.lens {
+            LenProfile::Uniform(l) => {
+                if !b.is_empty() && b.uniform_len() != Some(l) {
+                    return Err(SigError::Invalid(
+                        "batch does not match the plan's uniform length class",
+                    ));
+                }
+            }
+            LenProfile::Ragged { max_len } => {
+                for i in 0..b.batch() {
+                    if b.len_of(i) > max_len {
+                        return Err(SigError::Invalid(
+                            "path exceeds the plan's maximum length class",
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a signature / log-signature plan over one batch.
+    pub fn execute(&self, x: &PathBatch<'_>) -> Result<ExecutionRecord, SigError> {
+        let (opts, log) = match &self.spec {
+            OpSpec::Sig(o) => (*o, false),
+            OpSpec::LogSig(o) => (*o, true),
+            _ => {
+                return Err(SigError::Invalid(
+                    "this plan takes a pair of batches; use execute_pair / execute_fit",
+                ))
+            }
+        };
+        self.check_batch(x)?;
+        let b = x.batch();
+        let slen = self.slen;
+        let total = b
+            .checked_mul(slen)
+            .filter(|&t| t <= MAX_BATCH_OUT)
+            .ok_or(SigError::TooLarge(if log {
+                "batched log-signature output"
+            } else {
+                "batched signature output"
+            }))?;
+        // Artifacts return no intermediates, so the PJRT route only serves
+        // forward-only plans — a retained plan must keep its vjp contract.
+        if self.backend == Backend::Pjrt && !log && !self.retain {
+            if let Some(values) = self.try_pjrt_sig(x)? {
+                return Ok(self.record(values, Some(x), None, RecordState::None, false));
+            }
+        }
+        let mut out = self.arena.take(total);
+        let layout = self.layout.as_ref().expect("sig plan has a layout");
+        let method = if log { SigMethod::Horner } else { opts.method };
+        let scratch_len = crate::sig::sig_scratch_len(layout, method);
+        let (od, tlen) = (layout.dim, layout.total());
+        let transform = opts.exec.transform;
+        {
+            let base = out.as_mut_ptr() as usize;
+            let arena = &self.arena;
+            run_items(
+                opts.exec.parallel,
+                b,
+                || SigScratch::checkout(arena, od, scratch_len, if log { tlen } else { 0 }),
+                |i, sc: &mut SigScratch| {
+                    // SAFETY: row i is out[i*slen..(i+1)*slen], written by
+                    // exactly one item; `out` outlives the scope.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut((base as *mut f64).add(i * slen), slen)
+                    };
+                    let p = x.path(i);
+                    if log {
+                        crate::sig::signature_into(
+                            p.data(),
+                            p.len(),
+                            p.dim(),
+                            method,
+                            transform,
+                            layout,
+                            &mut sc.sig,
+                            &mut sc.z,
+                            &mut sc.s,
+                        );
+                        crate::tensor::tensor_log_into(
+                            layout,
+                            &sc.sig,
+                            row,
+                            &mut sc.lx,
+                            &mut sc.lacc,
+                            &mut sc.lnext,
+                        );
+                    } else {
+                        crate::sig::signature_into(
+                            p.data(),
+                            p.len(),
+                            p.dim(),
+                            method,
+                            transform,
+                            layout,
+                            row,
+                            &mut sc.z,
+                            &mut sc.s,
+                        );
+                    }
+                },
+            );
+        }
+        Ok(self.record(out, Some(x), None, RecordState::None, self.retain))
+    }
+
+    /// Execute a paired-batch kernel / Gram / MMD² plan.
+    pub fn execute_pair(
+        &self,
+        x: &PathBatch<'_>,
+        y: &PathBatch<'_>,
+    ) -> Result<ExecutionRecord, SigError> {
+        let k = match &self.spec {
+            OpSpec::SigKernel(k) | OpSpec::Gram(k) | OpSpec::Mmd2(k) => *k,
+            _ => {
+                return Err(SigError::Invalid(
+                    "this plan takes a single batch; use execute / execute_fit",
+                ))
+            }
+        };
+        if x.dim() != y.dim() {
+            return Err(SigError::DimMismatch {
+                left: x.dim(),
+                right: y.dim(),
+            });
+        }
+        self.check_batch(x)?;
+        self.check_batch(y)?;
+        // Grid sizes are monotone in path length: the longest (x, y) pair
+        // bounds every pair, so per-pair solves below cannot fail.
+        let mx = (0..x.batch()).map(|i| x.len_of(i)).max().unwrap_or(0);
+        let my = (0..y.batch()).map(|j| y.len_of(j)).max().unwrap_or(0);
+        if mx >= 2 && my >= 2 {
+            crate::kernel::check_grid_size(mx, my, &k)?;
+        }
+        match self.spec {
+            OpSpec::SigKernel(_) => self.exec_paired_kernel(x, y, &k),
+            OpSpec::Gram(_) => self.exec_gram(x, y, &k),
+            OpSpec::Mmd2(_) => self.exec_mmd2(x, y, &k),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Execute a KRR plan: fit dual coefficients on `x` with targets `y`.
+    pub fn execute_fit(&self, x: &PathBatch<'_>, y: &[f64]) -> Result<ExecutionRecord, SigError> {
+        let (opts, lambda, normalize) = match &self.spec {
+            OpSpec::Krr {
+                opts,
+                lambda,
+                normalize,
+            } => (*opts, *lambda, *normalize),
+            _ => return Err(SigError::Invalid("only KRR plans take targets")),
+        };
+        self.check_batch(x)?;
+        let model = KernelRidge::fit_impl(x, y, lambda, normalize, &opts)?;
+        let mut values = self.arena.take(model.alpha().len());
+        values.copy_from_slice(model.alpha());
+        Ok(self.record(values, Some(x), None, RecordState::Krr(Box::new(model)), self.retain))
+    }
+
+    fn exec_paired_kernel(
+        &self,
+        x: &PathBatch<'_>,
+        y: &PathBatch<'_>,
+        k: &KernelOptions,
+    ) -> Result<ExecutionRecord, SigError> {
+        if x.batch() != y.batch() {
+            return Err(SigError::BatchMismatch {
+                left: x.batch(),
+                right: y.batch(),
+            });
+        }
+        let b = x.batch();
+        if self.backend == Backend::Pjrt && !self.retain {
+            if let Some(values) = self.try_pjrt_kernel(x, y)? {
+                return Ok(self.record(values, Some(x), Some(y), RecordState::None, false));
+            }
+        }
+        let tr = k.exec.transform;
+        let dim = x.dim();
+        let (lam1, lam2) = (k.dyadic_x, k.dyadic_y);
+        let retain = self.retain;
+        // Per-pair geometry: transformed Δ dims, flat offsets for the shared
+        // Δ (and, when retaining, grid) buffers.
+        let mut dims = self.arena.take_usize(2 * b);
+        let mut delta_off = self.arena.take_usize(b + 1);
+        let mut grid_off = self.arena.take_usize(b + 1);
+        let (mut dtot, mut gtot) = (0usize, 0usize);
+        let (mut max_lx, mut max_ly, mut max_cols) = (0usize, 0usize, 0usize);
+        for i in 0..b {
+            let (lx, ly) = (x.len_of(i), y.len_of(i));
+            delta_off[i] = dtot;
+            grid_off[i] = gtot;
+            if lx < 2 || ly < 2 {
+                continue; // dims stay 0: degenerate pair, k = 1
+            }
+            let m = tr.out_len(lx) - 1;
+            let n = tr.out_len(ly) - 1;
+            dims[2 * i] = m;
+            dims[2 * i + 1] = n;
+            dtot = dtot
+                .checked_add(m * n)
+                .filter(|&t| t <= MAX_BATCH_OUT)
+                .ok_or(SigError::TooLarge("kernel Δ workspace"))?;
+            if retain {
+                // Same 8 GiB guard as every other wire-reachable allocation:
+                // a gradient frame retains ALL pairs' refined grids at once
+                // (the price of Algorithm 4 without forward re-solves), so
+                // the total — not just each pair — must stay bounded.
+                gtot = gtot
+                    .checked_add(((m << lam1) + 1) * ((n << lam2) + 1))
+                    .filter(|&t| t <= MAX_BATCH_OUT)
+                    .ok_or(SigError::TooLarge("retained PDE grids"))?;
+            }
+            max_lx = max_lx.max(lx);
+            max_ly = max_ly.max(ly);
+            max_cols = max_cols.max(n << lam2);
+        }
+        delta_off[b] = dtot;
+        grid_off[b] = gtot;
+        let mut out = self.arena.take(b);
+        let mut deltas = self.arena.take(dtot);
+        let mut grids = self.arena.take(gtot);
+        {
+            let out_base = out.as_mut_ptr() as usize;
+            let delta_base = deltas.as_mut_ptr() as usize;
+            let grid_base = grids.as_mut_ptr() as usize;
+            let arena = &self.arena;
+            let needs_base = matches!(tr, Transform::LeadLag | Transform::LeadLagTimeAug);
+            let (dims, delta_off, grid_off) = (&dims, &delta_off, &grid_off);
+            run_items(
+                k.exec.parallel,
+                b,
+                || {
+                    KernScratch::checkout(
+                        arena,
+                        max_lx,
+                        max_ly,
+                        dim,
+                        needs_base,
+                        if retain { 0 } else { max_cols + 1 },
+                    )
+                },
+                |i, sc: &mut KernScratch| {
+                    // SAFETY: slot i of `out` and the [delta_off[i],
+                    // delta_off[i+1]) / [grid_off[i], grid_off[i+1]) regions
+                    // are written by exactly one item (offsets are
+                    // non-decreasing); the buffers outlive the scope.
+                    let slot = unsafe {
+                        std::slice::from_raw_parts_mut((out_base as *mut f64).add(i), 1)
+                    };
+                    let (lx, ly) = (x.len_of(i), y.len_of(i));
+                    if lx < 2 || ly < 2 {
+                        slot[0] = 1.0;
+                        return;
+                    }
+                    let (m, n) = (dims[2 * i], dims[2 * i + 1]);
+                    let delta = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            (delta_base as *mut f64).add(delta_off[i]),
+                            m * n,
+                        )
+                    };
+                    let written = crate::kernel::delta::delta_matrix_into(
+                        x.values_of(i),
+                        y.values_of(i),
+                        lx,
+                        ly,
+                        dim,
+                        tr,
+                        &mut sc.dx,
+                        &mut sc.dy,
+                        &mut sc.base,
+                        delta,
+                    );
+                    debug_assert_eq!(written, (m, n));
+                    if retain {
+                        let glen = grid_off[i + 1] - grid_off[i];
+                        let grid = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (grid_base as *mut f64).add(grid_off[i]),
+                                glen,
+                            )
+                        };
+                        crate::kernel::solver::solve_pde_grid_into(delta, m, n, lam1, lam2, grid);
+                        slot[0] = match k.solver {
+                            SolverKind::Row => grid[glen - 1],
+                            SolverKind::Blocked => {
+                                crate::kernel::solve_pde_blocked(delta, m, n, lam1, lam2)
+                            }
+                        };
+                    } else {
+                        slot[0] = match k.solver {
+                            SolverKind::Row => crate::kernel::solver::solve_pde_with(
+                                delta,
+                                m,
+                                n,
+                                lam1,
+                                lam2,
+                                &mut sc.prev,
+                                &mut sc.cur,
+                            ),
+                            SolverKind::Blocked => {
+                                crate::kernel::solve_pde_blocked(delta, m, n, lam1, lam2)
+                            }
+                        };
+                    }
+                },
+            );
+        }
+        let state = if retain {
+            RecordState::KernelPairs {
+                deltas,
+                delta_off,
+                grids,
+                grid_off,
+                dims,
+            }
+        } else {
+            self.arena.give(deltas);
+            self.arena.give(grids);
+            self.arena.give_usize(dims);
+            self.arena.give_usize(delta_off);
+            self.arena.give_usize(grid_off);
+            RecordState::None
+        };
+        Ok(self.record(out, Some(x), Some(y), state, retain))
+    }
+
+    /// Gram values into a preallocated `[bx, by]` buffer (shared by the Gram
+    /// and MMD² ops). Inputs must already be validated.
+    fn gram_values_into(
+        &self,
+        x: &PathBatch<'_>,
+        y: &PathBatch<'_>,
+        k: &KernelOptions,
+        out: &mut [f64],
+    ) {
+        let (bx, by) = (x.batch(), y.batch());
+        debug_assert_eq!(out.len(), bx * by);
+        if bx * by == 0 {
+            return;
+        }
+        let tr = k.exec.transform;
+        let dim = x.dim();
+        let (lam1, lam2) = (k.dyadic_x, k.dyadic_y);
+        let mx = (0..bx).map(|i| x.len_of(i)).max().unwrap_or(0);
+        let my = (0..by).map(|j| y.len_of(j)).max().unwrap_or(0);
+        let max_m = if mx < 2 { 0 } else { tr.out_len(mx) - 1 };
+        let max_n = if my < 2 { 0 } else { tr.out_len(my) - 1 };
+        let needs_base = matches!(tr, Transform::LeadLag | Transform::LeadLagTimeAug);
+        let out_base = out.as_mut_ptr() as usize;
+        let arena = &self.arena;
+        run_items(
+            k.exec.parallel,
+            bx * by,
+            || {
+                let mut sc = KernScratch::checkout(
+                    arena,
+                    mx,
+                    my,
+                    dim,
+                    needs_base,
+                    (max_n << lam2) + 1,
+                );
+                sc.delta = arena.take(max_m * max_n);
+                sc
+            },
+            |p, sc: &mut KernScratch| {
+                let (i, j) = (p / by, p % by);
+                // SAFETY: entry p is written by exactly one item.
+                let slot =
+                    unsafe { std::slice::from_raw_parts_mut((out_base as *mut f64).add(p), 1) };
+                let (lx, ly) = (x.len_of(i), y.len_of(j));
+                if lx < 2 || ly < 2 {
+                    slot[0] = 1.0;
+                    return;
+                }
+                let (m, n) = crate::kernel::delta::delta_matrix_into(
+                    x.values_of(i),
+                    y.values_of(j),
+                    lx,
+                    ly,
+                    dim,
+                    tr,
+                    &mut sc.dx,
+                    &mut sc.dy,
+                    &mut sc.base,
+                    &mut sc.delta,
+                );
+                slot[0] = match k.solver {
+                    SolverKind::Row => crate::kernel::solver::solve_pde_with(
+                        &sc.delta[..m * n],
+                        m,
+                        n,
+                        lam1,
+                        lam2,
+                        &mut sc.prev,
+                        &mut sc.cur,
+                    ),
+                    SolverKind::Blocked => {
+                        crate::kernel::solve_pde_blocked(&sc.delta[..m * n], m, n, lam1, lam2)
+                    }
+                };
+            },
+        );
+    }
+
+    fn exec_gram(
+        &self,
+        x: &PathBatch<'_>,
+        y: &PathBatch<'_>,
+        k: &KernelOptions,
+    ) -> Result<ExecutionRecord, SigError> {
+        let total = x
+            .batch()
+            .checked_mul(y.batch())
+            .filter(|&t| t <= MAX_BATCH_OUT)
+            .ok_or(SigError::TooLarge("gram output"))?;
+        let mut out = self.arena.take(total);
+        self.gram_values_into(x, y, k, &mut out);
+        Ok(self.record(out, Some(x), Some(y), RecordState::None, self.retain))
+    }
+
+    fn exec_mmd2(
+        &self,
+        x: &PathBatch<'_>,
+        y: &PathBatch<'_>,
+        k: &KernelOptions,
+    ) -> Result<ExecutionRecord, SigError> {
+        if x.is_empty() || y.is_empty() {
+            return Err(SigError::InsufficientBatch {
+                need: 1,
+                got: x.batch().min(y.batch()),
+            });
+        }
+        let (bx, by) = (x.batch(), y.batch());
+        // Same allocation guard as the Gram op — three Gram matrices back
+        // one MMD² value.
+        let gram_len = |a: usize, b: usize| -> Result<usize, SigError> {
+            a.checked_mul(b)
+                .filter(|&t| t <= MAX_BATCH_OUT)
+                .ok_or(SigError::TooLarge("mmd2 gram matrices"))
+        };
+        let mut kxx = self.arena.take(gram_len(bx, bx)?);
+        let mut kxy = self.arena.take(gram_len(bx, by)?);
+        let mut kyy = self.arena.take(gram_len(by, by)?);
+        self.gram_values_into(x, x, k, &mut kxx);
+        self.gram_values_into(x, y, k, &mut kxy);
+        self.gram_values_into(y, y, k, &mut kyy);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let value = mean(&kxx) - 2.0 * mean(&kxy) + mean(&kyy);
+        let mut values = self.arena.take(1);
+        values[0] = value;
+        let state = if self.retain {
+            RecordState::Mmd2 { kxx, kxy, kyy }
+        } else {
+            self.arena.give(kxx);
+            self.arena.give(kxy);
+            self.arena.give(kyy);
+            RecordState::None
+        };
+        Ok(self.record(values, Some(x), Some(y), state, self.retain))
+    }
+
+    /// Build the record, copying inputs (through the arena) when retaining.
+    fn record(
+        &self,
+        values: Vec<f64>,
+        x: Option<&PathBatch<'_>>,
+        y: Option<&PathBatch<'_>>,
+        state: RecordState,
+        retain: bool,
+    ) -> ExecutionRecord {
+        let copy = |b: Option<&PathBatch<'_>>| -> (Vec<f64>, Vec<usize>) {
+            match b {
+                Some(b) if retain => {
+                    let mut data = self.arena.take(b.data().len());
+                    data.copy_from_slice(b.data());
+                    let mut lens = self.arena.take_usize(b.batch());
+                    for i in 0..b.batch() {
+                        lens[i] = b.len_of(i);
+                    }
+                    (data, lens)
+                }
+                _ => (Vec::new(), Vec::new()),
+            }
+        };
+        let (x_data, x_lengths) = copy(x);
+        let (y_data, y_lengths) = copy(y);
+        ExecutionRecord {
+            spec: self.spec,
+            dim: self.shape.dim,
+            slen: self.slen,
+            retain,
+            arena: self.arena.clone(),
+            values,
+            x_data,
+            x_lengths,
+            y_data,
+            y_lengths,
+            state,
+        }
+    }
+
+    /// Try the PJRT artifact route for a signature batch. `Ok(None)` means
+    /// "no artifact for this exact batch — use the native path"; runtime
+    /// failures are surfaced, not swallowed.
+    fn try_pjrt_sig(&self, x: &PathBatch<'_>) -> Result<Option<Vec<f64>>, SigError> {
+        let Some(rt) = self.runtime.as_ref() else {
+            return Ok(None);
+        };
+        let (LenProfile::Uniform(len), OpSpec::Sig(o)) = (self.shape.lens, &self.spec) else {
+            return Ok(None);
+        };
+        let name = format!("signature_b{}_l{len}_d{}_n{}", x.batch(), self.shape.dim, o.depth);
+        if rt.info(&name).is_none() {
+            return Ok(None);
+        }
+        let xs: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
+        self.run_pjrt(rt, &name, vec![xs], x.batch() * self.slen)
+            .map(Some)
+    }
+
+    fn try_pjrt_kernel(
+        &self,
+        x: &PathBatch<'_>,
+        y: &PathBatch<'_>,
+    ) -> Result<Option<Vec<f64>>, SigError> {
+        let Some(rt) = self.runtime.as_ref() else {
+            return Ok(None);
+        };
+        let LenProfile::Uniform(len) = self.shape.lens else {
+            return Ok(None);
+        };
+        let name = format!("sigkernel_b{}_l{len}_d{}", x.batch(), self.shape.dim);
+        if rt.info(&name).is_none() {
+            return Ok(None);
+        }
+        let xs: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
+        let ys: Vec<f32> = y.data().iter().map(|&v| v as f32).collect();
+        self.run_pjrt(rt, &name, vec![xs, ys], x.batch()).map(Some)
+    }
+
+    /// `expected_len` is the plan's exact output length for this batch —
+    /// a mismatching artifact must surface as an error, not as misaligned
+    /// rows downstream.
+    fn run_pjrt(
+        &self,
+        rt: &RuntimeHandle,
+        name: &str,
+        inputs: Vec<Vec<f32>>,
+        expected_len: usize,
+    ) -> Result<Vec<f64>, SigError> {
+        let outputs = rt
+            .execute_f32(name, inputs)
+            .map_err(|e| SigError::Backend(format!("pjrt artifact '{name}': {e}")))?;
+        let flat = outputs.first().ok_or_else(|| {
+            SigError::Backend(format!("pjrt artifact '{name}' returned no outputs"))
+        })?;
+        if flat.len() != expected_len {
+            return Err(SigError::Backend(format!(
+                "pjrt artifact '{name}' returned {} values, expected {expected_len}",
+                flat.len()
+            )));
+        }
+        let mut out = self.arena.take(flat.len());
+        for (o, &v) in out.iter_mut().zip(flat.iter()) {
+            *o = v as f64;
+        }
+        Ok(out)
+    }
+}
+
+/// Per-worker scratch for signature plans; buffers return to the arena on
+/// drop (worker exit), so a repeat execution checks out the same set.
+struct SigScratch {
+    arena: Arena,
+    z: Vec<f64>,
+    s: Vec<f64>,
+    sig: Vec<f64>,
+    lx: Vec<f64>,
+    lacc: Vec<f64>,
+    lnext: Vec<f64>,
+}
+
+impl SigScratch {
+    fn checkout(arena: &Arena, od: usize, scratch_len: usize, log_total: usize) -> SigScratch {
+        SigScratch {
+            arena: arena.clone(),
+            z: arena.take(od),
+            s: arena.take(scratch_len),
+            sig: arena.take(log_total),
+            lx: arena.take(log_total),
+            lacc: arena.take(log_total),
+            lnext: arena.take(log_total),
+        }
+    }
+}
+
+impl Drop for SigScratch {
+    fn drop(&mut self) {
+        for b in [
+            std::mem::take(&mut self.z),
+            std::mem::take(&mut self.s),
+            std::mem::take(&mut self.sig),
+            std::mem::take(&mut self.lx),
+            std::mem::take(&mut self.lacc),
+            std::mem::take(&mut self.lnext),
+        ] {
+            self.arena.give(b);
+        }
+    }
+}
+
+/// Per-worker scratch for kernel plans.
+struct KernScratch {
+    arena: Arena,
+    dx: Vec<f64>,
+    dy: Vec<f64>,
+    base: Vec<f64>,
+    delta: Vec<f64>,
+    prev: Vec<f64>,
+    cur: Vec<f64>,
+}
+
+impl KernScratch {
+    fn checkout(
+        arena: &Arena,
+        max_lx: usize,
+        max_ly: usize,
+        dim: usize,
+        needs_base: bool,
+        row_len: usize,
+    ) -> KernScratch {
+        let (mi, ni) = (max_lx.saturating_sub(1), max_ly.saturating_sub(1));
+        KernScratch {
+            arena: arena.clone(),
+            dx: arena.take(mi * dim),
+            dy: arena.take(ni * dim),
+            base: arena.take(if needs_base { mi * ni } else { 0 }),
+            delta: Vec::new(),
+            prev: arena.take(row_len),
+            cur: arena.take(row_len),
+        }
+    }
+}
+
+impl Drop for KernScratch {
+    fn drop(&mut self) {
+        for b in [
+            std::mem::take(&mut self.dx),
+            std::mem::take(&mut self.dy),
+            std::mem::take(&mut self.base),
+            std::mem::take(&mut self.delta),
+            std::mem::take(&mut self.prev),
+            std::mem::take(&mut self.cur),
+        ] {
+            self.arena.give(b);
+        }
+    }
+}
+
+/// Run `body(i, scratch)` for `i in 0..n` with one scratch value per worker.
+/// The worker count is `min(num_threads(), n)` — deterministic for a given
+/// item count, so the arena's steady state is stable.
+fn run_items<S, M, B>(parallel: bool, n: usize, make: M, body: B)
+where
+    S: Send,
+    M: Fn() -> S,
+    B: Fn(usize, &mut S) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let nt = if parallel { num_threads().min(n) } else { 1 };
+    if nt <= 1 {
+        let mut s = make();
+        for i in 0..n {
+            body(i, &mut s);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    // Check out every worker's scratch BEFORE spawning any worker: a fast
+    // worker finishing early would otherwise return its buffers in time for
+    // a later make() to reuse them, making the cold-run checkout count (and
+    // with it the zero-allocation steady-state invariant) timing-dependent.
+    let scratches: Vec<S> = (0..nt).map(|_| make()).collect();
+    std::thread::scope(|scope| {
+        let (cursor, body) = (&cursor, &body);
+        for mut s in scratches {
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                body(i, &mut s);
+            });
+        }
+    });
+}
+
+/// Retained forward state for [`ExecutionRecord::vjp`].
+enum RecordState {
+    None,
+    /// Per-pair Δ matrices and full PDE grids (the paper's Algorithm 4
+    /// inputs), concatenated flat with offset tables.
+    KernelPairs {
+        deltas: Vec<f64>,
+        delta_off: Vec<usize>,
+        grids: Vec<f64>,
+        grid_off: Vec<usize>,
+        /// `[m_i, n_i]` per pair (transformed Δ dims; 0 for degenerate pairs).
+        dims: Vec<usize>,
+    },
+    /// The three Gram matrices behind an MMD² value.
+    Mmd2 {
+        kxx: Vec<f64>,
+        kxy: Vec<f64>,
+        kyy: Vec<f64>,
+    },
+    /// A fitted ridge regressor.
+    Krr(Box<KernelRidge>),
+}
+
+/// Gradients returned by [`ExecutionRecord::vjp`]: one buffer per input
+/// batch, in each batch's own (possibly ragged) flat layout.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Gradients {
+    Single(Vec<f64>),
+    Pair(Vec<f64>, Vec<f64>),
+}
+
+impl Gradients {
+    /// The single gradient of a one-input op; errors for pair ops.
+    pub fn into_single(self) -> Result<Vec<f64>, SigError> {
+        match self {
+            Gradients::Single(g) => Ok(g),
+            Gradients::Pair(..) => Err(SigError::Invalid("vjp produced a pair of gradients")),
+        }
+    }
+
+    /// The (x, y) gradients of a pair op; errors for single-input ops.
+    pub fn into_pair(self) -> Result<(Vec<f64>, Vec<f64>), SigError> {
+        match self {
+            Gradients::Pair(gx, gy) => Ok((gx, gy)),
+            Gradients::Single(_) => Err(SigError::Invalid("vjp produced a single gradient")),
+        }
+    }
+}
+
+/// The result of one plan execution: output values plus the retained forward
+/// intermediates. Buffers return to the plan's arena when the record drops,
+/// which is what makes repeat executions allocation-free.
+pub struct ExecutionRecord {
+    spec: OpSpec,
+    dim: usize,
+    slen: usize,
+    retain: bool,
+    arena: Arena,
+    values: Vec<f64>,
+    x_data: Vec<f64>,
+    x_lengths: Vec<usize>,
+    y_data: Vec<f64>,
+    y_lengths: Vec<usize>,
+    state: RecordState,
+}
+
+impl ExecutionRecord {
+    /// Flat output values: `[batch, sig_length]` rows for signature ops,
+    /// `[batch]` kernels, `[bx, by]` Gram, a single MMD² value, or KRR dual
+    /// coefficients.
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Detach the output buffer (it no longer returns to the arena).
+    pub fn into_values(mut self) -> Vec<f64> {
+        std::mem::take(&mut self.values)
+    }
+
+    /// First output value — the natural accessor for scalar ops.
+    pub fn value(&self) -> f64 {
+        self.values.first().copied().unwrap_or(0.0)
+    }
+
+    /// The retained Gram matrices (Kxx, Kxy, Kyy) of an MMD² execution.
+    pub fn mmd_grams(&self) -> Option<(&[f64], &[f64], &[f64])> {
+        match &self.state {
+            RecordState::Mmd2 { kxx, kxy, kyy } => Some((kxx, kxy, kyy)),
+            _ => None,
+        }
+    }
+
+    /// Extract the fitted regressor of a KRR execution.
+    pub fn into_kernel_ridge(mut self) -> Result<KernelRidge, SigError> {
+        match std::mem::replace(&mut self.state, RecordState::None) {
+            RecordState::Krr(model) => Ok(*model),
+            other => {
+                self.state = other;
+                Err(SigError::Invalid("record does not hold a KRR fit"))
+            }
+        }
+    }
+
+    fn x_batch(&self) -> PathBatch<'_> {
+        PathBatch::ragged(&self.x_data, &self.x_lengths, self.dim)
+            .expect("internal: stored input batch is valid")
+    }
+
+    fn y_batch(&self) -> PathBatch<'_> {
+        PathBatch::ragged(&self.y_data, &self.y_lengths, self.dim)
+            .expect("internal: stored input batch is valid")
+    }
+
+    /// Exact vector–Jacobian product behind one API for the whole family.
+    ///
+    /// `Sig` records feed their forward rows into the time-reversed
+    /// deconstruction (paper §2.4) and `SigKernel` records feed their
+    /// retained Δ + PDE grids into Algorithm 4 (§3.4) — neither re-runs the
+    /// forward sweep. `Gram` and `Mmd2` route through the same weighted-Gram
+    /// backward as [`try_gram_vjp`](crate::kernel::try_gram_vjp), which
+    /// re-derives each pair's grid (retaining O(b²) grids would dwarf the
+    /// forward's memory); their retained Gram matrices are exposed via
+    /// [`mmd_grams`](ExecutionRecord::mmd_grams) instead. All gradients are
+    /// bit-for-bit identical to the pre-existing typed `sig::backward` /
+    /// `kernel::backward` entry points evaluated with the same options
+    /// (including the forward `SigMethod`).
+    ///
+    /// The cotangent length matches the op's output: `[batch, sig_length]`
+    /// (signatures), `[batch]` (paired kernels), `[bx, by]` (Gram), `[1]`
+    /// (MMD²).
+    pub fn vjp(&self, cotangent: &[f64]) -> Result<Gradients, SigError> {
+        if !self.retain {
+            return Err(SigError::Invalid(
+                "plan was compiled forward-only; compile with retention for vjp",
+            ));
+        }
+        match self.spec {
+            OpSpec::Sig(o) => self.vjp_sig(&o, cotangent),
+            OpSpec::LogSig(_) => Err(SigError::Invalid("log-signature vjp is not supported")),
+            OpSpec::SigKernel(k) => self.vjp_kernel(&k, cotangent),
+            OpSpec::Gram(k) => self.vjp_gram(&k, cotangent),
+            OpSpec::Mmd2(k) => self.vjp_mmd2(&k, cotangent),
+            OpSpec::Krr { .. } => Err(SigError::Invalid("vjp is not defined for KRR fits")),
+        }
+    }
+
+    fn vjp_sig(&self, o: &SigOptions, cotangent: &[f64]) -> Result<Gradients, SigError> {
+        let b = self.x_lengths.len();
+        let expected = b * self.slen;
+        if cotangent.len() != expected {
+            return Err(SigError::CotangentLen {
+                expected,
+                got: cotangent.len(),
+            });
+        }
+        let xb = self.x_batch();
+        let bounds = xb.element_offsets();
+        let mut gx = vec![0.0; xb.total_points() * self.dim];
+        let slen = self.slen;
+        let work = |i: usize, row: &mut [f64]| {
+            let p = xb.path(i);
+            // The forward rows are the signatures — no forward re-run.
+            let g = crate::sig::backward::signature_vjp_with_sig(
+                p.data(),
+                p.len(),
+                p.dim(),
+                o.depth,
+                o.exec.transform,
+                &self.values[i * slen..(i + 1) * slen],
+                &cotangent[i * slen..(i + 1) * slen],
+            );
+            row.copy_from_slice(&g);
+        };
+        if o.exec.parallel {
+            crate::util::pool::parallel_for_mut_ragged(&mut gx, &bounds, work);
+        } else {
+            for i in 0..b {
+                let (lo, hi) = (bounds[i], bounds[i + 1]);
+                work(i, &mut gx[lo..hi]);
+            }
+        }
+        Ok(Gradients::Single(gx))
+    }
+
+    fn vjp_kernel(&self, k: &KernelOptions, cotangent: &[f64]) -> Result<Gradients, SigError> {
+        let b = self.x_lengths.len();
+        if cotangent.len() != b {
+            return Err(SigError::CotangentLen {
+                expected: b,
+                got: cotangent.len(),
+            });
+        }
+        let RecordState::KernelPairs {
+            deltas,
+            delta_off,
+            grids,
+            grid_off,
+            dims,
+        } = &self.state
+        else {
+            return Err(SigError::Invalid("record retains no kernel intermediates"));
+        };
+        let xb = self.x_batch();
+        let yb = self.y_batch();
+        let dim = self.dim;
+        let xo = xb.element_offsets();
+        let yo = yb.element_offsets();
+        let mut gx = vec![0.0; xb.total_points() * dim];
+        let gy = std::sync::Mutex::new(vec![0.0; yb.total_points() * dim]);
+        let work = |i: usize, gxrow: &mut [f64]| {
+            let (lx, ly) = (self.x_lengths[i], self.y_lengths[i]);
+            let (m, n) = (dims[2 * i], dims[2 * i + 1]);
+            if m == 0 || n == 0 {
+                return; // degenerate pair: kernel constant, zero gradient
+            }
+            let delta = &deltas[delta_off[i]..delta_off[i + 1]];
+            let grid = &grids[grid_off[i]..grid_off[i + 1]];
+            // Algorithm 4 straight from the retained forward state.
+            let d2 = crate::kernel::backward::sig_kernel_vjp_delta(
+                delta,
+                m,
+                n,
+                k.dyadic_x,
+                k.dyadic_y,
+                grid,
+                cotangent[i],
+            );
+            let mut gxi = vec![0.0; lx * dim];
+            let mut gyi = vec![0.0; ly * dim];
+            crate::kernel::delta::delta_vjp_to_paths(
+                &d2,
+                xb.values_of(i),
+                yb.values_of(i),
+                lx,
+                ly,
+                dim,
+                k.exec.transform,
+                &mut gxi,
+                &mut gyi,
+            );
+            gxrow.copy_from_slice(&gxi);
+            gy.lock().unwrap()[yo[i]..yo[i + 1]].copy_from_slice(&gyi);
+        };
+        if k.exec.parallel {
+            crate::util::pool::parallel_for_mut_ragged(&mut gx, &xo, work);
+        } else {
+            for i in 0..b {
+                let (lo, hi) = (xo[i], xo[i + 1]);
+                work(i, &mut gx[lo..hi]);
+            }
+        }
+        Ok(Gradients::Pair(gx, gy.into_inner().unwrap()))
+    }
+
+    fn vjp_gram(&self, k: &KernelOptions, cotangent: &[f64]) -> Result<Gradients, SigError> {
+        let (gx, gy) =
+            crate::kernel::try_gram_vjp(&self.x_batch(), &self.y_batch(), cotangent, k)?;
+        Ok(Gradients::Pair(gx, gy))
+    }
+
+    fn vjp_mmd2(&self, k: &KernelOptions, cotangent: &[f64]) -> Result<Gradients, SigError> {
+        if cotangent.len() != 1 {
+            return Err(SigError::CotangentLen {
+                expected: 1,
+                got: cotangent.len(),
+            });
+        }
+        let c = cotangent[0];
+        let (bx, by) = (self.x_lengths.len(), self.y_lengths.len());
+        let xb = self.x_batch();
+        let yb = self.y_batch();
+        // ∂/∂x_i [ (1/bx²)ΣΣ k(x_a,x_b) ] needs BOTH argument slots of the
+        // Kxx term: (1/bx²)[Σ_b ∇₁k(x_i,x_b) + Σ_a ∇₂k(x_a,x_i)]. The two
+        // halves are equal only for a symmetric solve — with asymmetric
+        // dyadic orders (λ1 ≠ λ2) the discretised k(u,v) ≠ k(v,u), so the
+        // classic 2·∇₁ shortcut would not be the gradient of the value the
+        // forward pass actually computed.
+        let wxx = vec![c * (1.0 / (bx * bx) as f64); bx * bx];
+        let (gxx1, gxx2) = crate::kernel::try_gram_vjp(&xb, &xb, &wxx, k)?;
+        let wxy = vec![c * (-2.0 / (bx * by) as f64); bx * by];
+        let (gxy, _) = crate::kernel::try_gram_vjp(&xb, &yb, &wxy, k)?;
+        Ok(Gradients::Single(
+            gxx1.iter()
+                .zip(gxx2.iter())
+                .zip(gxy.iter())
+                .map(|((a, b), g)| a + b + g)
+                .collect(),
+        ))
+    }
+}
+
+impl Drop for ExecutionRecord {
+    fn drop(&mut self) {
+        let arena = self.arena.clone();
+        arena.give(std::mem::take(&mut self.values));
+        arena.give(std::mem::take(&mut self.x_data));
+        arena.give(std::mem::take(&mut self.y_data));
+        arena.give_usize(std::mem::take(&mut self.x_lengths));
+        arena.give_usize(std::mem::take(&mut self.y_lengths));
+        match std::mem::replace(&mut self.state, RecordState::None) {
+            RecordState::KernelPairs {
+                deltas,
+                delta_off,
+                grids,
+                grid_off,
+                dims,
+            } => {
+                arena.give(deltas);
+                arena.give(grids);
+                arena.give_usize(delta_off);
+                arena.give_usize(grid_off);
+                arena.give_usize(dims);
+            }
+            RecordState::Mmd2 { kxx, kxy, kyy } => {
+                arena.give(kxx);
+                arena.give(kxy);
+                arena.give(kyy);
+            }
+            RecordState::None | RecordState::Krr(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sig_plan_reuse_allocates_nothing_on_second_run() {
+        let mut rng = Rng::new(11);
+        let (b, l, d) = (6, 12, 2);
+        let data = rng.brownian_batch(b, l, d, 0.4);
+        let pb = PathBatch::uniform(&data, b, l, d).unwrap();
+        for opts in [SigOptions::new(3), SigOptions::new(3).serial()] {
+            let plan = Plan::compile(OpSpec::Sig(opts), ShapeClass::uniform(d, l)).unwrap();
+            let r1 = plan.execute(&pb).unwrap();
+            let first = r1.values().to_vec();
+            drop(r1);
+            let warm = plan.allocations();
+            assert!(warm > 0);
+            let r2 = plan.execute(&pb).unwrap();
+            assert_eq!(r2.values(), &first[..], "plan reuse must be bit-identical");
+            drop(r2);
+            assert_eq!(
+                plan.allocations(),
+                warm,
+                "second run must not allocate (parallel={})",
+                opts.exec.parallel
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_plan_reuse_allocates_nothing_on_second_run() {
+        let mut rng = Rng::new(12);
+        let (b, l, d) = (4, 8, 2);
+        let x = rng.brownian_batch(b, l, d, 0.4);
+        let y = rng.brownian_batch(b, l, d, 0.4);
+        let xb = PathBatch::uniform(&x, b, l, d).unwrap();
+        let yb = PathBatch::uniform(&y, b, l, d).unwrap();
+        let opts = KernelOptions::default().dyadic(1, 0);
+        // Both the forward-only and the record-keeping (grid-retaining)
+        // plans must reach a zero-allocation steady state.
+        for retain in [false, true] {
+            let plan = Plan::compile_custom(
+                OpSpec::SigKernel(opts),
+                ShapeClass::uniform(d, l),
+                retain,
+                None,
+            )
+            .unwrap();
+            let r1 = plan.execute_pair(&xb, &yb).unwrap();
+            let first = r1.values().to_vec();
+            drop(r1);
+            let warm = plan.allocations();
+            let r2 = plan.execute_pair(&xb, &yb).unwrap();
+            assert_eq!(r2.values(), &first[..]);
+            drop(r2);
+            assert_eq!(plan.allocations(), warm, "retain={retain}");
+        }
+    }
+
+    #[test]
+    fn plan_rejects_wrong_shape_class() {
+        let plan = Plan::compile(OpSpec::Sig(SigOptions::new(2)), ShapeClass::uniform(2, 8))
+            .unwrap();
+        let data = vec![0.0; 2 * 6 * 2];
+        let pb = PathBatch::uniform(&data, 2, 6, 2).unwrap();
+        assert!(matches!(plan.execute(&pb), Err(SigError::Invalid(_))));
+        let d3 = vec![0.0; 8 * 3];
+        let pb3 = PathBatch::uniform(&d3, 1, 8, 3).unwrap();
+        assert!(matches!(
+            plan.execute(&pb3),
+            Err(SigError::DimMismatch { .. })
+        ));
+        // Wrong arity.
+        assert!(matches!(
+            plan.execute_pair(&pb, &pb),
+            Err(SigError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn compile_rejects_hostile_specs() {
+        assert!(matches!(
+            Plan::compile(OpSpec::Sig(SigOptions::new(0)), ShapeClass::uniform(2, 8)),
+            Err(SigError::ZeroDepth)
+        ));
+        assert!(matches!(
+            Plan::compile(OpSpec::Sig(SigOptions::new(64)), ShapeClass::uniform(2, 8)),
+            Err(SigError::TooLarge(_))
+        ));
+        assert!(matches!(
+            Plan::compile(
+                OpSpec::SigKernel(KernelOptions::default().dyadic(60, 0)),
+                ShapeClass::ragged(2, 16)
+            ),
+            Err(SigError::TooLarge(_))
+        ));
+        assert!(matches!(
+            Plan::compile(OpSpec::Sig(SigOptions::new(2)), ShapeClass::uniform(0, 8)),
+            Err(SigError::ZeroDim)
+        ));
+    }
+
+    #[test]
+    fn forward_only_records_refuse_vjp() {
+        let mut rng = Rng::new(13);
+        let data = rng.brownian_batch(2, 6, 2, 0.4);
+        let pb = PathBatch::uniform(&data, 2, 6, 2).unwrap();
+        let plan =
+            Plan::compile_forward(OpSpec::Sig(SigOptions::new(2)), ShapeClass::uniform(2, 6))
+                .unwrap();
+        let rec = plan.execute(&pb).unwrap();
+        let cot = vec![0.0; rec.values().len()];
+        assert!(matches!(rec.vjp(&cot), Err(SigError::Invalid(_))));
+    }
+
+    #[test]
+    fn ragged_class_executes_mixed_lengths() {
+        let mut rng = Rng::new(14);
+        let d = 2;
+        let lengths = [5usize, 1, 9];
+        let mut data = Vec::new();
+        for &l in &lengths {
+            data.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let pb = PathBatch::ragged(&data, &lengths, d).unwrap();
+        let plan = Plan::compile(
+            OpSpec::Sig(SigOptions::new(3)),
+            ShapeClass::ragged(d, 9),
+        )
+        .unwrap();
+        let rec = plan.execute(&pb).unwrap();
+        let slen = crate::sig::sig_length(d, 3);
+        let mut off = 0;
+        for (i, &l) in lengths.iter().enumerate() {
+            let want = crate::sig::sig(&data[off * d..(off + l) * d], l, d, 3);
+            assert_eq!(&rec.values()[i * slen..(i + 1) * slen], &want[..]);
+            off += l;
+        }
+        // A longer path than the class allows is rejected.
+        let long = rng.brownian_path(12, d, 0.4);
+        let lb = PathBatch::uniform(&long, 1, 12, d).unwrap();
+        assert!(matches!(plan.execute(&lb), Err(SigError::Invalid(_))));
+    }
+
+    #[test]
+    fn krr_plan_fits_and_returns_model() {
+        let mut rng = Rng::new(15);
+        let (n, l, d) = (8, 6, 2);
+        let data = rng.brownian_batch(n, l, d, 0.3);
+        let pb = PathBatch::uniform(&data, n, l, d).unwrap();
+        let y: Vec<f64> = (0..n).map(|i| i as f64 * 0.1).collect();
+        let plan = Plan::compile(
+            OpSpec::Krr {
+                opts: KernelOptions::default(),
+                lambda: 1e-3,
+                normalize: true,
+            },
+            ShapeClass::uniform(d, l),
+        )
+        .unwrap();
+        let rec = plan.execute_fit(&pb, &y).unwrap();
+        assert_eq!(rec.values().len(), n);
+        let model = rec.into_kernel_ridge().unwrap();
+        let pred = model.try_predict(&pb).unwrap();
+        assert_eq!(pred.len(), n);
+    }
+}

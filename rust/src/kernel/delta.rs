@@ -8,15 +8,21 @@ use crate::util::linalg::gemm_nt;
 
 /// Increments of `path` (`[len, dim]`): `[len-1, dim]`.
 pub fn increments(path: &[f64], len: usize, dim: usize) -> Vec<f64> {
+    let mut out = vec![0.0; (len - 1) * dim];
+    increments_into(path, len, dim, &mut out);
+    out
+}
+
+/// [`increments`] into caller-provided storage of length `(len-1)*dim`.
+pub fn increments_into(path: &[f64], len: usize, dim: usize, out: &mut [f64]) {
     assert_eq!(path.len(), len * dim);
     assert!(len >= 2);
-    let mut out = vec![0.0; (len - 1) * dim];
+    assert_eq!(out.len(), (len - 1) * dim);
     for i in 0..len - 1 {
         for j in 0..dim {
             out[i * dim + j] = path[(i + 1) * dim + j] - path[i * dim + j];
         }
     }
-    out
 }
 
 /// Δ matrix for the *transformed* paths, built without materialising them.
@@ -39,22 +45,57 @@ pub fn delta_matrix(
     dim: usize,
     transform: Transform,
 ) -> (usize, usize, Vec<f64>) {
-    let dx = increments(x, lx, dim);
-    let dy = increments(y, ly, dim);
     let m = lx - 1;
     let n = ly - 1;
-    let mut base = vec![0.0; m * n];
-    gemm_nt(m, dim, n, &dx, &dy, &mut base);
+    let rows = transform.out_len(lx) - 1;
+    let cols = transform.out_len(ly) - 1;
+    let mut dx = vec![0.0; m * dim];
+    let mut dy = vec![0.0; n * dim];
+    let needs_base = matches!(transform, Transform::LeadLag | Transform::LeadLagTimeAug);
+    let mut base = vec![0.0; if needs_base { m * n } else { 0 }];
+    let mut out = vec![0.0; rows * cols];
+    delta_matrix_into(x, y, lx, ly, dim, transform, &mut dx, &mut dy, &mut base, &mut out);
+    (rows, cols, out)
+}
+
+/// [`delta_matrix`] into caller-provided storage. `dx`/`dy` are scratch of
+/// length `(lx-1)*dim` / `(ly-1)*dim`; `base` is scratch of length
+/// `(lx-1)*(ly-1)` for the lead-lag transforms (and may be empty otherwise);
+/// `out` has length `rows*cols` of the *transformed* Δ. Returns
+/// `(rows, cols)`. The engine's kernel plans route every shape-dependent
+/// buffer through their workspace arena via this entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn delta_matrix_into(
+    x: &[f64],
+    y: &[f64],
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    transform: Transform,
+    dx: &mut [f64],
+    dy: &mut [f64],
+    base: &mut [f64],
+    out: &mut [f64],
+) -> (usize, usize) {
+    let m = lx - 1;
+    let n = ly - 1;
+    increments_into(x, lx, dim, &mut dx[..m * dim]);
+    increments_into(y, ly, dim, &mut dy[..n * dim]);
     match transform {
-        Transform::None => (m, n, base),
-        Transform::TimeAug => {
-            let shift = (1.0 / m as f64) * (1.0 / n as f64);
-            for v in base.iter_mut() {
-                *v += shift;
+        Transform::None | Transform::TimeAug => {
+            let out = &mut out[..m * n];
+            gemm_nt(m, dim, n, &dx[..m * dim], &dy[..n * dim], out);
+            if transform == Transform::TimeAug {
+                let shift = (1.0 / m as f64) * (1.0 / n as f64);
+                for v in out.iter_mut() {
+                    *v += shift;
+                }
             }
-            (m, n, base)
+            (m, n)
         }
         Transform::LeadLag | Transform::LeadLagTimeAug => {
+            let base = &mut base[..m * n];
+            gemm_nt(m, dim, n, &dx[..m * dim], &dy[..n * dim], base);
             let rows = 2 * lx - 2;
             let cols = 2 * ly - 2;
             let shift = if transform == Transform::LeadLagTimeAug {
@@ -62,7 +103,8 @@ pub fn delta_matrix(
             } else {
                 0.0
             };
-            let mut out = vec![shift; rows * cols];
+            let out = &mut out[..rows * cols];
+            out.fill(shift);
             for a in 0..rows {
                 for b in 0..cols {
                     if a % 2 == b % 2 {
@@ -70,7 +112,7 @@ pub fn delta_matrix(
                     }
                 }
             }
-            (rows, cols, out)
+            (rows, cols)
         }
     }
 }

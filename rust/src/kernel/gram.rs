@@ -7,10 +7,11 @@
 //! (len_x_i − 1) × (len_y_j − 1) PDE grid, so mixed-length corpora need no
 //! padding, and gradients come back in each batch's own ragged layout.
 
+use crate::engine::{OpSpec, Plan, ShapeClass};
 use crate::kernel::backward::try_sig_kernel_vjp;
-use crate::kernel::{try_sig_kernel, KernelOptions};
+use crate::kernel::KernelOptions;
 use crate::path::{PathBatch, SigError};
-use crate::util::pool::{num_threads, parallel_for_mut, parallel_for_mut_ragged};
+use crate::util::pool::num_threads;
 
 fn check_dims(x: &PathBatch<'_>, y: &PathBatch<'_>, opts: &KernelOptions) -> Result<(), SigError> {
     if x.dim() != y.dim() {
@@ -31,38 +32,15 @@ fn check_dims(x: &PathBatch<'_>, y: &PathBatch<'_>, opts: &KernelOptions) -> Res
 }
 
 /// Typed paired batch: k(x_i, y_i) for i = 0..batch, ragged-capable.
-/// Returns `[batch]`.
+/// Returns `[batch]`. A thin wrapper compiling a one-shot forward
+/// [`Plan`]; compile the plan yourself to amortise it across calls.
 pub fn try_batch_kernel(
     x: &PathBatch<'_>,
     y: &PathBatch<'_>,
     opts: &KernelOptions,
 ) -> Result<Vec<f64>, SigError> {
-    check_dims(x, y, opts)?;
-    if x.batch() != y.batch() {
-        return Err(SigError::BatchMismatch {
-            left: x.batch(),
-            right: y.batch(),
-        });
-    }
-    let b = x.batch();
-    let mut out = vec![0.0; b];
-    if b == 0 {
-        return Ok(out);
-    }
-    let work = |i: usize, slot: &mut [f64]| {
-        // Cannot fail: dims were validated above.
-        slot[0] = try_sig_kernel(x.path(i), y.path(i), opts).expect("validated");
-    };
-    if opts.exec.parallel {
-        parallel_for_mut(&mut out, 1, work);
-    } else {
-        for i in 0..b {
-            let mut slot = [0.0];
-            work(i, &mut slot);
-            out[i] = slot[0];
-        }
-    }
-    Ok(out)
+    let plan = Plan::compile_forward(OpSpec::SigKernel(*opts), ShapeClass::for_pair(x, y))?;
+    Ok(plan.execute_pair(x, y)?.into_values())
 }
 
 /// Paired batch: k(x_i, y_i) for i = 0..batch (flat-slice wrapper over
@@ -83,42 +61,19 @@ pub fn batch_kernel(
 }
 
 /// Typed paired-batch vjp: given ∂F/∂k_i, return (∂F/∂x, ∂F/∂y) in each
-/// batch's own (possibly ragged) flat layout.
+/// batch's own (possibly ragged) flat layout. Routed through
+/// [`ExecutionRecord::vjp`](crate::engine::ExecutionRecord::vjp): the
+/// forward solve retains each pair's Δ matrix and PDE grid, and Algorithm 4
+/// runs on them directly.
 pub fn try_batch_kernel_vjp(
     x: &PathBatch<'_>,
     y: &PathBatch<'_>,
     grad_k: &[f64],
     opts: &KernelOptions,
 ) -> Result<(Vec<f64>, Vec<f64>), SigError> {
-    check_dims(x, y, opts)?;
-    if x.batch() != y.batch() {
-        return Err(SigError::BatchMismatch {
-            left: x.batch(),
-            right: y.batch(),
-        });
-    }
-    let b = x.batch();
-    if grad_k.len() != b {
-        return Err(SigError::CotangentLen {
-            expected: b,
-            got: grad_k.len(),
-        });
-    }
-    let dim = x.dim();
-    let mut gx = vec![0.0; x.total_points() * dim];
-    let gy = std::sync::Mutex::new(vec![0.0; y.total_points() * dim]);
-    if b == 0 {
-        return Ok((gx, gy.into_inner().unwrap()));
-    }
-    let xb = x.element_offsets();
-    let yb = y.element_offsets();
-    parallel_for_mut_ragged(&mut gx, &xb, |i, gxrow| {
-        let (gxi, gyi) =
-            try_sig_kernel_vjp(x.path(i), y.path(i), opts, grad_k[i]).expect("validated");
-        gxrow.copy_from_slice(&gxi);
-        gy.lock().unwrap()[yb[i]..yb[i + 1]].copy_from_slice(&gyi);
-    });
-    Ok((gx, gy.into_inner().unwrap()))
+    let plan = Plan::compile(OpSpec::SigKernel(*opts), ShapeClass::for_pair(x, y))?;
+    let record = plan.execute_pair(x, y)?;
+    record.vjp(grad_k)?.into_pair()
 }
 
 /// Paired-batch vjp (flat-slice wrapper over [`try_batch_kernel_vjp`]):
@@ -139,33 +94,15 @@ pub fn batch_kernel_vjp(
 }
 
 /// Typed full Gram matrix: `[bx, by]` of k(x_i, y_j), ragged-capable —
-/// every pair is solved on its own grid. Parallel over all pairs.
+/// every pair is solved on its own grid. Parallel over all pairs. A thin
+/// wrapper compiling a one-shot forward [`Plan`].
 pub fn try_gram(
     x: &PathBatch<'_>,
     y: &PathBatch<'_>,
     opts: &KernelOptions,
 ) -> Result<Vec<f64>, SigError> {
-    check_dims(x, y, opts)?;
-    let (bx, by) = (x.batch(), y.batch());
-    let mut out = vec![0.0; bx * by];
-    if bx * by == 0 {
-        return Ok(out);
-    }
-    let work = |p: usize, slot: &mut [f64]| {
-        let i = p / by;
-        let j = p % by;
-        slot[0] = try_sig_kernel(x.path(i), y.path(j), opts).expect("validated");
-    };
-    if opts.exec.parallel {
-        parallel_for_mut(&mut out, 1, work);
-    } else {
-        for p in 0..bx * by {
-            let mut slot = [0.0];
-            work(p, &mut slot);
-            out[p] = slot[0];
-        }
-    }
-    Ok(out)
+    let plan = Plan::compile_forward(OpSpec::Gram(*opts), ShapeClass::for_pair(x, y))?;
+    Ok(plan.execute_pair(x, y)?.into_values())
 }
 
 /// Full Gram matrix: `[bx, by]` of k(x_i, y_j) (flat-slice wrapper over
@@ -288,18 +225,8 @@ pub fn try_mmd2(
     y: &PathBatch<'_>,
     opts: &KernelOptions,
 ) -> Result<f64, SigError> {
-    check_dims(x, y, opts)?;
-    if x.is_empty() || y.is_empty() {
-        return Err(SigError::InsufficientBatch {
-            need: 1,
-            got: x.batch().min(y.batch()),
-        });
-    }
-    let kxx = try_gram(x, x, opts)?;
-    let kxy = try_gram(x, y, opts)?;
-    let kyy = try_gram(y, y, opts)?;
-    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
-    Ok(mean(&kxx) - 2.0 * mean(&kxy) + mean(&kyy))
+    let plan = Plan::compile_forward(OpSpec::Mmd2(*opts), ShapeClass::for_pair(x, y))?;
+    Ok(plan.execute_pair(x, y)?.value())
 }
 
 /// Squared signature-kernel MMD (flat-slice wrapper over [`try_mmd2`]).
@@ -369,14 +296,10 @@ pub fn try_mmd2_with_grad(
     y: &PathBatch<'_>,
     opts: &KernelOptions,
 ) -> Result<(f64, Vec<f64>), SigError> {
-    let value = try_mmd2(x, y, opts)?;
-    let (bx, by) = (x.batch(), y.batch());
-    // ∂/∂x_i [ (1/bx²)ΣΣ k(x_a,x_b) ] = (2/bx²) Σ_b ∇₁k(x_i, x_b) (symmetry).
-    let wxx = vec![2.0 / (bx * bx) as f64; bx * bx];
-    let (gxx, _) = try_gram_vjp(x, x, &wxx, opts)?;
-    let wxy = vec![-2.0 / (bx * by) as f64; bx * by];
-    let (gxy, _) = try_gram_vjp(x, y, &wxy, opts)?;
-    let grad: Vec<f64> = gxx.iter().zip(gxy.iter()).map(|(a, b)| a + b).collect();
+    let plan = Plan::compile(OpSpec::Mmd2(*opts), ShapeClass::for_pair(x, y))?;
+    let record = plan.execute_pair(x, y)?;
+    let value = record.value();
+    let grad = record.vjp(&[1.0])?.into_single()?;
     Ok((value, grad))
 }
 

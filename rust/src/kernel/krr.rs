@@ -103,8 +103,36 @@ fn solve_ridge(a: Vec<f64>, n: usize, lambda: f64, y: &[f64]) -> Result<Vec<f64>
 
 impl KernelRidge {
     /// Typed, fallible fit on a (possibly ragged) batch of training paths
-    /// with targets `[n]`.
+    /// with targets `[n]`. A thin wrapper that compiles a one-shot
+    /// [`Plan`](crate::engine::Plan) with op spec
+    /// [`OpSpec::Krr`](crate::engine::OpSpec::Krr).
     pub fn try_fit(
+        paths: &PathBatch<'_>,
+        y: &[f64],
+        lambda: f64,
+        normalize: bool,
+        opts: &KernelOptions,
+    ) -> Result<KernelRidge, SigError> {
+        let plan = crate::engine::Plan::compile(
+            crate::engine::OpSpec::Krr {
+                opts: *opts,
+                lambda,
+                normalize,
+            },
+            crate::engine::ShapeClass::for_batch(paths),
+        )?;
+        plan.execute_fit(paths, y)?.into_kernel_ridge()
+    }
+
+    /// The fitted dual coefficients α of (K + λI)α = y.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// The fitting logic behind [`KernelRidge::try_fit`], called by the
+    /// engine's KRR plans (kept separate so the wrapper → plan → fit chain
+    /// does not recurse).
+    pub(crate) fn fit_impl(
         paths: &PathBatch<'_>,
         y: &[f64],
         lambda: f64,

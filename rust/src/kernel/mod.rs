@@ -24,14 +24,14 @@ pub use gram::{
 pub use krr::KernelRidge;
 pub use lift::{lifted_delta, sig_kernel_lifted, StaticKernel};
 pub use pde_baseline::sig_kernel_vjp_pde_approx;
-pub use solver::{solve_pde, solve_pde_grid};
+pub use solver::{solve_pde, solve_pde_grid, solve_pde_grid_into, solve_pde_with};
 
 pub use crate::path::KernelOptions;
 
 use crate::path::{Path, SigError};
 
 /// Which PDE sweep to use.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SolverKind {
     /// Row-major two-row sweep — the CPU algorithm (Algorithm 3).
     Row,
@@ -68,7 +68,9 @@ pub(crate) fn check_grid_size(
 
 /// Typed, fallible signature kernel k(x, y). The paths must share a
 /// dimension; a path with fewer than two points has the identity signature,
-/// so the kernel degenerates to 1.
+/// so the kernel degenerates to 1. A thin wrapper that compiles a one-shot
+/// [`Plan`](crate::engine::Plan) — compile the plan once yourself (or use a
+/// [`Session`](crate::engine::Session)) when the same shape class recurs.
 pub fn try_sig_kernel(x: Path<'_>, y: Path<'_>, opts: &KernelOptions) -> Result<f64, SigError> {
     if x.dim() != y.dim() {
         return Err(SigError::DimMismatch {
@@ -80,18 +82,13 @@ pub fn try_sig_kernel(x: Path<'_>, y: Path<'_>, opts: &KernelOptions) -> Result<
         return Ok(1.0);
     }
     check_grid_size(x.len(), y.len(), opts)?;
-    let (rows, cols, d) = delta_matrix(
-        x.data(),
-        y.data(),
-        x.len(),
-        y.len(),
-        x.dim(),
-        opts.exec.transform,
-    );
-    Ok(match opts.solver {
-        SolverKind::Row => solve_pde(&d, rows, cols, opts.dyadic_x, opts.dyadic_y),
-        SolverKind::Blocked => solve_pde_blocked(&d, rows, cols, opts.dyadic_x, opts.dyadic_y),
-    })
+    let xb = crate::path::PathBatch::uniform(x.data(), 1, x.len(), x.dim())?;
+    let yb = crate::path::PathBatch::uniform(y.data(), 1, y.len(), y.dim())?;
+    let plan = crate::engine::Plan::compile_forward(
+        crate::engine::OpSpec::SigKernel(*opts),
+        crate::engine::ShapeClass::for_pair(&xb, &yb),
+    )?;
+    Ok(plan.execute_pair(&xb, &yb)?.value())
 }
 
 /// Signature kernel k(x, y) of two paths (`[lx, d]`, `[ly, d]` row-major) —

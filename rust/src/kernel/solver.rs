@@ -19,12 +19,31 @@
 /// n = ly−1); the refined grid has `(m·2^λ1 + 1) × (n·2^λ2 + 1)` nodes but
 /// only two rows are ever live.
 pub fn solve_pde(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> f64 {
+    let mut prev = Vec::new();
+    let mut cur = Vec::new();
+    solve_pde_with(delta, m, n, lam1, lam2, &mut prev, &mut cur)
+}
+
+/// [`solve_pde`] with caller-provided row buffers (`prev`, `cur`), resized to
+/// `cols + 1` in place — the engine's kernel plans reuse them across
+/// executions so the steady state allocates nothing.
+pub fn solve_pde_with(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    prev: &mut Vec<f64>,
+    cur: &mut Vec<f64>,
+) -> f64 {
     assert_eq!(delta.len(), m * n);
     let rows = m << lam1;
     let cols = n << lam2;
     let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
-    let mut prev = vec![1.0; cols + 1];
-    let mut cur = vec![1.0; cols + 1];
+    prev.clear();
+    prev.resize(cols + 1, 1.0);
+    cur.clear();
+    cur.resize(cols + 1, 1.0);
     // NOTE (§Perf): a "two-pass" restructure of this loop (vectorisable
     // prev-row combination + minimal serial FMA chain) was tried and
     // *reverted* — on this testbed it is ~20% slower than the fused loop
@@ -46,7 +65,7 @@ pub fn solve_pde(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> f64
             cur[t + 1] = v;
             k_left = v;
         }
-        std::mem::swap(&mut prev, &mut cur);
+        std::mem::swap(prev, cur);
     }
     prev[cols]
 }
@@ -55,12 +74,31 @@ pub fn solve_pde(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> f64
 /// (Algorithm 4). Returns the `[(rows+1) × (cols+1)]` grid row-major, where
 /// rows = m·2^λ1, cols = n·2^λ2.
 pub fn solve_pde_grid(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> Vec<f64> {
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let mut k = vec![1.0; (rows + 1) * (cols + 1)];
+    solve_pde_grid_into(delta, m, n, lam1, lam2, &mut k);
+    k
+}
+
+/// [`solve_pde_grid`] into caller-provided storage of length
+/// `(m·2^λ1 + 1) × (n·2^λ2 + 1)` — used by the engine's record-keeping
+/// kernel plans so the retained grids live in the workspace arena.
+pub fn solve_pde_grid_into(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    k: &mut [f64],
+) {
     assert_eq!(delta.len(), m * n);
     let rows = m << lam1;
     let cols = n << lam2;
     let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
     let w = cols + 1;
-    let mut k = vec![1.0; (rows + 1) * w];
+    assert_eq!(k.len(), (rows + 1) * w);
+    k.fill(1.0);
     for s in 0..rows {
         let drow = &delta[(s >> lam1) * n..(s >> lam1) * n + n];
         let (top, bot) = k.split_at_mut((s + 1) * w);
@@ -77,7 +115,6 @@ pub fn solve_pde_grid(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -
             k_left = v;
         }
     }
-    k
 }
 
 #[cfg(test)]

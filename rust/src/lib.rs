@@ -16,6 +16,16 @@
 //!   shared by both subsystems. Every computation has a fallible `try_*`
 //!   entry point taking these types; nothing on that route panics on
 //!   malformed input.
+//! * [`engine`] — compile-once / execute-many: a [`Plan`](engine::Plan) is
+//!   compiled from an op spec + shape class (all validation, layout tables,
+//!   backend selection, workspace arena happen once), then
+//!   `plan.execute(&batch)` runs with **zero shape-dependent allocation**
+//!   and returns an [`ExecutionRecord`](engine::ExecutionRecord) whose
+//!   retained forward intermediates feed exact
+//!   [`vjp`](engine::ExecutionRecord::vjp) gradients without re-running the
+//!   forward sweep. [`Session`](engine::Session) adds an LRU plan cache.
+//!   Use this layer for training loops and serving; the `try_*` wrappers
+//!   below compile one-shot plans for one-off calls.
 //! * [`sig`] — truncated signatures, log-signatures, streaming/batched
 //!   variants and exact vjps (plus the flat-slice convenience wrappers).
 //! * [`kernel`] — signature kernels via the Goursat PDE, Gram matrices,
@@ -24,14 +34,26 @@
 //!   on-the-fly into every sweep.
 //! * [`coordinator`] — the serving layer: a validated binary wire protocol
 //!   (single-path and ragged-batch frames), shape-grouped dynamic batching,
-//!   and a router that executes [`PathBatch`](path::PathBatch)es natively or
-//!   on PJRT artifacts.
+//!   and a router that executes [`PathBatch`](path::PathBatch)es through an
+//!   LRU-cached plan per shape group, natively or on PJRT artifacts.
 //! * [`runtime`] — PJRT execution of AOT artifacts (behind the `pjrt`
 //!   feature; the default build has no external dependencies).
+
+// Style allowances for numeric-kernel idiom (indexed loops over flat tensor
+// layouts, wide argument lists on hot entry points) — the clippy CI job runs
+// with `-D warnings` for everything else.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy,
+    clippy::type_complexity,
+    clippy::neg_cmp_op_on_partial_ord // `!(x > 0.0)` deliberately catches NaN
+)]
 
 pub mod tensor;
 pub mod util;
 pub mod path;
+pub mod engine;
 pub mod sig;
 pub mod kernel;
 pub mod transforms;
@@ -42,4 +64,5 @@ pub mod config;
 pub mod bench;
 pub mod cli;
 
-pub use path::{ExecOptions, Path, PathBatch, SigError};
+pub use engine::{ExecutionRecord, Gradients, OpSpec, Plan, PlanCache, Session, ShapeClass};
+pub use path::{ExecOptions, KernelOptions, Path, PathBatch, SigError, SigOptions};

@@ -47,6 +47,10 @@ pub enum SigError {
     /// A size computation overflowed or exceeded the hard cap — hostile or
     /// absurd shape parameters (e.g. an enormous depth from the wire).
     TooLarge(&'static str),
+    /// An argument is invalid for the requested operation, or an input does
+    /// not belong to the shape class a [`Plan`](crate::engine::Plan) was
+    /// compiled for.
+    Invalid(&'static str),
     /// Numerical failure (overflow / not positive definite).
     NonFinite(&'static str),
     /// Malformed wire frame or header.
@@ -78,6 +82,7 @@ impl std::fmt::Display for SigError {
             }
             SigError::BadTransform(code) => write!(f, "unknown transform code {code}"),
             SigError::TooLarge(what) => write!(f, "size overflow in {what}"),
+            SigError::Invalid(what) => write!(f, "invalid argument: {what}"),
             SigError::NonFinite(what) => write!(f, "numerical failure: {what}"),
             SigError::Protocol(msg) => write!(f, "protocol error: {msg}"),
             SigError::Backend(msg) => write!(f, "backend error: {msg}"),
@@ -105,7 +110,9 @@ impl<'a> Path<'a> {
         if len == 0 {
             return Err(SigError::EmptyPath);
         }
-        let expected = len * dim;
+        let expected = len
+            .checked_mul(dim)
+            .ok_or(SigError::TooLarge("path size"))?;
         if data.len() != expected {
             return Err(SigError::DataLen {
                 expected,
@@ -321,7 +328,7 @@ impl<'a> PathBatch<'a> {
 /// Execution policy shared by every batched entry point in both subsystems
 /// (signatures and kernels): which path transform to fuse on-the-fly, and
 /// whether to parallelise over the batch.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ExecOptions {
     /// Applied on-the-fly; the transformed path is never materialised.
     pub transform: Transform,
@@ -351,7 +358,7 @@ impl ExecOptions {
 
 /// Options for (batched) signature computation. The transform/parallel policy
 /// lives in [`ExecOptions`], shared with [`KernelOptions`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct SigOptions {
     pub depth: usize,
     pub method: SigMethod,
@@ -389,7 +396,7 @@ impl SigOptions {
 
 /// Options for signature-kernel computations. The transform/parallel policy
 /// lives in [`ExecOptions`], shared with [`SigOptions`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct KernelOptions {
     /// Dyadic refinement order for the first path (λ1).
     pub dyadic_x: u32,

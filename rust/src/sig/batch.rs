@@ -8,15 +8,14 @@
 //! layout.
 
 pub use crate::path::SigOptions;
+use crate::engine::{OpSpec, Plan, ShapeClass};
 use crate::path::{PathBatch, SigError};
-use crate::sig::{sig_length, signature_vjp, try_sig_length, try_signature};
-use crate::util::pool::{parallel_for, parallel_for_mut, parallel_for_mut_ragged};
+use crate::sig::{sig_length, try_signature};
+use crate::util::pool::parallel_for;
 
-/// Hard cap on the number of f64s a batched output may hold (2^30 = 8 GiB) —
-/// a wire-reachable allocation guard, not a practical limitation.
-const MAX_BATCH_OUT: usize = 1 << 30;
-
-/// Signatures of a typed (possibly ragged) batch of paths.
+/// Signatures of a typed (possibly ragged) batch of paths — a thin wrapper
+/// that compiles a one-shot forward [`Plan`]; compile the plan yourself (or
+/// use a [`Session`](crate::engine::Session)) to amortise it across calls.
 ///
 /// Returns `[batch, sig_length(out_dim, depth)]` row-major — rows are
 /// uniform even for ragged batches.
@@ -24,75 +23,22 @@ pub fn try_batch_signature(
     paths: &PathBatch<'_>,
     opts: &SigOptions,
 ) -> Result<Vec<f64>, SigError> {
-    opts.validate()?;
-    let od = opts.exec.transform.out_dim(paths.dim());
-    let slen = try_sig_length(od, opts.depth)?;
-    let b = paths.batch();
-    let total = b
-        .checked_mul(slen)
-        .filter(|&t| t <= MAX_BATCH_OUT)
-        .ok_or(SigError::TooLarge("batched signature output"))?;
-    let mut out = vec![0.0; total];
-    if b == 0 {
-        return Ok(out);
-    }
-    let work = |i: usize, row: &mut [f64]| {
-        // Cannot fail: the batch and options were validated above.
-        let s = try_signature(paths.path(i), opts).expect("validated");
-        row.copy_from_slice(&s);
-    };
-    if opts.exec.parallel {
-        parallel_for_mut(&mut out, slen, work);
-    } else {
-        for (i, row) in out.chunks_mut(slen).enumerate() {
-            work(i, row);
-        }
-    }
-    Ok(out)
+    let plan = Plan::compile_forward(OpSpec::Sig(*opts), ShapeClass::for_batch(paths))?;
+    Ok(plan.execute(paths)?.into_values())
 }
 
 /// Batched vjp over a typed (possibly ragged) batch: given ∂F/∂signatures
 /// `[batch, slen]`, return ∂F/∂paths in the batch's flat (ragged) layout.
+/// Routed through [`ExecutionRecord::vjp`](crate::engine::ExecutionRecord::vjp),
+/// so the forward signatures feed the backward sweep directly.
 pub fn try_batch_signature_vjp(
     paths: &PathBatch<'_>,
     grad_sigs: &[f64],
     opts: &SigOptions,
 ) -> Result<Vec<f64>, SigError> {
-    opts.validate()?;
-    let od = opts.exec.transform.out_dim(paths.dim());
-    let slen = try_sig_length(od, opts.depth)?;
-    let b = paths.batch();
-    let expected = b
-        .checked_mul(slen)
-        .filter(|&t| t <= MAX_BATCH_OUT)
-        .ok_or(SigError::TooLarge("batched signature cotangent"))?;
-    if grad_sigs.len() != expected {
-        return Err(SigError::CotangentLen {
-            expected,
-            got: grad_sigs.len(),
-        });
-    }
-    let dim = paths.dim();
-    let mut out = vec![0.0; paths.total_points() * dim];
-    if b == 0 {
-        return Ok(out);
-    }
-    let bounds = paths.element_offsets();
-    let work = |i: usize, row: &mut [f64]| {
-        let p = paths.path(i);
-        let gs = &grad_sigs[i * slen..(i + 1) * slen];
-        let gx = signature_vjp(p.data(), p.len(), p.dim(), opts.depth, opts.exec.transform, gs);
-        row.copy_from_slice(&gx);
-    };
-    if opts.exec.parallel {
-        parallel_for_mut_ragged(&mut out, &bounds, work);
-    } else {
-        for i in 0..b {
-            let (lo, hi) = (bounds[i], bounds[i + 1]);
-            work(i, &mut out[lo..hi]);
-        }
-    }
-    Ok(out)
+    let plan = Plan::compile(OpSpec::Sig(*opts), ShapeClass::for_batch(paths))?;
+    let record = plan.execute(paths)?;
+    record.vjp(grad_sigs)?.into_single()
 }
 
 /// Signatures of a uniform batch of paths (flat-slice wrapper over
@@ -173,7 +119,7 @@ pub fn batch_signature_streaming<F: Fn(usize, &[f64]) + Sync>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sig::SigMethod;
+    use crate::sig::{signature_vjp, SigMethod};
     use crate::transforms::Transform;
     use crate::util::linalg::max_abs_diff;
     use crate::util::rng::Rng;

@@ -18,36 +18,16 @@ pub fn log_signature(path: &[f64], len: usize, dim: usize, depth: usize, tr: Tra
 }
 
 /// Typed, fallible log-signatures of a (possibly ragged) batch: one row of
-/// `sig_length(out_dim, depth)` coefficients per path. Shared by the router
+/// `sig_length(out_dim, depth)` coefficients per path. A thin wrapper that
+/// compiles a one-shot [`Plan`](crate::engine::Plan); shared by the router
 /// (uniform and ragged frames) and the CLI.
 pub fn try_batch_log_signature(
     paths: &crate::path::PathBatch<'_>,
     opts: &crate::path::SigOptions,
 ) -> Result<Vec<f64>, crate::path::SigError> {
-    use crate::path::SigError;
-    opts.validate()?;
-    let tr = opts.exec.transform;
-    let od = tr.out_dim(paths.dim());
-    let slen = crate::sig::try_sig_length(od, opts.depth)?;
-    let b = paths.batch();
-    let total = b
-        .checked_mul(slen)
-        .filter(|&t| t <= (1 << 30))
-        .ok_or(SigError::TooLarge("batched log-signature output"))?;
-    let mut out = vec![0.0; total];
-    let work = |i: usize, row: &mut [f64]| {
-        let p = paths.path(i);
-        let ls = log_signature(p.data(), p.len(), p.dim(), opts.depth, tr);
-        row.copy_from_slice(&ls);
-    };
-    if opts.exec.parallel {
-        crate::util::pool::parallel_for_mut(&mut out, slen, work);
-    } else {
-        for (i, row) in out.chunks_mut(slen).enumerate() {
-            work(i, row);
-        }
-    }
-    Ok(out)
+    use crate::engine::{OpSpec, Plan, ShapeClass};
+    let plan = Plan::compile_forward(OpSpec::LogSig(*opts), ShapeClass::for_batch(paths))?;
+    Ok(plan.execute(paths)?.into_values())
 }
 
 /// Enumerate all Lyndon words over alphabet {0,..,dim-1} with length in

@@ -23,7 +23,10 @@ pub use batch::{
 pub use direct::direct_step;
 pub use horner::horner_step;
 pub use logsig::{log_signature, log_signature_words, lyndon_words, try_batch_log_signature};
-pub use stream::{expanding_signatures, sliding_signatures, StreamingSignature};
+pub use stream::{
+    expanding_signatures, sliding_signatures, try_expanding_signatures, try_sliding_signatures,
+    StreamingSignature,
+};
 
 pub use crate::path::SigOptions;
 
@@ -32,7 +35,7 @@ use crate::tensor::{exp_increment, LevelLayout};
 use crate::transforms::{IncrementStream, Transform};
 
 /// Which forward algorithm to use.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SigMethod {
     /// Algorithm 1 — the direct update, as in iisignature.
     Direct,
@@ -87,45 +90,73 @@ pub fn try_sig_length(dim: usize, depth: usize) -> Result<usize, SigError> {
     Ok(total)
 }
 
-/// Compute the truncated signature of a single typed path. This is the core
-/// implementation; it never panics on malformed input.
+/// Scratch length [`signature_into`] needs: the Horner B-buffer (design
+/// choice (3)) or the exp(z) buffer of the direct algorithm.
+pub(crate) fn sig_scratch_len(layout: &LevelLayout, method: SigMethod) -> usize {
+    match method {
+        SigMethod::Horner => layout.level_size(layout.depth.saturating_sub(1)).max(1),
+        SigMethod::Direct => layout.total(),
+    }
+}
+
+/// The core signature sweep, writing into caller-provided storage so that
+/// compiled [`Plan`](crate::engine::Plan)s can run it with zero per-call
+/// allocation. `layout` must be the layout of the *transformed* dimension,
+/// `out` has length `layout.total()`, `z` has length `layout.dim`, `scratch`
+/// has length ≥ [`sig_scratch_len`]. Assumes `depth >= 1` (validated at plan
+/// compilation).
+pub(crate) fn signature_into(
+    data: &[f64],
+    len: usize,
+    dim: usize,
+    method: SigMethod,
+    transform: Transform,
+    layout: &LevelLayout,
+    out: &mut [f64],
+    z: &mut [f64],
+    scratch: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), layout.total());
+    debug_assert_eq!(z.len(), layout.dim);
+    if len < 2 {
+        out.fill(0.0);
+        out[0] = 1.0;
+        return;
+    }
+    let mut stream = IncrementStream::new(data, len, dim, transform);
+    // Initialise with the first segment: A = exp(z_1).
+    let has_first = stream.next_into(z);
+    debug_assert!(has_first);
+    exp_increment(layout, z, out);
+    match method {
+        SigMethod::Horner => {
+            while stream.next_into(z) {
+                horner_step(layout, out, z, scratch);
+            }
+        }
+        SigMethod::Direct => {
+            while stream.next_into(z) {
+                direct_step(layout, out, z, scratch);
+            }
+        }
+    }
+}
+
+/// Compute the truncated signature of a single typed path; it never panics
+/// on malformed input. A thin wrapper that compiles a one-shot
+/// [`Plan`](crate::engine::Plan) — for repeated same-shape calls, compile
+/// the plan once and reuse it (see [`crate::engine`]).
 ///
 /// Returns the flat signature of length [`sig_length`] *of the transformed
 /// path's dimension* (`opts.exec.transform`), or an error when
 /// `opts.depth == 0`.
 pub fn try_signature(path: Path<'_>, opts: &SigOptions) -> Result<Vec<f64>, SigError> {
-    opts.validate()?;
-    let (data, len, dim) = (path.data(), path.len(), path.dim());
-    let od = opts.exec.transform.out_dim(dim);
-    try_sig_length(od, opts.depth)?;
-    let layout = LevelLayout::new(od, opts.depth);
-    let mut a = vec![0.0; layout.total()];
-    if len < 2 {
-        a[0] = 1.0;
-        return Ok(a);
-    }
-    let mut stream = IncrementStream::new(data, len, dim, opts.exec.transform);
-    let mut z = vec![0.0; od];
-    // Initialise with the first segment: A = exp(z_1).
-    let has_first = stream.next_into(&mut z);
-    debug_assert!(has_first);
-    exp_increment(&layout, &z, &mut a);
-    match opts.method {
-        SigMethod::Horner => {
-            let bcap = layout.level_size(opts.depth.saturating_sub(1)).max(1);
-            let mut b = vec![0.0; bcap];
-            while stream.next_into(&mut z) {
-                horner_step(&layout, &mut a, &z, &mut b);
-            }
-        }
-        SigMethod::Direct => {
-            let mut e = vec![0.0; layout.total()];
-            while stream.next_into(&mut z) {
-                direct_step(&layout, &mut a, &z, &mut e);
-            }
-        }
-    }
-    Ok(a)
+    let pb = crate::path::PathBatch::uniform(path.data(), 1, path.len(), path.dim())?;
+    let plan = crate::engine::Plan::compile_forward(
+        crate::engine::OpSpec::Sig(*opts),
+        crate::engine::ShapeClass::uniform(path.dim(), path.len()),
+    )?;
+    Ok(plan.execute(&pb)?.into_values())
 }
 
 /// Compute the truncated signature of a single path (flat-slice wrapper over

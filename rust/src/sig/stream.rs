@@ -4,6 +4,7 @@
 //! is the natural deployment mode for the financial data streams the paper
 //! targets; `sliding_signatures` featurises every window of a long series.
 
+use crate::path::{Path, SigError};
 use crate::sig::horner::horner_step;
 use crate::tensor::{group_inverse, tensor_prod, LevelLayout};
 
@@ -17,30 +18,64 @@ pub struct StreamingSignature {
 }
 
 impl StreamingSignature {
-    pub fn new(dim: usize, depth: usize) -> Self {
-        assert!(depth >= 1);
+    /// Typed, fallible constructor: validates `dim`/`depth` like the rest of
+    /// the crate (including the hostile-size guard of
+    /// [`try_sig_length`](crate::sig::try_sig_length)).
+    pub fn try_new(dim: usize, depth: usize) -> Result<Self, SigError> {
+        crate::sig::try_sig_length(dim, depth)?;
         let layout = LevelLayout::new(dim, depth);
         let mut sig = vec![0.0; layout.total()];
         sig[0] = 1.0;
         let bcap = layout.level_size(depth.saturating_sub(1)).max(1);
-        StreamingSignature {
+        Ok(StreamingSignature {
             layout,
             sig,
             scratch: vec![0.0; bcap],
             last: None,
             count: 0,
-        }
+        })
+    }
+
+    /// Panicking wrapper over [`StreamingSignature::try_new`].
+    pub fn new(dim: usize, depth: usize) -> Self {
+        StreamingSignature::try_new(dim, depth).expect("StreamingSignature: invalid dim/depth")
     }
 
     /// Feed the next point; updates the running signature by one Chen step.
-    pub fn push(&mut self, point: &[f64]) {
-        assert_eq!(point.len(), self.layout.dim);
+    /// Errors if the point's dimension disagrees with the stream's.
+    pub fn try_push(&mut self, point: &[f64]) -> Result<(), SigError> {
+        if point.len() != self.layout.dim {
+            return Err(SigError::DataLen {
+                expected: self.layout.dim,
+                got: point.len(),
+            });
+        }
         if let Some(last) = &self.last {
             let z: Vec<f64> = point.iter().zip(last.iter()).map(|(a, b)| a - b).collect();
             horner_step(&self.layout, &mut self.sig, &z, &mut self.scratch);
         }
         self.last = Some(point.to_vec());
         self.count += 1;
+        Ok(())
+    }
+
+    /// Panicking wrapper over [`StreamingSignature::try_push`].
+    pub fn push(&mut self, point: &[f64]) {
+        self.try_push(point).expect("StreamingSignature::push: wrong point dimension")
+    }
+
+    /// Feed a whole typed path (its dimension must match the stream's).
+    pub fn try_extend(&mut self, path: Path<'_>) -> Result<(), SigError> {
+        if path.dim() != self.layout.dim {
+            return Err(SigError::DimMismatch {
+                left: path.dim(),
+                right: self.layout.dim,
+            });
+        }
+        for i in 0..path.len() {
+            self.try_push(path.point(i))?;
+        }
+        Ok(())
     }
 
     /// Current signature of everything seen so far (identity before two
@@ -82,8 +117,28 @@ pub fn sliding_signatures(
     window: usize,
     stride: usize,
 ) -> Vec<f64> {
-    assert!(window >= 2 && window <= len && stride >= 1);
-    assert_eq!(path.len(), len * dim);
+    let p = Path::new(path, len, dim).expect("sliding_signatures: invalid path shape");
+    try_sliding_signatures(p, depth, window, stride)
+        .expect("sliding_signatures: invalid window/stride/depth")
+}
+
+/// Typed, fallible [`sliding_signatures`]: validates the path shape (at
+/// [`Path`] construction), depth, window and stride instead of asserting.
+pub fn try_sliding_signatures(
+    path: Path<'_>,
+    depth: usize,
+    window: usize,
+    stride: usize,
+) -> Result<Vec<f64>, SigError> {
+    let (len, dim) = (path.len(), path.dim());
+    crate::sig::try_sig_length(dim, depth)?;
+    if window < 2 || window > len {
+        return Err(SigError::Invalid("window must satisfy 2 <= window <= len"));
+    }
+    if stride == 0 {
+        return Err(SigError::Invalid("stride must be at least 1"));
+    }
+    let path = path.data();
     let layout = LevelLayout::new(dim, depth);
     let total = layout.total();
     let n_windows = (len - window) / stride + 1;
@@ -124,23 +179,37 @@ pub fn sliding_signatures(
         }
         out[w * total..(w + 1) * total].copy_from_slice(&cur);
     }
-    out
+    Ok(out)
 }
 
 /// Expanding-window signatures: S(x_{0..k}) for every prefix end k in
 /// `2..=len`, one Horner step each — `[len-1, sig_length]`.
 pub fn expanding_signatures(path: &[f64], len: usize, dim: usize, depth: usize) -> Vec<f64> {
-    assert!(len >= 2);
+    let p = Path::new(path, len, dim).expect("expanding_signatures: invalid path shape");
+    try_expanding_signatures(p, depth).expect("expanding_signatures: invalid depth/length")
+}
+
+/// Typed, fallible [`expanding_signatures`]: needs a path of at least two
+/// points and a validated depth.
+pub fn try_expanding_signatures(path: Path<'_>, depth: usize) -> Result<Vec<f64>, SigError> {
+    let (len, dim) = (path.len(), path.dim());
+    crate::sig::try_sig_length(dim, depth)?;
+    if len < 2 {
+        return Err(SigError::Invalid(
+            "expanding signatures need at least two points",
+        ));
+    }
+    let path = path.data();
     let layout = LevelLayout::new(dim, depth);
     let total = layout.total();
     let mut out = vec![0.0; (len - 1) * total];
-    let mut stream = StreamingSignature::new(dim, depth);
-    stream.push(&path[..dim]);
+    let mut stream = StreamingSignature::try_new(dim, depth)?;
+    stream.try_push(&path[..dim])?;
     for i in 1..len {
-        stream.push(&path[i * dim..(i + 1) * dim]);
+        stream.try_push(&path[i * dim..(i + 1) * dim])?;
         out[(i - 1) * total..i * total].copy_from_slice(stream.signature());
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -163,6 +232,85 @@ mod tests {
             let want = crate::sig::sig(&path, len, dim, depth);
             assert!(max_abs_diff(s.signature(), &want) < 1e-11);
         });
+    }
+
+    #[test]
+    fn typed_constructors_validate_like_the_rest_of_the_crate() {
+        assert!(matches!(
+            StreamingSignature::try_new(0, 3),
+            Err(SigError::ZeroDim)
+        ));
+        assert!(matches!(
+            StreamingSignature::try_new(2, 0),
+            Err(SigError::ZeroDepth)
+        ));
+        assert!(matches!(
+            StreamingSignature::try_new(2, 64),
+            Err(SigError::TooLarge(_))
+        ));
+        let mut s = StreamingSignature::try_new(2, 3).unwrap();
+        assert!(matches!(
+            s.try_push(&[1.0, 2.0, 3.0]),
+            Err(SigError::DataLen {
+                expected: 2,
+                got: 3
+            })
+        ));
+        s.try_push(&[0.0, 0.0]).unwrap();
+        s.try_push(&[1.0, 2.0]).unwrap();
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn try_extend_matches_per_point_pushes() {
+        let mut rng = crate::util::rng::Rng::new(62);
+        let (len, dim, depth) = (9, 2, 3);
+        let data = rng.brownian_path(len, dim, 0.5);
+        let p = Path::new(&data, len, dim).unwrap();
+        let mut a = StreamingSignature::try_new(dim, depth).unwrap();
+        a.try_extend(p).unwrap();
+        let mut b = StreamingSignature::new(dim, depth);
+        for i in 0..len {
+            b.push(&data[i * dim..(i + 1) * dim]);
+        }
+        assert_eq!(a.signature(), b.signature());
+        // Mixed-dimension extension is a typed error.
+        let d3 = [0.0; 6];
+        let p3 = Path::new(&d3, 2, 3).unwrap();
+        assert!(matches!(
+            a.try_extend(p3),
+            Err(SigError::DimMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn typed_windows_validate_arguments() {
+        let data = [0.0, 1.0, 2.0, 3.0]; // 4 points in R^1
+        let p = Path::new(&data, 4, 1).unwrap();
+        assert!(matches!(
+            try_sliding_signatures(p, 2, 1, 1),
+            Err(SigError::Invalid(_))
+        ));
+        assert!(matches!(
+            try_sliding_signatures(p, 2, 5, 1),
+            Err(SigError::Invalid(_))
+        ));
+        assert!(matches!(
+            try_sliding_signatures(p, 2, 2, 0),
+            Err(SigError::Invalid(_))
+        ));
+        assert!(matches!(
+            try_sliding_signatures(p, 0, 2, 1),
+            Err(SigError::ZeroDepth)
+        ));
+        let got = try_sliding_signatures(p, 2, 2, 1).unwrap();
+        assert_eq!(got, sliding_signatures(&data, 4, 1, 2, 2, 1));
+        let single = [0.0];
+        let sp = Path::new(&single, 1, 1).unwrap();
+        assert!(matches!(
+            try_expanding_signatures(sp, 2),
+            Err(SigError::Invalid(_))
+        ));
     }
 
     #[test]

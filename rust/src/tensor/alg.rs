@@ -181,9 +181,28 @@ pub fn group_inverse(layout: &LevelLayout, a: &[f64], out: &mut [f64]) {
 /// log(1+x) = x ⊗ (1 - x/2 ⊗ (1 - 2x/3 ⊗ (...))) — we use the direct
 /// alternating Horner form 1 - x(1/2 - x(1/3 - ...)) multiplied by x.
 pub fn tensor_log(layout: &LevelLayout, a: &[f64], out: &mut [f64]) {
+    let n = layout.total();
+    let mut x = vec![0.0; n];
+    let mut acc = vec![0.0; n];
+    let mut next = vec![0.0; n];
+    tensor_log_into(layout, a, out, &mut x, &mut acc, &mut next);
+}
+
+/// [`tensor_log`] with caller-provided scratch (`x`, `acc`, `next`, each of
+/// length `layout.total()`), so steady-state callers (the engine's
+/// log-signature plans) allocate nothing.
+pub fn tensor_log_into(
+    layout: &LevelLayout,
+    a: &[f64],
+    out: &mut [f64],
+    x: &mut [f64],
+    acc: &mut Vec<f64>,
+    next: &mut Vec<f64>,
+) {
     assert!((a[0] - 1.0).abs() < 1e-12, "tensor_log needs scalar 1");
     let n = layout.total();
-    let mut x = a.to_vec();
+    assert!(x.len() == n && acc.len() == n && next.len() == n);
+    x.copy_from_slice(a);
     x[0] = 0.0;
     // Horner over coefficients c_n = (-1)^{n+1}/n:
     // log = x(c1 + x(c2/c1... )) — simpler: acc = c_N; for k=N-1..1: acc = c_k + x ⊗ acc
@@ -198,15 +217,14 @@ pub fn tensor_log(layout: &LevelLayout, a: &[f64], out: &mut [f64]) {
         let s = if k % 2 == 1 { 1.0 } else { -1.0 };
         s / k as f64
     };
-    let mut acc = vec![0.0; n];
+    acc.fill(0.0);
     acc[0] = coef(depth);
     for k in (1..depth).rev() {
-        let mut next = vec![0.0; n];
-        tensor_prod(layout, &x, &acc, &mut next);
+        tensor_prod(layout, x, acc, next);
         next[0] += coef(k);
-        acc = next;
+        std::mem::swap(acc, next);
     }
-    tensor_prod(layout, &x, &acc, out);
+    tensor_prod(layout, x, acc, out);
 }
 
 /// Full inner product ⟨a, b⟩ = Σ_k ⟨a_k, b_k⟩ over the flat arrays (the

@@ -8,8 +8,8 @@
 pub mod alg;
 
 pub use alg::{
-    exp_increment, group_inverse, inner_product, tensor_exp, tensor_log, tensor_prod,
-    tensor_prod_accum, LevelLayout,
+    exp_increment, group_inverse, inner_product, tensor_exp, tensor_log, tensor_log_into,
+    tensor_prod, tensor_prod_accum, LevelLayout,
 };
 
 /// An element of the truncated free tensor algebra, owning its flat storage.

@@ -14,7 +14,7 @@
 //! `(lead, lag)` per the paper's definition.
 
 /// Which transformation to apply before the transform under computation.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Transform {
     /// Use the path as-is.
     None,

@@ -109,7 +109,13 @@ pub fn parallel_for_mut_ragged<T: Send, F: Fn(usize, &mut [T]) + Sync>(
         !bounds.is_empty() && bounds[0] == 0 && *bounds.last().unwrap() == out.len(),
         "bounds must span the output"
     );
-    debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+    // A real assert, not a debug_assert: the raw-pointer chunk construction
+    // below is only sound for non-decreasing bounds (disjointness), and this
+    // is a safe pub fn — O(n) next to the thread spawns it precedes.
+    assert!(
+        bounds.windows(2).all(|w| w[0] <= w[1]),
+        "bounds must be non-decreasing"
+    );
     let n = bounds.len() - 1;
     let threads = num_threads().min(n.max(1));
     if threads <= 1 || n <= 1 {

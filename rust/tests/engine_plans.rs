@@ -1,0 +1,319 @@
+//! Engine-layer acceptance tests: `ExecutionRecord::vjp` gradients for the
+//! full vjp family (signature, sig_kernel, gram, mmd2) against central
+//! finite differences AND bit-for-bit against the pre-existing
+//! `sig::backward` / `kernel::backward` entry points; plus the
+//! plan-cached-vs-one-shot bit-identity property on uniform and ragged
+//! batches.
+
+use pysiglib::engine::{Gradients, OpSpec, Plan, Session, ShapeClass};
+use pysiglib::kernel::KernelOptions;
+use pysiglib::sig::{sig_length, SigOptions};
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+fn fd_check(fd: f64, got: f64, what: &str) {
+    assert!(
+        (fd - got).abs() < 1e-6 * (1.0 + fd.abs()),
+        "{what}: finite difference {fd} vs vjp {got}"
+    );
+}
+
+#[test]
+fn signature_record_vjp_matches_fd_and_backward_bitwise() {
+    let mut rng = Rng::new(300);
+    let (b, l, d, depth) = (3usize, 5usize, 2usize, 3usize);
+    let data = rng.brownian_batch(b, l, d, 0.4);
+    let pb = PathBatch::uniform(&data, b, l, d).unwrap();
+    let opts = SigOptions::new(depth);
+    let slen = sig_length(d, depth);
+    let mut cot = vec![0.0; b * slen];
+    rng.fill_normal(&mut cot);
+
+    let plan = Plan::compile(OpSpec::Sig(opts), ShapeClass::uniform(d, l)).unwrap();
+    let rec = plan.execute(&pb).unwrap();
+    let gx = match rec.vjp(&cot).unwrap() {
+        Gradients::Single(g) => g,
+        _ => panic!("signature vjp is single-input"),
+    };
+
+    // Bit-for-bit identical to the pre-existing backward entry point.
+    for i in 0..b {
+        let want = pysiglib::sig::signature_vjp(
+            &data[i * l * d..(i + 1) * l * d],
+            l,
+            d,
+            depth,
+            pysiglib::transforms::Transform::None,
+            &cot[i * slen..(i + 1) * slen],
+        );
+        assert_eq!(&gx[i * l * d..(i + 1) * l * d], &want[..], "path {i}");
+    }
+
+    // Central finite differences on F = Σ_i <cot_i, S(x_i)>.
+    let f = |paths: &[f64]| -> f64 {
+        let pb = PathBatch::uniform(paths, b, l, d).unwrap();
+        let sigs = pysiglib::sig::try_batch_signature(&pb, &opts).unwrap();
+        sigs.iter().zip(cot.iter()).map(|(a, c)| a * c).sum()
+    };
+    let eps = 1e-5;
+    for idx in 0..b * l * d {
+        let mut p = data.clone();
+        p[idx] += eps;
+        let fp = f(&p);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&p);
+        fd_check((fp - fm) / (2.0 * eps), gx[idx], "signature");
+    }
+}
+
+#[test]
+fn sig_kernel_record_vjp_matches_fd_and_backward_bitwise() {
+    let mut rng = Rng::new(301);
+    let (b, d) = (3usize, 2usize);
+    let xl = [4usize, 1, 5];
+    let yl = [5usize, 3, 4];
+    let (mut xdata, mut ydata) = (Vec::new(), Vec::new());
+    for &l in &xl {
+        xdata.extend(rng.brownian_path(l, d, 0.4));
+    }
+    for &l in &yl {
+        ydata.extend(rng.brownian_path(l, d, 0.4));
+    }
+    let xb = PathBatch::ragged(&xdata, &xl, d).unwrap();
+    let yb = PathBatch::ragged(&ydata, &yl, d).unwrap();
+    let opts = KernelOptions::default().dyadic(1, 0);
+    let mut cot = vec![0.0; b];
+    rng.fill_normal(&mut cot);
+
+    let plan = Plan::compile(OpSpec::SigKernel(opts), ShapeClass::for_pair(&xb, &yb)).unwrap();
+    let rec = plan.execute_pair(&xb, &yb).unwrap();
+    // Forward values bit-match the one-shot kernel.
+    let ks = pysiglib::kernel::try_batch_kernel(&xb, &yb, &opts).unwrap();
+    assert_eq!(rec.values(), &ks[..]);
+    let (gx, gy) = match rec.vjp(&cot).unwrap() {
+        Gradients::Pair(gx, gy) => (gx, gy),
+        _ => panic!("kernel vjp is pair-input"),
+    };
+
+    // Bit-for-bit identical to the pre-existing Algorithm-4 entry point.
+    let xo = xb.element_offsets();
+    let yo = yb.element_offsets();
+    for i in 0..b {
+        let (wx, wy) = pysiglib::kernel::try_sig_kernel_vjp(
+            xb.path(i),
+            yb.path(i),
+            &opts,
+            cot[i],
+        )
+        .unwrap();
+        assert_eq!(&gx[xo[i]..xo[i + 1]], &wx[..], "pair {i} grad_x");
+        assert_eq!(&gy[yo[i]..yo[i + 1]], &wy[..], "pair {i} grad_y");
+    }
+
+    // Central finite differences on F = Σ_i cot_i · k(x_i, y_i).
+    let f = |xs: &[f64], ys: &[f64]| -> f64 {
+        let xb = PathBatch::ragged(xs, &xl, d).unwrap();
+        let yb = PathBatch::ragged(ys, &yl, d).unwrap();
+        let ks = pysiglib::kernel::try_batch_kernel(&xb, &yb, &opts).unwrap();
+        ks.iter().zip(cot.iter()).map(|(k, c)| k * c).sum()
+    };
+    let eps = 1e-6;
+    for idx in 0..xdata.len() {
+        let mut p = xdata.clone();
+        p[idx] += eps;
+        let fp = f(&p, &ydata);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&p, &ydata);
+        fd_check((fp - fm) / (2.0 * eps), gx[idx], "kernel grad_x");
+    }
+    for idx in 0..ydata.len() {
+        let mut p = ydata.clone();
+        p[idx] += eps;
+        let fp = f(&xdata, &p);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&xdata, &p);
+        fd_check((fp - fm) / (2.0 * eps), gy[idx], "kernel grad_y");
+    }
+}
+
+#[test]
+fn gram_record_vjp_matches_fd_and_backward_bitwise() {
+    let mut rng = Rng::new(302);
+    let (bx, by, l, d) = (2usize, 3usize, 4usize, 2usize);
+    let x = rng.brownian_batch(bx, l, d, 0.4);
+    let y = rng.brownian_batch(by, l, d, 0.4);
+    let xb = PathBatch::uniform(&x, bx, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, by, l, d).unwrap();
+    let opts = KernelOptions::default();
+    let mut w = vec![0.0; bx * by];
+    rng.fill_normal(&mut w);
+
+    let plan = Plan::compile(OpSpec::Gram(opts), ShapeClass::uniform(d, l)).unwrap();
+    let rec = plan.execute_pair(&xb, &yb).unwrap();
+    assert_eq!(
+        rec.values(),
+        &pysiglib::kernel::try_gram(&xb, &yb, &opts).unwrap()[..]
+    );
+    let (gx, gy) = match rec.vjp(&w).unwrap() {
+        Gradients::Pair(gx, gy) => (gx, gy),
+        _ => panic!("gram vjp is pair-input"),
+    };
+
+    // Bit-for-bit identical to the pre-existing gram backward.
+    let (wx, wy) = pysiglib::kernel::try_gram_vjp(&xb, &yb, &w, &opts).unwrap();
+    assert_eq!(gx, wx);
+    assert_eq!(gy, wy);
+
+    // Central finite differences on F = Σ W ∘ Gram.
+    let f = |xs: &[f64], ys: &[f64]| -> f64 {
+        let xb = PathBatch::uniform(xs, bx, l, d).unwrap();
+        let yb = PathBatch::uniform(ys, by, l, d).unwrap();
+        let g = pysiglib::kernel::try_gram(&xb, &yb, &opts).unwrap();
+        g.iter().zip(w.iter()).map(|(a, b)| a * b).sum()
+    };
+    let eps = 1e-6;
+    for idx in 0..x.len() {
+        let mut p = x.clone();
+        p[idx] += eps;
+        let fp = f(&p, &y);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&p, &y);
+        fd_check((fp - fm) / (2.0 * eps), gx[idx], "gram grad_x");
+    }
+    for idx in 0..y.len() {
+        let mut p = y.clone();
+        p[idx] += eps;
+        let fp = f(&x, &p);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&x, &p);
+        fd_check((fp - fm) / (2.0 * eps), gy[idx], "gram grad_y");
+    }
+}
+
+#[test]
+fn mmd2_record_vjp_matches_fd_and_backward_bitwise() {
+    let mut rng = Rng::new(303);
+    let (bx, by, l, d) = (3usize, 3usize, 4usize, 2usize);
+    let x = rng.brownian_batch(bx, l, d, 0.4);
+    let y = rng.brownian_batch(by, l, d, 0.5);
+    let xb = PathBatch::uniform(&x, bx, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, by, l, d).unwrap();
+    let opts = KernelOptions::default();
+
+    let plan = Plan::compile(OpSpec::Mmd2(opts), ShapeClass::uniform(d, l)).unwrap();
+    let rec = plan.execute_pair(&xb, &yb).unwrap();
+    let grad = match rec.vjp(&[1.0]).unwrap() {
+        Gradients::Single(g) => g,
+        _ => panic!("mmd2 vjp is single-gradient"),
+    };
+
+    // Bit-for-bit identical to the pre-existing entry point (value + grad).
+    let (value, want) = pysiglib::kernel::try_mmd2_with_grad(&xb, &yb, &opts).unwrap();
+    assert_eq!(rec.value(), value);
+    assert_eq!(grad, want);
+    // The record retains the three Gram matrices (forward intermediates).
+    let (kxx, kxy, kyy) = rec.mmd_grams().expect("retained grams");
+    assert_eq!((kxx.len(), kxy.len(), kyy.len()), (bx * bx, bx * by, by * by));
+
+    // Central finite differences on MMD²(x, y) w.r.t. x.
+    let f = |xs: &[f64]| -> f64 {
+        let xb = PathBatch::uniform(xs, bx, l, d).unwrap();
+        pysiglib::kernel::try_mmd2(&xb, &yb, &opts).unwrap()
+    };
+    let eps = 1e-5;
+    for idx in 0..x.len() {
+        let mut p = x.clone();
+        p[idx] += eps;
+        let fp = f(&p);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&p);
+        fd_check((fp - fm) / (2.0 * eps), grad[idx], "mmd2");
+    }
+}
+
+/// Plan-cached execution is bit-identical to one-shot execution, on uniform
+/// and ragged batches, across repeated warm-cache runs.
+#[test]
+fn cached_plans_bitmatch_one_shot_execution() {
+    let mut rng = Rng::new(304);
+    let session = Session::new();
+    let d = 2;
+    for trial in 0..6 {
+        let depth = 2 + trial % 3;
+        let opts = SigOptions::new(depth);
+        // Alternate uniform / ragged shapes.
+        let lengths: Vec<usize> = if trial % 2 == 0 {
+            vec![6; 4]
+        } else {
+            vec![3 + trial, 1, 7, 2]
+        };
+        let mut data = Vec::new();
+        for &l in &lengths {
+            data.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let pb = PathBatch::ragged(&data, &lengths, d).unwrap();
+        let one_shot = pysiglib::sig::try_batch_signature(&pb, &opts).unwrap();
+        // Twice through the session: the second lookup is a warm cache hit,
+        // and both executions are identical to one-shot.
+        for run in 0..2 {
+            let plan = session
+                .plan(OpSpec::Sig(opts), ShapeClass::for_batch(&pb))
+                .unwrap();
+            let rec = plan.execute(&pb).unwrap();
+            assert_eq!(rec.values(), &one_shot[..], "trial {trial} run {run}");
+        }
+    }
+    let stats = session.cache_stats();
+    assert!(stats.hits > 0, "repeated shape classes must hit: {stats:?}");
+
+    // Same property through the kernel/Gram route.
+    let xl = [4usize, 2, 6];
+    let yl = [3usize, 5, 2];
+    let (mut xdata, mut ydata) = (Vec::new(), Vec::new());
+    for &l in &xl {
+        xdata.extend(rng.brownian_path(l, d, 0.4));
+    }
+    for &l in &yl {
+        ydata.extend(rng.brownian_path(l, d, 0.4));
+    }
+    let xb = PathBatch::ragged(&xdata, &xl, d).unwrap();
+    let yb = PathBatch::ragged(&ydata, &yl, d).unwrap();
+    let kopts = KernelOptions::default().dyadic(1, 1);
+    let one_shot = pysiglib::kernel::try_gram(&xb, &yb, &kopts).unwrap();
+    let plan = session
+        .plan(OpSpec::Gram(kopts), ShapeClass::for_pair(&xb, &yb))
+        .unwrap();
+    for _ in 0..2 {
+        let rec = plan.execute_pair(&xb, &yb).unwrap();
+        assert_eq!(rec.values(), &one_shot[..]);
+    }
+}
+
+/// The steady state allocates nothing: executing the same plan twice on
+/// same-shape inputs leaves the workspace arena's allocation counter flat.
+#[test]
+fn warm_plans_allocate_nothing_for_sig_and_kernel_and_vjp_inputs() {
+    let mut rng = Rng::new(305);
+    let (b, l, d) = (5usize, 10usize, 3usize);
+    let data = rng.brownian_batch(b, l, d, 0.4);
+    let pb = PathBatch::uniform(&data, b, l, d).unwrap();
+
+    let plan = Plan::compile(OpSpec::Sig(SigOptions::new(3)), ShapeClass::uniform(d, l)).unwrap();
+    drop(plan.execute(&pb).unwrap());
+    let warm = plan.allocations();
+    drop(plan.execute(&pb).unwrap());
+    drop(plan.execute(&pb).unwrap());
+    assert_eq!(plan.allocations(), warm, "sig plan steady state");
+
+    let y = rng.brownian_batch(b, l, d, 0.4);
+    let yb = PathBatch::uniform(&y, b, l, d).unwrap();
+    let kplan = Plan::compile(
+        OpSpec::SigKernel(KernelOptions::default().dyadic(1, 1)),
+        ShapeClass::uniform(d, l),
+    )
+    .unwrap();
+    drop(kplan.execute_pair(&pb, &yb).unwrap());
+    let warm = kplan.allocations();
+    drop(kplan.execute_pair(&pb, &yb).unwrap());
+    assert_eq!(kplan.allocations(), warm, "kernel plan steady state");
+}

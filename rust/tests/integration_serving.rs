@@ -147,6 +147,34 @@ fn transform_and_grad_ops_over_the_wire() {
     assert!(pysiglib::util::linalg::max_abs_diff(&resp[16..], &gy) < 1e-12);
 }
 
+/// Repeated same-shape-group traffic is served through the router's LRU
+/// plan cache: after several flushes of the same (op, len, dim) class, the
+/// hit counter surfaced in the server metrics snapshot must be positive.
+#[test]
+fn repeated_shape_groups_hit_the_plan_cache() {
+    let (_h, addr, batcher) = start_server(4, 300);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(110);
+    // Sequential requests ⇒ each flush is its own batch; the first compiles
+    // the shape group's plan, later ones reuse it.
+    for _ in 0..4 {
+        let path = rng.brownian_path(14, 2, 0.5);
+        let resp = client.signature(&path, 14, 2, 3).unwrap().unwrap();
+        assert_eq!(resp.len(), pysiglib::sig::sig_length(2, 3));
+    }
+    let hits = batcher
+        .metrics
+        .plan_hits_total
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let misses = batcher
+        .metrics
+        .plan_misses_total
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(hits > 0, "plan cache hits must be observed (misses={misses})");
+    assert!(misses >= 1, "first request of the class compiles");
+    assert!(batcher.metrics.summary().contains("plan_hits="));
+}
+
 #[test]
 fn malformed_payload_gets_error_response() {
     let (_h, addr, _b) = start_server(4, 500);
