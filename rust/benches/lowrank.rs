@@ -1,0 +1,73 @@
+//! Low-rank vs exact signature-kernel Gram / MMD² scaling: the exact path
+//! is quadratic in corpus size n (n² PDE solves for one Gram), the Nyström
+//! and random-signature-feature paths are O(n·r²) at rank r. The suite
+//! sweeps n at fixed r = 32 and records both, plus the rank sweep at fixed
+//! n, into `bench_results/BENCH_lowrank.json`.
+
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::kernel::{
+    try_gram, try_gram_lowrank, try_mmd2, try_mmd2_lowrank, FeatureMap, KernelOptions,
+    LowRankSpec,
+};
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+fn main() {
+    let runs = bench_runs(5);
+    let (l, d, rank) = (32usize, 3usize, 32usize);
+    let opts = KernelOptions::default();
+    let mut suite = Suite::new("lowrank");
+    for n in [64usize, 128, 256] {
+        let tag = format!("n{n}");
+        let mut rng = Rng::new(90);
+        let x = rng.brownian_batch(n, l, d, 0.3);
+        let y = rng.brownian_batch(n, l, d, 0.35);
+        let xb = PathBatch::uniform(&x, n, l, d).unwrap();
+        let yb = PathBatch::uniform(&y, n, l, d).unwrap();
+
+        suite.time(&format!("{tag}/gram/exact"), runs, || {
+            std::hint::black_box(try_gram(&xb, &yb, &opts).unwrap());
+        });
+        // Build + featurise + multiply every run: the honest end-to-end
+        // cost of the approximation, not just the GEMM.
+        suite.time(&format!("{tag}/gram/nystrom_r{rank}"), runs, || {
+            let map = FeatureMap::try_build(&LowRankSpec::nystrom(rank, 7), &opts, &yb).unwrap();
+            std::hint::black_box(try_gram_lowrank(&map, &xb, &yb).unwrap());
+        });
+        suite.time(&format!("{tag}/gram/randsig_r{rank}"), runs, || {
+            let map =
+                FeatureMap::try_build(&LowRankSpec::random_sig(rank, 4, 7), &opts, &yb).unwrap();
+            std::hint::black_box(try_gram_lowrank(&map, &xb, &yb).unwrap());
+        });
+
+        suite.time(&format!("{tag}/mmd2/exact"), runs, || {
+            std::hint::black_box(try_mmd2(&xb, &yb, &opts).unwrap());
+        });
+        suite.time(&format!("{tag}/mmd2/nystrom_r{rank}"), runs, || {
+            let map = FeatureMap::try_build(&LowRankSpec::nystrom(rank, 7), &opts, &yb).unwrap();
+            std::hint::black_box(try_mmd2_lowrank(&map, &xb, &yb).unwrap());
+        });
+
+        // Derived speedup rows for the JSON trajectory.
+        if let (Some(exact), Some(lr)) = (
+            suite.get(&format!("{tag}/gram/exact")),
+            suite.get(&format!("{tag}/gram/nystrom_r{rank}")),
+        ) {
+            suite.record(&format!("{tag}/gram/speedup_nystrom_x"), exact / lr);
+        }
+    }
+
+    // Rank sweep at the largest corpus: accuracy/cost knob.
+    let n = 256usize;
+    let mut rng = Rng::new(91);
+    let x = rng.brownian_batch(n, l, d, 0.3);
+    let y = rng.brownian_batch(n, l, d, 0.35);
+    let xb = PathBatch::uniform(&x, n, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, n, l, d).unwrap();
+    for r in [8usize, 32, 128] {
+        suite.time(&format!("rank_sweep_n{n}/gram/nystrom_r{r}"), runs, || {
+            let map = FeatureMap::try_build(&LowRankSpec::nystrom(r, 7), &opts, &yb).unwrap();
+            std::hint::black_box(try_gram_lowrank(&map, &xb, &yb).unwrap());
+        });
+    }
+}

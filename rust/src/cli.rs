@@ -29,6 +29,16 @@ COMMANDS:
              --batch N --len L --dim D --dyadic λ --dyadic2 λ2
              --solver row|blocked --transform ... --repeat R
              --ragged   variable-length (x, y) pairs in [L/2, L]
+             --lifted linear|rbf [--sigma S]  static-kernel lift (drives the
+                        PDE with κ's second difference instead of ⟨dx, dy⟩;
+                        ignores --transform/--solver/--repeat)
+  mmd        signature-kernel MMD² between two synthetic corpora
+             --batch N --len L --dim D --dyadic λ --transform ...
+             --unbiased        U-statistic instead of the biased V-statistic
+             --rank R          low-rank approximation (0 = exact Gram path)
+             --landmarks R     Nyström with R landmarks (implies --rank R)
+             --features nystrom|randsig  --depth N (randsig truncation)
+             --seed S          landmark / sketch seed
   grad       exact signature-kernel gradients for a batch of pairs
   serve      run the serving coordinator
              --bind ADDR --max-batch N --max-wait-us U --pjrt --config FILE
@@ -81,6 +91,7 @@ pub fn cli_main(args: &[String]) -> i32 {
     match cmd {
         "sig" | "logsig" => cmd_sig(cmd == "logsig", &flags),
         "kernel" => cmd_kernel(&flags),
+        "mmd" => cmd_mmd(&flags),
         "grad" => cmd_grad(&flags),
         "serve" => cmd_serve(&flags),
         "client" => cmd_client(&flags),
@@ -223,12 +234,70 @@ fn cmd_sig_ragged(
     0
 }
 
+/// The `--lifted` route of the kernel command: static-kernel lifts
+/// (`StaticKernel::Linear` recovers the plain kernel; `Rbf` lifts the path
+/// values into an RBF feature space before the PDE solve).
+fn cmd_kernel_lifted(
+    kind: &str,
+    batch: usize,
+    len: usize,
+    dim: usize,
+    lam1: u32,
+    lam2: u32,
+    flags: &HashMap<String, String>,
+) -> i32 {
+    let sigma = flags
+        .get("sigma")
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(1.0);
+    let kappa = match kind {
+        "linear" => crate::kernel::StaticKernel::Linear,
+        "rbf" => crate::kernel::StaticKernel::Rbf { sigma },
+        other => {
+            eprintln!("unknown static kernel '{other}' (expected linear|rbf)");
+            return 2;
+        }
+    };
+    if len < 2 {
+        eprintln!("--lifted needs paths of at least 2 points");
+        return 2;
+    }
+    let mut rng = Rng::new(43);
+    let x = rng.brownian_batch(batch, len, dim, 0.3);
+    let y = rng.brownian_batch(batch, len, dim, 0.3);
+    let mut ks = vec![0.0; batch];
+    let t = std::time::Instant::now();
+    crate::util::pool::parallel_for_mut(&mut ks, 1, |i, slot| {
+        slot[0] = crate::kernel::sig_kernel_lifted(
+            &x[i * len * dim..(i + 1) * len * dim],
+            &y[i * len * dim..(i + 1) * len * dim],
+            len,
+            len,
+            dim,
+            kappa,
+            lam1,
+            lam2,
+        );
+    });
+    let dt = t.elapsed().as_secs_f64();
+    println!("kernel batch={batch} len={len} dim={dim} dyadic=({lam1},{lam2}) lifted={kappa:?}");
+    println!(
+        "time={dt:.6}s  throughput={:.1} kernels/s  mean_k={:.6}",
+        batch as f64 / dt,
+        ks.iter().sum::<f64>() / batch.max(1) as f64
+    );
+    0
+}
+
 fn cmd_kernel(flags: &HashMap<String, String>) -> i32 {
     let batch = flag_usize(flags, "batch", 32);
     let len = flag_usize(flags, "len", 128);
     let dim = flag_usize(flags, "dim", 4);
     let lam1 = flag_usize(flags, "dyadic", 0) as u32;
     let lam2 = flag_usize(flags, "dyadic2", lam1 as usize) as u32;
+    if let Some(kind) = flags.get("lifted") {
+        return cmd_kernel_lifted(kind, batch, len, dim, lam1, lam2, flags);
+    }
     let solver = match flags.get("solver").map(String::as_str) {
         Some("blocked") => SolverKind::Blocked,
         _ => SolverKind::Row,
@@ -322,6 +391,101 @@ fn cmd_kernel(flags: &HashMap<String, String>) -> i32 {
         batch as f64 / dt,
         ks.iter().sum::<f64>() / batch.max(1) as f64
     );
+    0
+}
+
+/// MMD² between two synthetic corpora — exact (quadratic in batch) or
+/// rank-budgeted through the low-rank feature maps (`--rank`/`--landmarks`).
+fn cmd_mmd(flags: &HashMap<String, String>) -> i32 {
+    let batch = flag_usize(flags, "batch", 32);
+    let len = flag_usize(flags, "len", 64);
+    let dim = flag_usize(flags, "dim", 3);
+    let lam = flag_usize(flags, "dyadic", 0) as u32;
+    let tr = flag_transform(flags);
+    let unbiased = flags.contains_key("unbiased");
+    let seed = flag_usize(flags, "seed", 7) as u64;
+    // --landmarks N is Nyström shorthand; --rank + --features picks a family.
+    let landmarks = flag_usize(flags, "landmarks", 0);
+    if landmarks > 0 && flags.get("features").map(String::as_str) == Some("randsig") {
+        eprintln!("--landmarks selects Nyström; it cannot be combined with --features randsig");
+        return 2;
+    }
+    let rank = if landmarks > 0 {
+        landmarks
+    } else {
+        flag_usize(flags, "rank", 0)
+    };
+    let opts = KernelOptions::default().dyadic(lam, lam).transform(tr);
+    let mut rng = Rng::new(48);
+    // Two corpora of slightly different scale, so the MMD is nonzero.
+    let x = rng.brownian_batch(batch, len, dim, 0.30);
+    let y = rng.brownian_batch(batch, len, dim, 0.35);
+    let (xb, yb) = match (
+        crate::path::PathBatch::uniform(&x, batch, len, dim),
+        crate::path::PathBatch::uniform(&y, batch, len, dim),
+    ) {
+        (Ok(xb), Ok(yb)) => (xb, yb),
+        _ => {
+            eprintln!("invalid batch");
+            return 2;
+        }
+    };
+    let estimator = if unbiased { "unbiased" } else { "biased" };
+    let t = std::time::Instant::now();
+    let (value, desc) = if rank == 0 {
+        let r = if unbiased {
+            crate::kernel::try_mmd2_unbiased(&xb, &yb, &opts)
+        } else {
+            crate::kernel::try_mmd2(&xb, &yb, &opts)
+        };
+        match r {
+            Ok(v) => (v, "exact".to_string()),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let spec = match flags.get("features").map(String::as_str) {
+            Some("randsig") => crate::kernel::LowRankSpec::random_sig(
+                rank,
+                flag_usize(flags, "depth", 4),
+                seed,
+            ),
+            Some("nystrom") | None => crate::kernel::LowRankSpec::nystrom(rank, seed),
+            Some(other) => {
+                eprintln!("unknown feature family '{other}' (expected nystrom|randsig)");
+                return 2;
+            }
+        };
+        // Landmarks from y — the same convention as the engine's
+        // Mmd2LowRank plans (exact x-gradients for training loops).
+        let map = match crate::kernel::FeatureMap::try_build(&spec, &opts, &yb) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("feature map construction failed: {e}");
+                return 1;
+            }
+        };
+        let r = if unbiased {
+            crate::kernel::try_mmd2_lowrank_unbiased(&map, &xb, &yb)
+        } else {
+            crate::kernel::try_mmd2_lowrank(&map, &xb, &yb)
+        };
+        use crate::kernel::LowRankFeatures;
+        match r {
+            Ok(v) => (v, format!("lowrank rank={}", map.rank())),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    };
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "mmd batch={batch} len={len} dim={dim} dyadic={lam} transform={tr:?} estimator={estimator} ({desc})"
+    );
+    println!("time={dt:.6}s  mmd2={value:.6e}");
     0
 }
 

@@ -27,6 +27,11 @@ pub use wire::{Frame, RaggedFrame, RequestFrame};
 
 use crate::transforms::Transform;
 
+/// Seed the router uses for wire-requested low-rank ops (the wire header
+/// has no seed field; a fixed seed keeps repeated requests deterministic
+/// and cache-friendly).
+pub const WIRE_LOWRANK_SEED: u64 = 0x51_6c0_3a11;
+
 /// Operations the coordinator serves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Op {
@@ -38,6 +43,12 @@ pub enum Op {
     SigKernel { lam1: u32, lam2: u32, transform: u8 },
     /// Exact gradient of the signature kernel w.r.t. both paths.
     SigKernelGrad { lam1: u32, lam2: u32 },
+    /// Low-rank (Nyström, `rank` landmarks) biased MMD² between the first
+    /// `nx` paths and the rest of a ragged frame. Ragged frames only.
+    Mmd2LowRank { rank: u32, nx: u32, transform: u8 },
+    /// Low-rank cross-Gram `[nx, rest]` with the same split convention.
+    /// Ragged frames only.
+    GramLowRank { rank: u32, nx: u32, transform: u8 },
 }
 
 impl Op {
@@ -47,6 +58,8 @@ impl Op {
             Op::LogSignature { .. } => 2,
             Op::SigKernel { .. } => 3,
             Op::SigKernelGrad { .. } => 4,
+            Op::Mmd2LowRank { .. } => 5,
+            Op::GramLowRank { .. } => 6,
         }
     }
 }

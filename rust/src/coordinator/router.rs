@@ -12,8 +12,9 @@
 use std::sync::Arc;
 
 use crate::coordinator::wire::RaggedFrame;
-use crate::coordinator::{transform_from_u8, Op, Request, Response};
+use crate::coordinator::{transform_from_u8, Op, Request, Response, WIRE_LOWRANK_SEED};
 use crate::engine::{CacheStats, OpSpec, PlanCache, ShapeClass};
+use crate::kernel::lowrank::LowRankSpec;
 use crate::kernel::KernelOptions;
 use crate::path::{PathBatch, SigError};
 use crate::runtime::RuntimeHandle;
@@ -87,6 +88,33 @@ impl Router {
                 OpSpec::SigKernel(KernelOptions::default().dyadic(lam1, lam2)),
                 true,
             )),
+            // The wire's rank field selects a Nyström budget; the seed is
+            // fixed (WIRE_LOWRANK_SEED) so repeated requests are
+            // deterministic and share a cached plan.
+            Op::Mmd2LowRank {
+                rank, transform, ..
+            } => {
+                let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
+                Ok((
+                    OpSpec::Mmd2LowRank {
+                        opts: KernelOptions::default().transform(tr),
+                        lowrank: LowRankSpec::nystrom(rank as usize, WIRE_LOWRANK_SEED),
+                    },
+                    false,
+                ))
+            }
+            Op::GramLowRank {
+                rank, transform, ..
+            } => {
+                let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
+                Ok((
+                    OpSpec::GramLowRank {
+                        opts: KernelOptions::default().transform(tr),
+                        lowrank: LowRankSpec::nystrom(rank as usize, WIRE_LOWRANK_SEED),
+                    },
+                    false,
+                ))
+            }
         }
     }
 
@@ -239,6 +267,27 @@ impl Router {
                 }
                 Ok(out)
             }
+            Op::Mmd2LowRank { nx, .. } | Op::GramLowRank { nx, .. } => {
+                // Split the frame's paths at nx into the two corpora
+                // (validated at decode; re-checked here because frames can
+                // also be constructed programmatically).
+                let nx = nx as usize;
+                let b = pb.batch();
+                if nx == 0 || nx >= b {
+                    return Err(SigError::Protocol(format!(
+                        "low-rank op splits {b} paths at nx={nx}; both sides must be non-empty"
+                    )));
+                }
+                let dim = frame.dim;
+                let split = pb.offsets()[nx] * dim;
+                let xl: Vec<usize> = (0..nx).map(|i| pb.len_of(i)).collect();
+                let yl: Vec<usize> = (nx..b).map(|i| pb.len_of(i)).collect();
+                let xb = PathBatch::ragged(&frame.values[..split], &xl, dim)?;
+                let yb = PathBatch::ragged(&frame.values[split..], &yl, dim)?;
+                let shape = ShapeClass::for_pair(&xb, &yb).bucketed();
+                let plan = self.plans.get_or_compile(spec, shape, retain, None)?;
+                Ok(plan.execute_pair(&xb, &yb)?.into_values())
+            }
         }
     }
 
@@ -346,6 +395,12 @@ impl Router {
                         .collect(),
                     Err(e) => errs(e.to_string()),
                 }
+            }
+            Op::Mmd2LowRank { .. } | Op::GramLowRank { .. } => {
+                // Corpus-level ops have no single-path form; the wire
+                // rejects these frames at decode, so this only guards
+                // programmatic construction.
+                errs("low-rank ops require a ragged-batch frame".to_string())
             }
         }
     }
@@ -647,6 +702,79 @@ mod tests {
             );
             assert_eq!(out[p], want, "pair {p}");
         }
+    }
+
+    /// Low-rank frames split at nx and bit-match direct engine execution
+    /// with the wire's fixed seed.
+    #[test]
+    fn ragged_frame_lowrank_ops_match_engine_execution() {
+        let router = Router::native_only();
+        let mut rng = Rng::new(13);
+        let d = 2;
+        let xl = [4usize, 6, 5];
+        let yl = [3usize, 5, 4, 6];
+        let mut values = Vec::new();
+        for &l in xl.iter().chain(yl.iter()) {
+            values.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let lengths: Vec<usize> = xl.iter().chain(yl.iter()).copied().collect();
+        let rank = 3u32;
+        let frame = RaggedFrame {
+            op: Op::Mmd2LowRank {
+                rank,
+                nx: xl.len() as u32,
+                transform: 0,
+            },
+            dim: d,
+            lengths: lengths.clone(),
+            values: values.clone(),
+        };
+        let out = router.execute_ragged(&frame).unwrap();
+        assert_eq!(out.len(), 1);
+        // Reference: the same engine plan executed directly.
+        let split = xl.iter().sum::<usize>() * d;
+        let xb = PathBatch::ragged(&values[..split], &xl, d).unwrap();
+        let yb = PathBatch::ragged(&values[split..], &yl, d).unwrap();
+        let spec = OpSpec::Mmd2LowRank {
+            opts: KernelOptions::default(),
+            lowrank: LowRankSpec::nystrom(rank as usize, WIRE_LOWRANK_SEED),
+        };
+        let plan = crate::engine::Plan::compile_forward(
+            spec,
+            ShapeClass::for_pair(&xb, &yb).bucketed(),
+        )
+        .unwrap();
+        let want = plan.execute_pair(&xb, &yb).unwrap().value();
+        assert_eq!(out[0], want);
+        // Gram variant: [nx, b - nx] values.
+        let gframe = RaggedFrame {
+            op: Op::GramLowRank {
+                rank,
+                nx: xl.len() as u32,
+                transform: 0,
+            },
+            dim: d,
+            lengths,
+            values: values.clone(),
+        };
+        let gout = router.execute_ragged(&gframe).unwrap();
+        assert_eq!(gout.len(), xl.len() * yl.len());
+        assert!(gout.iter().all(|v| v.is_finite()));
+        // A bad split from a programmatic frame is an error, not a panic.
+        let bad = RaggedFrame {
+            op: Op::Mmd2LowRank {
+                rank,
+                nx: 7,
+                transform: 0,
+            },
+            dim: d,
+            lengths: xl.to_vec(),
+            values: values[..split].to_vec(),
+        };
+        assert!(matches!(
+            router.execute_ragged(&bad),
+            Err(SigError::Protocol(_))
+        ));
     }
 
     #[test]

@@ -258,6 +258,34 @@ impl Client {
         Ok(r.map(|v| v[0]))
     }
 
+    /// Convenience: low-rank (Nyström, `rank` landmarks) MMD² between two
+    /// corpora of arbitrary-length paths in one round trip.
+    pub fn mmd2_lowrank(
+        &mut self,
+        xs: &[&[f64]],
+        ys: &[&[f64]],
+        dim: usize,
+        rank: u32,
+    ) -> std::io::Result<Result<f64, String>> {
+        let mut lengths = Vec::with_capacity(xs.len() + ys.len());
+        let mut values = Vec::new();
+        for p in xs.iter().chain(ys.iter()) {
+            lengths.push(if dim == 0 { 0 } else { p.len() / dim });
+            values.extend_from_slice(p);
+        }
+        let r = self.call_ragged(
+            Op::Mmd2LowRank {
+                rank,
+                nx: xs.len() as u32,
+                transform: 0,
+            },
+            dim,
+            lengths,
+            values,
+        )?;
+        Ok(r.map(|v| v[0]))
+    }
+
     /// Convenience: signature kernels of (x_i, y_i) pairs of arbitrary
     /// lengths in one round trip. Returns `[pairs]`.
     pub fn sig_kernel_ragged(

@@ -91,6 +91,16 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
             transform,
         } => (3, lam1, lam2, transform as u32),
         Op::SigKernelGrad { lam1, lam2 } => (4, lam1, lam2, 0),
+        Op::Mmd2LowRank {
+            rank,
+            nx,
+            transform,
+        } => (5, rank, nx, transform as u32),
+        Op::GramLowRank {
+            rank,
+            nx,
+            transform,
+        } => (6, rank, nx, transform as u32),
     }
 }
 
@@ -114,6 +124,16 @@ fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
             transform,
         }),
         4 => Ok(Op::SigKernelGrad { lam1: p1, lam2: p2 }),
+        5 => Ok(Op::Mmd2LowRank {
+            rank: p1,
+            nx: p2,
+            transform,
+        }),
+        6 => Ok(Op::GramLowRank {
+            rank: p1,
+            nx: p2,
+            transform,
+        }),
         other => Err(SigError::Protocol(format!("unknown op code {other}"))),
     }
 }
@@ -193,6 +213,12 @@ fn read_f64s<R: Read>(r: &mut R, n: usize) -> std::io::Result<Vec<f64>> {
 /// Validate a single frame's shape against its op. The payload has already
 /// been consumed, so a failure here leaves the stream at a frame boundary.
 fn validate_single(op: Op, len: usize, dim: usize, n_values: usize) -> Result<(), SigError> {
+    if matches!(op, Op::Mmd2LowRank { .. } | Op::GramLowRank { .. }) {
+        return Err(SigError::Protocol(
+            "low-rank ops take a ragged-batch frame (two corpora), not a single-path frame"
+                .to_string(),
+        ));
+    }
     if dim == 0 {
         return Err(SigError::ZeroDim);
     }
@@ -233,6 +259,17 @@ fn validate_ragged(
             "kernel ops need (x, y) length pairs; got {} lengths",
             lengths.len()
         )));
+    }
+    // Low-rank ops split the frame's paths at `nx`: both corpora must be
+    // non-empty for the split to be meaningful.
+    if let Op::Mmd2LowRank { nx, .. } | Op::GramLowRank { nx, .. } = op {
+        let nx = nx as usize;
+        if nx == 0 || nx >= lengths.len() {
+            return Err(SigError::Protocol(format!(
+                "low-rank op splits {} paths at nx={nx}; both sides must be non-empty",
+                lengths.len()
+            )));
+        }
     }
     let mut total = 0usize;
     for &l in lengths {
@@ -536,6 +573,74 @@ mod tests {
         buf.extend_from_slice(&2.0f64.to_le_bytes());
         let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
         assert_eq!(got, Err(SigError::BadTransform(9)));
+    }
+
+    #[test]
+    fn lowrank_ops_roundtrip_with_rank_field() {
+        let frame = RaggedFrame {
+            op: Op::Mmd2LowRank {
+                rank: 4,
+                nx: 2,
+                transform: 0,
+            },
+            dim: 1,
+            lengths: vec![2, 3, 4],
+            values: (0..9).map(|v| v as f64).collect(),
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        // Not a paired op: every path counts once.
+        assert_eq!(frame.batch(), 3);
+        assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
+        let gram = RaggedFrame {
+            op: Op::GramLowRank {
+                rank: 8,
+                nx: 1,
+                transform: 1,
+            },
+            dim: 2,
+            lengths: vec![2, 2],
+            values: vec![0.0; 8],
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &gram).unwrap();
+        assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(gram));
+    }
+
+    #[test]
+    fn lowrank_ops_reject_bad_split_and_single_frames() {
+        // nx out of range (0 or >= path count) is a soft error.
+        for nx in [0u32, 3, 9] {
+            let frame = RaggedFrame {
+                op: Op::Mmd2LowRank {
+                    rank: 2,
+                    nx,
+                    transform: 0,
+                },
+                dim: 1,
+                lengths: vec![2, 3, 4],
+                values: vec![0.0; 9],
+            };
+            let mut buf = Vec::new();
+            write_ragged_request(&mut buf, &frame).unwrap();
+            let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+            assert!(matches!(got, Err(SigError::Protocol(_))), "nx={nx}: {got:?}");
+        }
+        // A single-path frame cannot carry a low-rank op.
+        let f = Frame {
+            op: Op::GramLowRank {
+                rank: 2,
+                nx: 1,
+                transform: 0,
+            },
+            len: 2,
+            dim: 1,
+            values: vec![0.0, 1.0],
+        };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &f).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
     }
 
     #[test]

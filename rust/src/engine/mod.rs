@@ -47,9 +47,10 @@ pub use arena::Arena;
 pub use cache::{CacheStats, PlanCache, Session};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::kernel::krr::KernelRidge;
+use crate::kernel::lowrank::{FeatureMap, LowRankFeatures, LowRankRidge, LowRankSpec};
 use crate::kernel::{KernelOptions, SolverKind};
 use crate::path::{PathBatch, SigError, SigOptions};
 use crate::runtime::RuntimeHandle;
@@ -76,11 +77,35 @@ pub enum OpSpec {
     Gram(KernelOptions),
     /// Biased MMD² estimator between two path distributions.
     Mmd2(KernelOptions),
+    /// Unbiased MMD² estimator (U-statistic; Kxx/Kyy diagonals excluded) —
+    /// the two-sample-testing variant.
+    Mmd2Unbiased(KernelOptions),
     /// Kernel ridge regression fit (alpha coefficients as output values).
     Krr {
         opts: KernelOptions,
         lambda: f64,
         normalize: bool,
+    },
+    /// Low-rank Gram matrix Φx·Φyᵀ through an explicit rank-r feature map
+    /// (Nyström landmarks drawn from the second batch, or random signature
+    /// features) — O(n·r²) against the exact Gram's O(n²·L²).
+    GramLowRank {
+        opts: KernelOptions,
+        lowrank: LowRankSpec,
+    },
+    /// Low-rank biased MMD²: ‖mean Φx − mean Φy‖². Records retain the
+    /// feature matrices; `vjp` maps feature cotangents back to path space
+    /// through the exact kernel/signature backward machinery.
+    Mmd2LowRank {
+        opts: KernelOptions,
+        lowrank: LowRankSpec,
+    },
+    /// Low-rank kernel ridge regression: r×r normal equations in feature
+    /// space (weights as output values).
+    KrrLowRank {
+        opts: KernelOptions,
+        lowrank: LowRankSpec,
+        lambda: f64,
     },
 }
 
@@ -93,27 +118,36 @@ impl OpSpec {
             OpSpec::SigKernel(_) => "sig_kernel",
             OpSpec::Gram(_) => "gram",
             OpSpec::Mmd2(_) => "mmd2",
+            OpSpec::Mmd2Unbiased(_) => "mmd2_unbiased",
             OpSpec::Krr { .. } => "krr",
+            OpSpec::GramLowRank { .. } => "gram_lowrank",
+            OpSpec::Mmd2LowRank { .. } => "mmd2_lowrank",
+            OpSpec::KrrLowRank { .. } => "krr_lowrank",
         }
     }
 
-    /// Cache key for cacheable specs (`Krr` carries an `f64` and is compiled
-    /// fresh each time). The key embeds the option structs whole, so any
-    /// field added to `SigOptions`/`KernelOptions`/`ExecOptions` later
+    /// Cache key for cacheable specs (the KRR variants carry an `f64` and
+    /// are compiled fresh each time). The key embeds the option structs
+    /// whole, so any field added to
+    /// `SigOptions`/`KernelOptions`/`ExecOptions`/`LowRankSpec` later
     /// participates automatically — no hand-maintained digest to drift.
     pub(crate) fn cache_key(&self, shape: ShapeClass, retain: bool) -> Option<PlanKey> {
-        let (kind, sig, kernel) = match self {
-            OpSpec::Sig(o) => (0u8, Some(*o), None),
-            OpSpec::LogSig(o) => (1, Some(*o), None),
-            OpSpec::SigKernel(k) => (2, None, Some(*k)),
-            OpSpec::Gram(k) => (3, None, Some(*k)),
-            OpSpec::Mmd2(k) => (4, None, Some(*k)),
-            OpSpec::Krr { .. } => return None,
+        let (kind, sig, kernel, lowrank) = match self {
+            OpSpec::Sig(o) => (0u8, Some(*o), None, None),
+            OpSpec::LogSig(o) => (1, Some(*o), None, None),
+            OpSpec::SigKernel(k) => (2, None, Some(*k), None),
+            OpSpec::Gram(k) => (3, None, Some(*k), None),
+            OpSpec::Mmd2(k) => (4, None, Some(*k), None),
+            OpSpec::Mmd2Unbiased(k) => (5, None, Some(*k), None),
+            OpSpec::GramLowRank { opts, lowrank } => (6, None, Some(*opts), Some(*lowrank)),
+            OpSpec::Mmd2LowRank { opts, lowrank } => (7, None, Some(*opts), Some(*lowrank)),
+            OpSpec::Krr { .. } | OpSpec::KrrLowRank { .. } => return None,
         };
         Some(PlanKey {
             kind,
             sig,
             kernel,
+            lowrank,
             shape,
             retain,
         })
@@ -127,6 +161,7 @@ pub struct PlanKey {
     kind: u8,
     sig: Option<SigOptions>,
     kernel: Option<KernelOptions>,
+    lowrank: Option<LowRankSpec>,
     shape: ShapeClass,
     retain: bool,
 }
@@ -228,6 +263,42 @@ pub struct Plan {
     /// Signature row length (signature ops).
     slen: usize,
     arena: Arena,
+    /// Warm state for low-rank plans: the feature map (and Φy) depend only
+    /// on (spec, reference batch y), and training loops execute the same
+    /// reference thousands of times — rebuilding the landmark Gram and
+    /// re-featurising y per call would redo ~half the PDE work.
+    lowrank_warm: Mutex<Option<LowRankWarm>>,
+}
+
+/// Cached feature map + reference features of a low-rank plan, valid while
+/// the reference batch is byte-identical (checked exactly, not by hash).
+struct LowRankWarm {
+    y_data: Vec<f64>,
+    y_lengths: Vec<usize>,
+    map: Arc<FeatureMap>,
+    phi_y: Vec<f64>,
+}
+
+/// Compile-time validation of a low-rank spec against the shape class: rank
+/// and (for random signature features) the sketch's signature length must be
+/// sane before any execute touches data.
+fn validate_lowrank_spec(
+    spec: &LowRankSpec,
+    opts: &KernelOptions,
+    shape: &ShapeClass,
+) -> Result<(), SigError> {
+    spec.validate()?;
+    if let crate::kernel::lowrank::LowRankMethod::RandomSig { depth, .. } = spec.method {
+        let out_dim = opts.exec.transform.out_dim(shape.dim);
+        let slen = crate::sig::try_sig_length(out_dim, depth)?;
+        // Same bound `RandomSigFeatures::try_new` enforces — a spec that
+        // compiles must not fail sketch construction at execute.
+        spec.rank
+            .checked_mul(slen)
+            .filter(|&t| t <= crate::kernel::lowrank::randsig::MAX_SKETCH)
+            .ok_or(SigError::TooLarge("random signature sketch"))?;
+    }
+    Ok(())
 }
 
 fn validate_kernel_spec(k: &KernelOptions, shape: &ShapeClass) -> Result<(), SigError> {
@@ -283,11 +354,26 @@ impl Plan {
                 slen = crate::sig::try_sig_length(od, o.depth)?;
                 layout = Some(LevelLayout::new(od, o.depth));
             }
-            OpSpec::SigKernel(k) | OpSpec::Gram(k) | OpSpec::Mmd2(k) => {
+            OpSpec::SigKernel(k) | OpSpec::Gram(k) | OpSpec::Mmd2(k) | OpSpec::Mmd2Unbiased(k) => {
                 validate_kernel_spec(k, &shape)?;
             }
             OpSpec::Krr { opts, lambda, .. } => {
                 validate_kernel_spec(opts, &shape)?;
+                if !(*lambda > 0.0) {
+                    return Err(SigError::NonFinite("ridge λ must be positive"));
+                }
+            }
+            OpSpec::GramLowRank { opts, lowrank } | OpSpec::Mmd2LowRank { opts, lowrank } => {
+                validate_kernel_spec(opts, &shape)?;
+                validate_lowrank_spec(lowrank, opts, &shape)?;
+            }
+            OpSpec::KrrLowRank {
+                opts,
+                lowrank,
+                lambda,
+            } => {
+                validate_kernel_spec(opts, &shape)?;
+                validate_lowrank_spec(lowrank, opts, &shape)?;
                 if !(*lambda > 0.0) {
                     return Err(SigError::NonFinite("ridge λ must be positive"));
                 }
@@ -315,6 +401,7 @@ impl Plan {
             layout,
             slen,
             arena: Arena::new(),
+            lowrank_warm: Mutex::new(None),
         })
     }
 
@@ -467,7 +554,10 @@ impl Plan {
         y: &PathBatch<'_>,
     ) -> Result<ExecutionRecord, SigError> {
         let k = match &self.spec {
-            OpSpec::SigKernel(k) | OpSpec::Gram(k) | OpSpec::Mmd2(k) => *k,
+            OpSpec::SigKernel(k) | OpSpec::Gram(k) | OpSpec::Mmd2(k) | OpSpec::Mmd2Unbiased(k) => {
+                *k
+            }
+            OpSpec::GramLowRank { opts, .. } | OpSpec::Mmd2LowRank { opts, .. } => *opts,
             _ => {
                 return Err(SigError::Invalid(
                     "this plan takes a single batch; use execute / execute_fit",
@@ -492,26 +582,57 @@ impl Plan {
         match self.spec {
             OpSpec::SigKernel(_) => self.exec_paired_kernel(x, y, &k),
             OpSpec::Gram(_) => self.exec_gram(x, y, &k),
-            OpSpec::Mmd2(_) => self.exec_mmd2(x, y, &k),
+            OpSpec::Mmd2(_) => self.exec_mmd2(x, y, &k, true),
+            OpSpec::Mmd2Unbiased(_) => self.exec_mmd2(x, y, &k, false),
+            OpSpec::GramLowRank { lowrank, .. } => self.exec_lowrank(x, y, &k, &lowrank, true),
+            OpSpec::Mmd2LowRank { lowrank, .. } => self.exec_lowrank(x, y, &k, &lowrank, false),
             _ => unreachable!(),
         }
     }
 
-    /// Execute a KRR plan: fit dual coefficients on `x` with targets `y`.
+    /// Execute a KRR plan (exact or low-rank): fit coefficients on `x` with
+    /// targets `y`.
     pub fn execute_fit(&self, x: &PathBatch<'_>, y: &[f64]) -> Result<ExecutionRecord, SigError> {
-        let (opts, lambda, normalize) = match &self.spec {
+        match &self.spec {
             OpSpec::Krr {
                 opts,
                 lambda,
                 normalize,
-            } => (*opts, *lambda, *normalize),
-            _ => return Err(SigError::Invalid("only KRR plans take targets")),
-        };
-        self.check_batch(x)?;
-        let model = KernelRidge::fit_impl(x, y, lambda, normalize, &opts)?;
-        let mut values = self.arena.take(model.alpha().len());
-        values.copy_from_slice(model.alpha());
-        Ok(self.record(values, Some(x), None, RecordState::Krr(Box::new(model)), self.retain))
+            } => {
+                self.check_batch(x)?;
+                let model = KernelRidge::fit_impl(x, y, *lambda, *normalize, opts)?;
+                let mut values = self.arena.take(model.alpha().len());
+                values.copy_from_slice(model.alpha());
+                Ok(self.record(
+                    values,
+                    Some(x),
+                    None,
+                    RecordState::Krr(Box::new(model)),
+                    self.retain,
+                ))
+            }
+            OpSpec::KrrLowRank {
+                opts,
+                lowrank,
+                lambda,
+            } => {
+                self.check_batch(x)?;
+                // Landmarks for the feature map come from the training batch
+                // itself (the only data a fit sees).
+                let map = FeatureMap::try_build(lowrank, opts, x)?;
+                let model = LowRankRidge::try_fit(map, x, y, *lambda)?;
+                let mut values = self.arena.take(model.weights().len());
+                values.copy_from_slice(model.weights());
+                Ok(self.record(
+                    values,
+                    Some(x),
+                    None,
+                    RecordState::KrrLowRank(Box::new(model)),
+                    self.retain,
+                ))
+            }
+            _ => Err(SigError::Invalid("only KRR plans take targets")),
+        }
     }
 
     fn exec_paired_kernel(
@@ -783,14 +904,18 @@ impl Plan {
         x: &PathBatch<'_>,
         y: &PathBatch<'_>,
         k: &KernelOptions,
+        biased: bool,
     ) -> Result<ExecutionRecord, SigError> {
-        if x.is_empty() || y.is_empty() {
+        // The V-statistic is defined from one path per side; the U-statistic
+        // divides by b(b−1) and needs two.
+        let need = if biased { 1 } else { 2 };
+        let (bx, by) = (x.batch(), y.batch());
+        if bx < need || by < need {
             return Err(SigError::InsufficientBatch {
-                need: 1,
-                got: x.batch().min(y.batch()),
+                need,
+                got: bx.min(by),
             });
         }
-        let (bx, by) = (x.batch(), y.batch());
         // Same allocation guard as the Gram op — three Gram matrices back
         // one MMD² value.
         let gram_len = |a: usize, b: usize| -> Result<usize, SigError> {
@@ -805,7 +930,16 @@ impl Plan {
         self.gram_values_into(x, y, k, &mut kxy);
         self.gram_values_into(y, y, k, &mut kyy);
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
-        let value = mean(&kxx) - 2.0 * mean(&kxy) + mean(&kyy);
+        let off_mean = |v: &[f64], b: usize| {
+            let total: f64 = v.iter().sum();
+            let diag: f64 = (0..b).map(|i| v[i * b + i]).sum();
+            (total - diag) / (b * (b - 1)) as f64
+        };
+        let value = if biased {
+            mean(&kxx) - 2.0 * mean(&kxy) + mean(&kyy)
+        } else {
+            off_mean(&kxx, bx) - 2.0 * mean(&kxy) + off_mean(&kyy, by)
+        };
         let mut values = self.arena.take(1);
         values[0] = value;
         let state = if self.retain {
@@ -814,6 +948,92 @@ impl Plan {
             self.arena.give(kxx);
             self.arena.give(kxy);
             self.arena.give(kyy);
+            RecordState::None
+        };
+        Ok(self.record(values, Some(x), Some(y), state, self.retain))
+    }
+
+    /// Execute a low-rank Gram / MMD² plan: build the feature map the spec
+    /// describes (Nyström landmarks drawn from `y`, the reference batch, so
+    /// x-gradients are exact; random signature sketches from the seed
+    /// alone), compute both feature matrices and reduce them.
+    fn exec_lowrank(
+        &self,
+        x: &PathBatch<'_>,
+        y: &PathBatch<'_>,
+        k: &KernelOptions,
+        spec: &LowRankSpec,
+        gram: bool,
+    ) -> Result<ExecutionRecord, SigError> {
+        let (bx, by) = (x.batch(), y.batch());
+        if !gram && (bx == 0 || by == 0) {
+            return Err(SigError::InsufficientBatch {
+                need: 1,
+                got: bx.min(by),
+            });
+        }
+        // Feature matrices are wire-reachable allocations: same 8 GiB guard
+        // as every batched output.
+        for b in [bx, by] {
+            b.checked_mul(spec.rank)
+                .filter(|&t| t <= MAX_BATCH_OUT)
+                .ok_or(SigError::TooLarge("low-rank feature matrix"))?;
+        }
+        // Warm path: the map and Φy depend only on (spec, y) — reuse them
+        // across executes against the same reference batch (exact equality
+        // check; a changed y rebuilds). The build happens outside the lock;
+        // a racing duplicate build is harmless (last one wins), as in the
+        // plan cache.
+        let cached = {
+            let warm = self.lowrank_warm.lock().unwrap();
+            warm.as_ref()
+                .filter(|w| {
+                    w.y_lengths.len() == by
+                        && (0..by).all(|i| w.y_lengths[i] == y.len_of(i))
+                        && w.y_data == y.data()
+                })
+                .map(|w| (w.map.clone(), w.phi_y.clone()))
+        };
+        let (map, phi_y) = match cached {
+            Some(v) => v,
+            None => {
+                let map = Arc::new(FeatureMap::try_build(spec, k, y)?);
+                let phi_y = map.try_features(y)?;
+                *self.lowrank_warm.lock().unwrap() = Some(LowRankWarm {
+                    y_data: y.data().to_vec(),
+                    y_lengths: (0..by).map(|i| y.len_of(i)).collect(),
+                    map: map.clone(),
+                    phi_y: phi_y.clone(),
+                });
+                (map, phi_y)
+            }
+        };
+        let r = map.rank();
+        let phi_x = map.try_features(x)?;
+        let values = if gram {
+            let total = bx
+                .checked_mul(by)
+                .filter(|&t| t <= MAX_BATCH_OUT)
+                .ok_or(SigError::TooLarge("gram output"))?;
+            let mut out = self.arena.take(total);
+            crate::util::linalg::gemm_nt(bx, r, by, &phi_x, &phi_y, &mut out);
+            out
+        } else {
+            let mx = crate::kernel::lowrank::feature_mean(&phi_x, bx, r);
+            let my = crate::kernel::lowrank::feature_mean(&phi_y, by, r);
+            let mut out = self.arena.take(1);
+            out[0] = mx
+                .iter()
+                .zip(my.iter())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            out
+        };
+        let state = if self.retain {
+            RecordState::LowRank { map, phi_x, phi_y }
+        } else {
+            self.arena.give(phi_x);
+            self.arena.give(phi_y);
             RecordState::None
         };
         Ok(self.record(values, Some(x), Some(y), state, self.retain))
@@ -1078,6 +1298,17 @@ enum RecordState {
     },
     /// A fitted ridge regressor.
     Krr(Box<KernelRidge>),
+    /// The feature map and both `[batch, rank]` feature matrices behind a
+    /// low-rank Gram / MMD² value — retained for downstream reuse and for
+    /// the feature-space backward. The map is shared with the plan's warm
+    /// cache (it is immutable once built).
+    LowRank {
+        map: Arc<FeatureMap>,
+        phi_x: Vec<f64>,
+        phi_y: Vec<f64>,
+    },
+    /// A fitted low-rank ridge regressor.
+    KrrLowRank(Box<LowRankRidge>),
 }
 
 /// Gradients returned by [`ExecutionRecord::vjp`]: one buffer per input
@@ -1160,6 +1391,27 @@ impl ExecutionRecord {
         }
     }
 
+    /// Extract the fitted regressor of a low-rank KRR execution.
+    pub fn into_lowrank_ridge(mut self) -> Result<LowRankRidge, SigError> {
+        match std::mem::replace(&mut self.state, RecordState::None) {
+            RecordState::KrrLowRank(model) => Ok(*model),
+            other => {
+                self.state = other;
+                Err(SigError::Invalid("record does not hold a low-rank KRR fit"))
+            }
+        }
+    }
+
+    /// The retained `[batch, rank]` feature matrices (Φx, Φy) of a low-rank
+    /// Gram / MMD² execution, for downstream reuse (e.g. feeding a ridge
+    /// solve without recomputing features).
+    pub fn lowrank_features(&self) -> Option<(&[f64], &[f64], usize)> {
+        match &self.state {
+            RecordState::LowRank { map, phi_x, phi_y } => Some((phi_x, phi_y, map.rank())),
+            _ => None,
+        }
+    }
+
     fn x_batch(&self) -> PathBatch<'_> {
         PathBatch::ragged(&self.x_data, &self.x_lengths, self.dim)
             .expect("internal: stored input batch is valid")
@@ -1199,7 +1451,12 @@ impl ExecutionRecord {
             OpSpec::SigKernel(k) => self.vjp_kernel(&k, cotangent),
             OpSpec::Gram(k) => self.vjp_gram(&k, cotangent),
             OpSpec::Mmd2(k) => self.vjp_mmd2(&k, cotangent),
-            OpSpec::Krr { .. } => Err(SigError::Invalid("vjp is not defined for KRR fits")),
+            OpSpec::Mmd2Unbiased(k) => self.vjp_mmd2_unbiased(&k, cotangent),
+            OpSpec::GramLowRank { .. } => self.vjp_gram_lowrank(cotangent),
+            OpSpec::Mmd2LowRank { .. } => self.vjp_mmd2_lowrank(cotangent),
+            OpSpec::Krr { .. } | OpSpec::KrrLowRank { .. } => {
+                Err(SigError::Invalid("vjp is not defined for KRR fits"))
+            }
         }
     }
 
@@ -1346,6 +1603,114 @@ impl ExecutionRecord {
                 .collect(),
         ))
     }
+
+    /// Same structure as [`vjp_mmd2`](Self::vjp_mmd2), but with the
+    /// U-statistic's weights: the Kxx term puts 1/(bx(bx−1)) on every
+    /// off-diagonal pair and **zero** on the diagonal (`try_gram_vjp` skips
+    /// zero weights, so the diagonal solves are never run).
+    fn vjp_mmd2_unbiased(
+        &self,
+        k: &KernelOptions,
+        cotangent: &[f64],
+    ) -> Result<Gradients, SigError> {
+        if cotangent.len() != 1 {
+            return Err(SigError::CotangentLen {
+                expected: 1,
+                got: cotangent.len(),
+            });
+        }
+        let c = cotangent[0];
+        let (bx, by) = (self.x_lengths.len(), self.y_lengths.len());
+        let xb = self.x_batch();
+        let yb = self.y_batch();
+        let wo = c / (bx * (bx - 1)) as f64;
+        let mut wxx = vec![wo; bx * bx];
+        for i in 0..bx {
+            wxx[i * bx + i] = 0.0;
+        }
+        // Both argument slots, as in the biased case (λ1 ≠ λ2 ⇒ the
+        // discretised kernel is not symmetric in its arguments).
+        let (gxx1, gxx2) = crate::kernel::try_gram_vjp(&xb, &xb, &wxx, k)?;
+        let wxy = vec![c * (-2.0 / (bx * by) as f64); bx * by];
+        let (gxy, _) = crate::kernel::try_gram_vjp(&xb, &yb, &wxy, k)?;
+        Ok(Gradients::Single(
+            gxx1.iter()
+                .zip(gxx2.iter())
+                .zip(gxy.iter())
+                .map(|((a, b), g)| a + b + g)
+                .collect(),
+        ))
+    }
+
+    /// Low-rank Gram backward: with G = Φx·Φyᵀ and the feature map frozen
+    /// (Nyström landmark selection is not differentiated), ∂F/∂Φx = W·Φy
+    /// and ∂F/∂Φy = Wᵀ·Φx; the retained feature matrices supply both, and
+    /// the map's backward routes them to path space through the exact
+    /// kernel / signature vjp machinery.
+    fn vjp_gram_lowrank(&self, cotangent: &[f64]) -> Result<Gradients, SigError> {
+        let RecordState::LowRank { map, phi_x, phi_y } = &self.state else {
+            return Err(SigError::Invalid("record retains no low-rank features"));
+        };
+        let (bx, by) = (self.x_lengths.len(), self.y_lengths.len());
+        if cotangent.len() != bx * by {
+            return Err(SigError::CotangentLen {
+                expected: bx * by,
+                got: cotangent.len(),
+            });
+        }
+        let r = map.rank();
+        let mut gpx = vec![0.0; bx * r];
+        crate::util::linalg::gemm(bx, by, r, cotangent, phi_y, &mut gpx);
+        let mut gpy = vec![0.0; by * r];
+        for i in 0..bx {
+            let prow = &phi_x[i * r..(i + 1) * r];
+            for j in 0..by {
+                let w = cotangent[i * by + j];
+                if w == 0.0 {
+                    continue;
+                }
+                for (o, &p) in gpy[j * r..(j + 1) * r].iter_mut().zip(prow.iter()) {
+                    *o += w * p;
+                }
+            }
+        }
+        let gx = map.try_features_vjp(&self.x_batch(), &gpx)?;
+        let gy = map.try_features_vjp(&self.y_batch(), &gpy)?;
+        Ok(Gradients::Pair(gx, gy))
+    }
+
+    /// Low-rank MMD² backward: ∂F/∂φ(x_i) = c·(2/bx)(mean Φx − mean Φy) for
+    /// every row, from the retained feature matrices. The gradient is with
+    /// respect to the x-paths only (matching [`OpSpec::Mmd2`]); landmarks
+    /// come from y, so no frozen-landmark approximation enters the x-side.
+    fn vjp_mmd2_lowrank(&self, cotangent: &[f64]) -> Result<Gradients, SigError> {
+        if cotangent.len() != 1 {
+            return Err(SigError::CotangentLen {
+                expected: 1,
+                got: cotangent.len(),
+            });
+        }
+        let RecordState::LowRank { map, phi_x, phi_y } = &self.state else {
+            return Err(SigError::Invalid("record retains no low-rank features"));
+        };
+        let c = cotangent[0];
+        let (bx, by) = (self.x_lengths.len(), self.y_lengths.len());
+        let r = map.rank();
+        let mx = crate::kernel::lowrank::feature_mean(phi_x, bx, r);
+        let my = crate::kernel::lowrank::feature_mean(phi_y, by, r);
+        let scale = c * 2.0 / bx as f64;
+        let row: Vec<f64> = mx
+            .iter()
+            .zip(my.iter())
+            .map(|(a, b)| scale * (a - b))
+            .collect();
+        let mut grad_phi = vec![0.0; bx * r];
+        for chunk in grad_phi.chunks_mut(r) {
+            chunk.copy_from_slice(&row);
+        }
+        map.try_features_vjp(&self.x_batch(), &grad_phi)
+            .map(Gradients::Single)
+    }
 }
 
 impl Drop for ExecutionRecord {
@@ -1375,7 +1740,11 @@ impl Drop for ExecutionRecord {
                 arena.give(kxy);
                 arena.give(kyy);
             }
-            RecordState::None | RecordState::Krr(_) => {}
+            RecordState::LowRank { phi_x, phi_y, .. } => {
+                arena.give(phi_x);
+                arena.give(phi_y);
+            }
+            RecordState::None | RecordState::Krr(_) | RecordState::KrrLowRank(_) => {}
         }
     }
 }

@@ -246,30 +246,33 @@ pub fn mmd2(
 }
 
 /// Typed unbiased MMD² (U-statistic): excludes the diagonals of Kxx and Kyy.
-/// This is the estimator used for two-sample hypothesis testing.
+/// This is the estimator used for two-sample hypothesis testing. A thin
+/// wrapper compiling a one-shot forward
+/// [`OpSpec::Mmd2Unbiased`](crate::engine::OpSpec::Mmd2Unbiased) plan.
 pub fn try_mmd2_unbiased(
     x: &PathBatch<'_>,
     y: &PathBatch<'_>,
     opts: &KernelOptions,
 ) -> Result<f64, SigError> {
-    check_dims(x, y, opts)?;
-    let (bx, by) = (x.batch(), y.batch());
-    if bx < 2 || by < 2 {
-        return Err(SigError::InsufficientBatch {
-            need: 2,
-            got: bx.min(by),
-        });
-    }
-    let kxx = try_gram(x, x, opts)?;
-    let kxy = try_gram(x, y, opts)?;
-    let kyy = try_gram(y, y, opts)?;
-    let off_mean = |v: &[f64], b: usize| {
-        let total: f64 = v.iter().sum();
-        let diag: f64 = (0..b).map(|i| v[i * b + i]).sum();
-        (total - diag) / (b * (b - 1)) as f64
-    };
-    let mean_xy = kxy.iter().sum::<f64>() / (bx * by) as f64;
-    Ok(off_mean(&kxx, bx) - 2.0 * mean_xy + off_mean(&kyy, by))
+    let plan = Plan::compile_forward(OpSpec::Mmd2Unbiased(*opts), ShapeClass::for_pair(x, y))?;
+    Ok(plan.execute_pair(x, y)?.value())
+}
+
+/// Typed unbiased MMD² and its exact gradient with respect to the x-paths —
+/// the U-statistic counterpart of [`try_mmd2_with_grad`]. The gradient
+/// differs from the biased one only in the Kxx weights (off-diagonal
+/// 1/(bx(bx−1)) instead of uniform 1/bx²); it routes through the same
+/// weighted-Gram Algorithm-4 backward.
+pub fn try_mmd2_unbiased_with_grad(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    opts: &KernelOptions,
+) -> Result<(f64, Vec<f64>), SigError> {
+    let plan = Plan::compile(OpSpec::Mmd2Unbiased(*opts), ShapeClass::for_pair(x, y))?;
+    let record = plan.execute_pair(x, y)?;
+    let value = record.value();
+    let grad = record.vjp(&[1.0])?.into_single()?;
+    Ok((value, grad))
 }
 
 /// Unbiased MMD² (flat-slice wrapper over [`try_mmd2_unbiased`]).

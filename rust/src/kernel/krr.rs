@@ -129,6 +129,31 @@ impl KernelRidge {
         &self.alpha
     }
 
+    /// Rank-budgeted fit: solve the **r×r normal equations** in an explicit
+    /// low-rank feature space instead of the n×n dual system — O(n·r²)
+    /// total against `try_fit`'s O(n²·L²) Gram + O(n³) solve. Landmarks for
+    /// a Nyström spec are drawn (seeded) from the training batch. Returns a
+    /// [`LowRankRidge`], which predicts in O(r) kernel/signature evaluations
+    /// per query. A thin wrapper compiling a one-shot
+    /// [`OpSpec::KrrLowRank`](crate::engine::OpSpec::KrrLowRank) plan.
+    pub fn try_fit_lowrank(
+        paths: &PathBatch<'_>,
+        y: &[f64],
+        lambda: f64,
+        lowrank: crate::kernel::lowrank::LowRankSpec,
+        opts: &KernelOptions,
+    ) -> Result<crate::kernel::lowrank::LowRankRidge, SigError> {
+        let plan = crate::engine::Plan::compile(
+            crate::engine::OpSpec::KrrLowRank {
+                opts: *opts,
+                lowrank,
+                lambda,
+            },
+            crate::engine::ShapeClass::for_batch(paths),
+        )?;
+        plan.execute_fit(paths, y)?.into_lowrank_ridge()
+    }
+
     /// The fitting logic behind [`KernelRidge::try_fit`], called by the
     /// engine's KRR plans (kept separate so the wrapper → plan → fit chain
     /// does not recurse).

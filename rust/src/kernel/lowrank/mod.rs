@@ -1,0 +1,571 @@
+//! Low-rank signature-kernel approximations (KSig-style): explicit rank-r
+//! feature maps Φ ∈ R^{n × r} that replace every quadratic-in-n Gram/MMD/KRR
+//! entry point with an O(n·r²) one.
+//!
+//! Two approximation families implement the common [`LowRankFeatures`]
+//! trait:
+//!
+//! * [`NystromFeatures`] — r landmark paths, the n×r cross-kernel solved by
+//!   the exact Goursat PDE, and a pivoted Cholesky of the landmark Gram.
+//!   Accurate whenever the landmark span covers the data; exact at full
+//!   rank. Cost: O(n·r) PDE solves + O(n·r²) linear algebra.
+//! * [`RandomSigFeatures`] — truncated signatures projected by a seeded
+//!   Gaussian/Rademacher sketch. Data-independent map (exact gradients, no
+//!   landmark caveat), no PDE solves; accuracy set by truncation depth and
+//!   sketch width.
+//!
+//! On top of Φ: [`try_gram_lowrank`], [`try_mmd2_lowrank`] (biased) /
+//! [`try_mmd2_lowrank_unbiased`], [`try_mmd2_lowrank_with_grad`], and
+//! [`LowRankRidge`] (the O(n·r²) normal-equation counterpart of
+//! [`KernelRidge`](crate::kernel::KernelRidge)). The engine exposes the same
+//! estimators as first-class plans
+//! ([`OpSpec::GramLowRank`](crate::engine::OpSpec::GramLowRank) /
+//! [`Mmd2LowRank`](crate::engine::OpSpec::Mmd2LowRank) /
+//! [`KrrLowRank`](crate::engine::OpSpec::KrrLowRank)) whose records retain
+//! the feature matrices for reuse and whose vjps route path gradients
+//! through the exact kernel/signature backward machinery.
+
+pub mod nystrom;
+pub mod randsig;
+
+pub use nystrom::NystromFeatures;
+pub use randsig::{RandomSigFeatures, SketchKind};
+
+use crate::kernel::KernelOptions;
+use crate::path::{PathBatch, SigError};
+use crate::util::linalg::{gemm_nt, solve_spd};
+use crate::util::rng::Rng;
+
+/// A rank-r feature map φ: paths → R^r approximating the signature kernel
+/// as k(x, y) ≈ φ(x)·φ(y).
+pub trait LowRankFeatures {
+    /// Effective rank r (feature dimension). May be smaller than requested
+    /// when landmarks are numerically redundant.
+    fn rank(&self) -> usize;
+
+    /// Feature matrix Φ for a (possibly ragged) batch: `[batch, rank]`
+    /// row-major.
+    fn try_features(&self, x: &PathBatch<'_>) -> Result<Vec<f64>, SigError>;
+
+    /// Path gradients of F given Ḡ = ∂F/∂Φ (`[batch, rank]`), returned in
+    /// the batch's own flat (possibly ragged) layout. Routed through the
+    /// exact kernel/signature backward schemes; Nyström landmarks are
+    /// treated as constants.
+    fn try_features_vjp(
+        &self,
+        x: &PathBatch<'_>,
+        grad_phi: &[f64],
+    ) -> Result<Vec<f64>, SigError>;
+}
+
+/// Which approximation family a low-rank engine plan should build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LowRankMethod {
+    /// Nyström landmarks drawn (seeded, without replacement) from the
+    /// reference batch.
+    Nystrom,
+    /// Random projection of depth-`depth` truncated signatures.
+    RandomSig { depth: usize, sketch: SketchKind },
+}
+
+/// Hashable, `Copy` description of a low-rank approximation — the part of a
+/// low-rank [`OpSpec`](crate::engine::OpSpec) that joins the plan-cache key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LowRankSpec {
+    pub method: LowRankMethod,
+    /// Requested rank (landmark count / sketch width). Capped at the
+    /// reference batch size for Nyström.
+    pub rank: usize,
+    /// Seed for landmark sampling / sketch generation — same seed, same map.
+    pub seed: u64,
+}
+
+impl LowRankSpec {
+    /// Nyström with `rank` landmarks.
+    pub fn nystrom(rank: usize, seed: u64) -> LowRankSpec {
+        LowRankSpec {
+            method: LowRankMethod::Nystrom,
+            rank,
+            seed,
+        }
+    }
+
+    /// Random signature features: depth-`depth` signatures, Rademacher
+    /// sketch of width `rank`.
+    pub fn random_sig(rank: usize, depth: usize, seed: u64) -> LowRankSpec {
+        LowRankSpec {
+            method: LowRankMethod::RandomSig {
+                depth,
+                sketch: SketchKind::Rademacher,
+            },
+            rank,
+            seed,
+        }
+    }
+
+    /// Validate the data-independent parts (rank/depth positivity).
+    pub fn validate(&self) -> Result<(), SigError> {
+        if self.rank == 0 {
+            return Err(SigError::Invalid("low-rank feature rank must be at least 1"));
+        }
+        if let LowRankMethod::RandomSig { depth, .. } = self.method {
+            if depth == 0 {
+                return Err(SigError::ZeroDepth);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Sample `rank` distinct indices from `0..batch` (partial Fisher–Yates,
+/// seeded). Returns all of `0..batch` (shuffled) when `rank >= batch`.
+pub fn sample_landmark_indices(batch: usize, rank: usize, seed: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..batch).collect();
+    let mut rng = Rng::new(seed);
+    let take = rank.min(batch);
+    for i in 0..take {
+        let j = i + rng.below(batch - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(take);
+    idx
+}
+
+/// An owned feature map of either family — what low-rank engine plans build
+/// at execute time and retain on their
+/// [`ExecutionRecord`](crate::engine::ExecutionRecord)s.
+pub enum FeatureMap {
+    Nystrom(NystromFeatures),
+    RandomSig(RandomSigFeatures),
+}
+
+impl FeatureMap {
+    /// Build the map a [`LowRankSpec`] describes. Nyström draws its
+    /// landmarks (seeded, without replacement) from `reference` — by
+    /// convention the *second* batch of a pair op, so that gradients with
+    /// respect to the first batch are exact. Random signature features only
+    /// need the reference's dimension.
+    pub fn try_build(
+        spec: &LowRankSpec,
+        opts: &KernelOptions,
+        reference: &PathBatch<'_>,
+    ) -> Result<FeatureMap, SigError> {
+        spec.validate()?;
+        match spec.method {
+            LowRankMethod::Nystrom => {
+                if reference.is_empty() {
+                    return Err(SigError::InsufficientBatch { need: 1, got: 0 });
+                }
+                let idx = sample_landmark_indices(reference.batch(), spec.rank, spec.seed);
+                let mut data = Vec::new();
+                let mut lens = Vec::with_capacity(idx.len());
+                for &i in &idx {
+                    data.extend_from_slice(reference.values_of(i));
+                    lens.push(reference.len_of(i));
+                }
+                let zb = PathBatch::ragged(&data, &lens, reference.dim())?;
+                Ok(FeatureMap::Nystrom(NystromFeatures::try_new(&zb, opts)?))
+            }
+            LowRankMethod::RandomSig { depth, sketch } => {
+                Ok(FeatureMap::RandomSig(RandomSigFeatures::try_new(
+                    reference.dim(),
+                    depth,
+                    spec.rank,
+                    spec.seed,
+                    sketch,
+                    opts.exec,
+                )?))
+            }
+        }
+    }
+}
+
+impl LowRankFeatures for FeatureMap {
+    fn rank(&self) -> usize {
+        match self {
+            FeatureMap::Nystrom(f) => f.rank(),
+            FeatureMap::RandomSig(f) => f.rank(),
+        }
+    }
+
+    fn try_features(&self, x: &PathBatch<'_>) -> Result<Vec<f64>, SigError> {
+        match self {
+            FeatureMap::Nystrom(f) => f.try_features(x),
+            FeatureMap::RandomSig(f) => f.try_features(x),
+        }
+    }
+
+    fn try_features_vjp(
+        &self,
+        x: &PathBatch<'_>,
+        grad_phi: &[f64],
+    ) -> Result<Vec<f64>, SigError> {
+        match self {
+            FeatureMap::Nystrom(f) => f.try_features_vjp(x, grad_phi),
+            FeatureMap::RandomSig(f) => f.try_features_vjp(x, grad_phi),
+        }
+    }
+}
+
+/// Low-rank Gram matrix `[bx, by]`: Φx·Φyᵀ — O((bx + by)·r) feature rows
+/// plus one O(bx·by·r) GEMM, against the exact Gram's bx·by PDE solves.
+pub fn try_gram_lowrank<F: LowRankFeatures + ?Sized>(
+    f: &F,
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+) -> Result<Vec<f64>, SigError> {
+    let phi_x = f.try_features(x)?;
+    let phi_y = f.try_features(y)?;
+    let (bx, by) = (x.batch(), y.batch());
+    let mut out = vec![0.0; bx * by];
+    gemm_nt(bx, f.rank(), by, &phi_x, &phi_y, &mut out);
+    Ok(out)
+}
+
+/// Column means of a `[b, r]` feature matrix (shared with the engine's
+/// low-rank MMD² op).
+pub(crate) fn feature_mean(phi: &[f64], b: usize, r: usize) -> Vec<f64> {
+    let mut m = vec![0.0; r];
+    for row in phi.chunks(r) {
+        for (o, &v) in m.iter_mut().zip(row.iter()) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / b.max(1) as f64;
+    for v in m.iter_mut() {
+        *v *= inv;
+    }
+    m
+}
+
+fn check_mmd_batches(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    need: usize,
+) -> Result<(), SigError> {
+    let got = x.batch().min(y.batch());
+    if got < need {
+        return Err(SigError::InsufficientBatch { need, got });
+    }
+    Ok(())
+}
+
+/// Low-rank **biased** MMD² (V-statistic): with K ≈ ΦΦᵀ the estimator
+/// collapses to ‖mean(Φx) − mean(Φy)‖² — O((bx + by)·r) after the feature
+/// rows, no Gram materialised.
+pub fn try_mmd2_lowrank<F: LowRankFeatures + ?Sized>(
+    f: &F,
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+) -> Result<f64, SigError> {
+    check_mmd_batches(x, y, 1)?;
+    let phi_x = f.try_features(x)?;
+    let phi_y = f.try_features(y)?;
+    let r = f.rank();
+    let mx = feature_mean(&phi_x, x.batch(), r);
+    let my = feature_mean(&phi_y, y.batch(), r);
+    Ok(mx
+        .iter()
+        .zip(my.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum())
+}
+
+/// Low-rank **unbiased** MMD² (U-statistic, diagonal terms excluded) — the
+/// two-sample-testing estimator, from feature sums alone.
+pub fn try_mmd2_lowrank_unbiased<F: LowRankFeatures + ?Sized>(
+    f: &F,
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+) -> Result<f64, SigError> {
+    check_mmd_batches(x, y, 2)?;
+    let phi_x = f.try_features(x)?;
+    let phi_y = f.try_features(y)?;
+    let r = f.rank();
+    let (bx, by) = (x.batch(), y.batch());
+    // Σ_{i≠j} φi·φj = ‖Σφ‖² − Σ‖φi‖², all from one pass.
+    let stats = |phi: &[f64]| -> (Vec<f64>, f64) {
+        let mut s = vec![0.0; r];
+        let mut sq = 0.0;
+        for row in phi.chunks(r) {
+            for (o, &v) in s.iter_mut().zip(row.iter()) {
+                *o += v;
+            }
+            sq += row.iter().map(|v| v * v).sum::<f64>();
+        }
+        (s, sq)
+    };
+    let (sx, qx) = stats(&phi_x);
+    let (sy, qy) = stats(&phi_y);
+    let nx = bx as f64;
+    let ny = by as f64;
+    let sxx: f64 = sx.iter().map(|v| v * v).sum();
+    let syy: f64 = sy.iter().map(|v| v * v).sum();
+    let sxy: f64 = sx.iter().zip(sy.iter()).map(|(a, b)| a * b).sum();
+    Ok((sxx - qx) / (nx * (nx - 1.0)) - 2.0 * sxy / (nx * ny) + (syy - qy) / (ny * (ny - 1.0)))
+}
+
+/// Low-rank biased MMD² and its exact gradient with respect to the x-paths
+/// (the generator sample in training): ∂/∂φ(x_i) = (2/bx)(mean Φx − mean Φy),
+/// mapped to path space through the feature map's backward.
+pub fn try_mmd2_lowrank_with_grad<F: LowRankFeatures + ?Sized>(
+    f: &F,
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+) -> Result<(f64, Vec<f64>), SigError> {
+    check_mmd_batches(x, y, 1)?;
+    let phi_x = f.try_features(x)?;
+    let phi_y = f.try_features(y)?;
+    let r = f.rank();
+    let (bx, by) = (x.batch(), y.batch());
+    let mx = feature_mean(&phi_x, bx, r);
+    let my = feature_mean(&phi_y, by, r);
+    let value = mx
+        .iter()
+        .zip(my.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let scale = 2.0 / bx as f64;
+    let row: Vec<f64> = mx
+        .iter()
+        .zip(my.iter())
+        .map(|(a, b)| scale * (a - b))
+        .collect();
+    let mut grad_phi = vec![0.0; bx * r];
+    for chunk in grad_phi.chunks_mut(r) {
+        chunk.copy_from_slice(&row);
+    }
+    let grad = f.try_features_vjp(x, &grad_phi)?;
+    Ok((value, grad))
+}
+
+/// Ridge regression in low-rank feature space — the O(n·r²) counterpart of
+/// [`KernelRidge`](crate::kernel::KernelRidge): solves the r×r normal
+/// equations (ΦᵀΦ + λ·tr(ΦᵀΦ)/r·I)·w = Φᵀy instead of the n×n dual system.
+/// Fit via [`KernelRidge::try_fit_lowrank`](crate::kernel::KernelRidge::try_fit_lowrank)
+/// or a [`KrrLowRank`](crate::engine::OpSpec::KrrLowRank) plan.
+pub struct LowRankRidge {
+    map: FeatureMap,
+    weights: Vec<f64>,
+}
+
+impl LowRankRidge {
+    /// Fit on a (possibly ragged) training batch with targets `[n]`. λ is
+    /// relative to the mean feature-Gram diagonal (same convention as the
+    /// exact KRR) and escalates tenfold until the system is numerically PD.
+    pub fn try_fit(
+        map: FeatureMap,
+        paths: &PathBatch<'_>,
+        y: &[f64],
+        lambda: f64,
+    ) -> Result<LowRankRidge, SigError> {
+        let n = paths.batch();
+        if y.len() != n {
+            return Err(SigError::CotangentLen {
+                expected: n,
+                got: y.len(),
+            });
+        }
+        if n == 0 {
+            return Err(SigError::InsufficientBatch { need: 1, got: 0 });
+        }
+        if !(lambda > 0.0) {
+            return Err(SigError::NonFinite("ridge λ must be positive"));
+        }
+        let r = map.rank();
+        let phi = map.try_features(paths)?;
+        if !phi.iter().all(|v| v.is_finite()) {
+            return Err(SigError::NonFinite("low-rank feature matrix overflowed f64"));
+        }
+        // Normal equations: ΦᵀΦ [r, r] and Φᵀy [r].
+        let mut ata = vec![0.0; r * r];
+        let mut atb = vec![0.0; r];
+        for (row, &t) in phi.chunks(r).zip(y.iter()) {
+            for i in 0..r {
+                let ri = row[i];
+                atb[i] += ri * t;
+                for j in 0..=i {
+                    ata[i * r + j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..r {
+            for j in i + 1..r {
+                ata[i * r + j] = ata[j * r + i];
+            }
+        }
+        let mean_diag = (0..r).map(|i| ata[i * r + i]).sum::<f64>() / r as f64;
+        let mut lam = lambda * mean_diag.max(1e-300);
+        let mut attempt = 0;
+        let weights = loop {
+            let mut sys = ata.clone();
+            for i in 0..r {
+                sys[i * r + i] += lam;
+            }
+            match solve_spd(&sys, r, &atb) {
+                Some(w) => break w,
+                None => {
+                    attempt += 1;
+                    if attempt > 8 {
+                        return Err(SigError::NonFinite(
+                            "low-rank ridge system not positive definite even after escalating λ",
+                        ));
+                    }
+                    lam *= 10.0;
+                }
+            }
+        };
+        Ok(LowRankRidge { map, weights })
+    }
+
+    /// The fitted feature-space weights `[rank]`.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// The feature map the model predicts with.
+    pub fn feature_map(&self) -> &FeatureMap {
+        &self.map
+    }
+
+    /// Predict for a (possibly ragged) batch of query paths: Φ(q)·w.
+    pub fn try_predict(&self, paths: &PathBatch<'_>) -> Result<Vec<f64>, SigError> {
+        let phi = self.map.try_features(paths)?;
+        let r = self.map.rank();
+        Ok(phi
+            .chunks(r)
+            .map(|row| row.iter().zip(&self.weights).map(|(p, w)| p * w).sum())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{try_mmd2, try_mmd2_unbiased};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn landmark_sampling_is_seeded_distinct_and_capped() {
+        let a = sample_landmark_indices(10, 4, 3);
+        let b = sample_landmark_indices(10, 4, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4, "indices must be distinct: {a:?}");
+        // rank >= batch: every index exactly once.
+        let mut all = sample_landmark_indices(5, 99, 1);
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        assert!(sample_landmark_indices(0, 3, 1).is_empty());
+    }
+
+    /// The low-rank estimators agree with the exact estimators evaluated on
+    /// the low-rank Gram ΦΦᵀ (internal consistency of the O(n·r) formulas).
+    #[test]
+    fn mmd_formulas_match_explicit_lowrank_gram() {
+        let mut rng = Rng::new(520);
+        let (bx, by, l, d) = (4, 5, 5, 2);
+        let x = rng.brownian_batch(bx, l, d, 0.3);
+        let y = rng.brownian_batch(by, l, d, 0.4);
+        let xb = PathBatch::uniform(&x, bx, l, d).unwrap();
+        let yb = PathBatch::uniform(&y, by, l, d).unwrap();
+        let opts = KernelOptions::default();
+        let map = FeatureMap::try_build(&LowRankSpec::nystrom(3, 9), &opts, &yb).unwrap();
+        let r = map.rank();
+        let phi_x = map.try_features(&xb).unwrap();
+        let phi_y = map.try_features(&yb).unwrap();
+        let gram = |a: &[f64], ba: usize, b: &[f64], bb: usize| -> Vec<f64> {
+            let mut g = vec![0.0; ba * bb];
+            gemm_nt(ba, r, bb, a, b, &mut g);
+            g
+        };
+        let kxx = gram(&phi_x, bx, &phi_x, bx);
+        let kxy = gram(&phi_x, bx, &phi_y, by);
+        let kyy = gram(&phi_y, by, &phi_y, by);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let want_biased = mean(&kxx) - 2.0 * mean(&kxy) + mean(&kyy);
+        let got_biased = try_mmd2_lowrank(&map, &xb, &yb).unwrap();
+        assert!((got_biased - want_biased).abs() < 1e-12);
+        let off = |v: &[f64], b: usize| {
+            let tot: f64 = v.iter().sum();
+            let diag: f64 = (0..b).map(|i| v[i * b + i]).sum();
+            (tot - diag) / (b * (b - 1)) as f64
+        };
+        let want_unbiased = off(&kxx, bx) - 2.0 * mean(&kxy) + off(&kyy, by);
+        let got_unbiased = try_mmd2_lowrank_unbiased(&map, &xb, &yb).unwrap();
+        assert!((got_unbiased - want_unbiased).abs() < 1e-12);
+        // And the explicit Gram entry point agrees with the manual GEMM.
+        assert_eq!(try_gram_lowrank(&map, &xb, &yb).unwrap(), kxy);
+    }
+
+    /// Full-rank Nyström over the pooled corpus reproduces the exact MMD²
+    /// estimators (both kinds).
+    #[test]
+    fn full_rank_mmd_matches_exact() {
+        let mut rng = Rng::new(521);
+        let (b, l, d) = (4, 5, 2);
+        let x = rng.brownian_batch(b, l, d, 0.3);
+        let y = rng.brownian_batch(b, l, d, 0.5);
+        let xb = PathBatch::uniform(&x, b, l, d).unwrap();
+        let yb = PathBatch::uniform(&y, b, l, d).unwrap();
+        let opts = KernelOptions::default();
+        let mut pooled = x.clone();
+        pooled.extend_from_slice(&y);
+        let zb = PathBatch::uniform(&pooled, 2 * b, l, d).unwrap();
+        let f = NystromFeatures::try_new(&zb, &opts).unwrap();
+        let exact_b = try_mmd2(&xb, &yb, &opts).unwrap();
+        let exact_u = try_mmd2_unbiased(&xb, &yb, &opts).unwrap();
+        let lr_b = try_mmd2_lowrank(&f, &xb, &yb).unwrap();
+        let lr_u = try_mmd2_lowrank_unbiased(&f, &xb, &yb).unwrap();
+        assert!((exact_b - lr_b).abs() < 1e-8, "{exact_b} vs {lr_b}");
+        assert!((exact_u - lr_u).abs() < 1e-8, "{exact_u} vs {lr_u}");
+    }
+
+    #[test]
+    fn lowrank_ridge_fits_training_targets() {
+        let mut rng = Rng::new(522);
+        let (n, l, d) = (12, 6, 2);
+        let mut paths = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let p = rng.brownian_path(l, d, 0.3);
+            // Endpoint displacement norm: learnable from signatures.
+            let mut disp = 0.0;
+            for j in 0..d {
+                let dj = p[(l - 1) * d + j] - p[j];
+                disp += dj * dj;
+            }
+            y.push(disp.sqrt());
+            paths.extend(p);
+        }
+        let pb = PathBatch::uniform(&paths, n, l, d).unwrap();
+        let opts = KernelOptions::default();
+        // Full-rank Nyström on the training set: behaves like exact KRR.
+        let map = FeatureMap::try_build(&LowRankSpec::nystrom(n, 4), &opts, &pb).unwrap();
+        let model = LowRankRidge::try_fit(map, &pb, &y, 1e-8).unwrap();
+        let pred = model.try_predict(&pb).unwrap();
+        let err = crate::util::linalg::rel_err(&pred, &y);
+        assert!(err < 1e-3, "train rel err {err}");
+        assert_eq!(model.weights().len(), model.feature_map().rank());
+    }
+
+    #[test]
+    fn lowrank_ridge_rejects_bad_inputs() {
+        let data = [0.0, 0.0, 1.0, 1.0];
+        let pb = PathBatch::uniform(&data, 1, 2, 2).unwrap();
+        let opts = KernelOptions::default();
+        let map = FeatureMap::try_build(&LowRankSpec::nystrom(1, 0), &opts, &pb).unwrap();
+        assert!(matches!(
+            LowRankRidge::try_fit(map, &pb, &[1.0, 2.0], 1e-3),
+            Err(SigError::CotangentLen { .. })
+        ));
+        let map = FeatureMap::try_build(&LowRankSpec::nystrom(1, 0), &opts, &pb).unwrap();
+        assert!(matches!(
+            LowRankRidge::try_fit(map, &pb, &[1.0], 0.0),
+            Err(SigError::NonFinite(_))
+        ));
+    }
+}

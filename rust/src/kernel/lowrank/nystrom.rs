@@ -1,0 +1,220 @@
+//! Nyström low-rank features for the signature kernel.
+//!
+//! Given r landmark paths Z, the Nyström approximation of the kernel is
+//!
+//!   k̂(x, y) = k_Z(x)ᵀ · K_ZZ⁺ · k_Z(y),
+//!
+//! which an explicit feature map realises as φ(x) = L⁻¹ k_{Z'}(x), where
+//! K_{Z'Z'} = L·Lᵀ is the pivoted Cholesky factorisation of the landmark
+//! Gram restricted to its numerically independent pivot subset Z' ⊆ Z
+//! ([`pivoted_cholesky`](crate::util::linalg::pivoted_cholesky)). Each
+//! feature row costs r kernel PDE solves plus an r² triangular solve, so a
+//! full feature matrix is O(n·r·L²) against the exact Gram's O(n²·L²).
+//!
+//! The feature map is **exact on the landmark span**: for query points that
+//! are themselves landmarks, Φ·Φᵀ reproduces the exact Gram (the basis of
+//! the full-rank recovery property test).
+
+use crate::kernel::lowrank::LowRankFeatures;
+use crate::kernel::{try_gram, try_gram_vjp, KernelOptions};
+use crate::path::{PathBatch, SigError};
+use crate::util::linalg::{back_substitute_t, forward_substitute, pivoted_cholesky};
+
+/// Relative pivot threshold for the landmark Gram factorisation: pivots
+/// whose residual diagonal falls below `tol · max(diag)` are dropped, so a
+/// numerically redundant landmark shrinks the rank instead of poisoning the
+/// triangular solves.
+const PIVOT_TOL: f64 = 1e-12;
+
+/// Nyström feature map over an owned set of landmark paths.
+///
+/// Gradients through [`LowRankFeatures::try_features_vjp`] treat the
+/// landmarks as **constants** (the standard stop-gradient convention for
+/// landmark methods) and route each ∂k(x_i, z_j)/∂x_i through the exact
+/// Algorithm-4 kernel backward via
+/// [`try_gram_vjp`](crate::kernel::try_gram_vjp).
+pub struct NystromFeatures {
+    /// Selected landmark paths (pivot order), flat ragged buffer.
+    land_data: Vec<f64>,
+    land_lens: Vec<usize>,
+    dim: usize,
+    opts: KernelOptions,
+    /// Lower-triangular Cholesky factor of the pivot-subset landmark Gram,
+    /// dense `[rank, rank]` row-major.
+    chol: Vec<f64>,
+    rank: usize,
+}
+
+impl NystromFeatures {
+    /// Build the feature map from a (possibly ragged) batch of landmark
+    /// paths. The effective rank can be smaller than `landmarks.batch()`
+    /// when landmarks are numerically redundant.
+    pub fn try_new(
+        landmarks: &PathBatch<'_>,
+        opts: &KernelOptions,
+    ) -> Result<NystromFeatures, SigError> {
+        let r0 = landmarks.batch();
+        if r0 == 0 {
+            return Err(SigError::InsufficientBatch { need: 1, got: 0 });
+        }
+        let mut kzz = try_gram(landmarks, landmarks, opts)?;
+        if !kzz.iter().all(|v| v.is_finite()) {
+            return Err(SigError::NonFinite("landmark Gram overflowed f64"));
+        }
+        // With asymmetric dyadic orders (λ1 ≠ λ2) the discretised kernel is
+        // not symmetric in its arguments; the factorisation needs a
+        // symmetric matrix, so target the symmetrised kernel (exact-recovery
+        // guarantees then hold for symmetric solves, where this is a no-op
+        // up to roundoff).
+        for i in 0..r0 {
+            for j in 0..i {
+                let s = 0.5 * (kzz[i * r0 + j] + kzz[j * r0 + i]);
+                kzz[i * r0 + j] = s;
+                kzz[j * r0 + i] = s;
+            }
+        }
+        let (l, perm, rank) = pivoted_cholesky(&kzz, r0, PIVOT_TOL);
+        if rank == 0 {
+            return Err(SigError::NonFinite("landmark Gram is numerically zero"));
+        }
+        // Keep only the pivot subset, re-packed dense: landmarks in pivot
+        // order and the leading rank × rank triangle of the factor.
+        let mut land_data = Vec::new();
+        let mut land_lens = Vec::with_capacity(rank);
+        for &p in perm.iter().take(rank) {
+            land_data.extend_from_slice(landmarks.values_of(p));
+            land_lens.push(landmarks.len_of(p));
+        }
+        let mut chol = vec![0.0; rank * rank];
+        for i in 0..rank {
+            for j in 0..=i {
+                chol[i * rank + j] = l[i * r0 + j];
+            }
+        }
+        Ok(NystromFeatures {
+            land_data,
+            land_lens,
+            dim: landmarks.dim(),
+            opts: *opts,
+            chol,
+            rank,
+        })
+    }
+
+    /// The retained pivot-subset landmarks as a typed batch.
+    pub fn landmarks(&self) -> PathBatch<'_> {
+        PathBatch::ragged(&self.land_data, &self.land_lens, self.dim)
+            .expect("internal: stored landmark batch is valid")
+    }
+
+    fn check_dim(&self, x: &PathBatch<'_>) -> Result<(), SigError> {
+        if x.dim() != self.dim {
+            return Err(SigError::DimMismatch {
+                left: x.dim(),
+                right: self.dim,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl LowRankFeatures for NystromFeatures {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Φ = C·L⁻ᵀ where C is the `[batch, rank]` cross-Gram against the
+    /// pivot landmarks — one forward substitution per row.
+    fn try_features(&self, x: &PathBatch<'_>) -> Result<Vec<f64>, SigError> {
+        self.check_dim(x)?;
+        let mut c = try_gram(x, &self.landmarks(), &self.opts)?;
+        if !c.iter().all(|v| v.is_finite()) {
+            return Err(SigError::NonFinite("cross Gram overflowed f64"));
+        }
+        for row in c.chunks_mut(self.rank) {
+            forward_substitute(&self.chol, self.rank, self.rank, row);
+        }
+        Ok(c)
+    }
+
+    /// Path gradients of F given Ḡ = ∂F/∂Φ: since Φ = C·L⁻ᵀ,
+    /// ∂F/∂C = Ḡ·L⁻¹ (one transposed back substitution per row), and the
+    /// cross-Gram backward distributes those weights through Algorithm 4.
+    fn try_features_vjp(
+        &self,
+        x: &PathBatch<'_>,
+        grad_phi: &[f64],
+    ) -> Result<Vec<f64>, SigError> {
+        self.check_dim(x)?;
+        let expected = x.batch() * self.rank;
+        if grad_phi.len() != expected {
+            return Err(SigError::CotangentLen {
+                expected,
+                got: grad_phi.len(),
+            });
+        }
+        let mut w = grad_phi.to_vec();
+        for row in w.chunks_mut(self.rank) {
+            back_substitute_t(&self.chol, self.rank, self.rank, row);
+        }
+        let (gx, _gz) = try_gram_vjp(x, &self.landmarks(), &w, &self.opts)?;
+        Ok(gx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::lowrank::try_gram_lowrank;
+    use crate::util::linalg::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_landmark_set_reproduces_exact_gram() {
+        let mut rng = Rng::new(500);
+        let (n, l, d) = (6, 5, 2);
+        let data = rng.brownian_batch(n, l, d, 0.25);
+        let xb = PathBatch::uniform(&data, n, l, d).unwrap();
+        let opts = KernelOptions::default();
+        let f = NystromFeatures::try_new(&xb, &opts).unwrap();
+        let approx = try_gram_lowrank(&f, &xb, &xb).unwrap();
+        let exact = try_gram(&xb, &xb, &opts).unwrap();
+        assert!(
+            max_abs_diff(&approx, &exact) < 1e-8,
+            "err {}",
+            max_abs_diff(&approx, &exact)
+        );
+    }
+
+    #[test]
+    fn duplicate_landmarks_shrink_the_effective_rank() {
+        let mut rng = Rng::new(501);
+        let (l, d) = (5, 2);
+        let one = rng.brownian_path(l, d, 0.3);
+        let mut data = one.clone();
+        data.extend_from_slice(&one); // exact duplicate
+        data.extend(rng.brownian_path(l, d, 0.3));
+        let zb = PathBatch::uniform(&data, 3, l, d).unwrap();
+        let f = NystromFeatures::try_new(&zb, &KernelOptions::default()).unwrap();
+        assert_eq!(f.rank(), 2, "duplicate landmark must be dropped");
+    }
+
+    #[test]
+    fn empty_landmarks_and_dim_mismatch_error() {
+        let empty = PathBatch::ragged(&[], &[], 2).unwrap();
+        assert!(matches!(
+            NystromFeatures::try_new(&empty, &KernelOptions::default()),
+            Err(SigError::InsufficientBatch { .. })
+        ));
+        let mut rng = Rng::new(502);
+        let data = rng.brownian_batch(3, 4, 2, 0.3);
+        let zb = PathBatch::uniform(&data, 3, 4, 2).unwrap();
+        let f = NystromFeatures::try_new(&zb, &KernelOptions::default()).unwrap();
+        let d3 = vec![0.0; 2 * 4 * 3];
+        let q = PathBatch::uniform(&d3, 2, 4, 3).unwrap();
+        assert!(matches!(
+            f.try_features(&q),
+            Err(SigError::DimMismatch { .. })
+        ));
+    }
+}

@@ -1,0 +1,202 @@
+//! Random truncated-signature features for the signature kernel.
+//!
+//! The truncated signature S_N(x) is an explicit (if wide) feature map whose
+//! inner product approximates the signature kernel; a seeded random sketch
+//! P ∈ R^{r × slen} with E[PᵀP] = I compresses it to rank r:
+//!
+//!   φ(x) = P · S_N(x),   E[φ(x)·φ(y)] = ⟨S_N(x), S_N(y)⟩ ≈ k(x, y).
+//!
+//! Unlike Nyström, the map depends only on (seed, shape) — not on any data —
+//! so gradients through it are exact with no frozen-landmark caveat, and a
+//! feature row costs one signature sweep plus an r × slen GEMV: O(n·r·slen)
+//! for the whole matrix, with no kernel PDE solves at all.
+
+use crate::kernel::lowrank::LowRankFeatures;
+use crate::path::{ExecOptions, PathBatch, SigError, SigOptions};
+use crate::sig::{try_batch_signature, try_batch_signature_vjp, try_sig_length};
+use crate::util::linalg::{gemm, gemm_nt};
+use crate::util::rng::Rng;
+
+/// Distribution of the sketch entries (both scaled by 1/√rank so that
+/// E[PᵀP] = I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SketchKind {
+    /// i.i.d. N(0, 1/rank).
+    Gaussian,
+    /// i.i.d. ±1/√rank (cheaper to sample, bounded).
+    Rademacher,
+}
+
+/// Hard cap on sketch matrix entries (2^27 f64s = 1 GiB) — wire/CLI-reachable
+/// allocation guard. Engine plan compilation checks the same bound
+/// (`validate_lowrank_spec`), so a spec that compiles cannot fail here.
+pub(crate) const MAX_SKETCH: usize = 1 << 27;
+
+/// Seeded random projection of truncated signatures.
+pub struct RandomSigFeatures {
+    sig_opts: SigOptions,
+    dim: usize,
+    slen: usize,
+    rank: usize,
+    /// `[rank, slen]` row-major.
+    sketch: Vec<f64>,
+}
+
+impl RandomSigFeatures {
+    /// Build the map for paths of dimension `dim`, signatures truncated at
+    /// `depth`, projected to `rank` features with the seeded sketch. `exec`
+    /// carries the transform/parallel policy the signature sweep should use.
+    pub fn try_new(
+        dim: usize,
+        depth: usize,
+        rank: usize,
+        seed: u64,
+        kind: SketchKind,
+        exec: ExecOptions,
+    ) -> Result<RandomSigFeatures, SigError> {
+        if rank == 0 {
+            return Err(SigError::Invalid("low-rank feature rank must be at least 1"));
+        }
+        let out_dim = exec.transform.out_dim(dim);
+        let slen = try_sig_length(out_dim, depth)?;
+        let total = rank
+            .checked_mul(slen)
+            .filter(|&t| t <= MAX_SKETCH)
+            .ok_or(SigError::TooLarge("random signature sketch"))?;
+        let mut sketch = vec![0.0; total];
+        let mut rng = Rng::new(seed);
+        let scale = 1.0 / (rank as f64).sqrt();
+        match kind {
+            SketchKind::Gaussian => {
+                for v in sketch.iter_mut() {
+                    *v = scale * rng.normal();
+                }
+            }
+            SketchKind::Rademacher => {
+                for v in sketch.iter_mut() {
+                    *v = if rng.next_u64() & 1 == 0 { scale } else { -scale };
+                }
+            }
+        }
+        let mut sig_opts = SigOptions::new(depth);
+        sig_opts.exec = exec;
+        Ok(RandomSigFeatures {
+            sig_opts,
+            dim,
+            slen,
+            rank,
+            sketch,
+        })
+    }
+
+    /// Flat length of the underlying truncated signature.
+    pub fn sig_length(&self) -> usize {
+        self.slen
+    }
+
+    fn check_dim(&self, x: &PathBatch<'_>) -> Result<(), SigError> {
+        if x.dim() != self.dim {
+            return Err(SigError::DimMismatch {
+                left: x.dim(),
+                right: self.dim,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl LowRankFeatures for RandomSigFeatures {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Φ = S·Pᵀ with S the `[batch, slen]` truncated signatures.
+    fn try_features(&self, x: &PathBatch<'_>) -> Result<Vec<f64>, SigError> {
+        self.check_dim(x)?;
+        let sigs = try_batch_signature(x, &self.sig_opts)?;
+        let b = x.batch();
+        let mut phi = vec![0.0; b * self.rank];
+        gemm_nt(b, self.slen, self.rank, &sigs, &self.sketch, &mut phi);
+        Ok(phi)
+    }
+
+    /// ∂F/∂S = Ḡ·P, then the exact time-reversed signature backward
+    /// ([`sig::backward`](crate::sig::backward)) maps it to path space.
+    fn try_features_vjp(
+        &self,
+        x: &PathBatch<'_>,
+        grad_phi: &[f64],
+    ) -> Result<Vec<f64>, SigError> {
+        self.check_dim(x)?;
+        let b = x.batch();
+        let expected = b * self.rank;
+        if grad_phi.len() != expected {
+            return Err(SigError::CotangentLen {
+                expected,
+                got: grad_phi.len(),
+            });
+        }
+        let mut grad_sigs = vec![0.0; b * self.slen];
+        gemm(b, self.rank, self.slen, grad_phi, &self.sketch, &mut grad_sigs);
+        try_batch_signature_vjp(x, &grad_sigs, &self.sig_opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::lowrank::try_gram_lowrank;
+    use crate::kernel::{try_gram, KernelOptions};
+    use crate::util::linalg::rel_err;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn same_seed_is_deterministic_different_seed_is_not() {
+        let exec = ExecOptions::default();
+        let a = RandomSigFeatures::try_new(2, 3, 8, 7, SketchKind::Gaussian, exec).unwrap();
+        let b = RandomSigFeatures::try_new(2, 3, 8, 7, SketchKind::Gaussian, exec).unwrap();
+        let c = RandomSigFeatures::try_new(2, 3, 8, 8, SketchKind::Gaussian, exec).unwrap();
+        assert_eq!(a.sketch, b.sketch);
+        assert_ne!(a.sketch, c.sketch);
+    }
+
+    /// With a large rank the sketched Gram concentrates on the truncated
+    /// signature Gram, which itself approximates the kernel for small paths.
+    #[test]
+    fn sketched_gram_approximates_exact_gram() {
+        let mut rng = Rng::new(510);
+        let (n, l, d) = (5, 4, 2);
+        let data = rng.brownian_batch(n, l, d, 0.2);
+        let xb = PathBatch::uniform(&data, n, l, d).unwrap();
+        let exact = try_gram(&xb, &xb, &KernelOptions::default().dyadic(4, 4)).unwrap();
+        let f = RandomSigFeatures::try_new(
+            d,
+            6,
+            4096,
+            11,
+            SketchKind::Rademacher,
+            ExecOptions::default(),
+        )
+        .unwrap();
+        let approx = try_gram_lowrank(&f, &xb, &xb).unwrap();
+        let err = rel_err(&approx, &exact);
+        assert!(err < 0.05, "rel err {err}");
+    }
+
+    #[test]
+    fn hostile_shapes_error_cleanly() {
+        let exec = ExecOptions::default();
+        assert!(matches!(
+            RandomSigFeatures::try_new(2, 3, 0, 1, SketchKind::Gaussian, exec),
+            Err(SigError::Invalid(_))
+        ));
+        assert!(matches!(
+            RandomSigFeatures::try_new(2, 0, 4, 1, SketchKind::Gaussian, exec),
+            Err(SigError::ZeroDepth)
+        ));
+        assert!(matches!(
+            RandomSigFeatures::try_new(64, 64, 1 << 20, 1, SketchKind::Gaussian, exec),
+            Err(SigError::TooLarge(_))
+        ));
+    }
+}

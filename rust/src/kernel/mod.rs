@@ -10,6 +10,7 @@ pub mod delta;
 pub mod gram;
 pub mod krr;
 pub mod lift;
+pub mod lowrank;
 pub mod pde_baseline;
 pub mod solver;
 
@@ -19,9 +20,14 @@ pub use delta::{delta_matrix, delta_vjp_to_paths};
 pub use gram::{
     batch_kernel, batch_kernel_vjp, gram, gram_vjp, mmd2, mmd2_with_grad, try_batch_kernel,
     try_batch_kernel_vjp, try_gram, try_gram_vjp, try_mmd2, try_mmd2_unbiased,
-    try_mmd2_with_grad,
+    try_mmd2_unbiased_with_grad, try_mmd2_with_grad,
 };
 pub use krr::KernelRidge;
+pub use lowrank::{
+    try_gram_lowrank, try_mmd2_lowrank, try_mmd2_lowrank_unbiased, try_mmd2_lowrank_with_grad,
+    FeatureMap, LowRankFeatures, LowRankMethod, LowRankRidge, LowRankSpec, NystromFeatures,
+    RandomSigFeatures, SketchKind,
+};
 pub use lift::{lifted_delta, sig_kernel_lifted, StaticKernel};
 pub use pde_baseline::sig_kernel_vjp_pde_approx;
 pub use solver::{solve_pde, solve_pde_grid, solve_pde_grid_into, solve_pde_with};

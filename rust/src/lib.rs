@@ -30,6 +30,18 @@
 //!   variants and exact vjps (plus the flat-slice convenience wrappers).
 //! * [`kernel`] — signature kernels via the Goursat PDE, Gram matrices,
 //!   MMD², kernel ridge regression and exact vjps.
+//! * [`kernel::lowrank`] — **scaling beyond exact Grams**: the exact Gram
+//!   is O(n²·L²) in corpus size n; Nyström landmarks and random
+//!   truncated-signature features give explicit rank-r maps Φ with
+//!   k(x, y) ≈ φ(x)·φ(y), making Gram/MMD²/KRR O(n·r²)
+//!   ([`try_gram_lowrank`](kernel::try_gram_lowrank),
+//!   [`try_mmd2_lowrank`](kernel::try_mmd2_lowrank),
+//!   [`KernelRidge::try_fit_lowrank`](kernel::KernelRidge::try_fit_lowrank)).
+//!   Prefer Nyström when fidelity to the exact PDE kernel matters (exact at
+//!   full rank; landmarks from the reference batch keep training gradients
+//!   exact); prefer random signature features when the map must be
+//!   data-independent or PDE solves dominate. First-class engine plans:
+//!   [`OpSpec::{GramLowRank, Mmd2LowRank, KrrLowRank}`](engine::OpSpec).
 //! * [`transforms`] — time-augmentation / lead-lag / basepoint, fused
 //!   on-the-fly into every sweep.
 //! * [`coordinator`] — the serving layer: a validated binary wire protocol

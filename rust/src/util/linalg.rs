@@ -76,6 +76,120 @@ pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
+/// Pivoted (rank-revealing) Cholesky factorisation of a symmetric PSD
+/// matrix `a` (`[n, n]` row-major): finds a permutation π and a
+/// lower-trapezoidal factor L such that `a[π,π] ≈ L·Lᵀ`, stopping after
+/// `r` pivots once the largest residual diagonal drops below
+/// `tol · max(initial diagonal)`.
+///
+/// Returns `(l, perm, r)` where `l` is `[n, n]` row-major in *pivoted* order
+/// (only the first `r` columns are meaningful; the leading `r × r` block is
+/// lower triangular with positive diagonal) and `perm[i]` is the original
+/// index of pivoted row `i`. For a strictly positive-definite input and
+/// `tol = 0` this is the ordinary Cholesky factorisation up to pivoting.
+///
+/// This is the factorisation behind the Nyström feature map
+/// ([`kernel::lowrank`](crate::kernel::lowrank)): the leading `r` pivots are
+/// a numerically well-conditioned landmark subset, and `K_{Z'Z'} = L₁·L₁ᵀ`
+/// holds *exactly* for that subset (the truncation only drops directions the
+/// remaining landmarks barely span).
+pub fn pivoted_cholesky(a: &[f64], n: usize, tol: f64) -> (Vec<f64>, Vec<usize>, usize) {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0; n * n];
+    let mut perm: Vec<usize> = (0..n).collect();
+    // Residual diagonal, indexed by *pivoted* position.
+    let mut d: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    let max_diag = d.iter().cloned().fold(0.0, f64::max);
+    let threshold = (tol * max_diag).max(0.0);
+    for k in 0..n {
+        // Greedy pivot: the largest residual diagonal.
+        let (j, &dj) = d[k..]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, v)| (k + i, v))
+            .expect("k < n");
+        if !(dj > threshold) || !dj.is_finite() {
+            return (l, perm, k);
+        }
+        if j != k {
+            perm.swap(k, j);
+            d.swap(k, j);
+            for p in 0..k {
+                l.swap(k * n + p, j * n + p);
+            }
+        }
+        let lkk = dj.sqrt();
+        l[k * n + k] = lkk;
+        for i in k + 1..n {
+            let mut s = a[perm[i] * n + perm[k]];
+            for p in 0..k {
+                s -= l[i * n + p] * l[k * n + p];
+            }
+            let lik = s / lkk;
+            l[i * n + k] = lik;
+            d[i] -= lik * lik;
+        }
+    }
+    (l, perm, n)
+}
+
+/// In-place forward substitution: solve `L·z = x` for the lower-triangular
+/// leading `r × r` block of `l` (row-major with row stride `stride`),
+/// overwriting `x[..r]` with `z`.
+pub fn forward_substitute(l: &[f64], stride: usize, r: usize, x: &mut [f64]) {
+    debug_assert!(x.len() >= r);
+    for i in 0..r {
+        let mut s = x[i];
+        for j in 0..i {
+            s -= l[i * stride + j] * x[j];
+        }
+        x[i] = s / l[i * stride + i];
+    }
+}
+
+/// In-place back substitution against the transpose: solve `Lᵀ·z = x` for
+/// the lower-triangular leading `r × r` block of `l`, overwriting `x[..r]`.
+pub fn back_substitute_t(l: &[f64], stride: usize, r: usize, x: &mut [f64]) {
+    debug_assert!(x.len() >= r);
+    for i in (0..r).rev() {
+        let mut s = x[i];
+        for j in i + 1..r {
+            s -= l[j * stride + i] * x[j];
+        }
+        x[i] = s / l[i * stride + i];
+    }
+}
+
+/// Solve the symmetric positive-definite system `A·x = b` (`[n, n]`
+/// row-major) by unpivoted Cholesky + two triangular solves. `None` if a
+/// pivot fails (A not numerically PD) — callers add a ridge and retry.
+pub fn solve_spd(a: &[f64], n: usize, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if !(s > 0.0) || !s.is_finite() {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    let mut x = b.to_vec();
+    forward_substitute(&l, n, n, &mut x);
+    back_substitute_t(&l, n, n, &mut x);
+    Some(x)
+}
+
 /// Max absolute difference between two slices.
 pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -149,6 +263,88 @@ mod tests {
         gemm_nt(m, k, n, &a, &bt, &mut c1);
         gemm(m, k, n, &a, &b, &mut c2);
         assert!(max_abs_diff(&c1, &c2) < 1e-10);
+    }
+
+    /// Build a random symmetric PSD matrix B·Bᵀ of the given rank.
+    fn random_psd(r: &mut Rng, n: usize, rank: usize) -> Vec<f64> {
+        let mut b = vec![0.0; n * rank];
+        r.fill_normal(&mut b);
+        let mut a = vec![0.0; n * n];
+        gemm_nt(n, rank, n, &b, &b, &mut a);
+        a
+    }
+
+    #[test]
+    fn pivoted_cholesky_reconstructs_full_rank_pd() {
+        let mut r = Rng::new(21);
+        for n in [1usize, 3, 7, 12] {
+            let a = random_psd(&mut r, n, n + 2); // full rank a.s.
+            let (l, perm, rank) = pivoted_cholesky(&a, n, 1e-12);
+            assert_eq!(rank, n);
+            // a[perm[i], perm[j]] == (L·Lᵀ)[i, j]
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..rank {
+                        s += l[i * n + k] * l[j * n + k];
+                    }
+                    assert!(
+                        (s - a[perm[i] * n + perm[j]]).abs() < 1e-9,
+                        "n={n} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pivoted_cholesky_reveals_rank_deficiency() {
+        let mut r = Rng::new(22);
+        let (n, true_rank) = (8, 3);
+        let a = random_psd(&mut r, n, true_rank);
+        let (l, perm, rank) = pivoted_cholesky(&a, n, 1e-10);
+        assert_eq!(rank, true_rank);
+        // The truncated factor still reconstructs the matrix.
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..rank {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[perm[i] * n + perm[j]]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn pivoted_cholesky_zero_matrix_has_rank_zero() {
+        let (_, _, rank) = pivoted_cholesky(&[0.0; 9], 3, 1e-12);
+        assert_eq!(rank, 0);
+    }
+
+    #[test]
+    fn triangular_solves_invert_each_other() {
+        // L = [[2,0],[1,3]]; solve L z = b then Lᵀ w = z reproduces
+        // (L Lᵀ)⁻¹ b.
+        let l = [2.0, 0.0, 1.0, 3.0];
+        let b = [4.0, 11.0];
+        let mut z = b.to_vec();
+        forward_substitute(&l, 2, 2, &mut z);
+        assert!((z[0] - 2.0).abs() < 1e-14 && (z[1] - 3.0).abs() < 1e-14);
+        back_substitute_t(&l, 2, 2, &mut z);
+        // Check against solve_spd on A = L Lᵀ.
+        let a = [4.0, 2.0, 2.0, 10.0];
+        let x = solve_spd(&a, 2, &b).unwrap();
+        assert!(max_abs_diff(&z, &x) < 1e-12);
+    }
+
+    #[test]
+    fn solve_spd_matches_direct_solution_and_rejects_indefinite() {
+        let a = [3.0, 1.0, 1.0, 3.0];
+        let x = solve_spd(&a, 2, &[5.0, 7.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+        let indef = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(solve_spd(&indef, 2, &[1.0, 1.0]).is_none());
     }
 
     #[test]

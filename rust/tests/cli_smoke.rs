@@ -72,6 +72,61 @@ fn kernel_command_runs_ragged() {
 }
 
 #[test]
+fn kernel_command_runs_lifted() {
+    // The static-kernel lift is reachable from the CLI (RBF and linear).
+    let args: Vec<String> = [
+        "kernel", "--batch", "3", "--len", "10", "--dim", "2", "--lifted", "rbf", "--sigma",
+        "0.8",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(pysiglib::cli::cli_main(&args), 0);
+    let args: Vec<String> = [
+        "kernel", "--batch", "3", "--len", "10", "--dim", "2", "--lifted", "linear",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(pysiglib::cli::cli_main(&args), 0);
+    // Unknown static kernel is a usage error.
+    let args: Vec<String> = ["kernel", "--lifted", "cubic"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_ne!(pysiglib::cli::cli_main(&args), 0);
+}
+
+#[test]
+fn mmd_command_runs_exact_and_lowrank() {
+    let base = ["mmd", "--batch", "6", "--len", "10", "--dim", "2"];
+    let exact: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    assert_eq!(pysiglib::cli::cli_main(&exact), 0);
+    let mut nystrom: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    nystrom.extend(["--landmarks".to_string(), "3".to_string()]);
+    assert_eq!(pysiglib::cli::cli_main(&nystrom), 0);
+    let mut randsig: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    randsig.extend(
+        ["--rank", "8", "--features", "randsig", "--depth", "3", "--unbiased"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    assert_eq!(pysiglib::cli::cli_main(&randsig), 0);
+    // Unknown feature family is a usage error.
+    let mut bad: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    bad.extend(["--rank".to_string(), "4".to_string(), "--features".to_string(), "magic".to_string()]);
+    assert_ne!(pysiglib::cli::cli_main(&bad), 0);
+    // --landmarks means Nyström; combining it with randsig is a usage error.
+    let mut conflict: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    conflict.extend(
+        ["--landmarks", "3", "--features", "randsig"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    assert_ne!(pysiglib::cli::cli_main(&conflict), 0);
+}
+
+#[test]
 fn selfcheck_passes() {
     assert_eq!(pysiglib::cli::cli_main(&["selfcheck".into()]), 0);
 }

@@ -231,6 +231,97 @@ fn mmd2_record_vjp_matches_fd_and_backward_bitwise() {
     }
 }
 
+/// The previously uncovered vjp-family member: unbiased MMD² through
+/// `ExecutionRecord::vjp` against central finite differences, and
+/// bit-for-bit against the `try_mmd2_unbiased_with_grad` entry point.
+#[test]
+fn mmd2_unbiased_record_vjp_matches_fd() {
+    let mut rng = Rng::new(306);
+    let (bx, by, l, d) = (3usize, 4usize, 4usize, 2usize);
+    let x = rng.brownian_batch(bx, l, d, 0.4);
+    let y = rng.brownian_batch(by, l, d, 0.5);
+    let xb = PathBatch::uniform(&x, bx, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, by, l, d).unwrap();
+    // Asymmetric dyadic orders: the discretised kernel is not symmetric in
+    // its arguments, so this exercises the both-slots Kxx backward.
+    let opts = KernelOptions::default().dyadic(1, 0);
+
+    let plan = Plan::compile(OpSpec::Mmd2Unbiased(opts), ShapeClass::uniform(d, l)).unwrap();
+    let rec = plan.execute_pair(&xb, &yb).unwrap();
+    // Forward value matches the typed entry point.
+    let want_value = pysiglib::kernel::try_mmd2_unbiased(&xb, &yb, &opts).unwrap();
+    assert_eq!(rec.value(), want_value);
+    let grad = match rec.vjp(&[1.0]).unwrap() {
+        Gradients::Single(g) => g,
+        _ => panic!("mmd2_unbiased vjp is single-gradient"),
+    };
+    // Bit-for-bit identical to the with-grad entry point.
+    let (value, want) = pysiglib::kernel::try_mmd2_unbiased_with_grad(&xb, &yb, &opts).unwrap();
+    assert_eq!(value, want_value);
+    assert_eq!(grad, want);
+
+    let f = |xs: &[f64]| -> f64 {
+        let xb = PathBatch::uniform(xs, bx, l, d).unwrap();
+        pysiglib::kernel::try_mmd2_unbiased(&xb, &yb, &opts).unwrap()
+    };
+    let eps = 1e-5;
+    for idx in 0..x.len() {
+        let mut p = x.clone();
+        p[idx] += eps;
+        let fp = f(&p);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&p);
+        fd_check((fp - fm) / (2.0 * eps), grad[idx], "mmd2_unbiased");
+    }
+}
+
+/// Same check on a ragged batch: mixed path lengths through the U-statistic
+/// vjp, gradients in x's own ragged layout.
+#[test]
+fn mmd2_unbiased_record_vjp_matches_fd_ragged() {
+    let mut rng = Rng::new(307);
+    let d = 2;
+    let xl = [3usize, 5, 4];
+    let yl = [4usize, 2, 6];
+    let (mut xdata, mut ydata) = (Vec::new(), Vec::new());
+    for &l in &xl {
+        xdata.extend(rng.brownian_path(l, d, 0.4));
+    }
+    for &l in &yl {
+        ydata.extend(rng.brownian_path(l, d, 0.5));
+    }
+    let xb = PathBatch::ragged(&xdata, &xl, d).unwrap();
+    let yb = PathBatch::ragged(&ydata, &yl, d).unwrap();
+    let opts = KernelOptions::default();
+
+    let plan = Plan::compile(OpSpec::Mmd2Unbiased(opts), ShapeClass::for_pair(&xb, &yb)).unwrap();
+    let rec = plan.execute_pair(&xb, &yb).unwrap();
+    let grad = match rec.vjp(&[1.0]).unwrap() {
+        Gradients::Single(g) => g,
+        _ => panic!("mmd2_unbiased vjp is single-gradient"),
+    };
+    assert_eq!(grad.len(), xb.total_points() * d);
+    let f = |xs: &[f64]| -> f64 {
+        let xb = PathBatch::ragged(xs, &xl, d).unwrap();
+        pysiglib::kernel::try_mmd2_unbiased(&xb, &yb, &opts).unwrap()
+    };
+    let eps = 1e-5;
+    for idx in 0..xdata.len() {
+        let mut p = xdata.clone();
+        p[idx] += eps;
+        let fp = f(&p);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&p);
+        fd_check((fp - fm) / (2.0 * eps), grad[idx], "mmd2_unbiased ragged");
+    }
+    // Batches below the U-statistic minimum error cleanly.
+    let one = PathBatch::ragged(&xdata[..3 * d], &[3], d).unwrap();
+    assert!(matches!(
+        pysiglib::kernel::try_mmd2_unbiased(&one, &yb, &opts),
+        Err(pysiglib::SigError::InsufficientBatch { need: 2, .. })
+    ));
+}
+
 /// Plan-cached execution is bit-identical to one-shot execution, on uniform
 /// and ragged batches, across repeated warm-cache runs.
 #[test]

@@ -304,6 +304,74 @@ fn ragged_kernel_pairs_over_the_wire() {
     }
 }
 
+/// Low-rank MMD² over the wire: the rank field reaches the engine, the
+/// response matches direct computation with the wire's fixed seed, and a
+/// bad corpus split is an error response, not a dead connection.
+#[test]
+fn lowrank_mmd_over_the_wire() {
+    use pysiglib::engine::{OpSpec, Plan, ShapeClass};
+    use pysiglib::kernel::{KernelOptions, LowRankSpec};
+    use pysiglib::PathBatch;
+
+    let (_h, addr, _b) = start_server(4, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(108);
+    let d = 2;
+    let xs: Vec<Vec<f64>> = [5usize, 7, 6]
+        .iter()
+        .map(|&l| rng.brownian_path(l, d, 0.4))
+        .collect();
+    let ys: Vec<Vec<f64>> = [6usize, 4, 8, 5]
+        .iter()
+        .map(|&l| rng.brownian_path(l, d, 0.5))
+        .collect();
+    let xrefs: Vec<&[f64]> = xs.iter().map(|p| p.as_slice()).collect();
+    let yrefs: Vec<&[f64]> = ys.iter().map(|p| p.as_slice()).collect();
+    let rank = 3u32;
+    let got = client.mmd2_lowrank(&xrefs, &yrefs, d, rank).unwrap().unwrap();
+
+    // Reference: the same engine plan with the wire's fixed seed.
+    let (mut xflat, mut yflat) = (Vec::new(), Vec::new());
+    for p in &xs {
+        xflat.extend_from_slice(p);
+    }
+    for p in &ys {
+        yflat.extend_from_slice(p);
+    }
+    let xb = PathBatch::ragged(&xflat, &[5, 7, 6], d).unwrap();
+    let yb = PathBatch::ragged(&yflat, &[6, 4, 8, 5], d).unwrap();
+    let plan = Plan::compile_forward(
+        OpSpec::Mmd2LowRank {
+            opts: KernelOptions::default(),
+            lowrank: LowRankSpec::nystrom(
+                rank as usize,
+                pysiglib::coordinator::WIRE_LOWRANK_SEED,
+            ),
+        },
+        ShapeClass::for_pair(&xb, &yb).bucketed(),
+    )
+    .unwrap();
+    let want = plan.execute_pair(&xb, &yb).unwrap().value();
+    assert_eq!(got, want);
+
+    // nx = 0 (empty x corpus) is a soft error; the connection keeps serving.
+    let r = client
+        .call_ragged(
+            Op::Mmd2LowRank {
+                rank,
+                nx: 0,
+                transform: 0,
+            },
+            d,
+            vec![5, 7],
+            vec![0.0; 24],
+        )
+        .unwrap();
+    assert!(r.is_err());
+    let path = rng.brownian_path(6, 2, 0.5);
+    assert!(client.signature(&path, 6, 2, 2).unwrap().is_ok());
+}
+
 /// A malformed ragged frame (lengths disagreeing with the payload) errors
 /// without killing the connection.
 #[test]

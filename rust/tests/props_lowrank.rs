@@ -1,0 +1,338 @@
+//! Low-rank subsystem acceptance tests: exact recovery at full rank,
+//! monotone MMD² convergence in rank on a seeded corpus, and
+//! finite-difference gradient checks for the low-rank vjps through
+//! `ExecutionRecord::vjp`.
+
+use pysiglib::engine::{Gradients, OpSpec, Plan, ShapeClass};
+use pysiglib::kernel::lowrank::LowRankMethod;
+use pysiglib::kernel::{
+    try_gram, try_gram_lowrank, try_mmd2, try_mmd2_lowrank, try_mmd2_lowrank_with_grad,
+    FeatureMap, KernelOptions, LowRankFeatures, LowRankSpec, NystromFeatures, SketchKind,
+};
+use pysiglib::util::linalg::max_abs_diff;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+fn fd_check(fd: f64, got: f64, what: &str) {
+    assert!(
+        (fd - got).abs() < 1e-6 * (1.0 + fd.abs()),
+        "{what}: finite difference {fd} vs vjp {got}"
+    );
+}
+
+/// Nyström with every point as a landmark reproduces the exact Gram to
+/// ≤ 1e-8 — through the free-function layer and through a `GramLowRank`
+/// engine plan (whose landmarks are drawn from the second batch = x here).
+#[test]
+fn nystrom_full_rank_recovers_exact_gram() {
+    let mut rng = Rng::new(600);
+    let (n, l, d) = (6usize, 5usize, 2usize);
+    let data = rng.brownian_batch(n, l, d, 0.25);
+    let xb = PathBatch::uniform(&data, n, l, d).unwrap();
+    let opts = KernelOptions::default();
+    let exact = try_gram(&xb, &xb, &opts).unwrap();
+
+    let f = NystromFeatures::try_new(&xb, &opts).unwrap();
+    let approx = try_gram_lowrank(&f, &xb, &xb).unwrap();
+    let err = max_abs_diff(&approx, &exact);
+    assert!(err <= 1e-8, "free-function full-rank recovery: err {err}");
+
+    let plan = Plan::compile_forward(
+        OpSpec::GramLowRank {
+            opts,
+            lowrank: LowRankSpec::nystrom(n, 123),
+        },
+        ShapeClass::uniform(d, l),
+    )
+    .unwrap();
+    let rec = plan.execute_pair(&xb, &xb).unwrap();
+    let err = max_abs_diff(rec.values(), &exact);
+    assert!(err <= 1e-8, "engine full-rank recovery: err {err}");
+}
+
+/// Same recovery property on a ragged corpus (mixed path lengths).
+#[test]
+fn nystrom_full_rank_recovers_exact_gram_ragged() {
+    let mut rng = Rng::new(601);
+    let d = 2;
+    let lengths = [4usize, 7, 2, 5, 6];
+    let mut data = Vec::new();
+    for &l in &lengths {
+        data.extend(rng.brownian_path(l, d, 0.25));
+    }
+    let xb = PathBatch::ragged(&data, &lengths, d).unwrap();
+    // Symmetric dyadic orders: Nyström targets the symmetric kernel, and
+    // exact recovery is only defined when k(x, y) = k(y, x) holds for the
+    // discretised solve too.
+    let opts = KernelOptions::default().dyadic(1, 1);
+    let exact = try_gram(&xb, &xb, &opts).unwrap();
+    let f = NystromFeatures::try_new(&xb, &opts).unwrap();
+    let approx = try_gram_lowrank(&f, &xb, &xb).unwrap();
+    let err = max_abs_diff(&approx, &exact);
+    assert!(err <= 1e-8, "ragged full-rank recovery: err {err}");
+}
+
+/// With nested landmark prefixes of the pooled corpus, the biased low-rank
+/// MMD² is a quadratic form in the Nyström Gram, whose error is PSD and
+/// Loewner-decreasing in the landmark set — so the approximation approaches
+/// the exact MMD² from below, monotonically, and hits it at full rank.
+#[test]
+fn lowrank_mmd2_converges_monotonically_in_rank() {
+    let mut rng = Rng::new(602);
+    let (b, l, d) = (8usize, 6usize, 2usize);
+    let x = rng.brownian_batch(b, l, d, 0.3);
+    let y = rng.brownian_batch(b, l, d, 0.5);
+    let xb = PathBatch::uniform(&x, b, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, b, l, d).unwrap();
+    // A refined grid keeps the discretised kernel comfortably PSD, which the
+    // Loewner-monotonicity argument relies on.
+    let opts = KernelOptions::default().dyadic(1, 1);
+    let exact = try_mmd2(&xb, &yb, &opts).unwrap();
+    let mut pooled = x.clone();
+    pooled.extend_from_slice(&y);
+    let mut prev_err = f64::INFINITY;
+    for r in [2usize, 4, 8, 16] {
+        let zb = PathBatch::uniform(&pooled[..r * l * d], r, l, d).unwrap();
+        let f = NystromFeatures::try_new(&zb, &opts).unwrap();
+        let lr = try_mmd2_lowrank(&f, &xb, &yb).unwrap();
+        // One-sided: wᵀK̂w ≤ wᵀKw since K − K̂ is PSD.
+        assert!(lr <= exact + 1e-9, "rank {r}: {lr} > exact {exact}");
+        let err = exact - lr;
+        assert!(
+            err <= prev_err + 1e-9,
+            "rank {r}: error {err} worse than previous {prev_err}"
+        );
+        prev_err = err;
+    }
+    // Full pooled rank: exact recovery.
+    assert!(prev_err.abs() <= 1e-8, "full-rank error {prev_err}");
+}
+
+/// FD gradient check for `try_mmd2_lowrank` through `ExecutionRecord::vjp`,
+/// for both feature families. Landmarks come from y, and the random sketch
+/// from the seed alone, so the map is constant in x and central finite
+/// differences of the plan's forward value are the true gradient.
+#[test]
+fn mmd2_lowrank_record_vjp_matches_fd() {
+    let mut rng = Rng::new(603);
+    let (bx, by, l, d) = (3usize, 4usize, 4usize, 2usize);
+    let x = rng.brownian_batch(bx, l, d, 0.4);
+    let y = rng.brownian_batch(by, l, d, 0.5);
+    let xb = PathBatch::uniform(&x, bx, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, by, l, d).unwrap();
+    let opts = KernelOptions::default();
+    let specs = [
+        ("nystrom", LowRankSpec::nystrom(3, 42)),
+        (
+            "randsig",
+            LowRankSpec {
+                method: LowRankMethod::RandomSig {
+                    depth: 3,
+                    sketch: SketchKind::Gaussian,
+                },
+                rank: 6,
+                seed: 42,
+            },
+        ),
+    ];
+    for (name, lowrank) in specs {
+        let plan = Plan::compile(
+            OpSpec::Mmd2LowRank { opts, lowrank },
+            ShapeClass::uniform(d, l),
+        )
+        .unwrap();
+        let rec = plan.execute_pair(&xb, &yb).unwrap();
+        let grad = match rec.vjp(&[1.0]).unwrap() {
+            Gradients::Single(g) => g,
+            _ => panic!("mmd2_lowrank vjp is single-gradient"),
+        };
+        assert_eq!(grad.len(), bx * l * d);
+        let f = |xs: &[f64]| -> f64 {
+            let xb = PathBatch::uniform(xs, bx, l, d).unwrap();
+            plan.execute_pair(&xb, &yb).unwrap().value()
+        };
+        let eps = 1e-5;
+        for idx in 0..x.len() {
+            let mut p = x.clone();
+            p[idx] += eps;
+            let fp = f(&p);
+            p[idx] -= 2.0 * eps;
+            let fm = f(&p);
+            fd_check((fp - fm) / (2.0 * eps), grad[idx], name);
+        }
+        // The free-function gradient route agrees with the record route.
+        let map = FeatureMap::try_build(&lowrank, &opts, &yb).unwrap();
+        let (value, fgrad) = try_mmd2_lowrank_with_grad(&map, &xb, &yb).unwrap();
+        assert_eq!(value, rec.value(), "{name}");
+        assert_eq!(fgrad, grad, "{name}");
+    }
+}
+
+/// FD gradient check for the low-rank Gram vjp: with random signature
+/// features the map is data-independent, so both the x and y gradients are
+/// exact (no frozen-landmark caveat).
+#[test]
+fn gram_lowrank_record_vjp_matches_fd_for_randsig() {
+    let mut rng = Rng::new(604);
+    let (bx, by, l, d) = (2usize, 3usize, 4usize, 2usize);
+    let x = rng.brownian_batch(bx, l, d, 0.4);
+    let y = rng.brownian_batch(by, l, d, 0.4);
+    let xb = PathBatch::uniform(&x, bx, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, by, l, d).unwrap();
+    let opts = KernelOptions::default();
+    let lowrank = LowRankSpec {
+        method: LowRankMethod::RandomSig {
+            depth: 3,
+            sketch: SketchKind::Rademacher,
+        },
+        rank: 5,
+        seed: 9,
+    };
+    let mut w = vec![0.0; bx * by];
+    rng.fill_normal(&mut w);
+    let plan = Plan::compile(
+        OpSpec::GramLowRank { opts, lowrank },
+        ShapeClass::uniform(d, l),
+    )
+    .unwrap();
+    let rec = plan.execute_pair(&xb, &yb).unwrap();
+    let (gx, gy) = match rec.vjp(&w).unwrap() {
+        Gradients::Pair(gx, gy) => (gx, gy),
+        _ => panic!("gram vjp is pair-input"),
+    };
+    let f = |xs: &[f64], ys: &[f64]| -> f64 {
+        let xb = PathBatch::uniform(xs, bx, l, d).unwrap();
+        let yb = PathBatch::uniform(ys, by, l, d).unwrap();
+        let g = plan.execute_pair(&xb, &yb).unwrap().into_values();
+        g.iter().zip(w.iter()).map(|(a, b)| a * b).sum()
+    };
+    let eps = 1e-6;
+    for idx in 0..x.len() {
+        let mut p = x.clone();
+        p[idx] += eps;
+        let fp = f(&p, &y);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&p, &y);
+        fd_check((fp - fm) / (2.0 * eps), gx[idx], "gram_lowrank grad_x");
+    }
+    for idx in 0..y.len() {
+        let mut p = y.clone();
+        p[idx] += eps;
+        let fp = f(&x, &p);
+        p[idx] -= 2.0 * eps;
+        let fm = f(&x, &p);
+        fd_check((fp - fm) / (2.0 * eps), gy[idx], "gram_lowrank grad_y");
+    }
+}
+
+/// Low-rank plans are first-class engine citizens: cacheable per
+/// (spec, shape) with warm hits bit-identical, feature matrices retained on
+/// the record, and the KRR variant fit through `execute_fit`.
+#[test]
+fn lowrank_plans_cache_retain_and_fit() {
+    let mut rng = Rng::new(605);
+    let (b, l, d) = (6usize, 5usize, 2usize);
+    let x = rng.brownian_batch(b, l, d, 0.3);
+    let y = rng.brownian_batch(b, l, d, 0.4);
+    let xb = PathBatch::uniform(&x, b, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, b, l, d).unwrap();
+    let opts = KernelOptions::default();
+    let lowrank = LowRankSpec::nystrom(4, 11);
+
+    let session = pysiglib::engine::Session::new();
+    let spec = OpSpec::GramLowRank { opts, lowrank };
+    let shape = ShapeClass::uniform(d, l);
+    let p1 = session.forward_plan(spec, shape).unwrap();
+    let first = p1.execute_pair(&xb, &yb).unwrap().into_values();
+    let p2 = session.forward_plan(spec, shape).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&p1, &p2), "lowrank plans must cache");
+    assert_eq!(p2.execute_pair(&xb, &yb).unwrap().values(), &first[..]);
+    // A different rank is a different plan.
+    let p3 = session
+        .forward_plan(
+            OpSpec::GramLowRank {
+                opts,
+                lowrank: LowRankSpec::nystrom(2, 11),
+            },
+            shape,
+        )
+        .unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&p1, &p3));
+
+    // Retained features reproduce the Gram.
+    let plan = Plan::compile(spec, shape).unwrap();
+    let rec = plan.execute_pair(&xb, &yb).unwrap();
+    let (phi_x, phi_y, r) = rec.lowrank_features().expect("features retained");
+    let mut manual = vec![0.0; b * b];
+    for i in 0..b {
+        for j in 0..b {
+            manual[i * b + j] = (0..r).map(|q| phi_x[i * r + q] * phi_y[j * r + q]).sum();
+        }
+    }
+    assert!(max_abs_diff(&manual, rec.values()) < 1e-12);
+
+    // KRR low-rank: plan-backed fit predicts the training targets at full
+    // rank with a tiny ridge (interpolation, like the exact KRR).
+    let targets: Vec<f64> = (0..b).map(|i| (i as f64 * 0.37).sin()).collect();
+    let model = pysiglib::kernel::KernelRidge::try_fit_lowrank(
+        &xb,
+        &targets,
+        1e-8,
+        LowRankSpec::nystrom(b, 3),
+        &opts,
+    )
+    .unwrap();
+    let pred = model.try_predict(&xb).unwrap();
+    let err = pysiglib::util::linalg::rel_err(&pred, &targets);
+    assert!(err < 1e-3, "full-rank lowrank KRR train rel err {err}");
+    assert_eq!(model.weights().len(), model.feature_map().rank());
+}
+
+/// Hostile low-rank specs are rejected at plan compilation, not at execute.
+#[test]
+fn hostile_lowrank_specs_rejected_at_compile() {
+    use pysiglib::SigError;
+    let opts = KernelOptions::default();
+    let shape = ShapeClass::uniform(2, 8);
+    assert!(matches!(
+        Plan::compile(
+            OpSpec::GramLowRank {
+                opts,
+                lowrank: LowRankSpec::nystrom(0, 1),
+            },
+            shape
+        ),
+        Err(SigError::Invalid(_))
+    ));
+    assert!(matches!(
+        Plan::compile(
+            OpSpec::Mmd2LowRank {
+                opts,
+                lowrank: LowRankSpec::random_sig(4, 0, 1),
+            },
+            shape
+        ),
+        Err(SigError::ZeroDepth)
+    ));
+    assert!(matches!(
+        Plan::compile(
+            OpSpec::Mmd2LowRank {
+                opts,
+                lowrank: LowRankSpec::random_sig(usize::MAX / 2, 8, 1),
+            },
+            shape
+        ),
+        Err(SigError::TooLarge(_))
+    ));
+    assert!(matches!(
+        Plan::compile(
+            OpSpec::KrrLowRank {
+                opts,
+                lowrank: LowRankSpec::nystrom(4, 1),
+                lambda: 0.0,
+            },
+            shape
+        ),
+        Err(SigError::NonFinite(_))
+    ));
+}
