@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Bench-regression gate.
+
+Compares freshly produced ``bench_results/BENCH_<suite>.json`` files
+against the committed repo-root ``BENCH_<suite>.json`` baselines and
+fails (exit 1) when any timed case's median regresses more than
+``--threshold`` (default 1.3x) against its baseline median.
+
+Rules:
+
+* Every baseline file must have a matching fresh results file, and every
+  timed baseline case (``runs > 0`` with a numeric median) must appear in
+  the fresh results — a silently renamed or dropped case is a gate
+  failure, not a skip.
+* Derived rows (``runs == 0``, e.g. speedup ratios) and ``null`` medians
+  (failure markers) are not timing measurements and are skipped.
+* Fresh cases with no baseline are reported informationally; add them to
+  the baseline when they stabilise.
+* A fresh median far below baseline (< baseline/2) is flagged as
+  headroom: the committed baseline is a bootstrap envelope written
+  without hardware access, meant to be tightened to measured values by
+  the first toolchain-equipped maintainer.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_cases(path: Path):
+    doc = json.loads(path.read_text())
+    return {c["case"]: c for c in doc.get("cases", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", type=Path, default=Path("."))
+    ap.add_argument("--results-dir", type=Path, default=Path("rust/bench_results"))
+    ap.add_argument("--threshold", type=float, default=1.3)
+    args = ap.parse_args()
+
+    baselines = sorted(args.baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"error: no BENCH_*.json baselines in {args.baseline_dir}", file=sys.stderr)
+        return 1
+
+    failures, headroom, compared = [], [], 0
+    for base_path in baselines:
+        fresh_path = args.results_dir / base_path.name
+        if not fresh_path.is_file():
+            failures.append(f"{base_path.name}: no fresh results at {fresh_path}")
+            continue
+        base = load_cases(base_path)
+        fresh = load_cases(fresh_path)
+        for name, bc in sorted(base.items()):
+            # Derived ratio rows may carry an "expect_min" floor (e.g. the
+            # corpus warm-over-cold speedup must stay >= 5x at n = 256).
+            floor = bc.get("expect_min")
+            if floor is not None:
+                fc = fresh.get(name)
+                val = fc.get("median_seconds") if fc else None
+                if val is None:
+                    failures.append(f"{base_path.name}: ratio row '{name}' missing")
+                elif val < floor:
+                    failures.append(
+                        f"{base_path.name}: '{name}' = {val:.2f} below the "
+                        f"required floor {floor}"
+                    )
+                else:
+                    print(f"  {base_path.name:24} {name:44} {val:>10.2f}   >= {floor} OK")
+            if not bc.get("runs"):
+                continue  # derived row (speedup ratio etc), not a timing
+            bmed = bc.get("median_seconds")
+            if bmed is None:
+                continue  # failure marker in the baseline
+            fc = fresh.get(name)
+            if fc is None:
+                failures.append(
+                    f"{base_path.name}: case '{name}' missing from fresh results "
+                    "(renamed without refreshing the baseline?)"
+                )
+                continue
+            fmed = fc.get("median_seconds")
+            if fmed is None:
+                failures.append(f"{base_path.name}: case '{name}' produced no timing")
+                continue
+            compared += 1
+            ratio = fmed / bmed if bmed > 0 else float("inf")
+            marker = ""
+            if ratio > args.threshold:
+                failures.append(
+                    f"{base_path.name}: '{name}' median {fmed:.6f}s vs baseline "
+                    f"{bmed:.6f}s ({ratio:.2f}x > {args.threshold}x)"
+                )
+                marker = "  << REGRESSION"
+            elif ratio < 0.5:
+                headroom.append(name)
+                marker = "  (headroom: tighten baseline)"
+            print(f"  {base_path.name:24} {name:44} {fmed:>10.6f}s  {ratio:>5.2f}x{marker}")
+        for name in sorted(set(fresh) - set(base)):
+            if fresh[name].get("runs"):
+                print(f"  {base_path.name:24} {name:44} (no baseline; consider adding)")
+
+    print(
+        f"\ncompared {compared} case(s); {len(failures)} failure(s); "
+        f"{len(headroom)} case(s) with >2x headroom"
+    )
+    if failures:
+        print("\nbench-regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

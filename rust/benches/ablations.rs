@@ -171,10 +171,18 @@ fn main() {
     println!("\nratios:");
     for (a, b_, what) in [
         ("sig_algo/direct(alg1)", "sig_algo/horner(alg2)", "direct/horner"),
-        ("dyadic/materialised(fullgrid)", "dyadic/on-the-fly(row-sweep)", "materialised/on-the-fly"),
+        (
+            "dyadic/materialised(fullgrid)",
+            "dyadic/on-the-fly(row-sweep)",
+            "materialised/on-the-fly",
+        ),
         ("leadlag/materialised", "leadlag/fused(on-the-fly)", "materialised/fused"),
         ("delta/naive-dots", "delta/gemm", "naive/gemm"),
-        ("pde_sweep/two-pass(tried+reverted)", "pde_sweep/fused-single-pass(shipped)", "two-pass/fused-sweep"),
+        (
+            "pde_sweep/two-pass(tried+reverted)",
+            "pde_sweep/fused-single-pass(shipped)",
+            "two-pass/fused-sweep",
+        ),
         ("threads/1", "threads/all", "1-thread/all-threads"),
     ] {
         if let (Some(x), Some(y)) = (suite.get(a), suite.get(b_)) {

@@ -1,0 +1,106 @@
+//! Corpus-serving latency: cold registration+query vs warm re-query vs
+//! incremental append+query, across corpus sizes n — the serving story of
+//! the corpus registry. A cold MMD² query pays the full O(n²) corpus
+//! self-Gram; a warm query reuses it and pays only O(q² + q·n); an append
+//! of k paths pays only the new O(k·n) strips. The derived
+//! `speedup_warm_x` rows record the headline ratio (warm re-query is
+//! expected ≥5× faster than cold at n = 256) into
+//! `bench_results/BENCH_corpus.json`.
+
+// The warm-state helper threads the full workload description; splitting it
+// into a struct would only obscure a benchmark.
+#![allow(clippy::too_many_arguments)]
+
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::corpus::CorpusRegistry;
+use pysiglib::kernel::{KernelOptions, LowRankSpec};
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+/// A registry with the corpus registered and its exact (and, when `spec` is
+/// set, low-rank) caches warmed by one query.
+fn warmed(
+    corpus: &[f64],
+    n: usize,
+    l: usize,
+    d: usize,
+    query: &[f64],
+    q: usize,
+    opts: &KernelOptions,
+    spec: Option<&LowRankSpec>,
+) -> (CorpusRegistry, pysiglib::corpus::CorpusId) {
+    let reg = CorpusRegistry::new();
+    let cb = PathBatch::uniform(corpus, n, l, d).unwrap();
+    let qb = PathBatch::uniform(query, q, l, d).unwrap();
+    let id = reg.register(&cb).unwrap();
+    reg.mmd2_query(id, &qb, opts, spec).unwrap();
+    (reg, id)
+}
+
+fn main() {
+    let runs = bench_runs(3);
+    let (l, d, q, k, rank) = (16usize, 3usize, 16usize, 16usize, 32usize);
+    let opts = KernelOptions::default();
+    let mut suite = Suite::new("corpus");
+    for n in [64usize, 128, 256] {
+        let tag = format!("n{n}");
+        let mut rng = Rng::new(95);
+        let corpus = rng.brownian_batch(n, l, d, 0.3);
+        let query = rng.brownian_batch(q, l, d, 0.35);
+        let extra = rng.brownian_batch(k, l, d, 0.3);
+        let qb = PathBatch::uniform(&query, q, l, d).unwrap();
+
+        // Cold: register + first query (builds the n×n self-Gram).
+        suite.time(&format!("{tag}/mmd2/cold"), runs, || {
+            let reg = CorpusRegistry::new();
+            let cb = PathBatch::uniform(&corpus, n, l, d).unwrap();
+            let id = reg.register(&cb).unwrap();
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, None).unwrap());
+        });
+
+        // Warm: the corpus state is cached; only K_qq and K_qc are solved.
+        let (reg, id) = warmed(&corpus, n, l, d, &query, q, &opts, None);
+        suite.time(&format!("{tag}/mmd2/warm"), runs, || {
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, None).unwrap());
+        });
+
+        // Append k paths + query: only the old×new strips are solved. Each
+        // timed run consumes its own pre-warmed registry (appending twice
+        // to one registry would grow the corpus across runs).
+        let mut pool: Vec<_> = (0..runs + 1)
+            .map(|_| warmed(&corpus, n, l, d, &query, q, &opts, None))
+            .collect();
+        suite.time(&format!("{tag}/mmd2/append{k}"), runs, || {
+            let (reg, id) = pool.pop().expect("one registry per run");
+            let eb = PathBatch::uniform(&extra, k, l, d).unwrap();
+            reg.append(id, &eb).unwrap();
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, None).unwrap());
+        });
+
+        // Low-rank (Nyström rank 32): cold builds the feature map + Φ_c,
+        // warm featurises only the q query rows.
+        let spec = LowRankSpec::nystrom(rank, 7);
+        suite.time(&format!("{tag}/mmd2_lowrank_r{rank}/cold"), runs, || {
+            let reg = CorpusRegistry::new();
+            let cb = PathBatch::uniform(&corpus, n, l, d).unwrap();
+            let id = reg.register(&cb).unwrap();
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, Some(&spec)).unwrap());
+        });
+        let (lreg, lid) = warmed(&corpus, n, l, d, &query, q, &opts, Some(&spec));
+        suite.time(&format!("{tag}/mmd2_lowrank_r{rank}/warm"), runs, || {
+            std::hint::black_box(lreg.mmd2_query(lid, &qb, &opts, Some(&spec)).unwrap());
+        });
+
+        // Derived ratio rows for the JSON trajectory (runs = 0, so the CI
+        // regression gate skips them as non-timing rows).
+        let lr_family = format!("mmd2_lowrank_r{rank}");
+        for family in ["mmd2", lr_family.as_str()] {
+            if let (Some(cold), Some(warm)) = (
+                suite.get(&format!("{tag}/{family}/cold")),
+                suite.get(&format!("{tag}/{family}/warm")),
+            ) {
+                suite.record(&format!("{tag}/{family}/speedup_warm_x"), cold / warm);
+            }
+        }
+    }
+}

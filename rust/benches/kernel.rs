@@ -1,0 +1,70 @@
+//! CI-scale signature-kernel suite — the bench-regression gate's kernel
+//! trajectory. Small fixed workloads with stable case names, compared on
+//! every CI run against the committed repo-root `BENCH_kernel.json`
+//! baseline (renaming a case requires refreshing the baseline). The
+//! paper-scale sweeps live in `figure2_kernel_scaling` / `table2_kernels`.
+
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::kernel::{batch_kernel, batch_kernel_vjp, try_gram, KernelOptions, SolverKind};
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+fn main() {
+    let runs = bench_runs(5);
+    let (b, l, d) = (16usize, 96usize, 3usize);
+    let mut rng = Rng::new(31);
+    let scale = 1.0 / (l as f64).sqrt();
+    let xs = rng.brownian_batch(b, l, d, scale);
+    let ys = rng.brownian_batch(b, l, d, scale);
+    let gk = vec![1.0; b];
+    let mut suite = Suite::new("kernel");
+
+    let tag = format!("b{b}_l{l}_d{d}");
+    suite.time(&format!("{tag}/fwd/row"), runs, || {
+        std::hint::black_box(batch_kernel(&xs, &ys, b, l, l, d, &KernelOptions::default()));
+    });
+    suite.time(&format!("{tag}/fwd/blocked"), runs, || {
+        std::hint::black_box(batch_kernel(
+            &xs,
+            &ys,
+            b,
+            l,
+            l,
+            d,
+            &KernelOptions::default().solver(SolverKind::Blocked),
+        ));
+    });
+    suite.time(&format!("{tag}/fwd/dyadic11"), runs, || {
+        std::hint::black_box(batch_kernel(
+            &xs,
+            &ys,
+            b,
+            l,
+            l,
+            d,
+            &KernelOptions::default().dyadic(1, 1),
+        ));
+    });
+    suite.time(&format!("{tag}/bwd/exact"), runs, || {
+        std::hint::black_box(batch_kernel_vjp(
+            &xs,
+            &ys,
+            &gk,
+            b,
+            l,
+            l,
+            d,
+            &KernelOptions::default(),
+        ));
+    });
+
+    // A small Gram: the n² workload class the corpus registry amortises.
+    let (gn, gl) = (48usize, 24usize);
+    let gx = rng.brownian_batch(gn, gl, d, 0.3);
+    let gy = rng.brownian_batch(gn, gl, d, 0.35);
+    let gxb = PathBatch::uniform(&gx, gn, gl, d).unwrap();
+    let gyb = PathBatch::uniform(&gy, gn, gl, d).unwrap();
+    suite.time(&format!("gram_n{gn}_l{gl}_d{d}"), runs, || {
+        std::hint::black_box(try_gram(&gxb, &gyb, &KernelOptions::default()).unwrap());
+    });
+}

@@ -1,0 +1,47 @@
+//! CI-scale signature suite — the bench-regression gate's signature
+//! trajectory. Deliberately small, fixed workloads (seconds, not minutes)
+//! with stable case names: the committed repo-root `BENCH_sig.json`
+//! baseline is compared against this suite's medians on every CI run, so
+//! renaming a case here requires refreshing the baseline. The paper-scale
+//! sweeps live in `figure1_sig_scaling` / `table1_signatures`.
+
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::sig::{batch_signature, batch_signature_vjp, sig_length, SigMethod, SigOptions};
+use pysiglib::util::rng::Rng;
+
+fn main() {
+    let runs = bench_runs(5);
+    let (b, l, d) = (32usize, 128usize, 4usize);
+    let mut rng = Rng::new(21);
+    let paths = rng.brownian_batch(b, l, d, 0.2);
+    let mut suite = Suite::new("sig");
+
+    for depth in [3usize, 5] {
+        let tag = format!("b{b}_l{l}_d{d}_n{depth}");
+        suite.time(&format!("{tag}/fwd/horner"), runs, || {
+            std::hint::black_box(batch_signature(&paths, b, l, d, &SigOptions::new(depth)));
+        });
+        suite.time(&format!("{tag}/fwd/direct"), runs, || {
+            std::hint::black_box(batch_signature(
+                &paths,
+                b,
+                l,
+                d,
+                &SigOptions::new(depth).method(SigMethod::Direct),
+            ));
+        });
+        let slen = sig_length(d, depth);
+        let mut gs = vec![0.0; b * slen];
+        Rng::new(22).fill_normal(&mut gs);
+        suite.time(&format!("{tag}/bwd/deconstruction"), runs, || {
+            std::hint::black_box(batch_signature_vjp(
+                &paths,
+                &gs,
+                b,
+                l,
+                d,
+                &SigOptions::new(depth),
+            ));
+        });
+    }
+}

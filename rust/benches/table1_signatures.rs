@@ -108,7 +108,11 @@ fn main() {
         let direct = suite.get(&format!("{tag}/fwd/serial/iisig-like(direct)"));
         let horner = suite.get(&format!("{tag}/fwd/serial/pysiglib(horner)"));
         if let (Some(a), Some(b_), Some(h)) = (naive, direct, horner) {
-            println!("  {tag}: fwd serial esig/pysiglib = {:.2}x, iisig/pysiglib = {:.2}x", a / h, b_ / h);
+            println!(
+                "  {tag}: fwd serial esig/pysiglib = {:.2}x, iisig/pysiglib = {:.2}x",
+                a / h,
+                b_ / h
+            );
         }
     }
 }

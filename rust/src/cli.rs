@@ -40,6 +40,14 @@ COMMANDS:
              --features nystrom|randsig  --depth N (randsig truncation)
              --seed S          landmark / sketch seed
   grad       exact signature-kernel gradients for a batch of pairs
+  corpus     corpus registry lifecycle (register → query → append)
+             corpus register --addr A --batch N --len L --dim D
+             corpus append   --addr A --id I --batch K --len L --dim D
+             corpus mmd      --addr A --id I --batch Q --len L --dim D
+                             --rank R (0 = exact) --repeat N
+             corpus mmd without --addr runs the full lifecycle in-process
+             (register, cold + warm queries, append --append K, re-query)
+             and prints the warm-over-cold speedup
   serve      run the serving coordinator
              --bind ADDR --max-batch N --max-wait-us U --pjrt --config FILE
   client     demo client: fires requests at a running server
@@ -93,6 +101,7 @@ pub fn cli_main(args: &[String]) -> i32 {
         "kernel" => cmd_kernel(&flags),
         "mmd" => cmd_mmd(&flags),
         "grad" => cmd_grad(&flags),
+        "corpus" => cmd_corpus(&_pos, &flags),
         "serve" => cmd_serve(&flags),
         "client" => cmd_client(&flags),
         "artifacts" => cmd_artifacts(&flags),
@@ -511,6 +520,137 @@ fn cmd_grad(flags: &HashMap<String, String>) -> i32 {
     0
 }
 
+/// `corpus register|append|mmd`: the registry lifecycle, either against a
+/// running server (`--addr`) or — for `mmd` without `--addr` — as an
+/// in-process demo that registers, queries cold and warm, appends, and
+/// re-queries, printing per-stage latencies and the warm speedup.
+fn cmd_corpus(pos: &[String], flags: &HashMap<String, String>) -> i32 {
+    let sub = pos.first().map(String::as_str).unwrap_or("");
+    let batch = flag_usize(flags, "batch", 64);
+    let len = flag_usize(flags, "len", 32);
+    let dim = flag_usize(flags, "dim", 3);
+    let rank = flag_usize(flags, "rank", 0) as u32;
+    let mut rng = Rng::new(flag_usize(flags, "seed", 47) as u64);
+    let make_paths = |rng: &mut Rng, n: usize| -> Vec<Vec<f64>> {
+        (0..n).map(|_| rng.brownian_path(len, dim, 0.3)).collect()
+    };
+    if let Some(addr) = flags.get("addr") {
+        let mut client = match crate::coordinator::Client::connect(addr.as_str()) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("connect {addr}: {e}");
+                return 1;
+            }
+        };
+        let id = flag_usize(flags, "id", 0) as u32;
+        let paths = make_paths(&mut rng, batch);
+        let refs: Vec<&[f64]> = paths.iter().map(|p| p.as_slice()).collect();
+        let outcome: Result<String, String> = match sub {
+            "register" => client
+                .register_corpus(&refs, dim)
+                .map_err(|e| e.to_string())
+                .and_then(|r| r)
+                .map(|id| format!("registered corpus id={id} paths={batch}")),
+            "append" => client
+                .append_corpus(id, &refs, dim)
+                .map_err(|e| e.to_string())
+                .and_then(|r| r)
+                .map(|total| format!("appended {batch} paths to id={id}; total={total}")),
+            "mmd" => {
+                let repeat = flag_usize(flags, "repeat", 1).max(1);
+                let t = std::time::Instant::now();
+                let mut value = Ok(0.0);
+                for _ in 0..repeat {
+                    value = client
+                        .mmd2_corpus(id, &refs, dim, rank)
+                        .map_err(|e| e.to_string())
+                        .and_then(|r| r);
+                    if value.is_err() {
+                        break;
+                    }
+                }
+                let dt = t.elapsed().as_secs_f64();
+                value.map(|v| {
+                    format!(
+                        "mmd2={v:.6e} id={id} queries={batch} rank={rank} repeat={repeat} \
+                         time={dt:.6}s ({:.6}s/query)",
+                        dt / repeat as f64
+                    )
+                })
+            }
+            other => {
+                eprintln!("unknown corpus subcommand '{other}' (expected register|append|mmd)");
+                return 2;
+            }
+        };
+        match outcome {
+            Ok(msg) => {
+                println!("{msg}");
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        }
+    } else {
+        if sub != "mmd" {
+            eprintln!("corpus {sub}: --addr is required (register/append need a running server)");
+            return 2;
+        }
+        // In-process lifecycle demo against a local registry.
+        let queries = flag_usize(flags, "queries", 8.min(batch.max(1)));
+        let appended = flag_usize(flags, "append", (batch / 4).max(1));
+        let registry = crate::corpus::CorpusRegistry::new();
+        let corpus = rng.brownian_batch(batch, len, dim, 0.3);
+        let qdata = rng.brownian_batch(queries, len, dim, 0.35);
+        let extra = rng.brownian_batch(appended, len, dim, 0.3);
+        let opts = KernelOptions::default();
+        let lowrank =
+            (rank > 0).then(|| crate::kernel::LowRankSpec::nystrom(rank as usize, 47));
+        let run = || -> Result<(), crate::path::SigError> {
+            let cb = crate::path::PathBatch::uniform(&corpus, batch, len, dim)?;
+            let qb = crate::path::PathBatch::uniform(&qdata, queries, len, dim)?;
+            let eb = crate::path::PathBatch::uniform(&extra, appended, len, dim)?;
+            let id = registry.register(&cb)?;
+            let t = std::time::Instant::now();
+            let cold = registry.mmd2_query(id, &qb, &opts, lowrank.as_ref())?;
+            let t_cold = t.elapsed().as_secs_f64();
+            let t = std::time::Instant::now();
+            let warm = registry.mmd2_query(id, &qb, &opts, lowrank.as_ref())?;
+            let t_warm = t.elapsed().as_secs_f64();
+            assert_eq!(cold, warm, "warm re-query must be bit-identical");
+            let t = std::time::Instant::now();
+            let total = registry.append(id, &eb)?;
+            let t_append = t.elapsed().as_secs_f64();
+            let t = std::time::Instant::now();
+            let post = registry.mmd2_query(id, &qb, &opts, lowrank.as_ref())?;
+            let t_post = t.elapsed().as_secs_f64();
+            println!(
+                "corpus demo: n={batch} (+{appended} appended, total {total}) queries={queries} \
+                 len={len} dim={dim} rank={rank}"
+            );
+            println!("  cold query   {t_cold:>10.6}s  mmd2={cold:.6e}");
+            println!("  warm query   {t_warm:>10.6}s  (bit-identical)");
+            println!("  append       {t_append:>10.6}s  (incremental tiles)");
+            println!("  post query   {t_post:>10.6}s  mmd2={post:.6e}");
+            println!(
+                "  warm speedup {:.1}x  stats: {:?}",
+                t_cold / t_warm.max(1e-12),
+                registry.stats()
+            );
+            Ok(())
+        };
+        match run() {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        }
+    }
+}
+
 fn build_config(flags: &HashMap<String, String>) -> Result<Config, String> {
     let mut cfg = Config::default();
     if let Some(path) = flags.get("config") {
@@ -572,7 +712,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             return 1;
         }
     };
-    println!("serving on {} (max_batch={}, max_wait={:?})", handle.addr, cfg.max_batch, cfg.max_wait);
+    println!(
+        "serving on {} (max_batch={}, max_wait={:?})",
+        handle.addr, cfg.max_batch, cfg.max_wait
+    );
     // Periodic metrics until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));

@@ -88,6 +88,7 @@ impl Batcher {
     /// Enqueue a request. The response arrives on `req.reply`.
     pub fn submit(&self, req: Request) {
         self.metrics.record_request();
+        self.metrics.record_op(req.op.code());
         let key = GroupKey {
             op: req.op,
             len: req.len,
@@ -128,6 +129,7 @@ impl Batcher {
         let b = frame.batch();
         for _ in 0..b {
             self.metrics.record_request();
+            self.metrics.record_op(frame.op.code());
         }
         self.metrics.record_batch(b);
         let started = Instant::now();
@@ -138,6 +140,7 @@ impl Batcher {
             self.metrics.record_response(compute_us, 0, is_err);
         }
         self.metrics.set_plan_cache(self.router.plan_cache_stats());
+        self.metrics.set_corpus(self.router.corpus_stats());
         result
     }
 

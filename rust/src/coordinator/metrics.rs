@@ -3,8 +3,9 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::coordinator::OP_CODE_COUNT;
+
 /// Aggregated service metrics. All methods are thread-safe.
-#[derive(Default)]
 pub struct Metrics {
     pub requests_total: AtomicU64,
     pub responses_total: AtomicU64,
@@ -16,12 +17,45 @@ pub struct Metrics {
     lat_max_us: AtomicU64,
     /// Queue-time share of latency (µs).
     queue_sum_us: AtomicU64,
+    /// Per-op request counters, indexed by wire op code − 1 (each path —
+    /// or pair, for paired ops — of a ragged frame counts once, matching
+    /// `requests_total`).
+    per_op_total: [AtomicU64; OP_CODE_COUNT],
     /// Plan-cache counters, mirrored from the router's
     /// [`PlanCache`](crate::engine::PlanCache) after each batch so the
     /// snapshot/summary always reflects the serving path's cache behaviour.
     pub plan_hits_total: AtomicU64,
     pub plan_misses_total: AtomicU64,
     pub plan_evictions_total: AtomicU64,
+    /// Corpus-registry counters, mirrored from the router's
+    /// [`CorpusRegistry`](crate::corpus::CorpusRegistry) after each corpus
+    /// request: warm hits reused cached corpus state, cold builds paid the
+    /// O(n²) / feature-map cost.
+    pub corpus_warm_hits_total: AtomicU64,
+    pub corpus_cold_builds_total: AtomicU64,
+    pub corpus_registered_total: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests_total: AtomicU64::new(0),
+            responses_total: AtomicU64::new(0),
+            errors_total: AtomicU64::new(0),
+            batches_total: AtomicU64::new(0),
+            batched_items_total: AtomicU64::new(0),
+            lat_sum_us: AtomicU64::new(0),
+            lat_max_us: AtomicU64::new(0),
+            queue_sum_us: AtomicU64::new(0),
+            per_op_total: std::array::from_fn(|_| AtomicU64::new(0)),
+            plan_hits_total: AtomicU64::new(0),
+            plan_misses_total: AtomicU64::new(0),
+            plan_evictions_total: AtomicU64::new(0),
+            corpus_warm_hits_total: AtomicU64::new(0),
+            corpus_cold_builds_total: AtomicU64::new(0),
+            corpus_registered_total: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Metrics {
@@ -31,6 +65,23 @@ impl Metrics {
 
     pub fn record_request(&self) {
         self.requests_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request against its wire op code (codes are 1-based;
+    /// unknown codes are ignored rather than panicking — the wire already
+    /// rejected them).
+    pub fn record_op(&self, code: u32) {
+        if let Some(c) = self.per_op_total.get((code as usize).wrapping_sub(1)) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Requests recorded against a wire op code (0 for unknown codes).
+    pub fn op_count(&self, code: u32) -> u64 {
+        self.per_op_total
+            .get((code as usize).wrapping_sub(1))
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     pub fn record_batch(&self, items: usize) {
@@ -56,6 +107,16 @@ impl Metrics {
         self.plan_misses_total.store(stats.misses, Ordering::Relaxed);
         self.plan_evictions_total
             .store(stats.evictions, Ordering::Relaxed);
+    }
+
+    /// Mirror the router's corpus-registry counters into the snapshot.
+    pub fn set_corpus(&self, stats: crate::corpus::CorpusStats) {
+        self.corpus_warm_hits_total
+            .store(stats.warm_hits, Ordering::Relaxed);
+        self.corpus_cold_builds_total
+            .store(stats.cold_builds, Ordering::Relaxed);
+        self.corpus_registered_total
+            .store(stats.registered, Ordering::Relaxed);
     }
 
     /// Mean items per flushed batch — the batching efficiency signal.
@@ -89,8 +150,12 @@ impl Metrics {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let ops: Vec<String> = (1..=OP_CODE_COUNT as u32)
+            .filter(|&c| self.op_count(c) > 0)
+            .map(|c| format!("op{c}={}", self.op_count(c)))
+            .collect();
         format!(
-            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={}",
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={} corpus_warm={} corpus_cold={} [{}]",
             self.requests_total.load(Ordering::Relaxed),
             self.responses_total.load(Ordering::Relaxed),
             self.errors_total.load(Ordering::Relaxed),
@@ -102,6 +167,9 @@ impl Metrics {
             self.plan_hits_total.load(Ordering::Relaxed),
             self.plan_misses_total.load(Ordering::Relaxed),
             self.plan_evictions_total.load(Ordering::Relaxed),
+            self.corpus_warm_hits_total.load(Ordering::Relaxed),
+            self.corpus_cold_builds_total.load(Ordering::Relaxed),
+            ops.join(" "),
         )
     }
 }
@@ -128,6 +196,25 @@ mod tests {
     }
 
     #[test]
+    fn per_op_counters_track_codes_and_ignore_unknowns() {
+        let m = Metrics::new();
+        m.record_op(1);
+        m.record_op(1);
+        m.record_op(9);
+        m.record_op(0); // out of range: ignored
+        m.record_op(99); // out of range: ignored
+        assert_eq!(m.op_count(1), 2);
+        assert_eq!(m.op_count(9), 1);
+        assert_eq!(m.op_count(2), 0);
+        assert_eq!(m.op_count(0), 0);
+        assert_eq!(m.op_count(99), 0);
+        let s = m.summary();
+        assert!(s.contains("op1=2"), "{s}");
+        assert!(s.contains("op9=1"), "{s}");
+        assert!(!s.contains("op2="), "{s}");
+    }
+
+    #[test]
     fn plan_cache_counters_surface_in_snapshot() {
         let m = Metrics::new();
         m.set_plan_cache(crate::engine::CacheStats {
@@ -142,5 +229,23 @@ mod tests {
         assert!(s.contains("plan_hits=7"), "{s}");
         assert!(s.contains("plan_misses=2"), "{s}");
         assert!(s.contains("plan_evictions=1"), "{s}");
+    }
+
+    #[test]
+    fn corpus_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.set_corpus(crate::corpus::CorpusStats {
+            registered: 2,
+            appended: 1,
+            queries: 9,
+            warm_hits: 6,
+            cold_builds: 3,
+        });
+        assert_eq!(m.corpus_warm_hits_total.load(Ordering::Relaxed), 6);
+        assert_eq!(m.corpus_cold_builds_total.load(Ordering::Relaxed), 3);
+        assert_eq!(m.corpus_registered_total.load(Ordering::Relaxed), 2);
+        let s = m.summary();
+        assert!(s.contains("corpus_warm=6"), "{s}");
+        assert!(s.contains("corpus_cold=3"), "{s}");
     }
 }

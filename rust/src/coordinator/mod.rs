@@ -12,6 +12,12 @@
 //!   typed [`PathBatch`](crate::path::PathBatch) on the compute backend
 //!   (native Rust kernels, or a PJRT artifact when one matches the batch
 //!   shape) → responses fan back out.
+//!
+//! Corpus lifecycle ops (`RegisterCorpus` / `AppendCorpus` / `Mmd2Corpus`)
+//! are stateful: they route to the router's
+//! [`CorpusRegistry`](crate::corpus::CorpusRegistry), which caches
+//! corpus-side Gram/feature state so warm re-queries pay only query-side
+//! cost (see [`corpus`](crate::corpus)).
 
 pub mod batcher;
 pub mod metrics;
@@ -49,6 +55,17 @@ pub enum Op {
     /// Low-rank cross-Gram `[nx, rest]` with the same split convention.
     /// Ragged frames only.
     GramLowRank { rank: u32, nx: u32, transform: u8 },
+    /// Register the frame's paths as a reference corpus; responds with the
+    /// (content-hash deduplicated) corpus id. Ragged frames only.
+    RegisterCorpus,
+    /// Append the frame's paths to corpus `id`, extending its cached
+    /// serving state incrementally; responds with the new path count.
+    /// Ragged frames only.
+    AppendCorpus { id: u32 },
+    /// Biased MMD² between the frame's query paths and corpus `id`
+    /// (`rank` = 0 → exact with the cached corpus self-Gram; `rank` > 0 →
+    /// Nyström at that rank with the wire seed). Ragged frames only.
+    Mmd2Corpus { id: u32, rank: u32, transform: u8 },
 }
 
 impl Op {
@@ -60,9 +77,16 @@ impl Op {
             Op::SigKernelGrad { .. } => 4,
             Op::Mmd2LowRank { .. } => 5,
             Op::GramLowRank { .. } => 6,
+            Op::RegisterCorpus => 7,
+            Op::AppendCorpus { .. } => 8,
+            Op::Mmd2Corpus { .. } => 9,
         }
     }
 }
+
+/// Number of wire op codes (codes are 1-based and dense) — sizes the
+/// per-op metrics counters.
+pub const OP_CODE_COUNT: usize = 9;
 
 /// Decode the transform byte used on the wire.
 pub fn transform_from_u8(v: u8) -> Option<Transform> {
@@ -138,8 +162,26 @@ mod tests {
                 transform: 0,
             },
             Op::SigKernelGrad { lam1: 0, lam2: 0 },
+            Op::Mmd2LowRank {
+                rank: 1,
+                nx: 1,
+                transform: 0,
+            },
+            Op::GramLowRank {
+                rank: 1,
+                nx: 1,
+                transform: 0,
+            },
+            Op::RegisterCorpus,
+            Op::AppendCorpus { id: 0 },
+            Op::Mmd2Corpus {
+                id: 0,
+                rank: 0,
+                transform: 0,
+            },
         ];
         let codes: std::collections::HashSet<u32> = ops.iter().map(|o| o.code()).collect();
         assert_eq!(codes.len(), ops.len());
+        assert!(ops.iter().all(|o| o.code() as usize <= OP_CODE_COUNT));
     }
 }

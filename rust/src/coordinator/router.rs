@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use crate::coordinator::wire::RaggedFrame;
 use crate::coordinator::{transform_from_u8, Op, Request, Response, WIRE_LOWRANK_SEED};
+use crate::corpus::{CorpusId, CorpusRegistry, CorpusStats};
 use crate::engine::{CacheStats, OpSpec, PlanCache, ShapeClass};
 use crate::kernel::lowrank::LowRankSpec;
 use crate::kernel::KernelOptions;
@@ -30,6 +31,8 @@ pub struct Router {
     runtime: Option<Arc<RuntimeHandle>>,
     /// Warm compiled plans keyed by (op, shape class).
     plans: PlanCache,
+    /// Registered reference corpora served by the corpus wire ops.
+    corpus: Arc<CorpusRegistry>,
 }
 
 impl Router {
@@ -38,6 +41,7 @@ impl Router {
         Router {
             runtime: None,
             plans: PlanCache::new(PLAN_CACHE_CAPACITY),
+            corpus: Arc::new(CorpusRegistry::new()),
         }
     }
 
@@ -46,6 +50,7 @@ impl Router {
         Router {
             runtime: Some(runtime),
             plans: PlanCache::new(PLAN_CACHE_CAPACITY),
+            corpus: Arc::new(CorpusRegistry::new()),
         }
     }
 
@@ -56,6 +61,16 @@ impl Router {
     /// Plan-cache hit/miss/eviction counters (surfaced in server metrics).
     pub fn plan_cache_stats(&self) -> CacheStats {
         self.plans.stats()
+    }
+
+    /// The corpus registry this router serves (shared with tests / metrics).
+    pub fn corpus_registry(&self) -> &Arc<CorpusRegistry> {
+        &self.corpus
+    }
+
+    /// Registry counters (surfaced in server metrics).
+    pub fn corpus_stats(&self) -> CorpusStats {
+        self.corpus.stats()
     }
 
     /// Decode an op's wire transform + options into an engine spec.
@@ -115,6 +130,11 @@ impl Router {
                     false,
                 ))
             }
+            // Corpus ops are stateful and routed through the registry, not
+            // through a bare op spec (see `execute_ragged`).
+            Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } => Err(
+                SigError::Invalid("corpus ops are served by the corpus route"),
+            ),
         }
     }
 
@@ -214,6 +234,10 @@ impl Router {
                 frame.lengths.len()
             )));
         }
+        // Corpus ops first: they are registry operations, not op specs.
+        if let Some(result) = self.execute_corpus_op(frame)? {
+            return Ok(result);
+        }
         let (spec, retain) = Self::op_spec(frame.op)?;
         let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
         match frame.op {
@@ -267,6 +291,10 @@ impl Router {
                 }
                 Ok(out)
             }
+            // Handled by `execute_corpus_op` before the spec route.
+            Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } => {
+                unreachable!("corpus ops are served by execute_corpus_op")
+            }
             Op::Mmd2LowRank { nx, .. } | Op::GramLowRank { nx, .. } => {
                 // Split the frame's paths at nx into the two corpora
                 // (validated at decode; re-checked here because frames can
@@ -288,6 +316,45 @@ impl Router {
                 let plan = self.plans.get_or_compile(spec, shape, retain, None)?;
                 Ok(plan.execute_pair(&xb, &yb)?.into_values())
             }
+        }
+    }
+
+    /// The corpus lifecycle route: `Ok(Some(values))` when the frame was a
+    /// corpus op, `Ok(None)` to fall through to the op-spec route.
+    fn execute_corpus_op(&self, frame: &RaggedFrame) -> Result<Option<Vec<f64>>, SigError> {
+        match frame.op {
+            Op::RegisterCorpus => {
+                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
+                let id = self.corpus.register(&pb)?;
+                Ok(Some(vec![id.0 as f64]))
+            }
+            Op::AppendCorpus { id } => {
+                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
+                let total = self.corpus.append(CorpusId(id), &pb)?;
+                Ok(Some(vec![total as f64]))
+            }
+            Op::Mmd2Corpus {
+                id,
+                rank,
+                transform,
+            } => {
+                let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
+                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
+                // rank = 0 selects the exact path; a positive rank selects
+                // Nyström with the wire's fixed seed, so repeated queries
+                // share the registry's cached feature state.
+                let lowrank =
+                    (rank > 0).then(|| LowRankSpec::nystrom(rank as usize, WIRE_LOWRANK_SEED));
+                let spec = OpSpec::Mmd2Corpus {
+                    opts: KernelOptions::default().transform(tr),
+                    corpus: CorpusId(id),
+                    lowrank,
+                };
+                let shape = ShapeClass::for_batch(&pb).bucketed();
+                let plan = self.plans.get_or_compile_corpus(spec, shape, &self.corpus)?;
+                Ok(Some(plan.execute(&pb)?.into_values()))
+            }
+            _ => Ok(None),
         }
     }
 
@@ -401,6 +468,10 @@ impl Router {
                 // rejects these frames at decode, so this only guards
                 // programmatic construction.
                 errs("low-rank ops require a ragged-batch frame".to_string())
+            }
+            Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } => {
+                // Same guard for the corpus lifecycle ops.
+                errs("corpus ops require a ragged-batch frame".to_string())
             }
         }
     }
@@ -775,6 +846,113 @@ mod tests {
             router.execute_ragged(&bad),
             Err(SigError::Protocol(_))
         ));
+    }
+
+    /// The corpus lifecycle over the router: register → query (cold, warm)
+    /// → append → query, with results matching the registry driven
+    /// directly and the plan cache warming across queries.
+    #[test]
+    fn corpus_ops_roundtrip_through_the_router() {
+        let router = Router::native_only();
+        let mut rng = Rng::new(14);
+        let d = 2;
+        let corpus_lens = [5usize, 3, 6, 4];
+        let mut corpus_values = Vec::new();
+        for &l in &corpus_lens {
+            corpus_values.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let id = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::RegisterCorpus,
+                dim: d,
+                lengths: corpus_lens.to_vec(),
+                values: corpus_values.clone(),
+            })
+            .unwrap();
+        assert_eq!(id.len(), 1);
+        let id_u = id[0] as u32;
+        // Registering identical content again returns the same id.
+        let again = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::RegisterCorpus,
+                dim: d,
+                lengths: corpus_lens.to_vec(),
+                values: corpus_values.clone(),
+            })
+            .unwrap();
+        assert_eq!(again[0], id[0]);
+        // Query: matches the registry driven directly.
+        let q_lens = [4usize, 5];
+        let mut q_values = Vec::new();
+        for &l in &q_lens {
+            q_values.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let qframe = RaggedFrame {
+            op: Op::Mmd2Corpus {
+                id: id_u,
+                rank: 0,
+                transform: 0,
+            },
+            dim: d,
+            lengths: q_lens.to_vec(),
+            values: q_values.clone(),
+        };
+        let cold = router.execute_ragged(&qframe).unwrap();
+        let warm = router.execute_ragged(&qframe).unwrap();
+        assert_eq!(cold, warm, "warm corpus re-query must be bit-identical");
+        let qb = PathBatch::ragged(&q_values, &q_lens, d).unwrap();
+        let want = router
+            .corpus_registry()
+            .mmd2_query(
+                crate::corpus::CorpusId(id_u),
+                &qb,
+                &KernelOptions::default(),
+                None,
+            )
+            .unwrap();
+        assert_eq!(cold[0], want);
+        // Append, then query again (and the low-rank route works too).
+        let extra = rng.brownian_path(4, d, 0.4);
+        let total = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::AppendCorpus { id: id_u },
+                dim: d,
+                lengths: vec![4],
+                values: extra,
+            })
+            .unwrap();
+        assert_eq!(total[0], 5.0);
+        let post = router.execute_ragged(&qframe).unwrap();
+        assert_ne!(post[0], cold[0], "appended corpus changes the estimate");
+        let lr = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::Mmd2Corpus {
+                    id: id_u,
+                    rank: 3,
+                    transform: 0,
+                },
+                dim: d,
+                lengths: q_lens.to_vec(),
+                values: q_values.clone(),
+            })
+            .unwrap();
+        assert!(lr[0].is_finite());
+        // Unknown id is an error, not a panic.
+        let bad = RaggedFrame {
+            op: Op::Mmd2Corpus {
+                id: 999,
+                rank: 0,
+                transform: 0,
+            },
+            dim: d,
+            lengths: q_lens.to_vec(),
+            values: q_values,
+        };
+        assert!(router.execute_ragged(&bad).is_err());
+        let st = router.corpus_stats();
+        assert_eq!(st.registered, 1);
+        assert_eq!(st.appended, 1);
+        assert!(st.warm_hits >= 1 && st.cold_builds >= 1);
     }
 
     #[test]

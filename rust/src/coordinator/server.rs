@@ -286,6 +286,67 @@ impl Client {
         Ok(r.map(|v| v[0]))
     }
 
+    /// Flatten a slice-of-paths into the ragged wire layout.
+    fn ragged_payload(paths: &[&[f64]], dim: usize) -> (Vec<usize>, Vec<f64>) {
+        let mut lengths = Vec::with_capacity(paths.len());
+        let mut values = Vec::new();
+        for p in paths {
+            lengths.push(if dim == 0 { 0 } else { p.len() / dim });
+            values.extend_from_slice(p);
+        }
+        (lengths, values)
+    }
+
+    /// Convenience: register a corpus of arbitrary-length paths; returns
+    /// its (content-hash deduplicated) id for `append_corpus` /
+    /// `mmd2_corpus` calls.
+    pub fn register_corpus(
+        &mut self,
+        paths: &[&[f64]],
+        dim: usize,
+    ) -> std::io::Result<Result<u32, String>> {
+        let (lengths, values) = Self::ragged_payload(paths, dim);
+        let r = self.call_ragged(Op::RegisterCorpus, dim, lengths, values)?;
+        Ok(r.map(|v| v.first().copied().unwrap_or(0.0) as u32))
+    }
+
+    /// Convenience: append paths to a registered corpus; returns the new
+    /// path count.
+    pub fn append_corpus(
+        &mut self,
+        id: u32,
+        paths: &[&[f64]],
+        dim: usize,
+    ) -> std::io::Result<Result<usize, String>> {
+        let (lengths, values) = Self::ragged_payload(paths, dim);
+        let r = self.call_ragged(Op::AppendCorpus { id }, dim, lengths, values)?;
+        Ok(r.map(|v| v.first().copied().unwrap_or(0.0) as usize))
+    }
+
+    /// Convenience: biased MMD² between query paths and a registered
+    /// corpus (`rank` = 0 → exact against the cached corpus self-Gram;
+    /// `rank` > 0 → Nyström at that rank).
+    pub fn mmd2_corpus(
+        &mut self,
+        id: u32,
+        queries: &[&[f64]],
+        dim: usize,
+        rank: u32,
+    ) -> std::io::Result<Result<f64, String>> {
+        let (lengths, values) = Self::ragged_payload(queries, dim);
+        let r = self.call_ragged(
+            Op::Mmd2Corpus {
+                id,
+                rank,
+                transform: 0,
+            },
+            dim,
+            lengths,
+            values,
+        )?;
+        Ok(r.map(|v| v.first().copied().unwrap_or(0.0)))
+    }
+
     /// Convenience: signature kernels of (x_i, y_i) pairs of arbitrary
     /// lengths in one round trip. Returns `[pairs]`.
     pub fn sig_kernel_ragged(

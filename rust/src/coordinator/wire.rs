@@ -101,6 +101,13 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
             nx,
             transform,
         } => (6, rank, nx, transform as u32),
+        Op::RegisterCorpus => (7, 0, 0, 0),
+        Op::AppendCorpus { id } => (8, id, 0, 0),
+        Op::Mmd2Corpus {
+            id,
+            rank,
+            transform,
+        } => (9, id, rank, transform as u32),
     }
 }
 
@@ -132,6 +139,13 @@ fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
         6 => Ok(Op::GramLowRank {
             rank: p1,
             nx: p2,
+            transform,
+        }),
+        7 => Ok(Op::RegisterCorpus),
+        8 => Ok(Op::AppendCorpus { id: p1 }),
+        9 => Ok(Op::Mmd2Corpus {
+            id: p1,
+            rank: p2,
             transform,
         }),
         other => Err(SigError::Protocol(format!("unknown op code {other}"))),
@@ -219,6 +233,14 @@ fn validate_single(op: Op, len: usize, dim: usize, n_values: usize) -> Result<()
                 .to_string(),
         ));
     }
+    if matches!(
+        op,
+        Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. }
+    ) {
+        return Err(SigError::Protocol(
+            "corpus ops take a ragged-batch frame, not a single-path frame".to_string(),
+        ));
+    }
     if dim == 0 {
         return Err(SigError::ZeroDim);
     }
@@ -259,6 +281,17 @@ fn validate_ragged(
             "kernel ops need (x, y) length pairs; got {} lengths",
             lengths.len()
         )));
+    }
+    // Corpus ops carry at least one path (an empty registration / append /
+    // query is meaningless and the registry would reject it anyway).
+    if matches!(
+        op,
+        Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. }
+    ) && lengths.is_empty()
+    {
+        return Err(SigError::Protocol(
+            "corpus ops need at least one path in the frame".to_string(),
+        ));
     }
     // Low-rank ops split the frame's paths at `nx`: both corpora must be
     // non-empty for the split to be meaningful.
@@ -639,6 +672,59 @@ mod tests {
         };
         let mut buf = Vec::new();
         write_request(&mut buf, &f).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+    }
+
+    #[test]
+    fn corpus_ops_roundtrip_with_id_and_rank_fields() {
+        for op in [
+            Op::RegisterCorpus,
+            Op::AppendCorpus { id: 3 },
+            Op::Mmd2Corpus {
+                id: 3,
+                rank: 8,
+                transform: 1,
+            },
+        ] {
+            let frame = RaggedFrame {
+                op,
+                dim: 2,
+                lengths: vec![3, 2],
+                values: (0..10).map(|v| v as f64).collect(),
+            };
+            let mut buf = Vec::new();
+            write_ragged_request(&mut buf, &frame).unwrap();
+            assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
+        }
+    }
+
+    #[test]
+    fn corpus_ops_reject_single_and_empty_frames() {
+        // Single-path frames cannot carry corpus ops.
+        let f = Frame {
+            op: Op::Mmd2Corpus {
+                id: 1,
+                rank: 0,
+                transform: 0,
+            },
+            len: 2,
+            dim: 1,
+            values: vec![0.0, 1.0],
+        };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &f).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+        // A ragged corpus frame with zero paths is a soft error.
+        let frame = RaggedFrame {
+            op: Op::RegisterCorpus,
+            dim: 2,
+            lengths: vec![],
+            values: vec![],
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
         let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
         assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
     }

@@ -1,0 +1,209 @@
+//! Corpus service: register a reference corpus once, query it repeatedly,
+//! append to it incrementally — the stateful serving layer on top of the
+//! compile-once [`engine`](crate::engine).
+//!
+//! The practical regime for signature-kernel serving (KSig-style workloads)
+//! is a large, mostly-static **reference corpus** queried again and again:
+//! MMD² two-sample tests of fresh batches against a training corpus,
+//! cross-Grams of queries against a support set. Recomputing the full
+//! O(n²·L²) corpus-side work per request throws away everything the
+//! previous request learned. This module splits the cost:
+//!
+//! * [`CorpusRegistry`] — owns registered corpora under stable
+//!   [`CorpusId`]s (content-hash deduplicated) and, per kernel options
+//!   actually queried, the derived state that dominates re-query cost: the
+//!   corpus self-Gram `K_cc` for exact MMD², and the frozen
+//!   [`FeatureMap`](crate::kernel::FeatureMap) + corpus feature matrix
+//!   `Φ_c` for low-rank queries. A **warm** query pays only for its own
+//!   rows (`K_qq`, `K_qc`, or `Φ_q`).
+//! * [`TileScheduler`] — shards Gram work into cache-sized `tile × tile`
+//!   blocks over the crate's thread pool
+//!   ([`util::pool`](crate::util::pool), worker count from
+//!   `PYSIGLIB_THREADS`). Each entry is an independent PDE solve, so the
+//!   tiled Gram is bit-for-bit identical to the single-threaded and
+//!   per-entry paths; tiles add locality and the *block* primitive that
+//!   incremental appends are built on.
+//! * **Incremental append** — [`CorpusRegistry::append`] extends the
+//!   cached state in place: only the old×new cross strips and the new
+//!   diagonal block of `K_cc` are solved, and only the new paths are
+//!   featurised into `Φ_c`. The result is bit-identical to registering the
+//!   combined corpus from scratch (property-tested); the Nyström landmark
+//!   draw is pinned by the corpus's landmark pool (first `min(rank, n)`
+//!   paths) so appends cannot move it once the corpus covers the rank
+//!   budget.
+//!
+//! The engine exposes corpora as first-class plans —
+//! [`OpSpec::GramCorpus`](crate::engine::OpSpec::GramCorpus) /
+//! [`OpSpec::Mmd2Corpus`](crate::engine::OpSpec::Mmd2Corpus) compiled via
+//! [`Plan::compile_corpus`](crate::engine::Plan::compile_corpus) — and the
+//! coordinator serves the full lifecycle over the wire
+//! (`RegisterCorpus` / `AppendCorpus` / `Mmd2Corpus` ops, CLI
+//! `corpus register|append|mmd`).
+//!
+//! ```no_run
+//! use pysiglib::corpus::CorpusRegistry;
+//! use pysiglib::{KernelOptions, PathBatch};
+//!
+//! let registry = CorpusRegistry::new();
+//! # let corpus_data = vec![0.0; 64 * 32 * 3];
+//! # let query_data = vec![0.0; 8 * 32 * 3];
+//! let corpus = PathBatch::uniform(&corpus_data, 64, 32, 3)?;
+//! let id = registry.register(&corpus)?;
+//! let opts = KernelOptions::default();
+//! let query = PathBatch::uniform(&query_data, 8, 32, 3)?;
+//! let cold = registry.mmd2_query(id, &query, &opts, None)?; // builds K_cc
+//! let warm = registry.mmd2_query(id, &query, &opts, None)?; // reuses it
+//! assert_eq!(cold, warm);
+//! # Ok::<(), pysiglib::SigError>(())
+//! ```
+
+pub mod registry;
+pub mod tiles;
+
+pub use registry::{CorpusId, CorpusRegistry, CorpusStats};
+pub use tiles::TileScheduler;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{try_gram, try_mmd2, KernelOptions, LowRankSpec};
+    use crate::path::{PathBatch, SigError};
+    use crate::util::rng::Rng;
+
+    fn batch(rng: &mut Rng, n: usize, l: usize, d: usize) -> Vec<f64> {
+        rng.brownian_batch(n, l, d, 0.3)
+    }
+
+    #[test]
+    fn register_is_content_hash_deduplicated() {
+        let reg = CorpusRegistry::new();
+        let mut rng = Rng::new(700);
+        let data = batch(&mut rng, 4, 6, 2);
+        let pb = PathBatch::uniform(&data, 4, 6, 2).unwrap();
+        let a = reg.register(&pb).unwrap();
+        let b = reg.register(&pb).unwrap();
+        assert_eq!(a, b, "identical content must reuse the id");
+        let other = batch(&mut rng, 4, 6, 2);
+        let ob = PathBatch::uniform(&other, 4, 6, 2).unwrap();
+        let c = reg.register(&ob).unwrap();
+        assert_ne!(a, c);
+        assert_eq!(reg.stats().registered, 2);
+        assert_eq!(reg.ids(), vec![a, c]);
+        assert_eq!(reg.path_count(a), Some(4));
+        assert_eq!(reg.dim_of(a), Some(2));
+    }
+
+    #[test]
+    fn exact_queries_match_direct_estimators_and_warm_cache_engages() {
+        let reg = CorpusRegistry::new();
+        let mut rng = Rng::new(701);
+        let (n, qn, l, d) = (6, 3, 7, 2);
+        let cdata = batch(&mut rng, n, l, d);
+        let qdata = batch(&mut rng, qn, l, d);
+        let cb = PathBatch::uniform(&cdata, n, l, d).unwrap();
+        let qb = PathBatch::uniform(&qdata, qn, l, d).unwrap();
+        let id = reg.register(&cb).unwrap();
+        let opts = KernelOptions::default();
+        let gram = reg.gram_query(id, &qb, &opts, None).unwrap();
+        assert_eq!(gram, try_gram(&qb, &cb, &opts).unwrap());
+        let cold = reg.mmd2_query(id, &qb, &opts, None).unwrap();
+        assert_eq!(cold, try_mmd2(&qb, &cb, &opts).unwrap());
+        let warm = reg.mmd2_query(id, &qb, &opts, None).unwrap();
+        assert_eq!(cold, warm, "warm re-query must be bit-identical");
+        let st = reg.stats();
+        assert_eq!(st.cold_builds, 1);
+        assert_eq!(st.warm_hits, 1);
+        assert_eq!(st.queries, 3);
+    }
+
+    #[test]
+    fn lowrank_queries_reuse_the_cached_feature_state() {
+        let reg = CorpusRegistry::new();
+        let mut rng = Rng::new(702);
+        let (n, qn, l, d) = (6, 3, 6, 2);
+        let cdata = batch(&mut rng, n, l, d);
+        let qdata = batch(&mut rng, qn, l, d);
+        let cb = PathBatch::uniform(&cdata, n, l, d).unwrap();
+        let qb = PathBatch::uniform(&qdata, qn, l, d).unwrap();
+        let id = reg.register(&cb).unwrap();
+        let opts = KernelOptions::default();
+        let spec = LowRankSpec::nystrom(4, 9);
+        let cold = reg.mmd2_query(id, &qb, &opts, Some(&spec)).unwrap();
+        let warm = reg.mmd2_query(id, &qb, &opts, Some(&spec)).unwrap();
+        assert_eq!(cold, warm);
+        let g = reg.gram_query(id, &qb, &opts, Some(&spec)).unwrap();
+        assert_eq!(g.len(), qn * n);
+        assert!(g.iter().all(|v| v.is_finite()));
+        let st = reg.stats();
+        assert_eq!(st.cold_builds, 1, "one feature-state build");
+        assert_eq!(st.warm_hits, 2, "warm mmd2 + warm gram");
+    }
+
+    #[test]
+    fn unknown_ids_and_mismatched_queries_error() {
+        let reg = CorpusRegistry::new();
+        let mut rng = Rng::new(703);
+        let data = batch(&mut rng, 3, 5, 2);
+        let pb = PathBatch::uniform(&data, 3, 5, 2).unwrap();
+        let id = reg.register(&pb).unwrap();
+        let opts = KernelOptions::default();
+        assert!(matches!(
+            reg.mmd2_query(CorpusId(999), &pb, &opts, None),
+            Err(SigError::Invalid(_))
+        ));
+        let d3 = vec![0.0; 2 * 5 * 3];
+        let q3 = PathBatch::uniform(&d3, 2, 5, 3).unwrap();
+        assert!(matches!(
+            reg.mmd2_query(id, &q3, &opts, None),
+            Err(SigError::DimMismatch { .. })
+        ));
+        assert!(matches!(
+            reg.append(CorpusId(999), &pb),
+            Err(SigError::Invalid(_))
+        ));
+        assert!(matches!(
+            reg.append(id, &q3),
+            Err(SigError::DimMismatch { .. })
+        ));
+        let empty = PathBatch::ragged(&[], &[], 2).unwrap();
+        assert!(matches!(
+            reg.register(&empty),
+            Err(SigError::InsufficientBatch { .. })
+        ));
+        // Empty append is a no-op.
+        assert_eq!(reg.append(id, &empty).unwrap(), 3);
+        // Empty query errors.
+        assert!(matches!(
+            reg.mmd2_query(id, &empty, &opts, None),
+            Err(SigError::InsufficientBatch { .. })
+        ));
+    }
+
+    #[test]
+    fn append_extends_caches_and_updates_the_content_hash() {
+        let reg = CorpusRegistry::new();
+        let mut rng = Rng::new(704);
+        let (l, d) = (6, 2);
+        let part1 = batch(&mut rng, 4, l, d);
+        let part2 = batch(&mut rng, 2, l, d);
+        let p1 = PathBatch::uniform(&part1, 4, l, d).unwrap();
+        let p2 = PathBatch::uniform(&part2, 2, l, d).unwrap();
+        let opts = KernelOptions::default();
+        let id = reg.register(&p1).unwrap();
+        // Warm the exact cache, then append.
+        let q = PathBatch::uniform(&part2, 2, l, d).unwrap();
+        reg.mmd2_query(id, &q, &opts, None).unwrap();
+        assert_eq!(reg.append(id, &p2).unwrap(), 6);
+        // The appended corpus answers like the combined corpus.
+        let mut combined = part1.clone();
+        combined.extend_from_slice(&part2);
+        let cb = PathBatch::uniform(&combined, 6, l, d).unwrap();
+        let got = reg.mmd2_query(id, &q, &opts, None).unwrap();
+        assert_eq!(got, try_mmd2(&q, &cb, &opts).unwrap());
+        // ... and the warm cache was *extended*, not rebuilt.
+        assert_eq!(reg.stats().cold_builds, 1);
+        // Content-hash dedup now matches the combined content.
+        let again = reg.register(&cb).unwrap();
+        assert_eq!(again, id);
+    }
+}

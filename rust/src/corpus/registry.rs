@@ -1,0 +1,601 @@
+//! The corpus registry: register a reference corpus once, query it many
+//! times, append to it incrementally.
+//!
+//! See the [module docs](crate::corpus) for the serving story. The registry
+//! owns the path data and, per (kernel options, low-rank spec) actually
+//! queried, the derived state that makes warm re-queries cheap:
+//!
+//! * **exact** — the full corpus self-Gram `K_cc` (`[n, n]`), the O(n²·L²)
+//!   part of every MMD² against the corpus;
+//! * **low-rank** — the frozen [`FeatureMap`] (Nyström landmarks drawn from
+//!   the corpus's *landmark pool*, or the seeded random-signature sketch)
+//!   and the corpus feature matrix `Φ_c` (`[n, r]`).
+//!
+//! **Append invariance.** Appending extends the cached state *in place*:
+//! only the old×new cross strips and the new diagonal block of `K_cc` are
+//! solved (via [`TileScheduler::gram_block_into`]), and only the new paths
+//! are featurised into `Φ_c`. Both are bit-identical to registering the
+//! combined corpus from scratch, because every Gram entry is an independent
+//! computation and the feature map is pinned by the **landmark pool**: the
+//! first `min(rank, n)` paths of the corpus. While the corpus holds at
+//! least `rank` paths the pool — and with it the seeded landmark draw — is
+//! a prefix that appends never change. An append that *grows* the pool
+//! (corpus still smaller than `rank`) discards the cached map instead, and
+//! the next query rebuilds it exactly as a from-scratch registration would.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::corpus::tiles::TileScheduler;
+use crate::engine::MAX_BATCH_OUT;
+use crate::kernel::lowrank::{feature_mean, FeatureMap, LowRankFeatures, LowRankSpec};
+use crate::kernel::KernelOptions;
+use crate::path::{PathBatch, SigError};
+use crate::util::linalg::gemm_nt;
+
+/// Identifier of a registered corpus — small enough to travel in a wire
+/// header field, stable across appends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CorpusId(pub u32);
+
+impl std::fmt::Display for CorpusId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "corpus#{}", self.0)
+    }
+}
+
+/// Registry observability counters (monotonic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CorpusStats {
+    /// Corpora registered (deduplicated registrations do not count).
+    pub registered: u64,
+    /// Append operations applied.
+    pub appended: u64,
+    /// Queries served (Gram + MMD², exact + low-rank).
+    pub queries: u64,
+    /// Queries that found their derived state already cached.
+    pub warm_hits: u64,
+    /// Queries that had to build derived state (self-Gram / feature map).
+    pub cold_builds: u64,
+}
+
+/// Cached exact-kernel state for one [`KernelOptions`].
+struct ExactCache {
+    /// Corpus self-Gram `[n, n]` row-major.
+    kcc: Vec<f64>,
+}
+
+/// Cached low-rank state for one (options, spec) pair.
+struct LowRankCache {
+    /// The frozen feature map (landmarks from the corpus's landmark pool,
+    /// or the seeded sketch). Shared with in-flight queries.
+    map: Arc<FeatureMap>,
+    /// Corpus feature matrix `[n, map.rank()]` row-major.
+    phi: Vec<f64>,
+    /// Landmark-pool size the map was built from (`min(spec.rank, n)` at
+    /// build time). While an append keeps this equal to `min(spec.rank,
+    /// n_new)` the map is append-invariant and `phi` extends in place.
+    pool: usize,
+}
+
+/// One registered corpus: owned path data plus the per-options caches.
+struct CorpusEntry {
+    dim: usize,
+    data: Vec<f64>,
+    lengths: Vec<usize>,
+    hash: u64,
+    exact: HashMap<KernelOptions, ExactCache>,
+    lowrank: HashMap<(KernelOptions, LowRankSpec), LowRankCache>,
+}
+
+impl CorpusEntry {
+    fn batch(&self) -> PathBatch<'_> {
+        PathBatch::ragged(&self.data, &self.lengths, self.dim)
+            .expect("internal: stored corpus batch is valid")
+    }
+
+    fn max_len(&self) -> usize {
+        self.lengths.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Shared query validation: dimension and refined-grid bounds against
+    /// the corpus's longest path.
+    fn check_query(&self, q: &PathBatch<'_>, opts: &KernelOptions) -> Result<(), SigError> {
+        if q.dim() != self.dim {
+            return Err(SigError::DimMismatch {
+                left: q.dim(),
+                right: self.dim,
+            });
+        }
+        if q.is_empty() {
+            return Err(SigError::InsufficientBatch { need: 1, got: 0 });
+        }
+        let mq = (0..q.batch()).map(|i| q.len_of(i)).max().unwrap_or(0);
+        let mc = self.max_len();
+        if mq >= 2 && mc >= 2 {
+            crate::kernel::check_grid_size(mq, mc, opts)?;
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a over the corpus content (dimension, lengths, raw f64 bits) — the
+/// registry's dedup key. Collisions are survivable: a hash hit is confirmed
+/// by full content comparison before an id is reused.
+fn content_hash(dim: usize, lengths: &[usize], data: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1_0000_0000_01b3);
+        }
+    };
+    eat(dim as u64);
+    eat(lengths.len() as u64);
+    for &l in lengths {
+        eat(l as u64);
+    }
+    for &v in data {
+        eat(v.to_bits());
+    }
+    h
+}
+
+/// A concurrent registry of reference corpora with per-corpus derived-state
+/// caches. Cheap to share (`Arc`); registration is content-hash
+/// deduplicated, queries are lock-shared, appends are exclusive per corpus.
+pub struct CorpusRegistry {
+    entries: Mutex<HashMap<u32, Arc<RwLock<CorpusEntry>>>>,
+    by_hash: Mutex<HashMap<u64, u32>>,
+    next_id: AtomicU32,
+    tiles: TileScheduler,
+    registered: AtomicU64,
+    appended: AtomicU64,
+    queries: AtomicU64,
+    warm_hits: AtomicU64,
+    cold_builds: AtomicU64,
+}
+
+impl Default for CorpusRegistry {
+    fn default() -> Self {
+        CorpusRegistry::new()
+    }
+}
+
+impl CorpusRegistry {
+    /// Empty registry with the environment-configured tile size.
+    pub fn new() -> CorpusRegistry {
+        CorpusRegistry::with_tiles(TileScheduler::from_env())
+    }
+
+    /// Empty registry with an explicit tile scheduler.
+    pub fn with_tiles(tiles: TileScheduler) -> CorpusRegistry {
+        CorpusRegistry {
+            entries: Mutex::new(HashMap::new()),
+            by_hash: Mutex::new(HashMap::new()),
+            next_id: AtomicU32::new(1),
+            tiles,
+            registered: AtomicU64::new(0),
+            appended: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            warm_hits: AtomicU64::new(0),
+            cold_builds: AtomicU64::new(0),
+        }
+    }
+
+    /// Register a corpus. Content-hash keyed: registering byte-identical
+    /// content again returns the existing id instead of a new copy.
+    pub fn register(&self, batch: &PathBatch<'_>) -> Result<CorpusId, SigError> {
+        if batch.is_empty() {
+            return Err(SigError::InsufficientBatch { need: 1, got: 0 });
+        }
+        let lengths: Vec<usize> = (0..batch.batch()).map(|i| batch.len_of(i)).collect();
+        let hash = content_hash(batch.dim(), &lengths, batch.data());
+        // Hold the hash-map lock across lookup → verify → insert so two
+        // concurrent registrations of identical content cannot both miss
+        // and create duplicate corpora. Lock order is by_hash → entries →
+        // entry.read; `append` releases its entry lock before touching
+        // by_hash, so no cycle exists.
+        let mut by_hash = self.by_hash.lock().unwrap();
+        if let Some(&id) = by_hash.get(&hash) {
+            let arc = self.entries.lock().unwrap().get(&id).cloned();
+            if let Some(arc) = arc {
+                // Hash hit: confirm it is not an FNV collision.
+                let e = arc.read().unwrap();
+                if e.dim == batch.dim() && e.lengths == lengths && e.data == batch.data() {
+                    return Ok(CorpusId(id));
+                }
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let entry = CorpusEntry {
+            dim: batch.dim(),
+            data: batch.data().to_vec(),
+            lengths,
+            hash,
+            exact: HashMap::new(),
+            lowrank: HashMap::new(),
+        };
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(id, Arc::new(RwLock::new(entry)));
+        by_hash.insert(hash, id);
+        self.registered.fetch_add(1, Ordering::Relaxed);
+        Ok(CorpusId(id))
+    }
+
+    /// Append paths to a registered corpus, extending every cached Gram /
+    /// feature matrix in place (see the module docs for why the result is
+    /// bit-identical to a from-scratch registration of the combined
+    /// corpus). Returns the new path count. A cache whose extension fails
+    /// (e.g. an appended path makes a refined grid exceed the hard cap) is
+    /// dropped rather than left stale — the next query rebuilds or errors.
+    pub fn append(&self, id: CorpusId, batch: &PathBatch<'_>) -> Result<usize, SigError> {
+        let arc = self.entry(id)?;
+        let mut e = arc.write().unwrap();
+        if batch.dim() != e.dim {
+            return Err(SigError::DimMismatch {
+                left: batch.dim(),
+                right: e.dim,
+            });
+        }
+        if batch.is_empty() {
+            return Ok(e.lengths.len());
+        }
+        let old_hash = e.hash;
+        let n_old = e.lengths.len();
+        e.data.extend_from_slice(batch.data());
+        for i in 0..batch.batch() {
+            let l = batch.len_of(i);
+            e.lengths.push(l);
+        }
+        let n = e.lengths.len();
+        // Split borrows: the caches are extended against a view of the
+        // (already extended) path data.
+        let CorpusEntry {
+            dim,
+            data,
+            lengths,
+            hash,
+            exact,
+            lowrank,
+        } = &mut *e;
+        let cb = PathBatch::ragged(data, lengths, *dim)
+            .expect("internal: extended corpus batch is valid");
+        let exact_keys: Vec<KernelOptions> = exact.keys().copied().collect();
+        for opts in exact_keys {
+            let grown = grow_kcc(&self.tiles, &cb, &exact[&opts].kcc, n_old, n, &opts);
+            match grown {
+                Ok(kcc) => exact.get_mut(&opts).expect("key present").kcc = kcc,
+                Err(_) => {
+                    exact.remove(&opts);
+                }
+            }
+        }
+        let new_batch = suffix_batch(&cb, n_old);
+        let lr_keys: Vec<(KernelOptions, LowRankSpec)> = lowrank.keys().copied().collect();
+        for key in lr_keys {
+            let (opts, spec) = key;
+            let cache = &lowrank[&key];
+            let pool_new = spec.rank.min(n);
+            // Random-signature sketches depend only on (seed, shape), so
+            // they extend regardless of the pool; Nyström maps extend while
+            // the landmark pool is unchanged.
+            let extendable = cache.pool == pool_new
+                || matches!(spec.method, crate::kernel::LowRankMethod::RandomSig { .. });
+            if extendable {
+                // The map stays valid: only the new paths need feature rows.
+                match cache.map.try_features(&new_batch) {
+                    Ok(rows) => {
+                        let c = lowrank.get_mut(&key).expect("key present");
+                        c.phi.extend(rows);
+                        c.pool = pool_new;
+                    }
+                    Err(_) => {
+                        lowrank.remove(&key);
+                    }
+                }
+            } else {
+                // The pool grew (corpus was still below the rank budget):
+                // rebuild exactly as a from-scratch registration would.
+                match build_lowrank(&cb, &opts, &spec) {
+                    Ok(rebuilt) => {
+                        lowrank.insert(key, rebuilt);
+                    }
+                    Err(_) => {
+                        lowrank.remove(&key);
+                    }
+                }
+            }
+        }
+        *hash = content_hash(*dim, lengths, data);
+        let new_hash = *hash;
+        drop(e);
+        {
+            let mut by_hash = self.by_hash.lock().unwrap();
+            if by_hash.get(&old_hash) == Some(&id.0) {
+                by_hash.remove(&old_hash);
+            }
+            by_hash.insert(new_hash, id.0);
+        }
+        self.appended.fetch_add(1, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    /// Cross-Gram `[q.batch(), n]` of a query batch against the corpus —
+    /// exact (tiled PDE solves) or, with a spec, low-rank `Φ_q · Φ_cᵀ`
+    /// reusing the cached corpus features.
+    pub fn gram_query(
+        &self,
+        id: CorpusId,
+        q: &PathBatch<'_>,
+        opts: &KernelOptions,
+        lowrank: Option<&LowRankSpec>,
+    ) -> Result<Vec<f64>, SigError> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let arc = self.entry(id)?;
+        match lowrank {
+            None => {
+                let e = arc.read().unwrap();
+                e.check_query(q, opts)?;
+                let n = e.lengths.len();
+                let total = q
+                    .batch()
+                    .checked_mul(n)
+                    .filter(|&t| t <= MAX_BATCH_OUT)
+                    .ok_or(SigError::TooLarge("corpus gram output"))?;
+                let mut out = vec![0.0; total];
+                self.tiles.gram_into(q, &e.batch(), opts, &mut out)?;
+                Ok(out)
+            }
+            Some(spec) => self.with_lowrank(&arc, q, opts, spec, |e, map, phi| {
+                let (qb, n, r) = (q.batch(), e.lengths.len(), map.rank());
+                let total = qb
+                    .checked_mul(n)
+                    .filter(|&t| t <= MAX_BATCH_OUT)
+                    .ok_or(SigError::TooLarge("corpus gram output"))?;
+                let phi_q = map.try_features(q)?;
+                let mut out = vec![0.0; total];
+                gemm_nt(qb, r, n, &phi_q, phi, &mut out);
+                Ok(out)
+            }),
+        }
+    }
+
+    /// Biased MMD² between a query batch and the corpus. Exact queries
+    /// reuse the cached corpus self-Gram (only the query-side `K_qq` and
+    /// the cross `K_qc` are solved); low-rank queries reuse the cached
+    /// feature map and corpus features (only the query rows are
+    /// featurised).
+    pub fn mmd2_query(
+        &self,
+        id: CorpusId,
+        q: &PathBatch<'_>,
+        opts: &KernelOptions,
+        lowrank: Option<&LowRankSpec>,
+    ) -> Result<f64, SigError> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let arc = self.entry(id)?;
+        match lowrank {
+            None => {
+                // Query-side work always runs under the *shared* lock —
+                // the exclusive lock is held only while building the
+                // self-Gram, so concurrent warm queries are never blocked
+                // behind another query's K_qq/K_qc solves.
+                let mut just_built = false;
+                loop {
+                    {
+                        let e = arc.read().unwrap();
+                        e.check_query(q, opts)?;
+                        if let Some(c) = e.exact.get(opts) {
+                            if !just_built {
+                                self.warm_hits.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return self.mmd2_exact_value(&e, q, opts, &c.kcc);
+                        }
+                    }
+                    // Cold: build (or pick up a racing build of) the
+                    // self-Gram, release, and retry the warm path. The
+                    // cache can only vanish again if a concurrent append's
+                    // extension failed — then the next lap rebuilds.
+                    let mut e = arc.write().unwrap();
+                    e.check_query(q, opts)?;
+                    if e.exact.get(opts).is_none() {
+                        let kcc = build_kcc(&self.tiles, &e.batch(), opts)?;
+                        e.exact.insert(*opts, ExactCache { kcc });
+                        self.cold_builds.fetch_add(1, Ordering::Relaxed);
+                        just_built = true;
+                    }
+                }
+            }
+            Some(spec) => self.with_lowrank(&arc, q, opts, spec, |e, map, phi| {
+                let r = map.rank();
+                let phi_q = map.try_features(q)?;
+                let mq = feature_mean(&phi_q, q.batch(), r);
+                let mc = feature_mean(phi, e.lengths.len(), r);
+                Ok(mq
+                    .iter()
+                    .zip(mc.iter())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum())
+            }),
+        }
+    }
+
+    /// Number of paths in a corpus.
+    pub fn path_count(&self, id: CorpusId) -> Option<usize> {
+        let arc = self.entries.lock().unwrap().get(&id.0).cloned()?;
+        let n = arc.read().unwrap().lengths.len();
+        Some(n)
+    }
+
+    /// Path dimension of a corpus.
+    pub fn dim_of(&self, id: CorpusId) -> Option<usize> {
+        let arc = self.entries.lock().unwrap().get(&id.0).cloned()?;
+        let d = arc.read().unwrap().dim;
+        Some(d)
+    }
+
+    /// Registered corpus ids, ascending.
+    pub fn ids(&self) -> Vec<CorpusId> {
+        let mut ids: Vec<CorpusId> = self
+            .entries
+            .lock()
+            .unwrap()
+            .keys()
+            .map(|&v| CorpusId(v))
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Observability counters.
+    pub fn stats(&self) -> CorpusStats {
+        CorpusStats {
+            registered: self.registered.load(Ordering::Relaxed),
+            appended: self.appended.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            cold_builds: self.cold_builds.load(Ordering::Relaxed),
+        }
+    }
+
+    fn entry(&self, id: CorpusId) -> Result<Arc<RwLock<CorpusEntry>>, SigError> {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(&id.0)
+            .cloned()
+            .ok_or(SigError::Invalid("unknown corpus id"))
+    }
+
+    /// Run `body` with the (warm or freshly built) low-rank state for
+    /// (opts, spec), updating the warm/cold counters.
+    fn with_lowrank<R>(
+        &self,
+        arc: &Arc<RwLock<CorpusEntry>>,
+        q: &PathBatch<'_>,
+        opts: &KernelOptions,
+        spec: &LowRankSpec,
+        body: impl Fn(&CorpusEntry, &FeatureMap, &[f64]) -> Result<R, SigError>,
+    ) -> Result<R, SigError> {
+        let key = (*opts, *spec);
+        // Same locking discipline as the exact route: the exclusive lock
+        // covers only the feature-state build; `body` (query featurisation)
+        // always runs under the shared lock.
+        let mut just_built = false;
+        loop {
+            {
+                let e = arc.read().unwrap();
+                e.check_query(q, opts)?;
+                if let Some(c) = e.lowrank.get(&key) {
+                    if !just_built {
+                        self.warm_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return body(&e, &c.map, &c.phi);
+                }
+            }
+            let mut e = arc.write().unwrap();
+            e.check_query(q, opts)?;
+            if e.lowrank.get(&key).is_none() {
+                let built = build_lowrank(&e.batch(), opts, spec)?;
+                e.lowrank.insert(key, built);
+                self.cold_builds.fetch_add(1, Ordering::Relaxed);
+                just_built = true;
+            }
+        }
+    }
+
+    /// `mean(K_qq) − 2·mean(K_qc) + mean(K_cc)` with the corpus term served
+    /// from cache — the same estimator (and the same summation order) as
+    /// [`OpSpec::Mmd2`](crate::engine::OpSpec::Mmd2).
+    fn mmd2_exact_value(
+        &self,
+        e: &CorpusEntry,
+        q: &PathBatch<'_>,
+        opts: &KernelOptions,
+        kcc: &[f64],
+    ) -> Result<f64, SigError> {
+        let qb = q.batch();
+        let n = e.lengths.len();
+        let gram_len = |a: usize, b: usize| -> Result<usize, SigError> {
+            a.checked_mul(b)
+                .filter(|&t| t <= MAX_BATCH_OUT)
+                .ok_or(SigError::TooLarge("corpus mmd2 gram matrices"))
+        };
+        let mut kqq = vec![0.0; gram_len(qb, qb)?];
+        self.tiles.gram_into(q, q, opts, &mut kqq)?;
+        let mut kqc = vec![0.0; gram_len(qb, n)?];
+        self.tiles.gram_into(q, &e.batch(), opts, &mut kqc)?;
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        Ok(mean(&kqq) - 2.0 * mean(&kqc) + mean(kcc))
+    }
+}
+
+/// The corpus suffix `paths[n_old..]` as its own batch view.
+fn suffix_batch<'a>(cb: &PathBatch<'a>, n_old: usize) -> PathBatch<'a> {
+    let dim = cb.dim();
+    let split = cb.offsets()[n_old] * dim;
+    let lens: Vec<usize> = (n_old..cb.batch()).map(|i| cb.len_of(i)).collect();
+    PathBatch::ragged(&cb.data()[split..], &lens, dim)
+        .expect("internal: corpus suffix batch is valid")
+}
+
+/// Full corpus self-Gram (the cold build).
+fn build_kcc(
+    tiles: &TileScheduler,
+    cb: &PathBatch<'_>,
+    opts: &KernelOptions,
+) -> Result<Vec<f64>, SigError> {
+    let n = cb.batch();
+    let total = n
+        .checked_mul(n)
+        .filter(|&t| t <= MAX_BATCH_OUT)
+        .ok_or(SigError::TooLarge("corpus self-Gram"))?;
+    let mut kcc = vec![0.0; total];
+    tiles.gram_into(cb, cb, opts, &mut kcc)?;
+    Ok(kcc)
+}
+
+/// Grow a cached `[n_old, n_old]` self-Gram to `[n, n]`: copy the retained
+/// block, solve only the two new strips.
+fn grow_kcc(
+    tiles: &TileScheduler,
+    cb: &PathBatch<'_>,
+    old: &[f64],
+    n_old: usize,
+    n: usize,
+    opts: &KernelOptions,
+) -> Result<Vec<f64>, SigError> {
+    let total = n
+        .checked_mul(n)
+        .filter(|&t| t <= MAX_BATCH_OUT)
+        .ok_or(SigError::TooLarge("corpus self-Gram"))?;
+    let mut kcc = vec![0.0; total];
+    for i in 0..n_old {
+        kcc[i * n..i * n + n_old].copy_from_slice(&old[i * n_old..(i + 1) * n_old]);
+    }
+    tiles.gram_block_into(cb, 0..n_old, cb, n_old..n, opts, &mut kcc, n, 0, n_old)?;
+    tiles.gram_block_into(cb, n_old..n, cb, 0..n, opts, &mut kcc, n, n_old, 0)?;
+    Ok(kcc)
+}
+
+/// Cold build of the low-rank state: map from the landmark pool (the first
+/// `min(rank, n)` paths), features for the whole corpus.
+fn build_lowrank(
+    cb: &PathBatch<'_>,
+    opts: &KernelOptions,
+    spec: &LowRankSpec,
+) -> Result<LowRankCache, SigError> {
+    spec.validate()?;
+    let n = cb.batch();
+    let pool = spec.rank.min(n);
+    let pool_lens: Vec<usize> = (0..pool).map(|i| cb.len_of(i)).collect();
+    let split = cb.offsets()[pool] * cb.dim();
+    let pool_batch = PathBatch::ragged(&cb.data()[..split], &pool_lens, cb.dim())?;
+    let map = Arc::new(FeatureMap::try_build(spec, opts, &pool_batch)?);
+    let phi = map.try_features(cb)?;
+    Ok(LowRankCache { map, phi, pool })
+}

@@ -1,0 +1,352 @@
+//! Cache-sized tile scheduler for Gram blocks.
+//!
+//! The engine's Gram op parallelises per *entry*: every worker claims one
+//! (i, j) pair at a time, so consecutive claims touch unrelated rows of x
+//! and columns of y and the path data is re-streamed from memory for every
+//! solve. This scheduler shards the same work into `tile × tile` blocks:
+//! within a block one worker solves every pair over a small, cache-resident
+//! set of paths, and blocks (not entries) are what the atomic cursor hands
+//! out — far fewer claims, far better locality, identical values.
+//!
+//! **Bit-identity.** Each Gram entry is an independent computation
+//! (Δ matrix via [`delta_matrix_into`](crate::kernel::delta::delta_matrix_into),
+//! then the Goursat sweep) whose value does not depend on which worker or
+//! tile computed it, so the tiled Gram is bit-for-bit identical to the
+//! engine's per-entry path and to a single-threaded loop — regardless of
+//! `PYSIGLIB_THREADS` (asserted by the property tests). This is also what
+//! makes the registry's incremental append sound: a cross block computed
+//! later is exactly the block a from-scratch Gram would have produced.
+//!
+//! Block support ([`TileScheduler::gram_block_into`]) is the piece the
+//! per-entry path lacks: an append to a registered corpus computes only the
+//! old×new cross strips and the new diagonal block of the cached self-Gram,
+//! writing into the enlarged matrix at an arbitrary offset and stride.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::kernel::{KernelOptions, SolverKind};
+use crate::path::{PathBatch, SigError};
+use crate::transforms::Transform;
+use crate::util::pool::num_threads;
+
+/// Default tile edge: 16 × 16 = 256 PDE solves per claim — large enough to
+/// amortise the cursor, small enough that both path sets stay cache-hot.
+const DEFAULT_TILE: usize = 16;
+
+/// Shards Gram work into `tile × tile` blocks over the thread pool.
+#[derive(Clone, Copy, Debug)]
+pub struct TileScheduler {
+    tile: usize,
+}
+
+impl Default for TileScheduler {
+    fn default() -> Self {
+        TileScheduler::from_env()
+    }
+}
+
+impl TileScheduler {
+    /// Tile edge from `PYSIGLIB_TILE` (entries per side), default 16.
+    pub fn from_env() -> TileScheduler {
+        let tile = std::env::var("PYSIGLIB_TILE")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(DEFAULT_TILE);
+        TileScheduler { tile }
+    }
+
+    /// Explicit tile edge (at least 1).
+    pub fn with_tile(tile: usize) -> TileScheduler {
+        TileScheduler { tile: tile.max(1) }
+    }
+
+    /// The tile edge in Gram entries.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Full Gram: `out` is `[x.batch(), y.batch()]` row-major, filled with
+    /// k(x_i, y_j) for every pair.
+    pub fn gram_into(
+        &self,
+        x: &PathBatch<'_>,
+        y: &PathBatch<'_>,
+        opts: &KernelOptions,
+        out: &mut [f64],
+    ) -> Result<(), SigError> {
+        let cols = y.batch();
+        self.gram_block_into(x, 0..x.batch(), y, 0..y.batch(), opts, out, cols, 0, 0)
+    }
+
+    /// Gram sub-block: k(x_i, y_j) for `i ∈ xr`, `j ∈ yr`, written into the
+    /// larger matrix `out` (row stride `out_cols`) at origin `(row0, col0)`
+    /// — i.e. entry (i, j) lands at `out[(row0 + i - xr.start) * out_cols +
+    /// col0 + (j - yr.start)]`. This is the incremental-append primitive:
+    /// only the new strips of an enlarged corpus self-Gram are computed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gram_block_into(
+        &self,
+        x: &PathBatch<'_>,
+        xr: Range<usize>,
+        y: &PathBatch<'_>,
+        yr: Range<usize>,
+        opts: &KernelOptions,
+        out: &mut [f64],
+        out_cols: usize,
+        row0: usize,
+        col0: usize,
+    ) -> Result<(), SigError> {
+        if x.dim() != y.dim() {
+            return Err(SigError::DimMismatch {
+                left: x.dim(),
+                right: y.dim(),
+            });
+        }
+        if xr.end > x.batch() || yr.end > y.batch() {
+            return Err(SigError::Invalid("tile range exceeds the batch"));
+        }
+        let (nr, nc) = (xr.len(), yr.len());
+        if nr == 0 || nc == 0 {
+            return Ok(());
+        }
+        if col0 + nc > out_cols || (row0 + nr) * out_cols > out.len() {
+            return Err(SigError::Invalid("tile block exceeds the output buffer"));
+        }
+        // The longest pair bounds every pair's refined grid (monotone), so
+        // per-pair solves below cannot fail.
+        let mx = xr.clone().map(|i| x.len_of(i)).max().unwrap_or(0);
+        let my = yr.clone().map(|j| y.len_of(j)).max().unwrap_or(0);
+        if mx >= 2 && my >= 2 {
+            crate::kernel::check_grid_size(mx, my, opts)?;
+        }
+        let tr = opts.exec.transform;
+        let dim = x.dim();
+        let max_m = if mx < 2 { 0 } else { tr.out_len(mx) - 1 };
+        let max_n = if my < 2 { 0 } else { tr.out_len(my) - 1 };
+        let tiles_x = nr.div_ceil(self.tile);
+        let tiles_y = nc.div_ceil(self.tile);
+        let n_tiles = tiles_x * tiles_y;
+        let workers = if opts.exec.parallel {
+            num_threads().min(n_tiles)
+        } else {
+            1
+        };
+        let base = out.as_mut_ptr() as usize;
+        let run_tile = |t: usize, sc: &mut TileScratch| {
+            let (bx, by) = (t / tiles_y, t % tiles_y);
+            let i_lo = xr.start + bx * self.tile;
+            let i_hi = (i_lo + self.tile).min(xr.end);
+            let j_lo = yr.start + by * self.tile;
+            let j_hi = (j_lo + self.tile).min(yr.end);
+            for i in i_lo..i_hi {
+                let orow = row0 + (i - xr.start);
+                // SAFETY: this tile owns exactly the entries
+                // [orow * out_cols + col0 + (j_lo - yr.start) ..
+                //  .. + (j_hi - j_lo)); tiles partition the (i, j) index
+                // space, so writes are disjoint, and `out` outlives the
+                // scope below.
+                let row = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (base as *mut f64).add(orow * out_cols + col0 + (j_lo - yr.start)),
+                        j_hi - j_lo,
+                    )
+                };
+                for (slot, j) in row.iter_mut().zip(j_lo..j_hi) {
+                    *slot = sc.entry(x, i, y, j, opts, tr, dim);
+                }
+            }
+        };
+        if workers <= 1 {
+            let mut sc = TileScratch::new(max_m, max_n, dim, tr, opts);
+            for t in 0..n_tiles {
+                run_tile(t, &mut sc);
+            }
+            return Ok(());
+        }
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let cursor = &cursor;
+                let run_tile = &run_tile;
+                scope.spawn(move || {
+                    let mut sc = TileScratch::new(max_m, max_n, dim, tr, opts);
+                    loop {
+                        let t = cursor.fetch_add(1, Ordering::Relaxed);
+                        if t >= n_tiles {
+                            break;
+                        }
+                        run_tile(t, &mut sc);
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Per-worker scratch: increment buffers, the Δ matrix and the two solver
+/// rows, sized once for the block's longest pair.
+struct TileScratch {
+    dx: Vec<f64>,
+    dy: Vec<f64>,
+    base: Vec<f64>,
+    delta: Vec<f64>,
+    prev: Vec<f64>,
+    cur: Vec<f64>,
+}
+
+impl TileScratch {
+    fn new(max_m: usize, max_n: usize, dim: usize, tr: Transform, opts: &KernelOptions) -> Self {
+        let needs_base = matches!(tr, Transform::LeadLag | Transform::LeadLagTimeAug);
+        // Transformed Δ dims bound the raw increment counts too (out_len is
+        // monotone and ≥ the input length for every transform).
+        let row_len = (max_n << opts.dyadic_y) + 1;
+        TileScratch {
+            dx: vec![0.0; max_m * dim],
+            dy: vec![0.0; max_n * dim],
+            base: vec![0.0; if needs_base { max_m * max_n } else { 0 }],
+            delta: vec![0.0; max_m * max_n],
+            prev: vec![0.0; row_len],
+            cur: vec![0.0; row_len],
+        }
+    }
+
+    /// One Gram entry — exactly the engine's per-entry computation, so the
+    /// value is independent of tiling, threads and scratch sizes.
+    #[allow(clippy::too_many_arguments)]
+    fn entry(
+        &mut self,
+        x: &PathBatch<'_>,
+        i: usize,
+        y: &PathBatch<'_>,
+        j: usize,
+        opts: &KernelOptions,
+        tr: Transform,
+        dim: usize,
+    ) -> f64 {
+        let (lx, ly) = (x.len_of(i), y.len_of(j));
+        if lx < 2 || ly < 2 {
+            return 1.0; // degenerate path: identity signature, k = 1
+        }
+        let (m, n) = crate::kernel::delta::delta_matrix_into(
+            x.values_of(i),
+            y.values_of(j),
+            lx,
+            ly,
+            dim,
+            tr,
+            &mut self.dx,
+            &mut self.dy,
+            &mut self.base,
+            &mut self.delta,
+        );
+        match opts.solver {
+            SolverKind::Row => crate::kernel::solver::solve_pde_with(
+                &self.delta[..m * n],
+                m,
+                n,
+                opts.dyadic_x,
+                opts.dyadic_y,
+                &mut self.prev,
+                &mut self.cur,
+            ),
+            SolverKind::Blocked => crate::kernel::solve_pde_blocked(
+                &self.delta[..m * n],
+                m,
+                n,
+                opts.dyadic_x,
+                opts.dyadic_y,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::try_gram;
+    use crate::util::rng::Rng;
+
+    fn ragged_batch(rng: &mut Rng, lens: &[usize], d: usize) -> (Vec<f64>, Vec<usize>) {
+        let mut data = Vec::new();
+        for &l in lens {
+            data.extend(rng.brownian_path(l, d, 0.4));
+        }
+        (data, lens.to_vec())
+    }
+
+    #[test]
+    fn tiled_gram_bit_matches_engine_gram() {
+        let mut rng = Rng::new(600);
+        let d = 2;
+        let (xd, xl) = ragged_batch(&mut rng, &[5, 1, 8, 3, 6, 7, 2, 9, 4], d);
+        let (yd, yl) = ragged_batch(&mut rng, &[4, 6, 1, 7, 5], d);
+        let xb = PathBatch::ragged(&xd, &xl, d).unwrap();
+        let yb = PathBatch::ragged(&yd, &yl, d).unwrap();
+        for opts in [
+            KernelOptions::default(),
+            KernelOptions::default().dyadic(1, 2),
+            KernelOptions::default().transform(Transform::TimeAug),
+            KernelOptions::default().transform(Transform::LeadLag),
+            KernelOptions::default().solver(SolverKind::Blocked),
+        ] {
+            let want = try_gram(&xb, &yb, &opts).unwrap();
+            for tile in [1usize, 2, 4, 64] {
+                let mut got = vec![0.0; xb.batch() * yb.batch()];
+                TileScheduler::with_tile(tile)
+                    .gram_into(&xb, &yb, &opts, &mut got)
+                    .unwrap();
+                assert_eq!(got, want, "tile={tile} opts={opts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_fill_equals_full_fill() {
+        let mut rng = Rng::new(601);
+        let d = 3;
+        let (xd, xl) = ragged_batch(&mut rng, &[4, 5, 6, 7, 3, 8], d);
+        let xb = PathBatch::ragged(&xd, &xl, d).unwrap();
+        let opts = KernelOptions::default();
+        let n = xb.batch();
+        let sched = TileScheduler::with_tile(2);
+        let mut full = vec![0.0; n * n];
+        sched.gram_into(&xb, &xb, &opts, &mut full).unwrap();
+        // Rebuild the same matrix from four blocks split at s.
+        let s = 4;
+        let mut parts = vec![0.0; n * n];
+        sched
+            .gram_block_into(&xb, 0..s, &xb, 0..s, &opts, &mut parts, n, 0, 0)
+            .unwrap();
+        sched
+            .gram_block_into(&xb, 0..s, &xb, s..n, &opts, &mut parts, n, 0, s)
+            .unwrap();
+        sched
+            .gram_block_into(&xb, s..n, &xb, 0..n, &opts, &mut parts, n, s, 0)
+            .unwrap();
+        assert_eq!(parts, full);
+    }
+
+    #[test]
+    fn block_bounds_are_validated() {
+        let data = vec![0.0; 4 * 3 * 2];
+        let xb = PathBatch::uniform(&data, 4, 3, 2).unwrap();
+        let opts = KernelOptions::default();
+        let sched = TileScheduler::from_env();
+        let mut out = vec![0.0; 4];
+        // Range beyond the batch.
+        assert!(sched
+            .gram_block_into(&xb, 0..5, &xb, 0..1, &opts, &mut out, 1, 0, 0)
+            .is_err());
+        // Output too small for the block.
+        assert!(sched
+            .gram_block_into(&xb, 0..4, &xb, 0..4, &opts, &mut out, 4, 0, 0)
+            .is_err());
+        // Degenerate empty range is a no-op.
+        assert!(sched
+            .gram_block_into(&xb, 2..2, &xb, 0..4, &opts, &mut out, 4, 0, 0)
+            .is_ok());
+    }
+}

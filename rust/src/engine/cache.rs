@@ -10,6 +10,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::corpus::CorpusRegistry;
 use crate::path::SigError;
 use crate::runtime::RuntimeHandle;
 
@@ -54,9 +55,38 @@ impl PlanCache {
         retain: bool,
         runtime: Option<Arc<RuntimeHandle>>,
     ) -> Result<Arc<Plan>, SigError> {
-        let Some(key) = spec.cache_key(shape, retain) else {
+        let key = spec.cache_key(shape, retain);
+        self.lookup_or_insert(key, || Plan::compile_custom(spec, shape, retain, runtime))
+    }
+
+    /// [`get_or_compile`](Self::get_or_compile) for corpus-query specs
+    /// ([`OpSpec::GramCorpus`] / [`OpSpec::Mmd2Corpus`]): compiled via
+    /// [`Plan::compile_corpus`] with the serving registry. The corpus id is
+    /// part of the cache key; a cached plan stays valid across appends
+    /// because it resolves the id against the registry on every execute.
+    pub fn get_or_compile_corpus(
+        &self,
+        spec: OpSpec,
+        shape: ShapeClass,
+        registry: &Arc<CorpusRegistry>,
+    ) -> Result<Arc<Plan>, SigError> {
+        let key = spec.cache_key(shape, false);
+        self.lookup_or_insert(key, || Plan::compile_corpus(spec, shape, registry.clone()))
+    }
+
+    /// The shared LRU body: warm lookup (moving the hit to the back),
+    /// compile on miss, insert, evict from the front. `None` keys
+    /// (non-cacheable specs) compile fresh and count as misses. The compile
+    /// runs outside the lock; a racing duplicate insert is harmless (last
+    /// one wins, the loser is just dropped on eviction).
+    fn lookup_or_insert(
+        &self,
+        key: Option<PlanKey>,
+        compile: impl FnOnce() -> Result<Plan, SigError>,
+    ) -> Result<Arc<Plan>, SigError> {
+        let Some(key) = key else {
             self.misses.fetch_add(1, Ordering::Relaxed);
-            return Plan::compile_custom(spec, shape, retain, runtime).map(Arc::new);
+            return compile().map(Arc::new);
         };
         {
             let mut entries = self.entries.lock().unwrap();
@@ -68,10 +98,8 @@ impl PlanCache {
                 return Ok(plan);
             }
         }
-        // Compile outside the lock; a racing duplicate insert is harmless
-        // (last one wins, the loser is just dropped on eviction).
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let plan = Arc::new(Plan::compile_custom(spec, shape, retain, runtime)?);
+        let plan = Arc::new(compile()?);
         let mut entries = self.entries.lock().unwrap();
         entries.push((key, plan.clone()));
         while entries.len() > self.capacity {

@@ -49,6 +49,7 @@ pub use cache::{CacheStats, PlanCache, Session};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::corpus::{CorpusId, CorpusRegistry};
 use crate::kernel::krr::KernelRidge;
 use crate::kernel::lowrank::{FeatureMap, LowRankFeatures, LowRankRidge, LowRankSpec};
 use crate::kernel::{KernelOptions, SolverKind};
@@ -107,6 +108,23 @@ pub enum OpSpec {
         lowrank: LowRankSpec,
         lambda: f64,
     },
+    /// Cross-Gram `[q, n]` of a query batch against a registered corpus
+    /// (`lowrank: Some(..)` reuses the registry's cached corpus feature
+    /// matrix; `None` is the exact tiled path). Compile with
+    /// [`Plan::compile_corpus`]; executes take the query batch only.
+    GramCorpus {
+        opts: KernelOptions,
+        corpus: CorpusId,
+        lowrank: Option<LowRankSpec>,
+    },
+    /// Biased MMD² between a query batch and a registered corpus. Warm
+    /// queries reuse the registry's cached corpus self-Gram (exact) or
+    /// feature map + `Φ_c` (low-rank) — only query-side work is solved.
+    Mmd2Corpus {
+        opts: KernelOptions,
+        corpus: CorpusId,
+        lowrank: Option<LowRankSpec>,
+    },
 }
 
 impl OpSpec {
@@ -123,6 +141,8 @@ impl OpSpec {
             OpSpec::GramLowRank { .. } => "gram_lowrank",
             OpSpec::Mmd2LowRank { .. } => "mmd2_lowrank",
             OpSpec::KrrLowRank { .. } => "krr_lowrank",
+            OpSpec::GramCorpus { .. } => "gram_corpus",
+            OpSpec::Mmd2Corpus { .. } => "mmd2_corpus",
         }
     }
 
@@ -132,15 +152,25 @@ impl OpSpec {
     /// `SigOptions`/`KernelOptions`/`ExecOptions`/`LowRankSpec` later
     /// participates automatically — no hand-maintained digest to drift.
     pub(crate) fn cache_key(&self, shape: ShapeClass, retain: bool) -> Option<PlanKey> {
-        let (kind, sig, kernel, lowrank) = match self {
-            OpSpec::Sig(o) => (0u8, Some(*o), None, None),
-            OpSpec::LogSig(o) => (1, Some(*o), None, None),
-            OpSpec::SigKernel(k) => (2, None, Some(*k), None),
-            OpSpec::Gram(k) => (3, None, Some(*k), None),
-            OpSpec::Mmd2(k) => (4, None, Some(*k), None),
-            OpSpec::Mmd2Unbiased(k) => (5, None, Some(*k), None),
-            OpSpec::GramLowRank { opts, lowrank } => (6, None, Some(*opts), Some(*lowrank)),
-            OpSpec::Mmd2LowRank { opts, lowrank } => (7, None, Some(*opts), Some(*lowrank)),
+        let (kind, sig, kernel, lowrank, corpus) = match self {
+            OpSpec::Sig(o) => (0u8, Some(*o), None, None, None),
+            OpSpec::LogSig(o) => (1, Some(*o), None, None, None),
+            OpSpec::SigKernel(k) => (2, None, Some(*k), None, None),
+            OpSpec::Gram(k) => (3, None, Some(*k), None, None),
+            OpSpec::Mmd2(k) => (4, None, Some(*k), None, None),
+            OpSpec::Mmd2Unbiased(k) => (5, None, Some(*k), None, None),
+            OpSpec::GramLowRank { opts, lowrank } => (6, None, Some(*opts), Some(*lowrank), None),
+            OpSpec::Mmd2LowRank { opts, lowrank } => (7, None, Some(*opts), Some(*lowrank), None),
+            OpSpec::GramCorpus {
+                opts,
+                corpus,
+                lowrank,
+            } => (8, None, Some(*opts), *lowrank, Some(*corpus)),
+            OpSpec::Mmd2Corpus {
+                opts,
+                corpus,
+                lowrank,
+            } => (9, None, Some(*opts), *lowrank, Some(*corpus)),
             OpSpec::Krr { .. } | OpSpec::KrrLowRank { .. } => return None,
         };
         Some(PlanKey {
@@ -148,6 +178,7 @@ impl OpSpec {
             sig,
             kernel,
             lowrank,
+            corpus,
             shape,
             retain,
         })
@@ -162,6 +193,7 @@ pub struct PlanKey {
     sig: Option<SigOptions>,
     kernel: Option<KernelOptions>,
     lowrank: Option<LowRankSpec>,
+    corpus: Option<CorpusId>,
     shape: ShapeClass,
     retain: bool,
 }
@@ -262,6 +294,8 @@ pub struct Plan {
     layout: Option<LevelLayout>,
     /// Signature row length (signature ops).
     slen: usize,
+    /// The registry corpus plans resolve their [`CorpusId`] against.
+    corpus_registry: Option<Arc<CorpusRegistry>>,
     arena: Arena,
     /// Warm state for low-rank plans: the feature map (and Φy) depend only
     /// on (spec, reference batch y), and training loops execute the same
@@ -330,12 +364,42 @@ impl Plan {
     }
 
     /// Full-control compilation: retention flag plus an optional PJRT
-    /// runtime for artifact dispatch.
+    /// runtime for artifact dispatch. Corpus specs are rejected here — they
+    /// need a registry; use [`Plan::compile_corpus`].
     pub fn compile_custom(
         spec: OpSpec,
         shape: ShapeClass,
         retain: bool,
         runtime: Option<Arc<RuntimeHandle>>,
+    ) -> Result<Plan, SigError> {
+        Plan::compile_impl(spec, shape, retain, runtime, None)
+    }
+
+    /// Compile a corpus-query plan ([`OpSpec::GramCorpus`] /
+    /// [`OpSpec::Mmd2Corpus`]): the shape class describes the **query**
+    /// side; the corpus id resolves against `registry` at execute time, so
+    /// a cached plan stays valid across appends. Corpus plans are
+    /// forward-only (their corpus-side state lives in the registry, not on
+    /// the record), so `vjp` on their records errors.
+    pub fn compile_corpus(
+        spec: OpSpec,
+        shape: ShapeClass,
+        registry: Arc<CorpusRegistry>,
+    ) -> Result<Plan, SigError> {
+        if !matches!(spec, OpSpec::GramCorpus { .. } | OpSpec::Mmd2Corpus { .. }) {
+            return Err(SigError::Invalid(
+                "compile_corpus takes a GramCorpus / Mmd2Corpus spec",
+            ));
+        }
+        Plan::compile_impl(spec, shape, false, None, Some(registry))
+    }
+
+    fn compile_impl(
+        spec: OpSpec,
+        shape: ShapeClass,
+        retain: bool,
+        runtime: Option<Arc<RuntimeHandle>>,
+        corpus_registry: Option<Arc<CorpusRegistry>>,
     ) -> Result<Plan, SigError> {
         if shape.dim == 0 {
             return Err(SigError::ZeroDim);
@@ -378,6 +442,36 @@ impl Plan {
                     return Err(SigError::NonFinite("ridge λ must be positive"));
                 }
             }
+            OpSpec::GramCorpus {
+                opts,
+                corpus,
+                lowrank,
+            }
+            | OpSpec::Mmd2Corpus {
+                opts,
+                corpus,
+                lowrank,
+            } => {
+                validate_kernel_spec(opts, &shape)?;
+                if let Some(lr) = lowrank {
+                    validate_lowrank_spec(lr, opts, &shape)?;
+                }
+                let Some(reg) = corpus_registry.as_ref() else {
+                    return Err(SigError::Invalid(
+                        "corpus plans need a registry; compile via Plan::compile_corpus",
+                    ));
+                };
+                match reg.dim_of(*corpus) {
+                    None => return Err(SigError::Invalid("unknown corpus id")),
+                    Some(d) if d != shape.dim => {
+                        return Err(SigError::DimMismatch {
+                            left: shape.dim,
+                            right: d,
+                        })
+                    }
+                    Some(_) => {}
+                }
+            }
         }
         let backend = match (&runtime, &spec, shape.lens) {
             (Some(_), OpSpec::Sig(o), LenProfile::Uniform(_))
@@ -400,6 +494,7 @@ impl Plan {
             runtime,
             layout,
             slen,
+            corpus_registry,
             arena: Arena::new(),
             lowrank_warm: Mutex::new(None),
         })
@@ -459,11 +554,23 @@ impl Plan {
         Ok(())
     }
 
-    /// Execute a signature / log-signature plan over one batch.
+    /// Execute a single-batch plan: signatures / log-signatures, or a
+    /// corpus query (the batch is the query side; the corpus lives in the
+    /// plan's registry).
     pub fn execute(&self, x: &PathBatch<'_>) -> Result<ExecutionRecord, SigError> {
         let (opts, log) = match &self.spec {
             OpSpec::Sig(o) => (*o, false),
             OpSpec::LogSig(o) => (*o, true),
+            OpSpec::GramCorpus {
+                opts,
+                corpus,
+                lowrank,
+            } => return self.exec_corpus(x, opts, *corpus, lowrank.as_ref(), true),
+            OpSpec::Mmd2Corpus {
+                opts,
+                corpus,
+                lowrank,
+            } => return self.exec_corpus(x, opts, *corpus, lowrank.as_ref(), false),
             _ => {
                 return Err(SigError::Invalid(
                     "this plan takes a pair of batches; use execute_pair / execute_fit",
@@ -1039,6 +1146,30 @@ impl Plan {
         Ok(self.record(values, Some(x), Some(y), state, self.retain))
     }
 
+    /// Execute a corpus-query plan: the registry serves the corpus-side
+    /// state (cached self-Gram tiles / feature matrices), only query-side
+    /// work runs here. Corpus records are forward-only.
+    fn exec_corpus(
+        &self,
+        q: &PathBatch<'_>,
+        k: &KernelOptions,
+        id: CorpusId,
+        lowrank: Option<&LowRankSpec>,
+        gram: bool,
+    ) -> Result<ExecutionRecord, SigError> {
+        self.check_batch(q)?;
+        let reg = self
+            .corpus_registry
+            .as_ref()
+            .ok_or(SigError::Invalid("corpus plan has no registry attached"))?;
+        let values = if gram {
+            reg.gram_query(id, q, k, lowrank)?
+        } else {
+            vec![reg.mmd2_query(id, q, k, lowrank)?]
+        };
+        Ok(self.record(values, None, None, RecordState::None, false))
+    }
+
     /// Build the record, copying inputs (through the arena) when retaining.
     fn record(
         &self,
@@ -1457,6 +1588,9 @@ impl ExecutionRecord {
             OpSpec::Krr { .. } | OpSpec::KrrLowRank { .. } => {
                 Err(SigError::Invalid("vjp is not defined for KRR fits"))
             }
+            OpSpec::GramCorpus { .. } | OpSpec::Mmd2Corpus { .. } => Err(SigError::Invalid(
+                "corpus plans are forward-only; use Gram / Mmd2 plans for gradients",
+            )),
         }
     }
 

@@ -42,6 +42,16 @@
 //!   exact); prefer random signature features when the map must be
 //!   data-independent or PDE solves dominate. First-class engine plans:
 //!   [`OpSpec::{GramLowRank, Mmd2LowRank, KrrLowRank}`](engine::OpSpec).
+//! * [`corpus`] — the **corpus service**: register a reference corpus once
+//!   under a [`CorpusId`](corpus::CorpusId), query Gram/MMD² against it
+//!   repeatedly, append incrementally. A
+//!   [`CorpusRegistry`](corpus::CorpusRegistry) caches the corpus-side
+//!   state (self-Gram tiles, low-rank feature matrices) so warm re-queries
+//!   pay only query-side cost, and a cache-sized
+//!   [`TileScheduler`](corpus::TileScheduler) shards Gram work
+//!   bit-identically across threads. First-class engine plans:
+//!   [`OpSpec::{GramCorpus, Mmd2Corpus}`](engine::OpSpec); served over the
+//!   wire as `RegisterCorpus` / `AppendCorpus` / `Mmd2Corpus`.
 //! * [`transforms`] — time-augmentation / lead-lag / basepoint, fused
 //!   on-the-fly into every sweep.
 //! * [`coordinator`] — the serving layer: a validated binary wire protocol
@@ -68,6 +78,7 @@ pub mod path;
 pub mod engine;
 pub mod sig;
 pub mod kernel;
+pub mod corpus;
 pub mod transforms;
 pub mod baselines;
 pub mod runtime;
@@ -76,5 +87,6 @@ pub mod config;
 pub mod bench;
 pub mod cli;
 
+pub use corpus::{CorpusId, CorpusRegistry};
 pub use engine::{ExecutionRecord, Gradients, OpSpec, Plan, PlanCache, Session, ShapeClass};
 pub use path::{ExecOptions, KernelOptions, Path, PathBatch, SigError, SigOptions};

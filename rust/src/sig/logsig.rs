@@ -9,7 +9,13 @@ use crate::transforms::Transform;
 
 /// Expanded (tensor-form) log-signature of a path: flat layout identical to
 /// the signature's; the scalar level is always 0.
-pub fn log_signature(path: &[f64], len: usize, dim: usize, depth: usize, tr: Transform) -> Vec<f64> {
+pub fn log_signature(
+    path: &[f64],
+    len: usize,
+    dim: usize,
+    depth: usize,
+    tr: Transform,
+) -> Vec<f64> {
     let s = crate::sig::signature(path, len, dim, depth, tr, crate::sig::SigMethod::Horner);
     let layout = LevelLayout::new(tr.out_dim(dim), depth);
     let mut out = vec![0.0; layout.total()];

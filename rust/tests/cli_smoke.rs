@@ -114,7 +114,11 @@ fn mmd_command_runs_exact_and_lowrank() {
     assert_eq!(pysiglib::cli::cli_main(&randsig), 0);
     // Unknown feature family is a usage error.
     let mut bad: Vec<String> = base.iter().map(|s| s.to_string()).collect();
-    bad.extend(["--rank".to_string(), "4".to_string(), "--features".to_string(), "magic".to_string()]);
+    bad.extend(
+        ["--rank", "4", "--features", "magic"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
     assert_ne!(pysiglib::cli::cli_main(&bad), 0);
     // --landmarks means Nyström; combining it with randsig is a usage error.
     let mut conflict: Vec<String> = base.iter().map(|s| s.to_string()).collect();
@@ -124,6 +128,30 @@ fn mmd_command_runs_exact_and_lowrank() {
             .map(|s| s.to_string()),
     );
     assert_ne!(pysiglib::cli::cli_main(&conflict), 0);
+}
+
+#[test]
+fn corpus_command_runs_local_demo_and_validates_usage() {
+    // In-process lifecycle demo (register → cold/warm query → append →
+    // re-query), exact and low-rank.
+    let base = [
+        "corpus", "mmd", "--batch", "8", "--len", "8", "--dim", "2", "--queries", "3",
+        "--append", "2",
+    ];
+    let exact: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    assert_eq!(pysiglib::cli::cli_main(&exact), 0);
+    let mut lowrank: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    lowrank.extend(["--rank".to_string(), "4".to_string()]);
+    assert_eq!(pysiglib::cli::cli_main(&lowrank), 0);
+    // register/append need a server.
+    let args: Vec<String> = ["corpus", "register"].iter().map(|s| s.to_string()).collect();
+    assert_ne!(pysiglib::cli::cli_main(&args), 0);
+    // Unknown subcommand is a usage error too.
+    let args: Vec<String> = ["corpus", "frobnicate"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_ne!(pysiglib::cli::cli_main(&args), 0);
 }
 
 #[test]

@@ -372,6 +372,131 @@ fn lowrank_mmd_over_the_wire() {
     assert!(client.signature(&path, 6, 2, 2).unwrap().is_ok());
 }
 
+/// The corpus lifecycle over the wire: register (deduplicated) → query cold
+/// and warm (bit-identical) → append → re-query, matching the router's
+/// registry driven directly; unknown ids are soft errors.
+#[test]
+fn corpus_lifecycle_over_the_wire() {
+    let (_h, addr, batcher) = start_server(4, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(120);
+    let d = 2;
+    let corpus: Vec<Vec<f64>> = [6usize, 4, 7, 5]
+        .iter()
+        .map(|&l| rng.brownian_path(l, d, 0.4))
+        .collect();
+    let crefs: Vec<&[f64]> = corpus.iter().map(|p| p.as_slice()).collect();
+    let id = client.register_corpus(&crefs, d).unwrap().unwrap();
+    let again = client.register_corpus(&crefs, d).unwrap().unwrap();
+    assert_eq!(id, again, "re-registration must deduplicate");
+    let queries: Vec<Vec<f64>> = [5usize, 6]
+        .iter()
+        .map(|&l| rng.brownian_path(l, d, 0.5))
+        .collect();
+    let qrefs: Vec<&[f64]> = queries.iter().map(|p| p.as_slice()).collect();
+    let cold = client.mmd2_corpus(id, &qrefs, d, 0).unwrap().unwrap();
+    let warm = client.mmd2_corpus(id, &qrefs, d, 0).unwrap().unwrap();
+    assert_eq!(cold, warm, "warm corpus re-query must be bit-identical");
+    let extra = rng.brownian_path(5, d, 0.4);
+    let total = client
+        .append_corpus(id, &[extra.as_slice()], d)
+        .unwrap()
+        .unwrap();
+    assert_eq!(total, 5);
+    let post = client.mmd2_corpus(id, &qrefs, d, 0).unwrap().unwrap();
+    assert_ne!(post, cold, "appending must change the estimate");
+    // Low-rank rank field reaches the registry route too.
+    let lr = client.mmd2_corpus(id, &qrefs, d, 3).unwrap().unwrap();
+    assert!(lr.is_finite());
+    // Unknown id: soft error, connection keeps serving.
+    assert!(client.mmd2_corpus(9999, &qrefs, d, 0).unwrap().is_err());
+    let path = rng.brownian_path(6, d, 0.5);
+    assert!(client.signature(&path, 6, d, 2).unwrap().is_ok());
+    // Registry counters are mirrored into the server metrics.
+    let m = &batcher.metrics;
+    assert_eq!(
+        m.corpus_registered_total
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    assert!(
+        m.corpus_warm_hits_total
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1
+    );
+}
+
+/// Satellite: the metrics surface under a serving sequence mixing
+/// corpus-warm, corpus-cold and plain requests — per-op counters, plan
+/// cache hit/miss/eviction and the corpus warm/cold mirrors all move
+/// correctly.
+#[test]
+fn metrics_track_per_op_and_cache_counters_across_mixed_serving() {
+    use std::sync::atomic::Ordering;
+    let (_h, addr, batcher) = start_server(4, 300);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(121);
+    let d = 2;
+    let m = &batcher.metrics;
+
+    // 1) Plain signature traffic: op 1, plan-cache miss then hits.
+    for _ in 0..3 {
+        let path = rng.brownian_path(10, d, 0.5);
+        client.signature(&path, 10, d, 3).unwrap().unwrap();
+    }
+    assert_eq!(m.op_count(1), 3);
+    let sig_hits = m.plan_hits_total.load(Ordering::Relaxed);
+    let sig_misses = m.plan_misses_total.load(Ordering::Relaxed);
+    assert!(sig_misses >= 1, "first signature flush compiles its plan");
+    assert!(sig_hits >= 1, "repeat signature flushes hit the plan cache");
+
+    // 2) Corpus lifecycle: register (op 7), cold query, warm query (op 9).
+    let corpus: Vec<Vec<f64>> = (0..5).map(|_| rng.brownian_path(6, d, 0.4)).collect();
+    let crefs: Vec<&[f64]> = corpus.iter().map(|p| p.as_slice()).collect();
+    let id = client.register_corpus(&crefs, d).unwrap().unwrap();
+    assert_eq!(m.op_count(7), crefs.len() as u64, "register counts its paths");
+    let queries: Vec<Vec<f64>> = (0..2).map(|_| rng.brownian_path(7, d, 0.5)).collect();
+    let qrefs: Vec<&[f64]> = queries.iter().map(|p| p.as_slice()).collect();
+    client.mmd2_corpus(id, &qrefs, d, 0).unwrap().unwrap();
+    let cold_after_first = m.corpus_cold_builds_total.load(Ordering::Relaxed);
+    let warm_after_first = m.corpus_warm_hits_total.load(Ordering::Relaxed);
+    assert_eq!(cold_after_first, 1, "first corpus query builds the self-Gram");
+    assert_eq!(warm_after_first, 0);
+    client.mmd2_corpus(id, &qrefs, d, 0).unwrap().unwrap();
+    assert_eq!(
+        m.corpus_cold_builds_total.load(Ordering::Relaxed),
+        1,
+        "warm re-query must not rebuild"
+    );
+    assert_eq!(m.corpus_warm_hits_total.load(Ordering::Relaxed), 1);
+    assert_eq!(m.op_count(9), 2 * qrefs.len() as u64);
+    // The corpus plan compiled once and was cache-hit on the re-query.
+    assert!(m.plan_misses_total.load(Ordering::Relaxed) > sig_misses);
+    assert!(m.plan_hits_total.load(Ordering::Relaxed) > sig_hits);
+
+    // 3) Append (op 8) then an error request: error counter moves, per-op
+    //    counters still track.
+    let extra = rng.brownian_path(6, d, 0.4);
+    client
+        .append_corpus(id, &[extra.as_slice()], d)
+        .unwrap()
+        .unwrap();
+    assert_eq!(m.op_count(8), 1);
+    let errors_before = m.errors_total.load(Ordering::Relaxed);
+    assert!(client.mmd2_corpus(777, &qrefs, d, 0).unwrap().is_err());
+    assert!(m.errors_total.load(Ordering::Relaxed) > errors_before);
+
+    // Every request got exactly one response, and the summary carries the
+    // new fields.
+    assert_eq!(
+        m.requests_total.load(Ordering::Relaxed),
+        m.responses_total.load(Ordering::Relaxed)
+    );
+    let s = m.summary();
+    assert!(s.contains("corpus_warm="), "{s}");
+    assert!(s.contains("op9="), "{s}");
+}
+
 /// A malformed ragged frame (lengths disagreeing with the payload) errors
 /// without killing the connection.
 #[test]

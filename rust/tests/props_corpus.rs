@@ -1,0 +1,296 @@
+//! Property tests for the corpus subsystem — the acceptance bar for
+//! incremental serving: append-then-query is **bit-identical** to
+//! registering the combined corpus from scratch (uniform and ragged
+//! corpora, exact and low-rank paths, Nyström and random-signature
+//! features). Every assertion is exact `==` on `f64`s: values must not
+//! depend on scheduling, tiling, thread count or append history.
+//!
+//! The `PYSIGLIB_THREADS`-mutating thread-count property lives in its own
+//! binary (`props_corpus_threads.rs`) so `set_var` never races a sibling
+//! test's `getenv` (the tests in one integration-test binary share a
+//! process and run on parallel threads).
+
+use std::sync::Arc;
+
+use pysiglib::corpus::CorpusRegistry;
+use pysiglib::engine::{OpSpec, Plan, PlanCache, ShapeClass};
+use pysiglib::kernel::{KernelOptions, LowRankSpec};
+use pysiglib::util::rng::Rng;
+use pysiglib::{PathBatch, SigError};
+
+/// Build a ragged batch's backing store.
+fn ragged(rng: &mut Rng, lens: &[usize], d: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut data = Vec::new();
+    for &l in lens {
+        data.extend(rng.brownian_path(l, d, 0.35));
+    }
+    (data, lens.to_vec())
+}
+
+/// Drive one scenario: register `part1`, warm every query family, append
+/// `part2`, query again — against a from-scratch registration of the
+/// combined corpus. Checks MMD² and Gram, exact and (when `spec` is set)
+/// low-rank, for exact bitwise equality.
+fn check_append_matches_scratch(
+    d: usize,
+    part1: (&[f64], &[usize]),
+    part2: (&[f64], &[usize]),
+    query: (&[f64], &[usize]),
+    spec: Option<&LowRankSpec>,
+    label: &str,
+) {
+    let opts = KernelOptions::default();
+    let p1 = PathBatch::ragged(part1.0, part1.1, d).unwrap();
+    let p2 = PathBatch::ragged(part2.0, part2.1, d).unwrap();
+    let qb = PathBatch::ragged(query.0, query.1, d).unwrap();
+    let mut combined = part1.0.to_vec();
+    combined.extend_from_slice(part2.0);
+    let mut combined_lens = part1.1.to_vec();
+    combined_lens.extend_from_slice(part2.1);
+    let cb = PathBatch::ragged(&combined, &combined_lens, d).unwrap();
+
+    // Incremental: register part1, WARM the caches, then append.
+    let inc = CorpusRegistry::new();
+    let id = inc.register(&p1).unwrap();
+    inc.mmd2_query(id, &qb, &opts, spec).unwrap();
+    inc.gram_query(id, &qb, &opts, spec).unwrap();
+    let total = inc.append(id, &p2).unwrap();
+    assert_eq!(total, part1.1.len() + part2.1.len(), "{label}");
+    let inc_mmd = inc.mmd2_query(id, &qb, &opts, spec).unwrap();
+    let inc_gram = inc.gram_query(id, &qb, &opts, spec).unwrap();
+    // The appended queries must be warm (state extended, not rebuilt):
+    // only the single cold build of the first pre-append query remains.
+    assert_eq!(inc.stats().cold_builds, 1, "{label}");
+
+    // From scratch: register the combined corpus, query cold.
+    let scratch = CorpusRegistry::new();
+    let sid = scratch.register(&cb).unwrap();
+    let scr_mmd = scratch.mmd2_query(sid, &qb, &opts, spec).unwrap();
+    let scr_gram = scratch.gram_query(sid, &qb, &opts, spec).unwrap();
+
+    assert!(
+        inc_mmd.to_bits() == scr_mmd.to_bits(),
+        "{label}: mmd2 {inc_mmd:?} vs {scr_mmd:?}"
+    );
+    assert_eq!(inc_gram.len(), scr_gram.len(), "{label}");
+    for (i, (a, b)) in inc_gram.iter().zip(scr_gram.iter()).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{label}: gram[{i}] {a:?} vs {b:?}"
+        );
+    }
+}
+
+#[test]
+fn append_then_query_bit_identical_exact_uniform() {
+    let mut rng = Rng::new(800);
+    let d = 3;
+    let (p1, l1) = ragged(&mut rng, &[8; 6], d);
+    let (p2, l2) = ragged(&mut rng, &[8; 3], d);
+    let (q, lq) = ragged(&mut rng, &[8; 4], d);
+    check_append_matches_scratch(d, (&p1, &l1), (&p2, &l2), (&q, &lq), None, "exact uniform");
+}
+
+#[test]
+fn append_then_query_bit_identical_exact_ragged() {
+    let mut rng = Rng::new(801);
+    let d = 2;
+    let (p1, l1) = ragged(&mut rng, &[5, 9, 2, 7, 4, 6], d);
+    let (p2, l2) = ragged(&mut rng, &[8, 3, 10], d);
+    let (q, lq) = ragged(&mut rng, &[6, 1, 7], d);
+    check_append_matches_scratch(d, (&p1, &l1), (&p2, &l2), (&q, &lq), None, "exact ragged");
+}
+
+#[test]
+fn append_then_query_bit_identical_nystrom() {
+    let mut rng = Rng::new(802);
+    let d = 2;
+    // The initial corpus covers the rank budget (6 ≥ 4), so the landmark
+    // pool — and with it the seeded landmark draw — is append-invariant.
+    let spec = LowRankSpec::nystrom(4, 11);
+    let (p1, l1) = ragged(&mut rng, &[7; 6], d);
+    let (p2, l2) = ragged(&mut rng, &[7; 3], d);
+    let (q, lq) = ragged(&mut rng, &[7; 4], d);
+    check_append_matches_scratch(
+        d,
+        (&p1, &l1),
+        (&p2, &l2),
+        (&q, &lq),
+        Some(&spec),
+        "nystrom uniform",
+    );
+    let (p1, l1) = ragged(&mut rng, &[4, 8, 5, 9, 3, 6], d);
+    let (p2, l2) = ragged(&mut rng, &[7, 2, 8, 5], d);
+    let (q, lq) = ragged(&mut rng, &[5, 8], d);
+    check_append_matches_scratch(
+        d,
+        (&p1, &l1),
+        (&p2, &l2),
+        (&q, &lq),
+        Some(&spec),
+        "nystrom ragged",
+    );
+}
+
+#[test]
+fn append_then_query_bit_identical_randsig() {
+    let mut rng = Rng::new(803);
+    let d = 2;
+    // The random-signature sketch depends only on (seed, shape): the map is
+    // append-invariant regardless of corpus size.
+    let spec = LowRankSpec::random_sig(8, 3, 13);
+    let (p1, l1) = ragged(&mut rng, &[6; 5], d);
+    let (p2, l2) = ragged(&mut rng, &[6; 4], d);
+    let (q, lq) = ragged(&mut rng, &[6; 3], d);
+    check_append_matches_scratch(
+        d,
+        (&p1, &l1),
+        (&p2, &l2),
+        (&q, &lq),
+        Some(&spec),
+        "randsig uniform",
+    );
+    let (p1, l1) = ragged(&mut rng, &[3, 7, 5, 8], d);
+    let (p2, l2) = ragged(&mut rng, &[6, 2], d);
+    let (q, lq) = ragged(&mut rng, &[4, 6, 5], d);
+    check_append_matches_scratch(
+        d,
+        (&p1, &l1),
+        (&p2, &l2),
+        (&q, &lq),
+        Some(&spec),
+        "randsig ragged",
+    );
+}
+
+/// When the initial corpus is *smaller* than the rank budget, the landmark
+/// pool grows on append; the registry rebuilds the map exactly as a
+/// from-scratch registration would — still value-identical, just not
+/// incremental.
+#[test]
+fn append_below_rank_budget_rebuilds_and_still_matches_scratch() {
+    let mut rng = Rng::new(804);
+    let d = 2;
+    let spec = LowRankSpec::nystrom(5, 17);
+    let (p1, l1) = ragged(&mut rng, &[6, 4, 7], d); // 3 < rank 5
+    let (p2, l2) = ragged(&mut rng, &[5, 8, 6, 4], d);
+    let (q, lq) = ragged(&mut rng, &[5, 6], d);
+    let opts = KernelOptions::default();
+    let p1b = PathBatch::ragged(&p1, &l1, d).unwrap();
+    let p2b = PathBatch::ragged(&p2, &l2, d).unwrap();
+    let qb = PathBatch::ragged(&q, &lq, d).unwrap();
+    let inc = CorpusRegistry::new();
+    let id = inc.register(&p1b).unwrap();
+    inc.mmd2_query(id, &qb, &opts, Some(&spec)).unwrap();
+    inc.append(id, &p2b).unwrap();
+    let inc_mmd = inc.mmd2_query(id, &qb, &opts, Some(&spec)).unwrap();
+    let mut combined = p1.clone();
+    combined.extend_from_slice(&p2);
+    let mut lens = l1.clone();
+    lens.extend_from_slice(&l2);
+    let cb = PathBatch::ragged(&combined, &lens, d).unwrap();
+    let scratch = CorpusRegistry::new();
+    let sid = scratch.register(&cb).unwrap();
+    let scr_mmd = scratch.mmd2_query(sid, &qb, &opts, Some(&spec)).unwrap();
+    assert!(inc_mmd.to_bits() == scr_mmd.to_bits(), "{inc_mmd} vs {scr_mmd}");
+}
+
+/// Corpus engine plans: compile via `Plan::compile_corpus`, execute against
+/// the query batch, and agree bitwise with driving the registry directly;
+/// hostile specs are rejected at compile; corpus records refuse `vjp`.
+#[test]
+fn corpus_engine_plans_match_registry_and_reject_misuse() {
+    let mut rng = Rng::new(806);
+    let d = 2;
+    let (cdata, clens) = ragged(&mut rng, &[6, 8, 5, 7], d);
+    let (qdata, qlens) = ragged(&mut rng, &[5, 7, 6], d);
+    let cb = PathBatch::ragged(&cdata, &clens, d).unwrap();
+    let qb = PathBatch::ragged(&qdata, &qlens, d).unwrap();
+    let registry = Arc::new(CorpusRegistry::new());
+    let id = registry.register(&cb).unwrap();
+    let opts = KernelOptions::default();
+    let shape = ShapeClass::for_batch(&qb).bucketed();
+    for lowrank in [None, Some(LowRankSpec::nystrom(3, 5))] {
+        let mspec = OpSpec::Mmd2Corpus {
+            opts,
+            corpus: id,
+            lowrank,
+        };
+        let plan = Plan::compile_corpus(mspec, shape, registry.clone()).unwrap();
+        let rec = plan.execute(&qb).unwrap();
+        let want = registry
+            .mmd2_query(id, &qb, &opts, lowrank.as_ref())
+            .unwrap();
+        assert_eq!(rec.values(), &[want][..]);
+        assert!(matches!(rec.vjp(&[1.0]), Err(SigError::Invalid(_))));
+        let gspec = OpSpec::GramCorpus {
+            opts,
+            corpus: id,
+            lowrank,
+        };
+        let gplan = Plan::compile_corpus(gspec, shape, registry.clone()).unwrap();
+        let grec = gplan.execute(&qb).unwrap();
+        let gwant = registry
+            .gram_query(id, &qb, &opts, lowrank.as_ref())
+            .unwrap();
+        assert_eq!(grec.values(), &gwant[..]);
+    }
+    // The plan cache keys corpus plans by (spec, corpus id, shape).
+    let cache = PlanCache::new(8);
+    let spec = OpSpec::Mmd2Corpus {
+        opts,
+        corpus: id,
+        lowrank: None,
+    };
+    let a = cache.get_or_compile_corpus(spec, shape, &registry).unwrap();
+    let b = cache.get_or_compile_corpus(spec, shape, &registry).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "second corpus plan lookup must hit");
+    assert_eq!(cache.stats().hits, 1);
+    // A cached plan survives appends (it resolves the id per execute).
+    let (extra, elens) = ragged(&mut rng, &[6], d);
+    let eb = PathBatch::ragged(&extra, &elens, d).unwrap();
+    registry.append(id, &eb).unwrap();
+    let post = a.execute(&qb).unwrap();
+    let want = registry.mmd2_query(id, &qb, &opts, None).unwrap();
+    assert_eq!(post.values(), &[want][..]);
+    // Misuse errors.
+    assert!(matches!(
+        Plan::compile_corpus(OpSpec::Gram(opts), shape, registry.clone()),
+        Err(SigError::Invalid(_))
+    ));
+    assert!(matches!(
+        Plan::compile_corpus(
+            OpSpec::Mmd2Corpus {
+                opts,
+                corpus: pysiglib::CorpusId(4040),
+                lowrank: None,
+            },
+            shape,
+            registry.clone(),
+        ),
+        Err(SigError::Invalid(_))
+    ));
+    assert!(matches!(
+        Plan::compile_corpus(
+            OpSpec::Mmd2Corpus {
+                opts,
+                corpus: id,
+                lowrank: None,
+            },
+            ShapeClass::ragged(d + 1, 8),
+            registry.clone(),
+        ),
+        Err(SigError::DimMismatch { .. })
+    ));
+    // Corpus specs without a registry are rejected by the generic route.
+    assert!(matches!(
+        Plan::compile(spec, shape),
+        Err(SigError::Invalid(_))
+    ));
+    // Corpus plans take a single (query) batch, not a pair.
+    let plan = Plan::compile_corpus(spec, shape, registry.clone()).unwrap();
+    assert!(matches!(
+        plan.execute_pair(&qb, &qb),
+        Err(SigError::Invalid(_))
+    ));
+}

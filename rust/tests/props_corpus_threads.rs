@@ -1,0 +1,61 @@
+//! The thread-count bit-identity property, isolated in its own test binary:
+//! it mutates `PYSIGLIB_THREADS` via `std::env::set_var`, and a concurrent
+//! `getenv` from a sibling test (every parallel kernel sweep calls
+//! `num_threads()`) would be a libc-level data race. One `#[test]` per
+//! binary means every env read is sequenced on this thread.
+
+use pysiglib::corpus::TileScheduler;
+use pysiglib::kernel::{try_gram, KernelOptions};
+use pysiglib::transforms::Transform;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+fn ragged(rng: &mut Rng, lens: &[usize], d: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut data = Vec::new();
+    for &l in lens {
+        data.extend(rng.brownian_path(l, d, 0.35));
+    }
+    (data, lens.to_vec())
+}
+
+/// The acceptance property: tiled Gram under `PYSIGLIB_THREADS=1` is
+/// bit-identical to `PYSIGLIB_THREADS=4` (and to the engine's per-entry
+/// Gram).
+#[test]
+fn tiled_gram_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(805);
+    let d = 3;
+    let (xd, xl) = ragged(&mut rng, &[6, 9, 3, 7, 5, 8, 4, 6, 7, 5, 9, 2], d);
+    let (yd, yl) = ragged(&mut rng, &[7, 4, 8, 5, 6], d);
+    let xb = PathBatch::ragged(&xd, &xl, d).unwrap();
+    let yb = PathBatch::ragged(&yd, &yl, d).unwrap();
+    let prev = std::env::var("PYSIGLIB_THREADS").ok();
+    for opts in [
+        KernelOptions::default(),
+        KernelOptions::default().dyadic(1, 0),
+        KernelOptions::default().transform(Transform::LeadLag),
+    ] {
+        let mut per_threads = Vec::new();
+        for threads in ["1", "4"] {
+            std::env::set_var("PYSIGLIB_THREADS", threads);
+            let mut out = vec![0.0; xb.batch() * yb.batch()];
+            TileScheduler::with_tile(3)
+                .gram_into(&xb, &yb, &opts, &mut out)
+                .unwrap();
+            per_threads.push(out);
+        }
+        assert_eq!(
+            per_threads[0], per_threads[1],
+            "tiled Gram must not depend on the thread count"
+        );
+        // The engine comparison runs under the last-set thread count; the
+        // per-entry values are thread-count independent by the assertion
+        // above, so any setting is a fair reference.
+        let engine = try_gram(&xb, &yb, &opts).unwrap();
+        assert_eq!(per_threads[0], engine, "tiled vs engine per-entry Gram");
+    }
+    match prev {
+        Some(v) => std::env::set_var("PYSIGLIB_THREADS", v),
+        None => std::env::remove_var("PYSIGLIB_THREADS"),
+    }
+}
