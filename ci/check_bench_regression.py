@@ -19,7 +19,10 @@ Rules:
 * A fresh median far below baseline (< baseline/2) is flagged as
   headroom: the committed baseline is a bootstrap envelope written
   without hardware access, meant to be tightened to measured values by
-  the first toolchain-equipped maintainer.
+  the first toolchain-equipped maintainer. For every headroom case the
+  gate prints a **suggested tightened baseline** (fresh median x 1.25,
+  leaving run-to-run noise margin under the 1.3x threshold) so tightening
+  is a copy-paste job, not a measurement campaign.
 """
 
 import argparse
@@ -95,7 +98,7 @@ def main() -> int:
                 )
                 marker = "  << REGRESSION"
             elif ratio < 0.5:
-                headroom.append(name)
+                headroom.append((base_path.name, name, fc))
                 marker = "  (headroom: tighten baseline)"
             print(f"  {base_path.name:24} {name:44} {fmed:>10.6f}s  {ratio:>5.2f}x{marker}")
         for name in sorted(set(fresh) - set(base)):
@@ -106,6 +109,20 @@ def main() -> int:
         f"\ncompared {compared} case(s); {len(failures)} failure(s); "
         f"{len(headroom)} case(s) with >2x headroom"
     )
+    if headroom:
+        print(
+            "\nsuggested tightened baselines (fresh median x 1.25; these are "
+            "complete rows — replace the matching case in the repo-root "
+            "BENCH_*.json verbatim; keeping runs > 0 is what arms the gate):"
+        )
+        for fname, name, fc in headroom:
+            row = {
+                "case": name,
+                "min_seconds": round(fc.get("min_seconds", fc["median_seconds"]) * 1.25, 6),
+                "median_seconds": round(fc["median_seconds"] * 1.25, 6),
+                "runs": fc.get("runs", 1),
+            }
+            print(f"  {fname}: {json.dumps(row)}")
     if failures:
         print("\nbench-regression gate FAILED:", file=sys.stderr)
         for f in failures:

@@ -9,7 +9,9 @@
 
 use pysiglib::baselines::{full_grid_kernel, naive_signature};
 use pysiglib::bench::{bench_runs, Suite};
-use pysiglib::kernel::{batch_kernel, delta_matrix, solve_pde, KernelOptions, SolverKind};
+use pysiglib::kernel::{
+    batch_kernel, delta_matrix, solve_pde, solve_pde_lanes, KernelOptions, SolverKind,
+};
 use pysiglib::sig::{batch_signature, SigMethod, SigOptions};
 use pysiglib::transforms::Transform;
 use pysiglib::util::pool::parallel_for;
@@ -146,6 +148,59 @@ fn main() {
         });
     }
 
+    // --- 5c. dyadic-run coefficient hoist (shipped in `solve_pde_with`):
+    //         p — hence A(p), B(p) — is constant for 2^λ2 consecutive
+    //         refined cells, so computing the coefficients once per run
+    //         saves 2^λ2−1 of the coefficient FLOPs per cell.
+    {
+        let (m, lam2) = (255usize, 3u32);
+        let mut delta = vec![0.0; m * m];
+        let mut r = Rng::new(78);
+        r.fill_normal(&mut delta);
+        for v in delta.iter_mut() {
+            *v *= 0.004;
+        }
+        suite.time("pde_sweep/dyadic03/run-hoisted(shipped)", runs, || {
+            std::hint::black_box(solve_pde(&delta, m, m, 0, lam2));
+        });
+        suite.time("pde_sweep/dyadic03/per-cell(reference)", runs, || {
+            std::hint::black_box(solve_pde_per_cell_reference(&delta, m, m, 0, lam2));
+        });
+    }
+
+    // --- 5d. lane batching (the shipped across-pair schedule): 8 PDEs per
+    //         SoA sweep vs 8 consecutive scalar sweeps on the same Δs.
+    {
+        const W: usize = 8;
+        let m = 511usize;
+        let mut r = Rng::new(79);
+        let deltas: Vec<Vec<f64>> = (0..W)
+            .map(|_| {
+                let mut d = vec![0.0; m * m];
+                r.fill_normal(&mut d);
+                for v in d.iter_mut() {
+                    *v *= 0.002;
+                }
+                d
+            })
+            .collect();
+        let mut block = vec![0.0; m * W * m];
+        for (w, d) in deltas.iter().enumerate() {
+            for s in 0..m {
+                block[(s * W + w) * m..(s * W + w + 1) * m].copy_from_slice(&d[s * m..(s + 1) * m]);
+            }
+        }
+        let (mut prev, mut cur) = (Vec::new(), Vec::new());
+        suite.time("pde_sweep/lanes8(shipped)", runs, || {
+            std::hint::black_box(solve_pde_lanes::<W>(&block, m, m, 0, 0, &mut prev, &mut cur));
+        });
+        suite.time("pde_sweep/scalar-x8", runs, || {
+            for d in deltas.iter() {
+                std::hint::black_box(solve_pde(d, m, m, 0, 0));
+            }
+        });
+    }
+
     // --- 6. thread scaling ---
     {
         let (b, l, d, n) = (128, 512, 8, 5);
@@ -182,6 +237,16 @@ fn main() {
             "pde_sweep/two-pass(tried+reverted)",
             "pde_sweep/fused-single-pass(shipped)",
             "two-pass/fused-sweep",
+        ),
+        (
+            "pde_sweep/dyadic03/per-cell(reference)",
+            "pde_sweep/dyadic03/run-hoisted(shipped)",
+            "per-cell/run-hoisted",
+        ),
+        (
+            "pde_sweep/scalar-x8",
+            "pde_sweep/lanes8(shipped)",
+            "scalar-x8/lanes8",
         ),
         ("threads/1", "threads/all", "1-thread/all-threads"),
     ] {
@@ -222,4 +287,32 @@ fn solve_pde_two_pass_reference(delta: &[f64], m: usize, n: usize) -> f64 {
         std::mem::swap(&mut prev, &mut cur);
     }
     prev[n]
+}
+
+/// The historical per-refined-cell coefficient computation (before the
+/// dyadic-run hoist shipped in `solve_pde_with`): A(p)/B(p) evaluated for
+/// every refined cell even though `t >> λ2` is constant over a run. Kept
+/// verbatim so the win stays measurable.
+fn solve_pde_per_cell_reference(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> f64 {
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+    let mut prev = vec![1.0; cols + 1];
+    let mut cur = vec![1.0; cols + 1];
+    for s in 0..rows {
+        let drow = &delta[(s >> lam1) * n..(s >> lam1) * n + n];
+        cur[0] = 1.0;
+        let mut k_left = 1.0;
+        for t in 0..cols {
+            let p = drow[t >> lam2] * scale;
+            let p2 = p * p * (1.0 / 12.0);
+            let a = 1.0 + 0.5 * p + p2;
+            let b = 1.0 - p2;
+            let v = (k_left + prev[t + 1]) * a - prev[t] * b;
+            cur[t + 1] = v;
+            k_left = v;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[cols]
 }

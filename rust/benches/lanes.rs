@@ -1,0 +1,77 @@
+//! CI-scale lane-engine suite — the bench-regression gate's lane
+//! trajectory. Times the tiled Gram at scalar, W = 4 and W = 8 lane widths
+//! across corpus sizes n ∈ {64, 128, 256}, uniform and ragged, and derives
+//! the lane-over-scalar **median** speedups the gate floors (the `expect_min`
+//! rows in `BENCH_lanes.json`: lane-batched Gram must beat the scalar
+//! median at n = 256 on multi-pair tiles). Lane widths are pinned through
+//! [`TileScheduler::with_lanes`] so the schedule under test does not depend
+//! on the runner's environment.
+
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::corpus::TileScheduler;
+use pysiglib::kernel::KernelOptions;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+const WIDTHS: [(&str, usize); 3] = [("scalar", 0), ("w4", 4), ("w8", 8)];
+
+fn main() {
+    let runs = bench_runs(3);
+    let d = 3usize;
+    let l = 24usize;
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(61);
+    let mut suite = Suite::new("lanes");
+
+    for &n in &[64usize, 128, 256] {
+        // Uniform corpus: every tile row is one long equal-length run, so
+        // W = 8 groups fill completely.
+        let data = rng.brownian_batch(n, l, d, 0.25);
+        let xb = PathBatch::uniform(&data, n, l, d).unwrap();
+        let mut out = vec![0.0; n * n];
+        for (label, width) in WIDTHS {
+            suite.time(&format!("n{n}/uniform/gram/{label}"), runs, || {
+                TileScheduler::with_tile(16)
+                    .with_lanes(width)
+                    .gram_into(&xb, &xb, &opts, &mut out)
+                    .unwrap();
+                std::hint::black_box(&out);
+            });
+        }
+        for (label, width) in [("w4", 4usize), ("w8", 8)] {
+            if let (Some(s), Some(w)) = (
+                suite.get_median(&format!("n{n}/uniform/gram/scalar")),
+                suite.get_median(&format!("n{n}/uniform/gram/{label}")),
+            ) {
+                suite.record(
+                    &format!("n{n}/uniform/gram/speedup_{label}_x"),
+                    s / w.max(1e-12),
+                );
+            }
+        }
+
+        // Ragged corpus with repeated lengths (l/2, 3l/4, l cycling): the
+        // dispatcher's grouping-by-shape-class is what keeps lanes full.
+        let lens: Vec<usize> = (0..n).map(|i| [l / 2, 3 * l / 4, l][i % 3]).collect();
+        let mut rdata = Vec::new();
+        for &pl in &lens {
+            rdata.extend(rng.brownian_path(pl, d, 0.25));
+        }
+        let rb = PathBatch::ragged(&rdata, &lens, d).unwrap();
+        for (label, width) in WIDTHS {
+            suite.time(&format!("n{n}/ragged/gram/{label}"), runs, || {
+                TileScheduler::with_tile(16)
+                    .with_lanes(width)
+                    .gram_into(&rb, &rb, &opts, &mut out)
+                    .unwrap();
+                std::hint::black_box(&out);
+            });
+        }
+        if let (Some(s), Some(w)) = (
+            suite.get_median(&format!("n{n}/ragged/gram/scalar")),
+            suite.get_median(&format!("n{n}/ragged/gram/w4")),
+        ) {
+            suite.record(&format!("n{n}/ragged/gram/speedup_w4_x"), s / w.max(1e-12));
+        }
+    }
+}

@@ -96,6 +96,12 @@ impl Suite {
         self.rows.iter().find(|r| r.case == case).map(|r| r.min)
     }
 
+    /// Look up a recorded row's median time (for derived ratios gated on
+    /// medians, e.g. the lane-over-scalar speedup floors).
+    pub fn get_median(&self, case: &str) -> Option<f64> {
+        self.rows.iter().find(|r| r.case == case).map(|r| r.median)
+    }
+
     /// Drop the recorded rows without persisting (used by self-tests).
     pub fn discard(&mut self) {
         self.rows.clear();

@@ -47,7 +47,10 @@ COMMANDS:
                              --rank R (0 = exact) --repeat N
              corpus mmd without --addr runs the full lifecycle in-process
              (register, cold + warm queries, append --append K, re-query)
-             and prints the warm-over-cold speedup
+             and prints the warm-over-cold speedup; --lanes W pins the
+             lane width (0 scalar, 4, 8; default: PYSIGLIB_LANES or the
+             shape-class default) and --tile T the Gram tile edge, with
+             lane/tile occupancy printed after the run
   serve      run the serving coordinator
              --bind ADDR --max-batch N --max-wait-us U --pjrt --config FILE
   client     demo client: fires requests at a running server
@@ -601,7 +604,17 @@ fn cmd_corpus(pos: &[String], flags: &HashMap<String, String>) -> i32 {
         // In-process lifecycle demo against a local registry.
         let queries = flag_usize(flags, "queries", 8.min(batch.max(1)));
         let appended = flag_usize(flags, "append", (batch / 4).max(1));
-        let registry = crate::corpus::CorpusRegistry::new();
+        let mut tiles = match flags.get("tile") {
+            Some(t) => crate::corpus::TileScheduler::with_tile(
+                t.parse().ok().filter(|&v: &usize| v >= 1).unwrap_or(16),
+            ),
+            None => crate::corpus::TileScheduler::from_env(),
+        };
+        if let Some(w) = flags.get("lanes").and_then(|v| v.parse::<usize>().ok()) {
+            tiles = tiles.with_lanes(w);
+        }
+        let registry = crate::corpus::CorpusRegistry::with_tiles(tiles);
+        let lane_stats_before = crate::kernel::lanes::stats();
         let corpus = rng.brownian_batch(batch, len, dim, 0.3);
         let qdata = rng.brownian_batch(queries, len, dim, 0.35);
         let extra = rng.brownian_batch(appended, len, dim, 0.3);
@@ -638,6 +651,17 @@ fn cmd_corpus(pos: &[String], flags: &HashMap<String, String>) -> i32 {
                 "  warm speedup {:.1}x  stats: {:?}",
                 t_cold / t_warm.max(1e-12),
                 registry.stats()
+            );
+            let ls = crate::kernel::lanes::stats();
+            println!(
+                "  lane occupancy: tiles={} lane_groups={} scalar_pairs={} (width {})",
+                ls.tiles_executed - lane_stats_before.tiles_executed,
+                ls.lane_groups - lane_stats_before.lane_groups,
+                ls.scalar_pairs - lane_stats_before.scalar_pairs,
+                tiles
+                    .lane_width()
+                    .map(|w| w.to_string())
+                    .unwrap_or_else(|| "auto".to_string()),
             );
             Ok(())
         };

@@ -141,6 +141,7 @@ impl Batcher {
         }
         self.metrics.set_plan_cache(self.router.plan_cache_stats());
         self.metrics.set_corpus(self.router.corpus_stats());
+        self.metrics.set_lanes(crate::kernel::lanes::stats());
         result
     }
 
@@ -232,6 +233,7 @@ fn execute_group(router: &Router, metrics: &Metrics, key: GroupKey, batch: Vec<P
     let reqs: Vec<&Request> = batch.iter().map(|p| &p.req).collect();
     let results = router.execute_batch(key.op, key.len, key.dim, &reqs);
     metrics.set_plan_cache(router.plan_cache_stats());
+    metrics.set_lanes(crate::kernel::lanes::stats());
     let compute_us = started.elapsed().as_micros() as u64;
     for ((p, result), q_us) in batch.iter().zip(results).zip(queue_us) {
         let is_err = matches!(result, Response::Error(_));

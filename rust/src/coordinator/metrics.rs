@@ -34,6 +34,18 @@ pub struct Metrics {
     pub corpus_warm_hits_total: AtomicU64,
     pub corpus_cold_builds_total: AtomicU64,
     pub corpus_registered_total: AtomicU64,
+    /// Lane-engine occupancy, mirrored from the counters in
+    /// [`kernel::lanes`](crate::kernel::lanes) after each batch / corpus
+    /// request: Gram tiles executed by the tile scheduler, full lane groups
+    /// dispatched through the SoA sweep, and pairs that fell to the scalar
+    /// remainder while lane batching was active. Unlike the plan-cache and
+    /// corpus mirrors (owned per router), these sources are **process-wide**
+    /// — direct library Gram calls in the same process count too, so read
+    /// them as "lane engine occupancy on this host", not "this server's
+    /// share".
+    pub tiles_executed_total: AtomicU64,
+    pub lane_groups_total: AtomicU64,
+    pub lane_scalar_pairs_total: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -54,6 +66,9 @@ impl Default for Metrics {
             corpus_warm_hits_total: AtomicU64::new(0),
             corpus_cold_builds_total: AtomicU64::new(0),
             corpus_registered_total: AtomicU64::new(0),
+            tiles_executed_total: AtomicU64::new(0),
+            lane_groups_total: AtomicU64::new(0),
+            lane_scalar_pairs_total: AtomicU64::new(0),
         }
     }
 }
@@ -109,6 +124,18 @@ impl Metrics {
             .store(stats.evictions, Ordering::Relaxed);
     }
 
+    /// Mirror the lane engine's occupancy counters into the snapshot (the
+    /// process-wide counters in [`kernel::lanes`](crate::kernel::lanes) own
+    /// the live values).
+    pub fn set_lanes(&self, stats: crate::kernel::LaneStats) {
+        self.tiles_executed_total
+            .store(stats.tiles_executed, Ordering::Relaxed);
+        self.lane_groups_total
+            .store(stats.lane_groups, Ordering::Relaxed);
+        self.lane_scalar_pairs_total
+            .store(stats.scalar_pairs, Ordering::Relaxed);
+    }
+
     /// Mirror the router's corpus-registry counters into the snapshot.
     pub fn set_corpus(&self, stats: crate::corpus::CorpusStats) {
         self.corpus_warm_hits_total
@@ -155,7 +182,7 @@ impl Metrics {
             .map(|c| format!("op{c}={}", self.op_count(c)))
             .collect();
         format!(
-            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={} corpus_warm={} corpus_cold={} [{}]",
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={} corpus_warm={} corpus_cold={} tiles={} lane_groups={} lane_scalar={} [{}]",
             self.requests_total.load(Ordering::Relaxed),
             self.responses_total.load(Ordering::Relaxed),
             self.errors_total.load(Ordering::Relaxed),
@@ -169,6 +196,9 @@ impl Metrics {
             self.plan_evictions_total.load(Ordering::Relaxed),
             self.corpus_warm_hits_total.load(Ordering::Relaxed),
             self.corpus_cold_builds_total.load(Ordering::Relaxed),
+            self.tiles_executed_total.load(Ordering::Relaxed),
+            self.lane_groups_total.load(Ordering::Relaxed),
+            self.lane_scalar_pairs_total.load(Ordering::Relaxed),
             ops.join(" "),
         )
     }
@@ -229,6 +259,23 @@ mod tests {
         assert!(s.contains("plan_hits=7"), "{s}");
         assert!(s.contains("plan_misses=2"), "{s}");
         assert!(s.contains("plan_evictions=1"), "{s}");
+    }
+
+    #[test]
+    fn lane_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.set_lanes(crate::kernel::LaneStats {
+            tiles_executed: 12,
+            lane_groups: 34,
+            scalar_pairs: 5,
+        });
+        assert_eq!(m.tiles_executed_total.load(Ordering::Relaxed), 12);
+        assert_eq!(m.lane_groups_total.load(Ordering::Relaxed), 34);
+        assert_eq!(m.lane_scalar_pairs_total.load(Ordering::Relaxed), 5);
+        let s = m.summary();
+        assert!(s.contains("tiles=12"), "{s}");
+        assert!(s.contains("lane_groups=34"), "{s}");
+        assert!(s.contains("lane_scalar=5"), "{s}");
     }
 
     #[test]

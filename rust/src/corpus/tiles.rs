@@ -1,43 +1,55 @@
-//! Cache-sized tile scheduler for Gram blocks.
+//! Cache-sized tile scheduler for Gram blocks, lane-batched inside each
+//! tile.
 //!
-//! The engine's Gram op parallelises per *entry*: every worker claims one
-//! (i, j) pair at a time, so consecutive claims touch unrelated rows of x
-//! and columns of y and the path data is re-streamed from memory for every
-//! solve. This scheduler shards the same work into `tile × tile` blocks:
-//! within a block one worker solves every pair over a small, cache-resident
-//! set of paths, and blocks (not entries) are what the atomic cursor hands
-//! out — far fewer claims, far better locality, identical values.
+//! The engine's Gram op parallelises per row strip: workers claim strips of
+//! one x-row, so consecutive claims touch unrelated rows of x and columns
+//! of y and the path data is re-streamed from memory for every solve. This
+//! scheduler shards the same work into `tile × tile` blocks: within a block
+//! one worker solves every pair over a small, cache-resident set of paths,
+//! and blocks (not entries) are what the atomic cursor hands out — far
+//! fewer claims, far better locality, identical values. Inside each tile
+//! row the [`lanes`](crate::kernel::lanes) engine groups same-shape columns
+//! into lane groups of W and sweeps W kernels per pass (one stacked GEMM +
+//! one SoA PDE sweep per group), with a scalar remainder.
 //!
 //! **Bit-identity.** Each Gram entry is an independent computation
 //! (Δ matrix via [`delta_matrix_into`](crate::kernel::delta::delta_matrix_into),
-//! then the Goursat sweep) whose value does not depend on which worker or
-//! tile computed it, so the tiled Gram is bit-for-bit identical to the
-//! engine's per-entry path and to a single-threaded loop — regardless of
-//! `PYSIGLIB_THREADS` (asserted by the property tests). This is also what
-//! makes the registry's incremental append sound: a cross block computed
-//! later is exactly the block a from-scratch Gram would have produced.
+//! then the Goursat sweep) whose value does not depend on which worker,
+//! tile or lane computed it — every lane runs the scalar FP sequence — so
+//! the tiled, lane-batched Gram is bit-for-bit identical to the engine's
+//! strip path and to a single-threaded loop, regardless of
+//! `PYSIGLIB_THREADS`, `PYSIGLIB_TILE` and `PYSIGLIB_LANES` (asserted by
+//! the property tests). This is also what makes the registry's incremental
+//! append sound: a cross block computed later is exactly the block a
+//! from-scratch Gram would have produced.
 //!
 //! Block support ([`TileScheduler::gram_block_into`]) is the piece the
-//! per-entry path lacks: an append to a registered corpus computes only the
+//! strip path lacks: an append to a registered corpus computes only the
 //! old×new cross strips and the new diagonal block of the cached self-Gram,
 //! writing into the enlarged matrix at an arbitrary offset and stride.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::kernel::{KernelOptions, SolverKind};
+use crate::kernel::lanes::{self, LaneScratch};
+use crate::kernel::KernelOptions;
 use crate::path::{PathBatch, SigError};
-use crate::transforms::Transform;
 use crate::util::pool::num_threads;
 
 /// Default tile edge: 16 × 16 = 256 PDE solves per claim — large enough to
 /// amortise the cursor, small enough that both path sets stay cache-hot.
 const DEFAULT_TILE: usize = 16;
 
-/// Shards Gram work into `tile × tile` blocks over the thread pool.
+/// Shards Gram work into `tile × tile` blocks over the thread pool and
+/// dispatches lane groups inside each tile.
 #[derive(Clone, Copy, Debug)]
 pub struct TileScheduler {
     tile: usize,
+    /// Lane width override (`PYSIGLIB_LANES` / [`with_lanes`]); `None`
+    /// picks the per-block default (8 for uniform batches, 4 for ragged).
+    ///
+    /// [`with_lanes`]: TileScheduler::with_lanes
+    lanes: Option<usize>,
 }
 
 impl Default for TileScheduler {
@@ -47,24 +59,46 @@ impl Default for TileScheduler {
 }
 
 impl TileScheduler {
-    /// Tile edge from `PYSIGLIB_TILE` (entries per side), default 16.
+    /// Tile edge from `PYSIGLIB_TILE` (entries per side, default 16) and
+    /// lane width from `PYSIGLIB_LANES` (0 = scalar; unset = per-block
+    /// default).
     pub fn from_env() -> TileScheduler {
         let tile = std::env::var("PYSIGLIB_TILE")
             .ok()
             .and_then(|v| v.parse::<usize>().ok())
             .filter(|&t| t >= 1)
             .unwrap_or(DEFAULT_TILE);
-        TileScheduler { tile }
+        TileScheduler {
+            tile,
+            lanes: lanes::lane_width_override(),
+        }
     }
 
-    /// Explicit tile edge (at least 1).
+    /// Explicit tile edge (at least 1); lane width stays the environment /
+    /// default choice.
     pub fn with_tile(tile: usize) -> TileScheduler {
-        TileScheduler { tile: tile.max(1) }
+        TileScheduler {
+            tile: tile.max(1),
+            lanes: lanes::lane_width_override(),
+        }
+    }
+
+    /// Pin the lane width (snapped to 0/4/8). Values are bit-identical for
+    /// every width — this is a scheduling knob for tests, benches and the
+    /// CLI.
+    pub fn with_lanes(mut self, width: usize) -> TileScheduler {
+        self.lanes = Some(lanes::normalize_lane_width(width));
+        self
     }
 
     /// The tile edge in Gram entries.
     pub fn tile(&self) -> usize {
         self.tile
+    }
+
+    /// The pinned lane width, if any.
+    pub fn lane_width(&self) -> Option<usize> {
+        self.lanes
     }
 
     /// Full Gram: `out` is `[x.batch(), y.batch()]` row-major, filled with
@@ -121,10 +155,15 @@ impl TileScheduler {
         if mx >= 2 && my >= 2 {
             crate::kernel::check_grid_size(mx, my, opts)?;
         }
-        let tr = opts.exec.transform;
-        let dim = x.dim();
-        let max_m = if mx < 2 { 0 } else { tr.out_len(mx) - 1 };
-        let max_n = if my < 2 { 0 } else { tr.out_len(my) - 1 };
+        // Blocked-solver requests run the scalar schedule — width 0 keeps
+        // the per-worker scratch scalar-sized too.
+        let width = if opts.solver == crate::kernel::SolverKind::Blocked {
+            0
+        } else {
+            self.lanes.unwrap_or_else(|| {
+                lanes::default_lane_width(x.uniform_len().is_some() && y.uniform_len().is_some())
+            })
+        };
         let tiles_x = nr.div_ceil(self.tile);
         let tiles_y = nc.div_ceil(self.tile);
         let n_tiles = tiles_x * tiles_y;
@@ -134,7 +173,7 @@ impl TileScheduler {
             1
         };
         let base = out.as_mut_ptr() as usize;
-        let run_tile = |t: usize, sc: &mut TileScratch| {
+        let run_tile = |t: usize, sc: &mut LaneScratch| {
             let (bx, by) = (t / tiles_y, t % tiles_y);
             let i_lo = xr.start + bx * self.tile;
             let i_hi = (i_lo + self.tile).min(xr.end);
@@ -153,13 +192,12 @@ impl TileScheduler {
                         j_hi - j_lo,
                     )
                 };
-                for (slot, j) in row.iter_mut().zip(j_lo..j_hi) {
-                    *slot = sc.entry(x, i, y, j, opts, tr, dim);
-                }
+                lanes::solve_gram_row(x, i, y, j_lo..j_hi, opts, width, sc, row);
             }
+            lanes::count_tile();
         };
         if workers <= 1 {
-            let mut sc = TileScratch::new(max_m, max_n, dim, tr, opts);
+            let mut sc = LaneScratch::new();
             for t in 0..n_tiles {
                 run_tile(t, &mut sc);
             }
@@ -171,7 +209,7 @@ impl TileScheduler {
                 let cursor = &cursor;
                 let run_tile = &run_tile;
                 scope.spawn(move || {
-                    let mut sc = TileScratch::new(max_m, max_n, dim, tr, opts);
+                    let mut sc = LaneScratch::new();
                     loop {
                         let t = cursor.fetch_add(1, Ordering::Relaxed);
                         if t >= n_tiles {
@@ -186,87 +224,11 @@ impl TileScheduler {
     }
 }
 
-/// Per-worker scratch: increment buffers, the Δ matrix and the two solver
-/// rows, sized once for the block's longest pair.
-struct TileScratch {
-    dx: Vec<f64>,
-    dy: Vec<f64>,
-    base: Vec<f64>,
-    delta: Vec<f64>,
-    prev: Vec<f64>,
-    cur: Vec<f64>,
-}
-
-impl TileScratch {
-    fn new(max_m: usize, max_n: usize, dim: usize, tr: Transform, opts: &KernelOptions) -> Self {
-        let needs_base = matches!(tr, Transform::LeadLag | Transform::LeadLagTimeAug);
-        // Transformed Δ dims bound the raw increment counts too (out_len is
-        // monotone and ≥ the input length for every transform).
-        let row_len = (max_n << opts.dyadic_y) + 1;
-        TileScratch {
-            dx: vec![0.0; max_m * dim],
-            dy: vec![0.0; max_n * dim],
-            base: vec![0.0; if needs_base { max_m * max_n } else { 0 }],
-            delta: vec![0.0; max_m * max_n],
-            prev: vec![0.0; row_len],
-            cur: vec![0.0; row_len],
-        }
-    }
-
-    /// One Gram entry — exactly the engine's per-entry computation, so the
-    /// value is independent of tiling, threads and scratch sizes.
-    #[allow(clippy::too_many_arguments)]
-    fn entry(
-        &mut self,
-        x: &PathBatch<'_>,
-        i: usize,
-        y: &PathBatch<'_>,
-        j: usize,
-        opts: &KernelOptions,
-        tr: Transform,
-        dim: usize,
-    ) -> f64 {
-        let (lx, ly) = (x.len_of(i), y.len_of(j));
-        if lx < 2 || ly < 2 {
-            return 1.0; // degenerate path: identity signature, k = 1
-        }
-        let (m, n) = crate::kernel::delta::delta_matrix_into(
-            x.values_of(i),
-            y.values_of(j),
-            lx,
-            ly,
-            dim,
-            tr,
-            &mut self.dx,
-            &mut self.dy,
-            &mut self.base,
-            &mut self.delta,
-        );
-        match opts.solver {
-            SolverKind::Row => crate::kernel::solver::solve_pde_with(
-                &self.delta[..m * n],
-                m,
-                n,
-                opts.dyadic_x,
-                opts.dyadic_y,
-                &mut self.prev,
-                &mut self.cur,
-            ),
-            SolverKind::Blocked => crate::kernel::solve_pde_blocked(
-                &self.delta[..m * n],
-                m,
-                n,
-                opts.dyadic_x,
-                opts.dyadic_y,
-            ),
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernel::try_gram;
+    use crate::kernel::{try_gram, KernelOptions, SolverKind};
+    use crate::transforms::Transform;
     use crate::util::rng::Rng;
 
     fn ragged_batch(rng: &mut Rng, lens: &[usize], d: usize) -> (Vec<f64>, Vec<usize>) {
@@ -294,11 +256,14 @@ mod tests {
         ] {
             let want = try_gram(&xb, &yb, &opts).unwrap();
             for tile in [1usize, 2, 4, 64] {
-                let mut got = vec![0.0; xb.batch() * yb.batch()];
-                TileScheduler::with_tile(tile)
-                    .gram_into(&xb, &yb, &opts, &mut got)
-                    .unwrap();
-                assert_eq!(got, want, "tile={tile} opts={opts:?}");
+                for lanes in [0usize, 4, 8] {
+                    let mut got = vec![0.0; xb.batch() * yb.batch()];
+                    TileScheduler::with_tile(tile)
+                        .with_lanes(lanes)
+                        .gram_into(&xb, &yb, &opts, &mut got)
+                        .unwrap();
+                    assert_eq!(got, want, "tile={tile} lanes={lanes} opts={opts:?}");
+                }
             }
         }
     }
@@ -348,5 +313,18 @@ mod tests {
         assert!(sched
             .gram_block_into(&xb, 2..2, &xb, 0..4, &opts, &mut out, 4, 0, 0)
             .is_ok());
+    }
+
+    #[test]
+    fn tile_counter_moves_when_tiles_run() {
+        let before = lanes::stats().tiles_executed;
+        let mut rng = Rng::new(602);
+        let data = rng.brownian_batch(6, 5, 2, 0.4);
+        let xb = PathBatch::uniform(&data, 6, 5, 2).unwrap();
+        let mut out = vec![0.0; 36];
+        TileScheduler::with_tile(3)
+            .gram_into(&xb, &xb, &KernelOptions::default(), &mut out)
+            .unwrap();
+        assert!(lanes::stats().tiles_executed >= before + 4, "2×2 tile grid");
     }
 }

@@ -51,6 +51,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::corpus::{CorpusId, CorpusRegistry};
 use crate::kernel::krr::KernelRidge;
+use crate::kernel::lanes::{self, LaneScratch};
 use crate::kernel::lowrank::{FeatureMap, LowRankFeatures, LowRankRidge, LowRankSpec};
 use crate::kernel::{KernelOptions, SolverKind};
 use crate::path::{PathBatch, SigError, SigOptions};
@@ -296,6 +297,11 @@ pub struct Plan {
     slen: usize,
     /// The registry corpus plans resolve their [`CorpusId`] against.
     corpus_registry: Option<Arc<CorpusRegistry>>,
+    /// Lane width of the Gram producers (0 = scalar): resolved at compile
+    /// time from the shape class, overridden by `PYSIGLIB_LANES`. Pure
+    /// schedule — lane-batched values are bit-identical to scalar ones, so
+    /// the width is deliberately *not* part of the plan cache key.
+    lanes: usize,
     arena: Arena,
     /// Warm state for low-rank plans: the feature map (and Φy) depend only
     /// on (spec, reference batch y), and training loops execute the same
@@ -486,6 +492,31 @@ impl Plan {
             }
             _ => Backend::Native,
         };
+        // Lane width for the Gram producers (signature ops have no PDE, and
+        // blocked-solver specs keep the scalar schedule — width 0 here also
+        // keeps their worker scratch scalar-sized): uniform classes default
+        // to W = 8, ragged to W = 4, both overridable with PYSIGLIB_LANES
+        // (0 = scalar). Chosen here — at compile time — so a plan's
+        // schedule is stable across executes.
+        let lanes = match &spec {
+            OpSpec::Sig(_) | OpSpec::LogSig(_) => 0,
+            OpSpec::SigKernel(k)
+            | OpSpec::Gram(k)
+            | OpSpec::Mmd2(k)
+            | OpSpec::Mmd2Unbiased(k)
+            | OpSpec::Krr { opts: k, .. }
+            | OpSpec::GramLowRank { opts: k, .. }
+            | OpSpec::Mmd2LowRank { opts: k, .. }
+            | OpSpec::KrrLowRank { opts: k, .. }
+            | OpSpec::GramCorpus { opts: k, .. }
+            | OpSpec::Mmd2Corpus { opts: k, .. } => {
+                if k.solver == SolverKind::Blocked {
+                    0
+                } else {
+                    lanes::lane_width_for(matches!(shape.lens, LenProfile::Uniform(_)))
+                }
+            }
+        };
         Ok(Plan {
             spec,
             shape,
@@ -495,6 +526,7 @@ impl Plan {
             layout,
             slen,
             corpus_registry,
+            lanes,
             arena: Arena::new(),
             lowrank_warm: Mutex::new(None),
         })
@@ -510,6 +542,20 @@ impl Plan {
 
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// Lane width the plan's Gram producers use (0 = scalar).
+    pub fn lane_width(&self) -> usize {
+        self.lanes
+    }
+
+    /// Override the lane width (snapped to 0/4/8). Values are bit-identical
+    /// for every width, so this is a scheduling knob — used by the property
+    /// tests and benches to pin the schedule without touching the
+    /// environment.
+    pub fn with_lane_width(mut self, width: usize) -> Plan {
+        self.lanes = lanes::normalize_lane_width(width);
+        self
     }
 
     /// Output row length of a signature / log-signature plan (0 for other
@@ -913,6 +959,12 @@ impl Plan {
 
     /// Gram values into a preallocated `[bx, by]` buffer (shared by the Gram
     /// and MMD² ops). Inputs must already be validated.
+    ///
+    /// Work items are row strips (`COL_CHUNK` columns of one x-row); inside
+    /// a strip [`lanes::solve_gram_row`] groups same-shape columns into lane
+    /// groups of the plan's width and sweeps W kernels at once, finishing
+    /// the remainder scalar — bit-identical to the per-entry path for every
+    /// width, since each lane runs the scalar FP sequence.
     fn gram_values_into(
         &self,
         x: &PathBatch<'_>,
@@ -920,6 +972,12 @@ impl Plan {
         k: &KernelOptions,
         out: &mut [f64],
     ) {
+        // Columns per work item: wide enough to fill several W = 8 lane
+        // groups per claim. Skinny Grams (fewer rows than workers — e.g. a
+        // single-query KRR predict against a large support set) shrink the
+        // chunk so bx × chunks still covers the worker count, floored at
+        // the lane width so each chunk can hold at least one full group.
+        const MAX_COL_CHUNK: usize = 64;
         let (bx, by) = (x.batch(), y.batch());
         debug_assert_eq!(out.len(), bx * by);
         if bx * by == 0 {
@@ -927,65 +985,40 @@ impl Plan {
         }
         let tr = k.exec.transform;
         let dim = x.dim();
-        let (lam1, lam2) = (k.dyadic_x, k.dyadic_y);
+        let lam2 = k.dyadic_y;
+        let width = self.lanes;
         let mx = (0..bx).map(|i| x.len_of(i)).max().unwrap_or(0);
         let my = (0..by).map(|j| y.len_of(j)).max().unwrap_or(0);
-        let max_m = if mx < 2 { 0 } else { tr.out_len(mx) - 1 };
-        let max_n = if my < 2 { 0 } else { tr.out_len(my) - 1 };
-        let needs_base = matches!(tr, Transform::LeadLag | Transform::LeadLagTimeAug);
+        let nt = num_threads().max(1);
+        let col_chunk = if bx >= nt {
+            MAX_COL_CHUNK
+        } else {
+            let chunks_per_row = nt.div_ceil(bx);
+            by.div_ceil(chunks_per_row)
+                .max(width.max(1))
+                .min(MAX_COL_CHUNK)
+        };
+        let col_chunks = by.div_ceil(col_chunk);
         let out_base = out.as_mut_ptr() as usize;
         let arena = &self.arena;
         run_items(
             k.exec.parallel,
-            bx * by,
-            || {
-                let mut sc = KernScratch::checkout(
-                    arena,
-                    mx,
-                    my,
-                    dim,
-                    needs_base,
-                    (max_n << lam2) + 1,
-                );
-                sc.delta = arena.take(max_m * max_n);
-                sc
-            },
-            |p, sc: &mut KernScratch| {
-                let (i, j) = (p / by, p % by);
-                // SAFETY: entry p is written by exactly one item.
-                let slot =
-                    unsafe { std::slice::from_raw_parts_mut((out_base as *mut f64).add(p), 1) };
-                let (lx, ly) = (x.len_of(i), y.len_of(j));
-                if lx < 2 || ly < 2 {
-                    slot[0] = 1.0;
-                    return;
-                }
-                let (m, n) = crate::kernel::delta::delta_matrix_into(
-                    x.values_of(i),
-                    y.values_of(j),
-                    lx,
-                    ly,
-                    dim,
-                    tr,
-                    &mut sc.dx,
-                    &mut sc.dy,
-                    &mut sc.base,
-                    &mut sc.delta,
-                );
-                slot[0] = match k.solver {
-                    SolverKind::Row => crate::kernel::solver::solve_pde_with(
-                        &sc.delta[..m * n],
-                        m,
-                        n,
-                        lam1,
-                        lam2,
-                        &mut sc.prev,
-                        &mut sc.cur,
-                    ),
-                    SolverKind::Blocked => {
-                        crate::kernel::solve_pde_blocked(&sc.delta[..m * n], m, n, lam1, lam2)
-                    }
+            bx * col_chunks,
+            || GramScratch::checkout(arena, mx, my, dim, tr, lam2, width, col_chunk.min(by)),
+            |p, sc: &mut GramScratch| {
+                let (i, c) = (p / col_chunks, p % col_chunks);
+                let j0 = c * col_chunk;
+                let j1 = (j0 + col_chunk).min(by);
+                // SAFETY: strip (i, j0..j1) is written by exactly one item
+                // (items partition the [bx, by] index space) and `out`
+                // outlives the scope inside `run_items`.
+                let row = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (out_base as *mut f64).add(i * by + j0),
+                        j1 - j0,
+                    )
                 };
+                lanes::solve_gram_row(x, i, y, j0..j1, k, width, &mut sc.inner, row);
             },
         );
     }
@@ -1365,6 +1398,57 @@ impl Drop for KernScratch {
         ] {
             self.arena.give(b);
         }
+    }
+}
+
+/// Per-worker scratch for the lane-batched Gram producers: a
+/// [`LaneScratch`] whose buffers are checked out of the plan's arena at
+/// worker start, sized for the batch's largest pair (so
+/// [`LaneScratch::ensure`] never grows them and the steady state stays
+/// allocation-free), and returned on drop.
+struct GramScratch {
+    arena: Arena,
+    inner: LaneScratch,
+}
+
+impl GramScratch {
+    #[allow(clippy::too_many_arguments)]
+    fn checkout(
+        arena: &Arena,
+        max_lx: usize,
+        max_ly: usize,
+        dim: usize,
+        tr: Transform,
+        lam2: u32,
+        width: usize,
+        max_cols: usize,
+    ) -> GramScratch {
+        // The ONE sizing source shared with the dispatcher's per-row
+        // `ensure`: sizes are monotone in the lengths, so taking them at
+        // the batch maxima guarantees `ensure` never grows an arena buffer.
+        let s = lanes::lane_sizes(max_lx, max_ly, dim, tr, width, lam2);
+        GramScratch {
+            arena: arena.clone(),
+            inner: LaneScratch {
+                dx: arena.take(s.dx),
+                dys: arena.take(s.dys),
+                base: arena.take(s.base),
+                delta: arena.take(s.delta),
+                prev: arena.take(s.row),
+                cur: arena.take(s.row),
+                idx: arena.take_usize(max_cols),
+            },
+        }
+    }
+}
+
+impl Drop for GramScratch {
+    fn drop(&mut self) {
+        let inner = std::mem::take(&mut self.inner);
+        for b in [inner.dx, inner.dys, inner.base, inner.delta, inner.prev, inner.cur] {
+            self.arena.give(b);
+        }
+        self.arena.give_usize(inner.idx);
     }
 }
 

@@ -111,6 +111,38 @@ mod tests {
         });
     }
 
+    /// Cross-schedule **bit-identity**: the anti-diagonal blocked sweep and
+    /// the row sweep evaluate the same recurrence with the same A(p)/B(p)
+    /// and a commutative two-term sum (top + left vs left + top), so the
+    /// results must match exactly — across dyadic orders λ1, λ2 ∈ {0,1,2}
+    /// and row counts that are not multiples of the 32-row block (the
+    /// init-row carry's boundary cases had no dedicated coverage before).
+    #[test]
+    fn blocked_bitmatches_row_across_schedules() {
+        check("blocked ≡ row (bitwise)", 20, |g| {
+            let m = g.usize_in(1, 70);
+            let n = g.usize_in(1, 70);
+            let lam1 = g.usize_in(0, 2) as u32;
+            let lam2 = g.usize_in(0, 2) as u32;
+            let delta: Vec<f64> = g.normal_vec(m * n).iter().map(|v| v * 0.2).collect();
+            let kr = solve_pde(&delta, m, n, lam1, lam2);
+            let kb = solve_pde_blocked(&delta, m, n, lam1, lam2);
+            assert_eq!(kr, kb, "m={m} n={n} λ=({lam1},{lam2})");
+        });
+        // Deterministic boundary sizes: rows straddling the 32-row block in
+        // the *refined* grid too (m·2^λ1 crossing 32/64).
+        for &(m, lam1) in &[(31usize, 0u32), (33, 0), (17, 1), (9, 2), (65, 0), (16, 1)] {
+            for &lam2 in &[0u32, 1, 2] {
+                let n = 5;
+                let delta: Vec<f64> =
+                    (0..m * n).map(|i| ((i % 11) as f64 - 5.0) * 0.04).collect();
+                let kr = solve_pde(&delta, m, n, lam1, lam2);
+                let kb = solve_pde_blocked(&delta, m, n, lam1, lam2);
+                assert_eq!(kr, kb, "m={m} λ=({lam1},{lam2})");
+            }
+        }
+    }
+
     #[test]
     fn exact_block_boundary_sizes() {
         // rows exactly 32, 64: the init-row carry is exercised end-to-end.

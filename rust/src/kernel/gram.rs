@@ -6,6 +6,13 @@
 //! **ragged** batches: every pair (x_i, y_j) is solved on its own
 //! (len_x_i − 1) × (len_y_j − 1) PDE grid, so mixed-length corpora need no
 //! padding, and gradients come back in each batch's own ragged layout.
+//!
+//! Gram production is **lane-batched**: the engine plans these wrappers
+//! compile group each row's pairs by shape class (ragged batches are
+//! grouped by equal length) and advance W = 4 or 8 kernels per Goursat
+//! sweep through [`kernel::lanes`](crate::kernel::lanes), with a scalar
+//! remainder — bit-identical to the scalar path, ~W× less sweep overhead
+//! on multi-pair rows. `PYSIGLIB_LANES=0` restores the scalar schedule.
 
 use crate::engine::{OpSpec, Plan, ShapeClass};
 use crate::kernel::backward::try_sig_kernel_vjp;

@@ -1,0 +1,753 @@
+//! Lane-batched multi-pair PDE engine: one Goursat sweep advances W
+//! independent kernels.
+//!
+//! The CPU row sweep ([`super::solver::solve_pde_with`]) is memory-bound
+//! with a serial `k[s,t-1] → k[s,t]` dependency, and vectorising *within* a
+//! single PDE was tried and **reverted** — the two-pass restructure of the
+//! inner loop is ~20% slower on this testbed (extra coefficient/cterm
+//! memory traffic outweighs the shorter dependency chain; see the NOTE in
+//! `solver.rs` and the `pde_sweep/*` rows of the ablations bench). KSig and
+//! the paper's GPU scheme get their throughput the other way: batching
+//! *across pairs*. Every (x, y) pair in a Gram tile runs the exact same
+//! instruction sequence, so W pairs can ride the SIMD lanes of one sweep
+//! with **zero cross-lane dependencies** — and bit-identical results to the
+//! scalar solver, since each lane performs the same FP ops in the same
+//! order.
+//!
+//! Three layers:
+//!
+//! * [`solve_pde_lanes`] — the structure-of-arrays solver: W independent
+//!   grids advance per inner-loop iteration over interleaved `[cols+1, W]`
+//!   row buffers. W is a const generic fixed to 4 or 8 and the arithmetic
+//!   is plain fixed-size-array code (no `std::simd`, no `unsafe`), so LLVM
+//!   autovectorises the per-lane FMA block.
+//! * [`delta_block_lanes`] — the tile-level Δ precompute: the W pairs of a
+//!   lane group share one x row, so their increment matrices stack into a
+//!   **single GEMM** `dx · [dy_0; …; dy_{W-1}]ᵀ` whose output *is* the
+//!   lane-interleaved `[m, W, n]` delta block — one GEMM per lane group
+//!   instead of one per pair ([`gemm_nt`] computes every entry as an
+//!   independent fixed-order dot product, so stacking is bit-neutral).
+//! * [`solve_gram_row`] — the dispatcher every Gram producer calls: groups
+//!   a row's columns by shape class (ragged batches are sorted by length —
+//!   unstable, allocation-free — so equal-length paths form runs), packs
+//!   full lane groups of `width`, and finishes the remainder with the
+//!   scalar per-pair path.
+//!
+//! **Bit-identity.** Lane w of a group evaluates exactly the scalar
+//! recurrence `v = (k_left + prev[t+1])·A(p) − prev[t]·B(p)` on exactly the
+//! scalar Δ values, in the same order — lane batching is pure schedule, so
+//! Gram/MMD²/corpus results are bit-for-bit identical to the scalar path
+//! for every width (property-tested in `tests/props_lanes.rs`). The
+//! [`SolverKind::Blocked`](crate::kernel::SolverKind::Blocked) schedule is
+//! served scalar (it models the GPU dataflow; lane-batching it would be
+//! redundant with the row schedule's lanes).
+//!
+//! **Cost model.** A lane group amortises the sweep's loop control and
+//! turns W dependent scalar FMA chains into W-wide independent ones, but
+//! needs W same-shape pairs per group: uniform batches default to W = 8,
+//! ragged batches to W = 4 (equal-length runs are shorter), and
+//! `PYSIGLIB_LANES` overrides both (`0` = scalar, values snap to 4 or 8).
+//! Pairs that do not fill a group fall back to the scalar path and are
+//! counted in [`stats`] as the scalar remainder.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::kernel::delta::{delta_matrix_into, increments_into};
+use crate::kernel::{KernelOptions, SolverKind};
+use crate::path::PathBatch;
+use crate::transforms::Transform;
+use crate::util::linalg::gemm_nt;
+
+/// The supported lane widths (const-generic instantiations of
+/// [`solve_pde_lanes`]).
+pub const LANE_WIDTHS: [usize; 2] = [4, 8];
+
+// ---------------------------------------------------------------------------
+// Occupancy counters (process-wide, monotonic) — mirrored into the serving
+// metrics snapshot so tile/lane occupancy is observable in production.
+
+static TILES_EXECUTED: AtomicU64 = AtomicU64::new(0);
+static LANE_GROUPS: AtomicU64 = AtomicU64::new(0);
+static SCALAR_PAIRS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the lane engine's occupancy counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneStats {
+    /// Gram tiles executed by the [`TileScheduler`](crate::corpus::TileScheduler).
+    pub tiles_executed: u64,
+    /// Full lane groups dispatched through [`solve_pde_lanes`].
+    pub lane_groups: u64,
+    /// Pairs solved by the scalar remainder while lane batching was active
+    /// (degenerate pairs and lanes-off runs are not counted).
+    pub scalar_pairs: u64,
+}
+
+/// Current occupancy counters (monotonic across the process lifetime).
+pub fn stats() -> LaneStats {
+    LaneStats {
+        tiles_executed: TILES_EXECUTED.load(Ordering::Relaxed),
+        lane_groups: LANE_GROUPS.load(Ordering::Relaxed),
+        scalar_pairs: SCALAR_PAIRS.load(Ordering::Relaxed),
+    }
+}
+
+/// Record one executed Gram tile (called by the tile scheduler).
+pub(crate) fn count_tile() {
+    TILES_EXECUTED.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Lane-width resolution.
+
+/// Snap a requested width to a supported one: `0`/`1` mean scalar, other
+/// values round to the nearest of [`LANE_WIDTHS`].
+pub fn normalize_lane_width(w: usize) -> usize {
+    if w <= 1 {
+        0
+    } else if w <= 5 {
+        4
+    } else {
+        8
+    }
+}
+
+/// The `PYSIGLIB_LANES` override, normalised; `None` when unset/unparsable.
+pub fn lane_width_override() -> Option<usize> {
+    std::env::var("PYSIGLIB_LANES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(normalize_lane_width)
+}
+
+/// Default width for a shape profile: uniform classes fill W = 8 groups
+/// whenever at least 8 pairs share a tile row; ragged classes use W = 4
+/// because equal-length runs are shorter.
+pub fn default_lane_width(uniform: bool) -> usize {
+    if uniform {
+        8
+    } else {
+        4
+    }
+}
+
+/// Resolved lane width for a shape profile: the environment override wins,
+/// else the per-class default. Read at plan / scheduler construction time
+/// (not per execute), so a compiled plan's schedule is stable.
+pub fn lane_width_for(uniform: bool) -> usize {
+    lane_width_override().unwrap_or_else(|| default_lane_width(uniform))
+}
+
+// ---------------------------------------------------------------------------
+// The SoA solver.
+
+/// Solve W independent Goursat PDEs in one sweep.
+///
+/// `delta` is the lane-interleaved `[m, W, n]` block (lane w's Δ row `s'`
+/// starts at `delta[(s'·W + w)·n]`) — exactly the layout
+/// [`delta_block_lanes`] produces. `prev`/`cur` are caller-provided
+/// interleaved `[cols+1, W]` row buffers, resized in place (the engine's
+/// Gram plans route them through the workspace arena so the steady state
+/// allocates nothing). Returns the W terminal values k(1,1).
+///
+/// Each lane evaluates the scalar recurrence of
+/// [`solve_pde_with`](super::solver::solve_pde_with) on its own Δ values in
+/// the same order, so lane results are bit-identical to W scalar solves.
+/// The dyadic-run coefficient hoist matches the scalar solver's: A(p)/B(p)
+/// are computed once per `2^λ2` run.
+pub fn solve_pde_lanes<const W: usize>(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    prev: &mut Vec<f64>,
+    cur: &mut Vec<f64>,
+) -> [f64; W] {
+    assert_eq!(delta.len(), m * W * n);
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+    prev.clear();
+    prev.resize((cols + 1) * W, 1.0);
+    cur.clear();
+    cur.resize((cols + 1) * W, 1.0);
+    let run = 1usize << lam2;
+    for s in 0..rows {
+        let dbase = (s >> lam1) * W * n;
+        cur[..W].fill(1.0);
+        let mut k_left = [1.0f64; W];
+        let mut a = [0.0f64; W];
+        let mut b = [0.0f64; W];
+        let mut t = 0usize;
+        for tc in 0..n {
+            for w in 0..W {
+                let p = delta[dbase + w * n + tc] * scale;
+                let p2 = p * p * (1.0 / 12.0);
+                a[w] = 1.0 + 0.5 * p + p2;
+                b[w] = 1.0 - p2;
+            }
+            for _ in 0..run {
+                // The W-wide FMA block: no cross-lane dependency, contiguous
+                // interleaved loads/stores — the autovectorisation target.
+                for w in 0..W {
+                    let v = (k_left[w] + prev[(t + 1) * W + w]) * a[w] - prev[t * W + w] * b[w];
+                    cur[(t + 1) * W + w] = v;
+                    k_left[w] = v;
+                }
+                t += 1;
+            }
+        }
+        std::mem::swap(prev, cur);
+    }
+    let mut out = [0.0; W];
+    out.copy_from_slice(&prev[cols * W..(cols + 1) * W]);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tile-level Δ precompute.
+
+/// Pack the Δ blocks of a lane group — one x path against W same-length y
+/// paths — into the lane-interleaved `[m_t, W, n_t]` layout with a single
+/// stacked GEMM.
+///
+/// The W increment matrices stack as `dys = [dy_0; …; dy_{W-1}]`
+/// (`[W·n, dim]`), and `dx · dysᵀ` lands row-major as `[m, W·n]` — which
+/// *is* `[m, W, n]`: lane w's Δ row i occupies `out[(i·W + w)·n ..]`.
+/// Transforms are fused exactly as in
+/// [`delta_matrix_into`](crate::kernel::delta::delta_matrix_into): the
+/// time-augmentation shift is a constant add, lead-lag expands each lane's
+/// base block by increment parity. Returns the transformed `(rows, cols)`
+/// per lane. Every lane's entries are bit-identical to the per-pair
+/// precompute ([`gemm_nt`] computes each entry as an independent
+/// fixed-order dot product).
+///
+/// Scratch: `dx` is `[(lx−1)·dim]`, `dys` is `[W·(ly−1)·dim]`, `base` is
+/// `[(lx−1)·W·(ly−1)]` for the lead-lag transforms (may be empty
+/// otherwise), `out` holds `rows·W·cols` of the transformed block; all may
+/// be larger than needed.
+#[allow(clippy::too_many_arguments)]
+pub fn delta_block_lanes<const W: usize>(
+    x: &[f64],
+    lx: usize,
+    ys: &[&[f64]; W],
+    ly: usize,
+    dim: usize,
+    transform: Transform,
+    dx: &mut [f64],
+    dys: &mut [f64],
+    base: &mut [f64],
+    out: &mut [f64],
+) -> (usize, usize) {
+    let m = lx - 1;
+    let n = ly - 1;
+    increments_into(x, lx, dim, &mut dx[..m * dim]);
+    for (w, y) in ys.iter().enumerate() {
+        increments_into(y, ly, dim, &mut dys[w * n * dim..(w + 1) * n * dim]);
+    }
+    match transform {
+        Transform::None | Transform::TimeAug => {
+            let out = &mut out[..m * W * n];
+            gemm_nt(m, dim, W * n, &dx[..m * dim], &dys[..W * n * dim], out);
+            if transform == Transform::TimeAug {
+                let shift = (1.0 / m as f64) * (1.0 / n as f64);
+                for v in out.iter_mut() {
+                    *v += shift;
+                }
+            }
+            (m, n)
+        }
+        Transform::LeadLag | Transform::LeadLagTimeAug => {
+            let base = &mut base[..m * W * n];
+            gemm_nt(m, dim, W * n, &dx[..m * dim], &dys[..W * n * dim], base);
+            let rows = 2 * lx - 2;
+            let cols = 2 * ly - 2;
+            let shift = if transform == Transform::LeadLagTimeAug {
+                (1.0 / rows as f64) * (1.0 / cols as f64)
+            } else {
+                0.0
+            };
+            let out = &mut out[..rows * W * cols];
+            out.fill(shift);
+            for a in 0..rows {
+                for w in 0..W {
+                    let orow = &mut out[(a * W + w) * cols..(a * W + w + 1) * cols];
+                    let brow = &base[((a / 2) * W + w) * n..((a / 2) * W + w + 1) * n];
+                    for (bcol, ov) in orow.iter_mut().enumerate() {
+                        if a % 2 == bcol % 2 {
+                            *ov += brow[bcol / 2];
+                        }
+                    }
+                }
+            }
+            (rows, cols)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker scratch.
+
+/// Per-worker scratch for lane-batched Gram rows: increment buffers, the
+/// lane-interleaved Δ block, the two interleaved solver rows and the
+/// column-grouping index. Plain growable buffers here ([`ensure`] grows
+/// them on demand for the tile scheduler); the engine's Gram plans assemble
+/// the same struct from arena-checked-out buffers sized at worker start, so
+/// `ensure` never grows there and the steady state stays allocation-free.
+///
+/// [`ensure`]: LaneScratch::ensure
+#[derive(Default)]
+pub struct LaneScratch {
+    /// `[(lx−1)·dim]` raw x increments.
+    pub dx: Vec<f64>,
+    /// `[W·(ly−1)·dim]` stacked y increments (its `[..(ly−1)·dim]` prefix
+    /// doubles as the scalar path's dy scratch).
+    pub dys: Vec<f64>,
+    /// `[(lx−1)·W·(ly−1)]` base block for the lead-lag transforms.
+    pub base: Vec<f64>,
+    /// `[m_t·W·n_t]` lane-interleaved transformed Δ block (its leading
+    /// `[m_t·n_t]` doubles as the scalar path's Δ scratch).
+    pub delta: Vec<f64>,
+    /// Interleaved `[cols+1, W]` solver rows.
+    pub prev: Vec<f64>,
+    pub cur: Vec<f64>,
+    /// Column indices grouped by length (ragged batches).
+    pub idx: Vec<usize>,
+}
+
+/// Buffer lengths a `(lx, ly, dim, transform, width)` row needs — the one
+/// place the scratch-sizing arithmetic lives. [`LaneScratch::ensure`] grows
+/// to these per row, and the engine's arena checkout pre-takes them at the
+/// batch's maxima (sizes are monotone in `lx`/`ly`, so per-row `ensure`
+/// never exceeds the checkout and the zero-allocation steady state holds
+/// by construction, not by two hand-synchronized copies of the formulas).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneSizes {
+    /// Raw x increments `[(lx−1)·dim]`.
+    pub dx: usize,
+    /// Stacked y increments `[W·(ly−1)·dim]`.
+    pub dys: usize,
+    /// Lead-lag base block `[(lx−1)·W·(ly−1)]` (0 when unused).
+    pub base: usize,
+    /// Lane-interleaved transformed Δ block `[m_t·W·n_t]`.
+    pub delta: usize,
+    /// One interleaved `[cols+1, W]` solver row (`prev` and `cur` each).
+    pub row: usize,
+}
+
+/// Compute [`LaneSizes`] for a row of `(x: lx) × (y: ly)` pairs at `width`.
+pub fn lane_sizes(
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    transform: Transform,
+    width: usize,
+    lam2: u32,
+) -> LaneSizes {
+    let w = width.max(1);
+    let (mi, ni) = (lx.saturating_sub(1), ly.saturating_sub(1));
+    let (mt, nt) = if lx < 2 || ly < 2 {
+        (0, 0)
+    } else {
+        (transform.out_len(lx) - 1, transform.out_len(ly) - 1)
+    };
+    let needs_base = matches!(transform, Transform::LeadLag | Transform::LeadLagTimeAug);
+    LaneSizes {
+        dx: mi * dim,
+        dys: w * ni * dim,
+        base: if needs_base { mi * w * ni } else { 0 },
+        delta: mt * w * nt,
+        row: ((nt << lam2) + 1) * w,
+    }
+}
+
+impl LaneScratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> LaneScratch {
+        LaneScratch::default()
+    }
+
+    /// Grow every buffer to [`lane_sizes`] for this row (never shrinks —
+    /// arena-provided buffers stay intact).
+    pub fn ensure(
+        &mut self,
+        lx: usize,
+        ly: usize,
+        dim: usize,
+        transform: Transform,
+        width: usize,
+        lam2: u32,
+    ) {
+        let s = lane_sizes(lx, ly, dim, transform, width, lam2);
+        let grow = |buf: &mut Vec<f64>, len: usize| {
+            if buf.len() < len {
+                buf.resize(len, 0.0);
+            }
+        };
+        grow(&mut self.dx, s.dx);
+        grow(&mut self.dys, s.dys);
+        grow(&mut self.base, s.base);
+        grow(&mut self.delta, s.delta);
+        grow(&mut self.prev, s.row);
+        grow(&mut self.cur, s.row);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Gram-row dispatcher.
+
+/// Solve one Gram row k(x_i, y_j) for `j ∈ cols` into
+/// `out[j − cols.start]`, lane-batched.
+///
+/// Columns are grouped by shape class: for ragged batches the column
+/// indices are sorted by path length (an unstable, allocation-free sort —
+/// group composition cannot affect values) so equal-length paths form
+/// runs; full groups of `width` are packed
+/// ([`delta_block_lanes`]) and solved by [`solve_pde_lanes`], the remainder
+/// by the scalar per-pair path (bit-identical by construction, so `width`
+/// is pure schedule). `width < 4` — and any
+/// [`SolverKind::Blocked`](crate::kernel::SolverKind::Blocked) request —
+/// runs fully scalar. Degenerate pairs (either path shorter than 2 points)
+/// are the constant 1.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_gram_row(
+    x: &PathBatch<'_>,
+    i: usize,
+    y: &PathBatch<'_>,
+    cols: Range<usize>,
+    opts: &KernelOptions,
+    width: usize,
+    sc: &mut LaneScratch,
+    out: &mut [f64],
+) {
+    assert_eq!(out.len(), cols.len());
+    if cols.is_empty() {
+        return;
+    }
+    // Defensive re-snap: the engine and scheduler pass normalized widths,
+    // but this is a public entry point and the group solver is instantiated
+    // only for W ∈ {4, 8}. Blocked-solver requests drop to the scalar
+    // schedule *before* scratch sizing, so they never pay for W-wide
+    // buffers they cannot use.
+    let width = if opts.solver == SolverKind::Row {
+        normalize_lane_width(width)
+    } else {
+        0
+    };
+    let lx = x.len_of(i);
+    if lx < 2 {
+        out.fill(1.0);
+        return;
+    }
+    let my = cols.clone().map(|j| y.len_of(j)).max().unwrap_or(0);
+    let tr = opts.exec.transform;
+    sc.ensure(lx, my, x.dim(), tr, width, opts.dyadic_y);
+    let lane_ok = width >= 4;
+    if !lane_ok {
+        for (slot, j) in out.iter_mut().zip(cols) {
+            *slot = scalar_entry(x, i, y, j, opts, sc);
+        }
+        return;
+    }
+    // Partition: degenerate columns resolve inline, the rest group by length.
+    let mut idx = std::mem::take(&mut sc.idx);
+    idx.clear();
+    for j in cols.clone() {
+        if y.len_of(j) < 2 {
+            out[j - cols.start] = 1.0;
+        } else {
+            idx.push(j);
+        }
+    }
+    if y.uniform_len().is_none() {
+        // Unstable sort: allocation-free (a stable sort would heap-allocate
+        // scratch on every ragged row strip, breaking the engine's
+        // zero-allocation steady state), and group composition cannot
+        // affect values — every Gram entry is computed independently.
+        idx.sort_unstable_by_key(|&j| y.len_of(j));
+    }
+    let (mut groups, mut scalars) = (0u64, 0u64);
+    let mut pos = 0;
+    while pos < idx.len() {
+        let ly = y.len_of(idx[pos]);
+        let mut end = pos + 1;
+        while end < idx.len() && y.len_of(idx[end]) == ly {
+            end += 1;
+        }
+        // Full lane groups of this equal-length run, then the remainder.
+        while pos + width <= end {
+            let group = &idx[pos..pos + width];
+            match width {
+                4 => solve_group_into::<4>(x, i, y, group, opts, sc, cols.start, out),
+                _ => solve_group_into::<8>(x, i, y, group, opts, sc, cols.start, out),
+            }
+            groups += 1;
+            pos += width;
+        }
+        while pos < end {
+            let j = idx[pos];
+            out[j - cols.start] = scalar_entry(x, i, y, j, opts, sc);
+            scalars += 1;
+            pos += 1;
+        }
+    }
+    sc.idx = idx;
+    if groups > 0 {
+        LANE_GROUPS.fetch_add(groups, Ordering::Relaxed);
+    }
+    if scalars > 0 {
+        SCALAR_PAIRS.fetch_add(scalars, Ordering::Relaxed);
+    }
+}
+
+/// One full lane group: pack the Δ block with one stacked GEMM, sweep all W
+/// kernels, scatter the terminals to their output slots.
+#[allow(clippy::too_many_arguments)]
+fn solve_group_into<const W: usize>(
+    x: &PathBatch<'_>,
+    i: usize,
+    y: &PathBatch<'_>,
+    group: &[usize],
+    opts: &KernelOptions,
+    sc: &mut LaneScratch,
+    col0: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(group.len(), W);
+    let ly = y.len_of(group[0]);
+    let ys: [&[f64]; W] = std::array::from_fn(|w| y.values_of(group[w]));
+    let LaneScratch {
+        dx,
+        dys,
+        base,
+        delta,
+        prev,
+        cur,
+        ..
+    } = sc;
+    let (mt, nt) = delta_block_lanes::<W>(
+        x.values_of(i),
+        x.len_of(i),
+        &ys,
+        ly,
+        x.dim(),
+        opts.exec.transform,
+        dx,
+        dys,
+        base,
+        delta,
+    );
+    let vals = solve_pde_lanes::<W>(
+        &delta[..mt * W * nt],
+        mt,
+        nt,
+        opts.dyadic_x,
+        opts.dyadic_y,
+        prev,
+        cur,
+    );
+    for (w, &j) in group.iter().enumerate() {
+        out[j - col0] = vals[w];
+    }
+}
+
+/// One scalar Gram entry — exactly the per-pair computation of the
+/// pre-lane engine (Δ via [`delta_matrix_into`], then the requested
+/// sweep), so lane-off and remainder values match the historical path bit
+/// for bit.
+fn scalar_entry(
+    x: &PathBatch<'_>,
+    i: usize,
+    y: &PathBatch<'_>,
+    j: usize,
+    opts: &KernelOptions,
+    sc: &mut LaneScratch,
+) -> f64 {
+    let (lx, ly) = (x.len_of(i), y.len_of(j));
+    if lx < 2 || ly < 2 {
+        return 1.0;
+    }
+    let LaneScratch {
+        dx,
+        dys,
+        base,
+        delta,
+        prev,
+        cur,
+        ..
+    } = sc;
+    let (m, n) = delta_matrix_into(
+        x.values_of(i),
+        y.values_of(j),
+        lx,
+        ly,
+        x.dim(),
+        opts.exec.transform,
+        dx,
+        dys,
+        base,
+        delta,
+    );
+    match opts.solver {
+        SolverKind::Row => crate::kernel::solver::solve_pde_with(
+            &delta[..m * n],
+            m,
+            n,
+            opts.dyadic_x,
+            opts.dyadic_y,
+            prev,
+            cur,
+        ),
+        SolverKind::Blocked => {
+            crate::kernel::solve_pde_blocked(&delta[..m * n], m, n, opts.dyadic_x, opts.dyadic_y)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::delta::delta_matrix;
+    use crate::kernel::solver::solve_pde;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    /// Interleave W scalar Δ matrices into the `[m, W, n]` lane block.
+    fn interleave<const W: usize>(deltas: &[Vec<f64>], m: usize, n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m * W * n];
+        for (w, d) in deltas.iter().enumerate() {
+            for s in 0..m {
+                out[(s * W + w) * n..(s * W + w) * n + n].copy_from_slice(&d[s * n..(s + 1) * n]);
+            }
+        }
+        out
+    }
+
+    fn check_lanes<const W: usize>(g: &mut crate::util::prop::Gen) {
+        let m = g.usize_in(1, 9);
+        let n = g.usize_in(1, 9);
+        let lam1 = g.usize_in(0, 2) as u32;
+        let lam2 = g.usize_in(0, 2) as u32;
+        let deltas: Vec<Vec<f64>> = (0..W)
+            .map(|_| g.normal_vec(m * n).iter().map(|v| v * 0.3).collect())
+            .collect();
+        let block = interleave::<W>(&deltas, m, n);
+        let (mut prev, mut cur) = (Vec::new(), Vec::new());
+        let got = solve_pde_lanes::<W>(&block, m, n, lam1, lam2, &mut prev, &mut cur);
+        for (w, d) in deltas.iter().enumerate() {
+            let want = solve_pde(d, m, n, lam1, lam2);
+            assert_eq!(got[w], want, "lane {w} of {W} (m={m} n={n} λ=({lam1},{lam2}))");
+        }
+    }
+
+    #[test]
+    fn lanes_bitmatch_scalar_solver() {
+        check("solve_pde_lanes == W × solve_pde", 20, |g| {
+            check_lanes::<4>(g);
+            check_lanes::<8>(g);
+        });
+    }
+
+    #[test]
+    fn delta_block_bitmatches_per_pair_precompute() {
+        check("stacked Δ block == per-pair Δ", 15, |g| {
+            const W: usize = 4;
+            let lx = g.usize_in(2, 7);
+            let ly = g.usize_in(2, 7);
+            let d = g.usize_in(1, 3);
+            let x = g.path(lx, d, 0.5);
+            let ys: Vec<Vec<f64>> = (0..W).map(|_| g.path(ly, d, 0.5)).collect();
+            let yrefs: [&[f64]; W] = std::array::from_fn(|w| ys[w].as_slice());
+            for tr in [
+                Transform::None,
+                Transform::TimeAug,
+                Transform::LeadLag,
+                Transform::LeadLagTimeAug,
+            ] {
+                let mut sc = LaneScratch::new();
+                sc.ensure(lx, ly, d, tr, W, 0);
+                let (mt, nt) = delta_block_lanes::<W>(
+                    &x, lx, &yrefs, ly, d, tr, &mut sc.dx, &mut sc.dys, &mut sc.base,
+                    &mut sc.delta,
+                );
+                for (w, y) in ys.iter().enumerate() {
+                    let (rm, cm, want) = delta_matrix(&x, y, lx, ly, d, tr);
+                    assert_eq!((mt, nt), (rm, cm), "tr={tr:?}");
+                    for s in 0..mt {
+                        for t in 0..nt {
+                            assert_eq!(
+                                sc.delta[(s * W + w) * nt + t],
+                                want[s * nt + t],
+                                "tr={tr:?} lane {w} cell ({s},{t})"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gram_row_bitmatches_scalar_for_every_width() {
+        let mut rng = Rng::new(910);
+        let d = 2;
+        // Ragged y with repeated lengths so lane groups actually form.
+        let ylens = [5usize, 7, 5, 5, 7, 5, 1, 5, 7, 5, 5, 7, 5, 5];
+        let mut ydata = Vec::new();
+        for &l in &ylens {
+            ydata.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let yb = PathBatch::ragged(&ydata, &ylens, d).unwrap();
+        let xdata = rng.brownian_path(6, d, 0.4);
+        let xb = PathBatch::uniform(&xdata, 1, 6, d).unwrap();
+        for opts in [
+            KernelOptions::default(),
+            KernelOptions::default().dyadic(1, 2),
+            KernelOptions::default().transform(Transform::LeadLag),
+            KernelOptions::default().transform(Transform::TimeAug),
+        ] {
+            let mut want = vec![0.0; ylens.len()];
+            let mut sc = LaneScratch::new();
+            solve_gram_row(&xb, 0, &yb, 0..ylens.len(), &opts, 0, &mut sc, &mut want);
+            for width in LANE_WIDTHS {
+                let mut got = vec![0.0; ylens.len()];
+                let mut sc = LaneScratch::new();
+                solve_gram_row(&xb, 0, &yb, 0..ylens.len(), &opts, width, &mut sc, &mut got);
+                assert_eq!(got, want, "width={width} opts={opts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn occupancy_counters_move_with_lane_traffic() {
+        let before = stats();
+        let mut rng = Rng::new(911);
+        let d = 2;
+        let n = 11; // one group of 8 + three scalar remainder pairs
+        let data = rng.brownian_batch(n, 6, d, 0.4);
+        let yb = PathBatch::uniform(&data, n, 6, d).unwrap();
+        let x = rng.brownian_path(5, d, 0.4);
+        let xb = PathBatch::uniform(&x, 1, 5, d).unwrap();
+        let mut out = vec![0.0; n];
+        let mut sc = LaneScratch::new();
+        solve_gram_row(&xb, 0, &yb, 0..n, &KernelOptions::default(), 8, &mut sc, &mut out);
+        let after = stats();
+        assert!(after.lane_groups >= before.lane_groups + 1);
+        assert!(after.scalar_pairs >= before.scalar_pairs + 3);
+    }
+
+    #[test]
+    fn width_normalisation_and_defaults() {
+        assert_eq!(normalize_lane_width(0), 0);
+        assert_eq!(normalize_lane_width(1), 0);
+        assert_eq!(normalize_lane_width(2), 4);
+        assert_eq!(normalize_lane_width(4), 4);
+        assert_eq!(normalize_lane_width(5), 4);
+        assert_eq!(normalize_lane_width(6), 8);
+        assert_eq!(normalize_lane_width(8), 8);
+        assert_eq!(normalize_lane_width(64), 8);
+        assert_eq!(default_lane_width(true), 8);
+        assert_eq!(default_lane_width(false), 4);
+    }
+}

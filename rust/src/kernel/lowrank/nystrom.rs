@@ -9,7 +9,11 @@
 //! Gram restricted to its numerically independent pivot subset Z' ⊆ Z
 //! ([`pivoted_cholesky`](crate::util::linalg::pivoted_cholesky)). Each
 //! feature row costs r kernel PDE solves plus an r² triangular solve, so a
-//! full feature matrix is O(n·r·L²) against the exact Gram's O(n²·L²).
+//! full feature matrix is O(n·r·L²) against the exact Gram's O(n²·L²). The
+//! landmark self-Gram and every cross-Gram route through [`try_gram`], so
+//! they ride the engine's lane-batched PDE schedule
+//! ([`kernel::lanes`](crate::kernel::lanes)): landmarks share a length
+//! class by construction, which keeps the lane groups full.
 //!
 //! The feature map is **exact on the landmark span**: for query points that
 //! are themselves landmarks, Φ·Φᵀ reproduces the exact Gram (the basis of

@@ -2,13 +2,16 @@
 //! on-the-fly dyadic refinement and independent orders λ1 ≠ λ2, a blocked
 //! anti-diagonal solver mirroring the paper's GPU scheme (§3.3), the novel
 //! exact backpropagation (Algorithm 4, §3.4), the approximate PDE-based
-//! baseline it replaces, and batched / Gram APIs with a GEMM Δ precompute.
+//! baseline it replaces, batched / Gram APIs with a GEMM Δ precompute, and
+//! the [`lanes`] engine that advances W independent pair-PDEs per sweep
+//! (the SIMD-across-pairs schedule every Gram/MMD²/corpus producer rides).
 
 pub mod backward;
 pub mod blocked;
 pub mod delta;
 pub mod gram;
 pub mod krr;
+pub mod lanes;
 pub mod lift;
 pub mod lowrank;
 pub mod pde_baseline;
@@ -23,6 +26,7 @@ pub use gram::{
     try_mmd2_unbiased_with_grad, try_mmd2_with_grad,
 };
 pub use krr::KernelRidge;
+pub use lanes::{solve_pde_lanes, LaneScratch, LaneStats};
 pub use lowrank::{
     try_gram_lowrank, try_mmd2_lowrank, try_mmd2_lowrank_unbiased, try_mmd2_lowrank_with_grad,
     FeatureMap, LowRankFeatures, LowRankMethod, LowRankRidge, LowRankSpec, NystromFeatures,

@@ -49,21 +49,34 @@ pub fn solve_pde_with(
     // *reverted* — on this testbed it is ~20% slower than the fused loop
     // (extra coefficient/cterm memory traffic outweighs the shorter
     // dependency chain). See EXPERIMENTS.md §Perf and the
-    // `pde_sweep/*` rows of the ablations bench.
+    // `pde_sweep/*` rows of the ablations bench. Batching across pairs
+    // instead is what pays: see [`super::lanes`].
+    //
+    // Dyadic-run hoist: p — hence A(p), B(p) — is constant for 2^λ2
+    // consecutive refined t steps (`t >> λ2` does not move within a run),
+    // so the coefficients are computed once per run instead of once per
+    // refined cell. Bit-identical to the per-cell form (same expressions,
+    // same inputs, evaluated fewer times); measured in the
+    // `pde_sweep/dyadic*` ablation rows.
+    let run = 1usize << lam2;
     for s in 0..rows {
         let drow = &delta[(s >> lam1) * n..(s >> lam1) * n + n];
         cur[0] = 1.0;
         // Inner loop: contiguous over t, three streams (cur, prev) — the
         // memory-bound hot loop of the paper's CPU algorithm.
         let mut k_left = 1.0; // cur[t]
-        for t in 0..cols {
-            let p = drow[t >> lam2] * scale;
+        let mut t = 0usize;
+        for &d in drow.iter() {
+            let p = d * scale;
             let p2 = p * p * (1.0 / 12.0);
             let a = 1.0 + 0.5 * p + p2;
             let b = 1.0 - p2;
-            let v = (k_left + prev[t + 1]) * a - prev[t] * b;
-            cur[t + 1] = v;
-            k_left = v;
+            for _ in 0..run {
+                let v = (k_left + prev[t + 1]) * a - prev[t] * b;
+                cur[t + 1] = v;
+                k_left = v;
+                t += 1;
+            }
         }
         std::mem::swap(prev, cur);
     }
@@ -99,20 +112,27 @@ pub fn solve_pde_grid_into(
     let w = cols + 1;
     assert_eq!(k.len(), (rows + 1) * w);
     k.fill(1.0);
+    // Same dyadic-run coefficient hoist as [`solve_pde_with`] (bit-identical
+    // to the per-cell form).
+    let run = 1usize << lam2;
     for s in 0..rows {
         let drow = &delta[(s >> lam1) * n..(s >> lam1) * n + n];
         let (top, bot) = k.split_at_mut((s + 1) * w);
         let prev = &top[s * w..(s + 1) * w];
         let cur = &mut bot[..w];
         let mut k_left = 1.0;
-        for t in 0..cols {
-            let p = drow[t >> lam2] * scale;
+        let mut t = 0usize;
+        for &d in drow.iter() {
+            let p = d * scale;
             let p2 = p * p * (1.0 / 12.0);
             let a = 1.0 + 0.5 * p + p2;
             let b = 1.0 - p2;
-            let v = (k_left + prev[t + 1]) * a - prev[t] * b;
-            cur[t + 1] = v;
-            k_left = v;
+            for _ in 0..run {
+                let v = (k_left + prev[t + 1]) * a - prev[t] * b;
+                cur[t + 1] = v;
+                k_left = v;
+                t += 1;
+            }
         }
     }
 }
@@ -161,6 +181,46 @@ mod tests {
         let k1 = solve_pde(&[0.1, 0.1, 0.1, 0.1], 2, 2, 0, 0);
         let k2 = solve_pde(&[0.2, 0.2, 0.2, 0.2], 2, 2, 0, 0);
         assert!(k2 > k1);
+    }
+
+    /// The shipped dyadic-run coefficient hoist must be bit-identical to
+    /// the historical per-refined-cell form (same expressions on the same
+    /// inputs, computed once per 2^λ2 run instead of per cell).
+    #[test]
+    fn dyadic_run_hoist_bitmatches_per_cell_form() {
+        fn per_cell_reference(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> f64 {
+            let rows = m << lam1;
+            let cols = n << lam2;
+            let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+            let mut prev = vec![1.0; cols + 1];
+            let mut cur = vec![1.0; cols + 1];
+            for s in 0..rows {
+                let drow = &delta[(s >> lam1) * n..(s >> lam1) * n + n];
+                cur[0] = 1.0;
+                let mut k_left = 1.0;
+                for t in 0..cols {
+                    let p = drow[t >> lam2] * scale;
+                    let p2 = p * p * (1.0 / 12.0);
+                    let a = 1.0 + 0.5 * p + p2;
+                    let b = 1.0 - p2;
+                    let v = (k_left + prev[t + 1]) * a - prev[t] * b;
+                    cur[t + 1] = v;
+                    k_left = v;
+                }
+                std::mem::swap(&mut prev, &mut cur);
+            }
+            prev[cols]
+        }
+        check("run-hoisted == per-cell", 25, |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.usize_in(1, 12);
+            let lam1 = g.usize_in(0, 3) as u32;
+            let lam2 = g.usize_in(0, 3) as u32;
+            let delta: Vec<f64> = g.normal_vec(m * n).iter().map(|v| v * 0.3).collect();
+            let hoisted = solve_pde(&delta, m, n, lam1, lam2);
+            let reference = per_cell_reference(&delta, m, n, lam1, lam2);
+            assert_eq!(hoisted, reference, "m={m} n={n} λ=({lam1},{lam2})");
+        });
     }
 
     #[test]

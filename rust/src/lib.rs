@@ -29,7 +29,12 @@
 //! * [`sig`] — truncated signatures, log-signatures, streaming/batched
 //!   variants and exact vjps (plus the flat-slice convenience wrappers).
 //! * [`kernel`] — signature kernels via the Goursat PDE, Gram matrices,
-//!   MMD², kernel ridge regression and exact vjps.
+//!   MMD², kernel ridge regression and exact vjps. Gram production is
+//!   **lane-batched** ([`kernel::lanes`]): W ∈ {4, 8} same-shape pairs ride
+//!   one structure-of-arrays Goursat sweep (one stacked Δ GEMM per lane
+//!   group), bit-identical to the scalar path and overridable with
+//!   `PYSIGLIB_LANES` (`0` = scalar) — the schedule behind every exact
+//!   Gram/MMD²/KRR/corpus workload.
 //! * [`kernel::lowrank`] — **scaling beyond exact Grams**: the exact Gram
 //!   is O(n²·L²) in corpus size n; Nyström landmarks and random
 //!   truncated-signature features give explicit rank-r maps Φ with

@@ -143,6 +143,14 @@ fn corpus_command_runs_local_demo_and_validates_usage() {
     let mut lowrank: Vec<String> = base.iter().map(|s| s.to_string()).collect();
     lowrank.extend(["--rank".to_string(), "4".to_string()]);
     assert_eq!(pysiglib::cli::cli_main(&lowrank), 0);
+    // Lane/tile scheduling knobs: every width is bit-identical, so each
+    // demo run must succeed (including forced-scalar).
+    for lanes in ["0", "4", "8"] {
+        let mut with_lanes: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+        with_lanes.extend(["--lanes".to_string(), lanes.to_string()]);
+        with_lanes.extend(["--tile".to_string(), "4".to_string()]);
+        assert_eq!(pysiglib::cli::cli_main(&with_lanes), 0, "lanes={lanes}");
+    }
     // register/append need a server.
     let args: Vec<String> = ["corpus", "register"].iter().map(|s| s.to_string()).collect();
     assert_ne!(pysiglib::cli::cli_main(&args), 0);

@@ -408,3 +408,57 @@ fn warm_plans_allocate_nothing_for_sig_and_kernel_and_vjp_inputs() {
     drop(kplan.execute_pair(&pb, &yb).unwrap());
     assert_eq!(kplan.allocations(), warm, "kernel plan steady state");
 }
+
+/// The lane-batched Gram producers reach the same zero-allocation steady
+/// state for every lane width: worker scratch is checked out of the arena
+/// at per-batch maxima the dispatcher's per-row `ensure` never exceeds,
+/// and every width produces the identical values while doing it.
+#[test]
+fn warm_gram_and_mmd2_plans_allocate_nothing_at_any_lane_width() {
+    let mut rng = Rng::new(306);
+    let (b, l, d) = (12usize, 8usize, 2usize);
+    let x = rng.brownian_batch(b, l, d, 0.4);
+    let y = rng.brownian_batch(b, l, d, 0.4);
+    let xb = PathBatch::uniform(&x, b, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, b, l, d).unwrap();
+    // Options chosen to drift-proof the shared scratch-sizing arithmetic:
+    // dyadic_y exercises the interleaved-row formula, LeadLag the base
+    // block and transformed Δ dims.
+    for opts in [
+        KernelOptions::default().dyadic(1, 0),
+        KernelOptions::default().dyadic(0, 2),
+        KernelOptions::default().transform(pysiglib::transforms::Transform::LeadLag),
+    ] {
+        let mut reference: Option<Vec<f64>> = None;
+        for width in [0usize, 4, 8] {
+            let plan = Plan::compile_forward(OpSpec::Gram(opts), ShapeClass::uniform(d, l))
+                .unwrap()
+                .with_lane_width(width);
+            let r1 = plan.execute_pair(&xb, &yb).unwrap();
+            let first = r1.values().to_vec();
+            drop(r1); // buffers return to the arena before the warm measurement
+            let warm = plan.allocations();
+            let rec = plan.execute_pair(&xb, &yb).unwrap();
+            assert_eq!(rec.values(), &first[..], "repeat must be bit-identical");
+            drop(rec);
+            assert_eq!(
+                plan.allocations(),
+                warm,
+                "gram steady state (width={width}, opts={opts:?})"
+            );
+            match &reference {
+                None => reference = Some(first),
+                Some(r) => assert_eq!(&first, r, "width={width} must match scalar"),
+            }
+        }
+    }
+    let plan = Plan::compile_forward(
+        OpSpec::Mmd2(KernelOptions::default()),
+        ShapeClass::uniform(d, l),
+    )
+    .unwrap();
+    drop(plan.execute_pair(&xb, &yb).unwrap());
+    let warm = plan.allocations();
+    drop(plan.execute_pair(&xb, &yb).unwrap());
+    assert_eq!(plan.allocations(), warm, "mmd2 steady state");
+}

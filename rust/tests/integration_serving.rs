@@ -451,7 +451,10 @@ fn metrics_track_per_op_and_cache_counters_across_mixed_serving() {
     assert!(sig_hits >= 1, "repeat signature flushes hit the plan cache");
 
     // 2) Corpus lifecycle: register (op 7), cold query, warm query (op 9).
-    let corpus: Vec<Vec<f64>> = (0..5).map(|_| rng.brownian_path(6, d, 0.4)).collect();
+    // 12 equal-length paths: the self-Gram's tile rows hold a full W = 8
+    // lane group plus a scalar remainder, so the occupancy mirrors must
+    // move below.
+    let corpus: Vec<Vec<f64>> = (0..12).map(|_| rng.brownian_path(6, d, 0.4)).collect();
     let crefs: Vec<&[f64]> = corpus.iter().map(|p| p.as_slice()).collect();
     let id = client.register_corpus(&crefs, d).unwrap().unwrap();
     assert_eq!(m.op_count(7), crefs.len() as u64, "register counts its paths");
@@ -470,6 +473,24 @@ fn metrics_track_per_op_and_cache_counters_across_mixed_serving() {
     );
     assert_eq!(m.corpus_warm_hits_total.load(Ordering::Relaxed), 1);
     assert_eq!(m.op_count(9), 2 * qrefs.len() as u64);
+    // Tile/lane occupancy mirrors (satellite of the lane engine): the
+    // corpus self-Gram ran through the tile scheduler, its uniform-length
+    // rows packed full lane groups, and 12 % 8 columns fell to the scalar
+    // remainder. The sources are process-wide (sibling tests may add), so
+    // these are floor assertions — this test's own traffic guarantees each
+    // counter moved regardless of interleaving.
+    assert!(
+        m.tiles_executed_total.load(Ordering::Relaxed) > 0,
+        "corpus self-Gram must execute tiles"
+    );
+    assert!(
+        m.lane_groups_total.load(Ordering::Relaxed) > 0,
+        "uniform 12-path corpus must dispatch lane groups"
+    );
+    assert!(
+        m.lane_scalar_pairs_total.load(Ordering::Relaxed) > 0,
+        "12 % 8 columns per row must fall to the scalar remainder"
+    );
     // The corpus plan compiled once and was cache-hit on the re-query.
     assert!(m.plan_misses_total.load(Ordering::Relaxed) > sig_misses);
     assert!(m.plan_hits_total.load(Ordering::Relaxed) > sig_hits);
@@ -495,6 +516,8 @@ fn metrics_track_per_op_and_cache_counters_across_mixed_serving() {
     let s = m.summary();
     assert!(s.contains("corpus_warm="), "{s}");
     assert!(s.contains("op9="), "{s}");
+    assert!(s.contains("lane_groups="), "{s}");
+    assert!(s.contains("tiles="), "{s}");
 }
 
 /// A malformed ragged frame (lengths disagreeing with the payload) errors

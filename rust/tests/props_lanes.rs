@@ -1,0 +1,193 @@
+//! Lane-engine bit-identity properties (the tentpole acceptance surface):
+//! lane-batched Gram / MMD² / corpus results must equal the scalar path
+//! **bit for bit** — for every lane width, over uniform and ragged batches,
+//! with and without the plan cache. Lane batching is pure schedule: each
+//! lane of a group runs the scalar solver's FP sequence on the scalar Δ
+//! values, so any difference at all is a bug.
+
+use pysiglib::corpus::{CorpusRegistry, TileScheduler};
+use pysiglib::engine::{OpSpec, Plan, Session, ShapeClass};
+use pysiglib::kernel::{try_gram, try_mmd2, KernelOptions, SolverKind};
+use pysiglib::transforms::Transform;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+/// Ragged lengths with enough repeats that W = 8 groups actually form.
+const RAGGED_X: [usize; 10] = [6, 9, 6, 6, 9, 6, 6, 6, 1, 6];
+const RAGGED_Y: [usize; 13] = [5, 5, 8, 5, 5, 5, 8, 5, 5, 5, 5, 1, 5];
+
+fn ragged(rng: &mut Rng, lens: &[usize], d: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut data = Vec::new();
+    for &l in lens {
+        data.extend(rng.brownian_path(l, d, 0.4));
+    }
+    (data, lens.to_vec())
+}
+
+fn opts_matrix() -> Vec<KernelOptions> {
+    vec![
+        KernelOptions::default(),
+        KernelOptions::default().dyadic(1, 2),
+        KernelOptions::default().dyadic(2, 0),
+        KernelOptions::default().transform(Transform::TimeAug),
+        KernelOptions::default().transform(Transform::LeadLag),
+        KernelOptions::default().serial(),
+    ]
+}
+
+/// Gram plans: widths 4 and 8 must reproduce the scalar plan bitwise, on
+/// uniform and ragged pairs, across options.
+#[test]
+fn gram_plans_bitmatch_scalar_for_every_width() {
+    let mut rng = Rng::new(920);
+    let d = 2;
+    let xu = rng.brownian_batch(13, 7, d, 0.4);
+    let yu = rng.brownian_batch(11, 6, d, 0.4);
+    let (xr_data, xr_lens) = ragged(&mut rng, &RAGGED_X, d);
+    let (yr_data, yr_lens) = ragged(&mut rng, &RAGGED_Y, d);
+    let xub = PathBatch::uniform(&xu, 13, 7, d).unwrap();
+    let yub = PathBatch::uniform(&yu, 11, 6, d).unwrap();
+    let xrb = PathBatch::ragged(&xr_data, &xr_lens, d).unwrap();
+    let yrb = PathBatch::ragged(&yr_data, &yr_lens, d).unwrap();
+    for (xb, yb, tag) in [(&xub, &yub, "uniform"), (&xrb, &yrb, "ragged")] {
+        for opts in opts_matrix() {
+            let shape = ShapeClass::for_pair(xb, yb);
+            let scalar = Plan::compile_forward(OpSpec::Gram(opts), shape)
+                .unwrap()
+                .with_lane_width(0);
+            let want = scalar.execute_pair(xb, yb).unwrap().into_values();
+            for width in [4usize, 8] {
+                let plan = Plan::compile_forward(OpSpec::Gram(opts), shape)
+                    .unwrap()
+                    .with_lane_width(width);
+                assert_eq!(plan.lane_width(), width);
+                let got = plan.execute_pair(xb, yb).unwrap().into_values();
+                assert_eq!(got, want, "{tag} width={width} opts={opts:?}");
+            }
+        }
+    }
+}
+
+/// MMD² (biased + unbiased) through lane-batched Gram producers must be
+/// bit-identical to the scalar plans, and the blocked solver must keep its
+/// scalar schedule regardless of the requested width.
+#[test]
+fn mmd2_plans_bitmatch_scalar_for_every_width() {
+    let mut rng = Rng::new(921);
+    let d = 3;
+    let x = rng.brownian_batch(10, 6, d, 0.4);
+    let y = rng.brownian_batch(9, 6, d, 0.5);
+    let xb = PathBatch::uniform(&x, 10, 6, d).unwrap();
+    let yb = PathBatch::uniform(&y, 9, 6, d).unwrap();
+    let shape = ShapeClass::for_pair(&xb, &yb);
+    for spec in [
+        OpSpec::Mmd2(KernelOptions::default()),
+        OpSpec::Mmd2Unbiased(KernelOptions::default()),
+        OpSpec::Mmd2(KernelOptions::default().dyadic(1, 1)),
+        OpSpec::Mmd2(KernelOptions::default().solver(SolverKind::Blocked)),
+    ] {
+        let scalar = Plan::compile_forward(spec, shape).unwrap().with_lane_width(0);
+        let want = scalar.execute_pair(&xb, &yb).unwrap().value();
+        for width in [4usize, 8] {
+            let plan = Plan::compile_forward(spec, shape).unwrap().with_lane_width(width);
+            let got = plan.execute_pair(&xb, &yb).unwrap().value();
+            assert_eq!(got, want, "spec={} width={width}", spec.name());
+        }
+    }
+}
+
+/// The plan cache serves the lane-batched fast path: cached (warm) plans,
+/// one-shot plans and the scalar schedule all agree bitwise, and the warm
+/// execution really is a cache hit.
+#[test]
+fn plan_cache_serves_lane_batched_values() {
+    let mut rng = Rng::new(922);
+    let d = 2;
+    let x = rng.brownian_batch(12, 8, d, 0.4);
+    let y = rng.brownian_batch(12, 8, d, 0.4);
+    let xb = PathBatch::uniform(&x, 12, 8, d).unwrap();
+    let yb = PathBatch::uniform(&y, 12, 8, d).unwrap();
+    let opts = KernelOptions::default();
+    let shape = ShapeClass::for_pair(&xb, &yb);
+    let session = Session::new();
+    let plan = session.forward_plan(OpSpec::Gram(opts), shape).unwrap();
+    let cold = plan.execute_pair(&xb, &yb).unwrap().into_values();
+    let warm_plan = session.forward_plan(OpSpec::Gram(opts), shape).unwrap();
+    let warm = warm_plan.execute_pair(&xb, &yb).unwrap().into_values();
+    assert!(session.cache_stats().hits >= 1, "second lookup must hit");
+    assert_eq!(cold, warm, "cached plan must reproduce its own values");
+    let scalar = Plan::compile_forward(OpSpec::Gram(opts), shape)
+        .unwrap()
+        .with_lane_width(0);
+    let want = scalar.execute_pair(&xb, &yb).unwrap().into_values();
+    assert_eq!(cold, want, "plan-cache path must equal the scalar schedule");
+    // The convenience wrapper (its own one-shot plan) agrees too.
+    assert_eq!(try_gram(&xb, &yb, &opts).unwrap(), want);
+}
+
+/// Corpus registry: tiled + lane-batched self-Grams, cross-Grams and MMD²
+/// queries are bit-identical across lane widths and tile sizes, uniform
+/// and ragged, exact match against the direct estimators.
+#[test]
+fn corpus_queries_bitmatch_across_lane_widths() {
+    let mut rng = Rng::new(923);
+    let d = 2;
+    let cu = rng.brownian_batch(12, 6, d, 0.3);
+    let qu = rng.brownian_batch(5, 7, d, 0.35);
+    let (cr_data, cr_lens) = ragged(&mut rng, &RAGGED_Y, d);
+    let (qr_data, qr_lens) = ragged(&mut rng, &[4usize, 6, 4, 4], d);
+    let cub = PathBatch::uniform(&cu, 12, 6, d).unwrap();
+    let qub = PathBatch::uniform(&qu, 5, 7, d).unwrap();
+    let crb = PathBatch::ragged(&cr_data, &cr_lens, d).unwrap();
+    let qrb = PathBatch::ragged(&qr_data, &qr_lens, d).unwrap();
+    let opts = KernelOptions::default();
+    for (cb, qb, tag) in [(&cub, &qub, "uniform"), (&crb, &qrb, "ragged")] {
+        let want_gram = try_gram(qb, cb, &opts).unwrap();
+        let want_mmd = try_mmd2(qb, cb, &opts).unwrap();
+        for tile in [3usize, 16] {
+            for width in [0usize, 4, 8] {
+                let reg = CorpusRegistry::with_tiles(
+                    TileScheduler::with_tile(tile).with_lanes(width),
+                );
+                let id = reg.register(cb).unwrap();
+                let gram = reg.gram_query(id, qb, &opts, None).unwrap();
+                assert_eq!(gram, want_gram, "{tag} tile={tile} width={width}");
+                let cold = reg.mmd2_query(id, qb, &opts, None).unwrap();
+                let warm = reg.mmd2_query(id, qb, &opts, None).unwrap();
+                assert_eq!(cold, want_mmd, "{tag} tile={tile} width={width}");
+                assert_eq!(cold, warm, "warm re-query must be bit-identical");
+            }
+        }
+    }
+}
+
+/// Append-then-query stays bit-identical to a from-scratch registration
+/// when the incremental strips are lane-batched.
+#[test]
+fn lane_batched_append_matches_from_scratch() {
+    let mut rng = Rng::new(924);
+    let d = 2;
+    let (l, n0, k) = (6usize, 9usize, 4usize);
+    let part1 = rng.brownian_batch(n0, l, d, 0.3);
+    let part2 = rng.brownian_batch(k, l, d, 0.3);
+    let q = rng.brownian_batch(3, l, d, 0.4);
+    let p1 = PathBatch::uniform(&part1, n0, l, d).unwrap();
+    let p2 = PathBatch::uniform(&part2, k, l, d).unwrap();
+    let qb = PathBatch::uniform(&q, 3, l, d).unwrap();
+    let mut combined = part1.clone();
+    combined.extend_from_slice(&part2);
+    let cb = PathBatch::uniform(&combined, n0 + k, l, d).unwrap();
+    let opts = KernelOptions::default();
+    for width in [0usize, 4, 8] {
+        let tiles = TileScheduler::with_tile(4).with_lanes(width);
+        let reg = CorpusRegistry::with_tiles(tiles);
+        let id = reg.register(&p1).unwrap();
+        reg.mmd2_query(id, &qb, &opts, None).unwrap(); // warm the K_cc cache
+        reg.append(id, &p2).unwrap();
+        let appended = reg.mmd2_query(id, &qb, &opts, None).unwrap();
+        let scratch = CorpusRegistry::with_tiles(tiles);
+        let sid = scratch.register(&cb).unwrap();
+        let fresh = scratch.mmd2_query(sid, &qb, &opts, None).unwrap();
+        assert_eq!(appended, fresh, "width={width}");
+    }
+}
