@@ -14,7 +14,7 @@ use pysiglib::kernel::{
 };
 use pysiglib::sig::{batch_signature, SigMethod, SigOptions};
 use pysiglib::transforms::Transform;
-use pysiglib::util::pool::parallel_for;
+use pysiglib::util::pool::{parallel_for, set_thread_override};
 use pysiglib::util::rng::Rng;
 
 fn main() {
@@ -211,16 +211,14 @@ fn main() {
             } else {
                 format!("threads/{threads}")
             };
-            if threads == 0 {
-                std::env::remove_var("PYSIGLIB_THREADS");
-            } else {
-                std::env::set_var("PYSIGLIB_THREADS", threads.to_string());
-            }
+            // Explicit override, not set_var: env knobs are read once per
+            // process and mutating the environment races nothing out of it.
+            set_thread_override((threads > 0).then_some(threads));
             suite.time(&label, runs, || {
                 std::hint::black_box(batch_signature(&paths, b, l, d, &SigOptions::new(n)));
             });
         }
-        std::env::remove_var("PYSIGLIB_THREADS");
+        set_thread_override(None);
     }
 
     println!("\nratios:");

@@ -1,0 +1,374 @@
+//! A scrubbing lexer for Rust source: comments and string/char literals are
+//! blanked to spaces (newlines preserved), so byte offsets and line numbers
+//! in the scrubbed text match the original exactly and rules can scan for
+//! tokens without tripping on prose. The pass also collects
+//! `// siglint: allow(<rule>) -- <reason>` annotations and the spans of
+//! `#[cfg(test)]` / `#[test]` items.
+
+/// One parsed `siglint: allow` annotation.
+#[derive(Clone, Debug)]
+pub struct AllowSite {
+    /// Rule name inside `allow(...)`.
+    pub rule: String,
+    /// The justification after `--` (never empty; a missing reason is a
+    /// [`BadAllow`] instead).
+    pub reason: String,
+    /// 1-based line the annotation suppresses: the comment's own line for a
+    /// trailing comment, else the next line with real code.
+    pub target_line: usize,
+    /// 1-based line of the comment itself (for unused-allow reporting).
+    pub comment_line: usize,
+}
+
+/// A `siglint:` comment that does not parse as a well-formed allow.
+#[derive(Clone, Debug)]
+pub struct BadAllow {
+    /// 1-based line of the malformed comment.
+    pub line: usize,
+    /// What is wrong with it.
+    pub message: String,
+}
+
+/// Scrub result for one file.
+pub struct Scrubbed {
+    /// Source with comments and literal contents replaced by spaces;
+    /// identical length and line structure to the input.
+    pub code: String,
+    /// Byte offset of the start of each line (index 0 = line 1).
+    pub line_starts: Vec<usize>,
+    /// Well-formed allow annotations.
+    pub allows: Vec<AllowSite>,
+    /// Malformed `siglint:` comments.
+    pub bad_allows: Vec<BadAllow>,
+    /// Byte spans (start, end) of `#[cfg(test)]` / `#[test]` items.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl Scrubbed {
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Whether an offset falls inside test-only code.
+    pub fn in_test(&self, offset: usize) -> bool {
+        self.test_spans
+            .iter()
+            .any(|&(s, e)| offset >= s && offset < e)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Scrub `src` and collect annotations and test spans.
+pub fn scrub(src: &str) -> Scrubbed {
+    let bytes = src.as_bytes();
+    let mut out = bytes.to_vec();
+    let mut comments: Vec<(usize, String)> = Vec::new(); // (start offset, text)
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'/' if bytes.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    out[i] = b' ';
+                    i += 1;
+                }
+                comments.push((start, src[start..i].to_string()));
+            }
+            b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1;
+                out[i] = b' ';
+                out[i + 1] = b' ';
+                i += 2;
+                while i < bytes.len() && depth > 0 {
+                    if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else {
+                        if bytes[i] != b'\n' {
+                            out[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'r' | b'b' if is_raw_string_start(bytes, i) && (i == 0 || !is_ident(bytes[i - 1])) => {
+                // r"...", r#"..."#, br"...", b"..." handled below for plain b.
+                let (hashes, quote_at) = raw_string_shape(bytes, i);
+                let mut j = i;
+                while j < quote_at + 1 {
+                    out[j] = b' ';
+                    j += 1;
+                }
+                i = quote_at + 1;
+                // Scan to closing quote followed by `hashes` '#'s.
+                'raw: while i < bytes.len() {
+                    if bytes[i] == b'"' {
+                        let mut k = 0;
+                        while k < hashes && bytes.get(i + 1 + k) == Some(&b'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for b in out.iter_mut().take(i + 1 + hashes).skip(i) {
+                                *b = b' ';
+                            }
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    if bytes[i] != b'\n' {
+                        out[i] = b' ';
+                    }
+                    i += 1;
+                }
+            }
+            b'"' => {
+                out[i] = b' ';
+                i += 1;
+                while i < bytes.len() {
+                    if bytes[i] == b'\\' {
+                        out[i] = b' ';
+                        if i + 1 < bytes.len() && bytes[i + 1] != b'\n' {
+                            out[i + 1] = b' ';
+                        }
+                        i += 2;
+                    } else if bytes[i] == b'"' {
+                        out[i] = b' ';
+                        i += 1;
+                        break;
+                    } else {
+                        if bytes[i] != b'\n' {
+                            out[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'\'' => {
+                // Char literal vs lifetime: a lifetime is `'ident` not
+                // followed by a closing quote; a char literal closes within
+                // a few bytes (`'a'`, `'\n'`, `'\u{1F600}'`).
+                if let Some(close) = char_literal_end(bytes, i) {
+                    for b in out.iter_mut().take(close + 1).skip(i) {
+                        *b = b' ';
+                    }
+                    i = close + 1;
+                } else {
+                    i += 1; // lifetime; leave as-is
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    let code = String::from_utf8_lossy(&out).into_owned();
+    let mut line_starts = vec![0usize];
+    for (o, b) in code.bytes().enumerate() {
+        if b == b'\n' {
+            line_starts.push(o + 1);
+        }
+    }
+    let (allows, bad_allows) = parse_allows(&code, &line_starts, &comments);
+    let test_spans = find_test_spans(&code);
+    Scrubbed {
+        code,
+        line_starts,
+        allows,
+        bad_allows,
+        test_spans,
+    }
+}
+
+fn is_raw_string_start(bytes: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if bytes.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if bytes.get(j) != Some(&b'r') {
+        return false;
+    }
+    j += 1;
+    while bytes.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    bytes.get(j) == Some(&b'"')
+}
+
+/// For a raw string at `i`, return (number of hashes, offset of the opening
+/// quote).
+fn raw_string_shape(bytes: &[u8], i: usize) -> (usize, usize) {
+    let mut j = i;
+    if bytes.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    j += 1; // the 'r'
+    let mut hashes = 0;
+    while bytes.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (hashes, j)
+}
+
+/// If a `'` at `i` opens a char literal, return the offset of its closing
+/// quote; `None` for lifetimes.
+fn char_literal_end(bytes: &[u8], i: usize) -> Option<usize> {
+    let next = *bytes.get(i + 1)?;
+    if next == b'\\' {
+        // Escaped char: find the next unescaped quote within a small window.
+        let mut j = i + 2;
+        while j < bytes.len() && j < i + 12 {
+            if bytes[j] == b'\'' {
+                return Some(j);
+            }
+            j += 1;
+        }
+        return None;
+    }
+    // Plain char: exactly `'x'`; anything longer is a lifetime.
+    if bytes.get(i + 2) == Some(&b'\'') && next != b'\'' {
+        return Some(i + 2);
+    }
+    None
+}
+
+/// Parse `siglint:` comments into allow sites / malformed reports.
+fn parse_allows(
+    code: &str,
+    line_starts: &[usize],
+    comments: &[(usize, String)],
+) -> (Vec<AllowSite>, Vec<BadAllow>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for (start, text) in comments {
+        let body = text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("siglint:") else {
+            continue;
+        };
+        let line = match line_starts.binary_search(start) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        };
+        let rest = rest.trim();
+        let Some(args) = rest.strip_prefix("allow(") else {
+            bad.push(BadAllow {
+                line,
+                message: format!("expected `allow(<rule>) -- <reason>`, got `{rest}`"),
+            });
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            bad.push(BadAllow {
+                line,
+                message: "unclosed `allow(` annotation".to_string(),
+            });
+            continue;
+        };
+        let rule = args[..close].trim().to_string();
+        let tail = args[close + 1..].trim();
+        let Some(reason) = tail.strip_prefix("--") else {
+            bad.push(BadAllow {
+                line,
+                message: format!("allow({rule}) is missing a `-- <reason>` justification"),
+            });
+            continue;
+        };
+        let reason = reason.trim().to_string();
+        if reason.is_empty() {
+            bad.push(BadAllow {
+                line,
+                message: format!("allow({rule}) has an empty reason"),
+            });
+            continue;
+        }
+        // Trailing comment suppresses its own line; a standalone comment
+        // suppresses the next line with code (comments scrub to blanks, so
+        // stacked comment lines are skipped naturally).
+        let lstart = line_starts.get(line - 1).copied().unwrap_or(0);
+        let own_line_code = code[lstart..*start].trim();
+        let target_line = if !own_line_code.is_empty() {
+            line
+        } else {
+            next_code_line(code, line_starts, line)
+        };
+        allows.push(AllowSite {
+            rule,
+            reason,
+            target_line,
+            comment_line: line,
+        });
+    }
+    (allows, bad)
+}
+
+/// First line after `line` (1-based) with non-blank scrubbed content; falls
+/// back to `line` at end of file.
+fn next_code_line(code: &str, line_starts: &[usize], line: usize) -> usize {
+    let mut l = line + 1;
+    while let Some(&start) = line_starts.get(l - 1) {
+        let end = line_starts.get(l).copied().unwrap_or(code.len());
+        if !code[start..end].trim().is_empty() {
+            return l;
+        }
+        l += 1;
+    }
+    line
+}
+
+/// Spans of `#[cfg(test)]` and `#[test]` items: from the attribute to the
+/// close of the following brace block.
+fn find_test_spans(code: &str) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for marker in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(marker) {
+            let at = from + pos;
+            from = at + marker.len();
+            if let Some(end) = item_end(code, at + marker.len()) {
+                spans.push((at, end));
+            }
+        }
+    }
+    spans.sort_unstable();
+    spans
+}
+
+/// End of the item starting after an attribute: the matching `}` of the
+/// first `{` encountered (skipping nested attribute brackets).
+fn item_end(code: &str, start: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut i = start;
+    while i < bytes.len() && bytes[i] != b'{' {
+        if bytes[i] == b';' {
+            return Some(i + 1); // e.g. a test-gated `use` or macro line
+        }
+        i += 1;
+    }
+    let mut depth = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return Some(i + 1);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}

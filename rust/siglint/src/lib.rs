@@ -1,0 +1,286 @@
+//! siglint — repo-invariant static checker for pysiglib.
+//!
+//! A zero-dependency lint pass over `rust/src`, `rust/tests` and
+//! `rust/benches`: a scrubbing lexer blanks comments and literals (byte
+//! offsets preserved), then each named rule scans for the tokens it bans or
+//! requires. Findings are suppressible line-by-line with
+//!
+//! ```text
+//! // siglint: allow(<rule>) -- <reason>
+//! ```
+//!
+//! where the reason is mandatory and an allow that suppresses nothing is
+//! itself a finding (`unused_allow`), as is a malformed annotation
+//! (`allow_syntax`). Run as `cargo run -p siglint` from `rust/`; exit code
+//! 0 means the tree is clean.
+//!
+//! The library that siglint checks contains reviewed `unsafe` blocks; this
+//! crate forbids them outright, and its `no_unsafe` rule extends the same
+//! guarantee to the checked tree's tests and benches, which rustc's
+//! per-crate `#![forbid(unsafe_code)]` cannot reach from the library.
+
+#![forbid(unsafe_code)]
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::Path;
+
+/// One input file: crate-root-relative `/`-separated path plus contents.
+pub struct SourceFile {
+    pub path: String,
+    pub src: String,
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// The active rules: (name, what it enforces). Allow annotations may only
+/// name rules from this table; the `allow_syntax` / `unused_allow`
+/// meta-lints are not suppressible.
+pub const RULES: &[(&str, &str)] = &[
+    ("panic_freedom", "no unwrap/expect/panic!/unreachable!/bare indexing on the serving path"),
+    ("hot_path_alloc", "no allocation inside designated hot kernel/engine functions"),
+    ("env_discipline", "std::env reads only via the cached accessors in config.rs"),
+    ("atomics_hygiene", "every atomic Ordering classified; no Relaxed/strong mixes per cell"),
+    ("wire_exhaustive", "every Op variant handled in wire encode, decode and router dispatch"),
+    ("no_unsafe", "tests and benches stay unsafe-free (library unsafe is reviewed in-tree)"),
+];
+
+/// Lint a set of files; returns findings sorted by (path, line).
+pub fn lint(files: &[SourceFile]) -> Vec<Finding> {
+    let scrubbed: Vec<(&SourceFile, lexer::Scrubbed)> =
+        files.iter().map(|f| (f, lexer::scrub(&f.src))).collect();
+
+    let mut raw = Vec::new();
+    for (f, sc) in &scrubbed {
+        let ctx = rules::FileCtx {
+            path: &f.path,
+            scrubbed: sc,
+        };
+        rules::panic_freedom(&ctx, &mut raw);
+        rules::hot_path_alloc(&ctx, &mut raw);
+        rules::env_discipline(&ctx, &mut raw);
+        rules::atomics_hygiene(&ctx, &mut raw);
+        rules::no_unsafe(&ctx, &mut raw);
+    }
+    rules::wire_exhaustive(&scrubbed, &mut raw);
+
+    // Apply allows: a finding whose (rule, line) matches an allow in its
+    // file is suppressed, and the allow is marked used.
+    let mut used: Vec<Vec<bool>> = scrubbed
+        .iter()
+        .map(|(_, sc)| vec![false; sc.allows.len()])
+        .collect();
+    let mut findings = Vec::new();
+    for finding in raw {
+        let mut suppressed = false;
+        if let Some(idx) = scrubbed.iter().position(|(f, _)| f.path == finding.path) {
+            let (_, sc) = &scrubbed[idx];
+            for (ai, a) in sc.allows.iter().enumerate() {
+                if a.rule == finding.rule && a.target_line == finding.line {
+                    if let Some(slot) = used[idx].get_mut(ai) {
+                        *slot = true;
+                    }
+                    suppressed = true;
+                }
+            }
+        }
+        if !suppressed {
+            findings.push(finding);
+        }
+    }
+
+    // Meta-lints: malformed annotations, unknown rule names, unused allows.
+    for (idx, (f, sc)) in scrubbed.iter().enumerate() {
+        for b in &sc.bad_allows {
+            findings.push(Finding {
+                path: f.path.clone(),
+                line: b.line,
+                rule: "allow_syntax",
+                message: b.message.clone(),
+            });
+        }
+        for (ai, a) in sc.allows.iter().enumerate() {
+            if !RULES.iter().any(|(n, _)| *n == a.rule) {
+                findings.push(Finding {
+                    path: f.path.clone(),
+                    line: a.comment_line,
+                    rule: "allow_syntax",
+                    message: format!("allow({}) names an unknown rule", a.rule),
+                });
+            } else if !used[idx].get(ai).copied().unwrap_or(true) {
+                findings.push(Finding {
+                    path: f.path.clone(),
+                    line: a.comment_line,
+                    rule: "unused_allow",
+                    message: format!(
+                        "allow({}) suppresses nothing on line {} — remove it",
+                        a.rule, a.target_line
+                    ),
+                });
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| (a.path.as_str(), a.line).cmp(&(b.path.as_str(), b.line)));
+    findings
+}
+
+/// Collect `.rs` files under `<root>/src`, `<root>/tests`, `<root>/benches`
+/// with crate-root-relative `/`-separated paths.
+pub fn collect_files(root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    for top in ["src", "tests", "benches"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            walk(&dir, top, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(out)
+}
+
+fn walk(dir: &Path, rel: &str, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, &format!("{rel}/{name}"), out)?;
+        } else if name.ends_with(".rs") {
+            out.push(SourceFile {
+                path: format!("{rel}/{name}"),
+                src: std::fs::read_to_string(&path)?,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(path: &str, src: &str) -> Vec<Finding> {
+        lint(&[SourceFile {
+            path: path.to_string(),
+            src: src.to_string(),
+        }])
+    }
+
+    #[test]
+    fn scrub_preserves_offsets_and_blanks_literals() {
+        let src = "let s = \"unwrap() inside a string\"; // .unwrap() in a comment\n";
+        let sc = lexer::scrub(src);
+        assert_eq!(sc.code.len(), src.len());
+        assert!(!sc.code.contains("unwrap"));
+        assert_eq!(sc.line_of(0), 1);
+    }
+
+    #[test]
+    fn scrub_distinguishes_lifetimes_from_chars() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }\n";
+        let sc = lexer::scrub(src);
+        assert!(sc.code.contains("'a str"), "lifetime must survive");
+        assert!(!sc.code.contains("'x'"), "char literal must be blanked");
+    }
+
+    #[test]
+    fn raw_strings_and_nested_comments_are_blanked() {
+        let src = "let r = r#\"panic!(\"no\")\"#; /* outer /* panic! */ still comment */ let x = 1;\n";
+        let sc = lexer::scrub(src);
+        assert!(!sc.code.contains("panic"));
+        assert!(sc.code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn trailing_allow_suppresses_its_own_line() {
+        let f = one(
+            "src/coordinator/demo.rs",
+            "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // siglint: allow(panic_freedom) -- demo\n}\n",
+        );
+        assert!(f.is_empty(), "expected clean, got {f:?}");
+    }
+
+    #[test]
+    fn standalone_allow_suppresses_next_code_line() {
+        let f = one(
+            "src/coordinator/demo.rs",
+            "fn f(x: Option<u32>) -> u32 {\n    // siglint: allow(panic_freedom) -- demo\n    // (another comment line in between)\n    x.unwrap()\n}\n",
+        );
+        assert!(f.is_empty(), "expected clean, got {f:?}");
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let f = one(
+            "src/coordinator/demo.rs",
+            "// siglint: allow(panic_freedom)\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        assert!(f.iter().any(|x| x.rule == "allow_syntax"), "{f:?}");
+        // The unwrap itself is still reported: a reasonless allow suppresses
+        // nothing.
+        assert!(f.iter().any(|x| x.rule == "panic_freedom"), "{f:?}");
+    }
+
+    #[test]
+    fn allow_for_unknown_rule_is_a_finding() {
+        let f = one(
+            "src/lib.rs",
+            "// siglint: allow(no_such_rule) -- because\nfn f() {}\n",
+        );
+        assert!(f.iter().any(|x| x.rule == "allow_syntax"), "{f:?}");
+    }
+
+    #[test]
+    fn unused_allow_is_a_finding() {
+        let f = one(
+            "src/coordinator/demo.rs",
+            "// siglint: allow(panic_freedom) -- nothing here actually panics\nfn f() -> u32 { 7 }\n",
+        );
+        assert!(f.iter().any(|x| x.rule == "unused_allow"), "{f:?}");
+    }
+
+    #[test]
+    fn test_code_is_exempt_from_panic_freedom() {
+        let f = one(
+            "src/coordinator/demo.rs",
+            "fn ok() -> u32 { 7 }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n",
+        );
+        assert!(f.is_empty(), "expected clean, got {f:?}");
+    }
+
+    #[test]
+    fn slice_type_is_not_indexing() {
+        let f = one(
+            "src/coordinator/demo.rs",
+            "fn f(x: &mut [f64], y: &[u8]) -> usize { x.len() + y.len() }\n",
+        );
+        assert!(f.is_empty(), "expected clean, got {f:?}");
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let f = one(
+            "src/coordinator/demo.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\nfn g(r: Result<u32, String>) -> u32 { r.unwrap_or_else(|_| 1) }\n",
+        );
+        assert!(f.is_empty(), "expected clean, got {f:?}");
+    }
+}

@@ -1,0 +1,45 @@
+//! CLI: lint the pysiglib tree and exit non-zero on findings.
+//!
+//! Usage: `cargo run -p siglint [--] [crate-root]`. The default root is the
+//! parent of this crate's manifest directory, i.e. `rust/`.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(".."));
+    let files = match siglint::collect_files(&root) {
+        Ok(files) => files,
+        Err(e) => {
+            eprintln!("siglint: cannot read {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if files.is_empty() {
+        eprintln!(
+            "siglint: no .rs files under {} (expected src/, tests/, benches/)",
+            root.display()
+        );
+        return ExitCode::FAILURE;
+    }
+    let findings = siglint::lint(&files);
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!(
+            "siglint: clean — {} files checked against {} rules",
+            files.len(),
+            siglint::RULES.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!("siglint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,638 @@
+//! The rules. Each is a named, individually-testable check over scrubbed
+//! source (see [`crate::lexer`]); findings carry the rule name so the
+//! `// siglint: allow(<rule>) -- <reason>` escape hatch can suppress them
+//! line by line.
+
+use crate::lexer::Scrubbed;
+use crate::{Finding, SourceFile};
+
+/// Per-file context handed to rules.
+pub struct FileCtx<'a> {
+    /// Path relative to the crate root, `/`-separated (e.g.
+    /// `src/coordinator/wire.rs`).
+    pub path: &'a str,
+    pub scrubbed: &'a Scrubbed,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of `needle` in `code` with non-ident bytes on both sides.
+fn ident_positions(code: &str, needle: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(needle) {
+        let at = from + pos;
+        from = at + 1;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let after = at + needle.len();
+        let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Next non-whitespace byte at or after `i`.
+fn next_nonspace(bytes: &[u8], mut i: usize) -> Option<(usize, u8)> {
+    while i < bytes.len() {
+        if !bytes[i].is_ascii_whitespace() {
+            return Some((i, bytes[i]));
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Previous non-whitespace byte strictly before `i`.
+fn prev_nonspace(bytes: &[u8], i: usize) -> Option<(usize, u8)> {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if !bytes[j].is_ascii_whitespace() {
+            return Some((j, bytes[j]));
+        }
+    }
+    None
+}
+
+/// The word (maximal ident run) ending at byte `end` inclusive.
+fn word_ending_at(bytes: &[u8], end: usize) -> &[u8] {
+    let mut s = end + 1;
+    while s > 0 && is_ident(bytes[s - 1]) {
+        s -= 1;
+    }
+    &bytes[s..end + 1]
+}
+
+/// Method-call sites: ident `name` preceded by `.` and followed by `(`.
+fn method_calls(code: &str, name: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    ident_positions(code, name)
+        .into_iter()
+        .filter(|&at| {
+            let dot = matches!(prev_nonspace(bytes, at), Some((_, b'.')));
+            let call = matches!(next_nonspace(bytes, at + name.len()), Some((_, b'(')));
+            dot && call
+        })
+        .collect()
+}
+
+/// Macro invocation sites: ident `name` immediately followed by `!`.
+fn macro_calls(code: &str, name: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    ident_positions(code, name)
+        .into_iter()
+        .filter(|&at| bytes.get(at + name.len()) == Some(&b'!'))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Rule: panic_freedom
+// ---------------------------------------------------------------------------
+
+/// Files on the serving request path that must not contain a reachable
+/// panic in non-test code.
+fn panic_scope(path: &str) -> bool {
+    path.starts_with("src/coordinator/") || path == "src/corpus/registry.rs"
+}
+
+/// Keywords that can legally precede `[` without it being an index
+/// expression (`&mut [f64]`, `as [u8; 4]`, `for x in [..]`, ...).
+const NON_INDEX_WORDS: &[&[u8]] = &[
+    b"mut", b"ref", b"dyn", b"as", b"in", b"return", b"break", b"if", b"else", b"match", b"move",
+    b"let", b"const", b"static", b"impl", b"for", b"while", b"loop", b"where", b"unsafe", b"await",
+    b"yield", b"use", b"pub", b"fn", b"enum", b"struct", b"trait", b"type", b"mod", b"crate",
+    b"box", b"continue",
+];
+
+/// `[` positions that look like index expressions: the previous non-space
+/// byte ends an ident (that is not a keyword) or is `)` / `]`.
+fn index_sites(code: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    for (at, b) in bytes.iter().enumerate() {
+        if *b != b'[' {
+            continue;
+        }
+        let Some((p, pb)) = prev_nonspace(bytes, at) else {
+            continue;
+        };
+        let indexable = if pb == b')' || pb == b']' {
+            true
+        } else if is_ident(pb) {
+            !NON_INDEX_WORDS.contains(&word_ending_at(bytes, p))
+        } else {
+            false
+        };
+        if indexable {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// No `unwrap`/`expect`/`panic!`/`unreachable!`/bare slice indexing in
+/// non-test code on the serving request path.
+pub fn panic_freedom(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
+    if !panic_scope(ctx.path) {
+        return;
+    }
+    let sc = ctx.scrubbed;
+    let mut push = |at: usize, what: &str| {
+        if !sc.in_test(at) {
+            findings.push(Finding {
+                path: ctx.path.to_string(),
+                line: sc.line_of(at),
+                rule: "panic_freedom",
+                message: format!("{what} on the request path — return a typed SigError instead"),
+            });
+        }
+    };
+    for at in method_calls(&sc.code, "unwrap") {
+        push(at, "`.unwrap()`");
+    }
+    for at in method_calls(&sc.code, "expect") {
+        push(at, "`.expect()`");
+    }
+    for at in macro_calls(&sc.code, "panic") {
+        push(at, "`panic!`");
+    }
+    for at in macro_calls(&sc.code, "unreachable") {
+        push(at, "`unreachable!`");
+    }
+    for at in index_sites(&sc.code) {
+        push(at, "bare slice/array indexing");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: hot_path_alloc
+// ---------------------------------------------------------------------------
+
+/// (file, functions) whose bodies form the zero-allocation steady state:
+/// the lane sweeps, the `_into` solver variants, and the engine's Gram row
+/// strips. The static twin of the workspace arena's runtime assertion.
+const HOT_FNS: &[(&str, &[&str])] = &[
+    (
+        "src/kernel/lanes.rs",
+        &[
+            "solve_pde_lanes",
+            "delta_block_lanes",
+            "solve_gram_row",
+            "solve_group_into",
+            "scalar_entry",
+        ],
+    ),
+    ("src/kernel/solver.rs", &["solve_pde_with", "solve_pde_grid_into"]),
+    ("src/engine/mod.rs", &["gram_values_into"]),
+];
+
+/// Body span of `fn name` (from its `{` to the matching `}`), if present.
+fn fn_body(code: &str, name: &str) -> Option<(usize, usize)> {
+    let bytes = code.as_bytes();
+    for at in ident_positions(code, name) {
+        // Require the `fn` keyword shortly before (skipping generics is not
+        // needed: the name directly follows `fn `).
+        let Some((p, _)) = prev_nonspace(bytes, at) else {
+            continue;
+        };
+        if p < 1 || word_ending_at(bytes, p) != b"fn" {
+            continue;
+        }
+        // Find the opening brace at angle/paren depth 0.
+        // `[` counts too: `[f64; W]` in a signature must not read as the
+        // `;` of a bodyless declaration.
+        let mut i = at + name.len();
+        let mut paren = 0i32;
+        let mut angle = 0i32;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'(' | b'[' => paren += 1,
+                b')' | b']' => paren -= 1,
+                b'<' => angle += 1,
+                b'>' if angle > 0 => angle -= 1,
+                b'{' if paren == 0 => break,
+                b';' if paren == 0 => break,
+                _ => {}
+            }
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'{' {
+            continue;
+        }
+        let start = i;
+        let mut depth = 0usize;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((start, i + 1));
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    None
+}
+
+/// No allocation (`Vec::new`/`vec!`/`to_vec`/`collect`/`Box::new`/`clone`)
+/// inside the designated hot functions.
+pub fn hot_path_alloc(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
+    let Some((_, fns)) = HOT_FNS.iter().find(|(p, _)| *p == ctx.path) else {
+        return;
+    };
+    let sc = ctx.scrubbed;
+    for name in *fns {
+        let Some((start, end)) = fn_body(&sc.code, name) else {
+            findings.push(Finding {
+                path: ctx.path.to_string(),
+                line: 1,
+                rule: "hot_path_alloc",
+                message: format!(
+                    "hot function `{name}` not found — update the HOT_FNS table in siglint"
+                ),
+            });
+            continue;
+        };
+        let body = &sc.code[start..end];
+        let mut push = |off: usize, what: &str| {
+            findings.push(Finding {
+                path: ctx.path.to_string(),
+                line: sc.line_of(start + off),
+                rule: "hot_path_alloc",
+                message: format!("{what} inside hot function `{name}` — use the workspace arena"),
+            });
+        };
+        for at in ident_positions(body, "Vec") {
+            if body[at..].starts_with("Vec::new") || body[at..].starts_with("Vec :: new") {
+                push(at, "`Vec::new`");
+            }
+        }
+        for at in ident_positions(body, "Box") {
+            if body[at..].starts_with("Box::new") || body[at..].starts_with("Box :: new") {
+                push(at, "`Box::new`");
+            }
+        }
+        for at in macro_calls(body, "vec") {
+            push(at, "`vec!`");
+        }
+        for at in method_calls(body, "to_vec") {
+            push(at, "`.to_vec()`");
+        }
+        for at in method_calls(body, "clone") {
+            push(at, "`.clone()`");
+        }
+        for at in ident_positions(body, "collect") {
+            // `.collect()` or `.collect::<..>()`.
+            let bytes = body.as_bytes();
+            let dot = matches!(prev_nonspace(bytes, at), Some((_, b'.')));
+            let next = next_nonspace(bytes, at + "collect".len()).map(|(_, b)| b);
+            if dot && matches!(next, Some(b'(') | Some(b':')) {
+                push(at, "`.collect()`");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: env_discipline
+// ---------------------------------------------------------------------------
+
+/// `std::env::var` only in `src/config.rs` — every runtime knob goes
+/// through the read-once cached accessors there.
+pub fn env_discipline(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
+    if ctx.path == "src/config.rs" {
+        return;
+    }
+    let sc = ctx.scrubbed;
+    for needle in ["env::var", "env::vars", "env::set_var", "env::remove_var"] {
+        let mut from = 0;
+        while let Some(pos) = sc.code[from..].find(needle) {
+            let at = from + pos;
+            from = at + needle.len();
+            let bytes = sc.code.as_bytes();
+            let after = at + needle.len();
+            if after < bytes.len() && is_ident(bytes[after]) {
+                continue; // e.g. `env::vars` matched inside `env::vars_os`
+            }
+            findings.push(Finding {
+                path: ctx.path.to_string(),
+                line: sc.line_of(at),
+                rule: "env_discipline",
+                message: format!(
+                    "`{needle}` outside config.rs — use the read-once accessors in \
+                     `config::env` (or `pool::set_thread_override` in tests/benches)"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: atomics_hygiene
+// ---------------------------------------------------------------------------
+
+const ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// `std::cmp::Ordering` variants — same type name, nothing to do with
+/// atomics; skipped silently.
+const CMP_ORDERINGS: &[&str] = &["Less", "Equal", "Greater"];
+
+/// Methods that legitimately take two orderings of different strengths.
+const MIXED_OK_METHODS: &[&str] = &["compare_exchange", "compare_exchange_weak", "fetch_update"];
+
+/// One `Ordering::X` use: receiver chain, method, variant.
+struct OrderingUse {
+    receiver: String,
+    method: String,
+    variant: &'static str,
+    offset: usize,
+}
+
+/// Extract the call context of each `Ordering::` use in a file.
+fn ordering_uses(code: &str) -> (Vec<OrderingUse>, Vec<usize>) {
+    let bytes = code.as_bytes();
+    let mut uses = Vec::new();
+    let mut unknown = Vec::new();
+    for at in ident_positions(code, "Ordering") {
+        let rest = &code[at..];
+        if !rest[8..].starts_with("::") {
+            continue;
+        }
+        let Some(variant) = ORDERINGS
+            .iter()
+            .find(|v| {
+                rest[10..].starts_with(**v)
+                    && !bytes.get(at + 10 + v.len()).copied().is_some_and(is_ident)
+            })
+            .copied()
+        else {
+            if !CMP_ORDERINGS.iter().any(|v| rest[10..].starts_with(*v)) {
+                unknown.push(at);
+            }
+            continue;
+        };
+        // Walk back to the call's opening paren at reverse depth 0, then
+        // the method ident, then the receiver chain.
+        let mut depth = 0i32;
+        let mut j = at;
+        let mut open = None;
+        while j > 0 {
+            j -= 1;
+            match bytes[j] {
+                b')' | b']' => depth += 1,
+                b'(' | b'[' => {
+                    if depth == 0 {
+                        open = Some(j);
+                        break;
+                    }
+                    depth -= 1;
+                }
+                b';' | b'{' | b'}' => break,
+                _ => {}
+            }
+        }
+        let Some(open) = open else { continue };
+        let Some((m_end, mb)) = prev_nonspace(bytes, open) else {
+            continue;
+        };
+        if !is_ident(mb) {
+            continue;
+        }
+        let method = String::from_utf8_lossy(word_ending_at(bytes, m_end)).into_owned();
+        let m_start = m_end + 1 - method.len();
+        let receiver = match prev_nonspace(bytes, m_start) {
+            Some((d, b'.')) => {
+                let mut s = d;
+                while s > 0 {
+                    let c = bytes[s - 1];
+                    if is_ident(c) || c == b'.' || c == b':' {
+                        s -= 1;
+                    } else {
+                        break;
+                    }
+                }
+                code[s..d].trim().to_string()
+            }
+            _ => String::new(),
+        };
+        uses.push(OrderingUse {
+            receiver,
+            method,
+            variant,
+            offset: at,
+        });
+    }
+    (uses, unknown)
+}
+
+/// Every `Ordering::` use classified; a receiver that mixes `Relaxed` with
+/// a stronger ordering (outside compare-exchange-style calls) is flagged —
+/// a monotone counter and a control flag must not share a cell.
+pub fn atomics_hygiene(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
+    let sc = ctx.scrubbed;
+    let (uses, unknown) = ordering_uses(&sc.code);
+    for at in unknown {
+        findings.push(Finding {
+            path: ctx.path.to_string(),
+            line: sc.line_of(at),
+            rule: "atomics_hygiene",
+            message: "unrecognised `Ordering::` variant — siglint cannot classify it".to_string(),
+        });
+    }
+    // Group by receiver — (recv, saw_relaxed, saw_strong, first_offset) —
+    // and flag receivers that mix Relaxed with stronger orderings.
+    let mut receivers: Vec<(&str, bool, bool, usize)> = Vec::new();
+    for u in &uses {
+        if u.receiver.is_empty() || MIXED_OK_METHODS.contains(&u.method.as_str()) {
+            continue;
+        }
+        let relaxed = u.variant == "Relaxed";
+        match receivers.iter_mut().find(|(r, ..)| *r == u.receiver) {
+            Some(entry) => {
+                entry.1 |= relaxed;
+                entry.2 |= !relaxed;
+            }
+            None => receivers.push((&u.receiver, relaxed, !relaxed, u.offset)),
+        }
+    }
+    for (recv, relaxed, strong, offset) in receivers {
+        if relaxed && strong {
+            findings.push(Finding {
+                path: ctx.path.to_string(),
+                line: sc.line_of(offset),
+                rule: "atomics_hygiene",
+                message: format!(
+                    "`{recv}` mixes Relaxed with stronger orderings — counters are \
+                     Relaxed, control flags are SeqCst/Acquire-Release, never both"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: wire_exhaustive (cross-file)
+// ---------------------------------------------------------------------------
+
+/// Variant names of `enum Op` in `src/coordinator/mod.rs`.
+fn op_variants(code: &str) -> Option<Vec<String>> {
+    let at = code.find("enum Op")?;
+    let bytes = code.as_bytes();
+    // Reject a longer ident (e.g. `enum Options`).
+    if bytes.get(at + 7).copied().is_some_and(is_ident) {
+        return None;
+    }
+    let open = at + code[at..].find('{')?;
+    let mut depth = 0usize;
+    let mut end = open;
+    for (o, b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = o;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let body = &code[open + 1..end];
+    let mut variants = Vec::new();
+    let mut piece = String::new();
+    let mut depth = 0i32;
+    for c in body.chars() {
+        match c {
+            '{' | '(' | '<' => {
+                depth += 1;
+                piece.push(c);
+            }
+            '}' | ')' | '>' => {
+                depth -= 1;
+                piece.push(c);
+            }
+            ',' if depth == 0 => {
+                if let Some(name) = leading_ident(&piece) {
+                    variants.push(name);
+                }
+                piece.clear();
+            }
+            _ => piece.push(c),
+        }
+    }
+    if let Some(name) = leading_ident(&piece) {
+        variants.push(name);
+    }
+    Some(variants)
+}
+
+/// First ident in a variant body (skips whitespace; attributes are not used
+/// on Op variants).
+fn leading_ident(piece: &str) -> Option<String> {
+    let t = piece.trim_start();
+    let end = t.bytes().position(|b| !is_ident(b)).unwrap_or(t.len());
+    if end == 0 {
+        return None;
+    }
+    Some(t[..end].to_string())
+}
+
+/// Non-test prefix of a file (everything before the first test span).
+fn non_test_code(sc: &Scrubbed) -> String {
+    let mut out = String::with_capacity(sc.code.len());
+    let mut pos = 0;
+    for &(s, e) in &sc.test_spans {
+        if s > pos {
+            out.push_str(&sc.code[pos..s]);
+        }
+        pos = pos.max(e);
+    }
+    if pos < sc.code.len() {
+        out.push_str(&sc.code[pos..]);
+    }
+    out
+}
+
+/// Every `Op::` variant must appear in the wire encoder (`op_to_parts`),
+/// the wire decoder (`op_from_parts`), and the router's non-test dispatch —
+/// op-code drift is a lint failure, not a prod 500.
+pub fn wire_exhaustive(files: &[(&SourceFile, Scrubbed)], findings: &mut Vec<Finding>) {
+    let find = |path: &str| files.iter().find(|(f, _)| f.path == path);
+    let Some((_, mod_sc)) = find("src/coordinator/mod.rs") else {
+        return; // single-file fixture runs: nothing to check
+    };
+    let Some(variants) = op_variants(&mod_sc.code) else {
+        return;
+    };
+    let Some((_, wire_sc)) = find("src/coordinator/wire.rs") else {
+        return;
+    };
+    let Some((_, router_sc)) = find("src/coordinator/router.rs") else {
+        return;
+    };
+    let sites: [(&str, String); 3] = [
+        (
+            "encoder `op_to_parts` (src/coordinator/wire.rs)",
+            fn_body(&wire_sc.code, "op_to_parts")
+                .map(|(s, e)| wire_sc.code[s..e].to_string())
+                .unwrap_or_default(),
+        ),
+        (
+            "decoder `op_from_parts` (src/coordinator/wire.rs)",
+            fn_body(&wire_sc.code, "op_from_parts")
+                .map(|(s, e)| wire_sc.code[s..e].to_string())
+                .unwrap_or_default(),
+        ),
+        (
+            "router dispatch (src/coordinator/router.rs)",
+            non_test_code(router_sc),
+        ),
+    ];
+    for v in &variants {
+        for (where_, code) in &sites {
+            let token = format!("Op::{v}");
+            let present = ident_positions(code, &token)
+                .iter()
+                .any(|&at| code.as_bytes().get(at + token.len()) != Some(&b':'));
+            if !present {
+                findings.push(Finding {
+                    path: "src/coordinator/mod.rs".to_string(),
+                    line: 1,
+                    rule: "wire_exhaustive",
+                    message: format!("`Op::{v}` is not handled in the {where_}"),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: no_unsafe
+// ---------------------------------------------------------------------------
+
+/// `unsafe` is forbidden outside `src/` — the library's `unsafe` blocks are
+/// reviewed in-tree; tests and benches extend `#![forbid(unsafe_code)]`.
+pub fn no_unsafe(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
+    if !ctx.path.starts_with("tests/") && !ctx.path.starts_with("benches/") {
+        return;
+    }
+    let sc = ctx.scrubbed;
+    for at in ident_positions(&sc.code, "unsafe") {
+        findings.push(Finding {
+            path: ctx.path.to_string(),
+            line: sc.line_of(at),
+            rule: "no_unsafe",
+            message: "`unsafe` in tests/benches — keep unsafety inside the library".to_string(),
+        });
+    }
+}

@@ -1,0 +1,19 @@
+// Known-bad fixture for `atomics_hygiene`: linted as src/util/pool.rs.
+// One violation: `self.hits` is written Relaxed but read SeqCst — a counter
+// and a control flag sharing one cell.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct Counter {
+    hits: AtomicUsize,
+}
+
+impl Counter {
+    pub fn bump(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn read(&self) -> usize {
+        self.hits.load(Ordering::SeqCst)
+    }
+}

@@ -1,0 +1,9 @@
+// Known-bad fixture for `env_discipline`: linted as src/corpus/tiles.rs.
+// One violation: a raw env read outside config.rs.
+
+pub fn tile_from_env() -> usize {
+    std::env::var("PYSIGLIB_TILE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}

@@ -1,0 +1,14 @@
+// Known-bad fixture for `hot_path_alloc`: linted as src/kernel/solver.rs.
+// One violation (`to_vec` in `solve_pde_with`); `solve_pde_grid_into` is
+// present and clean so the HOT_FNS presence check stays quiet.
+
+pub fn solve_pde_with(x: &[f64]) -> f64 {
+    let copy = x.to_vec();
+    copy.iter().sum()
+}
+
+pub fn solve_pde_grid_into(out: &mut [f64]) {
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+}

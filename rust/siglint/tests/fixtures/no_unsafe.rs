@@ -1,0 +1,9 @@
+// Known-bad fixture for `no_unsafe`: linted as tests/fixture.rs.
+// One violation: an unsafe block in a test file.
+
+#[test]
+fn peeks_past_the_api() {
+    let xs = [1u8, 2, 3];
+    let first = unsafe { *xs.as_ptr() };
+    assert_eq!(first, 1);
+}

@@ -1,0 +1,18 @@
+// Known-bad fixture for `panic_freedom`: linted as src/coordinator/fixture.rs.
+// Two violations (bare indexing, unwrap); the test-module unwrap is exempt.
+
+pub fn first(values: &[f64]) -> f64 {
+    values[0]
+}
+
+pub fn must(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_side_unwrap_is_fine() {
+        Some(1).unwrap();
+    }
+}

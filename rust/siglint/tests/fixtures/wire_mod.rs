@@ -1,0 +1,9 @@
+// Fixture trio for `wire_exhaustive`: linted as src/coordinator/mod.rs
+// together with wire_wire.rs and wire_router.rs. `Op::Mmd2` is missing from
+// the encoder, the decoder and the router dispatch — three findings.
+
+pub enum Op {
+    Signature { depth: u32 },
+    SigKernel,
+    Mmd2,
+}

@@ -1,0 +1,12 @@
+// Fixture for `wire_exhaustive`: linted as src/coordinator/router.rs.
+// Dispatches Signature and SigKernel but swallows Mmd2 in a wildcard.
+
+use crate::coordinator::Op;
+
+pub fn dispatch(op: &Op) -> &'static str {
+    match op {
+        Op::Signature { .. } => "signature",
+        Op::SigKernel => "kernel",
+        _ => "unknown",
+    }
+}

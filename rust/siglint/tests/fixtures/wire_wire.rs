@@ -1,0 +1,19 @@
+// Fixture for `wire_exhaustive`: linted as src/coordinator/wire.rs.
+// Handles Signature and SigKernel but not Mmd2, in both directions.
+
+use crate::coordinator::Op;
+
+pub fn op_to_parts(op: &Op) -> (u32, u32) {
+    match op {
+        Op::Signature { depth } => (1, *depth),
+        Op::SigKernel => (2, 0),
+    }
+}
+
+pub fn op_from_parts(code: u32, p1: u32) -> Option<Op> {
+    match code {
+        1 => Some(Op::Signature { depth: p1 }),
+        2 => Some(Op::SigKernel),
+        _ => None,
+    }
+}

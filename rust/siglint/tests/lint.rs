@@ -1,0 +1,116 @@
+//! Fixture tests (each known-bad snippet trips exactly its own rule) plus
+//! the real gate: the pysiglib tree at `../` must lint clean.
+
+use siglint::{collect_files, lint, Finding, SourceFile};
+
+fn one(path: &str, src: &str) -> Vec<Finding> {
+    lint(&[SourceFile {
+        path: path.to_string(),
+        src: src.to_string(),
+    }])
+}
+
+fn only_rule(findings: &[Finding], rule: &str) {
+    assert!(!findings.is_empty(), "fixture for {rule} tripped nothing");
+    for f in findings {
+        assert_eq!(f.rule, rule, "unexpected finding {f}");
+    }
+}
+
+#[test]
+fn panic_freedom_fixture() {
+    let f = one(
+        "src/coordinator/fixture.rs",
+        include_str!("fixtures/panic_freedom.rs"),
+    );
+    only_rule(&f, "panic_freedom");
+    // Bare indexing + unwrap; the #[cfg(test)] unwrap is exempt.
+    assert_eq!(f.len(), 2, "{f:?}");
+}
+
+#[test]
+fn hot_path_alloc_fixture() {
+    let f = one(
+        "src/kernel/solver.rs",
+        include_str!("fixtures/hot_path_alloc.rs"),
+    );
+    only_rule(&f, "hot_path_alloc");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].message.contains("to_vec"), "{f:?}");
+}
+
+#[test]
+fn env_discipline_fixture() {
+    let f = one(
+        "src/corpus/tiles.rs",
+        include_str!("fixtures/env_discipline.rs"),
+    );
+    only_rule(&f, "env_discipline");
+    assert_eq!(f.len(), 1, "{f:?}");
+}
+
+#[test]
+fn atomics_hygiene_fixture() {
+    let f = one(
+        "src/util/pool.rs",
+        include_str!("fixtures/atomics_hygiene.rs"),
+    );
+    only_rule(&f, "atomics_hygiene");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].message.contains("self.hits"), "{f:?}");
+}
+
+#[test]
+fn wire_exhaustive_fixture() {
+    let files = vec![
+        SourceFile {
+            path: "src/coordinator/mod.rs".to_string(),
+            src: include_str!("fixtures/wire_mod.rs").to_string(),
+        },
+        SourceFile {
+            path: "src/coordinator/wire.rs".to_string(),
+            src: include_str!("fixtures/wire_wire.rs").to_string(),
+        },
+        SourceFile {
+            path: "src/coordinator/router.rs".to_string(),
+            src: include_str!("fixtures/wire_router.rs").to_string(),
+        },
+    ];
+    let f = lint(&files);
+    only_rule(&f, "wire_exhaustive");
+    // Mmd2 missing from encoder, decoder and router dispatch.
+    assert_eq!(f.len(), 3, "{f:?}");
+    for x in &f {
+        assert!(x.message.contains("Op::Mmd2"), "{x}");
+    }
+}
+
+#[test]
+fn no_unsafe_fixture() {
+    let f = one("tests/fixture.rs", include_str!("fixtures/no_unsafe.rs"));
+    only_rule(&f, "no_unsafe");
+    assert_eq!(f.len(), 1, "{f:?}");
+}
+
+#[test]
+fn an_allow_silences_a_fixture_violation_with_reason() {
+    let f = one(
+        "src/corpus/tiles.rs",
+        "pub fn t() -> usize {\n    // siglint: allow(env_discipline) -- fixture demonstrates the escape hatch\n    std::env::var(\"PYSIGLIB_TILE\").map(|v| v.len()).unwrap_or(0)\n}\n",
+    );
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn the_pysiglib_tree_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let files = collect_files(&root).expect("reading ../src, ../tests, ../benches");
+    assert!(files.len() > 20, "expected the full tree, found {} files", files.len());
+    let findings = lint(&files);
+    assert!(
+        findings.is_empty(),
+        "tree has {} finding(s):\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}

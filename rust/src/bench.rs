@@ -14,6 +14,7 @@ use std::time::Instant;
 /// Number of timed runs (the paper uses 50; override with PYSIGLIB_BENCH_RUNS
 /// to trade precision for wall-clock when sweeping large shapes).
 pub fn bench_runs(default: usize) -> usize {
+    // siglint: allow(env_discipline) -- bench-harness knob read at suite start, not serving configuration
     std::env::var("PYSIGLIB_BENCH_RUNS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -49,6 +50,7 @@ impl Suite {
     /// PYSIGLIB_BENCH_NOWARMUP=1 to skip the warmup execution (useful when a
     /// full-suite capture must fit a wall-clock budget).
     pub fn time<F: FnMut()>(&mut self, case: &str, runs: usize, mut f: F) -> f64 {
+        // siglint: allow(env_discipline) -- bench-harness knob, not serving configuration
         if std::env::var("PYSIGLIB_BENCH_NOWARMUP").as_deref() != Ok("1") {
             f(); // warmup
         }

@@ -5,6 +5,53 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
+/// Read-once cached `PYSIGLIB_*` runtime knobs.
+///
+/// Every `getenv` on the library's compute paths funnels through these
+/// accessors; each variable is read **once per process** (a `OnceLock`
+/// cache) and the parsed value is served from then on. Two consequences:
+///
+/// * No `set_var`-vs-`getenv` race: mutating the environment from a test
+///   thread can no longer race a concurrent `getenv` in a sibling sweep
+///   (a libc-level data race that used to force the thread-count property
+///   test into its own single-test binary). Tests and benches that sweep
+///   worker counts use [`crate::util::pool::set_thread_override`] instead.
+/// * Knobs are process-stable: a compiled plan or tile schedule never sees
+///   the environment change under it mid-run.
+///
+/// `siglint`'s `env_discipline` rule enforces that raw `std::env::var`
+/// reads appear only in this file.
+pub mod env {
+    use std::sync::OnceLock;
+
+    fn read_usize(name: &str, min: usize) -> Option<usize> {
+        std::env::var(name)
+            .ok()?
+            .parse::<usize>()
+            .ok()
+            .filter(|&v| v >= min)
+    }
+
+    /// `PYSIGLIB_THREADS` (worker threads, at least 1), read once.
+    pub fn threads() -> Option<usize> {
+        static CACHE: OnceLock<Option<usize>> = OnceLock::new();
+        *CACHE.get_or_init(|| read_usize("PYSIGLIB_THREADS", 1))
+    }
+
+    /// `PYSIGLIB_TILE` (Gram tile edge, at least 1), read once.
+    pub fn tile() -> Option<usize> {
+        static CACHE: OnceLock<Option<usize>> = OnceLock::new();
+        *CACHE.get_or_init(|| read_usize("PYSIGLIB_TILE", 1))
+    }
+
+    /// `PYSIGLIB_LANES` (lane width; 0 = scalar), read once, un-normalised
+    /// (callers snap to a supported width).
+    pub fn lanes() -> Option<usize> {
+        static CACHE: OnceLock<Option<usize>> = OnceLock::new();
+        *CACHE.get_or_init(|| read_usize("PYSIGLIB_LANES", 0))
+    }
+}
+
 /// Fully-resolved service/compute configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Config {

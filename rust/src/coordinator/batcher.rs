@@ -13,6 +13,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Metrics, Op, Request, Response, Router};
+use crate::util::sync::lock_unpoisoned;
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -95,7 +96,7 @@ impl Batcher {
             dim: req.dim,
         };
         let flush_now = {
-            let mut queues = self.shared.queues.lock().unwrap();
+            let mut queues = lock_unpoisoned(&self.shared.queues);
             let q = queues.entry(key).or_default();
             q.push(Pending {
                 req,
@@ -107,7 +108,7 @@ impl Batcher {
             // Opportunistic inline flush keeps tail latency flat when load
             // is high (the flusher thread alone would serialise flushes).
             let batch = {
-                let mut queues = self.shared.queues.lock().unwrap();
+                let mut queues = lock_unpoisoned(&self.shared.queues);
                 queues.remove(&key)
             };
             if let Some(batch) = batch {
@@ -148,7 +149,7 @@ impl Batcher {
     /// Flush everything immediately (used by tests and shutdown).
     pub fn flush_all(&self) {
         let drained: Vec<(GroupKey, Vec<Pending>)> = {
-            let mut queues = self.shared.queues.lock().unwrap();
+            let mut queues = lock_unpoisoned(&self.shared.queues);
             queues.drain().collect()
         };
         for (key, batch) in drained {
@@ -159,7 +160,7 @@ impl Batcher {
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        *self.shared.shutdown.lock().unwrap() = true;
+        *lock_unpoisoned(&self.shared.shutdown) = true;
         self.shared.wake.notify_all();
         if let Some(h) = self.flusher.take() {
             let _ = h.join();
@@ -175,20 +176,20 @@ fn flusher_loop(
     config: BatcherConfig,
 ) {
     loop {
-        if *shared.shutdown.lock().unwrap() {
+        if *lock_unpoisoned(&shared.shutdown) {
             return;
         }
         // Collect groups whose oldest entry is past the deadline.
         let mut due: Vec<(GroupKey, Vec<Pending>)> = Vec::new();
         {
-            let mut queues = shared.queues.lock().unwrap();
+            let mut queues = lock_unpoisoned(&shared.queues);
             let now = Instant::now();
             let keys: Vec<GroupKey> = queues
                 .iter()
                 .filter(|(_, q)| {
-                    !q.is_empty()
-                        && (q.len() >= config.max_batch
-                            || now.duration_since(q[0].enqueued) >= config.max_wait)
+                    q.len() >= config.max_batch
+                        || q.first()
+                            .is_some_and(|p| now.duration_since(p.enqueued) >= config.max_wait)
                 })
                 .map(|(k, _)| *k)
                 .collect();
@@ -212,7 +213,7 @@ fn flusher_loop(
                 let _unused = shared
                     .wake
                     .wait_timeout(queues, wait.max(Duration::from_micros(100)))
-                    .unwrap();
+                    .unwrap_or_else(|p| p.into_inner());
                 continue;
             }
         }

@@ -190,12 +190,17 @@ impl Router {
                     }
             })
             .collect();
-        let good_idx: Vec<usize> = (0..reqs.len()).filter(|&i| !bad[i]).collect();
+        let good: Vec<&Request> = reqs
+            .iter()
+            .zip(&bad)
+            .filter(|(_, &is_bad)| !is_bad)
+            .map(|(r, _)| *r)
+            .collect();
 
         // Try the PJRT path for an exactly-matching artifact. Runtime
         // failures are propagated to every client in the batch as wire
         // errors — not silently swallowed, not silently re-routed.
-        if good_idx.len() == reqs.len() {
+        if good.len() == reqs.len() {
             if let Some(name) = self.artifact_for(op, reqs.len(), len, dim) {
                 return match self.execute_pjrt(&name, op, len, dim, reqs) {
                     Ok(resps) => resps,
@@ -207,11 +212,11 @@ impl Router {
             }
         }
 
-        let computed = self.execute_native(op, len, dim, reqs, &good_idx);
+        let computed = self.execute_native(op, len, dim, &good);
         let mut out: Vec<Response> = Vec::with_capacity(reqs.len());
         let mut it = computed.into_iter();
-        for i in 0..reqs.len() {
-            if bad[i] {
+        for &is_bad in &bad {
+            if is_bad {
                 out.push(Response::Error(format!(
                     "payload size mismatch: expected {} values per path",
                     expect
@@ -279,22 +284,28 @@ impl Router {
                 let (gx, gy) = rec.vjp(&vec![1.0; b])?.into_pair()?;
                 let xo = xb.element_offsets();
                 let yo = yb.element_offsets();
-                let mut out = vec![0.0; pb.total_points() * dim];
-                let mut pos = 0;
-                for i in 0..b {
-                    let xs = &gx[xo[i]..xo[i + 1]];
-                    out[pos..pos + xs.len()].copy_from_slice(xs);
-                    pos += xs.len();
-                    let ys = &gy[yo[i]..yo[i + 1]];
-                    out[pos..pos + ys.len()].copy_from_slice(ys);
-                    pos += ys.len();
+                let oob = || SigError::Invalid("internal: gradient slice out of bounds");
+                let mut out = Vec::with_capacity(pb.total_points() * dim);
+                for (xw, yw) in xo.windows(2).zip(yo.windows(2)) {
+                    let (xs, ys) = match (xw, yw) {
+                        ([x0, x1], [y0, y1]) => (
+                            gx.get(*x0..*x1).ok_or_else(oob)?,
+                            gy.get(*y0..*y1).ok_or_else(oob)?,
+                        ),
+                        _ => return Err(oob()),
+                    };
+                    out.extend_from_slice(xs);
+                    out.extend_from_slice(ys);
                 }
                 Ok(out)
             }
-            // Handled by `execute_corpus_op` before the spec route.
-            Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } => {
-                unreachable!("corpus ops are served by execute_corpus_op")
-            }
+            // Handled by `execute_corpus_op` before the spec route; `op_spec`
+            // above already returned this error, so this arm is never reached
+            // — kept as a typed error rather than `unreachable!` so the
+            // request path stays panic-free even if the dispatch order drifts.
+            Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } => Err(
+                SigError::Invalid("corpus ops are served by the corpus route"),
+            ),
             Op::Mmd2LowRank { nx, .. } | Op::GramLowRank { nx, .. } => {
                 // Split the frame's paths at nx into the two corpora
                 // (validated at decode; re-checked here because frames can
@@ -307,11 +318,24 @@ impl Router {
                     )));
                 }
                 let dim = frame.dim;
-                let split = pb.offsets()[nx] * dim;
+                let split = pb
+                    .offsets()
+                    .get(nx)
+                    .copied()
+                    .ok_or(SigError::Invalid("internal: offsets shorter than batch"))?
+                    * dim;
                 let xl: Vec<usize> = (0..nx).map(|i| pb.len_of(i)).collect();
                 let yl: Vec<usize> = (nx..b).map(|i| pb.len_of(i)).collect();
-                let xb = PathBatch::ragged(&frame.values[..split], &xl, dim)?;
-                let yb = PathBatch::ragged(&frame.values[split..], &yl, dim)?;
+                let (xv, yv) = match (frame.values.get(..split), frame.values.get(split..)) {
+                    (Some(x), Some(y)) => (x, y),
+                    _ => {
+                        return Err(SigError::Invalid(
+                            "internal: corpus split exceeds frame values",
+                        ))
+                    }
+                };
+                let xb = PathBatch::ragged(xv, &xl, dim)?;
+                let yb = PathBatch::ragged(yv, &yl, dim)?;
                 let shape = ShapeClass::for_pair(&xb, &yb).bucketed();
                 let plan = self.plans.get_or_compile(spec, shape, retain, None)?;
                 Ok(plan.execute_pair(&xb, &yb)?.into_values())
@@ -358,34 +382,29 @@ impl Router {
         }
     }
 
-    fn execute_native(
-        &self,
-        op: Op,
-        len: usize,
-        dim: usize,
-        reqs: &[&Request],
-        good_idx: &[usize],
-    ) -> Vec<Response> {
-        let b = good_idx.len();
+    /// Run one shape-homogeneous batch on the native backend. `good`
+    /// holds only the size-validated requests, in arrival order.
+    fn execute_native(&self, op: Op, len: usize, dim: usize, good: &[&Request]) -> Vec<Response> {
+        let b = good.len();
         if b == 0 {
             return Vec::new();
         }
         let errs = |msg: String| -> Vec<Response> {
-            good_idx.iter().map(|_| Response::Error(msg.clone())).collect()
+            good.iter().map(|_| Response::Error(msg.clone())).collect()
         };
         let mut paths = Vec::with_capacity(b * len * dim);
-        for &i in good_idx {
-            paths.extend_from_slice(&reqs[i].data);
+        for r in good {
+            paths.extend_from_slice(&r.data);
         }
         let pb = match PathBatch::uniform(&paths, b, len, dim) {
             Ok(pb) => pb,
             Err(e) => return errs(e.to_string()),
         };
         // Gather the second paths for paired ops (validated present above).
-        let gather_ys = |reqs: &[&Request]| -> Result<Vec<f64>, String> {
+        let gather_ys = || -> Result<Vec<f64>, String> {
             let mut ys = Vec::with_capacity(b * len * dim);
-            for &i in good_idx {
-                match reqs[i].data2.as_ref() {
+            for r in good {
+                match r.data2.as_ref() {
                     Some(d) => ys.extend_from_slice(d),
                     None => return Err("kernel op missing second path".to_string()),
                 }
@@ -421,7 +440,7 @@ impl Router {
                 }
             }
             Op::SigKernel { .. } => {
-                let ys = match gather_ys(reqs) {
+                let ys = match gather_ys() {
                     Ok(ys) => ys,
                     Err(e) => return errs(e),
                 };
@@ -439,7 +458,7 @@ impl Router {
                 }
             }
             Op::SigKernelGrad { .. } => {
-                let ys = match gather_ys(reqs) {
+                let ys = match gather_ys() {
                     Ok(ys) => ys,
                     Err(e) => return errs(e),
                 };
@@ -453,10 +472,12 @@ impl Router {
                     .and_then(|rec| rec.vjp(&gk))
                     .and_then(|g| g.into_pair());
                 match vjp {
-                    Ok((gx, gy)) => (0..b)
-                        .map(|i| {
-                            let mut v = gx[i * len * dim..(i + 1) * len * dim].to_vec();
-                            v.extend_from_slice(&gy[i * len * dim..(i + 1) * len * dim]);
+                    Ok((gx, gy)) => gx
+                        .chunks(len * dim)
+                        .zip(gy.chunks(len * dim))
+                        .map(|(cx, cy)| {
+                            let mut v = cx.to_vec();
+                            v.extend_from_slice(cy);
                             Response::Values(v)
                         })
                         .collect(),

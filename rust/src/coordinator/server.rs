@@ -85,10 +85,10 @@ fn split_payload(frame: &Frame) -> Result<(Vec<f64>, Option<Vec<f64>>), String> 
                     frame.values.len()
                 ));
             }
-            Ok((
-                frame.values[..per].to_vec(),
-                Some(frame.values[per..].to_vec()),
-            ))
+            match (frame.values.get(..per), frame.values.get(per..)) {
+                (Some(x), Some(y)) => Ok((x.to_vec(), Some(y.to_vec()))),
+                _ => Err("internal: kernel payload split out of bounds".to_string()),
+            }
         }
         _ => {
             if frame.values.len() != per {
@@ -255,7 +255,11 @@ impl Client {
             dim,
             values,
         )?;
-        Ok(r.map(|v| v[0]))
+        Ok(r.and_then(|v| {
+            v.first()
+                .copied()
+                .ok_or_else(|| "empty response from server".to_string())
+        }))
     }
 
     /// Convenience: low-rank (Nyström, `rank` landmarks) MMD² between two
@@ -283,7 +287,11 @@ impl Client {
             lengths,
             values,
         )?;
-        Ok(r.map(|v| v[0]))
+        Ok(r.and_then(|v| {
+            v.first()
+                .copied()
+                .ok_or_else(|| "empty response from server".to_string())
+        }))
     }
 
     /// Flatten a slice-of-paths into the ragged wire layout.

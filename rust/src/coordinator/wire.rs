@@ -215,12 +215,24 @@ fn hard_err(msg: &str) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
 }
 
+/// Copy the head of `src` into a fixed-size array for `from_le_bytes`,
+/// replacing the `try_into().unwrap()` idiom the panic-freedom lint
+/// forbids. Every caller passes exactly `N` bytes (`chunks_exact` /
+/// `split_at` slices); a short `src` zero-pads instead of panicking.
+fn le_array<const N: usize>(src: &[u8]) -> [u8; N] {
+    let mut out = [0u8; N];
+    for (o, s) in out.iter_mut().zip(src) {
+        *o = *s;
+    }
+    out
+}
+
 fn read_f64s<R: Read>(r: &mut R, n: usize) -> std::io::Result<Vec<f64>> {
     let mut data = vec![0u8; n * 8];
     r.read_exact(&mut data)?;
     Ok(data
         .chunks_exact(8)
-        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| f64::from_le_bytes(le_array(c)))
         .collect())
 }
 
@@ -343,19 +355,22 @@ pub fn read_request<R: Read>(
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
         Err(e) => return Err(e),
     }
-    let u = |i: usize| u32::from_le_bytes(header[i * 4..i * 4 + 4].try_into().unwrap());
-    let magic = u(0);
+    let mut fields = [0u32; 8];
+    for (f, c) in fields.iter_mut().zip(header.chunks_exact(4)) {
+        *f = u32::from_le_bytes(le_array(c));
+    }
+    let [magic, code, p1, p2, tr, f5, f6, f7] = fields;
     if magic != MAGIC && magic != MAGIC_RAGGED {
         return Err(hard_err("bad magic"));
     }
-    let op = op_from_parts(u(1), u(2), u(3), u(4));
-    let n_values = u(7) as usize;
+    let op = op_from_parts(code, p1, p2, tr);
+    let n_values = f7 as usize;
     if n_values > MAX_VALUES {
         return Err(hard_err("frame too large"));
     }
     if magic == MAGIC {
-        let len = u(5) as usize;
-        let dim = u(6) as usize;
+        let len = f5 as usize;
+        let dim = f6 as usize;
         // Consume the payload first so that validation failures keep the
         // stream at a frame boundary.
         let values = read_f64s(r, n_values)?;
@@ -370,8 +385,8 @@ pub fn read_request<R: Read>(
         });
         Ok(Some(frame))
     } else {
-        let n_lengths = u(5) as usize;
-        let dim = u(6) as usize;
+        let n_lengths = f5 as usize;
+        let dim = f6 as usize;
         if n_lengths > MAX_LENGTHS {
             return Err(hard_err("too many paths in ragged frame"));
         }
@@ -379,7 +394,7 @@ pub fn read_request<R: Read>(
         r.read_exact(&mut lbytes)?;
         let lengths: Vec<usize> = lbytes
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+            .map(|c| u32::from_le_bytes(le_array(c)) as usize)
             .collect();
         let values = read_f64s(r, n_values)?;
         let frame = op.and_then(|op| {
@@ -420,14 +435,15 @@ pub fn write_response<W: Write>(
 pub fn read_response<R: Read>(r: &mut R) -> std::io::Result<Result<Vec<f64>, String>> {
     let mut header = [0u8; 8];
     r.read_exact(&mut header)?;
-    let status = u32::from_le_bytes(header[0..4].try_into().unwrap());
-    let n = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    let (sb, nb) = header.split_at(4);
+    let status = u32::from_le_bytes(le_array(sb));
+    let n = u32::from_le_bytes(le_array(nb)) as usize;
     if status == 0 {
         let mut data = vec![0u8; n * 8];
         r.read_exact(&mut data)?;
         Ok(Ok(data
             .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f64::from_le_bytes(le_array(c)))
             .collect()))
     } else {
         let mut data = vec![0u8; n];

@@ -33,6 +33,7 @@ use crate::kernel::lowrank::{feature_mean, FeatureMap, LowRankFeatures, LowRankS
 use crate::kernel::KernelOptions;
 use crate::path::{PathBatch, SigError};
 use crate::util::linalg::gemm_nt;
+use crate::util::sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
 
 /// Identifier of a registered corpus — small enough to travel in a wire
 /// header field, stable across appends.
@@ -90,9 +91,11 @@ struct CorpusEntry {
 }
 
 impl CorpusEntry {
-    fn batch(&self) -> PathBatch<'_> {
+    /// View the stored paths as a batch. Construction re-validates the
+    /// stored data/lengths pair; a mismatch (impossible by construction)
+    /// surfaces as a typed error rather than a panic on the request path.
+    fn batch(&self) -> Result<PathBatch<'_>, SigError> {
         PathBatch::ragged(&self.data, &self.lengths, self.dim)
-            .expect("internal: stored corpus batch is valid")
     }
 
     fn max_len(&self) -> usize {
@@ -197,12 +200,12 @@ impl CorpusRegistry {
         // and create duplicate corpora. Lock order is by_hash → entries →
         // entry.read; `append` releases its entry lock before touching
         // by_hash, so no cycle exists.
-        let mut by_hash = self.by_hash.lock().unwrap();
+        let mut by_hash = lock_unpoisoned(&self.by_hash);
         if let Some(&id) = by_hash.get(&hash) {
-            let arc = self.entries.lock().unwrap().get(&id).cloned();
+            let arc = lock_unpoisoned(&self.entries).get(&id).cloned();
             if let Some(arc) = arc {
                 // Hash hit: confirm it is not an FNV collision.
-                let e = arc.read().unwrap();
+                let e = read_unpoisoned(&arc);
                 if e.dim == batch.dim() && e.lengths == lengths && e.data == batch.data() {
                     return Ok(CorpusId(id));
                 }
@@ -217,10 +220,7 @@ impl CorpusRegistry {
             exact: HashMap::new(),
             lowrank: HashMap::new(),
         };
-        self.entries
-            .lock()
-            .unwrap()
-            .insert(id, Arc::new(RwLock::new(entry)));
+        lock_unpoisoned(&self.entries).insert(id, Arc::new(RwLock::new(entry)));
         by_hash.insert(hash, id);
         self.registered.fetch_add(1, Ordering::Relaxed);
         Ok(CorpusId(id))
@@ -234,7 +234,7 @@ impl CorpusRegistry {
     /// dropped rather than left stale — the next query rebuilds or errors.
     pub fn append(&self, id: CorpusId, batch: &PathBatch<'_>) -> Result<usize, SigError> {
         let arc = self.entry(id)?;
-        let mut e = arc.write().unwrap();
+        let mut e = write_unpoisoned(&arc);
         if batch.dim() != e.dim {
             return Err(SigError::DimMismatch {
                 left: batch.dim(),
@@ -262,36 +262,46 @@ impl CorpusRegistry {
             exact,
             lowrank,
         } = &mut *e;
-        let cb = PathBatch::ragged(data, lengths, *dim)
-            .expect("internal: extended corpus batch is valid");
+        let cb = PathBatch::ragged(data, lengths, *dim)?;
         let exact_keys: Vec<KernelOptions> = exact.keys().copied().collect();
         for opts in exact_keys {
-            let grown = grow_kcc(&self.tiles, &cb, &exact[&opts].kcc, n_old, n, &opts);
+            let grown = match exact.get(&opts) {
+                Some(c) => grow_kcc(&self.tiles, &cb, &c.kcc, n_old, n, &opts),
+                None => continue,
+            };
             match grown {
-                Ok(kcc) => exact.get_mut(&opts).expect("key present").kcc = kcc,
+                Ok(kcc) => {
+                    if let Some(c) = exact.get_mut(&opts) {
+                        c.kcc = kcc;
+                    }
+                }
                 Err(_) => {
                     exact.remove(&opts);
                 }
             }
         }
-        let new_batch = suffix_batch(&cb, n_old);
+        let new_batch = suffix_batch(&cb, n_old)?;
         let lr_keys: Vec<(KernelOptions, LowRankSpec)> = lowrank.keys().copied().collect();
         for key in lr_keys {
             let (opts, spec) = key;
-            let cache = &lowrank[&key];
+            let (cache_pool, cache_map) = match lowrank.get(&key) {
+                Some(c) => (c.pool, c.map.clone()),
+                None => continue,
+            };
             let pool_new = spec.rank.min(n);
             // Random-signature sketches depend only on (seed, shape), so
             // they extend regardless of the pool; Nyström maps extend while
             // the landmark pool is unchanged.
-            let extendable = cache.pool == pool_new
+            let extendable = cache_pool == pool_new
                 || matches!(spec.method, crate::kernel::LowRankMethod::RandomSig { .. });
             if extendable {
                 // The map stays valid: only the new paths need feature rows.
-                match cache.map.try_features(&new_batch) {
+                match cache_map.try_features(&new_batch) {
                     Ok(rows) => {
-                        let c = lowrank.get_mut(&key).expect("key present");
-                        c.phi.extend(rows);
-                        c.pool = pool_new;
+                        if let Some(c) = lowrank.get_mut(&key) {
+                            c.phi.extend(rows);
+                            c.pool = pool_new;
+                        }
                     }
                     Err(_) => {
                         lowrank.remove(&key);
@@ -314,7 +324,7 @@ impl CorpusRegistry {
         let new_hash = *hash;
         drop(e);
         {
-            let mut by_hash = self.by_hash.lock().unwrap();
+            let mut by_hash = lock_unpoisoned(&self.by_hash);
             if by_hash.get(&old_hash) == Some(&id.0) {
                 by_hash.remove(&old_hash);
             }
@@ -338,7 +348,7 @@ impl CorpusRegistry {
         let arc = self.entry(id)?;
         match lowrank {
             None => {
-                let e = arc.read().unwrap();
+                let e = read_unpoisoned(&arc);
                 e.check_query(q, opts)?;
                 let n = e.lengths.len();
                 let total = q
@@ -347,7 +357,7 @@ impl CorpusRegistry {
                     .filter(|&t| t <= MAX_BATCH_OUT)
                     .ok_or(SigError::TooLarge("corpus gram output"))?;
                 let mut out = vec![0.0; total];
-                self.tiles.gram_into(q, &e.batch(), opts, &mut out)?;
+                self.tiles.gram_into(q, &e.batch()?, opts, &mut out)?;
                 Ok(out)
             }
             Some(spec) => self.with_lowrank(&arc, q, opts, spec, |e, map, phi| {
@@ -387,7 +397,7 @@ impl CorpusRegistry {
                 let mut just_built = false;
                 loop {
                     {
-                        let e = arc.read().unwrap();
+                        let e = read_unpoisoned(&arc);
                         e.check_query(q, opts)?;
                         if let Some(c) = e.exact.get(opts) {
                             if !just_built {
@@ -400,10 +410,10 @@ impl CorpusRegistry {
                     // self-Gram, release, and retry the warm path. The
                     // cache can only vanish again if a concurrent append's
                     // extension failed — then the next lap rebuilds.
-                    let mut e = arc.write().unwrap();
+                    let mut e = write_unpoisoned(&arc);
                     e.check_query(q, opts)?;
                     if e.exact.get(opts).is_none() {
-                        let kcc = build_kcc(&self.tiles, &e.batch(), opts)?;
+                        let kcc = build_kcc(&self.tiles, &e.batch()?, opts)?;
                         e.exact.insert(*opts, ExactCache { kcc });
                         self.cold_builds.fetch_add(1, Ordering::Relaxed);
                         just_built = true;
@@ -426,24 +436,21 @@ impl CorpusRegistry {
 
     /// Number of paths in a corpus.
     pub fn path_count(&self, id: CorpusId) -> Option<usize> {
-        let arc = self.entries.lock().unwrap().get(&id.0).cloned()?;
-        let n = arc.read().unwrap().lengths.len();
+        let arc = lock_unpoisoned(&self.entries).get(&id.0).cloned()?;
+        let n = read_unpoisoned(&arc).lengths.len();
         Some(n)
     }
 
     /// Path dimension of a corpus.
     pub fn dim_of(&self, id: CorpusId) -> Option<usize> {
-        let arc = self.entries.lock().unwrap().get(&id.0).cloned()?;
-        let d = arc.read().unwrap().dim;
+        let arc = lock_unpoisoned(&self.entries).get(&id.0).cloned()?;
+        let d = read_unpoisoned(&arc).dim;
         Some(d)
     }
 
     /// Registered corpus ids, ascending.
     pub fn ids(&self) -> Vec<CorpusId> {
-        let mut ids: Vec<CorpusId> = self
-            .entries
-            .lock()
-            .unwrap()
+        let mut ids: Vec<CorpusId> = lock_unpoisoned(&self.entries)
             .keys()
             .map(|&v| CorpusId(v))
             .collect();
@@ -463,9 +470,7 @@ impl CorpusRegistry {
     }
 
     fn entry(&self, id: CorpusId) -> Result<Arc<RwLock<CorpusEntry>>, SigError> {
-        self.entries
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.entries)
             .get(&id.0)
             .cloned()
             .ok_or(SigError::Invalid("unknown corpus id"))
@@ -488,7 +493,7 @@ impl CorpusRegistry {
         let mut just_built = false;
         loop {
             {
-                let e = arc.read().unwrap();
+                let e = read_unpoisoned(arc);
                 e.check_query(q, opts)?;
                 if let Some(c) = e.lowrank.get(&key) {
                     if !just_built {
@@ -497,10 +502,10 @@ impl CorpusRegistry {
                     return body(&e, &c.map, &c.phi);
                 }
             }
-            let mut e = arc.write().unwrap();
+            let mut e = write_unpoisoned(arc);
             e.check_query(q, opts)?;
             if e.lowrank.get(&key).is_none() {
-                let built = build_lowrank(&e.batch(), opts, spec)?;
+                let built = build_lowrank(&e.batch()?, opts, spec)?;
                 e.lowrank.insert(key, built);
                 self.cold_builds.fetch_add(1, Ordering::Relaxed);
                 just_built = true;
@@ -528,19 +533,27 @@ impl CorpusRegistry {
         let mut kqq = vec![0.0; gram_len(qb, qb)?];
         self.tiles.gram_into(q, q, opts, &mut kqq)?;
         let mut kqc = vec![0.0; gram_len(qb, n)?];
-        self.tiles.gram_into(q, &e.batch(), opts, &mut kqc)?;
+        self.tiles.gram_into(q, &e.batch()?, opts, &mut kqc)?;
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
         Ok(mean(&kqq) - 2.0 * mean(&kqc) + mean(kcc))
     }
 }
 
 /// The corpus suffix `paths[n_old..]` as its own batch view.
-fn suffix_batch<'a>(cb: &PathBatch<'a>, n_old: usize) -> PathBatch<'a> {
+fn suffix_batch<'a>(cb: &PathBatch<'a>, n_old: usize) -> Result<PathBatch<'a>, SigError> {
     let dim = cb.dim();
-    let split = cb.offsets()[n_old] * dim;
+    let split = cb
+        .offsets()
+        .get(n_old)
+        .copied()
+        .ok_or(SigError::Invalid("internal: append offset out of bounds"))?
+        * dim;
     let lens: Vec<usize> = (n_old..cb.batch()).map(|i| cb.len_of(i)).collect();
-    PathBatch::ragged(&cb.data()[split..], &lens, dim)
-        .expect("internal: corpus suffix batch is valid")
+    let data = cb
+        .data()
+        .get(split..)
+        .ok_or(SigError::Invalid("internal: append split exceeds corpus data"))?;
+    PathBatch::ragged(data, &lens, dim)
 }
 
 /// Full corpus self-Gram (the cold build).
@@ -574,8 +587,12 @@ fn grow_kcc(
         .filter(|&t| t <= MAX_BATCH_OUT)
         .ok_or(SigError::TooLarge("corpus self-Gram"))?;
     let mut kcc = vec![0.0; total];
-    for i in 0..n_old {
-        kcc[i * n..i * n + n_old].copy_from_slice(&old[i * n_old..(i + 1) * n_old]);
+    if n_old > 0 {
+        for (dst, src) in kcc.chunks_mut(n).zip(old.chunks(n_old)).take(n_old) {
+            if let Some(head) = dst.get_mut(..n_old) {
+                head.copy_from_slice(src);
+            }
+        }
     }
     tiles.gram_block_into(cb, 0..n_old, cb, n_old..n, opts, &mut kcc, n, 0, n_old)?;
     tiles.gram_block_into(cb, n_old..n, cb, 0..n, opts, &mut kcc, n, n_old, 0)?;
@@ -593,8 +610,17 @@ fn build_lowrank(
     let n = cb.batch();
     let pool = spec.rank.min(n);
     let pool_lens: Vec<usize> = (0..pool).map(|i| cb.len_of(i)).collect();
-    let split = cb.offsets()[pool] * cb.dim();
-    let pool_batch = PathBatch::ragged(&cb.data()[..split], &pool_lens, cb.dim())?;
+    let split = cb
+        .offsets()
+        .get(pool)
+        .copied()
+        .ok_or(SigError::Invalid("internal: landmark pool out of bounds"))?
+        * cb.dim();
+    let data = cb
+        .data()
+        .get(..split)
+        .ok_or(SigError::Invalid("internal: landmark split exceeds corpus data"))?;
+    let pool_batch = PathBatch::ragged(data, &pool_lens, cb.dim())?;
     let map = Arc::new(FeatureMap::try_build(spec, opts, &pool_batch)?);
     let phi = map.try_features(cb)?;
     Ok(LowRankCache { map, phi, pool })

@@ -61,13 +61,10 @@ impl Default for TileScheduler {
 impl TileScheduler {
     /// Tile edge from `PYSIGLIB_TILE` (entries per side, default 16) and
     /// lane width from `PYSIGLIB_LANES` (0 = scalar; unset = per-block
-    /// default).
+    /// default). Both knobs are read once per process and cached (see
+    /// [`crate::config::env`]).
     pub fn from_env() -> TileScheduler {
-        let tile = std::env::var("PYSIGLIB_TILE")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&t| t >= 1)
-            .unwrap_or(DEFAULT_TILE);
+        let tile = crate::config::env::tile().unwrap_or(DEFAULT_TILE);
         TileScheduler {
             tile,
             lanes: lanes::lane_width_override(),

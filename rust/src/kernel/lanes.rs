@@ -113,11 +113,9 @@ pub fn normalize_lane_width(w: usize) -> usize {
 }
 
 /// The `PYSIGLIB_LANES` override, normalised; `None` when unset/unparsable.
+/// Read once per process and cached (see [`crate::config::env`]).
 pub fn lane_width_override() -> Option<usize> {
-    std::env::var("PYSIGLIB_LANES")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .map(normalize_lane_width)
+    crate::config::env::lanes().map(normalize_lane_width)
 }
 
 /// Default width for a shape profile: uniform classes fill W = 8 groups
@@ -440,7 +438,7 @@ pub fn solve_gram_row(
         out.fill(1.0);
         return;
     }
-    let my = cols.clone().map(|j| y.len_of(j)).max().unwrap_or(0);
+    let my = (cols.start..cols.end).map(|j| y.len_of(j)).max().unwrap_or(0);
     let tr = opts.exec.transform;
     sc.ensure(lx, my, x.dim(), tr, width, opts.dyadic_y);
     let lane_ok = width >= 4;
@@ -453,7 +451,7 @@ pub fn solve_gram_row(
     // Partition: degenerate columns resolve inline, the rest group by length.
     let mut idx = std::mem::take(&mut sc.idx);
     idx.clear();
-    for j in cols.clone() {
+    for j in cols.start..cols.end {
         if y.len_of(j) < 2 {
             out[j - cols.start] = 1.0;
         } else {

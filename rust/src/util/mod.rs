@@ -11,6 +11,7 @@ pub mod pool;
 pub mod timing;
 pub mod linalg;
 pub mod prop;
+pub mod sync;
 
 pub use pool::{parallel_for, ThreadPool};
 pub use rng::Rng;

@@ -7,15 +7,30 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads to use: respects `PYSIGLIB_THREADS`, else the
+/// Process-wide explicit thread-count override (0 = none). Tests and
+/// benches that sweep worker counts set this instead of mutating
+/// `PYSIGLIB_THREADS` — `std::env::set_var` racing a concurrent `getenv`
+/// is undefined behaviour at the libc level, and the env value is read
+/// once per process anyway (see [`crate::config::env`]).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set (or with `None`, clear) an explicit worker-thread count that takes
+/// precedence over `PYSIGLIB_THREADS`. Intended for tests and benches;
+/// callers should restore `None` when done.
+pub fn set_thread_override(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// Number of worker threads to use: an explicit [`set_thread_override`]
+/// wins, else `PYSIGLIB_THREADS` (read once per process), else the
 /// machine's available parallelism.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("PYSIGLIB_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    let over = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if over >= 1 {
+        return over;
+    }
+    if let Some(n) = crate::config::env::threads() {
+        return n;
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -269,5 +284,13 @@ mod tests {
     #[test]
     fn zero_items_is_fine() {
         parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn thread_override_takes_precedence() {
+        set_thread_override(Some(3));
+        assert_eq!(num_threads(), 3);
+        set_thread_override(None);
+        assert!(num_threads() >= 1);
     }
 }

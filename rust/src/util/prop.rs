@@ -74,6 +74,7 @@ impl Gen {
 /// `#[test]`) with the seed and the generator trace of the first failing
 /// case. Honours `PYSIGLIB_PROP_SEED` to replay one specific case.
 pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    // siglint: allow(env_discipline) -- test-harness replay knob, not serving configuration
     if let Ok(s) = std::env::var("PYSIGLIB_PROP_SEED") {
         let seed: u64 = s.parse().expect("PYSIGLIB_PROP_SEED must be u64");
         let mut g = Gen::new(seed);

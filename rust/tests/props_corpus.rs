@@ -5,16 +5,20 @@
 //! features). Every assertion is exact `==` on `f64`s: values must not
 //! depend on scheduling, tiling, thread count or append history.
 //!
-//! The `PYSIGLIB_THREADS`-mutating thread-count property lives in its own
-//! binary (`props_corpus_threads.rs`) so `set_var` never races a sibling
-//! test's `getenv` (the tests in one integration-test binary share a
-//! process and run on parallel threads).
+//! The thread-count property used to live in its own binary
+//! (`props_corpus_threads.rs`) because it mutated `PYSIGLIB_THREADS` via
+//! `std::env::set_var`, racing sibling tests' `getenv` calls at the libc
+//! level. Env knobs are now read once per process (`config::env`) and the
+//! sweep uses the explicit `set_thread_override` API, so the property is
+//! an ordinary test here again.
 
 use std::sync::Arc;
 
-use pysiglib::corpus::CorpusRegistry;
+use pysiglib::corpus::{CorpusRegistry, TileScheduler};
 use pysiglib::engine::{OpSpec, Plan, PlanCache, ShapeClass};
-use pysiglib::kernel::{KernelOptions, LowRankSpec};
+use pysiglib::kernel::{try_gram, KernelOptions, LowRankSpec};
+use pysiglib::transforms::Transform;
+use pysiglib::util::pool::set_thread_override;
 use pysiglib::util::rng::Rng;
 use pysiglib::{PathBatch, SigError};
 
@@ -293,4 +297,42 @@ fn corpus_engine_plans_match_registry_and_reject_misuse() {
         plan.execute_pair(&qb, &qb),
         Err(SigError::Invalid(_))
     ));
+}
+
+/// The scheduling-independence property: tiled Gram under 1 worker thread
+/// is bit-identical to 4 worker threads (and to the engine's per-entry
+/// Gram). Uses `set_thread_override` — not `set_var` — so the sweep is
+/// race-free against parallel sibling tests.
+#[test]
+fn tiled_gram_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(805);
+    let d = 3;
+    let (xd, xl) = ragged(&mut rng, &[6, 9, 3, 7, 5, 8, 4, 6, 7, 5, 9, 2], d);
+    let (yd, yl) = ragged(&mut rng, &[7, 4, 8, 5, 6], d);
+    let xb = PathBatch::ragged(&xd, &xl, d).unwrap();
+    let yb = PathBatch::ragged(&yd, &yl, d).unwrap();
+    for opts in [
+        KernelOptions::default(),
+        KernelOptions::default().dyadic(1, 0),
+        KernelOptions::default().transform(Transform::LeadLag),
+    ] {
+        let mut per_threads = Vec::new();
+        for threads in [1usize, 4] {
+            set_thread_override(Some(threads));
+            let mut out = vec![0.0; xb.batch() * yb.batch()];
+            TileScheduler::with_tile(3)
+                .gram_into(&xb, &yb, &opts, &mut out)
+                .unwrap();
+            per_threads.push(out);
+        }
+        set_thread_override(None);
+        assert_eq!(
+            per_threads[0], per_threads[1],
+            "tiled Gram must not depend on the thread count"
+        );
+        // The per-entry values are thread-count independent by the
+        // assertion above, so the default setting is a fair reference.
+        let engine = try_gram(&xb, &yb, &opts).unwrap();
+        assert_eq!(per_threads[0], engine, "tiled vs engine per-entry Gram");
+    }
 }
