@@ -1,0 +1,143 @@
+//! Streaming-extension latency: appending L_new points to a registered
+//! length-L path via Goursat border strips vs re-registering the grown
+//! corpus from scratch, across L — the tentpole claim of the streaming
+//! subsystem. A re-register pays every O(L²) pair solve again; a
+//! steady-state extend pays only the O(L_new·L) strips of the pairs that
+//! touch the extended path (the first extend additionally pays a one-off
+//! O(L²) border-retaining solve, recorded as `warmup`). The derived
+//! `speedup_vs_rescratch_x` rows record the headline ratio (≥20× at
+//! L = 2048) into `bench_results/BENCH_stream.json`, alongside
+//! sliding-window churn throughput (push-evict cycles at capacity and the
+//! exponentially-weighted window MMD² score).
+
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::corpus::{CorpusRegistry, SlidingCorpus};
+use pysiglib::kernel::KernelOptions;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+use std::sync::Arc;
+
+/// A registry with the `n×l` corpus registered and its exact self-Gram
+/// built by one (tiny) query — the state a serving process holds when the
+/// first streamed points arrive.
+fn warmed(
+    corpus: &[f64],
+    n: usize,
+    l: usize,
+    d: usize,
+    query: &[f64],
+    ql: usize,
+    opts: &KernelOptions,
+) -> (CorpusRegistry, pysiglib::corpus::CorpusId) {
+    let reg = CorpusRegistry::new();
+    let cb = PathBatch::uniform(corpus, n, l, d).unwrap();
+    let qb = PathBatch::uniform(query, 1, ql, d).unwrap();
+    let id = reg.register(&cb).unwrap();
+    reg.mmd2_query(id, &qb, opts, None).unwrap();
+    (reg, id)
+}
+
+fn main() {
+    let runs = bench_runs(3);
+    let (n, d, add, ql) = (4usize, 2usize, 16usize, 8usize);
+    let opts = KernelOptions::default();
+    let mut suite = Suite::new("stream");
+
+    for l in [128usize, 512, 2048] {
+        let tag = format!("l{l}");
+        let mut rng = Rng::new(113);
+        let corpus = rng.brownian_batch(n, l, d, 0.3);
+        let ext = rng.brownian_batch(1, add, d, 0.3);
+        let query = rng.brownian_batch(1, ql, d, 0.35);
+        let qb = PathBatch::uniform(&query, 1, ql, d).unwrap();
+
+        // Rescratch: the grown corpus (path 0 carries the extra points)
+        // registered from nothing, self-Gram rebuilt by the query — the
+        // cost streaming avoids. Built ragged so the shape matches what an
+        // extend produces.
+        let mut grown = corpus.clone();
+        grown.splice(l * d..l * d, ext.iter().copied());
+        let mut glens = vec![l; n];
+        glens[0] = l + add;
+        suite.time(&format!("{tag}/extend/rescratch"), runs, || {
+            let reg = CorpusRegistry::new();
+            let gb = PathBatch::ragged(&grown, &glens, d).unwrap();
+            let id = reg.register(&gb).unwrap();
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, None).unwrap());
+        });
+
+        // Warm-up extend: the first extension of a queried corpus retains
+        // every border on the way (O(L²) once per pair). Each run consumes
+        // its own registry — a second extend would measure the steady state.
+        let mut pool: Vec<_> = (0..runs + 1)
+            .map(|_| warmed(&corpus, n, l, d, &query, ql, &opts))
+            .collect();
+        suite.time(&format!("{tag}/extend/warmup"), runs, || {
+            let (reg, id) = pool.pop().expect("one registry per run");
+            reg.extend_path(id, 0, &ext).unwrap();
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, None).unwrap());
+        });
+
+        // Steady-state extend: borders already retained (by a throwaway
+        // 1-point extend), so the timed extend solves only the
+        // O(L_new·L) strips of the pairs touching path 0, then re-queries.
+        let mut pool: Vec<_> = (0..runs + 1)
+            .map(|_| {
+                let (reg, id) = warmed(&corpus, n, l, d, &query, ql, &opts);
+                reg.extend_path(id, 0, &ext[..d]).unwrap();
+                (reg, id)
+            })
+            .collect();
+        suite.time(&format!("{tag}/extend/steady"), runs, || {
+            let (reg, id) = pool.pop().expect("one registry per run");
+            reg.extend_path(id, 0, &ext[d..]).unwrap();
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, None).unwrap());
+        });
+
+        // Derived ratio row (runs = 0, so the CI regression gate treats it
+        // as a non-timing row; the expect_min floor still applies).
+        if let (Some(scratch), Some(steady)) = (
+            suite.get(&format!("{tag}/extend/rescratch")),
+            suite.get(&format!("{tag}/extend/steady")),
+        ) {
+            suite.record(&format!("{tag}/extend/speedup_vs_rescratch_x"), scratch / steady);
+        }
+    }
+
+    // Window churn: a capacity-8 sliding window of length-256 paths at
+    // steady state. Each push appends one path's Gram strips and evicts the
+    // oldest (suffix shrink) — corpus shape is invariant, so one window
+    // serves every run.
+    let (w, lw) = (8usize, 256usize);
+    let mut rng = Rng::new(131);
+    let seed = rng.brownian_batch(w, lw, d, 0.3);
+    let fresh = rng.brownian_batch((runs + 1) * 8, lw, d, 0.3);
+    let sb = PathBatch::uniform(&seed, w, lw, d).unwrap();
+    let registry = Arc::new(CorpusRegistry::new());
+    let mut sc = SlidingCorpus::try_new(registry.clone(), &sb, w, None).unwrap();
+    let wq = rng.brownian_batch(1, ql, d, 0.35);
+    let wqb = PathBatch::uniform(&wq, 1, ql, d).unwrap();
+    registry.mmd2_query(sc.id(), &wqb, &opts, None).unwrap();
+    let mut next = 0usize;
+    suite.time("churn/push8", runs, || {
+        for _ in 0..8 {
+            let at = (next % ((runs + 1) * 8)) * lw * d;
+            sc.push(&fresh[at..at + lw * d], lw).unwrap();
+            next += 1;
+        }
+        std::hint::black_box(sc.len());
+    });
+
+    // Weighted window score: MMD²(8-path query window, 8-path reference)
+    // with decay 0.9 served from the warm reference self-Gram.
+    let refc = rng.brownian_batch(w, lw, d, 0.3);
+    let window = rng.brownian_batch(w, lw, d, 0.35);
+    let rb = PathBatch::uniform(&refc, w, lw, d).unwrap();
+    let wb = PathBatch::uniform(&window, w, lw, d).unwrap();
+    let reg = CorpusRegistry::new();
+    let rid = reg.register(&rb).unwrap();
+    reg.mmd2_window(rid, &wb, &opts, 0.9).unwrap();
+    suite.time("churn/mmd2_window", runs, || {
+        std::hint::black_box(reg.mmd2_window(rid, &wb, &opts, 0.9).unwrap());
+    });
+}

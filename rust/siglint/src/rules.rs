@@ -97,7 +97,10 @@ fn macro_calls(code: &str, name: &str) -> Vec<usize> {
 /// Files on the serving request path that must not contain a reachable
 /// panic in non-test code.
 fn panic_scope(path: &str) -> bool {
-    path.starts_with("src/coordinator/") || path == "src/corpus/registry.rs"
+    path.starts_with("src/coordinator/")
+        || path == "src/corpus/registry.rs"
+        || path == "src/corpus/stream.rs"
+        || path == "src/kernel/border.rs"
 }
 
 /// Keywords that can legally precede `[` without it being an index
@@ -547,6 +550,28 @@ fn leading_ident(piece: &str) -> Option<String> {
     Some(t[..end].to_string())
 }
 
+/// Declared value of `const OP_CODE_COUNT: usize = N;`, if the constant is
+/// present (fixture trios may omit it).
+fn op_code_count(code: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    for at in ident_positions(code, "OP_CODE_COUNT") {
+        let is_decl = prev_nonspace(bytes, at)
+            .is_some_and(|(p, b)| is_ident(b) && word_ending_at(bytes, p) == b"const");
+        if !is_decl {
+            continue;
+        }
+        let rest = &code[at..];
+        let (Some(eq), Some(semi)) = (rest.find('='), rest.find(';')) else {
+            continue;
+        };
+        if semi < eq {
+            continue;
+        }
+        return rest[eq + 1..semi].trim().parse().ok();
+    }
+    None
+}
+
 /// Non-test prefix of a file (everything before the first test span).
 fn non_test_code(sc: &Scrubbed) -> String {
     let mut out = String::with_capacity(sc.code.len());
@@ -564,8 +589,10 @@ fn non_test_code(sc: &Scrubbed) -> String {
 }
 
 /// Every `Op::` variant must appear in the wire encoder (`op_to_parts`),
-/// the wire decoder (`op_from_parts`), and the router's non-test dispatch —
-/// op-code drift is a lint failure, not a prod 500.
+/// the wire decoder (`op_from_parts`), the code map (`Op::code`, when
+/// present), and the router's non-test dispatch; and when the enum declares
+/// `OP_CODE_COUNT` (the per-op metrics array length) it must equal the
+/// variant count — op-code drift is a lint failure, not a prod 500.
 pub fn wire_exhaustive(files: &[(&SourceFile, Scrubbed)], findings: &mut Vec<Finding>) {
     let find = |path: &str| files.iter().find(|(f, _)| f.path == path);
     let Some((_, mod_sc)) = find("src/coordinator/mod.rs") else {
@@ -580,7 +607,24 @@ pub fn wire_exhaustive(files: &[(&SourceFile, Scrubbed)], findings: &mut Vec<Fin
     let Some((_, router_sc)) = find("src/coordinator/router.rs") else {
         return;
     };
-    let sites: [(&str, String); 3] = [
+    // Codes are 1-based and dense, so the declared count and the variant
+    // count must agree — a new variant without the bump silently truncates
+    // the per-op metrics array.
+    if let Some(n) = op_code_count(&non_test_code(mod_sc)) {
+        if n != variants.len() {
+            findings.push(Finding {
+                path: "src/coordinator/mod.rs".to_string(),
+                line: 1,
+                rule: "wire_exhaustive",
+                message: format!(
+                    "OP_CODE_COUNT = {n} but `enum Op` declares {} variants — \
+                     codes are 1-based and dense",
+                    variants.len()
+                ),
+            });
+        }
+    }
+    let mut sites: Vec<(&str, String)> = vec![
         (
             "encoder `op_to_parts` (src/coordinator/wire.rs)",
             fn_body(&wire_sc.code, "op_to_parts")
@@ -598,6 +642,14 @@ pub fn wire_exhaustive(files: &[(&SourceFile, Scrubbed)], findings: &mut Vec<Fin
             non_test_code(router_sc),
         ),
     ];
+    // The code map is a method on Op itself; fixture mods without one are
+    // still checkable against the other three sites.
+    if let Some((s, e)) = fn_body(&mod_sc.code, "code") {
+        sites.push((
+            "code map `Op::code` (src/coordinator/mod.rs)",
+            mod_sc.code[s..e].to_string(),
+        ));
+    }
     for v in &variants {
         for (where_, code) in &sites {
             let token = format!("Op::{v}");

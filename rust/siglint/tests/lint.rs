@@ -86,6 +86,58 @@ fn wire_exhaustive_fixture() {
 }
 
 #[test]
+fn wire_exhaustive_checks_op_code_count_and_the_code_map() {
+    // A mod whose OP_CODE_COUNT lags the variant count and whose code map
+    // swallows `B` in a wildcard: two findings on top of an otherwise
+    // fully-wired trio.
+    let mod_src = "pub const OP_CODE_COUNT: usize = 1;\n\
+                   pub enum Op {\n    A,\n    B,\n}\n\
+                   impl Op {\n    pub fn code(&self) -> u32 {\n        match self {\n            \
+                   Op::A => 1,\n            _ => 2,\n        }\n    }\n}\n";
+    let wire_src = "pub fn op_to_parts(op: &Op) -> (u32, u32) {\n    match op {\n        \
+                    Op::A => (1, 0),\n        Op::B => (2, 0),\n    }\n}\n\
+                    pub fn op_from_parts(code: u32) -> Option<Op> {\n    match code {\n        \
+                    1 => Some(Op::A),\n        2 => Some(Op::B),\n        _ => None,\n    }\n}\n";
+    let router_src = "pub fn dispatch(op: &Op) -> u32 {\n    match op {\n        \
+                      Op::A => 1,\n        Op::B => 2,\n    }\n}\n";
+    let files = vec![
+        SourceFile {
+            path: "src/coordinator/mod.rs".to_string(),
+            src: mod_src.to_string(),
+        },
+        SourceFile {
+            path: "src/coordinator/wire.rs".to_string(),
+            src: wire_src.to_string(),
+        },
+        SourceFile {
+            path: "src/coordinator/router.rs".to_string(),
+            src: router_src.to_string(),
+        },
+    ];
+    let f = lint(&files);
+    only_rule(&f, "wire_exhaustive");
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(
+        f.iter()
+            .any(|x| x.message.contains("OP_CODE_COUNT = 1") && x.message.contains("2 variants")),
+        "{f:?}"
+    );
+    assert!(
+        f.iter().any(|x| x.message.contains("Op::B") && x.message.contains("code map")),
+        "{f:?}"
+    );
+}
+
+#[test]
+fn the_streaming_files_are_in_the_panic_freedom_scope() {
+    for path in ["src/corpus/stream.rs", "src/kernel/border.rs"] {
+        let f = one(path, "pub fn f(v: &[f64]) -> f64 {\n    v[0]\n}\n");
+        only_rule(&f, "panic_freedom");
+        assert_eq!(f.len(), 1, "{path}: {f:?}");
+    }
+}
+
+#[test]
 fn no_unsafe_fixture() {
     let f = one("tests/fixture.rs", include_str!("fixtures/no_unsafe.rs"));
     only_rule(&f, "no_unsafe");

@@ -40,7 +40,7 @@ COMMANDS:
              --features nystrom|randsig  --depth N (randsig truncation)
              --seed S          landmark / sketch seed
   grad       exact signature-kernel gradients for a batch of pairs
-  corpus     corpus registry lifecycle (register → query → append)
+  corpus     corpus registry lifecycle (register → query → append → stream)
              corpus register --addr A --batch N --len L --dim D
              corpus append   --addr A --id I --batch K --len L --dim D
              corpus mmd      --addr A --id I --batch Q --len L --dim D
@@ -51,6 +51,14 @@ COMMANDS:
              lane width (0 scalar, 4, 8; default: PYSIGLIB_LANES or the
              shape-class default) and --tile T the Gram tile edge, with
              lane/tile occupancy printed after the run
+             corpus watch  --batch N --len L --dim D --window W --decay G
+                           --threshold T --calm C --drift K
+             live drift-monitor demo: streams calm then drifted paths
+             through a sliding window scored by weighted MMD² against the
+             reference corpus, printing per-path samples and alarms, then
+             extends a reference path in place and prints the Goursat
+             border-strip occupancy (O(L_new·L) cells, not O(L²)); with
+             --addr the windows are scored over the wire instead
   serve      run the serving coordinator
              --bind ADDR --max-batch N --max-wait-us U --pjrt --config FILE
   client     demo client: fires requests at a running server
@@ -529,6 +537,9 @@ fn cmd_grad(flags: &HashMap<String, String>) -> i32 {
 /// re-queries, printing per-stage latencies and the warm speedup.
 fn cmd_corpus(pos: &[String], flags: &HashMap<String, String>) -> i32 {
     let sub = pos.first().map(String::as_str).unwrap_or("");
+    if sub == "watch" {
+        return cmd_corpus_watch(flags);
+    }
     let batch = flag_usize(flags, "batch", 64);
     let len = flag_usize(flags, "len", 32);
     let dim = flag_usize(flags, "dim", 3);
@@ -582,7 +593,9 @@ fn cmd_corpus(pos: &[String], flags: &HashMap<String, String>) -> i32 {
                 })
             }
             other => {
-                eprintln!("unknown corpus subcommand '{other}' (expected register|append|mmd)");
+                eprintln!(
+                    "unknown corpus subcommand '{other}' (expected register|append|mmd|watch)"
+                );
                 return 2;
             }
         };
@@ -671,6 +684,171 @@ fn cmd_corpus(pos: &[String], flags: &HashMap<String, String>) -> i32 {
                 eprintln!("error: {e}");
                 1
             }
+        }
+    }
+}
+
+/// `corpus watch`: the live drift-monitor demo. In-process it registers a
+/// reference corpus, streams calm then drifted paths through a
+/// [`DriftMonitor`](crate::corpus::DriftMonitor) (sliding window scored by
+/// exponentially-weighted MMD² against the reference), prints every sample,
+/// then extends one reference path in place and reports the Goursat
+/// border-strip occupancy — the steady-state extension solves `O(L_new·L)`
+/// cells, not the `O(L²)` grid. With `--addr` the same windows are scored
+/// over the wire through the `Mmd2Window` op instead.
+fn cmd_corpus_watch(flags: &HashMap<String, String>) -> i32 {
+    let batch = flag_usize(flags, "batch", 16);
+    let len = flag_usize(flags, "len", 32);
+    let dim = flag_usize(flags, "dim", 2);
+    let capacity = flag_usize(flags, "window", 4).max(1);
+    let calm = flag_usize(flags, "calm", 6);
+    let drifted = flag_usize(flags, "drift", 6);
+    let decay = flags
+        .get("decay")
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.9);
+    let threshold = flags
+        .get("threshold")
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(1e-3);
+    let mut rng = Rng::new(flag_usize(flags, "seed", 49) as u64);
+    // The drift phase is a deterministic trend the Brownian reference never
+    // shows, so the alarm fires reliably in a demo run.
+    let trend_path = |len: usize, dim: usize| -> Vec<f64> {
+        (0..len * dim).map(|j| (j / dim) as f64 * 0.9).collect()
+    };
+
+    if let Some(addr) = flags.get("addr") {
+        // Wire mode: register the reference, then score each live window
+        // through the weighted window op.
+        let mut client = match crate::coordinator::Client::connect(addr.as_str()) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("connect {addr}: {e}");
+                return 1;
+            }
+        };
+        let reference: Vec<Vec<f64>> = (0..batch)
+            .map(|_| rng.brownian_path(len, dim, 0.3))
+            .collect();
+        let refs: Vec<&[f64]> = reference.iter().map(|p| p.as_slice()).collect();
+        let id = match client.register_corpus(&refs, dim) {
+            Ok(Ok(id)) => id,
+            Ok(Err(e)) => {
+                eprintln!("server error: {e}");
+                return 1;
+            }
+            Err(e) => {
+                eprintln!("io error: {e}");
+                return 1;
+            }
+        };
+        let decay_bp = ((decay * 10_000.0).round()).clamp(1.0, 10_000.0) as u32;
+        println!(
+            "corpus watch (wire): id={id} n={batch} len={len} dim={dim} window={capacity} \
+             decay_bp={decay_bp} threshold={threshold:.1e}"
+        );
+        let mut window: std::collections::VecDeque<Vec<f64>> = std::collections::VecDeque::new();
+        for t in 0..calm + drifted {
+            let path = if t < calm {
+                rng.brownian_path(len, dim, 0.3)
+            } else {
+                trend_path(len, dim)
+            };
+            window.push_back(path);
+            while window.len() > capacity {
+                window.pop_front();
+            }
+            let wrefs: Vec<&[f64]> = window.iter().map(|p| p.as_slice()).collect();
+            match client.mmd2_window(id, &wrefs, dim, decay_bp) {
+                Ok(Ok(v)) => println!(
+                    "  t={t:>3} phase={} window={} mmd2={v:.6e}{}",
+                    if t < calm { "calm " } else { "drift" },
+                    wrefs.len(),
+                    if v > threshold { "  ALARM" } else { "" }
+                ),
+                Ok(Err(e)) => {
+                    eprintln!("server error: {e}");
+                    return 1;
+                }
+                Err(e) => {
+                    eprintln!("io error: {e}");
+                    return 1;
+                }
+            }
+        }
+        return 0;
+    }
+
+    // In-process mode: the full DriftMonitor, then a border-strip demo.
+    let registry = Arc::new(crate::corpus::CorpusRegistry::new());
+    let reference = rng.brownian_batch(batch, len, dim, 0.3);
+    let run = |rng: &mut Rng| -> Result<(), crate::path::SigError> {
+        let rb = crate::path::PathBatch::uniform(&reference, batch, len, dim)?;
+        let id = registry.register(&rb)?;
+        let opts = KernelOptions::default();
+        let mut monitor = crate::corpus::DriftMonitor::try_new(
+            registry.clone(),
+            id,
+            opts,
+            capacity,
+            decay,
+            threshold,
+            3,
+        )?;
+        println!(
+            "corpus watch: reference n={batch} len={len} dim={dim} window={capacity} \
+             decay={decay} threshold={threshold:.1e}"
+        );
+        let mut alarms = 0usize;
+        for t in 0..calm + drifted {
+            let path = if t < calm {
+                rng.brownian_path(len, dim, 0.3)
+            } else {
+                trend_path(len, dim)
+            };
+            let sample = monitor.observe(&path, len)?;
+            if sample.alarm {
+                alarms += 1;
+            }
+            println!(
+                "  t={t:>3} phase={} window={} mmd2={:.6e}{}",
+                if t < calm { "calm " } else { "drift" },
+                sample.window_len,
+                sample.mmd2,
+                if sample.alarm { "  ALARM" } else { "" }
+            );
+        }
+        println!("  alarms={alarms} (drift phase had {drifted} paths)");
+        // Streaming extension: the first extend pays a one-time full
+        // retaining solve per touched pair; the second advances only the
+        // O(L_new·L) border strips.
+        let add = 4usize;
+        let warmup = rng.brownian_path(add, dim, 0.3);
+        let c0 = crate::kernel::border_cells_solved();
+        let t = std::time::Instant::now();
+        registry.extend_path(id, 0, &warmup)?;
+        let t_warm = t.elapsed().as_secs_f64();
+        let c1 = crate::kernel::border_cells_solved();
+        let strip = rng.brownian_path(add, dim, 0.3);
+        let t = std::time::Instant::now();
+        let new_len = registry.extend_path(id, 0, &strip)?;
+        let t_strip = t.elapsed().as_secs_f64();
+        let c2 = crate::kernel::border_cells_solved();
+        println!(
+            "  extend_path(+{add} pts, path 0 → {new_len}): warm-up {t_warm:.6}s \
+             ({} cells incl. retaining solves), steady-state {t_strip:.6}s ({} strip cells)",
+            c1 - c0,
+            c2 - c1,
+        );
+        println!("  stats: {:?}", registry.stats());
+        Ok(())
+    };
+    match run(&mut rng) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
         }
     }
 }

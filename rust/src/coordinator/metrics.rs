@@ -34,6 +34,10 @@ pub struct Metrics {
     pub corpus_warm_hits_total: AtomicU64,
     pub corpus_cold_builds_total: AtomicU64,
     pub corpus_registered_total: AtomicU64,
+    /// Streaming mirrors: path extensions (`ExtendPath`) and sliding-window
+    /// evictions (`EvictCorpus`) applied to the router's registry.
+    pub corpus_extended_total: AtomicU64,
+    pub corpus_evicted_total: AtomicU64,
     /// Lane-engine occupancy, mirrored from the counters in
     /// [`kernel::lanes`](crate::kernel::lanes) after each batch / corpus
     /// request: Gram tiles executed by the tile scheduler, full lane groups
@@ -66,6 +70,8 @@ impl Default for Metrics {
             corpus_warm_hits_total: AtomicU64::new(0),
             corpus_cold_builds_total: AtomicU64::new(0),
             corpus_registered_total: AtomicU64::new(0),
+            corpus_extended_total: AtomicU64::new(0),
+            corpus_evicted_total: AtomicU64::new(0),
             tiles_executed_total: AtomicU64::new(0),
             lane_groups_total: AtomicU64::new(0),
             lane_scalar_pairs_total: AtomicU64::new(0),
@@ -144,6 +150,10 @@ impl Metrics {
             .store(stats.cold_builds, Ordering::Relaxed);
         self.corpus_registered_total
             .store(stats.registered, Ordering::Relaxed);
+        self.corpus_extended_total
+            .store(stats.extended, Ordering::Relaxed);
+        self.corpus_evicted_total
+            .store(stats.evicted, Ordering::Relaxed);
     }
 
     /// Mean items per flushed batch — the batching efficiency signal.
@@ -287,10 +297,14 @@ mod tests {
             queries: 9,
             warm_hits: 6,
             cold_builds: 3,
+            extended: 4,
+            evicted: 2,
         });
         assert_eq!(m.corpus_warm_hits_total.load(Ordering::Relaxed), 6);
         assert_eq!(m.corpus_cold_builds_total.load(Ordering::Relaxed), 3);
         assert_eq!(m.corpus_registered_total.load(Ordering::Relaxed), 2);
+        assert_eq!(m.corpus_extended_total.load(Ordering::Relaxed), 4);
+        assert_eq!(m.corpus_evicted_total.load(Ordering::Relaxed), 2);
         let s = m.summary();
         assert!(s.contains("corpus_warm=6"), "{s}");
         assert!(s.contains("corpus_cold=3"), "{s}");

@@ -66,6 +66,19 @@ pub enum Op {
     /// (`rank` = 0 → exact with the cached corpus self-Gram; `rank` > 0 →
     /// Nyström at that rank with the wire seed). Ragged frames only.
     Mmd2Corpus { id: u32, rank: u32, transform: u8 },
+    /// Append the frame's single path (≥ 1 points) to path `path_idx` of
+    /// corpus `id`, advancing the cached Goursat border strips in place;
+    /// responds with the path's new length in points. Ragged frames only.
+    ExtendPath { id: u32, path_idx: u32 },
+    /// Evict all but the newest `keep` paths of corpus `id` (sliding-window
+    /// truncation); responds with the surviving path count. The frame
+    /// carries no paths. Ragged frames only.
+    EvictCorpus { id: u32, keep: u32 },
+    /// Exponentially-weighted MMD² between the frame's query window and
+    /// corpus `id`. `decay_bp` is the per-step weight decay in basis points
+    /// (1..=10000; 10000 → uniform weights). Exact kernel only. Ragged
+    /// frames only.
+    Mmd2Window { id: u32, decay_bp: u32, transform: u8 },
 }
 
 impl Op {
@@ -80,13 +93,16 @@ impl Op {
             Op::RegisterCorpus => 7,
             Op::AppendCorpus { .. } => 8,
             Op::Mmd2Corpus { .. } => 9,
+            Op::ExtendPath { .. } => 10,
+            Op::EvictCorpus { .. } => 11,
+            Op::Mmd2Window { .. } => 12,
         }
     }
 }
 
 /// Number of wire op codes (codes are 1-based and dense) — sizes the
 /// per-op metrics counters.
-pub const OP_CODE_COUNT: usize = 9;
+pub const OP_CODE_COUNT: usize = 12;
 
 /// Decode the transform byte used on the wire.
 pub fn transform_from_u8(v: u8) -> Option<Transform> {
@@ -179,9 +195,17 @@ mod tests {
                 rank: 0,
                 transform: 0,
             },
+            Op::ExtendPath { id: 0, path_idx: 0 },
+            Op::EvictCorpus { id: 0, keep: 1 },
+            Op::Mmd2Window {
+                id: 0,
+                decay_bp: 10000,
+                transform: 0,
+            },
         ];
         let codes: std::collections::HashSet<u32> = ops.iter().map(|o| o.code()).collect();
         assert_eq!(codes.len(), ops.len());
+        assert_eq!(ops.len(), OP_CODE_COUNT, "codes are 1-based and dense");
         assert!(ops.iter().all(|o| o.code() as usize <= OP_CODE_COUNT));
     }
 }

@@ -132,9 +132,14 @@ impl Router {
             }
             // Corpus ops are stateful and routed through the registry, not
             // through a bare op spec (see `execute_ragged`).
-            Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } => Err(
-                SigError::Invalid("corpus ops are served by the corpus route"),
-            ),
+            Op::RegisterCorpus
+            | Op::AppendCorpus { .. }
+            | Op::Mmd2Corpus { .. }
+            | Op::ExtendPath { .. }
+            | Op::EvictCorpus { .. }
+            | Op::Mmd2Window { .. } => Err(SigError::Invalid(
+                "corpus ops are served by the corpus route",
+            )),
         }
     }
 
@@ -303,9 +308,14 @@ impl Router {
             // above already returned this error, so this arm is never reached
             // — kept as a typed error rather than `unreachable!` so the
             // request path stays panic-free even if the dispatch order drifts.
-            Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } => Err(
-                SigError::Invalid("corpus ops are served by the corpus route"),
-            ),
+            Op::RegisterCorpus
+            | Op::AppendCorpus { .. }
+            | Op::Mmd2Corpus { .. }
+            | Op::ExtendPath { .. }
+            | Op::EvictCorpus { .. }
+            | Op::Mmd2Window { .. } => Err(SigError::Invalid(
+                "corpus ops are served by the corpus route",
+            )),
             Op::Mmd2LowRank { nx, .. } | Op::GramLowRank { nx, .. } => {
                 // Split the frame's paths at nx into the two corpora
                 // (validated at decode; re-checked here because frames can
@@ -373,6 +383,48 @@ impl Router {
                     opts: KernelOptions::default().transform(tr),
                     corpus: CorpusId(id),
                     lowrank,
+                };
+                let shape = ShapeClass::for_batch(&pb).bucketed();
+                let plan = self.plans.get_or_compile_corpus(spec, shape, &self.corpus)?;
+                Ok(Some(plan.execute(&pb)?.into_values()))
+            }
+            // Streaming lifecycle: ExtendPath's frame is exactly one path of
+            // new points (validated at decode; the registry re-checks the
+            // shape), EvictCorpus carries no paths at all.
+            Op::ExtendPath { id, path_idx } => {
+                // The registry only checks divisibility by the corpus dim;
+                // match the frame's declared dim against it so a dim-1 frame
+                // cannot silently extend a dim-2 corpus with half as many
+                // points (unknown ids fall through to the registry's error).
+                match self.corpus.dim_of(CorpusId(id)) {
+                    Some(d) if d != frame.dim => {
+                        return Err(SigError::DimMismatch {
+                            left: frame.dim,
+                            right: d,
+                        })
+                    }
+                    _ => {}
+                }
+                let new_len =
+                    self.corpus
+                        .extend_path(CorpusId(id), path_idx as usize, &frame.values)?;
+                Ok(Some(vec![new_len as f64]))
+            }
+            Op::EvictCorpus { id, keep } => {
+                let kept = self.corpus.evict(CorpusId(id), keep as usize)?;
+                Ok(Some(vec![kept as f64]))
+            }
+            Op::Mmd2Window {
+                id,
+                decay_bp,
+                transform,
+            } => {
+                let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
+                let pb = PathBatch::ragged(&frame.values, &frame.lengths, frame.dim)?;
+                let spec = OpSpec::Mmd2Window {
+                    opts: KernelOptions::default().transform(tr),
+                    corpus: CorpusId(id),
+                    decay: decay_bp as f64 / 10_000.0,
                 };
                 let shape = ShapeClass::for_batch(&pb).bucketed();
                 let plan = self.plans.get_or_compile_corpus(spec, shape, &self.corpus)?;
@@ -490,7 +542,12 @@ impl Router {
                 // programmatic construction.
                 errs("low-rank ops require a ragged-batch frame".to_string())
             }
-            Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } => {
+            Op::RegisterCorpus
+            | Op::AppendCorpus { .. }
+            | Op::Mmd2Corpus { .. }
+            | Op::ExtendPath { .. }
+            | Op::EvictCorpus { .. }
+            | Op::Mmd2Window { .. } => {
                 // Same guard for the corpus lifecycle ops.
                 errs("corpus ops require a ragged-batch frame".to_string())
             }
@@ -974,6 +1031,93 @@ mod tests {
         assert_eq!(st.registered, 1);
         assert_eq!(st.appended, 1);
         assert!(st.warm_hits >= 1 && st.cold_builds >= 1);
+    }
+
+    /// The streaming lifecycle over the router: extend a registered path
+    /// (bit-matching the registry driven directly), evict down to a window,
+    /// and score a weighted window MMD² — all through wire frames.
+    #[test]
+    fn stream_ops_roundtrip_through_the_router() {
+        let router = Router::native_only();
+        let mut rng = Rng::new(15);
+        let d = 2;
+        let corpus_lens = [5usize, 4, 6];
+        let mut corpus_values = Vec::new();
+        for &l in &corpus_lens {
+            corpus_values.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let id = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::RegisterCorpus,
+                dim: d,
+                lengths: corpus_lens.to_vec(),
+                values: corpus_values.clone(),
+            })
+            .unwrap()[0] as u32;
+        // Extend path 1 by three points; the response is its new length.
+        let extra = rng.brownian_path(3, d, 0.4);
+        let out = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::ExtendPath { id, path_idx: 1 },
+                dim: d,
+                lengths: vec![3],
+                values: extra.clone(),
+            })
+            .unwrap();
+        assert_eq!(out, vec![7.0]);
+        // A dim-mismatched extension errors instead of corrupting the path.
+        assert!(matches!(
+            router.execute_ragged(&RaggedFrame {
+                op: Op::ExtendPath { id, path_idx: 0 },
+                dim: 1,
+                lengths: vec![2],
+                values: vec![0.0, 1.0],
+            }),
+            Err(SigError::DimMismatch { .. })
+        ));
+        // Weighted window MMD² matches the registry driven directly.
+        let q_lens = [4usize, 5];
+        let mut q_values = Vec::new();
+        for &l in &q_lens {
+            q_values.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let wout = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::Mmd2Window {
+                    id,
+                    decay_bp: 9000,
+                    transform: 0,
+                },
+                dim: d,
+                lengths: q_lens.to_vec(),
+                values: q_values.clone(),
+            })
+            .unwrap();
+        let qb = PathBatch::ragged(&q_values, &q_lens, d).unwrap();
+        let want = router
+            .corpus_registry()
+            .mmd2_window(
+                crate::corpus::CorpusId(id),
+                &qb,
+                &KernelOptions::default(),
+                0.9,
+            )
+            .unwrap();
+        assert_eq!(wout, vec![want]);
+        // Evict down to the newest two paths; the response is the count.
+        let kept = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::EvictCorpus { id, keep: 2 },
+                dim: d,
+                lengths: vec![],
+                values: vec![],
+            })
+            .unwrap();
+        assert_eq!(kept, vec![2.0]);
+        assert_eq!(router.corpus_registry().path_count(CorpusId(id)), Some(2));
+        let st = router.corpus_stats();
+        assert_eq!(st.extended, 1);
+        assert_eq!(st.evicted, 1);
     }
 
     #[test]

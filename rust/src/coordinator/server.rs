@@ -355,6 +355,63 @@ impl Client {
         Ok(r.map(|v| v.first().copied().unwrap_or(0.0)))
     }
 
+    /// Convenience: append `points` (row-major `[n, dim]`, n ≥ 1) to path
+    /// `path_idx` of a registered corpus, advancing its cached border
+    /// strips in place; returns the path's new length in points.
+    pub fn extend_path(
+        &mut self,
+        id: u32,
+        path_idx: u32,
+        points: &[f64],
+        dim: usize,
+    ) -> std::io::Result<Result<usize, String>> {
+        let n = if dim == 0 { 0 } else { points.len() / dim };
+        let r = self.call_ragged(
+            Op::ExtendPath { id, path_idx },
+            dim,
+            vec![n],
+            points.to_vec(),
+        )?;
+        Ok(r.map(|v| v.first().copied().unwrap_or(0.0) as usize))
+    }
+
+    /// Convenience: evict all but the newest `keep` paths of a registered
+    /// corpus (sliding-window truncation); returns the surviving count.
+    pub fn evict_corpus(
+        &mut self,
+        id: u32,
+        keep: u32,
+        dim: usize,
+    ) -> std::io::Result<Result<usize, String>> {
+        let r = self.call_ragged(Op::EvictCorpus { id, keep }, dim, vec![], vec![])?;
+        Ok(r.map(|v| v.first().copied().unwrap_or(0.0) as usize))
+    }
+
+    /// Convenience: exponentially-weighted MMD² between a query window
+    /// (oldest path first, newest last) and a registered corpus. `decay_bp`
+    /// is the per-step weight decay in basis points (1..=10000; 10000 →
+    /// uniform weights).
+    pub fn mmd2_window(
+        &mut self,
+        id: u32,
+        window: &[&[f64]],
+        dim: usize,
+        decay_bp: u32,
+    ) -> std::io::Result<Result<f64, String>> {
+        let (lengths, values) = Self::ragged_payload(window, dim);
+        let r = self.call_ragged(
+            Op::Mmd2Window {
+                id,
+                decay_bp,
+                transform: 0,
+            },
+            dim,
+            lengths,
+            values,
+        )?;
+        Ok(r.map(|v| v.first().copied().unwrap_or(0.0)))
+    }
+
     /// Convenience: signature kernels of (x_i, y_i) pairs of arbitrary
     /// lengths in one round trip. Returns `[pairs]`.
     pub fn sig_kernel_ragged(

@@ -108,6 +108,13 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
             rank,
             transform,
         } => (9, id, rank, transform as u32),
+        Op::ExtendPath { id, path_idx } => (10, id, path_idx, 0),
+        Op::EvictCorpus { id, keep } => (11, id, keep, 0),
+        Op::Mmd2Window {
+            id,
+            decay_bp,
+            transform,
+        } => (12, id, decay_bp, transform as u32),
     }
 }
 
@@ -148,6 +155,30 @@ fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
             rank: p2,
             transform,
         }),
+        10 => Ok(Op::ExtendPath {
+            id: p1,
+            path_idx: p2,
+        }),
+        11 => {
+            if p2 == 0 {
+                return Err(SigError::Protocol(
+                    "EvictCorpus must keep at least one path".to_string(),
+                ));
+            }
+            Ok(Op::EvictCorpus { id: p1, keep: p2 })
+        }
+        12 => {
+            if p2 == 0 || p2 > 10_000 {
+                return Err(SigError::Protocol(format!(
+                    "Mmd2Window decay_bp {p2} outside 1..=10000"
+                )));
+            }
+            Ok(Op::Mmd2Window {
+                id: p1,
+                decay_bp: p2,
+                transform,
+            })
+        }
         other => Err(SigError::Protocol(format!("unknown op code {other}"))),
     }
 }
@@ -247,7 +278,12 @@ fn validate_single(op: Op, len: usize, dim: usize, n_values: usize) -> Result<()
     }
     if matches!(
         op,
-        Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. }
+        Op::RegisterCorpus
+            | Op::AppendCorpus { .. }
+            | Op::Mmd2Corpus { .. }
+            | Op::ExtendPath { .. }
+            | Op::EvictCorpus { .. }
+            | Op::Mmd2Window { .. }
     ) {
         return Err(SigError::Protocol(
             "corpus ops take a ragged-batch frame, not a single-path frame".to_string(),
@@ -296,14 +332,28 @@ fn validate_ragged(
     }
     // Corpus ops carry at least one path (an empty registration / append /
     // query is meaningless and the registry would reject it anyway).
+    // Streaming ops have their own shapes: ExtendPath is exactly one path
+    // of new points, EvictCorpus is pure control and carries none.
     if matches!(
         op,
-        Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. }
+        Op::RegisterCorpus | Op::AppendCorpus { .. } | Op::Mmd2Corpus { .. } | Op::Mmd2Window { .. }
     ) && lengths.is_empty()
     {
         return Err(SigError::Protocol(
             "corpus ops need at least one path in the frame".to_string(),
         ));
+    }
+    if matches!(op, Op::ExtendPath { .. }) && lengths.len() != 1 {
+        return Err(SigError::Protocol(format!(
+            "ExtendPath takes exactly one path of new points; got {} paths",
+            lengths.len()
+        )));
+    }
+    if matches!(op, Op::EvictCorpus { .. }) && !lengths.is_empty() {
+        return Err(SigError::Protocol(format!(
+            "EvictCorpus is pure control; the frame must carry no paths, got {}",
+            lengths.len()
+        )));
     }
     // Low-rank ops split the frame's paths at `nx`: both corpora must be
     // non-empty for the split to be meaningful.
@@ -604,9 +654,9 @@ mod tests {
 
     #[test]
     fn unknown_op_and_bad_transform_are_soft_errors() {
-        // Unknown op code 9.
+        // Unknown op code 13 (codes 1..=12 are assigned).
         let mut buf = Vec::new();
-        for h in [MAGIC, 9, 0, 0, 0, 2, 1, 2u32] {
+        for h in [MAGIC, 13, 0, 0, 0, 2, 1, 2u32] {
             buf.extend_from_slice(&h.to_le_bytes());
         }
         buf.extend_from_slice(&1.0f64.to_le_bytes());
@@ -741,6 +791,97 @@ mod tests {
         };
         let mut buf = Vec::new();
         write_ragged_request(&mut buf, &frame).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+    }
+
+    #[test]
+    fn stream_ops_roundtrip_with_their_frame_shapes() {
+        // ExtendPath: exactly one path of new points (a single point is a
+        // legal extension).
+        for len in [1usize, 4] {
+            let frame = RaggedFrame {
+                op: Op::ExtendPath { id: 2, path_idx: 1 },
+                dim: 2,
+                lengths: vec![len],
+                values: vec![0.5; len * 2],
+            };
+            let mut buf = Vec::new();
+            write_ragged_request(&mut buf, &frame).unwrap();
+            assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
+        }
+        // EvictCorpus: pure control, no paths.
+        let frame = RaggedFrame {
+            op: Op::EvictCorpus { id: 2, keep: 3 },
+            dim: 1,
+            lengths: vec![],
+            values: vec![],
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
+        // Mmd2Window: a normal query window.
+        let frame = RaggedFrame {
+            op: Op::Mmd2Window {
+                id: 2,
+                decay_bp: 9500,
+                transform: 1,
+            },
+            dim: 2,
+            lengths: vec![3, 2],
+            values: (0..10).map(|v| v as f64).collect(),
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
+    }
+
+    #[test]
+    fn stream_ops_reject_malformed_frames() {
+        // ExtendPath with two paths is a soft error.
+        let frame = RaggedFrame {
+            op: Op::ExtendPath { id: 0, path_idx: 0 },
+            dim: 1,
+            lengths: vec![2, 2],
+            values: vec![0.0; 4],
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+        // EvictCorpus carrying paths is a soft error.
+        let frame = RaggedFrame {
+            op: Op::EvictCorpus { id: 0, keep: 1 },
+            dim: 1,
+            lengths: vec![2],
+            values: vec![0.0; 2],
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+        // EvictCorpus keep=0 and Mmd2Window decay_bp outside 1..=10000 are
+        // rejected at decode.
+        for (code, p2) in [(11u32, 0u32), (12, 0), (12, 10_001)] {
+            let mut buf = Vec::new();
+            for h in [MAGIC_RAGGED, code, 1, p2, 0, 0, 1, 0u32] {
+                buf.extend_from_slice(&h.to_le_bytes());
+            }
+            let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+            assert!(
+                matches!(got, Err(SigError::Protocol(_))),
+                "code={code} p2={p2}: {got:?}"
+            );
+        }
+        // Single-path frames cannot carry stream ops.
+        let f = Frame {
+            op: Op::ExtendPath { id: 0, path_idx: 0 },
+            len: 2,
+            dim: 1,
+            values: vec![0.0, 1.0],
+        };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &f).unwrap();
         let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
         assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
     }

@@ -32,13 +32,24 @@
 //!   paths) so appends cannot move it once the corpus covers the rank
 //!   budget.
 //!
+//! * **Streaming** ([`stream`]) — [`CorpusRegistry::extend_path`] appends
+//!   points to one registered path by advancing Goursat **border strips**
+//!   (`O(L_new·L)` cells per affected pair, see
+//!   [`kernel::border`](crate::kernel::border)) instead of re-solving full
+//!   grids; [`CorpusRegistry::evict`] gives sliding-window semantics; and
+//!   [`DriftMonitor`](stream::DriftMonitor) turns the pair into a live
+//!   MMD² drift alarm with exponentially-decayed window weights
+//!   ([`CorpusRegistry::mmd2_window`]).
+//!
 //! The engine exposes corpora as first-class plans —
 //! [`OpSpec::GramCorpus`](crate::engine::OpSpec::GramCorpus) /
-//! [`OpSpec::Mmd2Corpus`](crate::engine::OpSpec::Mmd2Corpus) compiled via
+//! [`OpSpec::Mmd2Corpus`](crate::engine::OpSpec::Mmd2Corpus) /
+//! [`OpSpec::Mmd2Window`](crate::engine::OpSpec::Mmd2Window) compiled via
 //! [`Plan::compile_corpus`](crate::engine::Plan::compile_corpus) — and the
 //! coordinator serves the full lifecycle over the wire
-//! (`RegisterCorpus` / `AppendCorpus` / `Mmd2Corpus` ops, CLI
-//! `corpus register|append|mmd`).
+//! (`RegisterCorpus` / `AppendCorpus` / `Mmd2Corpus` / `ExtendPath` /
+//! `EvictCorpus` / `Mmd2Window` ops, CLI `corpus
+//! register|append|mmd|watch`).
 //!
 //! ```no_run
 //! use pysiglib::corpus::CorpusRegistry;
@@ -58,9 +69,11 @@
 //! ```
 
 pub mod registry;
+pub mod stream;
 pub mod tiles;
 
 pub use registry::{CorpusId, CorpusRegistry, CorpusStats};
+pub use stream::{DriftMonitor, DriftSample, SlidingCorpus};
 pub use tiles::TileScheduler;
 
 #[cfg(test)]

@@ -22,6 +22,19 @@
 //! a prefix that appends never change. An append that *grows* the pool
 //! (corpus still smaller than `rank`) discards the cached map instead, and
 //! the next query rebuilds it exactly as a from-scratch registration would.
+//!
+//! **Streaming extension.** [`CorpusRegistry::extend_path`] appends points
+//! to one *registered* path. Only row/column `k` of `K_cc` move, and with
+//! the row solver each affected pair advances by a Goursat **border strip**
+//! ([`crate::kernel::border`]): the retained last row/column of the solved
+//! grid continues the sweep over `O(L_new·L)` fresh cells instead of the
+//! full `O(L²)` grid. The first extension of a pair pays one full retaining
+//! solve (there is no border yet — cold registration does not pay the
+//! retention cost for paths that never stream); every later extension is a
+//! strip. [`CorpusRegistry::evict`] drops the oldest paths, shrinking every
+//! cache to the surviving suffix, and [`CorpusRegistry::mmd2_window`]
+//! serves an exponentially-weighted MMD² for sliding live windows. All
+//! three are bit-identical to rebuilding from scratch on the same data.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
@@ -29,9 +42,12 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::corpus::tiles::TileScheduler;
 use crate::engine::MAX_BATCH_OUT;
+use crate::kernel::border::{self, PairBorder};
+use crate::kernel::delta::{delta_matrix, increments_into};
 use crate::kernel::lowrank::{feature_mean, FeatureMap, LowRankFeatures, LowRankSpec};
-use crate::kernel::KernelOptions;
+use crate::kernel::{KernelOptions, SolverKind};
 use crate::path::{PathBatch, SigError};
+use crate::transforms::Transform;
 use crate::util::linalg::gemm_nt;
 use crate::util::sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
 
@@ -59,12 +75,21 @@ pub struct CorpusStats {
     pub warm_hits: u64,
     /// Queries that had to build derived state (self-Gram / feature map).
     pub cold_builds: u64,
+    /// Streaming path extensions applied (`extend_path`).
+    pub extended: u64,
+    /// Sliding-window evictions applied (`evict`).
+    pub evicted: u64,
 }
 
 /// Cached exact-kernel state for one [`KernelOptions`].
 struct ExactCache {
     /// Corpus self-Gram `[n, n]` row-major.
     kcc: Vec<f64>,
+    /// Retained Goursat borders keyed by ordered path pair `(i, j)`,
+    /// populated lazily by the first `extend_path` that touches a pair.
+    /// Queries never read them; appends keep them (old grids are
+    /// unchanged); evictions rekey the surviving suffix.
+    borders: HashMap<(usize, usize), PairBorder>,
 }
 
 /// Cached low-rank state for one (options, spec) pair.
@@ -158,6 +183,8 @@ pub struct CorpusRegistry {
     queries: AtomicU64,
     warm_hits: AtomicU64,
     cold_builds: AtomicU64,
+    extended: AtomicU64,
+    evicted: AtomicU64,
 }
 
 impl Default for CorpusRegistry {
@@ -184,6 +211,8 @@ impl CorpusRegistry {
             queries: AtomicU64::new(0),
             warm_hits: AtomicU64::new(0),
             cold_builds: AtomicU64::new(0),
+            extended: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
         }
     }
 
@@ -334,6 +363,264 @@ impl CorpusRegistry {
         Ok(n)
     }
 
+    /// Append points to one registered path (streaming extension). Only
+    /// row/column `path_idx` of each cached self-Gram change; with the row
+    /// solver they advance by Goursat border strips — `O(L_new·L)` cells
+    /// per pair once the pair's border has been retained (the first
+    /// extension pays one full retaining solve) — and the blocked solver
+    /// re-solves the row/column through the tile scheduler. Low-rank
+    /// caches re-featurise the one extended row (or rebuild, if the path
+    /// sits in a Nyström landmark pool). Every outcome is bit-identical to
+    /// re-registering the extended corpus from scratch; a cache whose
+    /// extension fails is dropped rather than left stale. Returns the
+    /// path's new length in points.
+    pub fn extend_path(
+        &self,
+        id: CorpusId,
+        path_idx: usize,
+        points: &[f64],
+    ) -> Result<usize, SigError> {
+        let arc = self.entry(id)?;
+        let mut e = write_unpoisoned(&arc);
+        if e.dim == 0 || points.len() % e.dim != 0 {
+            return Err(SigError::Invalid(
+                "extend_path: points are not a whole number of dim-d samples",
+            ));
+        }
+        let l_old = *e
+            .lengths
+            .get(path_idx)
+            .ok_or(SigError::Invalid("extend_path: path index out of range"))?;
+        let add = points.len() / e.dim;
+        if add == 0 {
+            return Ok(l_old);
+        }
+        let old_hash = e.hash;
+        let insert_at: usize = e.lengths.iter().take(path_idx + 1).sum::<usize>() * e.dim;
+        if insert_at > e.data.len() {
+            return Err(SigError::Invalid("extend_path: corpus layout corrupt"));
+        }
+        e.data.splice(insert_at..insert_at, points.iter().copied());
+        let l_new = l_old + add;
+        if let Some(l) = e.lengths.get_mut(path_idx) {
+            *l = l_new;
+        }
+        let CorpusEntry {
+            dim,
+            data,
+            lengths,
+            hash,
+            exact,
+            lowrank,
+        } = &mut *e;
+        let cb = PathBatch::ragged(data, lengths, *dim)?;
+        let exact_keys: Vec<KernelOptions> = exact.keys().copied().collect();
+        for opts in exact_keys {
+            let ok = match exact.get_mut(&opts) {
+                Some(c) => extend_exact_cache(&self.tiles, &cb, c, path_idx, l_old, &opts),
+                None => continue,
+            };
+            if ok.is_err() {
+                exact.remove(&opts);
+            }
+        }
+        let lr_keys: Vec<(KernelOptions, LowRankSpec)> = lowrank.keys().copied().collect();
+        for key in lr_keys {
+            let (opts, spec) = key;
+            let (pool, map) = match lowrank.get(&key) {
+                Some(c) => (c.pool, c.map.clone()),
+                None => continue,
+            };
+            // Random-signature sketches never depend on the path data;
+            // Nyström maps are frozen unless the extended path is one of
+            // the landmarks.
+            let map_intact = path_idx >= pool
+                || matches!(spec.method, crate::kernel::LowRankMethod::RandomSig { .. });
+            if map_intact {
+                match refeaturise_row(&cb, path_idx, &map) {
+                    Ok(row) => {
+                        let r = map.rank();
+                        if let Some(c) = lowrank.get_mut(&key) {
+                            if let Some(dst) = c.phi.get_mut(path_idx * r..(path_idx + 1) * r) {
+                                dst.copy_from_slice(&row);
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        lowrank.remove(&key);
+                    }
+                }
+            } else {
+                match build_lowrank(&cb, &opts, &spec) {
+                    Ok(rebuilt) => {
+                        lowrank.insert(key, rebuilt);
+                    }
+                    Err(_) => {
+                        lowrank.remove(&key);
+                    }
+                }
+            }
+        }
+        *hash = content_hash(*dim, lengths, data);
+        let new_hash = *hash;
+        drop(e);
+        {
+            let mut by_hash = lock_unpoisoned(&self.by_hash);
+            if by_hash.get(&old_hash) == Some(&id.0) {
+                by_hash.remove(&old_hash);
+            }
+            by_hash.insert(new_hash, id.0);
+        }
+        self.extended.fetch_add(1, Ordering::Relaxed);
+        Ok(l_new)
+    }
+
+    /// Evict the oldest paths, keeping the most recent `keep` (sliding
+    /// window / ring-buffer semantics). Every cache shrinks to the
+    /// surviving suffix: the self-Gram keeps its bottom-right block and
+    /// retained borders rekey (Gram entries are independent computations),
+    /// random-signature features drop the evicted rows, and Nyström state
+    /// rebuilds (its landmark pool is a corpus prefix, which eviction
+    /// changes) — all bit-identical to registering the survivors from
+    /// scratch. `keep = 0` is an error (an empty corpus has no means);
+    /// `keep >= n` is a no-op. Returns the new path count.
+    pub fn evict(&self, id: CorpusId, keep: usize) -> Result<usize, SigError> {
+        if keep == 0 {
+            return Err(SigError::Invalid("evict must keep at least one path"));
+        }
+        let arc = self.entry(id)?;
+        let mut e = write_unpoisoned(&arc);
+        let n_old = e.lengths.len();
+        if keep >= n_old {
+            return Ok(n_old);
+        }
+        let drop_n = n_old - keep;
+        let old_hash = e.hash;
+        let drop_pts: usize = e.lengths.iter().take(drop_n).sum();
+        e.data.drain(..drop_pts * e.dim);
+        e.lengths.drain(..drop_n);
+        let n = keep;
+        let CorpusEntry {
+            dim,
+            data,
+            lengths,
+            hash,
+            exact,
+            lowrank,
+        } = &mut *e;
+        for c in exact.values_mut() {
+            let mut kcc = vec![0.0; n * n];
+            for (dst, src) in kcc.chunks_mut(n).zip(c.kcc.chunks(n_old).skip(drop_n)) {
+                if let Some(tail) = src.get(drop_n..drop_n + n) {
+                    dst.copy_from_slice(tail);
+                }
+            }
+            c.kcc = kcc;
+            let old_borders = std::mem::take(&mut c.borders);
+            for ((a, b), pb) in old_borders {
+                if a >= drop_n && b >= drop_n {
+                    c.borders.insert((a - drop_n, b - drop_n), pb);
+                }
+            }
+        }
+        let cb = PathBatch::ragged(data, lengths, *dim)?;
+        let lr_keys: Vec<(KernelOptions, LowRankSpec)> = lowrank.keys().copied().collect();
+        for key in lr_keys {
+            let (opts, spec) = key;
+            if matches!(spec.method, crate::kernel::LowRankMethod::RandomSig { .. }) {
+                // The sketch depends only on (seed, shape): drop the
+                // evicted feature rows, keep the map.
+                if let Some(c) = lowrank.get_mut(&key) {
+                    let r = c.map.rank();
+                    c.phi.drain(..drop_n * r);
+                    c.pool = spec.rank.min(n);
+                }
+            } else {
+                match build_lowrank(&cb, &opts, &spec) {
+                    Ok(rebuilt) => {
+                        lowrank.insert(key, rebuilt);
+                    }
+                    Err(_) => {
+                        lowrank.remove(&key);
+                    }
+                }
+            }
+        }
+        *hash = content_hash(*dim, lengths, data);
+        let new_hash = *hash;
+        drop(e);
+        {
+            let mut by_hash = lock_unpoisoned(&self.by_hash);
+            if by_hash.get(&old_hash) == Some(&id.0) {
+                by_hash.remove(&old_hash);
+            }
+            by_hash.insert(new_hash, id.0);
+        }
+        self.evicted.fetch_add(1, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    /// Exponentially-weighted MMD² between a query window and the corpus:
+    /// the newest window path (the *last* row of `q`) has weight 1 and each
+    /// older path decays by `decay ∈ (0, 1]`. `decay = 1` recovers the
+    /// uniform estimator up to floating-point summation order. Exact-kernel
+    /// only; the corpus term is served from the cached self-Gram.
+    pub fn mmd2_window(
+        &self,
+        id: CorpusId,
+        q: &PathBatch<'_>,
+        opts: &KernelOptions,
+        decay: f64,
+    ) -> Result<f64, SigError> {
+        self.mmd2_window_with_grad(id, q, opts, decay).map(|(v, _)| v)
+    }
+
+    /// [`mmd2_window`](CorpusRegistry::mmd2_window) plus the analytic
+    /// derivative of the weighted estimator with respect to `decay`
+    /// (FD-checked in the property tests) — the knob a monitor tunes.
+    pub fn mmd2_window_with_grad(
+        &self,
+        id: CorpusId,
+        q: &PathBatch<'_>,
+        opts: &KernelOptions,
+        decay: f64,
+    ) -> Result<(f64, f64), SigError> {
+        if !decay.is_finite() || decay <= 0.0 || decay > 1.0 {
+            return Err(SigError::Invalid("window decay must lie in (0, 1]"));
+        }
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let arc = self.entry(id)?;
+        // Same warm/cold locking discipline as `mmd2_query`: query-side
+        // solves always run under the shared lock.
+        let mut just_built = false;
+        loop {
+            {
+                let e = read_unpoisoned(&arc);
+                e.check_query(q, opts)?;
+                if let Some(c) = e.exact.get(opts) {
+                    if !just_built {
+                        self.warm_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return self.mmd2_window_value(&e, q, opts, &c.kcc, decay);
+                }
+            }
+            let mut e = write_unpoisoned(&arc);
+            e.check_query(q, opts)?;
+            if e.exact.get(opts).is_none() {
+                let kcc = build_kcc(&self.tiles, &e.batch()?, opts)?;
+                e.exact.insert(
+                    *opts,
+                    ExactCache {
+                        kcc,
+                        borders: HashMap::new(),
+                    },
+                );
+                self.cold_builds.fetch_add(1, Ordering::Relaxed);
+                just_built = true;
+            }
+        }
+    }
+
     /// Cross-Gram `[q.batch(), n]` of a query batch against the corpus —
     /// exact (tiled PDE solves) or, with a spec, low-rank `Φ_q · Φ_cᵀ`
     /// reusing the cached corpus features.
@@ -414,7 +701,13 @@ impl CorpusRegistry {
                     e.check_query(q, opts)?;
                     if e.exact.get(opts).is_none() {
                         let kcc = build_kcc(&self.tiles, &e.batch()?, opts)?;
-                        e.exact.insert(*opts, ExactCache { kcc });
+                        e.exact.insert(
+                            *opts,
+                            ExactCache {
+                                kcc,
+                                borders: HashMap::new(),
+                            },
+                        );
                         self.cold_builds.fetch_add(1, Ordering::Relaxed);
                         just_built = true;
                     }
@@ -466,6 +759,8 @@ impl CorpusRegistry {
             queries: self.queries.load(Ordering::Relaxed),
             warm_hits: self.warm_hits.load(Ordering::Relaxed),
             cold_builds: self.cold_builds.load(Ordering::Relaxed),
+            extended: self.extended.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
         }
     }
 
@@ -537,6 +832,64 @@ impl CorpusRegistry {
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
         Ok(mean(&kqq) - 2.0 * mean(&kqc) + mean(kcc))
     }
+
+    /// Weighted MMD² and its ∂/∂decay. With `w_i = decay^(q−1−i)` and
+    /// `S = Σ w_i`:
+    ///
+    ///   MMD²_w = (Σ_ij w_i w_j K_qq[i,j]) / S²
+    ///          − 2·(Σ_i w_i Σ_j K_qc[i,j]) / (S·n) + mean(K_cc)
+    ///
+    /// The derivative follows by the product/quotient rules with
+    /// `w_i' = (q−1−i)·decay^(q−2−i)`; the corpus term is constant.
+    fn mmd2_window_value(
+        &self,
+        e: &CorpusEntry,
+        q: &PathBatch<'_>,
+        opts: &KernelOptions,
+        kcc: &[f64],
+        decay: f64,
+    ) -> Result<(f64, f64), SigError> {
+        let qb = q.batch();
+        let n = e.lengths.len();
+        let gram_len = |a: usize, b: usize| -> Result<usize, SigError> {
+            a.checked_mul(b)
+                .filter(|&t| t <= MAX_BATCH_OUT)
+                .ok_or(SigError::TooLarge("corpus mmd2 gram matrices"))
+        };
+        let mut kqq = vec![0.0; gram_len(qb, qb)?];
+        self.tiles.gram_into(q, q, opts, &mut kqq)?;
+        let mut kqc = vec![0.0; gram_len(qb, n)?];
+        self.tiles.gram_into(q, &e.batch()?, opts, &mut kqc)?;
+        let mut w = vec![0.0; qb];
+        let mut dw = vec![0.0; qb];
+        for (i, (wi, dwi)) in w.iter_mut().zip(dw.iter_mut()).enumerate() {
+            let p = (qb - 1 - i) as i32;
+            *wi = decay.powi(p);
+            *dwi = if p == 0 { 0.0 } else { p as f64 * decay.powi(p - 1) };
+        }
+        let s: f64 = w.iter().sum();
+        let ds: f64 = dw.iter().sum();
+        let (mut a, mut da) = (0.0, 0.0);
+        for ((wi, dwi), row) in w.iter().zip(dw.iter()).zip(kqq.chunks(qb)) {
+            for ((wj, dwj), &kv) in w.iter().zip(dw.iter()).zip(row.iter()) {
+                a += wi * wj * kv;
+                da += (dwi * wj + wi * dwj) * kv;
+            }
+        }
+        let (mut b, mut db) = (0.0, 0.0);
+        for ((wi, dwi), row) in w.iter().zip(dw.iter()).zip(kqc.chunks(n.max(1))) {
+            let rs: f64 = row.iter().sum();
+            b += wi * rs;
+            db += dwi * rs;
+        }
+        let c = kcc.iter().sum::<f64>() / kcc.len().max(1) as f64;
+        let nn = n.max(1) as f64;
+        let s2 = s * s;
+        let value = a / s2 - 2.0 * b / (s * nn) + c;
+        let grad = da / s2 - 2.0 * a * ds / (s2 * s) - 2.0 * db / (s * nn)
+            + 2.0 * b * ds / (s2 * nn);
+        Ok((value, grad))
+    }
 }
 
 /// The corpus suffix `paths[n_old..]` as its own batch view.
@@ -597,6 +950,207 @@ fn grow_kcc(
     tiles.gram_block_into(cb, 0..n_old, cb, n_old..n, opts, &mut kcc, n, 0, n_old)?;
     tiles.gram_block_into(cb, n_old..n, cb, 0..n, opts, &mut kcc, n, n_old, 0)?;
     Ok(kcc)
+}
+
+/// Extend one cached exact self-Gram in place after path `k` grew from
+/// `l_old` to its current length: only row/column `k` change. With the row
+/// solver each ordered pair advances by a Goursat border strip (the first
+/// touch pays a full retaining solve); the blocked solver's schedule has a
+/// different floating-point order than the border sweep, so it re-solves
+/// the row/column through the tile scheduler instead. Both are
+/// bit-identical to a from-scratch rebuild because every Gram entry is an
+/// independent computation.
+fn extend_exact_cache(
+    tiles: &TileScheduler,
+    cb: &PathBatch<'_>,
+    cache: &mut ExactCache,
+    k: usize,
+    l_old: usize,
+    opts: &KernelOptions,
+) -> Result<(), SigError> {
+    let n = cb.batch();
+    let l_new = cb.len_of(k);
+    let mc = (0..n).map(|j| cb.len_of(j)).max().unwrap_or(0);
+    if l_new >= 2 && mc >= 2 {
+        crate::kernel::check_grid_size(l_new, mc, opts)?;
+    }
+    if opts.solver != SolverKind::Row {
+        tiles.gram_block_into(cb, k..k + 1, cb, 0..n, opts, &mut cache.kcc, n, k, 0)?;
+        tiles.gram_block_into(cb, 0..n, cb, k..k + 1, opts, &mut cache.kcc, n, 0, k)?;
+        cache.borders.retain(|&(a, b), _| a != k && b != k);
+        return Ok(());
+    }
+    let dim = cb.dim();
+    let tr = opts.exec.transform;
+    let (lam1, lam2) = (opts.dyadic_x, opts.dyadic_y);
+    let x_new = cb.values_of(k);
+    let lx_sub = l_new - l_old + 1; // overlap point + appended points
+    let sub_start = l_old.saturating_sub(1) * dim;
+    let sub = x_new.get(sub_start..).unwrap_or(&[]);
+    let stripable = l_old >= 2;
+    for j in 0..n {
+        if j == k {
+            // Diagonal pair: both sides grew — columns first across the old
+            // rows, then the new rows at full width (see kernel::border).
+            let full_m = tr.out_len(l_new).saturating_sub(1);
+            let t = match cache.borders.get_mut(&(k, k)) {
+                Some(bd) if stripable => {
+                    let x_old = x_new.get(..l_old * dim).unwrap_or(&[]);
+                    let (m1, n1, strip) =
+                        delta_strip(x_old, sub, l_old, lx_sub, dim, tr, full_m, full_m)?;
+                    border::extend_cols(bd, &strip, m1, n1, lam1, lam2)?;
+                    let (m2, n2, strip) =
+                        delta_strip(sub, x_new, lx_sub, l_new, dim, tr, full_m, full_m)?;
+                    border::extend_rows(bd, &strip, m2, n2, lam1, lam2)?;
+                    bd.terminal()
+                }
+                _ => {
+                    let (m, nn, dl) = delta_matrix(x_new, x_new, l_new, l_new, dim, tr);
+                    let bd = border::solve_full_retain(&dl, m, nn, lam1, lam2)?;
+                    let t = bd.terminal();
+                    cache.borders.insert((k, k), bd);
+                    t
+                }
+            };
+            if let Some(slot) = cache.kcc.get_mut(k * n + k) {
+                *slot = t;
+            }
+            continue;
+        }
+        let ly = cb.len_of(j);
+        if ly < 2 {
+            // Degenerate partner: the kernel is the constant 1, exactly as
+            // the scalar per-pair path resolves it.
+            for idx in [k * n + j, j * n + k] {
+                if let Some(slot) = cache.kcc.get_mut(idx) {
+                    *slot = 1.0;
+                }
+            }
+            continue;
+        }
+        let y = cb.values_of(j);
+        let full_rows = tr.out_len(l_new).saturating_sub(1);
+        let full_cols = tr.out_len(ly).saturating_sub(1);
+        // Pair (k, j): the extended path supplies the grid rows.
+        let t = match cache.borders.get_mut(&(k, j)) {
+            Some(bd) if stripable => {
+                let (m1, n1, strip) =
+                    delta_strip(sub, y, lx_sub, ly, dim, tr, full_rows, full_cols)?;
+                border::extend_rows(bd, &strip, m1, n1, lam1, lam2)?;
+                bd.terminal()
+            }
+            _ => {
+                let (m, nn, dl) = delta_matrix(x_new, y, l_new, ly, dim, tr);
+                let bd = border::solve_full_retain(&dl, m, nn, lam1, lam2)?;
+                let t = bd.terminal();
+                cache.borders.insert((k, j), bd);
+                t
+            }
+        };
+        if let Some(slot) = cache.kcc.get_mut(k * n + j) {
+            *slot = t;
+        }
+        // Pair (j, k): the extended path supplies the grid columns.
+        let t = match cache.borders.get_mut(&(j, k)) {
+            Some(bd) if stripable => {
+                let (m1, n1, strip) =
+                    delta_strip(y, sub, ly, lx_sub, dim, tr, full_cols, full_rows)?;
+                border::extend_cols(bd, &strip, m1, n1, lam1, lam2)?;
+                bd.terminal()
+            }
+            _ => {
+                let (m, nn, dl) = delta_matrix(y, x_new, ly, l_new, dim, tr);
+                let bd = border::solve_full_retain(&dl, m, nn, lam1, lam2)?;
+                let t = bd.terminal();
+                cache.borders.insert((j, k), bd);
+                t
+            }
+        };
+        if let Some(slot) = cache.kcc.get_mut(j * n + k) {
+            *slot = t;
+        }
+    }
+    Ok(())
+}
+
+/// Fused Δ of a sub-path pair with the time-augmentation shift taken from
+/// the *full* transformed pair extents (`full_rows`/`full_cols`,
+/// transformed increment counts). The shift is uniform across a grid, so
+/// every strip entry bit-matches the corresponding block of the full
+/// pair's [`delta_matrix`] — the property the border sweeps rely on.
+#[allow(clippy::too_many_arguments)]
+fn delta_strip(
+    x: &[f64],
+    y: &[f64],
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    tr: Transform,
+    full_rows: usize,
+    full_cols: usize,
+) -> Result<(usize, usize, Vec<f64>), SigError> {
+    if lx < 2 || ly < 2 || full_rows == 0 || full_cols == 0 || x.len() != lx * dim
+        || y.len() != ly * dim
+    {
+        return Err(SigError::Invalid("delta strip: sub-path shape mismatch"));
+    }
+    let m = lx - 1;
+    let n = ly - 1;
+    let mut dx = vec![0.0; m * dim];
+    let mut dy = vec![0.0; n * dim];
+    increments_into(x, lx, dim, &mut dx);
+    increments_into(y, ly, dim, &mut dy);
+    let shift = match tr {
+        Transform::None | Transform::LeadLag => 0.0,
+        Transform::TimeAug | Transform::LeadLagTimeAug => {
+            (1.0 / full_rows as f64) * (1.0 / full_cols as f64)
+        }
+    };
+    match tr {
+        Transform::None | Transform::TimeAug => {
+            let mut out = vec![0.0; m * n];
+            gemm_nt(m, dim, n, &dx, &dy, &mut out);
+            if tr == Transform::TimeAug {
+                for v in out.iter_mut() {
+                    *v += shift;
+                }
+            }
+            Ok((m, n, out))
+        }
+        Transform::LeadLag | Transform::LeadLagTimeAug => {
+            let mut base = vec![0.0; m * n];
+            gemm_nt(m, dim, n, &dx, &dy, &mut base);
+            let rows = 2 * lx - 2;
+            let cols = 2 * ly - 2;
+            let mut out = vec![shift; rows * cols];
+            for (a, orow) in out.chunks_mut(cols).enumerate() {
+                let Some(brow) = base.get((a / 2) * n..(a / 2) * n + n) else {
+                    continue;
+                };
+                for (b, o) in orow.iter_mut().enumerate() {
+                    if a % 2 == b % 2 {
+                        if let Some(&v) = brow.get(b / 2) {
+                            *o += v;
+                        }
+                    }
+                }
+            }
+            Ok((rows, cols, out))
+        }
+    }
+}
+
+/// Feature row of one corpus path under a frozen map. Per-path features
+/// are independent computations (cross-Gram rows / signature sketches), so
+/// a single-path batch yields the same bits as the full-batch build.
+fn refeaturise_row(
+    cb: &PathBatch<'_>,
+    idx: usize,
+    map: &FeatureMap,
+) -> Result<Vec<f64>, SigError> {
+    let lens = [cb.len_of(idx)];
+    let single = PathBatch::ragged(cb.values_of(idx), &lens, cb.dim())?;
+    map.try_features(&single)
 }
 
 /// Cold build of the low-rank state: map from the landmark pool (the first

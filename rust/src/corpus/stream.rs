@@ -1,0 +1,437 @@
+//! Streaming corpus subsystem: sliding-window corpora and a live drift
+//! monitor on top of the registry's border-strip path extension.
+//!
+//! **Cost model.** A static corpus pays O(n²·L²) once at registration and
+//! O(q·n·L²) per warm query. Streaming changes the write side:
+//! [`CorpusRegistry::extend_path`] appends `L_new` points to one registered
+//! path and advances only the right/bottom **border strips** of the 2n−1
+//! affected Goursat grids — `O(n·L_new·L)` cells per extension (after a
+//! one-time full retaining solve per pair, paid on the first extension)
+//! instead of the `O(n·L²)` a re-registration would re-solve. See
+//! [`crate::kernel::border`] for the strip recurrence and the bit-identity
+//! argument; `cargo run -- corpus watch` demos the counters.
+//!
+//! **Window and decay knobs.** [`SlidingCorpus`] keeps ring-buffer
+//! semantics over a registered corpus: pushing past `capacity` — or past a
+//! path's `max_age` in pushes — evicts the oldest paths
+//! ([`CorpusRegistry::evict`]), shrinking every cached Gram/feature matrix
+//! to the surviving suffix. [`DriftMonitor`] scores a rolling window of
+//! live paths against a *reference* corpus with the exponentially-weighted
+//! MMD² ([`CorpusRegistry::mmd2_window`]): the newest window path has
+//! weight 1 and each older one decays by `decay ∈ (0, 1]`, so the score
+//! tracks the present without forgetting the window outright. The monitor
+//! raises `alarm` whenever the weighted MMD² exceeds its threshold.
+//!
+//! Per-point arrivals route through the shared
+//! [`StreamingSignature`](crate::sig::stream::StreamingSignature) helper
+//! ([`DriftMonitor::observe_point`]), so a monitor can also expose the live
+//! path's running signature between window closes.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::corpus::{CorpusId, CorpusRegistry};
+use crate::kernel::KernelOptions;
+use crate::path::{PathBatch, SigError};
+use crate::sig::stream::StreamingSignature;
+
+/// Ring-buffer window over a registered corpus: pushes past `capacity` (or
+/// past `max_age` pushes) evict the oldest paths through
+/// [`CorpusRegistry::evict`], so cached Gram/feature state always matches a
+/// from-scratch registration of the surviving suffix.
+pub struct SlidingCorpus {
+    registry: Arc<CorpusRegistry>,
+    id: CorpusId,
+    capacity: usize,
+    max_age: Option<u64>,
+    /// Monotone push counter; per-path birth stamps drive age eviction.
+    ticks: u64,
+    born: VecDeque<u64>,
+}
+
+impl SlidingCorpus {
+    /// Register `seed` as the initial window contents (all stamped at tick
+    /// 0) and trim it to `capacity`. `capacity` must be at least 1.
+    pub fn try_new(
+        registry: Arc<CorpusRegistry>,
+        seed: &PathBatch<'_>,
+        capacity: usize,
+        max_age: Option<u64>,
+    ) -> Result<SlidingCorpus, SigError> {
+        if capacity == 0 {
+            return Err(SigError::Invalid("sliding corpus capacity must be at least 1"));
+        }
+        let id = registry.register(seed)?;
+        let n = registry
+            .path_count(id)
+            .ok_or(SigError::Invalid("sliding corpus vanished at registration"))?;
+        let mut sc = SlidingCorpus {
+            registry,
+            id,
+            capacity,
+            max_age,
+            ticks: 0,
+            born: (0..n).map(|_| 0).collect(),
+        };
+        sc.trim()?;
+        Ok(sc)
+    }
+
+    /// The underlying registered corpus id (usable with every registry
+    /// query).
+    pub fn id(&self) -> CorpusId {
+        self.id
+    }
+
+    /// Live paths in the window.
+    pub fn len(&self) -> usize {
+        self.born.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.born.is_empty()
+    }
+
+    /// Push one flat `[len, dim]` path into the window, evicting by
+    /// capacity/age. Returns the live path count.
+    pub fn push(&mut self, path: &[f64], len: usize) -> Result<usize, SigError> {
+        let dim = self
+            .registry
+            .dim_of(self.id)
+            .ok_or(SigError::Invalid("sliding corpus id is no longer registered"))?;
+        let lens = [len];
+        let pb = PathBatch::ragged(path, &lens, dim)?;
+        self.registry.append(self.id, &pb)?;
+        self.ticks += 1;
+        self.born.push_back(self.ticks);
+        self.trim()
+    }
+
+    /// Stream points into the *newest* window path in place (the live,
+    /// still-open path) via the registry's border-strip extension.
+    /// Returns the path's new length.
+    pub fn extend_newest(&mut self, points: &[f64]) -> Result<usize, SigError> {
+        let n = self.born.len();
+        if n == 0 {
+            return Err(SigError::Invalid("sliding corpus has no path to extend"));
+        }
+        self.registry.extend_path(self.id, n - 1, points)
+    }
+
+    /// Evict to the capacity/age policy; the registry always keeps at
+    /// least the newest path.
+    fn trim(&mut self) -> Result<usize, SigError> {
+        let n = self.born.len();
+        let mut keep = n.min(self.capacity);
+        if let Some(age) = self.max_age {
+            let fresh = self
+                .born
+                .iter()
+                .filter(|&&b| self.ticks.saturating_sub(b) <= age)
+                .count();
+            keep = keep.min(fresh.max(1));
+        }
+        if keep < n {
+            self.registry.evict(self.id, keep)?;
+            while self.born.len() > keep {
+                self.born.pop_front();
+            }
+        }
+        Ok(self.born.len())
+    }
+}
+
+/// One drift observation: the weighted window MMD² against the reference
+/// corpus, whether it crossed the monitor's threshold, and the live window
+/// size that produced it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftSample {
+    pub mmd2: f64,
+    pub alarm: bool,
+    pub window_len: usize,
+}
+
+/// Rolling MMD²(live window, reference corpus) with a threshold alarm.
+///
+/// Completed paths slide through a ring window of `capacity` paths and are
+/// scored with [`CorpusRegistry::mmd2_window`] (newest path weight 1, each
+/// older path decayed by `decay`). Points of the still-open path stream
+/// through the shared [`StreamingSignature`] accumulator, whose running
+/// signature is observable between window closes.
+pub struct DriftMonitor {
+    registry: Arc<CorpusRegistry>,
+    reference: CorpusId,
+    opts: KernelOptions,
+    dim: usize,
+    capacity: usize,
+    decay: f64,
+    threshold: f64,
+    window: VecDeque<Vec<f64>>,
+    pending: Vec<f64>,
+    live: StreamingSignature,
+    samples: u64,
+}
+
+impl DriftMonitor {
+    /// `reference` must be registered in `registry`; `capacity` is the
+    /// window size in paths (≥ 1); `decay ∈ (0, 1]` weights the window;
+    /// a sample alarms when its weighted MMD² exceeds `threshold`.
+    /// `sig_depth` sizes the live-path signature accumulator.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_new(
+        registry: Arc<CorpusRegistry>,
+        reference: CorpusId,
+        opts: KernelOptions,
+        capacity: usize,
+        decay: f64,
+        threshold: f64,
+        sig_depth: usize,
+    ) -> Result<DriftMonitor, SigError> {
+        if capacity == 0 {
+            return Err(SigError::Invalid("drift monitor window capacity must be at least 1"));
+        }
+        if !decay.is_finite() || decay <= 0.0 || decay > 1.0 {
+            return Err(SigError::Invalid("window decay must lie in (0, 1]"));
+        }
+        if !threshold.is_finite() {
+            return Err(SigError::Invalid("drift threshold must be finite"));
+        }
+        let dim = registry
+            .dim_of(reference)
+            .ok_or(SigError::Invalid("drift monitor: unknown reference corpus id"))?;
+        if dim == 0 {
+            return Err(SigError::Invalid("drift monitor: reference corpus has zero dim"));
+        }
+        let live = StreamingSignature::try_new(dim, sig_depth)?;
+        Ok(DriftMonitor {
+            registry,
+            reference,
+            opts,
+            dim,
+            capacity,
+            decay,
+            threshold,
+            window: VecDeque::new(),
+            pending: Vec::new(),
+            live,
+            samples: 0,
+        })
+    }
+
+    /// Feed one point of the live path. Routed through the shared
+    /// [`StreamingSignature`] helper, so [`live_signature`]
+    /// (DriftMonitor::live_signature) stays current point by point.
+    pub fn observe_point(&mut self, point: &[f64]) -> Result<(), SigError> {
+        self.live.try_push(point)?;
+        self.pending.extend_from_slice(point);
+        Ok(())
+    }
+
+    /// Close the live path: slide it into the window, score the window
+    /// against the reference, and reset the live accumulator.
+    pub fn complete_path(&mut self) -> Result<DriftSample, SigError> {
+        let flat = std::mem::take(&mut self.pending);
+        let len = flat.len() / self.dim;
+        if len < 2 {
+            self.pending = flat;
+            return Err(SigError::Invalid("a drift window path needs at least two points"));
+        }
+        self.window.push_back(flat);
+        while self.window.len() > self.capacity {
+            self.window.pop_front();
+        }
+        self.live.reset();
+        self.score()
+    }
+
+    /// Observe one completed flat `[len, dim]` path: every point streams
+    /// through [`observe_point`](DriftMonitor::observe_point), then the
+    /// path closes and the window is scored.
+    pub fn observe(&mut self, path: &[f64], len: usize) -> Result<DriftSample, SigError> {
+        if path.len() != len * self.dim {
+            return Err(SigError::Invalid("drift observe: path shape mismatch"));
+        }
+        for point in path.chunks(self.dim) {
+            self.observe_point(point)?;
+        }
+        self.complete_path()
+    }
+
+    /// Running signature of the still-open live path.
+    pub fn live_signature(&self) -> &[f64] {
+        self.live.signature()
+    }
+
+    /// Completed paths currently in the window.
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Drift samples produced so far.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    fn score(&mut self) -> Result<DriftSample, SigError> {
+        let mut data = Vec::new();
+        let mut lens = Vec::with_capacity(self.window.len());
+        for flat in &self.window {
+            data.extend_from_slice(flat);
+            lens.push(flat.len() / self.dim);
+        }
+        let q = PathBatch::ragged(&data, &lens, self.dim)?;
+        let mmd2 = self
+            .registry
+            .mmd2_window(self.reference, &q, &self.opts, self.decay)?;
+        self.samples += 1;
+        Ok(DriftSample {
+            mmd2,
+            alarm: mmd2 > self.threshold,
+            window_len: lens.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn arc_registry() -> Arc<CorpusRegistry> {
+        Arc::new(CorpusRegistry::new())
+    }
+
+    #[test]
+    fn sliding_capacity_eviction_matches_suffix_registration() {
+        let reg = arc_registry();
+        let mut rng = Rng::new(710);
+        let (l, d) = (6, 2);
+        let seed_data = rng.brownian_batch(2, l, d, 0.3);
+        let seed = PathBatch::uniform(&seed_data, 2, l, d).unwrap();
+        let mut sc = SlidingCorpus::try_new(reg.clone(), &seed, 3, None).unwrap();
+        assert_eq!(sc.len(), 2);
+        let mut pushed: Vec<Vec<f64>> = vec![
+            seed_data[..l * d].to_vec(),
+            seed_data[l * d..].to_vec(),
+        ];
+        for _ in 0..4 {
+            let p = rng.brownian_path(l, d, 0.3);
+            sc.push(&p, l).unwrap();
+            pushed.push(p);
+        }
+        assert_eq!(sc.len(), 3, "capacity bounds the window");
+        // The live corpus answers exactly like a fresh registration of the
+        // last three pushed paths.
+        let tail: Vec<f64> = pushed[pushed.len() - 3..].concat();
+        let want_b = PathBatch::uniform(&tail, 3, l, d).unwrap();
+        let fresh = arc_registry();
+        let fid = fresh.register(&want_b).unwrap();
+        let qdata = rng.brownian_batch(2, l, d, 0.3);
+        let q = PathBatch::uniform(&qdata, 2, l, d).unwrap();
+        let opts = KernelOptions::default();
+        assert_eq!(
+            reg.mmd2_query(sc.id(), &q, &opts, None).unwrap(),
+            fresh.mmd2_query(fid, &q, &opts, None).unwrap()
+        );
+    }
+
+    #[test]
+    fn age_eviction_expires_stale_paths() {
+        let reg = arc_registry();
+        let mut rng = Rng::new(711);
+        let (l, d) = (5, 2);
+        let seed_data = rng.brownian_batch(1, l, d, 0.3);
+        let seed = PathBatch::uniform(&seed_data, 1, l, d).unwrap();
+        // Large capacity, but paths expire after 1 push of age.
+        let mut sc = SlidingCorpus::try_new(reg.clone(), &seed, 16, Some(1)).unwrap();
+        for _ in 0..3 {
+            let p = rng.brownian_path(l, d, 0.3);
+            sc.push(&p, l).unwrap();
+        }
+        // Only paths born within the last push survive (plus the newest).
+        assert!(sc.len() <= 2, "age policy keeps the window fresh: {}", sc.len());
+        assert_eq!(reg.path_count(sc.id()), Some(sc.len()));
+    }
+
+    #[test]
+    fn drift_monitor_alarms_on_distribution_shift() {
+        let reg = arc_registry();
+        let mut rng = Rng::new(712);
+        let (n, l, d) = (6, 8, 2);
+        let ref_data = rng.brownian_batch(n, l, d, 0.2);
+        let rb = PathBatch::uniform(&ref_data, n, l, d).unwrap();
+        let id = reg.register(&rb).unwrap();
+        let opts = KernelOptions::default();
+        let mut mon =
+            DriftMonitor::try_new(reg.clone(), id, opts, 3, 0.9, 1e-3, 3).unwrap();
+        // In-distribution traffic: same generator scale.
+        let mut calm = 0.0;
+        for _ in 0..3 {
+            let p = rng.brownian_path(l, d, 0.2);
+            calm = mon.observe(&p, l).unwrap().mmd2;
+        }
+        // Drifted traffic: a strong deterministic trend.
+        let mut s = DriftSample { mmd2: 0.0, alarm: false, window_len: 0 };
+        for _ in 0..3 {
+            let p: Vec<f64> = (0..l * d).map(|i| (i as f64) * 0.9).collect();
+            s = mon.observe(&p, l).unwrap();
+        }
+        assert!(s.mmd2 > calm, "drift must raise the score: {} vs {calm}", s.mmd2);
+        assert!(s.alarm, "drifted window must alarm (mmd2 = {})", s.mmd2);
+        assert_eq!(s.window_len, 3);
+        assert_eq!(mon.samples(), 6);
+    }
+
+    #[test]
+    fn per_point_mode_matches_whole_path_observe_and_tracks_live_signature() {
+        let reg = arc_registry();
+        let mut rng = Rng::new(713);
+        let (n, l, d) = (4, 6, 2);
+        let ref_data = rng.brownian_batch(n, l, d, 0.3);
+        let rb = PathBatch::uniform(&ref_data, n, l, d).unwrap();
+        let id = reg.register(&rb).unwrap();
+        let opts = KernelOptions::default();
+        let depth = 3;
+        let mut a = DriftMonitor::try_new(reg.clone(), id, opts, 2, 0.8, 0.5, depth).unwrap();
+        let mut b = DriftMonitor::try_new(reg.clone(), id, opts, 2, 0.8, 0.5, depth).unwrap();
+        let p = rng.brownian_path(l, d, 0.3);
+        let whole = a.observe(&p, l).unwrap();
+        for pt in p.chunks(d) {
+            b.observe_point(pt).unwrap();
+        }
+        // Live signature mid-path equals the streaming signature of the
+        // same points.
+        let mut sref = StreamingSignature::new(d, depth);
+        for pt in p.chunks(d) {
+            sref.push(pt);
+        }
+        assert_eq!(b.live_signature(), sref.signature());
+        let pointwise = b.complete_path().unwrap();
+        assert_eq!(whole, pointwise, "per-point mode must match observe()");
+        // After closing, the live accumulator restarts.
+        assert!(a.live_signature()[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn constructor_and_shape_validation() {
+        let reg = arc_registry();
+        let mut rng = Rng::new(714);
+        let data = rng.brownian_batch(2, 5, 2, 0.3);
+        let pb = PathBatch::uniform(&data, 2, 5, 2).unwrap();
+        let id = reg.register(&pb).unwrap();
+        let opts = KernelOptions::default();
+        assert!(SlidingCorpus::try_new(reg.clone(), &pb, 0, None).is_err());
+        assert!(DriftMonitor::try_new(reg.clone(), id, opts, 0, 0.9, 0.1, 3).is_err());
+        assert!(DriftMonitor::try_new(reg.clone(), id, opts, 2, 0.0, 0.1, 3).is_err());
+        assert!(DriftMonitor::try_new(reg.clone(), id, opts, 2, 1.5, 0.1, 3).is_err());
+        assert!(DriftMonitor::try_new(reg.clone(), CorpusId(999), opts, 2, 0.9, 0.1, 3).is_err());
+        let mut mon = DriftMonitor::try_new(reg.clone(), id, opts, 2, 0.9, 0.1, 3).unwrap();
+        assert!(mon.observe(&[0.0; 7], 3).is_err(), "ragged flat length");
+        assert!(mon.complete_path().is_err(), "empty live path cannot close");
+        mon.observe_point(&[0.0, 0.0]).unwrap();
+        assert!(mon.complete_path().is_err(), "one-point path cannot close");
+        // The pending point is kept: adding a second point closes cleanly.
+        mon.observe_point(&[1.0, 1.0]).unwrap();
+        assert!(mon.complete_path().is_ok());
+    }
+}

@@ -60,10 +60,12 @@ impl PlanCache {
     }
 
     /// [`get_or_compile`](Self::get_or_compile) for corpus-query specs
-    /// ([`OpSpec::GramCorpus`] / [`OpSpec::Mmd2Corpus`]): compiled via
-    /// [`Plan::compile_corpus`] with the serving registry. The corpus id is
-    /// part of the cache key; a cached plan stays valid across appends
-    /// because it resolves the id against the registry on every execute.
+    /// ([`OpSpec::GramCorpus`] / [`OpSpec::Mmd2Corpus`] /
+    /// [`OpSpec::Mmd2Window`]): compiled via [`Plan::compile_corpus`] with
+    /// the serving registry. The corpus id is part of the cache key; a
+    /// cached plan stays valid across appends because it resolves the id
+    /// against the registry on every execute. `Mmd2Window` carries an `f64`
+    /// decay, so (like KRR) it has no key and compiles fresh.
     pub fn get_or_compile_corpus(
         &self,
         spec: OpSpec,

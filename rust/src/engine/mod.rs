@@ -126,6 +126,17 @@ pub enum OpSpec {
         corpus: CorpusId,
         lowrank: Option<LowRankSpec>,
     },
+    /// Exponentially-weighted MMD² between a query *window* and a
+    /// registered corpus ([`CorpusRegistry::mmd2_window`]): the query paths
+    /// are treated as a time-ordered window whose weights decay by `decay`
+    /// per step (newest path weighs most). Exact path only. Like KRR, the
+    /// spec carries an `f64` hyperparameter and is compiled fresh rather
+    /// than cached.
+    Mmd2Window {
+        opts: KernelOptions,
+        corpus: CorpusId,
+        decay: f64,
+    },
 }
 
 impl OpSpec {
@@ -144,6 +155,7 @@ impl OpSpec {
             OpSpec::KrrLowRank { .. } => "krr_lowrank",
             OpSpec::GramCorpus { .. } => "gram_corpus",
             OpSpec::Mmd2Corpus { .. } => "mmd2_corpus",
+            OpSpec::Mmd2Window { .. } => "mmd2_window",
         }
     }
 
@@ -172,7 +184,9 @@ impl OpSpec {
                 corpus,
                 lowrank,
             } => (9, None, Some(*opts), *lowrank, Some(*corpus)),
-            OpSpec::Krr { .. } | OpSpec::KrrLowRank { .. } => return None,
+            OpSpec::Krr { .. } | OpSpec::KrrLowRank { .. } | OpSpec::Mmd2Window { .. } => {
+                return None
+            }
         };
         Some(PlanKey {
             kind,
@@ -382,7 +396,8 @@ impl Plan {
     }
 
     /// Compile a corpus-query plan ([`OpSpec::GramCorpus`] /
-    /// [`OpSpec::Mmd2Corpus`]): the shape class describes the **query**
+    /// [`OpSpec::Mmd2Corpus`] / [`OpSpec::Mmd2Window`]): the shape class
+    /// describes the **query**
     /// side; the corpus id resolves against `registry` at execute time, so
     /// a cached plan stays valid across appends. Corpus plans are
     /// forward-only (their corpus-side state lives in the registry, not on
@@ -392,9 +407,12 @@ impl Plan {
         shape: ShapeClass,
         registry: Arc<CorpusRegistry>,
     ) -> Result<Plan, SigError> {
-        if !matches!(spec, OpSpec::GramCorpus { .. } | OpSpec::Mmd2Corpus { .. }) {
+        if !matches!(
+            spec,
+            OpSpec::GramCorpus { .. } | OpSpec::Mmd2Corpus { .. } | OpSpec::Mmd2Window { .. }
+        ) {
             return Err(SigError::Invalid(
-                "compile_corpus takes a GramCorpus / Mmd2Corpus spec",
+                "compile_corpus takes a GramCorpus / Mmd2Corpus / Mmd2Window spec",
             ));
         }
         Plan::compile_impl(spec, shape, false, None, Some(registry))
@@ -478,6 +496,31 @@ impl Plan {
                     Some(_) => {}
                 }
             }
+            OpSpec::Mmd2Window {
+                opts,
+                corpus,
+                decay,
+            } => {
+                validate_kernel_spec(opts, &shape)?;
+                if !(decay.is_finite() && *decay > 0.0 && *decay <= 1.0) {
+                    return Err(SigError::NonFinite("window decay must lie in (0, 1]"));
+                }
+                let Some(reg) = corpus_registry.as_ref() else {
+                    return Err(SigError::Invalid(
+                        "corpus plans need a registry; compile via Plan::compile_corpus",
+                    ));
+                };
+                match reg.dim_of(*corpus) {
+                    None => return Err(SigError::Invalid("unknown corpus id")),
+                    Some(d) if d != shape.dim => {
+                        return Err(SigError::DimMismatch {
+                            left: shape.dim,
+                            right: d,
+                        })
+                    }
+                    Some(_) => {}
+                }
+            }
         }
         let backend = match (&runtime, &spec, shape.lens) {
             (Some(_), OpSpec::Sig(o), LenProfile::Uniform(_))
@@ -509,7 +552,8 @@ impl Plan {
             | OpSpec::Mmd2LowRank { opts: k, .. }
             | OpSpec::KrrLowRank { opts: k, .. }
             | OpSpec::GramCorpus { opts: k, .. }
-            | OpSpec::Mmd2Corpus { opts: k, .. } => {
+            | OpSpec::Mmd2Corpus { opts: k, .. }
+            | OpSpec::Mmd2Window { opts: k, .. } => {
                 if k.solver == SolverKind::Blocked {
                     0
                 } else {
@@ -617,6 +661,19 @@ impl Plan {
                 corpus,
                 lowrank,
             } => return self.exec_corpus(x, opts, *corpus, lowrank.as_ref(), false),
+            OpSpec::Mmd2Window {
+                opts,
+                corpus,
+                decay,
+            } => {
+                self.check_batch(x)?;
+                let reg = self
+                    .corpus_registry
+                    .as_ref()
+                    .ok_or(SigError::Invalid("corpus plan has no registry attached"))?;
+                let v = reg.mmd2_window(*corpus, x, opts, *decay)?;
+                return Ok(self.record(vec![v], None, None, RecordState::None, false));
+            }
             _ => {
                 return Err(SigError::Invalid(
                     "this plan takes a pair of batches; use execute_pair / execute_fit",
@@ -1672,9 +1729,11 @@ impl ExecutionRecord {
             OpSpec::Krr { .. } | OpSpec::KrrLowRank { .. } => {
                 Err(SigError::Invalid("vjp is not defined for KRR fits"))
             }
-            OpSpec::GramCorpus { .. } | OpSpec::Mmd2Corpus { .. } => Err(SigError::Invalid(
-                "corpus plans are forward-only; use Gram / Mmd2 plans for gradients",
-            )),
+            OpSpec::GramCorpus { .. } | OpSpec::Mmd2Corpus { .. } | OpSpec::Mmd2Window { .. } => {
+                Err(SigError::Invalid(
+                    "corpus plans are forward-only; use Gram / Mmd2 plans for gradients",
+                ))
+            }
         }
     }
 

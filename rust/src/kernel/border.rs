@@ -1,0 +1,370 @@
+//! Goursat border-strip solves for streaming path extension.
+//!
+//! Extending a registered corpus path from `L` to `L + L_new` points moves
+//! the right/bottom edges of every PDE grid that path participates in. The
+//! full grid never needs to be re-solved: the Goursat recurrence
+//!
+//!   k[s+1,t+1] = (k[s+1,t] + k[s,t+1])·A(p) − k[s,t]·B(p)
+//!
+//! only looks one row up and one column left, so retaining the **last grid
+//! row** (`bottom`) and **last grid column** (`right`) of each solved pair
+//! is enough to continue the sweep into the new strip:
+//!
+//! * appending rows (the x path grew): sweep `L_new·2^λ1` fresh rows from
+//!   the retained bottom row — `O(L_new · L)` cells;
+//! * appending columns (the y path grew): sweep the `L_new·2^λ2`-wide
+//!   column strip down all retained rows, seeding each row's left neighbour
+//!   from the retained right column — `O(L · L_new)` cells;
+//! * both (the diagonal pair): columns first across the old rows, then rows
+//!   at the full new width.
+//!
+//! Every cell is computed by exactly the same floating-point expression on
+//! exactly the same neighbour values as [`super::solver::solve_pde_with`]
+//! (same dyadic-run coefficient hoist, same evaluation order within a row),
+//! so strip extension is **bit-identical** to re-solving the whole grid from
+//! scratch — asserted cell-for-cell by the property tests below.
+//!
+//! The process-wide [`border_cells_solved`] counter mirrors the lane
+//! engine's occupancy counters: tests and the `corpus watch` CLI use it to
+//! assert that an extension solved `O(L_new·L)` cells, not `O(L²)`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::path::SigError;
+
+/// Cells solved by border sweeps (full retaining solves + strip extensions),
+/// process-wide. Monotone counter: always `Ordering::Relaxed`.
+static BORDER_CELLS: AtomicU64 = AtomicU64::new(0);
+
+fn count_cells(n: u64) {
+    BORDER_CELLS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total grid cells solved by this module since process start.
+pub fn border_cells_solved() -> u64 {
+    BORDER_CELLS.load(Ordering::Relaxed)
+}
+
+/// Retained boundary state of one solved Goursat grid: the last row and
+/// last column (each including its 1.0 boundary corner at index 0). The
+/// terminal kernel value is the shared last element of both.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PairBorder {
+    /// Grid row `rows`: `cols + 1` values, `bottom[0] = 1.0`.
+    bottom: Vec<f64>,
+    /// Grid column `cols`: `rows + 1` values, `right[0] = 1.0`.
+    right: Vec<f64>,
+}
+
+impl PairBorder {
+    /// Terminal kernel value k(1,1) of the solved grid.
+    pub fn terminal(&self) -> f64 {
+        self.bottom.last().copied().unwrap_or(1.0)
+    }
+
+    /// Refined row count of the solved grid.
+    pub fn rows(&self) -> usize {
+        self.right.len().saturating_sub(1)
+    }
+
+    /// Refined column count of the solved grid.
+    pub fn cols(&self) -> usize {
+        self.bottom.len().saturating_sub(1)
+    }
+
+    /// Retained memory in f64 slots (for cache accounting).
+    pub fn retained_len(&self) -> usize {
+        self.bottom.len() + self.right.len()
+    }
+}
+
+/// Refined grid extents and the shared p-scale for a `[m, n]` delta at
+/// dyadic orders (λ1, λ2); errors instead of overflowing.
+fn extents(m: usize, n: usize, lam1: u32, lam2: u32) -> Result<(usize, usize, f64), SigError> {
+    if lam1 + lam2 >= 63 {
+        return Err(SigError::Invalid("dyadic order too large for a border solve"));
+    }
+    let rows = m
+        .checked_shl(lam1)
+        .ok_or(SigError::TooLarge("border grid rows"))?;
+    let cols = n
+        .checked_shl(lam2)
+        .ok_or(SigError::TooLarge("border grid cols"))?;
+    rows.checked_mul(cols)
+        .ok_or(SigError::TooLarge("border grid cells"))?;
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+    Ok((rows, cols, scale))
+}
+
+/// Advance one grid row. `prev` holds the previous full row (`cols + 1`
+/// values including its left entry); `cur[0]` holds this row's left
+/// neighbour on entry and `cur[1..]` receives the new cells. The
+/// coefficient stream replays [`super::solver::solve_pde_with`] exactly:
+/// A/B hoisted once per 2^λ2-cell dyadic run, cells in ascending t.
+fn sweep_row(drow: &[f64], scale: f64, run: usize, prev: &[f64], cur: &mut [f64]) {
+    let Some((first, rest)) = cur.split_first_mut() else {
+        return;
+    };
+    let mut k_left = *first;
+    let mut cur_iter = rest.iter_mut();
+    let mut prev_iter = prev.windows(2);
+    for &d in drow {
+        let p = d * scale;
+        let p2 = p * p * (1.0 / 12.0);
+        let a = 1.0 + 0.5 * p + p2;
+        let b = 1.0 - p2;
+        for _ in 0..run {
+            let (Some(w), Some(c)) = (prev_iter.next(), cur_iter.next()) else {
+                return;
+            };
+            let [pt, pt1] = w else {
+                return;
+            };
+            let v = (k_left + *pt1) * a - *pt * b;
+            *c = v;
+            k_left = v;
+        }
+    }
+}
+
+/// Solve the full `[m, n]` grid once, retaining its border. `O(m·n·2^{λ1+λ2})`
+/// cells — paid once per pair when a path first enters the streaming regime;
+/// every later extension is a strip.
+pub fn solve_full_retain(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+) -> Result<PairBorder, SigError> {
+    if m == 0 || n == 0 || delta.len() != m * n {
+        return Err(SigError::Invalid("border solve: delta shape mismatch"));
+    }
+    let (rows, cols, scale) = extents(m, n, lam1, lam2)?;
+    let run = 1usize << lam2;
+    let mut prev = vec![1.0; cols + 1];
+    let mut cur = vec![1.0; cols + 1];
+    let mut right = Vec::with_capacity(rows + 1);
+    right.push(1.0);
+    for s in 0..rows {
+        if let Some(c0) = cur.first_mut() {
+            *c0 = 1.0;
+        }
+        let base = (s >> lam1) * n;
+        let drow = delta
+            .get(base..base + n)
+            .ok_or(SigError::Invalid("border solve: delta row out of range"))?;
+        sweep_row(drow, scale, run, &prev, &mut cur);
+        right.push(cur.last().copied().unwrap_or(1.0));
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    count_cells((rows * cols) as u64);
+    Ok(PairBorder { bottom: prev, right })
+}
+
+/// Extend a solved grid downward: the x path gained increments, `strip` is
+/// the `[m_add, n]` delta of the new rows against the full y. Sweeps
+/// `m_add·2^λ1` rows from the retained bottom; `O(m_add·n)` cells. The new
+/// rows' terminals append to `right`; `bottom` is replaced.
+pub fn extend_rows(
+    border: &mut PairBorder,
+    strip: &[f64],
+    m_add: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+) -> Result<(), SigError> {
+    if m_add == 0 || n == 0 || strip.len() != m_add * n {
+        return Err(SigError::Invalid("border extend: row-strip shape mismatch"));
+    }
+    let (add_rows, cols, scale) = extents(m_add, n, lam1, lam2)?;
+    if border.bottom.len() != cols + 1 {
+        return Err(SigError::Invalid("border extend: retained bottom row width mismatch"));
+    }
+    let run = 1usize << lam2;
+    let mut prev = std::mem::take(&mut border.bottom);
+    let mut cur = vec![1.0; cols + 1];
+    for s in 0..add_rows {
+        if let Some(c0) = cur.first_mut() {
+            *c0 = 1.0;
+        }
+        let base = (s >> lam1) * n;
+        let drow = strip
+            .get(base..base + n)
+            .ok_or(SigError::Invalid("border extend: strip row out of range"))?;
+        sweep_row(drow, scale, run, &prev, &mut cur);
+        border.right.push(cur.last().copied().unwrap_or(1.0));
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    border.bottom = prev;
+    count_cells((add_rows * cols) as u64);
+    Ok(())
+}
+
+/// Extend a solved grid rightward: the y path gained increments, `strip` is
+/// the `[m, n_add]` delta of all existing x rows against the new y columns.
+/// Sweeps the `n_add·2^λ2`-wide column strip down the retained rows, seeding
+/// each row's left neighbour from the retained right column; `O(m·n_add)`
+/// cells. The last strip row extends `bottom`; `right` is replaced.
+pub fn extend_cols(
+    border: &mut PairBorder,
+    strip: &[f64],
+    m: usize,
+    n_add: usize,
+    lam1: u32,
+    lam2: u32,
+) -> Result<(), SigError> {
+    if m == 0 || n_add == 0 || strip.len() != m * n_add {
+        return Err(SigError::Invalid("border extend: col-strip shape mismatch"));
+    }
+    let (rows, strip_cols, scale) = extents(m, n_add, lam1, lam2)?;
+    if border.right.len() != rows + 1 {
+        return Err(SigError::Invalid("border extend: retained right column height mismatch"));
+    }
+    let run = 1usize << lam2;
+    let mut prev = vec![1.0; strip_cols + 1];
+    let mut cur = vec![1.0; strip_cols + 1];
+    let mut new_right = Vec::with_capacity(rows + 1);
+    new_right.push(1.0);
+    for s in 0..rows {
+        let left = border
+            .right
+            .get(s + 1)
+            .copied()
+            .ok_or(SigError::Invalid("border extend: right column out of range"))?;
+        if let Some(c0) = cur.first_mut() {
+            *c0 = left;
+        }
+        let base = (s >> lam1) * n_add;
+        let drow = strip
+            .get(base..base + n_add)
+            .ok_or(SigError::Invalid("border extend: strip row out of range"))?;
+        sweep_row(drow, scale, run, &prev, &mut cur);
+        new_right.push(cur.last().copied().unwrap_or(1.0));
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    border.bottom.extend_from_slice(prev.get(1..).unwrap_or(&[]));
+    border.right = new_right;
+    count_cells((rows * strip_cols) as u64);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::solver::solve_pde_grid;
+    use crate::util::prop::check;
+
+    /// Border of the full grid, extracted from a from-scratch whole-grid
+    /// solve — the reference every strip path must bit-match.
+    fn reference_border(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> PairBorder {
+        let rows = m << lam1;
+        let cols = n << lam2;
+        let grid = solve_pde_grid(delta, m, n, lam1, lam2);
+        let w = cols + 1;
+        let bottom = grid[rows * w..(rows + 1) * w].to_vec();
+        let right = (0..=rows).map(|s| grid[s * w + cols]).collect();
+        PairBorder { bottom, right }
+    }
+
+    #[test]
+    fn full_retain_bitmatches_whole_grid_solve() {
+        check("solve_full_retain == grid border", 25, |g| {
+            let m = g.usize_in(1, 10);
+            let n = g.usize_in(1, 10);
+            let lam1 = g.usize_in(0, 2) as u32;
+            let lam2 = g.usize_in(0, 2) as u32;
+            let delta: Vec<f64> = g.normal_vec(m * n).iter().map(|v| v * 0.3).collect();
+            let got = solve_full_retain(&delta, m, n, lam1, lam2).unwrap();
+            let want = reference_border(&delta, m, n, lam1, lam2);
+            assert_eq!(got, want, "m={m} n={n} λ=({lam1},{lam2})");
+        });
+    }
+
+    #[test]
+    fn row_extension_bitmatches_from_scratch() {
+        check("extend_rows == rescratch", 25, |g| {
+            let m = g.usize_in(1, 8);
+            let m_add = g.usize_in(1, 6);
+            let n = g.usize_in(1, 8);
+            let lam1 = g.usize_in(0, 2) as u32;
+            let lam2 = g.usize_in(0, 2) as u32;
+            let full: Vec<f64> = g.normal_vec((m + m_add) * n).iter().map(|v| v * 0.3).collect();
+            let mut b = solve_full_retain(&full[..m * n], m, n, lam1, lam2).unwrap();
+            extend_rows(&mut b, &full[m * n..], m_add, n, lam1, lam2).unwrap();
+            let want = solve_full_retain(&full, m + m_add, n, lam1, lam2).unwrap();
+            assert_eq!(b, want, "m={m}+{m_add} n={n} λ=({lam1},{lam2})");
+        });
+    }
+
+    #[test]
+    fn col_extension_bitmatches_from_scratch() {
+        check("extend_cols == rescratch", 25, |g| {
+            let m = g.usize_in(1, 8);
+            let n = g.usize_in(1, 8);
+            let n_add = g.usize_in(1, 6);
+            let lam1 = g.usize_in(0, 2) as u32;
+            let lam2 = g.usize_in(0, 2) as u32;
+            // Row-major [m, n + n_add] delta, split into left block + strip.
+            let full: Vec<f64> = g
+                .normal_vec(m * (n + n_add))
+                .iter()
+                .map(|v| v * 0.3)
+                .collect();
+            let nc = n + n_add;
+            let left: Vec<f64> =
+                (0..m).flat_map(|i| full[i * nc..i * nc + n].to_vec()).collect();
+            let strip: Vec<f64> =
+                (0..m).flat_map(|i| full[i * nc + n..(i + 1) * nc].to_vec()).collect();
+            let mut b = solve_full_retain(&left, m, n, lam1, lam2).unwrap();
+            extend_cols(&mut b, &strip, m, n_add, lam1, lam2).unwrap();
+            let want = solve_full_retain(&full, m, nc, lam1, lam2).unwrap();
+            assert_eq!(b, want, "m={m} n={n}+{n_add} λ=({lam1},{lam2})");
+        });
+    }
+
+    #[test]
+    fn diagonal_extension_composes_cols_then_rows() {
+        // Both sides grew (the self-pair of an extended path): extend the
+        // old rows rightward first, then sweep the new rows at full width.
+        check("diag extension == rescratch", 25, |g| {
+            let m = g.usize_in(1, 7);
+            let add = g.usize_in(1, 5);
+            let lam = g.usize_in(0, 2) as u32;
+            let nt = m + add;
+            let full: Vec<f64> = g.normal_vec(nt * nt).iter().map(|v| v * 0.3).collect();
+            let top_left: Vec<f64> =
+                (0..m).flat_map(|i| full[i * nt..i * nt + m].to_vec()).collect();
+            let col_strip: Vec<f64> =
+                (0..m).flat_map(|i| full[i * nt + m..(i + 1) * nt].to_vec()).collect();
+            let row_strip = full[m * nt..].to_vec();
+            let mut b = solve_full_retain(&top_left, m, m, lam, lam).unwrap();
+            extend_cols(&mut b, &col_strip, m, add, lam, lam).unwrap();
+            extend_rows(&mut b, &row_strip, add, nt, lam, lam).unwrap();
+            let want = solve_full_retain(&full, nt, nt, lam, lam).unwrap();
+            assert_eq!(b, want, "m={m}+{add} λ={lam}");
+        });
+    }
+
+    #[test]
+    fn strip_extension_counts_strip_cells_only() {
+        let (m, n, add) = (6, 6, 2);
+        let delta = vec![0.1; (m + add) * n];
+        let mut b = solve_full_retain(&delta[..m * n], m, n, 1, 1).unwrap();
+        let before = border_cells_solved();
+        extend_rows(&mut b, &delta[m * n..], add, n, 1, 1).unwrap();
+        let solved = border_cells_solved() - before;
+        assert_eq!(solved, ((add << 1) * (n << 1)) as u64);
+        assert!(solved < ((m + add) << 1) as u64 * ((n << 1) as u64));
+    }
+
+    #[test]
+    fn shape_mismatches_are_typed_errors() {
+        let delta = vec![0.1; 6];
+        assert!(solve_full_retain(&delta, 2, 4, 0, 0).is_err());
+        let mut b = solve_full_retain(&delta, 2, 3, 0, 0).unwrap();
+        assert!(extend_rows(&mut b, &delta, 1, 4, 0, 0).is_err());
+        assert!(extend_cols(&mut b, &delta, 3, 2, 0, 0).is_err());
+        assert!(extend_rows(&mut b, &[], 0, 3, 0, 0).is_err());
+    }
+}

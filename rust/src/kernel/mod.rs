@@ -8,6 +8,7 @@
 
 pub mod backward;
 pub mod blocked;
+pub mod border;
 pub mod delta;
 pub mod gram;
 pub mod krr;
@@ -19,6 +20,7 @@ pub mod solver;
 
 pub use backward::{sig_kernel_vjp, sig_kernel_vjp_delta, try_sig_kernel_vjp};
 pub use blocked::solve_pde_blocked;
+pub use border::{border_cells_solved, PairBorder};
 pub use delta::{delta_matrix, delta_vjp_to_paths};
 pub use gram::{
     batch_kernel, batch_kernel_vjp, gram, gram_vjp, mmd2, mmd2_with_grad, try_batch_kernel,

@@ -100,6 +100,33 @@ impl StreamingSignature {
         self.last = None;
         self.count = 0;
     }
+
+    /// Adopt an externally-held signature as the accumulated state, with
+    /// `point` as the stream's current endpoint: subsequent pushes extend
+    /// the adopted signature by one Chen step each. This is the
+    /// checkpoint/restore hook the sliding-window recurrence
+    /// ([`try_sliding_signatures`]) and the corpus
+    /// [`DriftMonitor`](crate::corpus::stream::DriftMonitor) build on —
+    /// every Horner step in those paths runs through
+    /// [`try_push`](StreamingSignature::try_push).
+    pub fn try_adopt(&mut self, sig: &[f64], point: &[f64]) -> Result<(), SigError> {
+        if sig.len() != self.layout.total() {
+            return Err(SigError::DataLen {
+                expected: self.layout.total(),
+                got: sig.len(),
+            });
+        }
+        if point.len() != self.layout.dim {
+            return Err(SigError::DataLen {
+                expected: self.layout.dim,
+                got: point.len(),
+            });
+        }
+        self.sig.copy_from_slice(sig);
+        self.last = Some(point.to_vec());
+        self.count = 1;
+        Ok(())
+    }
 }
 
 /// Signatures of every sliding window `[i, i+window)` of a path, advancing
@@ -143,40 +170,37 @@ pub fn try_sliding_signatures(
     let total = layout.total();
     let n_windows = (len - window) / stride + 1;
     let mut out = vec![0.0; n_windows * total];
-    let bcap = layout.level_size(depth.saturating_sub(1)).max(1);
-    let mut b = vec![0.0; bcap];
 
     // First window directly.
     let mut cur = crate::sig::sig(&path[..window * dim], window, dim, depth);
     out[..total].copy_from_slice(&cur);
 
-    let mut seg = vec![0.0; total]; // signature of the dropped prefix
+    // Every Chen/Horner step below runs through one shared
+    // [`StreamingSignature`]: reset, it accumulates the dropped prefix;
+    // adopted onto the spliced state, it extends by the appended tail. The
+    // step sequence is identical to the historical inline loops.
+    let mut stream = StreamingSignature::try_new(dim, depth)?;
+    let point = |i: usize| &path[i * dim..(i + 1) * dim];
     let mut inv = vec![0.0; total];
     let mut tmp = vec![0.0; total];
     for w in 1..n_windows {
         let prev_start = (w - 1) * stride;
         let start = w * stride;
         // S(dropped prefix) = signature over points [prev_start, start].
-        seg.fill(0.0);
-        seg[0] = 1.0;
-        for i in prev_start..start {
-            let z: Vec<f64> = (0..dim)
-                .map(|j| path[(i + 1) * dim + j] - path[i * dim + j])
-                .collect();
-            horner_step(&layout, &mut seg, &z, &mut b);
+        stream.reset();
+        for i in prev_start..=start {
+            stream.try_push(point(i))?;
         }
-        group_inverse(&layout, &seg, &mut inv);
+        group_inverse(&layout, stream.signature(), &mut inv);
         tensor_prod(&layout, &inv, &cur, &mut tmp);
-        // Append the new tail points [prev_end, end].
-        cur.copy_from_slice(&tmp);
+        // Append the new tail points (prev_end, end].
         let prev_end = prev_start + window - 1;
         let end = start + window - 1;
-        for i in prev_end..end {
-            let z: Vec<f64> = (0..dim)
-                .map(|j| path[(i + 1) * dim + j] - path[i * dim + j])
-                .collect();
-            horner_step(&layout, &mut cur, &z, &mut b);
+        stream.try_adopt(&tmp, point(prev_end))?;
+        for i in prev_end + 1..=end {
+            stream.try_push(point(i))?;
         }
+        cur.copy_from_slice(stream.signature());
         out[w * total..(w + 1) * total].copy_from_slice(&cur);
     }
     Ok(out)
@@ -311,6 +335,31 @@ mod tests {
             try_expanding_signatures(sp, 2),
             Err(SigError::Invalid(_))
         ));
+    }
+
+    #[test]
+    fn adopt_continues_like_an_uninterrupted_stream() {
+        let mut rng = crate::util::rng::Rng::new(63);
+        let (len, dim, depth) = (8, 2, 3);
+        let data = rng.brownian_path(len, dim, 0.5);
+        let mut whole = StreamingSignature::new(dim, depth);
+        for i in 0..len {
+            whole.push(&data[i * dim..(i + 1) * dim]);
+        }
+        // Checkpoint after 4 points, adopt into a fresh stream, continue.
+        let mut head = StreamingSignature::new(dim, depth);
+        for i in 0..4 {
+            head.push(&data[i * dim..(i + 1) * dim]);
+        }
+        let ckpt = head.signature().to_vec();
+        let mut tail = StreamingSignature::new(dim, depth);
+        tail.try_adopt(&ckpt, &data[3 * dim..4 * dim]).unwrap();
+        for i in 4..len {
+            tail.push(&data[i * dim..(i + 1) * dim]);
+        }
+        assert_eq!(whole.signature(), tail.signature());
+        assert!(tail.try_adopt(&ckpt[1..], &data[..dim]).is_err());
+        assert!(tail.try_adopt(&ckpt, &data[..1]).is_err());
     }
 
     #[test]

@@ -426,6 +426,61 @@ fn corpus_lifecycle_over_the_wire() {
     );
 }
 
+/// The streaming lifecycle over the wire: extend a registered path in
+/// place, score an exponentially-weighted window MMD², and evict down to a
+/// sliding window — with malformed stream frames answered as soft errors.
+#[test]
+fn streaming_ops_over_the_wire() {
+    let (_h, addr, _batcher) = start_server(4, 500);
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(121);
+    let d = 2;
+    let corpus: Vec<Vec<f64>> = [6usize, 4, 7]
+        .iter()
+        .map(|&l| rng.brownian_path(l, d, 0.4))
+        .collect();
+    let crefs: Vec<&[f64]> = corpus.iter().map(|p| p.as_slice()).collect();
+    let id = client.register_corpus(&crefs, d).unwrap().unwrap();
+    // Extend path 0 by two points: 6 → 8.
+    let extra = rng.brownian_path(2, d, 0.4);
+    let new_len = client.extend_path(id, 0, &extra, d).unwrap().unwrap();
+    assert_eq!(new_len, 8);
+    // Window MMD²: decay 10000 bp (uniform) and 9000 bp both serve.
+    let window: Vec<Vec<f64>> = [5usize, 6]
+        .iter()
+        .map(|&l| rng.brownian_path(l, d, 0.5))
+        .collect();
+    let wrefs: Vec<&[f64]> = window.iter().map(|p| p.as_slice()).collect();
+    let uniform = client.mmd2_window(id, &wrefs, d, 10_000).unwrap().unwrap();
+    let decayed = client.mmd2_window(id, &wrefs, d, 9_000).unwrap().unwrap();
+    assert!(uniform.is_finite() && decayed.is_finite());
+    assert_ne!(uniform, decayed, "decay must reweight the window estimate");
+    // Evict down to the newest 2 paths.
+    let kept = client.evict_corpus(id, 2, d).unwrap().unwrap();
+    assert_eq!(kept, 2);
+    // Malformed stream frames are soft errors; the connection keeps serving.
+    assert!(client
+        .call_ragged(Op::EvictCorpus { id, keep: 0 }, d, vec![], vec![])
+        .unwrap()
+        .is_err());
+    assert!(client
+        .call_ragged(
+            Op::Mmd2Window {
+                id,
+                decay_bp: 20_000,
+                transform: 0,
+            },
+            d,
+            vec![2],
+            vec![0.0; 4],
+        )
+        .unwrap()
+        .is_err());
+    assert!(client.extend_path(9999, 0, &extra, d).unwrap().is_err());
+    let still = client.mmd2_window(id, &wrefs, d, 10_000).unwrap().unwrap();
+    assert!(still.is_finite());
+}
+
 /// Satellite: the metrics surface under a serving sequence mixing
 /// corpus-warm, corpus-cold and plain requests — per-op counters, plan
 /// cache hit/miss/eviction and the corpus warm/cold mirrors all move

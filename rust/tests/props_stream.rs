@@ -1,0 +1,353 @@
+//! Property tests for the streaming corpus subsystem — the acceptance bar
+//! for in-place path extension: extend-then-query is **bit-identical** to
+//! registering the grown corpus from scratch (uniform and ragged corpora,
+//! every transform, exact and low-rank paths, Row and Blocked solvers),
+//! eviction is bit-identical to registering the surviving suffix, and the
+//! weighted window estimator's analytic decay gradient matches finite
+//! differences. Occupancy (extensions solve only the border strip) is
+//! asserted in `props_stream_occupancy.rs`, which owns its process so the
+//! global cell counters are not shared with these tests.
+
+use pysiglib::corpus::CorpusRegistry;
+use pysiglib::kernel::{KernelOptions, LowRankSpec, SolverKind};
+use pysiglib::transforms::Transform;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+/// Build a ragged batch's backing store.
+fn ragged(rng: &mut Rng, lens: &[usize], d: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut data = Vec::new();
+    for &l in lens {
+        data.extend(rng.brownian_path(l, d, 0.35));
+    }
+    (data, lens.to_vec())
+}
+
+/// Drive one scenario: the *grown* corpus (path `k` carrying `add` extra
+/// points) is the ground truth; the incremental side registers the
+/// truncated corpus, warms every query family, then streams the tail into
+/// path `k` via `extend_path` — in `splits` instalments, exercising
+/// repeated strip extensions. MMD² and Gram, exact and (when `spec` is
+/// set) low-rank, must agree bitwise with a from-scratch registration.
+#[allow(clippy::too_many_arguments)]
+fn check_extend_matches_scratch(
+    d: usize,
+    grown_lens: &[usize],
+    k: usize,
+    add: usize,
+    splits: usize,
+    opts: &KernelOptions,
+    spec: Option<&LowRankSpec>,
+    seed: u64,
+    label: &str,
+) {
+    let mut rng = Rng::new(seed);
+    let (grown, glens) = ragged(&mut rng, grown_lens, d);
+    let (q, lq) = ragged(&mut rng, &[grown_lens[k].max(3), 4], d);
+    let qb = PathBatch::ragged(&q, &lq, d).unwrap();
+
+    // Truncate path k by `add` points to produce the pre-stream corpus;
+    // the removed tail is what gets streamed back in.
+    let l_old = glens[k] - add;
+    let start: usize = glens.iter().take(k).sum::<usize>() * d;
+    let cut = start + l_old * d;
+    let tail_end = start + glens[k] * d;
+    let mut base = grown[..cut].to_vec();
+    base.extend_from_slice(&grown[tail_end..]);
+    let mut base_lens = glens.clone();
+    base_lens[k] = l_old;
+    let bb = PathBatch::ragged(&base, &base_lens, d).unwrap();
+    let tail = &grown[cut..tail_end];
+
+    // Incremental: register the truncated corpus, WARM the caches, then
+    // stream the tail in `splits` slices.
+    let inc = CorpusRegistry::new();
+    let id = inc.register(&bb).unwrap();
+    inc.mmd2_query(id, &qb, opts, spec).unwrap();
+    inc.gram_query(id, &qb, opts, spec).unwrap();
+    let per = (add / splits).max(1) * d;
+    let mut fed = 0;
+    while fed < tail.len() {
+        let chunk = &tail[fed..(fed + per).min(tail.len())];
+        let new_len = inc.extend_path(id, k, chunk).unwrap();
+        fed += chunk.len();
+        assert_eq!(new_len, l_old + fed / d, "{label}: reported length");
+    }
+    let inc_mmd = inc.mmd2_query(id, &qb, opts, spec).unwrap();
+    let inc_gram = inc.gram_query(id, &qb, opts, spec).unwrap();
+    // The post-extension queries must be warm (state extended in place):
+    // only the single cold build of the pre-extension query remains.
+    assert_eq!(inc.stats().cold_builds, 1, "{label}: rebuilt instead of extended");
+    assert_eq!(inc.stats().extended, splits as u64, "{label}: extend count");
+
+    // From scratch: register the grown corpus, query cold.
+    let scratch = CorpusRegistry::new();
+    let gb = PathBatch::ragged(&grown, &glens, d).unwrap();
+    let sid = scratch.register(&gb).unwrap();
+    let scr_mmd = scratch.mmd2_query(sid, &qb, opts, spec).unwrap();
+    let scr_gram = scratch.gram_query(sid, &qb, opts, spec).unwrap();
+
+    assert!(
+        inc_mmd.to_bits() == scr_mmd.to_bits(),
+        "{label}: mmd2 {inc_mmd:?} vs {scr_mmd:?}"
+    );
+    assert_eq!(inc_gram.len(), scr_gram.len(), "{label}");
+    for (i, (a, b)) in inc_gram.iter().zip(scr_gram.iter()).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{label}: gram[{i}] {a:?} vs {b:?}"
+        );
+    }
+}
+
+#[test]
+fn extend_then_query_bit_identical_exact_uniform() {
+    let opts = KernelOptions::default();
+    check_extend_matches_scratch(3, &[9; 5], 2, 4, 1, &opts, None, 900, "exact uniform");
+}
+
+#[test]
+fn extend_then_query_bit_identical_exact_ragged() {
+    // A length-1 partner rides along: degenerate pairs stay the constant 1.
+    let opts = KernelOptions::default();
+    let lens = [5usize, 9, 1, 7, 4];
+    check_extend_matches_scratch(2, &lens, 1, 3, 1, &opts, None, 901, "exact ragged");
+}
+
+#[test]
+fn extend_then_query_bit_identical_in_instalments() {
+    // Streaming one point at a time composes strips on strips.
+    let opts = KernelOptions::default();
+    check_extend_matches_scratch(2, &[6, 10, 5], 1, 4, 4, &opts, None, 902, "instalments");
+}
+
+#[test]
+fn extend_then_query_bit_identical_under_transforms() {
+    for (tr, seed) in [
+        (Transform::TimeAug, 903u64),
+        (Transform::LeadLag, 904),
+        (Transform::LeadLagTimeAug, 905),
+    ] {
+        let opts = KernelOptions::default().transform(tr);
+        let label = format!("{tr:?}");
+        check_extend_matches_scratch(2, &[5, 8, 6, 7], 2, 3, 1, &opts, None, seed, &label);
+    }
+}
+
+#[test]
+fn extend_then_query_bit_identical_dyadic() {
+    let opts = KernelOptions::default().dyadic(1, 1);
+    check_extend_matches_scratch(2, &[6, 7, 5], 0, 2, 1, &opts, None, 906, "dyadic");
+}
+
+#[test]
+fn extend_then_query_bit_identical_blocked_solver() {
+    // The Blocked solver has a different FP schedule than the border
+    // sweeps, so extensions recompute the touched row/column through the
+    // tile scheduler instead — still bit-identical to scratch.
+    let opts = KernelOptions::default().solver(SolverKind::Blocked);
+    check_extend_matches_scratch(2, &[7, 9, 6], 1, 3, 1, &opts, None, 907, "blocked");
+}
+
+#[test]
+fn extend_then_query_bit_identical_nystrom() {
+    // k = 5 lies outside the rank-4 landmark pool: the feature map is
+    // frozen and only the extended path refeaturises.
+    let spec = LowRankSpec::nystrom(4, 11);
+    let opts = KernelOptions::default();
+    check_extend_matches_scratch(2, &[7; 6], 5, 3, 1, &opts, Some(&spec), 908, "nystrom tail");
+    // k = 0 is a landmark: extending it moves the landmark draw, so the
+    // whole low-rank state rebuilds — still bitwise equal to scratch.
+    check_extend_matches_scratch(2, &[7; 6], 0, 3, 1, &opts, Some(&spec), 909, "nystrom landmark");
+}
+
+#[test]
+fn extend_then_query_bit_identical_random_sig() {
+    let spec = LowRankSpec::random_sig(8, 3, 13);
+    let opts = KernelOptions::default();
+    check_extend_matches_scratch(2, &[6, 8, 3, 7], 1, 2, 1, &opts, Some(&spec), 910, "randsig");
+}
+
+/// Evicting to the newest `keep` paths must be bit-identical to registering
+/// the surviving suffix from scratch.
+fn check_evict_matches_suffix(
+    d: usize,
+    lens: &[usize],
+    keep: usize,
+    spec: Option<&LowRankSpec>,
+    seed: u64,
+    label: &str,
+) {
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(seed);
+    let (data, lv) = ragged(&mut rng, lens, d);
+    let (q, lq) = ragged(&mut rng, &[6, 4], d);
+    let qb = PathBatch::ragged(&q, &lq, d).unwrap();
+
+    let inc = CorpusRegistry::new();
+    let id = inc.register(&PathBatch::ragged(&data, &lv, d).unwrap()).unwrap();
+    inc.mmd2_query(id, &qb, &opts, spec).unwrap();
+    inc.gram_query(id, &qb, &opts, spec).unwrap();
+    let kept = inc.evict(id, keep).unwrap();
+    assert_eq!(kept, keep, "{label}");
+    assert_eq!(inc.path_count(id), Some(keep), "{label}");
+    assert_eq!(inc.stats().evicted, 1, "{label}");
+    let inc_mmd = inc.mmd2_query(id, &qb, &opts, spec).unwrap();
+    let inc_gram = inc.gram_query(id, &qb, &opts, spec).unwrap();
+
+    let drop_pts: usize = lens[..lens.len() - keep].iter().sum();
+    let suffix = &data[drop_pts * d..];
+    let slens = &lens[lens.len() - keep..];
+    let scratch = CorpusRegistry::new();
+    let sid = scratch.register(&PathBatch::ragged(suffix, slens, d).unwrap()).unwrap();
+    let scr_mmd = scratch.mmd2_query(sid, &qb, &opts, spec).unwrap();
+    let scr_gram = scratch.gram_query(sid, &qb, &opts, spec).unwrap();
+
+    assert!(
+        inc_mmd.to_bits() == scr_mmd.to_bits(),
+        "{label}: mmd2 {inc_mmd:?} vs {scr_mmd:?}"
+    );
+    for (i, (a, b)) in inc_gram.iter().zip(scr_gram.iter()).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{label}: gram[{i}] {a:?} vs {b:?}"
+        );
+    }
+}
+
+#[test]
+fn evict_then_query_bit_identical_exact() {
+    check_evict_matches_suffix(2, &[5, 9, 2, 7, 4, 6], 3, None, 920, "evict exact");
+}
+
+#[test]
+fn evict_then_query_bit_identical_random_sig() {
+    let spec = LowRankSpec::random_sig(6, 3, 7);
+    check_evict_matches_suffix(2, &[6; 5], 2, Some(&spec), 921, "evict randsig");
+}
+
+#[test]
+fn evict_then_query_bit_identical_nystrom() {
+    // Eviction shifts the landmark prefix, forcing a Nyström rebuild —
+    // which must land exactly on the scratch registration's state.
+    let spec = LowRankSpec::nystrom(2, 19);
+    check_evict_matches_suffix(2, &[6; 5], 3, Some(&spec), 922, "evict nystrom");
+}
+
+#[test]
+fn evict_edge_cases() {
+    let mut rng = Rng::new(923);
+    let (data, lens) = ragged(&mut rng, &[5, 6, 7], 2);
+    let reg = CorpusRegistry::new();
+    let id = reg.register(&PathBatch::ragged(&data, &lens, 2).unwrap()).unwrap();
+    assert!(reg.evict(id, 0).is_err(), "keep = 0 would empty the corpus");
+    assert_eq!(reg.evict(id, 8).unwrap(), 3, "keep >= n is a no-op");
+    assert_eq!(reg.path_count(id), Some(3));
+}
+
+#[test]
+fn extend_then_evict_composes_bitwise() {
+    // Stream points into the newest path, then slide the window — the
+    // surviving state must equal registering the final shape directly.
+    let d = 2;
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(924);
+    let (data, lens) = ragged(&mut rng, &[6, 5, 8], d);
+    let ext = rng.brownian_path(3, d, 0.35);
+    let (q, lq) = ragged(&mut rng, &[6, 4], d);
+    let qb = PathBatch::ragged(&q, &lq, d).unwrap();
+
+    let inc = CorpusRegistry::new();
+    let id = inc.register(&PathBatch::ragged(&data, &lens, d).unwrap()).unwrap();
+    inc.mmd2_query(id, &qb, &opts, None).unwrap();
+    inc.extend_path(id, 2, &ext).unwrap();
+    inc.evict(id, 2).unwrap();
+    let inc_mmd = inc.mmd2_query(id, &qb, &opts, None).unwrap();
+
+    // Final shape: paths 1 and 2, with path 2 carrying the streamed tail.
+    let mut fin = data[6 * d..].to_vec();
+    fin.extend_from_slice(&ext);
+    let flens = [5usize, 8 + 3];
+    let scratch = CorpusRegistry::new();
+    let sid = scratch.register(&PathBatch::ragged(&fin, &flens, d).unwrap()).unwrap();
+    let scr_mmd = scratch.mmd2_query(sid, &qb, &opts, None).unwrap();
+    assert!(inc_mmd.to_bits() == scr_mmd.to_bits(), "{inc_mmd:?} vs {scr_mmd:?}");
+}
+
+#[test]
+fn mmd2_window_decay_gradient_matches_finite_differences() {
+    let d = 2;
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(930);
+    let (c, lc) = ragged(&mut rng, &[7; 5], d);
+    let (w, lw) = ragged(&mut rng, &[7, 6, 8, 7], d);
+    let reg = CorpusRegistry::new();
+    let id = reg.register(&PathBatch::ragged(&c, &lc, d).unwrap()).unwrap();
+    let wb = PathBatch::ragged(&w, &lw, d).unwrap();
+
+    for decay in [0.35, 0.62, 0.9] {
+        let (v, g) = reg.mmd2_window_with_grad(id, &wb, &opts, decay).unwrap();
+        assert!(v.is_finite(), "value at decay {decay}");
+        let h = 1e-5;
+        let up = reg.mmd2_window(id, &wb, &opts, decay + h).unwrap();
+        let dn = reg.mmd2_window(id, &wb, &opts, decay - h).unwrap();
+        let fd = (up - dn) / (2.0 * h);
+        let tol = 1e-4 * g.abs().max(1.0);
+        assert!(
+            (g - fd).abs() <= tol,
+            "decay {decay}: analytic {g} vs FD {fd}"
+        );
+    }
+}
+
+#[test]
+fn mmd2_window_at_decay_one_recovers_the_uniform_estimator() {
+    let d = 2;
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(931);
+    let (c, lc) = ragged(&mut rng, &[6; 4], d);
+    let (w, lw) = ragged(&mut rng, &[6, 5, 7], d);
+    let reg = CorpusRegistry::new();
+    let id = reg.register(&PathBatch::ragged(&c, &lc, d).unwrap()).unwrap();
+    let wb = PathBatch::ragged(&w, &lw, d).unwrap();
+    let weighted = reg.mmd2_window(id, &wb, &opts, 1.0).unwrap();
+    let uniform = reg.mmd2_query(id, &wb, &opts, None).unwrap();
+    // Same estimator up to floating-point summation order.
+    assert!(
+        (weighted - uniform).abs() <= 1e-12 * uniform.abs().max(1.0),
+        "{weighted} vs {uniform}"
+    );
+}
+
+#[test]
+fn mmd2_window_rejects_bad_decay() {
+    let d = 2;
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(932);
+    let (c, lc) = ragged(&mut rng, &[5; 3], d);
+    let (w, lw) = ragged(&mut rng, &[5, 5], d);
+    let reg = CorpusRegistry::new();
+    let id = reg.register(&PathBatch::ragged(&c, &lc, d).unwrap()).unwrap();
+    let wb = PathBatch::ragged(&w, &lw, d).unwrap();
+    for bad in [0.0, -0.5, 1.5, f64::NAN] {
+        assert!(
+            reg.mmd2_window(id, &wb, &opts, bad).is_err(),
+            "decay {bad} must be rejected"
+        );
+    }
+}
+
+#[test]
+fn extend_path_rejects_bad_shapes() {
+    let d = 2;
+    let mut rng = Rng::new(933);
+    let (data, lens) = ragged(&mut rng, &[5, 6], d);
+    let reg = CorpusRegistry::new();
+    let id = reg.register(&PathBatch::ragged(&data, &lens, d).unwrap()).unwrap();
+    // Not a whole number of dim-d samples.
+    assert!(reg.extend_path(id, 0, &[1.0, 2.0, 3.0]).is_err());
+    // Path index out of range.
+    assert!(reg.extend_path(id, 2, &[1.0, 2.0]).is_err());
+    // Empty extension is a no-op returning the current length.
+    assert_eq!(reg.extend_path(id, 0, &[]).unwrap(), 5);
+}

@@ -1,0 +1,72 @@
+//! The streaming tentpole's occupancy acceptance: a steady-state
+//! `extend_path` solves **only** the Goursat border strip — cell counts
+//! scale with `L_new·L`, not `L²`. This lives in its own test binary (one
+//! `#[test]`) because `border_cells_solved()` and the lane tile counter
+//! are process-global; sharing a process with the other streaming
+//! property tests would make the exact deltas racy.
+
+use pysiglib::corpus::CorpusRegistry;
+use pysiglib::kernel::{border_cells_solved, lanes, KernelOptions};
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+#[test]
+fn steady_state_extend_solves_exactly_the_border_strip() {
+    let (n, l, d, warm, add) = (3usize, 32usize, 2usize, 2usize, 4usize);
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(940);
+    let corpus = rng.brownian_batch(n, l, d, 0.3);
+    let ext = rng.brownian_batch(1, warm + add, d, 0.3);
+    let q = rng.brownian_batch(1, 6, d, 0.35);
+    let qb = PathBatch::uniform(&q, 1, 6, d).unwrap();
+
+    let reg = CorpusRegistry::new();
+    let id = reg.register(&PathBatch::uniform(&corpus, n, l, d).unwrap()).unwrap();
+    reg.mmd2_query(id, &qb, &opts, None).unwrap();
+
+    // Warm-up extend: no borders are retained yet, so every pair touching
+    // path 0 pays a one-off full O(L²) retaining solve.
+    let c0 = border_cells_solved();
+    reg.extend_path(id, 0, &ext[..warm * d]).unwrap();
+    let warm_cells = border_cells_solved() - c0;
+
+    // Steady-state extend: borders retained, only strips are swept — and
+    // no lane tiles execute (the strip path is scalar).
+    let t0 = lanes::stats().tiles_executed;
+    let c1 = border_cells_solved();
+    reg.extend_path(id, 0, &ext[warm * d..]).unwrap();
+    let strip_cells = border_cells_solved() - c1;
+    assert_eq!(lanes::stats().tiles_executed, t0, "steady extend ran tiles");
+
+    // Exact strip accounting for the Plain transform at λ = 0, with
+    // l_old = L + warm after the warm-up:
+    //   diagonal pair  — column strip over the old rows, then the new rows
+    //                    at full width: (l_old−1)·add + add·(l_old+add−1)
+    //   each partner j — row strip (0,j) plus column strip (j,0):
+    //                    2·add·(L−1)
+    let l_old = l + warm;
+    let expected = ((l_old - 1) * add + add * (l_old + add - 1) + 2 * add * (l - 1) * (n - 1)) as u64;
+    assert_eq!(strip_cells, expected, "steady extend swept more than the strip");
+
+    // The warm-up's retaining solves are quadratic in L; the steady strip
+    // is linear in L (times L_new) — the O(L_new·L) vs O(L²) claim.
+    let warm_floor = ((l_old - 1) * (l_old - 1) + 2 * (n - 1) * (l_old - 1) * (l - 1)) as u64;
+    assert!(warm_cells >= warm_floor, "warm-up {warm_cells} below {warm_floor}");
+    assert!(
+        4 * strip_cells < warm_cells,
+        "strip {strip_cells} not clearly sublinear vs warm-up {warm_cells}"
+    );
+
+    // And the streamed state still serves: the re-query is warm and equals
+    // a from-scratch registration bitwise.
+    let v = reg.mmd2_query(id, &qb, &opts, None).unwrap();
+    assert_eq!(reg.stats().cold_builds, 1);
+    let mut grown = corpus.clone();
+    grown.splice(l * d..l * d, ext.iter().copied());
+    let mut glens = vec![l; n];
+    glens[0] = l + warm + add;
+    let scratch = CorpusRegistry::new();
+    let sid = scratch.register(&PathBatch::ragged(&grown, &glens, d).unwrap()).unwrap();
+    let sv = scratch.mmd2_query(sid, &qb, &opts, None).unwrap();
+    assert!(v.to_bits() == sv.to_bits(), "{v:?} vs {sv:?}");
+}
