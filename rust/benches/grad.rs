@@ -1,0 +1,105 @@
+//! CI-scale backward-pass suite — the bench-regression gate's gradient
+//! trajectory. Times full fwd+bwd MMD² training steps and the backward
+//! alone at scalar, W = 4 and W = 8 lane widths across batch sizes
+//! n ∈ {32, 64, 128}, uniform plus a ragged step at the largest size, and
+//! derives the lane-over-scalar **median** backward speedups the gate
+//! floors (the `expect_min` rows in `BENCH_grad.json`: the lane-batched
+//! backward must not lose to the scalar schedule at n = 128). Widths are
+//! pinned through [`Plan::with_lane_width`] so the schedule under test does
+//! not depend on the runner's environment; the backward runs at whatever
+//! width its record's plan was compiled with.
+
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::engine::{OpSpec, Plan, ShapeClass};
+use pysiglib::kernel::KernelOptions;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+const WIDTHS: [(&str, usize); 3] = [("scalar", 0), ("w4", 4), ("w8", 8)];
+
+fn main() {
+    let runs = bench_runs(3);
+    let d = 3usize;
+    let l = 20usize;
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(71);
+    let mut suite = Suite::new("grad");
+
+    for &n in &[32usize, 64, 128] {
+        let x = rng.brownian_batch(n, l, d, 0.25);
+        let y = rng.brownian_batch(n, l, d, 0.25);
+        let xb = PathBatch::uniform(&x, n, l, d).unwrap();
+        let yb = PathBatch::uniform(&y, n, l, d).unwrap();
+        let shape = ShapeClass::for_pair(&xb, &yb);
+        // Forward-only reference (scalar schedule): what a no-gradient
+        // evaluation costs, for the bwd_over_fwd cost-model row.
+        let fwd_plan = Plan::compile_forward(OpSpec::Mmd2(opts), shape)
+            .unwrap()
+            .with_lane_width(0);
+        suite.time(&format!("n{n}/uniform/mmd2/fwd"), runs, || {
+            std::hint::black_box(fwd_plan.execute_pair(&xb, &yb).unwrap().value());
+        });
+        for (label, width) in WIDTHS {
+            let plan = Plan::compile(OpSpec::Mmd2(opts), shape)
+                .unwrap()
+                .with_lane_width(width);
+            // One full training step: retained forward + exact backward.
+            suite.time(&format!("n{n}/uniform/mmd2/fwdbwd/{label}"), runs, || {
+                let rec = plan.execute_pair(&xb, &yb).unwrap();
+                std::hint::black_box(rec.vjp(&[1.0]).unwrap());
+            });
+            // Backward alone, against a record produced once.
+            let rec = plan.execute_pair(&xb, &yb).unwrap();
+            suite.time(&format!("n{n}/uniform/mmd2/bwd/{label}"), runs, || {
+                std::hint::black_box(rec.vjp(&[1.0]).unwrap());
+            });
+        }
+        for label in ["w4", "w8"] {
+            if let (Some(s), Some(w)) = (
+                suite.get_median(&format!("n{n}/uniform/mmd2/bwd/scalar")),
+                suite.get_median(&format!("n{n}/uniform/mmd2/bwd/{label}")),
+            ) {
+                suite.record(
+                    &format!("n{n}/uniform/mmd2/bwd_speedup_{label}_x"),
+                    s / w.max(1e-12),
+                );
+            }
+        }
+        if let (Some(f), Some(b)) = (
+            suite.get_median(&format!("n{n}/uniform/mmd2/fwd")),
+            suite.get_median(&format!("n{n}/uniform/mmd2/bwd/scalar")),
+        ) {
+            suite.record(&format!("n{n}/uniform/mmd2/bwd_over_fwd_x"), b / f.max(1e-12));
+        }
+    }
+
+    // Ragged training step at the largest size: the backward dispatcher's
+    // grouping-by-shape-class (with the width-independent length sort) is
+    // what keeps lanes full here.
+    let n = 128usize;
+    let lens: Vec<usize> = (0..n).map(|i| [l / 2, 3 * l / 4, l][i % 3]).collect();
+    let mut xdata = Vec::new();
+    let mut ydata = Vec::new();
+    for &pl in &lens {
+        xdata.extend(rng.brownian_path(pl, d, 0.25));
+        ydata.extend(rng.brownian_path(pl, d, 0.25));
+    }
+    let xb = PathBatch::ragged(&xdata, &lens, d).unwrap();
+    let yb = PathBatch::ragged(&ydata, &lens, d).unwrap();
+    let shape = ShapeClass::for_pair(&xb, &yb);
+    for (label, width) in WIDTHS {
+        let plan = Plan::compile(OpSpec::Mmd2(opts), shape)
+            .unwrap()
+            .with_lane_width(width);
+        let rec = plan.execute_pair(&xb, &yb).unwrap();
+        suite.time(&format!("n{n}/ragged/mmd2/bwd/{label}"), runs, || {
+            std::hint::black_box(rec.vjp(&[1.0]).unwrap());
+        });
+    }
+    if let (Some(s), Some(w)) = (
+        suite.get_median(&format!("n{n}/ragged/mmd2/bwd/scalar")),
+        suite.get_median(&format!("n{n}/ragged/mmd2/bwd/w4")),
+    ) {
+        suite.record(&format!("n{n}/ragged/mmd2/bwd_speedup_w4_x"), s / w.max(1e-12));
+    }
+}

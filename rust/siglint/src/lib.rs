@@ -53,7 +53,11 @@ impl fmt::Display for Finding {
 /// name rules from this table; the `allow_syntax` / `unused_allow`
 /// meta-lints are not suppressible.
 pub const RULES: &[(&str, &str)] = &[
-    ("panic_freedom", "no unwrap/expect/panic!/unreachable!/bare indexing on the serving path"),
+    (
+        "panic_freedom",
+        "no unwrap/expect/panic!/unreachable!/bare indexing on the serving path; no panic \
+         macros inside the designated backward entry points",
+    ),
     ("hot_path_alloc", "no allocation inside designated hot kernel/engine functions"),
     ("env_discipline", "std::env reads only via the cached accessors in config.rs"),
     ("atomics_hygiene", "every atomic Ordering classified; no Relaxed/strong mixes per cell"),

@@ -103,6 +103,29 @@ fn panic_scope(path: &str) -> bool {
         || path == "src/kernel/border.rs"
 }
 
+/// (file, functions) that must stay free of `unwrap`/`expect`/`panic!`/
+/// `unreachable!` even though their files host deliberately-panicking pub
+/// wrappers (`gram_vjp`, `mmd2`, ...). These are the backward entry points:
+/// validation is hoisted before the thread scopes, so any panic macro inside
+/// one of them is a missed error path, not a checked invariant. Bare
+/// indexing is allowed here — kernel bodies index against dims validated at
+/// the boundary, which the whole-file scope above never has to.
+const PANIC_FREE_FNS: &[(&str, &[&str])] = &[
+    (
+        "src/kernel/gram.rs",
+        &[
+            "gram_vjp_with_lanes",
+            "gram_vjp_sym_with_lanes",
+            "try_gram_vjp",
+            "try_gram_vjp_with_lanes",
+        ],
+    ),
+    (
+        "src/engine/mod.rs",
+        &["vjp_kernel", "vjp_gram", "vjp_mmd2", "vjp_mmd2_unbiased"],
+    ),
+];
+
 /// Keywords that can legally precede `[` without it being an index
 /// expression (`&mut [f64]`, `as [u8; 4]`, `for x in [..]`, ...).
 const NON_INDEX_WORDS: &[&[u8]] = &[
@@ -139,36 +162,80 @@ fn index_sites(code: &str) -> Vec<usize> {
 }
 
 /// No `unwrap`/`expect`/`panic!`/`unreachable!`/bare slice indexing in
-/// non-test code on the serving request path.
+/// non-test code on the serving request path, and no panic macros inside the
+/// designated backward entry points ([`PANIC_FREE_FNS`]).
 pub fn panic_freedom(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
-    if !panic_scope(ctx.path) {
-        return;
-    }
     let sc = ctx.scrubbed;
-    let mut push = |at: usize, what: &str| {
-        if !sc.in_test(at) {
+    if panic_scope(ctx.path) {
+        let mut push = |at: usize, what: &str| {
+            if !sc.in_test(at) {
+                findings.push(Finding {
+                    path: ctx.path.to_string(),
+                    line: sc.line_of(at),
+                    rule: "panic_freedom",
+                    message: format!(
+                        "{what} on the request path — return a typed SigError instead"
+                    ),
+                });
+            }
+        };
+        for at in method_calls(&sc.code, "unwrap") {
+            push(at, "`.unwrap()`");
+        }
+        for at in method_calls(&sc.code, "expect") {
+            push(at, "`.expect()`");
+        }
+        for at in macro_calls(&sc.code, "panic") {
+            push(at, "`panic!`");
+        }
+        for at in macro_calls(&sc.code, "unreachable") {
+            push(at, "`unreachable!`");
+        }
+        for at in index_sites(&sc.code) {
+            push(at, "bare slice/array indexing");
+        }
+    }
+    let Some((_, fns)) = PANIC_FREE_FNS.iter().find(|(p, _)| *p == ctx.path) else {
+        return;
+    };
+    for name in *fns {
+        let Some((start, end)) = fn_body(&sc.code, name) else {
             findings.push(Finding {
                 path: ctx.path.to_string(),
-                line: sc.line_of(at),
+                line: 1,
                 rule: "panic_freedom",
-                message: format!("{what} on the request path — return a typed SigError instead"),
+                message: format!(
+                    "panic-free function `{name}` not found — update PANIC_FREE_FNS in siglint"
+                ),
             });
+            continue;
+        };
+        let body = &sc.code[start..end];
+        let mut push = |at: usize, what: &str| {
+            if !sc.in_test(start + at) {
+                findings.push(Finding {
+                    path: ctx.path.to_string(),
+                    line: sc.line_of(start + at),
+                    rule: "panic_freedom",
+                    message: format!(
+                        "{what} inside `{name}` — backward entry points plumb SigError, \
+                         they never panic"
+                    ),
+                });
+            }
+        };
+        for at in method_calls(body, "unwrap") {
+            push(at, "`.unwrap()`");
         }
-    };
-    for at in method_calls(&sc.code, "unwrap") {
-        push(at, "`.unwrap()`");
-    }
-    for at in method_calls(&sc.code, "expect") {
-        push(at, "`.expect()`");
-    }
-    for at in macro_calls(&sc.code, "panic") {
-        push(at, "`panic!`");
-    }
-    for at in macro_calls(&sc.code, "unreachable") {
-        push(at, "`unreachable!`");
-    }
-    for at in index_sites(&sc.code) {
-        push(at, "bare slice/array indexing");
+        for at in method_calls(body, "expect") {
+            push(at, "`.expect()`");
+        }
+        for at in macro_calls(body, "panic") {
+            push(at, "`panic!`");
+        }
+        for at in macro_calls(body, "unreachable") {
+            push(at, "`unreachable!`");
+        }
     }
 }
 
@@ -188,9 +255,17 @@ const HOT_FNS: &[(&str, &[&str])] = &[
             "solve_gram_row",
             "solve_group_into",
             "scalar_entry",
+            "solve_pde_grid_lanes",
+            "vjp_pde_lanes",
+            "grad_block_lanes",
+            "vjp_gram_row",
+            "vjp_group_into",
+            "scalar_vjp_entry",
         ],
     ),
     ("src/kernel/solver.rs", &["solve_pde_with", "solve_pde_grid_into"]),
+    ("src/kernel/backward.rs", &["sig_kernel_vjp_delta_into"]),
+    ("src/kernel/delta.rs", &["delta_vjp_to_paths_with"]),
     ("src/engine/mod.rs", &["gram_values_into"]),
 ];
 

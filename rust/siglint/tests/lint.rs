@@ -129,6 +129,34 @@ fn wire_exhaustive_checks_op_code_count_and_the_code_map() {
 }
 
 #[test]
+fn panic_freedom_guards_the_designated_backward_fns() {
+    // An `.expect()` inside a designated backward fn trips the rule; the
+    // deliberately-panicking pub wrapper in the same file stays exempt, as
+    // does bare indexing (kernel bodies index against validated dims).
+    let src = "pub fn gram_vjp_with_lanes(v: &[f64]) -> f64 {\n    \
+               v[0] + v.first().copied().expect(\"nonempty\")\n}\n\
+               pub fn gram_vjp_sym_with_lanes() {}\n\
+               pub fn try_gram_vjp() {}\n\
+               pub fn try_gram_vjp_with_lanes() {}\n\
+               pub fn gram_vjp(v: &[f64]) -> f64 {\n    \
+               v.first().copied().expect(\"wrapper is documented to panic\")\n}\n";
+    let f = one("src/kernel/gram.rs", src);
+    only_rule(&f, "panic_freedom");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].message.contains("gram_vjp_with_lanes"), "{f:?}");
+}
+
+#[test]
+fn a_missing_designated_backward_fn_is_itself_a_finding() {
+    // All four engine vjp entry points absent: one finding each, so the
+    // PANIC_FREE_FNS table can never silently rot.
+    let f = one("src/engine/mod.rs", "pub fn gram_values_into() {}\n");
+    only_rule(&f, "panic_freedom");
+    assert_eq!(f.len(), 4, "{f:?}");
+    assert!(f.iter().all(|x| x.message.contains("PANIC_FREE_FNS")), "{f:?}");
+}
+
+#[test]
 fn the_streaming_files_are_in_the_panic_freedom_scope() {
     for path in ["src/corpus/stream.rs", "src/kernel/border.rs"] {
         let f = one(path, "pub fn f(v: &[f64]) -> f64 {\n    v[0]\n}\n");

@@ -50,6 +50,11 @@ pub struct Metrics {
     pub tiles_executed_total: AtomicU64,
     pub lane_groups_total: AtomicU64,
     pub lane_scalar_pairs_total: AtomicU64,
+    /// Backward-pass lane occupancy: full groups through the lane-batched
+    /// Algorithm-4 adjoint sweep and pairs that ran the scalar backward
+    /// remainder. Process-wide, like the forward lane mirrors above.
+    pub vjp_lane_groups_total: AtomicU64,
+    pub vjp_scalar_pairs_total: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -75,6 +80,8 @@ impl Default for Metrics {
             tiles_executed_total: AtomicU64::new(0),
             lane_groups_total: AtomicU64::new(0),
             lane_scalar_pairs_total: AtomicU64::new(0),
+            vjp_lane_groups_total: AtomicU64::new(0),
+            vjp_scalar_pairs_total: AtomicU64::new(0),
         }
     }
 }
@@ -140,6 +147,10 @@ impl Metrics {
             .store(stats.lane_groups, Ordering::Relaxed);
         self.lane_scalar_pairs_total
             .store(stats.scalar_pairs, Ordering::Relaxed);
+        self.vjp_lane_groups_total
+            .store(stats.vjp_lane_groups, Ordering::Relaxed);
+        self.vjp_scalar_pairs_total
+            .store(stats.vjp_scalar_pairs, Ordering::Relaxed);
     }
 
     /// Mirror the router's corpus-registry counters into the snapshot.
@@ -192,7 +203,7 @@ impl Metrics {
             .map(|c| format!("op{c}={}", self.op_count(c)))
             .collect();
         format!(
-            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={} corpus_warm={} corpus_cold={} tiles={} lane_groups={} lane_scalar={} [{}]",
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={} corpus_warm={} corpus_cold={} tiles={} lane_groups={} lane_scalar={} vjp_groups={} vjp_scalar={} [{}]",
             self.requests_total.load(Ordering::Relaxed),
             self.responses_total.load(Ordering::Relaxed),
             self.errors_total.load(Ordering::Relaxed),
@@ -209,6 +220,8 @@ impl Metrics {
             self.tiles_executed_total.load(Ordering::Relaxed),
             self.lane_groups_total.load(Ordering::Relaxed),
             self.lane_scalar_pairs_total.load(Ordering::Relaxed),
+            self.vjp_lane_groups_total.load(Ordering::Relaxed),
+            self.vjp_scalar_pairs_total.load(Ordering::Relaxed),
             ops.join(" "),
         )
     }
@@ -278,14 +291,20 @@ mod tests {
             tiles_executed: 12,
             lane_groups: 34,
             scalar_pairs: 5,
+            vjp_lane_groups: 9,
+            vjp_scalar_pairs: 2,
         });
         assert_eq!(m.tiles_executed_total.load(Ordering::Relaxed), 12);
         assert_eq!(m.lane_groups_total.load(Ordering::Relaxed), 34);
         assert_eq!(m.lane_scalar_pairs_total.load(Ordering::Relaxed), 5);
+        assert_eq!(m.vjp_lane_groups_total.load(Ordering::Relaxed), 9);
+        assert_eq!(m.vjp_scalar_pairs_total.load(Ordering::Relaxed), 2);
         let s = m.summary();
         assert!(s.contains("tiles=12"), "{s}");
         assert!(s.contains("lane_groups=34"), "{s}");
         assert!(s.contains("lane_scalar=5"), "{s}");
+        assert!(s.contains("vjp_groups=9"), "{s}");
+        assert!(s.contains("vjp_scalar=2"), "{s}");
     }
 
     #[test]

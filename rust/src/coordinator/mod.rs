@@ -70,10 +70,17 @@ pub enum Op {
     /// corpus `id`, advancing the cached Goursat border strips in place;
     /// responds with the path's new length in points. Ragged frames only.
     ExtendPath { id: u32, path_idx: u32 },
-    /// Evict all but the newest `keep` paths of corpus `id` (sliding-window
-    /// truncation); responds with the surviving path count. The frame
-    /// carries no paths. Ragged frames only.
-    EvictCorpus { id: u32, keep: u32 },
+    /// Evict old paths of corpus `id` (sliding-window truncation); responds
+    /// with the surviving path count. The frame carries no paths. Ragged
+    /// frames only. Two criteria, combinable:
+    /// * `keep > 0` — keep at most the newest `keep` paths (count bound);
+    /// * `max_age > 0` — drop paths older than `max_age` append ticks
+    ///   (registration is tick 0, every append batch advances the corpus
+    ///   clock by one); `keep` then acts as a floor on the survivors.
+    ///
+    /// `keep == 0 && max_age == 0` is rejected at decode — an empty corpus
+    /// has no means.
+    EvictCorpus { id: u32, keep: u32, max_age: u32 },
     /// Exponentially-weighted MMD² between the frame's query window and
     /// corpus `id`. `decay_bp` is the per-step weight decay in basis points
     /// (1..=10000; 10000 → uniform weights). Exact kernel only. Ragged
@@ -196,7 +203,11 @@ mod tests {
                 transform: 0,
             },
             Op::ExtendPath { id: 0, path_idx: 0 },
-            Op::EvictCorpus { id: 0, keep: 1 },
+            Op::EvictCorpus {
+                id: 0,
+                keep: 1,
+                max_age: 0,
+            },
             Op::Mmd2Window {
                 id: 0,
                 decay_bp: 10000,

@@ -410,8 +410,16 @@ impl Router {
                         .extend_path(CorpusId(id), path_idx as usize, &frame.values)?;
                 Ok(Some(vec![new_len as f64]))
             }
-            Op::EvictCorpus { id, keep } => {
-                let kept = self.corpus.evict(CorpusId(id), keep as usize)?;
+            Op::EvictCorpus { id, keep, max_age } => {
+                // max_age > 0 selects the age criterion with `keep` as a
+                // floor on survivors; max_age == 0 is the pure count bound
+                // (decode guarantees keep > 0 then).
+                let kept = if max_age > 0 {
+                    self.corpus
+                        .evict_by_age(CorpusId(id), max_age as u64, keep as usize)?
+                } else {
+                    self.corpus.evict(CorpusId(id), keep as usize)?
+                };
                 Ok(Some(vec![kept as f64]))
             }
             Op::Mmd2Window {
@@ -1107,7 +1115,11 @@ mod tests {
         // Evict down to the newest two paths; the response is the count.
         let kept = router
             .execute_ragged(&RaggedFrame {
-                op: Op::EvictCorpus { id, keep: 2 },
+                op: Op::EvictCorpus {
+                    id,
+                    keep: 2,
+                    max_age: 0,
+                },
                 dim: d,
                 lengths: vec![],
                 values: vec![],
@@ -1118,6 +1130,55 @@ mod tests {
         let st = router.corpus_stats();
         assert_eq!(st.extended, 1);
         assert_eq!(st.evicted, 1);
+        // Age-based eviction through the wire op: append a fresh batch
+        // (advancing the corpus clock), then drop everything older than
+        // that append. Only the appended path survives.
+        let fresh = rng.brownian_path(4, d, 0.4);
+        router
+            .execute_ragged(&RaggedFrame {
+                op: Op::AppendCorpus { id },
+                dim: d,
+                lengths: vec![4],
+                values: fresh,
+            })
+            .unwrap();
+        // A 0/0 op reaching the router directly (decode would reject it)
+        // falls through to count-eviction and errors there instead of
+        // emptying the corpus.
+        assert!(router
+            .execute_ragged(&RaggedFrame {
+                op: Op::EvictCorpus {
+                    id,
+                    keep: 0,
+                    max_age: 0,
+                },
+                dim: d,
+                lengths: vec![],
+                values: vec![],
+            })
+            .is_err());
+        let kept = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::EvictCorpus {
+                    id,
+                    keep: 0,
+                    max_age: 1,
+                },
+                dim: d,
+                lengths: vec![],
+                values: vec![],
+            })
+            .unwrap();
+        // Paths kept by the earlier count-evict were born at tick 0; the
+        // append bumped the clock to 1, so max_age=1 keeps them all.
+        assert_eq!(kept, vec![3.0]);
+        // Age 0 keeps only the trailing tick-1 run: the appended path.
+        let kept = router
+            .corpus_registry()
+            .evict_by_age(CorpusId(id), 0, 0)
+            .unwrap();
+        assert_eq!(kept, 1);
+        assert_eq!(router.corpus_registry().path_count(CorpusId(id)), Some(1));
     }
 
     #[test]

@@ -383,7 +383,42 @@ impl Client {
         keep: u32,
         dim: usize,
     ) -> std::io::Result<Result<usize, String>> {
-        let r = self.call_ragged(Op::EvictCorpus { id, keep }, dim, vec![], vec![])?;
+        let r = self.call_ragged(
+            Op::EvictCorpus {
+                id,
+                keep,
+                max_age: 0,
+            },
+            dim,
+            vec![],
+            vec![],
+        )?;
+        Ok(r.map(|v| v.first().copied().unwrap_or(0.0) as usize))
+    }
+
+    /// Convenience: evict every path of a registered corpus older than
+    /// `max_age` append ticks (registration is tick 0; each append batch
+    /// advances the corpus clock by one), keeping at least `keep_floor`
+    /// paths (at least one survives regardless). Returns the surviving
+    /// count. `max_age` must be positive — use
+    /// [`evict_corpus`](Client::evict_corpus) for the pure count bound.
+    pub fn evict_corpus_by_age(
+        &mut self,
+        id: u32,
+        max_age: u32,
+        keep_floor: u32,
+        dim: usize,
+    ) -> std::io::Result<Result<usize, String>> {
+        let r = self.call_ragged(
+            Op::EvictCorpus {
+                id,
+                keep: keep_floor,
+                max_age,
+            },
+            dim,
+            vec![],
+            vec![],
+        )?;
         Ok(r.map(|v| v.first().copied().unwrap_or(0.0) as usize))
     }
 

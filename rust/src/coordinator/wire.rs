@@ -109,7 +109,9 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
             transform,
         } => (9, id, rank, transform as u32),
         Op::ExtendPath { id, path_idx } => (10, id, path_idx, 0),
-        Op::EvictCorpus { id, keep } => (11, id, keep, 0),
+        // Pure-control op: the otherwise unused transform slot carries the
+        // optional age bound, keeping the frame layout fixed at 8 fields.
+        Op::EvictCorpus { id, keep, max_age } => (11, id, keep, max_age),
         Op::Mmd2Window {
             id,
             decay_bp,
@@ -119,53 +121,63 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
 }
 
 fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
-    let transform = u8::try_from(tr)
-        .ok()
-        .filter(|&t| t <= 3)
-        .ok_or(SigError::BadTransform(tr.min(255) as u8))?;
+    // Lazy: the slot is only a transform for the ops that carry one —
+    // EvictCorpus (code 11) reuses it for its age bound, so validation
+    // must happen per-arm, not up front.
+    let transform = || {
+        u8::try_from(tr)
+            .ok()
+            .filter(|&t| t <= 3)
+            .ok_or(SigError::BadTransform(tr.min(255) as u8))
+    };
     match code {
         1 => Ok(Op::Signature {
             depth: p1,
-            transform,
+            transform: transform()?,
         }),
         2 => Ok(Op::LogSignature {
             depth: p1,
-            transform,
+            transform: transform()?,
         }),
         3 => Ok(Op::SigKernel {
             lam1: p1,
             lam2: p2,
-            transform,
+            transform: transform()?,
         }),
         4 => Ok(Op::SigKernelGrad { lam1: p1, lam2: p2 }),
         5 => Ok(Op::Mmd2LowRank {
             rank: p1,
             nx: p2,
-            transform,
+            transform: transform()?,
         }),
         6 => Ok(Op::GramLowRank {
             rank: p1,
             nx: p2,
-            transform,
+            transform: transform()?,
         }),
         7 => Ok(Op::RegisterCorpus),
         8 => Ok(Op::AppendCorpus { id: p1 }),
         9 => Ok(Op::Mmd2Corpus {
             id: p1,
             rank: p2,
-            transform,
+            transform: transform()?,
         }),
         10 => Ok(Op::ExtendPath {
             id: p1,
             path_idx: p2,
         }),
         11 => {
-            if p2 == 0 {
+            if p2 == 0 && tr == 0 {
                 return Err(SigError::Protocol(
-                    "EvictCorpus must keep at least one path".to_string(),
+                    "EvictCorpus needs a keep count or a max age (both zero would empty the corpus)"
+                        .to_string(),
                 ));
             }
-            Ok(Op::EvictCorpus { id: p1, keep: p2 })
+            Ok(Op::EvictCorpus {
+                id: p1,
+                keep: p2,
+                max_age: tr,
+            })
         }
         12 => {
             if p2 == 0 || p2 > 10_000 {
@@ -810,16 +822,24 @@ mod tests {
             write_ragged_request(&mut buf, &frame).unwrap();
             assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
         }
-        // EvictCorpus: pure control, no paths.
-        let frame = RaggedFrame {
-            op: Op::EvictCorpus { id: 2, keep: 3 },
-            dim: 1,
-            lengths: vec![],
-            values: vec![],
-        };
-        let mut buf = Vec::new();
-        write_ragged_request(&mut buf, &frame).unwrap();
-        assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
+        // EvictCorpus: pure control, no paths. All three field mixes the
+        // decoder accepts survive the round trip, including an age bound
+        // far above the transform range the slot normally carries.
+        for (keep, max_age) in [(3u32, 0u32), (0, 17), (2, 1_000_000)] {
+            let frame = RaggedFrame {
+                op: Op::EvictCorpus {
+                    id: 2,
+                    keep,
+                    max_age,
+                },
+                dim: 1,
+                lengths: vec![],
+                values: vec![],
+            };
+            let mut buf = Vec::new();
+            write_ragged_request(&mut buf, &frame).unwrap();
+            assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
+        }
         // Mmd2Window: a normal query window.
         let frame = RaggedFrame {
             op: Op::Mmd2Window {
@@ -851,7 +871,11 @@ mod tests {
         assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
         // EvictCorpus carrying paths is a soft error.
         let frame = RaggedFrame {
-            op: Op::EvictCorpus { id: 0, keep: 1 },
+            op: Op::EvictCorpus {
+                id: 0,
+                keep: 1,
+                max_age: 0,
+            },
             dim: 1,
             lengths: vec![2],
             values: vec![0.0; 2],
@@ -860,11 +884,12 @@ mod tests {
         write_ragged_request(&mut buf, &frame).unwrap();
         let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
         assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
-        // EvictCorpus keep=0 and Mmd2Window decay_bp outside 1..=10000 are
-        // rejected at decode.
-        for (code, p2) in [(11u32, 0u32), (12, 0), (12, 10_001)] {
+        // EvictCorpus with keep=0 AND max_age=0 (it would empty the corpus)
+        // and Mmd2Window decay_bp outside 1..=10000 are rejected at decode —
+        // soft errors: the payload is consumed, the connection survives.
+        for (code, p2, tr) in [(11u32, 0u32, 0u32), (12, 0, 0), (12, 10_001, 0)] {
             let mut buf = Vec::new();
-            for h in [MAGIC_RAGGED, code, 1, p2, 0, 0, 1, 0u32] {
+            for h in [MAGIC_RAGGED, code, 1, p2, tr, 0, 1, 0u32] {
                 buf.extend_from_slice(&h.to_le_bytes());
             }
             let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
@@ -873,6 +898,24 @@ mod tests {
                 "code={code} p2={p2}: {got:?}"
             );
         }
+        // keep=0 with a positive age bound is well-formed (age-only evict).
+        let mut buf = Vec::new();
+        for h in [MAGIC_RAGGED, 11u32, 1, 0, 5, 0, 1, 0u32] {
+            buf.extend_from_slice(&h.to_le_bytes());
+        }
+        assert_eq!(
+            ok_frame(&mut buf.as_slice()),
+            RequestFrame::Ragged(RaggedFrame {
+                op: Op::EvictCorpus {
+                    id: 1,
+                    keep: 0,
+                    max_age: 5,
+                },
+                dim: 1,
+                lengths: vec![],
+                values: vec![],
+            })
+        );
         // Single-path frames cannot carry stream ops.
         let f = Frame {
             op: Op::ExtendPath { id: 0, path_idx: 0 },

@@ -111,6 +111,16 @@ struct CorpusEntry {
     data: Vec<f64>,
     lengths: Vec<usize>,
     hash: u64,
+    /// Corpus age clock: the number of append batches applied since
+    /// registration (registration itself is tick 0). In-place path
+    /// extensions do not advance it — they refine a path, they don't
+    /// refresh its age.
+    tick: u64,
+    /// Per-path birth tick, parallel to `lengths` (`born[i]` is the value
+    /// of `tick` when path `i` arrived). Non-decreasing by construction:
+    /// paths arrive in append order and eviction only drops prefixes —
+    /// which is what makes age-based eviction a prefix drop too.
+    born: Vec<u64>,
     exact: HashMap<KernelOptions, ExactCache>,
     lowrank: HashMap<(KernelOptions, LowRankSpec), LowRankCache>,
 }
@@ -244,6 +254,8 @@ impl CorpusRegistry {
         let entry = CorpusEntry {
             dim: batch.dim(),
             data: batch.data().to_vec(),
+            tick: 0,
+            born: vec![0; lengths.len()],
             lengths,
             hash,
             exact: HashMap::new(),
@@ -280,6 +292,9 @@ impl CorpusRegistry {
             let l = batch.len_of(i);
             e.lengths.push(l);
         }
+        e.tick += 1;
+        let t = e.tick;
+        e.born.resize(e.lengths.len(), t);
         let n = e.lengths.len();
         // Split borrows: the caches are extended against a view of the
         // (already extended) path data.
@@ -290,6 +305,7 @@ impl CorpusRegistry {
             hash,
             exact,
             lowrank,
+            ..
         } = &mut *e;
         let cb = PathBatch::ragged(data, lengths, *dim)?;
         let exact_keys: Vec<KernelOptions> = exact.keys().copied().collect();
@@ -412,6 +428,7 @@ impl CorpusRegistry {
             hash,
             exact,
             lowrank,
+            ..
         } = &mut *e;
         let cb = PathBatch::ragged(data, lengths, *dim)?;
         let exact_keys: Vec<KernelOptions> = exact.keys().copied().collect();
@@ -499,6 +516,7 @@ impl CorpusRegistry {
         let drop_pts: usize = e.lengths.iter().take(drop_n).sum();
         e.data.drain(..drop_pts * e.dim);
         e.lengths.drain(..drop_n);
+        e.born.drain(..drop_n);
         let n = keep;
         let CorpusEntry {
             dim,
@@ -507,6 +525,7 @@ impl CorpusRegistry {
             hash,
             exact,
             lowrank,
+            ..
         } = &mut *e;
         for c in exact.values_mut() {
             let mut kcc = vec![0.0; n * n];
@@ -558,6 +577,38 @@ impl CorpusRegistry {
         }
         self.evicted.fetch_add(1, Ordering::Relaxed);
         Ok(n)
+    }
+
+    /// Age-based eviction: drop every path whose age — in append ticks,
+    /// `tick − born[i]` — exceeds `max_age`, but always keep at least
+    /// `keep_floor.max(1)` paths (an empty corpus has no means). Birth
+    /// ticks are non-decreasing, so the survivors are exactly the trailing
+    /// fresh run and the drop reuses [`evict`](CorpusRegistry::evict) —
+    /// the same cache surgery, bit-identical to registering the survivors
+    /// from scratch. Returns the new path count.
+    ///
+    /// The run is measured on a read-locked snapshot and applied by
+    /// `evict`'s own write lock; an append racing between the two only
+    /// raises the count `evict` keeps, it never drops a path this scan
+    /// marked fresh (eviction is count-based from the newest end).
+    pub fn evict_by_age(
+        &self,
+        id: CorpusId,
+        max_age: u64,
+        keep_floor: usize,
+    ) -> Result<usize, SigError> {
+        let arc = self.entry(id)?;
+        let keep = {
+            let e = read_unpoisoned(&arc);
+            let n = e.lengths.len();
+            let fresh = e
+                .born
+                .iter()
+                .position(|&b| e.tick.saturating_sub(b) <= max_age)
+                .map_or(0, |first| n - first);
+            fresh.max(keep_floor).max(1)
+        };
+        self.evict(id, keep)
     }
 
     /// Exponentially-weighted MMD² between a query window and the corpus:

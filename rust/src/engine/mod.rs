@@ -1182,7 +1182,7 @@ impl Plan {
         // a racing duplicate build is harmless (last one wins), as in the
         // plan cache.
         let cached = {
-            let warm = self.lowrank_warm.lock().unwrap();
+            let warm = crate::util::sync::lock_unpoisoned(&self.lowrank_warm);
             warm.as_ref()
                 .filter(|w| {
                     w.y_lengths.len() == by
@@ -1196,7 +1196,7 @@ impl Plan {
             None => {
                 let map = Arc::new(FeatureMap::try_build(spec, k, y)?);
                 let phi_y = map.try_features(y)?;
-                *self.lowrank_warm.lock().unwrap() = Some(LowRankWarm {
+                *crate::util::sync::lock_unpoisoned(&self.lowrank_warm) = Some(LowRankWarm {
                     y_data: y.data().to_vec(),
                     y_lengths: (0..by).map(|i| y.len_of(i)).collect(),
                     map: map.clone(),
@@ -1290,6 +1290,7 @@ impl Plan {
             dim: self.shape.dim,
             slen: self.slen,
             retain,
+            lanes: self.lanes,
             arena: self.arena.clone(),
             values,
             x_data,
@@ -1617,6 +1618,10 @@ pub struct ExecutionRecord {
     dim: usize,
     slen: usize,
     retain: bool,
+    /// The plan's resolved lane width — the backward pass runs the same
+    /// schedule the forward was compiled with (pure schedule: gradients are
+    /// bit-identical across widths, property-tested).
+    lanes: usize,
     arena: Arena,
     values: Vec<f64>,
     x_data: Vec<f64>,
@@ -1699,14 +1704,22 @@ impl ExecutionRecord {
     /// `Sig` records feed their forward rows into the time-reversed
     /// deconstruction (paper §2.4) and `SigKernel` records feed their
     /// retained Δ + PDE grids into Algorithm 4 (§3.4) — neither re-runs the
-    /// forward sweep. `Gram` and `Mmd2` route through the same weighted-Gram
-    /// backward as [`try_gram_vjp`](crate::kernel::try_gram_vjp), which
-    /// re-derives each pair's grid (retaining O(b²) grids would dwarf the
-    /// forward's memory); their retained Gram matrices are exposed via
-    /// [`mmd_grams`](ExecutionRecord::mmd_grams) instead. All gradients are
-    /// bit-for-bit identical to the pre-existing typed `sig::backward` /
+    /// forward sweep (a kernel-record vjp solves **zero** forward grid
+    /// cells, asserted against [`pde_cells_solved`]). `Gram` and `Mmd2`
+    /// route through the same lane-scheduled weighted-Gram backward as
+    /// [`try_gram_vjp`](crate::kernel::try_gram_vjp) at the plan's compiled
+    /// lane width, which re-derives each pair's grid (retaining O(b²) grids
+    /// would dwarf the forward's memory); their retained Gram matrices are
+    /// exposed via [`mmd_grams`](ExecutionRecord::mmd_grams) instead. When
+    /// the two dyadic orders agree, the MMD² variants compute the Kxx term's
+    /// two argument slots from one solve per unordered pair (the symmetric
+    /// 2·∇₁ shortcut, ~half the solves). All gradients are bit-for-bit
+    /// identical to the pre-existing typed `sig::backward` /
     /// `kernel::backward` entry points evaluated with the same options
-    /// (including the forward `SigMethod`).
+    /// (including the forward `SigMethod`); lane width is pure schedule and
+    /// never changes a bit of the result.
+    ///
+    /// [`pde_cells_solved`]: crate::kernel::pde_cells_solved
     ///
     /// The cotangent length matches the op's output: `[batch, sig_length]`
     /// (signatures), `[batch]` (paired kernels), `[bx, by]` (Gram), `[1]`
@@ -1799,55 +1812,99 @@ impl ExecutionRecord {
         let xo = xb.element_offsets();
         let yo = yb.element_offsets();
         let mut gx = vec![0.0; xb.total_points() * dim];
-        let gy = std::sync::Mutex::new(vec![0.0; yb.total_points() * dim]);
-        let work = |i: usize, gxrow: &mut [f64]| {
-            let (lx, ly) = (self.x_lengths[i], self.y_lengths[i]);
-            let (m, n) = (dims[2 * i], dims[2 * i + 1]);
-            if m == 0 || n == 0 {
-                return; // degenerate pair: kernel constant, zero gradient
+        let mut gy = vec![0.0; yb.total_points() * dim];
+        // Pair i exclusively owns gx row i AND gy row i (offsets are
+        // non-decreasing, so the rows are disjoint) — both are written
+        // through base pointers by the worker that owns `i ≡ t (mod nt)`.
+        // No lock, hence no poisoning to unwrap. Per-pair heap traffic is
+        // hoisted into per-worker scratch that grows to the batch maxima
+        // once and is reused across the worker's rows.
+        let nt = if k.exec.parallel { num_threads().min(b) } else { 1.min(b) };
+        let gx_base = gx.as_mut_ptr() as usize;
+        let gy_base = gy.as_mut_ptr() as usize;
+        std::thread::scope(|s| {
+            let (xo, yo) = (&xo, &yo);
+            let (xb, yb) = (&xb, &yb);
+            for t in 0..nt {
+                s.spawn(move || {
+                    let mut d1a: Vec<f64> = Vec::new();
+                    let mut d1b: Vec<f64> = Vec::new();
+                    let mut d2: Vec<f64> = Vec::new();
+                    let mut dsc = crate::kernel::delta::DeltaVjpScratch::new();
+                    let mut i = t;
+                    while i < b {
+                        let (lx, ly) = (self.x_lengths[i], self.y_lengths[i]);
+                        let (m, n) = (dims[2 * i], dims[2 * i + 1]);
+                        if m == 0 || n == 0 {
+                            i += nt;
+                            continue; // degenerate pair: kernel constant, zero gradient
+                        }
+                        // SAFETY: rows i ≡ t (mod nt) of gx and gy are
+                        // written by exactly this worker; both buffers
+                        // outlive the scope.
+                        let gxrow = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (gx_base as *mut f64).add(xo[i]),
+                                xo[i + 1] - xo[i],
+                            )
+                        };
+                        let gyrow = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (gy_base as *mut f64).add(yo[i]),
+                                yo[i + 1] - yo[i],
+                            )
+                        };
+                        let delta = &deltas[delta_off[i]..delta_off[i + 1]];
+                        let grid = &grids[grid_off[i]..grid_off[i + 1]];
+                        // Algorithm 4 straight from the retained forward
+                        // state: the adjoint sweep reads the stored grid, so
+                        // zero forward cells are re-solved here.
+                        if d2.len() < m * n {
+                            d2.resize(m * n, 0.0);
+                        }
+                        crate::kernel::backward::sig_kernel_vjp_delta_into(
+                            delta,
+                            m,
+                            n,
+                            k.dyadic_x,
+                            k.dyadic_y,
+                            grid,
+                            cotangent[i],
+                            &mut d1a,
+                            &mut d1b,
+                            &mut d2[..m * n],
+                        );
+                        dsc.ensure(lx, ly, dim);
+                        crate::kernel::delta::delta_vjp_to_paths_with(
+                            &d2[..m * n],
+                            xb.values_of(i),
+                            yb.values_of(i),
+                            lx,
+                            ly,
+                            dim,
+                            k.exec.transform,
+                            &mut dsc,
+                            gxrow,
+                            gyrow,
+                        );
+                        i += nt;
+                    }
+                });
             }
-            let delta = &deltas[delta_off[i]..delta_off[i + 1]];
-            let grid = &grids[grid_off[i]..grid_off[i + 1]];
-            // Algorithm 4 straight from the retained forward state.
-            let d2 = crate::kernel::backward::sig_kernel_vjp_delta(
-                delta,
-                m,
-                n,
-                k.dyadic_x,
-                k.dyadic_y,
-                grid,
-                cotangent[i],
-            );
-            let mut gxi = vec![0.0; lx * dim];
-            let mut gyi = vec![0.0; ly * dim];
-            crate::kernel::delta::delta_vjp_to_paths(
-                &d2,
-                xb.values_of(i),
-                yb.values_of(i),
-                lx,
-                ly,
-                dim,
-                k.exec.transform,
-                &mut gxi,
-                &mut gyi,
-            );
-            gxrow.copy_from_slice(&gxi);
-            gy.lock().unwrap()[yo[i]..yo[i + 1]].copy_from_slice(&gyi);
-        };
-        if k.exec.parallel {
-            crate::util::pool::parallel_for_mut_ragged(&mut gx, &xo, work);
-        } else {
-            for i in 0..b {
-                let (lo, hi) = (xo[i], xo[i + 1]);
-                work(i, &mut gx[lo..hi]);
-            }
-        }
-        Ok(Gradients::Pair(gx, gy.into_inner().unwrap()))
+        });
+        Ok(Gradients::Pair(gx, gy))
     }
 
     fn vjp_gram(&self, k: &KernelOptions, cotangent: &[f64]) -> Result<Gradients, SigError> {
-        let (gx, gy) =
-            crate::kernel::try_gram_vjp(&self.x_batch(), &self.y_batch(), cotangent, k)?;
+        // Same lane schedule the plan compiled for the forward; width is
+        // pure schedule, so this only moves occupancy, never a bit.
+        let (gx, gy) = crate::kernel::try_gram_vjp_with_lanes(
+            &self.x_batch(),
+            &self.y_batch(),
+            cotangent,
+            k,
+            self.lanes,
+        )?;
         Ok(Gradients::Pair(gx, gy))
     }
 
@@ -1863,15 +1920,21 @@ impl ExecutionRecord {
         let xb = self.x_batch();
         let yb = self.y_batch();
         // ∂/∂x_i [ (1/bx²)ΣΣ k(x_a,x_b) ] needs BOTH argument slots of the
-        // Kxx term: (1/bx²)[Σ_b ∇₁k(x_i,x_b) + Σ_a ∇₂k(x_a,x_i)]. The two
-        // halves are equal only for a symmetric solve — with asymmetric
-        // dyadic orders (λ1 ≠ λ2) the discretised k(u,v) ≠ k(v,u), so the
-        // classic 2·∇₁ shortcut would not be the gradient of the value the
-        // forward pass actually computed.
+        // Kxx term: (1/bx²)[Σ_b ∇₁k(x_i,x_b) + Σ_a ∇₂k(x_a,x_i)]. When the
+        // dyadic orders agree the discretised kernel is symmetric in its
+        // arguments and the weights are constant, so one solve per unordered
+        // pair yields both slots (the symmetric 2·∇₁ shortcut — the slots
+        // stay separate to preserve this sum's association). With λ1 ≠ λ2
+        // the discretised k(u,v) ≠ k(v,u) and both orientations must be
+        // solved explicitly.
         let wxx = vec![c * (1.0 / (bx * bx) as f64); bx * bx];
-        let (gxx1, gxx2) = crate::kernel::try_gram_vjp(&xb, &xb, &wxx, k)?;
+        let (gxx1, gxx2) = if k.dyadic_x == k.dyadic_y {
+            crate::kernel::gram_vjp_sym_with_lanes(&xb, &wxx, k, self.lanes)?
+        } else {
+            crate::kernel::try_gram_vjp_with_lanes(&xb, &xb, &wxx, k, self.lanes)?
+        };
         let wxy = vec![c * (-2.0 / (bx * by) as f64); bx * by];
-        let (gxy, _) = crate::kernel::try_gram_vjp(&xb, &yb, &wxy, k)?;
+        let (gxy, _) = crate::kernel::try_gram_vjp_with_lanes(&xb, &yb, &wxy, k, self.lanes)?;
         Ok(Gradients::Single(
             gxx1.iter()
                 .zip(gxx2.iter())
@@ -1905,11 +1968,18 @@ impl ExecutionRecord {
         for i in 0..bx {
             wxx[i * bx + i] = 0.0;
         }
-        // Both argument slots, as in the biased case (λ1 ≠ λ2 ⇒ the
-        // discretised kernel is not symmetric in its arguments).
-        let (gxx1, gxx2) = crate::kernel::try_gram_vjp(&xb, &xb, &wxx, k)?;
+        // The U-statistic weight matrix is symmetric (constant off-diagonal,
+        // zero diagonal), so matched dyadic orders take the same one-solve-
+        // per-unordered-pair shortcut as the biased case; λ1 ≠ λ2 solves
+        // both orientations (the discretised kernel is not symmetric in its
+        // arguments then).
+        let (gxx1, gxx2) = if k.dyadic_x == k.dyadic_y {
+            crate::kernel::gram_vjp_sym_with_lanes(&xb, &wxx, k, self.lanes)?
+        } else {
+            crate::kernel::try_gram_vjp_with_lanes(&xb, &xb, &wxx, k, self.lanes)?
+        };
         let wxy = vec![c * (-2.0 / (bx * by) as f64); bx * by];
-        let (gxy, _) = crate::kernel::try_gram_vjp(&xb, &yb, &wxy, k)?;
+        let (gxy, _) = crate::kernel::try_gram_vjp_with_lanes(&xb, &yb, &wxy, k, self.lanes)?;
         Ok(Gradients::Single(
             gxx1.iter()
                 .zip(gxx2.iter())

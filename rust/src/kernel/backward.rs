@@ -36,19 +36,61 @@ pub fn sig_kernel_vjp_delta(
     grid: &[f64],
     grad_out: f64,
 ) -> Vec<f64> {
+    let w = (n << lam2) + 1;
+    let mut d2 = vec![0.0; m * n];
+    let mut d1_below = vec![0.0; w];
+    let mut d1_cur = vec![0.0; w];
+    sig_kernel_vjp_delta_into(
+        delta,
+        m,
+        n,
+        lam1,
+        lam2,
+        grid,
+        grad_out,
+        &mut d1_below,
+        &mut d1_cur,
+        &mut d2,
+    );
+    d2
+}
+
+/// [`sig_kernel_vjp_delta`] against caller-provided storage: `d1_below` /
+/// `d1_cur` are the two live adjoint rows (resized to `cols + 1` in place)
+/// and `d2` is the `[m, n]` output, zeroed here. The backward hot loops
+/// (Gram rows, record replays) route through this form so the steady state
+/// allocates nothing per pair.
+#[allow(clippy::too_many_arguments)]
+pub fn sig_kernel_vjp_delta_into(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    grid: &[f64],
+    grad_out: f64,
+    d1_below: &mut Vec<f64>,
+    d1_cur: &mut Vec<f64>,
+    d2: &mut [f64],
+) {
     assert_eq!(delta.len(), m * n);
     let rows = m << lam1;
     let cols = n << lam2;
     let w = cols + 1;
     assert_eq!(grid.len(), (rows + 1) * w);
+    assert_eq!(d2.len(), m * n);
     let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
 
-    let mut d2 = vec![0.0; m * n];
+    d2.fill(0.0);
     // Adjoint sweep, two live rows: d1_below = d1[s+1, ·], d1_cur = d1[s, ·].
     // (§Perf: a split vector-pass/serial-chain variant of this loop was
     // tried and reverted — ~20% slower here, same story as `solve_pde`.)
-    let mut d1_below = vec![0.0; w];
-    let mut d1_cur = vec![0.0; w];
+    d1_below.clear();
+    d1_below.resize(w, 0.0);
+    d1_cur.clear();
+    d1_cur.resize(w, 0.0);
+    let mut d1_below = &mut d1_below[..];
+    let mut d1_cur = &mut d1_cur[..];
     // p at refined cell (s, t): cells are (0..rows) × (0..cols).
     let p_at = |s: usize, t: usize| -> f64 { delta[(s >> lam1) * n + (t >> lam2)] * scale };
 
@@ -88,7 +130,6 @@ pub fn sig_kernel_vjp_delta(
         }
         std::mem::swap(&mut d1_below, &mut d1_cur);
     }
-    d2
 }
 
 /// Typed, fallible exact vjp of the signature kernel with respect to both

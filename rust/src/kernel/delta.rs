@@ -4,7 +4,7 @@
 //! runtime — it is a single blocked GEMM here, torch.bmm in pySigLib).
 
 use crate::transforms::Transform;
-use crate::util::linalg::gemm_nt;
+use crate::util::linalg::{gemm, gemm_nt, gemm_tn};
 
 /// Increments of `path` (`[len, dim]`): `[len-1, dim]`.
 pub fn increments(path: &[f64], len: usize, dim: usize) -> Vec<f64> {
@@ -117,6 +117,105 @@ pub fn delta_matrix_into(
     }
 }
 
+/// Reduce the transformed ∂F/∂Δ' (`[rows, cols]`) to the base ∂F/∂Δ
+/// (`[m, n]`). For `None`/`TimeAug` the transformed matrix *is* the base
+/// matrix (the constant time shift has zero path derivative) and is returned
+/// by reference without a copy; the lead-lag transforms fold equal parities
+/// into `gd` (ascending `a` outer, `b` inner — the order every caller
+/// replicates, so scalar and lane schedules stay bit-identical).
+pub fn fold_grad_delta<'a>(
+    grad_delta: &'a [f64],
+    m: usize,
+    n: usize,
+    transform: Transform,
+    gd: &'a mut [f64],
+) -> &'a [f64] {
+    match transform {
+        Transform::None | Transform::TimeAug => {
+            assert_eq!(grad_delta.len(), m * n);
+            grad_delta
+        }
+        Transform::LeadLag | Transform::LeadLagTimeAug => {
+            let rows = 2 * m;
+            let cols = 2 * n;
+            assert_eq!(grad_delta.len(), rows * cols);
+            let gd = &mut gd[..m * n];
+            gd.fill(0.0);
+            for a in 0..rows {
+                for b in 0..cols {
+                    if a % 2 == b % 2 {
+                        gd[(a / 2) * n + (b / 2)] += grad_delta[a * cols + b];
+                    }
+                }
+            }
+            gd
+        }
+    }
+}
+
+/// Δ[i,j] = ⟨dx_i, dy_j⟩ ⇒ ∂F/∂dx = gd·dy and ∂F/∂dy = gdᵀ·dx. Both GEMMs
+/// zero their outputs, skip zero entries of `gd`, and accumulate each output
+/// element in ascending shared-dimension order — term for term the historical
+/// fused adjoint loop.
+pub fn grad_increments_into(
+    gd: &[f64],
+    m: usize,
+    n: usize,
+    dim: usize,
+    dx: &[f64],
+    dy: &[f64],
+    gdx: &mut [f64],
+    gdy: &mut [f64],
+) {
+    gemm(m, n, dim, gd, &dy[..n * dim], &mut gdx[..m * dim]);
+    gemm_tn(m, n, dim, gd, &dx[..m * dim], &mut gdy[..n * dim]);
+}
+
+/// Difference adjoint: dx_i = x_{i+1} − x_i, so each increment gradient
+/// feeds `+` into the right endpoint and `−` into the left.
+pub fn apply_difference_adjoint(grad: &mut [f64], gincr: &[f64], segs: usize, dim: usize) {
+    for i in 0..segs {
+        for c in 0..dim {
+            grad[(i + 1) * dim + c] += gincr[i * dim + c];
+            grad[i * dim + c] -= gincr[i * dim + c];
+        }
+    }
+}
+
+/// Scratch for [`delta_vjp_to_paths_with`] — every buffer grows monotonically
+/// so a per-thread instance makes the backward hot loop allocation-free.
+#[derive(Default)]
+pub struct DeltaVjpScratch {
+    pub gd: Vec<f64>,
+    pub dx: Vec<f64>,
+    pub dy: Vec<f64>,
+    pub gdx: Vec<f64>,
+    pub gdy: Vec<f64>,
+}
+
+impl DeltaVjpScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer to cover a `(lx, ly, dim)` pair.
+    pub fn ensure(&mut self, lx: usize, ly: usize, dim: usize) {
+        let m = lx.saturating_sub(1);
+        let n = ly.saturating_sub(1);
+        grow(&mut self.gd, m * n);
+        grow(&mut self.dx, m * dim);
+        grow(&mut self.dy, n * dim);
+        grow(&mut self.gdx, m * dim);
+        grow(&mut self.gdy, n * dim);
+    }
+}
+
+fn grow(buf: &mut Vec<f64>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
+
 /// Adjoint of [`delta_matrix`]: given ∂F/∂Δ' (`[rows, cols]` of the
 /// transformed Δ), accumulate ∂F/∂x and ∂F/∂y (`[lx, dim]`, `[ly, dim]`).
 pub fn delta_vjp_to_paths(
@@ -130,59 +229,35 @@ pub fn delta_vjp_to_paths(
     grad_x: &mut [f64],
     grad_y: &mut [f64],
 ) {
+    let mut sc = DeltaVjpScratch::new();
+    sc.ensure(lx, ly, dim);
+    delta_vjp_to_paths_with(grad_delta, x, y, lx, ly, dim, transform, &mut sc, grad_x, grad_y);
+}
+
+/// [`delta_vjp_to_paths`] against caller-provided scratch (`ensure`d for the
+/// pair) — the allocation-free form the backward hot loops use. Bit-identical
+/// to the allocating wrapper: identical stages on identical inputs.
+#[allow(clippy::too_many_arguments)]
+pub fn delta_vjp_to_paths_with(
+    grad_delta: &[f64],
+    x: &[f64],
+    y: &[f64],
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    transform: Transform,
+    sc: &mut DeltaVjpScratch,
+    grad_x: &mut [f64],
+    grad_y: &mut [f64],
+) {
     let m = lx - 1;
     let n = ly - 1;
-    // Reduce the transformed ∂F/∂Δ' to the base ∂F/∂Δ (the constant time
-    // shift has zero derivative w.r.t. the paths).
-    let mut gd = vec![0.0; m * n];
-    match transform {
-        Transform::None | Transform::TimeAug => {
-            assert_eq!(grad_delta.len(), m * n);
-            gd.copy_from_slice(grad_delta);
-        }
-        Transform::LeadLag | Transform::LeadLagTimeAug => {
-            let rows = 2 * lx - 2;
-            let cols = 2 * ly - 2;
-            assert_eq!(grad_delta.len(), rows * cols);
-            for a in 0..rows {
-                for b in 0..cols {
-                    if a % 2 == b % 2 {
-                        gd[(a / 2) * n + (b / 2)] += grad_delta[a * cols + b];
-                    }
-                }
-            }
-        }
-    }
-    // Δ[i,j] = ⟨dx_i, dy_j⟩ ⇒ ∂F/∂dx_i = Σ_j gd[i,j]·dy_j, and symmetric.
-    let dx = increments(x, lx, dim);
-    let dy = increments(y, ly, dim);
-    let mut gdx = vec![0.0; m * dim];
-    let mut gdy = vec![0.0; n * dim];
-    for i in 0..m {
-        for j in 0..n {
-            let g = gd[i * n + j];
-            if g == 0.0 {
-                continue;
-            }
-            for c in 0..dim {
-                gdx[i * dim + c] += g * dy[j * dim + c];
-                gdy[j * dim + c] += g * dx[i * dim + c];
-            }
-        }
-    }
-    // Difference adjoint: dx_i = x_{i+1} - x_i.
-    for i in 0..m {
-        for c in 0..dim {
-            grad_x[(i + 1) * dim + c] += gdx[i * dim + c];
-            grad_x[i * dim + c] -= gdx[i * dim + c];
-        }
-    }
-    for j in 0..n {
-        for c in 0..dim {
-            grad_y[(j + 1) * dim + c] += gdy[j * dim + c];
-            grad_y[j * dim + c] -= gdy[j * dim + c];
-        }
-    }
+    increments_into(x, lx, dim, &mut sc.dx[..m * dim]);
+    increments_into(y, ly, dim, &mut sc.dy[..n * dim]);
+    let gd = fold_grad_delta(grad_delta, m, n, transform, &mut sc.gd);
+    grad_increments_into(gd, m, n, dim, &sc.dx, &sc.dy, &mut sc.gdx, &mut sc.gdy);
+    apply_difference_adjoint(grad_x, &sc.gdx[..m * dim], m, dim);
+    apply_difference_adjoint(grad_y, &sc.gdy[..n * dim], n, dim);
 }
 
 #[cfg(test)]

@@ -15,7 +15,9 @@
 //! on multi-pair rows. `PYSIGLIB_LANES=0` restores the scalar schedule.
 
 use crate::engine::{OpSpec, Plan, ShapeClass};
-use crate::kernel::backward::try_sig_kernel_vjp;
+use crate::kernel::lanes::{
+    lane_width_for, normalize_lane_width, vjp_gram_row, vjp_lane_sizes, VjpLaneScratch,
+};
 use crate::kernel::KernelOptions;
 use crate::path::{PathBatch, SigError};
 use crate::util::pool::num_threads;
@@ -129,16 +131,57 @@ pub fn gram(
     try_gram(&xb, &yb, opts).expect("gram")
 }
 
-/// Typed Gram vjp: given W = ∂F/∂Gram (`[bx, by]`), return
-/// (∂F/∂x, ∂F/∂y) in each batch's own (possibly ragged) flat layout.
+/// Resolve the lane width the backward pass actually runs at: normalise the
+/// request, then degrade to scalar if retaining W interleaved forward grids
+/// at the batch's longest pair would blow the grid-cell cap (width is pure
+/// schedule, so degrading is value-neutral).
+fn clamp_vjp_width(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    opts: &KernelOptions,
+    width: usize,
+) -> usize {
+    let width = normalize_lane_width(width);
+    if width == 0 {
+        return 0;
+    }
+    let mx = (0..x.batch()).map(|i| x.len_of(i)).max().unwrap_or(0);
+    let my = (0..y.batch()).map(|j| y.len_of(j)).max().unwrap_or(0);
+    if mx < 2 || my < 2 {
+        return 0;
+    }
+    let s = vjp_lane_sizes(
+        mx,
+        my,
+        x.dim(),
+        opts.exec.transform,
+        width,
+        opts.dyadic_x,
+        opts.dyadic_y,
+    );
+    if s.grid as u128 > super::MAX_GRID_CELLS {
+        0
+    } else {
+        width
+    }
+}
+
+/// The shared lane-scheduled Gram backward every consumer routes through:
+/// accumulate `∂F/∂x` and `∂F/∂y` of the weighted Gram `Σ w_ij·k(x_i, y_j)`.
 ///
-/// Parallelised over x-rows with per-thread accumulation buffers for the
-/// shared ∂F/∂y (merged once at the end) — no lock on the hot path.
-pub fn try_gram_vjp(
+/// Parallelised over x-rows with a **static** partition — worker t owns rows
+/// `i ≡ t (mod nt)`, ascending — so which per-thread ∂F/∂y buffer every
+/// column contribution lands in, hence the final merge order of each gy
+/// element, is deterministic: results are a pure function of the inputs and
+/// `num_threads()`, independent of scheduling and of `width`. All validation
+/// and sizing happens before the thread scope, so the worker bodies are
+/// infallible — no `expect` inside the scope by construction.
+fn gram_vjp_with_lanes(
     x: &PathBatch<'_>,
     y: &PathBatch<'_>,
     weights: &[f64],
     opts: &KernelOptions,
+    width: usize,
 ) -> Result<(Vec<f64>, Vec<f64>), SigError> {
     check_dims(x, y, opts)?;
     let (bx, by) = (x.batch(), y.batch());
@@ -154,45 +197,45 @@ pub fn try_gram_vjp(
     if bx == 0 || by == 0 {
         return Ok((gx, vec![0.0; gy_total]));
     }
+    let width = clamp_vjp_width(x, y, opts, width);
     let xo = x.element_offsets();
     let yo = y.element_offsets();
     let nt = num_threads().min(bx);
     let mut gy_parts = vec![vec![0.0; gy_total]; nt];
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    // gx rows are claimed exactly once per i (disjoint writes through the
+    // gx rows are owned by exactly one worker (disjoint writes through the
     // base pointer, as in `parallel_for_mut_ragged`); gy is accumulated into
     // per-thread buffers and merged below — no lock on the hot path.
     let gx_base = gx.as_mut_ptr() as usize;
     std::thread::scope(|s| {
-        let next = &next;
         let (xo, yo) = (&xo, &yo);
-        for part in gy_parts.iter_mut() {
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= bx {
-                    break;
-                }
-                // SAFETY: row i is gx[xo[i]..xo[i+1]], written by exactly one
-                // worker (offsets are non-decreasing); `gx` outlives the scope.
-                let gxrow = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        (gx_base as *mut f64).add(xo[i]),
-                        xo[i + 1] - xo[i],
-                    )
-                };
-                for j in 0..by {
-                    let w = weights[i * by + j];
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let (gxi, gyj) = try_sig_kernel_vjp(x.path(i), y.path(j), opts, w)
-                        .expect("validated");
-                    for (o, v) in gxrow.iter_mut().zip(gxi.iter()) {
-                        *o += v;
-                    }
-                    for (o, v) in part[yo[j]..yo[j + 1]].iter_mut().zip(gyj.iter()) {
-                        *o += v;
-                    }
+        for (t, part) in gy_parts.iter_mut().enumerate() {
+            s.spawn(move || {
+                let mut sc = VjpLaneScratch::new();
+                let mut i = t;
+                while i < bx {
+                    // SAFETY: row i is gx[xo[i]..xo[i+1]], written by exactly
+                    // one worker (i ≡ t mod nt; offsets are non-decreasing);
+                    // `gx` outlives the scope.
+                    let gxrow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            (gx_base as *mut f64).add(xo[i]),
+                            xo[i + 1] - xo[i],
+                        )
+                    };
+                    vjp_gram_row(
+                        x,
+                        i,
+                        y,
+                        0..by,
+                        &weights[i * by..(i + 1) * by],
+                        opts,
+                        width,
+                        &mut sc,
+                        gxrow,
+                        part,
+                        yo,
+                    );
+                    i += nt;
                 }
             });
         }
@@ -204,6 +247,157 @@ pub fn try_gram_vjp(
         }
     }
     Ok((gx, gy))
+}
+
+/// Slot-separated symmetric Gram backward for the self-term of MMD²-style
+/// objectives: for x against itself with **symmetric** weights
+/// (`w_ij == w_ji`, debug-asserted), return the two slot gradients
+/// `(gx1, gx2)` — `gx1[i] = Σ_j w_ij·∂₁k(x_i, x_j)`,
+/// `gx2[j] = Σ_i w_ij·∂₂k(x_i, x_j)` — from roughly **half** the adjoint
+/// solves.
+///
+/// Requires `dyadic_x == dyadic_y`: the forward grid of (x_j, x_i) is then
+/// the transpose of (x_i, x_j)'s, so one solve of the upper-triangle pair
+/// {i, j} yields all four contributions (∂₁ and ∂₂ of both orientations) —
+/// `∂₁k(x_j, x_i)` is `∂₂k(x_i, x_j)` computed by the very same FP ops
+/// (IEEE `+`/`×` are commutative in their operands, and [`gemm_tn`] runs
+/// the transposed accumulation in matching order). The slots are kept
+/// separate so callers can reproduce the two-slot path's final
+/// `gx1 + gx2 + …` association exactly; at λ > 0 the per-coarse-cell Δ-vjp
+/// accumulation order transposes, so cross-orientation reuse is equal to
+/// ~1e-12 rather than bitwise (guarded in `tests/props_grad.rs`).
+///
+/// [`gemm_tn`]: crate::util::linalg::gemm_tn
+pub(crate) fn gram_vjp_sym_with_lanes(
+    x: &PathBatch<'_>,
+    weights: &[f64],
+    opts: &KernelOptions,
+    width: usize,
+) -> Result<(Vec<f64>, Vec<f64>), SigError> {
+    debug_assert_eq!(opts.dyadic_x, opts.dyadic_y);
+    check_dims(x, x, opts)?;
+    let bx = x.batch();
+    if weights.len() != bx * bx {
+        return Err(SigError::CotangentLen {
+            expected: bx * bx,
+            got: weights.len(),
+        });
+    }
+    #[cfg(debug_assertions)]
+    for i in 0..bx {
+        for j in 0..i {
+            debug_assert_eq!(
+                weights[i * bx + j],
+                weights[j * bx + i],
+                "gram_vjp_sym_with_lanes needs symmetric weights"
+            );
+        }
+    }
+    let dim = x.dim();
+    let total = x.total_points() * dim;
+    let mut gx1 = vec![0.0; total];
+    let mut gx2 = vec![0.0; total];
+    if bx == 0 {
+        return Ok((gx1, gx2));
+    }
+    let width = clamp_vjp_width(x, x, opts, width);
+    let xo = x.element_offsets();
+    let nt = num_threads().min(bx);
+    // Per unordered pair {i, j} (j > i, owned by row i): one solve with seed
+    // w_ij gives (g₁, g₂); g₁ feeds gx1[i] (direct) *and* gx2[i] (it equals
+    // ∂₂k(x_j, x_i)), g₂ feeds gx2[j] *and* gx1[j] (both scattered through
+    // `off` parts, merged into both slots below). The diagonal solve feeds
+    // gx1[i] directly and gx2[i] through `diag` parts (merged into gx2
+    // only), keeping each slot's diagonal term faithful.
+    let mut off_parts = vec![vec![0.0; total]; nt];
+    let mut diag_parts = vec![vec![0.0; total]; nt];
+    let g1_base = gx1.as_mut_ptr() as usize;
+    let g2_base = gx2.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        let xo = &xo;
+        for (t, (off, diag)) in off_parts.iter_mut().zip(diag_parts.iter_mut()).enumerate() {
+            s.spawn(move || {
+                let mut sc = VjpLaneScratch::new();
+                let mut rowacc: Vec<f64> = Vec::new();
+                let mut i = t;
+                while i < bx {
+                    let rl = xo[i + 1] - xo[i];
+                    // SAFETY: rows i ≡ t (mod nt) of gx1/gx2 are written by
+                    // exactly this worker (offsets are non-decreasing); both
+                    // buffers outlive the scope.
+                    let g1row = unsafe {
+                        std::slice::from_raw_parts_mut((g1_base as *mut f64).add(xo[i]), rl)
+                    };
+                    let g2row = unsafe {
+                        std::slice::from_raw_parts_mut((g2_base as *mut f64).add(xo[i]), rl)
+                    };
+                    let wrow = &weights[i * bx..(i + 1) * bx];
+                    // Diagonal pair: ∂₁ → slot 1 direct, ∂₂ → slot 2 via
+                    // the diag part.
+                    vjp_gram_row(
+                        x, i, x, i..i + 1, &wrow[i..i + 1], opts, width, &mut sc, g1row, diag, xo,
+                    );
+                    // Strict upper row: the shared Σ_j ∂₁ term, accumulated
+                    // once and applied to both slots.
+                    rowacc.clear();
+                    rowacc.resize(rl, 0.0);
+                    vjp_gram_row(
+                        x, i, x, i + 1..bx, &wrow[i + 1..], opts, width, &mut sc, &mut rowacc,
+                        off, xo,
+                    );
+                    for c in 0..rl {
+                        g1row[c] += rowacc[c];
+                        g2row[c] += rowacc[c];
+                    }
+                    i += nt;
+                }
+            });
+        }
+    });
+    for part in off_parts {
+        for ((o1, o2), v) in gx1.iter_mut().zip(gx2.iter_mut()).zip(part.iter()) {
+            *o1 += v;
+            *o2 += v;
+        }
+    }
+    for part in diag_parts {
+        for (o, v) in gx2.iter_mut().zip(part.iter()) {
+            *o += v;
+        }
+    }
+    Ok((gx1, gx2))
+}
+
+/// Typed Gram vjp: given W = ∂F/∂Gram (`[bx, by]`), return
+/// (∂F/∂x, ∂F/∂y) in each batch's own (possibly ragged) flat layout.
+///
+/// Lane-batched ([`kernel::lanes`](crate::kernel::lanes)): each row's
+/// nonzero-weight columns group by shape class and ride the W-wide
+/// Algorithm-4 adjoint sweep, bit-identically to the scalar backward.
+/// Parallelised over x-rows with per-thread accumulation buffers for the
+/// shared ∂F/∂y (merged in fixed order at the end) — no lock on the hot
+/// path.
+pub fn try_gram_vjp(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    weights: &[f64],
+    opts: &KernelOptions,
+) -> Result<(Vec<f64>, Vec<f64>), SigError> {
+    gram_vjp_with_lanes(x, y, weights, opts, lane_width_for(y.uniform_len().is_some()))
+}
+
+/// [`try_gram_vjp`] with the lane width pinned instead of resolved from the
+/// shape profile and `PYSIGLIB_LANES`. Width is pure schedule — results are
+/// bit-identical across widths (property-tested) — so this exists for tests
+/// and benches that compare schedules.
+pub fn try_gram_vjp_with_lanes(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    weights: &[f64],
+    opts: &KernelOptions,
+    width: usize,
+) -> Result<(Vec<f64>, Vec<f64>), SigError> {
+    gram_vjp_with_lanes(x, y, weights, opts, width)
 }
 
 /// Gram vjp (flat-slice wrapper over [`try_gram_vjp`]): given
@@ -586,6 +780,32 @@ mod tests {
         }
         assert!(max_abs_diff(&gx, &gx_ref) < 1e-12);
         assert!(max_abs_diff(&gy, &gy_ref) < 1e-12);
+    }
+
+    /// The half-solve symmetric shortcut agrees with the two-slot backward
+    /// (tight tolerance; the slot-separated bit-identity guard at bx = 2 and
+    /// λ = 0 lives in `tests/props_grad.rs`).
+    #[test]
+    fn symmetric_shortcut_matches_two_slot_path() {
+        let mut rng = Rng::new(51);
+        let (b, l, d) = (5, 6, 2);
+        let x = rng.brownian_batch(b, l, d, 0.4);
+        let xb = PathBatch::uniform(&x, b, l, d).unwrap();
+        let mut w = vec![0.0; b * b];
+        rng.fill_normal(&mut w);
+        for i in 0..b {
+            for j in 0..i {
+                w[i * b + j] = w[j * b + i];
+            }
+        }
+        for opts in [KernelOptions::default(), KernelOptions::default().dyadic(1, 1)] {
+            let (r1, r2) = try_gram_vjp(&xb, &xb, &w, &opts).unwrap();
+            for width in [0usize, 4, 8] {
+                let (g1, g2) = gram_vjp_sym_with_lanes(&xb, &w, &opts, width).unwrap();
+                assert!(max_abs_diff(&g1, &r1) < 1e-12, "slot1 width={width}");
+                assert!(max_abs_diff(&g2, &r2) < 1e-12, "slot2 width={width}");
+            }
+        }
     }
 
     #[test]

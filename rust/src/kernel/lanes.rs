@@ -53,11 +53,16 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::kernel::delta::{delta_matrix_into, increments_into};
+use crate::kernel::backward::sig_kernel_vjp_delta_into;
+use crate::kernel::delta::{
+    apply_difference_adjoint, delta_matrix_into, fold_grad_delta, grad_increments_into,
+    increments_into,
+};
+use crate::kernel::solver::solve_pde_grid_into;
 use crate::kernel::{KernelOptions, SolverKind};
 use crate::path::PathBatch;
 use crate::transforms::Transform;
-use crate::util::linalg::gemm_nt;
+use crate::util::linalg::{gemm_nt, gemm_tn};
 
 /// The supported lane widths (const-generic instantiations of
 /// [`solve_pde_lanes`]).
@@ -70,6 +75,8 @@ pub const LANE_WIDTHS: [usize; 2] = [4, 8];
 static TILES_EXECUTED: AtomicU64 = AtomicU64::new(0);
 static LANE_GROUPS: AtomicU64 = AtomicU64::new(0);
 static SCALAR_PAIRS: AtomicU64 = AtomicU64::new(0);
+static VJP_LANE_GROUPS: AtomicU64 = AtomicU64::new(0);
+static VJP_SCALAR_PAIRS: AtomicU64 = AtomicU64::new(0);
 
 /// Snapshot of the lane engine's occupancy counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -81,6 +88,11 @@ pub struct LaneStats {
     /// Pairs solved by the scalar remainder while lane batching was active
     /// (degenerate pairs and lanes-off runs are not counted).
     pub scalar_pairs: u64,
+    /// Full lane groups dispatched through the backward sweep
+    /// ([`vjp_pde_lanes`]).
+    pub vjp_lane_groups: u64,
+    /// Pairs solved by the backward scalar remainder.
+    pub vjp_scalar_pairs: u64,
 }
 
 /// Current occupancy counters (monotonic across the process lifetime).
@@ -89,6 +101,8 @@ pub fn stats() -> LaneStats {
         tiles_executed: TILES_EXECUTED.load(Ordering::Relaxed),
         lane_groups: LANE_GROUPS.load(Ordering::Relaxed),
         scalar_pairs: SCALAR_PAIRS.load(Ordering::Relaxed),
+        vjp_lane_groups: VJP_LANE_GROUPS.load(Ordering::Relaxed),
+        vjp_scalar_pairs: VJP_SCALAR_PAIRS.load(Ordering::Relaxed),
     }
 }
 
@@ -603,6 +617,571 @@ fn scalar_entry(
     }
 }
 
+// ---------------------------------------------------------------------------
+// The backward pass: lane-batched Algorithm 4.
+//
+// The adjoint sweep has exactly the forward's structure — a serial recurrence
+// over the refined grid with no cross-pair dependency — so the same SoA trick
+// applies: W reverse Goursat traversals advance per pass over interleaved
+// `[cols+1, W]` adjoint rows, each lane replaying the scalar FP sequence of
+// [`sig_kernel_vjp_delta_into`] on its own Δ/grid values. Lane batching is
+// pure schedule in the backward direction too, so gradients are bit-identical
+// to the scalar Algorithm-4 path for every width (property-tested in
+// `tests/props_grad.rs`). The backward always differentiates the *row*
+// discretisation (Algorithm 4 needs the full forward grid), matching the
+// historical per-pair vjp entry points regardless of `opts.solver`.
+
+/// Solve W independent Goursat PDEs keeping the whole grids, lane-interleaved:
+/// node (s, t) of lane w lands at `grid[(s·(cols+1) + t)·W + w]`.
+///
+/// `delta` is the `[m, W, n]` block from [`delta_block_lanes`]; `grid` must
+/// have length `(rows+1)·(cols+1)·W`. Each lane runs the scalar recurrence of
+/// [`solve_pde_grid_into`] in the same order (same dyadic-run coefficient
+/// hoist), so every retained node is bit-identical to W scalar grid solves.
+pub fn solve_pde_grid_lanes<const W: usize>(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    grid: &mut [f64],
+) {
+    assert_eq!(delta.len(), m * W * n);
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let gw = cols + 1;
+    assert_eq!(grid.len(), (rows + 1) * gw * W);
+    crate::kernel::solver::count_fwd_cells((W * rows * cols) as u64);
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+    grid.fill(1.0);
+    let run = 1usize << lam2;
+    for s in 0..rows {
+        let dbase = (s >> lam1) * W * n;
+        let (top, bot) = grid.split_at_mut((s + 1) * gw * W);
+        let prev = &top[s * gw * W..];
+        let cur = &mut bot[..gw * W];
+        let mut k_left = [1.0f64; W];
+        let mut a = [0.0f64; W];
+        let mut b = [0.0f64; W];
+        let mut t = 0usize;
+        for tc in 0..n {
+            for w in 0..W {
+                let p = delta[dbase + w * n + tc] * scale;
+                let p2 = p * p * (1.0 / 12.0);
+                a[w] = 1.0 + 0.5 * p + p2;
+                b[w] = 1.0 - p2;
+            }
+            for _ in 0..run {
+                for w in 0..W {
+                    let v = (k_left[w] + prev[(t + 1) * W + w]) * a[w] - prev[t * W + w] * b[w];
+                    cur[(t + 1) * W + w] = v;
+                    k_left[w] = v;
+                }
+                t += 1;
+            }
+        }
+    }
+}
+
+/// The lane-batched Algorithm-4 adjoint sweep: W reverse Goursat traversals
+/// per pass.
+///
+/// `delta` is the `[m, W, n]` block, `grid` the interleaved forward grids
+/// from [`solve_pde_grid_lanes`], `grad_out` the per-lane ∂F/∂k(1,1) seeds.
+/// `d1_below`/`d1_cur` are the two live interleaved `[cols+1, W]` adjoint
+/// rows (resized in place); `d2` receives the `[m, W, n]` ∂F/∂Δ block,
+/// zeroed here. Lane w performs the exact scalar op sequence of
+/// [`sig_kernel_vjp_delta_into`] — same conditionals (they depend only on
+/// the shared geometry), same accumulation order — so each lane's `d2` is
+/// bit-identical to the scalar adjoint.
+#[allow(clippy::too_many_arguments)]
+pub fn vjp_pde_lanes<const W: usize>(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    grid: &[f64],
+    grad_out: &[f64; W],
+    d1_below: &mut Vec<f64>,
+    d1_cur: &mut Vec<f64>,
+    d2: &mut [f64],
+) {
+    assert_eq!(delta.len(), m * W * n);
+    let rows = m << lam1;
+    let cols = n << lam2;
+    let gw = cols + 1;
+    assert_eq!(grid.len(), (rows + 1) * gw * W);
+    assert_eq!(d2.len(), m * W * n);
+    let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
+    d2.fill(0.0);
+    d1_below.clear();
+    d1_below.resize(gw * W, 0.0);
+    d1_cur.clear();
+    d1_cur.resize(gw * W, 0.0);
+    let mut below = &mut d1_below[..];
+    let mut curr = &mut d1_cur[..];
+    // p at refined cell (s, t) of lane w.
+    let p_at =
+        |w: usize, s: usize, t: usize| delta[((s >> lam1) * W + w) * n + (t >> lam2)] * scale;
+    for s in (1..=rows).rev() {
+        for t in (1..=cols).rev() {
+            // The W-wide adjoint block: no cross-lane dependency.
+            for w in 0..W {
+                let mut v = 0.0;
+                if s == rows && t == cols {
+                    v = grad_out[w];
+                } else {
+                    if s < rows {
+                        let p = p_at(w, s, t - 1);
+                        v += below[t * W + w] * (1.0 + 0.5 * p + p * p / 12.0);
+                    }
+                    if t < cols {
+                        let p = p_at(w, s - 1, t);
+                        v += curr[(t + 1) * W + w] * (1.0 + 0.5 * p + p * p / 12.0);
+                    }
+                    if s < rows && t < cols {
+                        let p = p_at(w, s, t);
+                        v -= below[(t + 1) * W + w] * (1.0 - p * p / 12.0);
+                    }
+                }
+                curr[t * W + w] = v;
+                let p = p_at(w, s - 1, t - 1);
+                let k_l = grid[(s * gw + (t - 1)) * W + w];
+                let k_u = grid[((s - 1) * gw + t) * W + w];
+                let k_ul = grid[((s - 1) * gw + (t - 1)) * W + w];
+                let dk_dp = (k_l + k_u) * (0.5 + p / 6.0) + k_ul * (p / 6.0);
+                d2[(((s - 1) >> lam1) * W + w) * n + ((t - 1) >> lam2)] += v * dk_dp * scale;
+            }
+        }
+        std::mem::swap(&mut below, &mut curr);
+    }
+}
+
+/// The lane-batched Δ-vjp accumulator — the backward mirror of
+/// [`delta_block_lanes`]: reduce the W transformed ∂F/∂Δ' blocks to per-lane
+/// increment gradients.
+///
+/// `d2` is the `[m_t, W, n_t]` output of [`vjp_pde_lanes`]; `dx`/`dys` are
+/// the *raw* increments the forward pack already computed (reused, not
+/// recomputed). The gdy side of all W lanes is one stacked `Aᵀ·B` GEMM
+/// ([`gemm_tn`] — `d2` viewed as `[m, W·n]` lands the output per-lane
+/// contiguous `[W, n, dim]`, exactly the `dys` layout); the gdx side runs
+/// per lane in the GEMM's element order. Both match the scalar
+/// [`grad_increments_into`] term for term, so lane gradients stay
+/// bit-identical to the scalar adjoint.
+#[allow(clippy::too_many_arguments)]
+pub fn grad_block_lanes<const W: usize>(
+    d2: &[f64],
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    transform: Transform,
+    dx: &[f64],
+    dys: &[f64],
+    gd: &mut [f64],
+    gdx: &mut [f64],
+    gdy: &mut [f64],
+) {
+    let m = lx - 1;
+    let n = ly - 1;
+    // Reduce the transformed gradient to the base Δ per lane (the constant
+    // time shift has zero path derivative; lead-lag folds equal parities in
+    // the scalar `fold_grad_delta` order).
+    let gds: &[f64] = match transform {
+        Transform::None | Transform::TimeAug => {
+            assert_eq!(d2.len(), m * W * n);
+            d2
+        }
+        Transform::LeadLag | Transform::LeadLagTimeAug => {
+            let rows = 2 * m;
+            let cols = 2 * n;
+            assert_eq!(d2.len(), rows * W * cols);
+            let gd = &mut gd[..m * W * n];
+            gd.fill(0.0);
+            for a in 0..rows {
+                for w in 0..W {
+                    let drow = &d2[(a * W + w) * cols..(a * W + w + 1) * cols];
+                    let grow = &mut gd[((a / 2) * W + w) * n..((a / 2) * W + w + 1) * n];
+                    for (b, &v) in drow.iter().enumerate() {
+                        if a % 2 == b % 2 {
+                            grow[b / 2] += v;
+                        }
+                    }
+                }
+            }
+            gd
+        }
+    };
+    // gdy for all lanes: one stacked transposed GEMM.
+    gemm_tn(m, W * n, dim, gds, &dx[..m * dim], &mut gdy[..W * n * dim]);
+    // gdx per lane: gd_w · dy_w over the interleaved rows, ascending shared
+    // index with zero entries skipped — the [`gemm`](crate::util::linalg::gemm)
+    // element order.
+    let gdx = &mut gdx[..W * m * dim];
+    gdx.fill(0.0);
+    for w in 0..W {
+        for i in 0..m {
+            let grow = &gds[(i * W + w) * n..(i * W + w) * n + n];
+            let orow = &mut gdx[(w * m + i) * dim..(w * m + i + 1) * dim];
+            for (j, &g) in grow.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                let dyrow = &dys[(w * n + j) * dim..(w * n + j + 1) * dim];
+                for (ov, dv) in orow.iter_mut().zip(dyrow.iter()) {
+                    *ov += g * dv;
+                }
+            }
+        }
+    }
+}
+
+/// Buffer lengths a backward `(lx, ly, dim, transform, width)` row needs on
+/// top of the forward [`LaneSizes`] — the one place the backward
+/// scratch-sizing arithmetic lives (see [`lane_sizes`] for the contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VjpLaneSizes {
+    /// Forward pack + sweep scratch.
+    pub fwd: LaneSizes,
+    /// Interleaved retained forward grids `[(rows+1)·(cols+1)·W]`.
+    pub grid: usize,
+    /// One interleaved `[cols+1, W]` adjoint row (two are needed).
+    pub d1: usize,
+    /// Lane-interleaved `[m_t, W, n_t]` ∂F/∂Δ' block.
+    pub d2: usize,
+    /// Lead-lag fold target `[(lx−1)·W·(ly−1)]` (0 when unused).
+    pub gd: usize,
+    /// Stacked per-lane x-increment gradients `[W·(lx−1)·dim]`.
+    pub gdx: usize,
+    /// Stacked per-lane y-increment gradients `[W·(ly−1)·dim]`.
+    pub gdy: usize,
+}
+
+/// Compute [`VjpLaneSizes`] for a backward row of `(x: lx) × (y: ly)` pairs.
+pub fn vjp_lane_sizes(
+    lx: usize,
+    ly: usize,
+    dim: usize,
+    transform: Transform,
+    width: usize,
+    lam1: u32,
+    lam2: u32,
+) -> VjpLaneSizes {
+    let fwd = lane_sizes(lx, ly, dim, transform, width, lam2);
+    let w = width.max(1);
+    let (mi, ni) = (lx.saturating_sub(1), ly.saturating_sub(1));
+    let (mt, nt) = if lx < 2 || ly < 2 {
+        (0, 0)
+    } else {
+        (transform.out_len(lx) - 1, transform.out_len(ly) - 1)
+    };
+    let (rows, cols) = (mt << lam1, nt << lam2);
+    let needs_base = matches!(transform, Transform::LeadLag | Transform::LeadLagTimeAug);
+    VjpLaneSizes {
+        fwd,
+        grid: (rows + 1) * (cols + 1) * w,
+        d1: (cols + 1) * w,
+        d2: mt * w * nt,
+        gd: if needs_base { mi * w * ni } else { 0 },
+        gdx: w * mi * dim,
+        gdy: w * ni * dim,
+    }
+}
+
+/// Per-worker scratch for lane-batched backward Gram rows: the forward pack
+/// scratch plus retained grids, adjoint rows and increment-gradient buffers.
+/// Growable like [`LaneScratch`]; the shared Gram backward sizes one per
+/// worker at the batch's maxima, so the per-pair hot loop allocates nothing.
+#[derive(Default)]
+pub struct VjpLaneScratch {
+    /// Forward pack + sweep scratch (its `idx` doubles as the backward
+    /// column-grouping index).
+    pub fwd: LaneScratch,
+    /// Interleaved retained forward grids.
+    pub grid: Vec<f64>,
+    /// The two live interleaved adjoint rows.
+    pub d1a: Vec<f64>,
+    pub d1b: Vec<f64>,
+    /// Lane-interleaved ∂F/∂Δ' block.
+    pub d2: Vec<f64>,
+    /// Lead-lag fold target.
+    pub gd: Vec<f64>,
+    /// Stacked per-lane increment gradients.
+    pub gdx: Vec<f64>,
+    pub gdy: Vec<f64>,
+}
+
+impl VjpLaneScratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> VjpLaneScratch {
+        VjpLaneScratch::default()
+    }
+
+    /// Grow every buffer to [`vjp_lane_sizes`] for this row (never shrinks).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ensure(
+        &mut self,
+        lx: usize,
+        ly: usize,
+        dim: usize,
+        transform: Transform,
+        width: usize,
+        lam1: u32,
+        lam2: u32,
+    ) {
+        self.fwd.ensure(lx, ly, dim, transform, width, lam2);
+        let s = vjp_lane_sizes(lx, ly, dim, transform, width, lam1, lam2);
+        let grow = |buf: &mut Vec<f64>, len: usize| {
+            if buf.len() < len {
+                buf.resize(len, 0.0);
+            }
+        };
+        grow(&mut self.grid, s.grid);
+        grow(&mut self.d1a, s.d1);
+        grow(&mut self.d1b, s.d1);
+        grow(&mut self.d2, s.d2);
+        grow(&mut self.gd, s.gd);
+        grow(&mut self.gdx, s.gdx);
+        grow(&mut self.gdy, s.gdy);
+    }
+}
+
+/// Backward one Gram row: accumulate `Σ_j weights[j]·∂k(x_i, y_j)/∂·` into
+/// `gxrow` (`[lx·dim]`, x_i's gradient) and `gy` (a whole-batch y-gradient
+/// buffer addressed by the `yo` element offsets), lane-batched.
+///
+/// The dispatcher mirrors [`solve_gram_row`]: zero-weight and degenerate
+/// columns are skipped, the survivors group by shape class, full groups of
+/// `width` ride [`vjp_pde_lanes`], the remainder runs scalar. One deliberate
+/// difference: ragged columns are sorted by length at **every** width,
+/// scalar included — `gxrow` accumulates across columns, so the column order
+/// must be width-independent for the lane schedule to stay bit-identical to
+/// the scalar one. The backward always solves the row discretisation
+/// (Algorithm 4 differentiates through the retained row grid), whatever
+/// `opts.solver` says about the forward.
+#[allow(clippy::too_many_arguments)]
+pub fn vjp_gram_row(
+    x: &PathBatch<'_>,
+    i: usize,
+    y: &PathBatch<'_>,
+    cols: Range<usize>,
+    weights: &[f64],
+    opts: &KernelOptions,
+    width: usize,
+    sc: &mut VjpLaneScratch,
+    gxrow: &mut [f64],
+    gy: &mut [f64],
+    yo: &[usize],
+) {
+    assert_eq!(weights.len(), cols.len());
+    if cols.is_empty() {
+        return;
+    }
+    let width = normalize_lane_width(width);
+    let lx = x.len_of(i);
+    if lx < 2 {
+        // Constant kernel row: zero gradient everywhere.
+        return;
+    }
+    let c0 = cols.start;
+    let my = (cols.start..cols.end)
+        .filter(|&j| weights[j - c0] != 0.0)
+        .map(|j| y.len_of(j))
+        .max()
+        .unwrap_or(0);
+    let tr = opts.exec.transform;
+    sc.ensure(lx, my, x.dim(), tr, width, opts.dyadic_x, opts.dyadic_y);
+    let mut idx = std::mem::take(&mut sc.fwd.idx);
+    idx.clear();
+    for j in cols.start..cols.end {
+        if weights[j - c0] != 0.0 && y.len_of(j) >= 2 {
+            idx.push(j);
+        }
+    }
+    if y.uniform_len().is_none() {
+        idx.sort_unstable_by_key(|&j| y.len_of(j));
+    }
+    let (mut groups, mut scalars) = (0u64, 0u64);
+    let mut pos = 0;
+    while pos < idx.len() {
+        let ly = y.len_of(idx[pos]);
+        let mut end = pos + 1;
+        while end < idx.len() && y.len_of(idx[end]) == ly {
+            end += 1;
+        }
+        if width >= 4 {
+            while pos + width <= end {
+                let group = &idx[pos..pos + width];
+                match width {
+                    4 => vjp_group_into::<4>(x, i, y, group, weights, c0, opts, sc, gxrow, gy, yo),
+                    _ => vjp_group_into::<8>(x, i, y, group, weights, c0, opts, sc, gxrow, gy, yo),
+                }
+                groups += 1;
+                pos += width;
+            }
+        }
+        while pos < end {
+            let j = idx[pos];
+            scalar_vjp_entry(x, i, y, j, weights[j - c0], opts, sc, gxrow, gy, yo);
+            scalars += 1;
+            pos += 1;
+        }
+    }
+    sc.fwd.idx = idx;
+    if groups > 0 {
+        VJP_LANE_GROUPS.fetch_add(groups, Ordering::Relaxed);
+    }
+    if scalars > 0 {
+        VJP_SCALAR_PAIRS.fetch_add(scalars, Ordering::Relaxed);
+    }
+}
+
+/// One full backward lane group: pack Δ (stacked GEMM), recompute the W
+/// forward grids in one sweep, run the W-wide adjoint, reduce to increment
+/// gradients, and apply the difference adjoints per lane in group order —
+/// the exact sequence the scalar schedule produces.
+#[allow(clippy::too_many_arguments)]
+fn vjp_group_into<const W: usize>(
+    x: &PathBatch<'_>,
+    i: usize,
+    y: &PathBatch<'_>,
+    group: &[usize],
+    weights: &[f64],
+    c0: usize,
+    opts: &KernelOptions,
+    sc: &mut VjpLaneScratch,
+    gxrow: &mut [f64],
+    gy: &mut [f64],
+    yo: &[usize],
+) {
+    debug_assert_eq!(group.len(), W);
+    let (lx, ly) = (x.len_of(i), y.len_of(group[0]));
+    let dim = x.dim();
+    let ys: [&[f64]; W] = std::array::from_fn(|w| y.values_of(group[w]));
+    let seeds: [f64; W] = std::array::from_fn(|w| weights[group[w] - c0]);
+    let VjpLaneScratch {
+        fwd,
+        grid,
+        d1a,
+        d1b,
+        d2,
+        gd,
+        gdx,
+        gdy,
+    } = sc;
+    let (mt, nt) = delta_block_lanes::<W>(
+        x.values_of(i),
+        lx,
+        &ys,
+        ly,
+        dim,
+        opts.exec.transform,
+        &mut fwd.dx,
+        &mut fwd.dys,
+        &mut fwd.base,
+        &mut fwd.delta,
+    );
+    let delta = &fwd.delta[..mt * W * nt];
+    let glen = ((mt << opts.dyadic_x) + 1) * ((nt << opts.dyadic_y) + 1) * W;
+    solve_pde_grid_lanes::<W>(delta, mt, nt, opts.dyadic_x, opts.dyadic_y, &mut grid[..glen]);
+    vjp_pde_lanes::<W>(
+        delta,
+        mt,
+        nt,
+        opts.dyadic_x,
+        opts.dyadic_y,
+        &grid[..glen],
+        &seeds,
+        d1a,
+        d1b,
+        &mut d2[..mt * W * nt],
+    );
+    let (m, n) = (lx - 1, ly - 1);
+    grad_block_lanes::<W>(
+        &d2[..mt * W * nt],
+        lx,
+        ly,
+        dim,
+        opts.exec.transform,
+        &fwd.dx,
+        &fwd.dys,
+        gd,
+        gdx,
+        gdy,
+    );
+    for (w, &j) in group.iter().enumerate() {
+        apply_difference_adjoint(gxrow, &gdx[w * m * dim..(w * m + m) * dim], m, dim);
+        let gyj = &mut gy[yo[j]..yo[j + 1]];
+        apply_difference_adjoint(gyj, &gdy[w * n * dim..(w * n + n) * dim], n, dim);
+    }
+}
+
+/// One scalar backward Gram entry — exactly the per-pair Algorithm-4
+/// computation (Δ pack, full forward grid, adjoint sweep, Δ-vjp), run
+/// against the shared scratch so the hot loop allocates nothing. The lane
+/// remainder and the lanes-off schedule both land here, so backward values
+/// match the historical `try_sig_kernel_vjp` path bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn scalar_vjp_entry(
+    x: &PathBatch<'_>,
+    i: usize,
+    y: &PathBatch<'_>,
+    j: usize,
+    seed: f64,
+    opts: &KernelOptions,
+    sc: &mut VjpLaneScratch,
+    gxrow: &mut [f64],
+    gy: &mut [f64],
+    yo: &[usize],
+) {
+    let (lx, ly) = (x.len_of(i), y.len_of(j));
+    debug_assert!(lx >= 2 && ly >= 2);
+    let dim = x.dim();
+    let VjpLaneScratch {
+        fwd,
+        grid,
+        d1a,
+        d1b,
+        d2,
+        gd,
+        gdx,
+        gdy,
+    } = sc;
+    let (mt, nt) = delta_matrix_into(
+        x.values_of(i),
+        y.values_of(j),
+        lx,
+        ly,
+        dim,
+        opts.exec.transform,
+        &mut fwd.dx,
+        &mut fwd.dys,
+        &mut fwd.base,
+        &mut fwd.delta,
+    );
+    let delta = &fwd.delta[..mt * nt];
+    let glen = ((mt << opts.dyadic_x) + 1) * ((nt << opts.dyadic_y) + 1);
+    solve_pde_grid_into(delta, mt, nt, opts.dyadic_x, opts.dyadic_y, &mut grid[..glen]);
+    sig_kernel_vjp_delta_into(
+        delta,
+        mt,
+        nt,
+        opts.dyadic_x,
+        opts.dyadic_y,
+        &grid[..glen],
+        seed,
+        d1a,
+        d1b,
+        &mut d2[..mt * nt],
+    );
+    let (m, n) = (lx - 1, ly - 1);
+    let gdt = fold_grad_delta(&d2[..mt * nt], m, n, opts.exec.transform, gd);
+    grad_increments_into(gdt, m, n, dim, &fwd.dx, &fwd.dys, gdx, gdy);
+    apply_difference_adjoint(gxrow, &gdx[..m * dim], m, dim);
+    apply_difference_adjoint(&mut gy[yo[j]..yo[j + 1]], &gdy[..n * dim], n, dim);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -733,6 +1312,164 @@ mod tests {
         let after = stats();
         assert!(after.lane_groups >= before.lane_groups + 1);
         assert!(after.scalar_pairs >= before.scalar_pairs + 3);
+    }
+
+    #[test]
+    fn grid_lanes_bitmatch_scalar_grid_solver() {
+        check("solve_pde_grid_lanes == W × solve_pde_grid", 15, |g| {
+            const W: usize = 4;
+            let m = g.usize_in(1, 7);
+            let n = g.usize_in(1, 7);
+            let lam1 = g.usize_in(0, 2) as u32;
+            let lam2 = g.usize_in(0, 2) as u32;
+            let deltas: Vec<Vec<f64>> = (0..W)
+                .map(|_| g.normal_vec(m * n).iter().map(|v| v * 0.3).collect())
+                .collect();
+            let block = interleave::<W>(&deltas, m, n);
+            let (rows, cols) = (m << lam1, n << lam2);
+            let gw = cols + 1;
+            let mut grid = vec![0.0; (rows + 1) * gw * W];
+            solve_pde_grid_lanes::<W>(&block, m, n, lam1, lam2, &mut grid);
+            for (w, d) in deltas.iter().enumerate() {
+                let want = crate::kernel::solver::solve_pde_grid(d, m, n, lam1, lam2);
+                for s in 0..=rows {
+                    for t in 0..gw {
+                        assert_eq!(
+                            grid[(s * gw + t) * W + w],
+                            want[s * gw + t],
+                            "lane {w} node ({s},{t}) m={m} n={n} λ=({lam1},{lam2})"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn vjp_lanes_bitmatch_scalar_adjoint() {
+        check("vjp_pde_lanes == W × sig_kernel_vjp_delta", 15, |g| {
+            const W: usize = 4;
+            let m = g.usize_in(1, 7);
+            let n = g.usize_in(1, 7);
+            let lam1 = g.usize_in(0, 2) as u32;
+            let lam2 = g.usize_in(0, 2) as u32;
+            let deltas: Vec<Vec<f64>> = (0..W)
+                .map(|_| g.normal_vec(m * n).iter().map(|v| v * 0.3).collect())
+                .collect();
+            let seeds: [f64; W] = std::array::from_fn(|w| 0.25 + 0.5 * w as f64);
+            let block = interleave::<W>(&deltas, m, n);
+            let (rows, cols) = (m << lam1, n << lam2);
+            let gw = cols + 1;
+            let mut grid = vec![0.0; (rows + 1) * gw * W];
+            solve_pde_grid_lanes::<W>(&block, m, n, lam1, lam2, &mut grid);
+            let (mut d1a, mut d1b) = (Vec::new(), Vec::new());
+            let mut d2 = vec![0.0; m * W * n];
+            vjp_pde_lanes::<W>(
+                &block, m, n, lam1, lam2, &grid, &seeds, &mut d1a, &mut d1b, &mut d2,
+            );
+            for (w, d) in deltas.iter().enumerate() {
+                let sgrid = crate::kernel::solver::solve_pde_grid(d, m, n, lam1, lam2);
+                let want = crate::kernel::backward::sig_kernel_vjp_delta(
+                    d, m, n, lam1, lam2, &sgrid, seeds[w],
+                );
+                for s in 0..m {
+                    for t in 0..n {
+                        assert_eq!(
+                            d2[(s * W + w) * n + t],
+                            want[s * n + t],
+                            "lane {w} cell ({s},{t}) m={m} n={n} λ=({lam1},{lam2})"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn vjp_gram_row_bitmatches_scalar_for_every_width() {
+        let mut rng = Rng::new(912);
+        let d = 2;
+        // Ragged y with repeated lengths (so groups form), a degenerate path
+        // and a zero-weight column (both must be skipped identically).
+        let ylens = [5usize, 7, 5, 5, 7, 5, 1, 5, 7, 5, 5, 7, 5, 5];
+        let mut ydata = Vec::new();
+        for &l in &ylens {
+            ydata.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let yb = PathBatch::ragged(&ydata, &ylens, d).unwrap();
+        let xdata = rng.brownian_path(6, d, 0.4);
+        let xb = PathBatch::uniform(&xdata, 1, 6, d).unwrap();
+        let lx = 6;
+        let mut yo = vec![0usize; ylens.len() + 1];
+        for (j, &l) in ylens.iter().enumerate() {
+            yo[j + 1] = yo[j] + l * d;
+        }
+        let mut weights: Vec<f64> = (0..ylens.len()).map(|j| 0.3 + 0.1 * j as f64).collect();
+        weights[3] = 0.0;
+        for opts in [
+            KernelOptions::default(),
+            KernelOptions::default().dyadic(1, 2),
+            KernelOptions::default().transform(Transform::LeadLag),
+            KernelOptions::default().transform(Transform::TimeAug),
+        ] {
+            let mut gx_want = vec![0.0; lx * d];
+            let mut gy_want = vec![0.0; ydata.len()];
+            let mut sc = VjpLaneScratch::new();
+            vjp_gram_row(
+                &xb, 0, &yb, 0..ylens.len(), &weights, &opts, 0, &mut sc, &mut gx_want,
+                &mut gy_want, &yo,
+            );
+            assert!(gx_want.iter().any(|v| *v != 0.0), "degenerate reference");
+            for width in LANE_WIDTHS {
+                let mut gx = vec![0.0; lx * d];
+                let mut gy = vec![0.0; ydata.len()];
+                let mut sc = VjpLaneScratch::new();
+                vjp_gram_row(
+                    &xb, 0, &yb, 0..ylens.len(), &weights, &opts, width, &mut sc, &mut gx,
+                    &mut gy, &yo,
+                );
+                assert_eq!(gx, gx_want, "gx width={width} opts={opts:?}");
+                assert_eq!(gy, gy_want, "gy width={width} opts={opts:?}");
+            }
+        }
+        // The zero-weight column and the degenerate path must receive no
+        // gradient at all.
+        let mut gx = vec![0.0; lx * d];
+        let mut gy = vec![0.0; ydata.len()];
+        let mut sc = VjpLaneScratch::new();
+        vjp_gram_row(
+            &xb, 0, &yb, 0..ylens.len(), &weights, &KernelOptions::default(), 8, &mut sc,
+            &mut gx, &mut gy, &yo,
+        );
+        assert!(gy[yo[3]..yo[4]].iter().all(|v| *v == 0.0), "zero-weight column");
+        assert!(gy[yo[6]..yo[7]].iter().all(|v| *v == 0.0), "degenerate column");
+    }
+
+    #[test]
+    fn backward_occupancy_counters_move_with_lane_traffic() {
+        let before = stats();
+        let mut rng = Rng::new(913);
+        let d = 2;
+        let n = 11; // one group of 8 + three scalar remainder pairs
+        let data = rng.brownian_batch(n, 6, d, 0.4);
+        let yb = PathBatch::uniform(&data, n, 6, d).unwrap();
+        let x = rng.brownian_path(5, d, 0.4);
+        let xb = PathBatch::uniform(&x, 1, 5, d).unwrap();
+        let mut yo = vec![0usize; n + 1];
+        for j in 0..n {
+            yo[j + 1] = yo[j] + 6 * d;
+        }
+        let weights = vec![1.0; n];
+        let mut gx = vec![0.0; 5 * d];
+        let mut gy = vec![0.0; data.len()];
+        let mut sc = VjpLaneScratch::new();
+        vjp_gram_row(
+            &xb, 0, &yb, 0..n, &weights, &KernelOptions::default(), 8, &mut sc, &mut gx,
+            &mut gy, &yo,
+        );
+        let after = stats();
+        assert!(after.vjp_lane_groups >= before.vjp_lane_groups + 1);
+        assert!(after.vjp_scalar_pairs >= before.vjp_scalar_pairs + 3);
     }
 
     #[test]

@@ -18,17 +18,19 @@ pub mod lowrank;
 pub mod pde_baseline;
 pub mod solver;
 
-pub use backward::{sig_kernel_vjp, sig_kernel_vjp_delta, try_sig_kernel_vjp};
+pub use backward::{sig_kernel_vjp, sig_kernel_vjp_delta, sig_kernel_vjp_delta_into,
+    try_sig_kernel_vjp};
 pub use blocked::solve_pde_blocked;
 pub use border::{border_cells_solved, PairBorder};
 pub use delta::{delta_matrix, delta_vjp_to_paths};
 pub use gram::{
     batch_kernel, batch_kernel_vjp, gram, gram_vjp, mmd2, mmd2_with_grad, try_batch_kernel,
-    try_batch_kernel_vjp, try_gram, try_gram_vjp, try_mmd2, try_mmd2_unbiased,
-    try_mmd2_unbiased_with_grad, try_mmd2_with_grad,
+    try_batch_kernel_vjp, try_gram, try_gram_vjp, try_gram_vjp_with_lanes, try_mmd2,
+    try_mmd2_unbiased, try_mmd2_unbiased_with_grad, try_mmd2_with_grad,
 };
+pub(crate) use gram::gram_vjp_sym_with_lanes;
 pub use krr::KernelRidge;
-pub use lanes::{solve_pde_lanes, LaneScratch, LaneStats};
+pub use lanes::{solve_pde_lanes, vjp_pde_lanes, LaneScratch, LaneStats};
 pub use lowrank::{
     try_gram_lowrank, try_mmd2_lowrank, try_mmd2_lowrank_unbiased, try_mmd2_lowrank_with_grad,
     FeatureMap, LowRankFeatures, LowRankMethod, LowRankRidge, LowRankSpec, NystromFeatures,
@@ -36,7 +38,7 @@ pub use lowrank::{
 };
 pub use lift::{lifted_delta, sig_kernel_lifted, StaticKernel};
 pub use pde_baseline::sig_kernel_vjp_pde_approx;
-pub use solver::{solve_pde, solve_pde_grid, solve_pde_grid_into, solve_pde_with};
+pub use solver::{pde_cells_solved, solve_pde, solve_pde_grid, solve_pde_grid_into, solve_pde_with};
 
 pub use crate::path::KernelOptions;
 

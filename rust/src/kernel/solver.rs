@@ -13,6 +13,25 @@
 //! refined Δ are never materialised (other packages precompute them, paying
 //! 4^λ memory).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of forward Goursat cells solved by the row-sweep
+/// solvers (scalar and lane-batched). Mirrors `border_cells_solved`: an
+/// occupancy probe for tests and benchmarks — e.g. proving that a
+/// retained-grid `record.vjp` re-solves **zero** forward cells.
+static PDE_FWD_CELLS: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+pub(crate) fn count_fwd_cells(n: u64) {
+    PDE_FWD_CELLS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total refined forward cells solved so far by this process (row solvers
+/// only; the blocked solver has its own tiling and is not counted here).
+pub fn pde_cells_solved() -> u64 {
+    PDE_FWD_CELLS.load(Ordering::Relaxed)
+}
+
 /// Solve the PDE and return the terminal value k(1,1).
 ///
 /// `delta` is the `[m, n]` increment inner-product matrix (m = lx−1,
@@ -39,6 +58,7 @@ pub fn solve_pde_with(
     assert_eq!(delta.len(), m * n);
     let rows = m << lam1;
     let cols = n << lam2;
+    count_fwd_cells((rows * cols) as u64);
     let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
     prev.clear();
     prev.resize(cols + 1, 1.0);
@@ -108,6 +128,7 @@ pub fn solve_pde_grid_into(
     assert_eq!(delta.len(), m * n);
     let rows = m << lam1;
     let cols = n << lam2;
+    count_fwd_cells((rows * cols) as u64);
     let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
     let w = cols + 1;
     assert_eq!(k.len(), (rows + 1) * w);

@@ -51,6 +51,31 @@ pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]
     }
 }
 
+/// C = Aᵀ · B with A[m,n], B[m,p] row-major (the Δ-vjp `gdy = Δᵀ·dx` case).
+/// Accumulation over the shared dimension runs in ascending row order for
+/// every output element and zero entries of A are skipped, matching the
+/// scalar per-pair adjoint loop this replaces term for term.
+pub fn gemm_tn(m: usize, n: usize, p: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), m * p);
+    assert_eq!(c.len(), n * p);
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let brow = &b[i * p..(i + 1) * p];
+        for (j, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[j * p..(j + 1) * p];
+            // Autovectorises: contiguous fused multiply-add over p.
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
 /// Dot product.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
@@ -262,6 +287,28 @@ mod tests {
         let mut c2 = vec![0.0; m * n];
         gemm_nt(m, k, n, &a, &bt, &mut c1);
         gemm(m, k, n, &a, &b, &mut c2);
+        assert!(max_abs_diff(&c1, &c2) < 1e-10);
+    }
+
+    #[test]
+    fn gemm_tn_matches_transposed_gemm() {
+        let mut r = Rng::new(7);
+        let (m, n, p) = (9, 6, 4);
+        let mut a = vec![0.0; m * n];
+        let mut b = vec![0.0; m * p];
+        r.fill_normal(&mut a);
+        r.fill_normal(&mut b);
+        // at = aᵀ
+        let mut at = vec![0.0; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                at[j * m + i] = a[i * n + j];
+            }
+        }
+        let mut c1 = vec![0.0; n * p];
+        let mut c2 = vec![0.0; n * p];
+        gemm_tn(m, n, p, &a, &b, &mut c1);
+        gemm(n, m, p, &at, &b, &mut c2);
         assert!(max_abs_diff(&c1, &c2) < 1e-10);
     }
 

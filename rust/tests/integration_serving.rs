@@ -458,9 +458,25 @@ fn streaming_ops_over_the_wire() {
     // Evict down to the newest 2 paths.
     let kept = client.evict_corpus(id, 2, d).unwrap().unwrap();
     assert_eq!(kept, 2);
+    // Age-based eviction over the wire: the survivors were all present
+    // before the last append tick, so a generous age bound keeps both,
+    // and the keep floor backstops an aggressive one.
+    let kept = client.evict_corpus_by_age(id, 1_000, 0, d).unwrap().unwrap();
+    assert_eq!(kept, 2);
+    let kept = client.evict_corpus_by_age(id, 1, 1, d).unwrap().unwrap();
+    assert!(kept >= 1);
     // Malformed stream frames are soft errors; the connection keeps serving.
     assert!(client
-        .call_ragged(Op::EvictCorpus { id, keep: 0 }, d, vec![], vec![])
+        .call_ragged(
+            Op::EvictCorpus {
+                id,
+                keep: 0,
+                max_age: 0,
+            },
+            d,
+            vec![],
+            vec![],
+        )
         .unwrap()
         .is_err());
     assert!(client

@@ -1,0 +1,280 @@
+//! Backward-pass bit-identity properties (the PR's acceptance surface):
+//! the lane-batched Algorithm-4 adjoint must equal the scalar backward
+//! **bit for bit** — for every lane width, over uniform and ragged batches,
+//! across transforms and dyadic orders, through both the typed
+//! `try_gram_vjp_with_lanes` entry point and `record.vjp` on every kernel
+//! record family. Lane batching is pure schedule: each lane replays the
+//! scalar adjoint's FP sequence, so any difference at all is a bug. The
+//! symmetric 2·∇₁ Kxx shortcut is additionally pinned exactly where its
+//! algebra is exact (bx = 2, λ = 0) and to 1e-12 elsewhere.
+
+use pysiglib::engine::{OpSpec, Plan, ShapeClass};
+use pysiglib::kernel::{
+    try_gram, try_gram_vjp, try_gram_vjp_with_lanes, try_sig_kernel_vjp, KernelOptions,
+};
+use pysiglib::transforms::Transform;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+/// Ragged lengths with enough repeats that W = 8 groups actually form.
+const RAGGED_X: [usize; 10] = [6, 9, 6, 6, 9, 6, 6, 6, 1, 6];
+const RAGGED_Y: [usize; 13] = [5, 5, 8, 5, 5, 5, 8, 5, 5, 5, 5, 1, 5];
+
+fn ragged(rng: &mut Rng, lens: &[usize], d: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut data = Vec::new();
+    for &l in lens {
+        data.extend(rng.brownian_path(l, d, 0.4));
+    }
+    (data, lens.to_vec())
+}
+
+fn opts_matrix() -> Vec<KernelOptions> {
+    vec![
+        KernelOptions::default(),
+        KernelOptions::default().dyadic(1, 2),
+        KernelOptions::default().dyadic(2, 0),
+        KernelOptions::default().transform(Transform::TimeAug),
+        KernelOptions::default().transform(Transform::LeadLag),
+        KernelOptions::default().serial(),
+    ]
+}
+
+/// Weights with structural zeros: zero-weight columns must be *skipped*
+/// identically by the scalar and lane schedules (they shape the groups).
+fn weights(rng: &mut Rng, bx: usize, by: usize) -> Vec<f64> {
+    let mut w = vec![0.0; bx * by];
+    rng.fill_normal(&mut w);
+    for (i, v) in w.iter_mut().enumerate() {
+        if i % 5 == 3 {
+            *v = 0.0;
+        }
+    }
+    w
+}
+
+/// Tentpole property: the weighted-Gram backward is bit-identical across
+/// lane widths 0 / 4 / 8, uniform and ragged, across the options matrix.
+#[test]
+fn gram_backward_bitmatches_scalar_for_every_width() {
+    let mut rng = Rng::new(930);
+    let d = 2;
+    let xu = rng.brownian_batch(9, 7, d, 0.4);
+    let yu = rng.brownian_batch(11, 6, d, 0.4);
+    let (xr_data, xr_lens) = ragged(&mut rng, &RAGGED_X, d);
+    let (yr_data, yr_lens) = ragged(&mut rng, &RAGGED_Y, d);
+    let xub = PathBatch::uniform(&xu, 9, 7, d).unwrap();
+    let yub = PathBatch::uniform(&yu, 11, 6, d).unwrap();
+    let xrb = PathBatch::ragged(&xr_data, &xr_lens, d).unwrap();
+    let yrb = PathBatch::ragged(&yr_data, &yr_lens, d).unwrap();
+    for (xb, yb, tag) in [(&xub, &yub, "uniform"), (&xrb, &yrb, "ragged")] {
+        let w = weights(&mut rng, xb.batch(), yb.batch());
+        for opts in opts_matrix() {
+            let want = try_gram_vjp_with_lanes(xb, yb, &w, &opts, 0).unwrap();
+            for width in [4usize, 8] {
+                let got = try_gram_vjp_with_lanes(xb, yb, &w, &opts, width).unwrap();
+                assert_eq!(got, want, "{tag} width={width} opts={opts:?}");
+            }
+            // The default-width wrapper lands on the same bits too.
+            assert_eq!(try_gram_vjp(xb, yb, &w, &opts).unwrap(), want, "{tag} {opts:?}");
+        }
+    }
+}
+
+/// A retained SigKernel record's vjp equals the typed per-pair backward
+/// (`try_sig_kernel_vjp`) bit for bit — the record replays Algorithm 4 from
+/// its stored grids, the typed path re-solves; same FP sequence either way.
+#[test]
+fn kernel_record_vjp_bitmatches_the_typed_backward() {
+    let mut rng = Rng::new(931);
+    let d = 2;
+    let b = 6;
+    let (x_data, x_lens) = ragged(&mut rng, &[5, 7, 5, 5, 1, 5], d);
+    let (y_data, y_lens) = ragged(&mut rng, &[6, 6, 4, 6, 6, 1], d);
+    let xb = PathBatch::ragged(&x_data, &x_lens, d).unwrap();
+    let yb = PathBatch::ragged(&y_data, &y_lens, d).unwrap();
+    let mut cot = vec![0.0; b];
+    rng.fill_normal(&mut cot);
+    for opts in [
+        KernelOptions::default(),
+        KernelOptions::default().dyadic(1, 2),
+        KernelOptions::default().transform(Transform::LeadLag),
+        KernelOptions::default().serial(),
+    ] {
+        let plan =
+            Plan::compile(OpSpec::SigKernel(opts), ShapeClass::for_pair(&xb, &yb)).unwrap();
+        let rec = plan.execute_pair(&xb, &yb).unwrap();
+        let (gx, gy) = rec.vjp(&cot).unwrap().into_pair().unwrap();
+        let xo = xb.element_offsets();
+        let yo = yb.element_offsets();
+        for i in 0..b {
+            let (wx, wy) =
+                try_sig_kernel_vjp(xb.path(i), yb.path(i), &opts, cot[i]).unwrap();
+            assert_eq!(&gx[xo[i]..xo[i + 1]], &wx[..], "pair {i} x opts={opts:?}");
+            assert_eq!(&gy[yo[i]..yo[i + 1]], &wy[..], "pair {i} y opts={opts:?}");
+        }
+    }
+}
+
+/// Gram records compiled at widths 0 / 4 / 8 produce bit-identical vjps,
+/// all equal to the typed `try_gram_vjp` on the same weights.
+#[test]
+fn gram_record_vjp_bitmatches_across_widths() {
+    let mut rng = Rng::new(932);
+    let d = 2;
+    let x = rng.brownian_batch(7, 6, d, 0.4);
+    let y = rng.brownian_batch(9, 5, d, 0.4);
+    let xb = PathBatch::uniform(&x, 7, 6, d).unwrap();
+    let yb = PathBatch::uniform(&y, 9, 5, d).unwrap();
+    let w = weights(&mut rng, 7, 9);
+    for opts in [KernelOptions::default(), KernelOptions::default().dyadic(1, 1)] {
+        let shape = ShapeClass::for_pair(&xb, &yb);
+        let want = try_gram_vjp(&xb, &yb, &w, &opts).unwrap();
+        for width in [0usize, 4, 8] {
+            let plan = Plan::compile(OpSpec::Gram(opts), shape)
+                .unwrap()
+                .with_lane_width(width);
+            let rec = plan.execute_pair(&xb, &yb).unwrap();
+            let got = rec.vjp(&w).unwrap().into_pair().unwrap();
+            assert_eq!(got, want, "width={width} opts={opts:?}");
+        }
+    }
+}
+
+/// MMD² records (biased and unbiased): the x-gradient is bit-identical
+/// across lane widths — including through the symmetric-shortcut Kxx path,
+/// which equal dyadic orders always take.
+#[test]
+fn mmd2_record_vjp_bitmatches_across_widths() {
+    let mut rng = Rng::new(933);
+    let d = 3;
+    let x = rng.brownian_batch(6, 6, d, 0.4);
+    let y = rng.brownian_batch(5, 6, d, 0.5);
+    let xb = PathBatch::uniform(&x, 6, 6, d).unwrap();
+    let yb = PathBatch::uniform(&y, 5, 6, d).unwrap();
+    let shape = ShapeClass::for_pair(&xb, &yb);
+    for spec in [
+        OpSpec::Mmd2(KernelOptions::default()),
+        OpSpec::Mmd2Unbiased(KernelOptions::default()),
+        OpSpec::Mmd2(KernelOptions::default().dyadic(1, 1)),
+        OpSpec::Mmd2(KernelOptions::default().dyadic(1, 2)), // unequal λ: two-slot path
+    ] {
+        let want = Plan::compile(spec, shape)
+            .unwrap()
+            .with_lane_width(0)
+            .execute_pair(&xb, &yb)
+            .unwrap()
+            .vjp(&[1.0])
+            .unwrap()
+            .into_single()
+            .unwrap();
+        for width in [4usize, 8] {
+            let got = Plan::compile(spec, shape)
+                .unwrap()
+                .with_lane_width(width)
+                .execute_pair(&xb, &yb)
+                .unwrap()
+                .vjp(&[1.0])
+                .unwrap()
+                .into_single()
+                .unwrap();
+            assert_eq!(got, want, "spec={} width={width}", spec.name());
+        }
+    }
+}
+
+/// The x-gradient of an MMD² record via the manual two-slot composition:
+/// Kxx term through `try_gram_vjp_with_lanes(x, x, ·)` (both slots solved
+/// explicitly), plus the cross term — the reference the symmetric shortcut
+/// must reproduce.
+fn mmd2_grad_two_slot(xb: &PathBatch<'_>, yb: &PathBatch<'_>, opts: &KernelOptions) -> Vec<f64> {
+    let (bx, by) = (xb.batch(), yb.batch());
+    let wxx = vec![1.0 / (bx * bx) as f64; bx * bx];
+    let (gxx1, gxx2) = try_gram_vjp_with_lanes(xb, xb, &wxx, opts, 0).unwrap();
+    let wxy = vec![-2.0 / (bx * by) as f64; bx * by];
+    let (gxy, _) = try_gram_vjp_with_lanes(xb, yb, &wxy, opts, 0).unwrap();
+    gxx1.iter()
+        .zip(gxx2.iter())
+        .zip(gxy.iter())
+        .map(|((a, b), g)| a + b + g)
+        .collect()
+}
+
+/// The symmetric 2·∇₁ shortcut against the explicit two-slot reference:
+/// exact `==` at bx = 2 ∧ λ = 0 (the 2-term sums commute bitwise), ≤ 1e-12
+/// relative elsewhere (the per-coarse-cell accumulation order transposes).
+#[test]
+fn symmetric_shortcut_matches_the_two_slot_path() {
+    let mut rng = Rng::new(934);
+    let d = 2;
+    let y = rng.brownian_batch(3, 5, d, 0.5);
+    let yb = PathBatch::uniform(&y, 3, 5, d).unwrap();
+
+    // bx = 2, λ = 0: bit-exact.
+    let x2 = rng.brownian_batch(2, 6, d, 0.4);
+    let x2b = PathBatch::uniform(&x2, 2, 6, d).unwrap();
+    let opts = KernelOptions::default();
+    let got = Plan::compile(OpSpec::Mmd2(opts), ShapeClass::for_pair(&x2b, &yb))
+        .unwrap()
+        .execute_pair(&x2b, &yb)
+        .unwrap()
+        .vjp(&[1.0])
+        .unwrap()
+        .into_single()
+        .unwrap();
+    assert_eq!(got, mmd2_grad_two_slot(&x2b, &yb, &opts), "bx=2 λ=0 must be bit-exact");
+
+    // Larger batch / refined λ: same values to 1e-12 relative.
+    let x5 = rng.brownian_batch(5, 6, d, 0.4);
+    let x5b = PathBatch::uniform(&x5, 5, 6, d).unwrap();
+    for opts in [KernelOptions::default(), KernelOptions::default().dyadic(1, 1)] {
+        let got = Plan::compile(OpSpec::Mmd2(opts), ShapeClass::for_pair(&x5b, &yb))
+            .unwrap()
+            .execute_pair(&x5b, &yb)
+            .unwrap()
+            .vjp(&[1.0])
+            .unwrap()
+            .into_single()
+            .unwrap();
+        let want = mmd2_grad_two_slot(&x5b, &yb, &opts);
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-12 * (1.0 + w.abs()),
+                "opts={opts:?} [{i}]: shortcut={g} two-slot={w}"
+            );
+        }
+    }
+}
+
+/// Finite differences through the lane path: the width-8 weighted-Gram
+/// backward is a true gradient of `Σ w_ij · G_ij`.
+#[test]
+fn lane_backward_matches_finite_differences() {
+    let mut rng = Rng::new(935);
+    let d = 2;
+    let (bx, by, l) = (3usize, 4usize, 4usize);
+    let x = rng.brownian_batch(bx, l, d, 0.4);
+    let y = rng.brownian_batch(by, l, d, 0.4);
+    let yb = PathBatch::uniform(&y, by, l, d).unwrap();
+    let w: Vec<f64> = (0..bx * by).map(|i| 1.0 + 0.1 * i as f64).collect();
+    let weighted = |x_data: &[f64]| -> f64 {
+        let xb = PathBatch::uniform(x_data, bx, l, d).unwrap();
+        let g = try_gram(&xb, &yb, &KernelOptions::default()).unwrap();
+        g.iter().zip(w.iter()).map(|(a, b)| a * b).sum()
+    };
+    let xb = PathBatch::uniform(&x, bx, l, d).unwrap();
+    let (gx, _) =
+        try_gram_vjp_with_lanes(&xb, &yb, &w, &KernelOptions::default(), 8).unwrap();
+    let eps = 1e-6;
+    for i in 0..bx * l * d {
+        let mut xp = x.clone();
+        xp[i] += eps;
+        let mut xm = x.clone();
+        xm[i] -= eps;
+        let fd = (weighted(&xp) - weighted(&xm)) / (2.0 * eps);
+        assert!(
+            (fd - gx[i]).abs() < 1e-4 * (1.0 + fd.abs()),
+            "x[{i}]: fd={fd} vjp={}",
+            gx[i]
+        );
+    }
+}

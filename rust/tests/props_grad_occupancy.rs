@@ -1,0 +1,35 @@
+//! Grid-reuse acceptance check, isolated in its own integration binary:
+//! [`pde_cells_solved`] is a process-global counter, so no other test may
+//! share this process. A retained SigKernel record's vjp must replay
+//! Algorithm 4 from its stored forward grids — **zero** forward cells
+//! solved during the backward.
+
+use pysiglib::engine::{OpSpec, Plan, ShapeClass};
+use pysiglib::kernel::{pde_cells_solved, KernelOptions};
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+#[test]
+fn kernel_record_vjp_solves_zero_forward_cells() {
+    let mut rng = Rng::new(940);
+    let d = 2;
+    let (b, l) = (5usize, 7usize);
+    let x = rng.brownian_batch(b, l, d, 0.4);
+    let y = rng.brownian_batch(b, l, d, 0.4);
+    let xb = PathBatch::uniform(&x, b, l, d).unwrap();
+    let yb = PathBatch::uniform(&y, b, l, d).unwrap();
+    for opts in [KernelOptions::default(), KernelOptions::default().dyadic(1, 1).serial()] {
+        let plan =
+            Plan::compile(OpSpec::SigKernel(opts), ShapeClass::for_pair(&xb, &yb)).unwrap();
+        let rec = plan.execute_pair(&xb, &yb).unwrap();
+        let before = pde_cells_solved();
+        let cot = vec![1.0; b];
+        rec.vjp(&cot).unwrap();
+        let after = pde_cells_solved();
+        assert_eq!(
+            after - before,
+            0,
+            "kernel-record vjp re-solved forward cells (opts={opts:?})"
+        );
+    }
+}

@@ -246,6 +246,54 @@ fn evict_edge_cases() {
 }
 
 #[test]
+fn evict_by_age_drops_exactly_the_stale_prefix() {
+    // Age clock: registration is tick 0, each append batch advances it by
+    // one; evict_by_age keeps the trailing run younger than the bound,
+    // backstopped by the keep floor. The drop must bit-match a registry
+    // that was registered with the survivors directly.
+    let d = 2;
+    let opts = KernelOptions::default();
+    let mut rng = Rng::new(925);
+    let (data, lens) = ragged(&mut rng, &[5, 6], d);
+    let (a1, l1) = ragged(&mut rng, &[7], d);
+    let (a2, l2) = ragged(&mut rng, &[4, 6], d);
+    let (q, lq) = ragged(&mut rng, &[6, 4], d);
+    let qb = PathBatch::ragged(&q, &lq, d).unwrap();
+
+    let inc = CorpusRegistry::new();
+    let id = inc.register(&PathBatch::ragged(&data, &lens, d).unwrap()).unwrap();
+    inc.append(id, &PathBatch::ragged(&a1, &l1, d).unwrap()).unwrap(); // tick 1
+    inc.append(id, &PathBatch::ragged(&a2, &l2, d).unwrap()).unwrap(); // tick 2
+    inc.mmd2_query(id, &qb, &opts, None).unwrap();
+
+    // A generous bound keeps everything (ages are 2, 2, 1, 0, 0).
+    assert_eq!(inc.evict_by_age(id, 2, 0).unwrap(), 5);
+    // max_age = 1 drops the two tick-0 registrations.
+    assert_eq!(inc.evict_by_age(id, 1, 0).unwrap(), 3);
+    assert_eq!(inc.path_count(id), Some(3));
+    let inc_mmd = inc.mmd2_query(id, &qb, &opts, None).unwrap();
+
+    // Scratch registry holding just the survivors: paths a1 + a2.
+    let mut surv = a1.clone();
+    surv.extend_from_slice(&a2);
+    let slens = [7usize, 4, 6];
+    let scratch = CorpusRegistry::new();
+    let sid = scratch.register(&PathBatch::ragged(&surv, &slens, d).unwrap()).unwrap();
+    let scr_mmd = scratch.mmd2_query(sid, &qb, &opts, None).unwrap();
+    assert!(inc_mmd.to_bits() == scr_mmd.to_bits(), "{inc_mmd:?} vs {scr_mmd:?}");
+
+    // The keep floor overrides an aggressive age bound: after one more
+    // append the ages are [2, 1, 1, 0], so max_age = 0 alone would keep 1 —
+    // the floor holds 3.
+    let (a3, l3) = ragged(&mut rng, &[5], d);
+    inc.append(id, &PathBatch::ragged(&a3, &l3, d).unwrap()).unwrap(); // tick 3
+    assert_eq!(inc.evict_by_age(id, 0, 3).unwrap(), 3);
+    // Without a floor, age 0 keeps only the tick-3 path.
+    assert_eq!(inc.evict_by_age(id, 0, 0).unwrap(), 1);
+    assert_eq!(inc.path_count(id), Some(1));
+}
+
+#[test]
 fn extend_then_evict_composes_bitwise() {
     // Stream points into the newest path, then slide the window — the
     // surviving state must equal registering the final shape directly.
