@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Accuracy gate for the Goursat discretisation schemes.
+
+Compares the fresh ``bench_results/BENCH_accuracy.json`` (written by
+``cargo bench --bench accuracy``) against the committed repo-root
+``BENCH_accuracy.json`` and fails (exit 1) when:
+
+* any fresh ``err_*`` value exceeds its committed ``envelope`` (every
+  baseline row carrying an ``envelope`` key must be present in the fresh
+  results — a silently dropped row is a failure, not a skip); or
+* the headline cost/accuracy pair breaks: order-2 at the coarse dyadic
+  level (``--coarse``, default 2) must be at least as accurate as order-1
+  one level finer (``--fine``, default 3) within ``--slack`` (default
+  1.5x), while solving STRICTLY fewer PDE cells. This is the claim that
+  justifies shipping the second-order scheme: fine-grid accuracy at a
+  coarser grid's cost.
+
+``--self-test`` runs the gate's own logic against inline fixtures (one
+passing, one envelope breach, one cells breach) and exits 0 only if all
+three behave; CI runs it before the real comparison so a broken gate
+cannot silently pass everything.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_cases(path: Path):
+    doc = json.loads(path.read_text())
+    return {c["case"]: c for c in doc.get("cases", [])}
+
+
+def check(base, fresh, coarse, fine, slack):
+    """Return a list of failure strings (empty = gate passes)."""
+    failures = []
+
+    def fresh_val(name):
+        row = fresh.get(name)
+        if row is None:
+            return None
+        return row.get("median_seconds")
+
+    # 1. Committed error envelopes.
+    for name, bc in sorted(base.items()):
+        env = bc.get("envelope")
+        if env is None:
+            continue
+        val = fresh_val(name)
+        if val is None:
+            failures.append(f"envelope row '{name}' missing from fresh results")
+        elif val > env:
+            failures.append(f"'{name}' = {val:.3e} exceeds the committed envelope {env:.3e}")
+        else:
+            print(f"  {name:24} {val:>12.3e}  <= envelope {env:.0e} OK")
+
+    # 2. The headline pair: order-2 coarse vs order-1 fine.
+    e2 = fresh_val(f"err_order2_lam{coarse}")
+    e1 = fresh_val(f"err_order1_lam{fine}")
+    c2 = fresh_val(f"cells_order2_lam{coarse}")
+    c1 = fresh_val(f"cells_order1_lam{fine}")
+    if None in (e2, e1, c2, c1):
+        failures.append(
+            f"headline pair rows missing (need err/cells for order2@lam{coarse} "
+            f"and order1@lam{fine})"
+        )
+        return failures
+    if e2 > slack * e1:
+        failures.append(
+            f"order-2 at lam{coarse} err {e2:.3e} worse than {slack}x order-1 "
+            f"at lam{fine} err {e1:.3e}"
+        )
+    else:
+        print(f"  accuracy: order2@lam{coarse} {e2:.3e} <= {slack} * order1@lam{fine} {e1:.3e} OK")
+    if c2 >= c1:
+        failures.append(
+            f"order-2 at lam{coarse} solved {c2:.0f} cells, not strictly fewer "
+            f"than order-1 at lam{fine} ({c1:.0f})"
+        )
+    else:
+        print(f"  cost: order2@lam{coarse} {c2:.0f} cells < order1@lam{fine} {c1:.0f} OK")
+    return failures
+
+
+def self_test() -> int:
+    def rows(**vals):
+        return {k: {"case": k, "median_seconds": v, "runs": 0} for k, v in vals.items()}
+
+    base = rows(err_order2_lam2=0.0)
+    base["err_order2_lam2"]["envelope"] = 1e-3
+    good = rows(
+        err_order2_lam2=5e-4, err_order1_lam3=4e-4, cells_order2_lam2=42320, cells_order1_lam3=135424
+    )
+    bad_env = dict(good)
+    bad_env.update(rows(err_order2_lam2=5e-3))
+    bad_cells = dict(good)
+    bad_cells.update(rows(cells_order2_lam2=200000))
+    cases = [
+        ("pass", good, 0),
+        ("envelope breach", bad_env, 1),
+        ("cells breach", bad_cells, 1),
+    ]
+    for label, fresh, want in cases:
+        got = len(check(base, fresh, coarse=2, fine=3, slack=1.5))
+        ok = (got > 0) == (want > 0)
+        print(f"  self-test [{label}]: {'OK' if ok else 'BROKEN'} ({got} failure(s))")
+        if not ok:
+            return 1
+    print("self-test passed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=Path, default=Path("BENCH_accuracy.json"))
+    ap.add_argument("--results", type=Path, default=Path("rust/bench_results/BENCH_accuracy.json"))
+    ap.add_argument("--coarse", type=int, default=2)
+    ap.add_argument("--fine", type=int, default=3)
+    ap.add_argument("--slack", type=float, default=1.5)
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+
+    if not args.baseline.is_file():
+        print(f"error: no committed baseline at {args.baseline}", file=sys.stderr)
+        return 1
+    if not args.results.is_file():
+        print(f"error: no fresh results at {args.results}", file=sys.stderr)
+        return 1
+    failures = check(
+        load_cases(args.baseline), load_cases(args.results), args.coarse, args.fine, args.slack
+    )
+    if failures:
+        print("\naccuracy gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\naccuracy gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,20 @@ Rules:
   gate prints a **suggested tightened baseline** (fresh median x 1.25,
   leaving run-to-run noise margin under the 1.3x threshold) so tightening
   is a copy-paste job, not a measurement campaign.
+* Tightening suggestions are only trustworthy when the fresh run's
+  toolchain matches the one the baseline was measured with: a baseline
+  carrying a top-level ``"toolchain"`` field that differs from the fresh
+  ``toolchain.txt`` (recorded by CI's probe step) suppresses suggestions
+  for that suite — a faster compiler is not a reason to ratchet the
+  envelope down on everyone else.
+
+A merged ``SUMMARY.json`` (per-suite case counts, headroom counts and
+``expect_min`` floor outcomes) is written next to the fresh results and
+uploaded as a PR-visible artifact.
+
+``--self-test`` exercises the gate's own logic against inline fixtures
+(regression, missing case, floor breach, headroom, cross-toolchain
+suppression) and exits nonzero if any behaves unexpectedly.
 """
 
 import argparse
@@ -31,9 +45,166 @@ import sys
 from pathlib import Path
 
 
-def load_cases(path: Path):
-    doc = json.loads(path.read_text())
+def load_doc(path: Path):
+    return json.loads(path.read_text())
+
+
+def cases_by_name(doc):
     return {c["case"]: c for c in doc.get("cases", [])}
+
+
+def compare_suite(fname, base_doc, fresh_doc, threshold, fresh_toolchain, *, log=print):
+    """Compare one suite. Returns (failures, headroom, summary_dict).
+
+    ``headroom`` entries are (fname, case_name, fresh_row); suggestions are
+    suppressed (empty headroom, but still counted in the summary) when the
+    baseline records a toolchain that differs from the fresh one.
+    """
+    base = cases_by_name(base_doc)
+    fresh = cases_by_name(fresh_doc)
+    failures, headroom = [], []
+    compared = 0
+    floors = {}
+    base_toolchain = base_doc.get("toolchain")
+    toolchain_match = base_toolchain is None or (
+        fresh_toolchain is not None and base_toolchain == fresh_toolchain
+    )
+    for name, bc in sorted(base.items()):
+        # Derived ratio rows may carry an "expect_min" floor (e.g. the
+        # corpus warm-over-cold speedup must stay >= 5x at n = 256).
+        floor = bc.get("expect_min")
+        if floor is not None:
+            fc = fresh.get(name)
+            val = fc.get("median_seconds") if fc else None
+            if val is None:
+                failures.append(f"{fname}: ratio row '{name}' missing")
+                floors[name] = {"floor": floor, "value": None, "ok": False}
+            elif val < floor:
+                failures.append(
+                    f"{fname}: '{name}' = {val:.2f} below the required floor {floor}"
+                )
+                floors[name] = {"floor": floor, "value": val, "ok": False}
+            else:
+                log(f"  {fname:24} {name:44} {val:>10.2f}   >= {floor} OK")
+                floors[name] = {"floor": floor, "value": val, "ok": True}
+        if not bc.get("runs"):
+            continue  # derived row (speedup ratio etc), not a timing
+        bmed = bc.get("median_seconds")
+        if bmed is None:
+            continue  # failure marker in the baseline
+        fc = fresh.get(name)
+        if fc is None:
+            failures.append(
+                f"{fname}: case '{name}' missing from fresh results "
+                "(renamed without refreshing the baseline?)"
+            )
+            continue
+        fmed = fc.get("median_seconds")
+        if fmed is None:
+            failures.append(f"{fname}: case '{name}' produced no timing")
+            continue
+        compared += 1
+        ratio = fmed / bmed if bmed > 0 else float("inf")
+        marker = ""
+        if ratio > threshold:
+            failures.append(
+                f"{fname}: '{name}' median {fmed:.6f}s vs baseline "
+                f"{bmed:.6f}s ({ratio:.2f}x > {threshold}x)"
+            )
+            marker = "  << REGRESSION"
+        elif ratio < 0.5:
+            if toolchain_match:
+                headroom.append((fname, name, fc))
+                marker = "  (headroom: tighten baseline)"
+            else:
+                marker = "  (headroom; suggestion withheld: toolchain differs)"
+        log(f"  {fname:24} {name:44} {fmed:>10.6f}s  {ratio:>5.2f}x{marker}")
+    unbaselined = 0
+    for name in sorted(set(fresh) - set(base)):
+        if fresh[name].get("runs"):
+            unbaselined += 1
+            log(f"  {fname:24} {name:44} (no baseline; consider adding)")
+    summary = {
+        "cases_compared": compared,
+        "failures": len(failures),
+        "headroom": len(headroom),
+        "unbaselined": unbaselined,
+        "expect_min": floors,
+        "toolchain_match": toolchain_match,
+    }
+    return failures, headroom, summary
+
+
+def print_suggestions(headroom):
+    print(
+        "\nsuggested tightened baselines (fresh median x 1.25; these are "
+        "complete rows — replace the matching case in the repo-root "
+        "BENCH_*.json verbatim; keeping runs > 0 is what arms the gate):"
+    )
+    for fname, name, fc in headroom:
+        row = {
+            "case": name,
+            "min_seconds": round(fc.get("min_seconds", fc["median_seconds"]) * 1.25, 6),
+            "median_seconds": round(fc["median_seconds"] * 1.25, 6),
+            "runs": fc.get("runs", 1),
+        }
+        print(f"  {fname}: {json.dumps(row)}")
+
+
+def self_test() -> int:
+    base_doc = {
+        "suite": "t",
+        "cases": [
+            {"case": "fast", "median_seconds": 1.0, "runs": 3},
+            {"case": "gone", "median_seconds": 1.0, "runs": 3},
+            {"case": "wide", "median_seconds": 1.0, "runs": 3},
+            {"case": "ratio", "median_seconds": 2.0, "runs": 0, "expect_min": 2.0},
+        ],
+    }
+    fresh_doc = {
+        "suite": "t",
+        "cases": [
+            {"case": "fast", "median_seconds": 2.0, "runs": 3},  # 2.0x > 1.3x
+            {"case": "wide", "median_seconds": 0.1, "runs": 3},  # headroom
+            {"case": "ratio", "median_seconds": 1.5, "runs": 0},  # below floor
+        ],
+    }
+    sink = lambda *a, **k: None
+    bad = 0
+
+    failures, headroom, summary = compare_suite(
+        "BENCH_t.json", base_doc, fresh_doc, 1.3, "rustc 1.80.0", log=sink
+    )
+    checks = [
+        ("regression detected", any("REGRESSION" not in f and "2.00x" in f for f in failures)),
+        ("missing case detected", any("missing from fresh results" in f for f in failures)),
+        ("floor breach detected", any("below the required floor" in f for f in failures)),
+        ("headroom suggested", len(headroom) == 1 and headroom[0][1] == "wide"),
+        ("summary counts", summary["cases_compared"] == 2 and summary["failures"] == 3),
+    ]
+
+    # Same fixtures, but the baseline records a different toolchain: the
+    # suggestion must be withheld while every failure still fires.
+    base_other = dict(base_doc, toolchain="rustc 1.79.0")
+    failures2, headroom2, summary2 = compare_suite(
+        "BENCH_t.json", base_other, fresh_doc, 1.3, "rustc 1.80.0", log=sink
+    )
+    checks += [
+        ("cross-toolchain suggestion withheld", len(headroom2) == 0),
+        ("cross-toolchain failures kept", len(failures2) == len(failures)),
+        ("cross-toolchain flagged in summary", summary2["toolchain_match"] is False),
+    ]
+    # An unknown fresh toolchain is also not evidence for tightening.
+    _, headroom3, _ = compare_suite(
+        "BENCH_t.json", base_other, fresh_doc, 1.3, None, log=sink
+    )
+    checks.append(("unknown fresh toolchain withheld", len(headroom3) == 0))
+
+    for label, ok in checks:
+        print(f"  self-test [{label}]: {'OK' if ok else 'BROKEN'}")
+        bad += 0 if ok else 1
+    print("self-test passed" if bad == 0 else f"self-test FAILED ({bad} checks)")
+    return 1 if bad else 0
 
 
 def main() -> int:
@@ -41,91 +212,88 @@ def main() -> int:
     ap.add_argument("--baseline-dir", type=Path, default=Path("."))
     ap.add_argument("--results-dir", type=Path, default=Path("rust/bench_results"))
     ap.add_argument("--threshold", type=float, default=1.3)
+    ap.add_argument(
+        "--toolchain-file",
+        type=Path,
+        default=None,
+        help="fresh toolchain probe (default: <results-dir>/toolchain.txt)",
+    )
+    ap.add_argument(
+        "--summary",
+        type=Path,
+        default=None,
+        help="merged summary output (default: <results-dir>/SUMMARY.json)",
+    )
+    ap.add_argument("--self-test", action="store_true")
     args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
 
     baselines = sorted(args.baseline_dir.glob("BENCH_*.json"))
     if not baselines:
         print(f"error: no BENCH_*.json baselines in {args.baseline_dir}", file=sys.stderr)
         return 1
 
-    failures, headroom, compared = [], [], 0
+    toolchain_file = args.toolchain_file or args.results_dir / "toolchain.txt"
+    fresh_toolchain = None
+    if toolchain_file.is_file():
+        fresh_toolchain = toolchain_file.read_text().strip() or None
+    if fresh_toolchain:
+        print(f"fresh toolchain: {fresh_toolchain}")
+    else:
+        print("fresh toolchain: unknown (no toolchain.txt; tightening suggestions withheld "
+              "for toolchain-pinned baselines)")
+
+    all_failures, all_headroom, compared = [], [], 0
+    suites = {}
     for base_path in baselines:
         fresh_path = args.results_dir / base_path.name
         if not fresh_path.is_file():
-            failures.append(f"{base_path.name}: no fresh results at {fresh_path}")
+            all_failures.append(f"{base_path.name}: no fresh results at {fresh_path}")
+            suites[base_path.name] = {"error": "no fresh results"}
             continue
-        base = load_cases(base_path)
-        fresh = load_cases(fresh_path)
-        for name, bc in sorted(base.items()):
-            # Derived ratio rows may carry an "expect_min" floor (e.g. the
-            # corpus warm-over-cold speedup must stay >= 5x at n = 256).
-            floor = bc.get("expect_min")
-            if floor is not None:
-                fc = fresh.get(name)
-                val = fc.get("median_seconds") if fc else None
-                if val is None:
-                    failures.append(f"{base_path.name}: ratio row '{name}' missing")
-                elif val < floor:
-                    failures.append(
-                        f"{base_path.name}: '{name}' = {val:.2f} below the "
-                        f"required floor {floor}"
-                    )
-                else:
-                    print(f"  {base_path.name:24} {name:44} {val:>10.2f}   >= {floor} OK")
-            if not bc.get("runs"):
-                continue  # derived row (speedup ratio etc), not a timing
-            bmed = bc.get("median_seconds")
-            if bmed is None:
-                continue  # failure marker in the baseline
-            fc = fresh.get(name)
-            if fc is None:
-                failures.append(
-                    f"{base_path.name}: case '{name}' missing from fresh results "
-                    "(renamed without refreshing the baseline?)"
-                )
-                continue
-            fmed = fc.get("median_seconds")
-            if fmed is None:
-                failures.append(f"{base_path.name}: case '{name}' produced no timing")
-                continue
-            compared += 1
-            ratio = fmed / bmed if bmed > 0 else float("inf")
-            marker = ""
-            if ratio > args.threshold:
-                failures.append(
-                    f"{base_path.name}: '{name}' median {fmed:.6f}s vs baseline "
-                    f"{bmed:.6f}s ({ratio:.2f}x > {args.threshold}x)"
-                )
-                marker = "  << REGRESSION"
-            elif ratio < 0.5:
-                headroom.append((base_path.name, name, fc))
-                marker = "  (headroom: tighten baseline)"
-            print(f"  {base_path.name:24} {name:44} {fmed:>10.6f}s  {ratio:>5.2f}x{marker}")
-        for name in sorted(set(fresh) - set(base)):
-            if fresh[name].get("runs"):
-                print(f"  {base_path.name:24} {name:44} (no baseline; consider adding)")
+        failures, headroom, summary = compare_suite(
+            base_path.name,
+            load_doc(base_path),
+            load_doc(fresh_path),
+            args.threshold,
+            fresh_toolchain,
+        )
+        all_failures.extend(failures)
+        all_headroom.extend(headroom)
+        compared += summary["cases_compared"]
+        suites[base_path.name] = summary
 
     print(
-        f"\ncompared {compared} case(s); {len(failures)} failure(s); "
-        f"{len(headroom)} case(s) with >2x headroom"
+        f"\ncompared {compared} case(s); {len(all_failures)} failure(s); "
+        f"{len(all_headroom)} case(s) with >2x headroom"
     )
-    if headroom:
-        print(
-            "\nsuggested tightened baselines (fresh median x 1.25; these are "
-            "complete rows — replace the matching case in the repo-root "
-            "BENCH_*.json verbatim; keeping runs > 0 is what arms the gate):"
+    if all_headroom:
+        print_suggestions(all_headroom)
+
+    summary_path = args.summary or args.results_dir / "SUMMARY.json"
+    try:
+        summary_path.write_text(
+            json.dumps(
+                {
+                    "toolchain": fresh_toolchain,
+                    "threshold": args.threshold,
+                    "cases_compared": compared,
+                    "failures": all_failures,
+                    "suites": suites,
+                },
+                indent=2,
+            )
+            + "\n"
         )
-        for fname, name, fc in headroom:
-            row = {
-                "case": name,
-                "min_seconds": round(fc.get("min_seconds", fc["median_seconds"]) * 1.25, 6),
-                "median_seconds": round(fc["median_seconds"] * 1.25, 6),
-                "runs": fc.get("runs", 1),
-            }
-            print(f"  {fname}: {json.dumps(row)}")
-    if failures:
+        print(f"[wrote {summary_path}]")
+    except OSError as e:
+        print(f"warning: could not write {summary_path}: {e}", file=sys.stderr)
+
+    if all_failures:
         print("\nbench-regression gate FAILED:", file=sys.stderr)
-        for f in failures:
+        for f in all_failures:
             print(f"  - {f}", file=sys.stderr)
         return 1
     return 0

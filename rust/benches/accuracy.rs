@@ -1,0 +1,86 @@
+//! CI-scale accuracy harness for the Goursat discretisation schemes. All
+//! rows are deterministic `record()` entries (runs = 0): relative error of
+//! each (scheme, λ) grid against a fine order-1 reference at λ = 6, plus
+//! the exact cells-solved count per configuration.
+//!
+//! `ci/check_accuracy.py` gates the resulting `BENCH_accuracy.json`: the
+//! order-2 scheme one dyadic level coarser must stay inside the committed
+//! error envelope AND solve strictly fewer cells than order-1 at the fine
+//! level — the cost/accuracy claim that justifies shipping the scheme.
+
+use pysiglib::bench::Suite;
+use pysiglib::kernel::{delta_matrix, solve_pde_scheme, Scheme};
+use pysiglib::transforms::Transform;
+use pysiglib::util::rng::Rng;
+
+const PAIRS: usize = 4;
+const LEN: usize = 24;
+const DIM: usize = 3;
+/// Reference grid: order-1 at a dyadic order two levels past the finest
+/// measured grid, so the reference's own discretisation error is negligible
+/// against every measured row.
+const REF_LAMBDA: u32 = 6;
+const LAMBDAS: [u32; 4] = [0, 1, 2, 3];
+
+/// PDE cells solved for one pair under (scheme, λ) — the deterministic cost
+/// model the gate compares (order-2 adds its half-resolution companion grid
+/// except at the degenerate λ = 0, which returns the fine solve directly).
+fn cells(scheme: Scheme, lam: u32, m: usize, n: usize) -> usize {
+    let fine = (m << lam) * (n << lam);
+    match scheme {
+        Scheme::Order1 => fine,
+        Scheme::Order2 if lam == 0 => fine,
+        Scheme::Order2 => fine + (m << (lam - 1)) * (n << (lam - 1)),
+    }
+}
+
+fn main() {
+    let mut suite = Suite::new("accuracy");
+    let mut rng = Rng::new(61);
+    let deltas: Vec<(usize, usize, Vec<f64>)> = (0..PAIRS)
+        .map(|_| {
+            let x = rng.brownian_path(LEN, DIM, 0.3);
+            let y = rng.brownian_path(LEN, DIM, 0.3);
+            delta_matrix(&x, &y, LEN, LEN, DIM, Transform::None)
+        })
+        .collect();
+    let (mut prev, mut cur) = (Vec::new(), Vec::new());
+    let refs: Vec<f64> = deltas
+        .iter()
+        .map(|(m, n, d)| {
+            solve_pde_scheme(d, *m, *n, REF_LAMBDA, REF_LAMBDA, Scheme::Order1, &mut prev, &mut cur)
+        })
+        .collect();
+
+    println!(
+        "\n{:<8} {:>8} | {:>12} {:>12} | {:>12} {:>12}",
+        "dyadic", "", "err_order1", "err_order2", "cells_o1", "cells_o2"
+    );
+    for lam in LAMBDAS {
+        let mut errs = [0.0f64; 2];
+        let mut cell_counts = [0usize; 2];
+        for (si, scheme) in [Scheme::Order1, Scheme::Order2].into_iter().enumerate() {
+            for (i, (m, n, d)) in deltas.iter().enumerate() {
+                let k = solve_pde_scheme(d, *m, *n, lam, lam, scheme, &mut prev, &mut cur);
+                let rel = (k - refs[i]).abs() / refs[i].abs().max(1.0);
+                errs[si] = errs[si].max(rel);
+                cell_counts[si] += cells(scheme, lam, *m, *n);
+            }
+        }
+        println!(
+            "{:<8} {:>8} | {:>12.3e} {:>12.3e} | {:>12} {:>12}",
+            lam, "", errs[0], errs[1], cell_counts[0], cell_counts[1]
+        );
+        suite.record(&format!("err_order1_lam{lam}"), errs[0]);
+        suite.record(&format!("err_order2_lam{lam}"), errs[1]);
+        suite.record(&format!("cells_order1_lam{lam}"), cell_counts[0] as f64);
+        suite.record(&format!("cells_order2_lam{lam}"), cell_counts[1] as f64);
+    }
+    println!(
+        "\nreading: err_order2_lam(λ) should sit at or below err_order1_lam(λ+1)\n\
+         while cells_order2_lam(λ) stays strictly below cells_order1_lam(λ+1) —\n\
+         Richardson extrapolation buys the fine-grid accuracy at a coarser grid's\n\
+         cost. ci/check_accuracy.py enforces exactly that pair plus the committed\n\
+         error envelopes."
+    );
+}

@@ -62,6 +62,10 @@ pub const RULES: &[(&str, &str)] = &[
     ("env_discipline", "std::env reads only via the cached accessors in config.rs"),
     ("atomics_hygiene", "every atomic Ordering classified; no Relaxed/strong mixes per cell"),
     ("wire_exhaustive", "every Op variant handled in wire encode, decode and router dispatch"),
+    (
+        "scheme_exhaustive",
+        "every Scheme variant dispatched in the scalar, lane and backward Goursat dispatchers",
+    ),
     ("no_unsafe", "tests and benches stay unsafe-free (library unsafe is reviewed in-tree)"),
 ];
 
@@ -83,6 +87,7 @@ pub fn lint(files: &[SourceFile]) -> Vec<Finding> {
         rules::no_unsafe(&ctx, &mut raw);
     }
     rules::wire_exhaustive(&scrubbed, &mut raw);
+    rules::scheme_exhaustive(&scrubbed, &mut raw);
 
     // Apply allows: a finding whose (rule, line) matches an allow in its
     // file is suppressed, and the allow is marked used.

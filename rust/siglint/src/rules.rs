@@ -251,20 +251,25 @@ const HOT_FNS: &[(&str, &[&str])] = &[
         "src/kernel/lanes.rs",
         &[
             "solve_pde_lanes",
+            "solve_pde_lanes_scheme",
             "delta_block_lanes",
             "solve_gram_row",
             "solve_group_into",
             "scalar_entry",
             "solve_pde_grid_lanes",
             "vjp_pde_lanes",
+            "vjp_pde_lanes_acc",
             "grad_block_lanes",
             "vjp_gram_row",
             "vjp_group_into",
             "scalar_vjp_entry",
         ],
     ),
-    ("src/kernel/solver.rs", &["solve_pde_with", "solve_pde_grid_into"]),
-    ("src/kernel/backward.rs", &["sig_kernel_vjp_delta_into"]),
+    (
+        "src/kernel/solver.rs",
+        &["solve_pde_with", "solve_pde_scheme", "solve_pde_grid_into"],
+    ),
+    ("src/kernel/backward.rs", &["sig_kernel_vjp_delta_into", "sig_kernel_vjp_delta_acc"]),
     ("src/kernel/delta.rs", &["delta_vjp_to_paths_with"]),
     ("src/engine/mod.rs", &["gram_values_into"]),
 ];
@@ -563,10 +568,16 @@ pub fn atomics_hygiene(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
 
 /// Variant names of `enum Op` in `src/coordinator/mod.rs`.
 fn op_variants(code: &str) -> Option<Vec<String>> {
-    let at = code.find("enum Op")?;
+    enum_variants(code, "Op")
+}
+
+/// Variant names of `enum <name>`, if declared in `code`.
+fn enum_variants(code: &str, name: &str) -> Option<Vec<String>> {
+    let pat = format!("enum {name}");
+    let at = code.find(&pat)?;
     let bytes = code.as_bytes();
-    // Reject a longer ident (e.g. `enum Options`).
-    if bytes.get(at + 7).copied().is_some_and(is_ident) {
+    // Reject a longer ident (e.g. `enum Options` when looking for `Op`).
+    if bytes.get(at + pat.len()).copied().is_some_and(is_ident) {
         return None;
     }
     let open = at + code[at..].find('{')?;
@@ -614,10 +625,16 @@ fn op_variants(code: &str) -> Option<Vec<String>> {
     Some(variants)
 }
 
-/// First ident in a variant body (skips whitespace; attributes are not used
-/// on Op variants).
+/// First ident in a variant body, skipping whitespace and `#[...]`
+/// attributes (`Scheme::Order1` is `#[default]`; doc comments are already
+/// blanked by the scrubber).
 fn leading_ident(piece: &str) -> Option<String> {
-    let t = piece.trim_start();
+    let mut t = piece.trim_start();
+    while let Some(rest) = t.strip_prefix('#') {
+        let inner = rest.trim_start().strip_prefix('[')?;
+        let close = inner.find(']')?;
+        t = inner[close + 1..].trim_start();
+    }
     let end = t.bytes().position(|b| !is_ident(b)).unwrap_or(t.len());
     if end == 0 {
         return None;
@@ -737,6 +754,70 @@ pub fn wire_exhaustive(files: &[(&SourceFile, Scrubbed)], findings: &mut Vec<Fin
                     line: 1,
                     rule: "wire_exhaustive",
                     message: format!("`Op::{v}` is not handled in the {where_}"),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: scheme_exhaustive (cross-file)
+// ---------------------------------------------------------------------------
+
+/// Every `Scheme` variant must stay dispatched in the three solver entry
+/// points that branch on it: the scalar solver (`solve_pde_scheme`), the
+/// lane solver (`solve_pde_lanes_scheme`) and the backward pass
+/// (`sig_kernel_vjp_delta_scheme_into`). These matches are written
+/// exhaustively today, but a `_ =>` fallback added under refactoring
+/// pressure would silently route a new variant to the wrong discretisation
+/// — so the lint requires the literal `Scheme::<Variant>` token in each
+/// dispatcher body rather than trusting rustc's exhaustiveness check.
+pub fn scheme_exhaustive(files: &[(&SourceFile, Scrubbed)], findings: &mut Vec<Finding>) {
+    let find = |path: &str| files.iter().find(|(f, _)| f.path == path);
+    let Some((_, scheme_sc)) = find("src/kernel/scheme.rs") else {
+        return; // single-file fixture runs: nothing to check
+    };
+    let Some(variants) = enum_variants(&scheme_sc.code, "Scheme") else {
+        return;
+    };
+    const DISPATCHERS: &[(&str, &str, &str)] = &[
+        ("src/kernel/solver.rs", "solve_pde_scheme", "scalar solver dispatch"),
+        ("src/kernel/lanes.rs", "solve_pde_lanes_scheme", "lane dispatch"),
+        (
+            "src/kernel/backward.rs",
+            "sig_kernel_vjp_delta_scheme_into",
+            "backward dispatch",
+        ),
+    ];
+    for &(path, fn_name, label) in DISPATCHERS {
+        let Some((_, sc)) = find(path) else {
+            continue; // fixture sets may carry a subset of the dispatch files
+        };
+        let Some((s, e)) = fn_body(&sc.code, fn_name) else {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: 1,
+                rule: "scheme_exhaustive",
+                message: format!(
+                    "dispatch function `{fn_name}` not found — update scheme_exhaustive in siglint"
+                ),
+            });
+            continue;
+        };
+        let body = &sc.code[s..e];
+        for v in &variants {
+            let token = format!("Scheme::{v}");
+            let present = ident_positions(body, &token)
+                .iter()
+                .any(|&at| body.as_bytes().get(at + token.len()) != Some(&b':'));
+            if !present {
+                findings.push(Finding {
+                    path: path.to_string(),
+                    line: sc.line_of(s),
+                    rule: "scheme_exhaustive",
+                    message: format!(
+                        "`Scheme::{v}` is not dispatched in the {label} (`{fn_name}`)"
+                    ),
                 });
             }
         }

@@ -1,0 +1,13 @@
+// Known-bad fixture pair for `scheme_exhaustive`: linted as
+// src/kernel/scheme.rs alongside scheme_solver.rs. Declares a third
+// variant that the solver fixture's dispatch swallows in a wildcard arm.
+// The `#[default]` attribute mirrors the real enum so the variant parser's
+// attribute skipping stays covered.
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    #[default]
+    Order1,
+    Order2,
+    Order3,
+}

@@ -129,6 +129,52 @@ fn wire_exhaustive_checks_op_code_count_and_the_code_map() {
 }
 
 #[test]
+fn scheme_exhaustive_fixture() {
+    let files = vec![
+        SourceFile {
+            path: "src/kernel/scheme.rs".to_string(),
+            src: include_str!("fixtures/scheme_enum.rs").to_string(),
+        },
+        SourceFile {
+            path: "src/kernel/solver.rs".to_string(),
+            src: include_str!("fixtures/scheme_solver.rs").to_string(),
+        },
+    ];
+    let f = lint(&files);
+    only_rule(&f, "scheme_exhaustive");
+    // Order3 swallowed by the solver's wildcard arm; the lane and backward
+    // dispatch files are absent from the fixture set, which is tolerated.
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].message.contains("Scheme::Order3"), "{f:?}");
+    assert!(f[0].message.contains("scalar solver dispatch"), "{f:?}");
+}
+
+#[test]
+fn a_missing_scheme_dispatcher_is_itself_a_finding() {
+    // backward.rs present (its two hot stubs keep hot_path_alloc quiet) but
+    // without `sig_kernel_vjp_delta_scheme_into`: the dispatcher table in
+    // scheme_exhaustive can never silently rot.
+    let backward_src = "pub fn sig_kernel_vjp_delta_into(out: &mut [f64]) {\n    \
+                        for v in out.iter_mut() {\n        *v = 0.0;\n    }\n}\n\
+                        pub fn sig_kernel_vjp_delta_acc(out: &mut [f64]) {\n    \
+                        for v in out.iter_mut() {\n        *v += 1.0;\n    }\n}\n";
+    let files = vec![
+        SourceFile {
+            path: "src/kernel/scheme.rs".to_string(),
+            src: "pub enum Scheme {\n    Order1,\n    Order2,\n}\n".to_string(),
+        },
+        SourceFile {
+            path: "src/kernel/backward.rs".to_string(),
+            src: backward_src.to_string(),
+        },
+    ];
+    let f = lint(&files);
+    only_rule(&f, "scheme_exhaustive");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].message.contains("sig_kernel_vjp_delta_scheme_into"), "{f:?}");
+}
+
+#[test]
 fn panic_freedom_guards_the_designated_backward_fns() {
     // An `.expect()` inside a designated backward fn trips the rule; the
     // deliberately-panicking pub wrapper in the same file stays exempt, as

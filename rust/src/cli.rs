@@ -28,6 +28,9 @@ COMMANDS:
   kernel     compute a batch of signature kernels
              --batch N --len L --dim D --dyadic λ --dyadic2 λ2
              --solver row|blocked --transform ... --repeat R
+             --scheme order1|order2   Goursat discretisation order
+             --target-eps E  pick the cheapest (scheme, λ) meeting relative
+                        error E instead of the fixed --dyadic grid
              --ragged   variable-length (x, y) pairs in [L/2, L]
              --lifted linear|rbf [--sigma S]  static-kernel lift (drives the
                         PDE with κ's second difference instead of ⟨dx, dy⟩;
@@ -39,7 +42,9 @@ COMMANDS:
              --landmarks R     Nyström with R landmarks (implies --rank R)
              --features nystrom|randsig  --depth N (randsig truncation)
              --seed S          landmark / sketch seed
+             --scheme/--target-eps as for kernel (exact path only)
   grad       exact signature-kernel gradients for a batch of pairs
+             --batch N --len L --dim D --dyadic λ --scheme ... --target-eps E
   corpus     corpus registry lifecycle (register → query → append → stream)
              corpus register --addr A --batch N --len L --dim D
              corpus append   --addr A --id I --batch K --len L --dim D
@@ -100,6 +105,29 @@ fn flag_transform(f: &HashMap<String, String>) -> Transform {
     f.get("transform")
         .and_then(|v| Transform::parse(v))
         .unwrap_or(Transform::None)
+}
+
+/// Apply the shared accuracy flags (`--scheme order1|order2`,
+/// `--target-eps E`) to a kernel-options builder. Values are validated
+/// here only for parseability; ε semantics (finite, > 0) are enforced at
+/// plan compile.
+fn apply_accuracy_flags(
+    mut opts: KernelOptions,
+    flags: &HashMap<String, String>,
+) -> Result<KernelOptions, String> {
+    match flags.get("scheme").map(String::as_str) {
+        None => {}
+        Some("order1") => opts = opts.scheme(crate::kernel::Scheme::Order1),
+        Some("order2") => opts = opts.scheme(crate::kernel::Scheme::Order2),
+        Some(other) => return Err(format!("unknown scheme '{other}' (expected order1|order2)")),
+    }
+    if let Some(v) = flags.get("target-eps") {
+        let eps: f64 = v
+            .parse()
+            .map_err(|_| format!("--target-eps '{v}' is not a number"))?;
+        opts = opts.target_eps(eps);
+    }
+    Ok(opts)
 }
 
 /// CLI entry point; returns the process exit code.
@@ -324,10 +352,19 @@ fn cmd_kernel(flags: &HashMap<String, String>) -> i32 {
     };
     let tr = flag_transform(flags);
     let mut rng = Rng::new(43);
-    let opts = KernelOptions::default()
-        .dyadic(lam1, lam2)
-        .solver(solver)
-        .transform(tr);
+    let opts = match apply_accuracy_flags(
+        KernelOptions::default()
+            .dyadic(lam1, lam2)
+            .solver(solver)
+            .transform(tr),
+        flags,
+    ) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let (ks, dt, desc) = if flags.contains_key("ragged") {
         // Variable-length (x, y) pairs through the typed API — each pair is
         // solved on its own (lx−1) × (ly−1) grid, no padding anywhere.
@@ -435,7 +472,20 @@ fn cmd_mmd(flags: &HashMap<String, String>) -> i32 {
     } else {
         flag_usize(flags, "rank", 0)
     };
-    let opts = KernelOptions::default().dyadic(lam, lam).transform(tr);
+    let opts = match apply_accuracy_flags(KernelOptions::default().dyadic(lam, lam).transform(tr), flags)
+    {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // The low-rank feature maps fix their grid up front; adaptive ε
+    // resolution is an exact-path feature.
+    if rank > 0 && flags.contains_key("target-eps") {
+        eprintln!("--target-eps applies to the exact path only (drop --rank/--landmarks)");
+        return 2;
+    }
     let mut rng = Rng::new(48);
     // Two corpora of slightly different scale, so the MMD is nonzero.
     let x = rng.brownian_batch(batch, len, dim, 0.30);
@@ -518,7 +568,13 @@ fn cmd_grad(flags: &HashMap<String, String>) -> i32 {
     let x = rng.brownian_batch(batch, len, dim, 0.3);
     let y = rng.brownian_batch(batch, len, dim, 0.3);
     let gk = vec![1.0; batch];
-    let opts = KernelOptions::default().dyadic(lam, lam);
+    let opts = match apply_accuracy_flags(KernelOptions::default().dyadic(lam, lam), flags) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let t = std::time::Instant::now();
     let (gx, gy) = crate::kernel::batch_kernel_vjp(&x, &y, &gk, batch, len, len, dim, &opts);
     let dt = t.elapsed().as_secs_f64();

@@ -317,6 +317,7 @@ mod tests {
             lam1: 0,
             lam2: 0,
             transform: 0,
+            scheme: 0,
         };
         let mut rng = Rng::new(2);
         let rx1 = submit_one(&batcher, op, 8, 2, &mut rng);

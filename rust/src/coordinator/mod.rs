@@ -45,10 +45,17 @@ pub enum Op {
     Signature { depth: u32, transform: u8 },
     /// Expanded log-signature of one path.
     LogSignature { depth: u32, transform: u8 },
-    /// Signature kernel of a pair of equal-length paths.
-    SigKernel { lam1: u32, lam2: u32, transform: u8 },
-    /// Exact gradient of the signature kernel w.r.t. both paths.
-    SigKernelGrad { lam1: u32, lam2: u32 },
+    /// Signature kernel of a pair of equal-length paths. `scheme` selects
+    /// the Goursat discretisation (0 = order-1, 1 = order-2 Richardson).
+    SigKernel {
+        lam1: u32,
+        lam2: u32,
+        transform: u8,
+        scheme: u8,
+    },
+    /// Exact gradient of the signature kernel w.r.t. both paths, under the
+    /// same scheme encoding as [`Op::SigKernel`].
+    SigKernelGrad { lam1: u32, lam2: u32, scheme: u8 },
     /// Low-rank (Nyström, `rank` landmarks) biased MMD² between the first
     /// `nx` paths and the rest of a ragged frame. Ragged frames only.
     Mmd2LowRank { rank: u32, nx: u32, transform: u8 },
@@ -183,8 +190,13 @@ mod tests {
                 lam1: 0,
                 lam2: 0,
                 transform: 0,
+                scheme: 0,
             },
-            Op::SigKernelGrad { lam1: 0, lam2: 0 },
+            Op::SigKernelGrad {
+                lam1: 0,
+                lam2: 0,
+                scheme: 0,
+            },
             Op::Mmd2LowRank {
                 rank: 1,
                 nx: 1,

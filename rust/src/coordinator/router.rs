@@ -16,7 +16,7 @@ use crate::coordinator::{transform_from_u8, Op, Request, Response, WIRE_LOWRANK_
 use crate::corpus::{CorpusId, CorpusRegistry, CorpusStats};
 use crate::engine::{CacheStats, OpSpec, PlanCache, ShapeClass};
 use crate::kernel::lowrank::LowRankSpec;
-use crate::kernel::KernelOptions;
+use crate::kernel::{KernelOptions, Scheme};
 use crate::path::{PathBatch, SigError};
 use crate::runtime::RuntimeHandle;
 use crate::sig::SigOptions;
@@ -76,6 +76,12 @@ impl Router {
     /// Decode an op's wire transform + options into an engine spec.
     /// `retain` selects a record-keeping plan (gradient ops).
     fn op_spec(op: Op) -> Result<(OpSpec, bool), SigError> {
+        // Wire decode already validates the scheme byte; re-check here so
+        // locally-constructed Ops (tests, embedded clients) fail typed too.
+        let scheme_from_wire = |s: u8| {
+            Scheme::from_u8(s)
+                .ok_or_else(|| SigError::Protocol(format!("unknown Goursat scheme byte {s}")))
+        };
         match op {
             Op::Signature { depth, transform } => {
                 let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
@@ -92,15 +98,26 @@ impl Router {
                 lam1,
                 lam2,
                 transform,
+                scheme,
             } => {
                 let tr = transform_from_u8(transform).ok_or(SigError::BadTransform(transform))?;
+                let sc = scheme_from_wire(scheme)?;
                 Ok((
-                    OpSpec::SigKernel(KernelOptions::default().dyadic(lam1, lam2).transform(tr)),
+                    OpSpec::SigKernel(
+                        KernelOptions::default()
+                            .dyadic(lam1, lam2)
+                            .transform(tr)
+                            .scheme(sc),
+                    ),
                     false,
                 ))
             }
-            Op::SigKernelGrad { lam1, lam2 } => Ok((
-                OpSpec::SigKernel(KernelOptions::default().dyadic(lam1, lam2)),
+            Op::SigKernelGrad { lam1, lam2, scheme } => Ok((
+                OpSpec::SigKernel(
+                    KernelOptions::default()
+                        .dyadic(lam1, lam2)
+                        .scheme(scheme_from_wire(scheme)?),
+                ),
                 true,
             )),
             // The wire's rank field selects a Nyström budget; the seed is
@@ -148,10 +165,13 @@ impl Router {
     pub fn artifact_for(&self, op: Op, batch: usize, len: usize, dim: usize) -> Option<String> {
         let rt = self.runtime.as_ref()?;
         let name = match op {
+            // Artifacts implement the order-1 scheme only — any other
+            // scheme byte falls through to the native kernels.
             Op::SigKernel {
                 lam1: 0,
                 lam2: 0,
                 transform: 0,
+                scheme: 0,
             } => format!("sigkernel_b{batch}_l{len}_d{dim}"),
             Op::Signature {
                 depth,
@@ -664,7 +684,11 @@ mod tests {
     #[test]
     fn kernel_grad_returns_both_gradients() {
         let router = Router::native_only();
-        let op = Op::SigKernelGrad { lam1: 0, lam2: 0 };
+        let op = Op::SigKernelGrad {
+            lam1: 0,
+            lam2: 0,
+            scheme: 0,
+        };
         let mut rng = Rng::new(8);
         let reqs: Vec<Request> = (0..3).map(|_| req(op, 6, 2, &mut rng, true)).collect();
         let refs: Vec<&Request> = reqs.iter().collect();
@@ -717,6 +741,7 @@ mod tests {
             lam1: 0,
             lam2: 0,
             transform: 0,
+            scheme: 0,
         };
         let k = req(kop, 4, 2, &mut rng, false); // pair missing
         let refs: Vec<&Request> = vec![&k];
@@ -756,6 +781,7 @@ mod tests {
                 lam1: 60,
                 lam2: 60,
                 transform: 0,
+                scheme: 0,
             },
             dim: 1,
             lengths: vec![4, 4],
@@ -832,6 +858,7 @@ mod tests {
                 lam1: 1,
                 lam2: 0,
                 transform: 0,
+                scheme: 0,
             },
             dim: d,
             lengths: lengths.to_vec(),

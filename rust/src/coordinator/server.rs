@@ -250,6 +250,7 @@ impl Client {
                 lam1: 0,
                 lam2: 0,
                 transform: 0,
+                scheme: 0,
             },
             len,
             dim,
@@ -467,6 +468,7 @@ impl Client {
                 lam1: 0,
                 lam2: 0,
                 transform: 0,
+                scheme: 0,
             },
             dim,
             lengths,

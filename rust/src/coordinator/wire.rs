@@ -85,12 +85,17 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
     match op {
         Op::Signature { depth, transform } => (1, depth, 0, transform as u32),
         Op::LogSignature { depth, transform } => (2, depth, 0, transform as u32),
+        // The scheme byte rides the high byte of the otherwise-small
+        // transform slot (transform ≤ 3), keeping the frame layout fixed at
+        // 8 fields; SigKernelGrad's slot was previously unused (always 0),
+        // so old peers decode as scheme 0 = Order1.
         Op::SigKernel {
             lam1,
             lam2,
             transform,
-        } => (3, lam1, lam2, transform as u32),
-        Op::SigKernelGrad { lam1, lam2 } => (4, lam1, lam2, 0),
+            scheme,
+        } => (3, lam1, lam2, transform as u32 | (scheme as u32) << 8),
+        Op::SigKernelGrad { lam1, lam2, scheme } => (4, lam1, lam2, (scheme as u32) << 8),
         Op::Mmd2LowRank {
             rank,
             nx,
@@ -120,6 +125,24 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
     }
 }
 
+/// Split a kernel op's `tr` slot into `(scheme, low byte)`. The scheme byte
+/// must name a known Goursat scheme (0 = order-1, 1 = order-2), and nothing
+/// may ride above the two defined bytes.
+fn split_scheme(tr: u32) -> Result<(u8, u32), SigError> {
+    if tr > 0xFFFF {
+        return Err(SigError::Protocol(format!(
+            "kernel op tr slot {tr:#x} has bits above the transform/scheme bytes"
+        )));
+    }
+    let scheme = (tr >> 8) as u8;
+    if scheme > 1 {
+        return Err(SigError::Protocol(format!(
+            "unknown Goursat scheme byte {scheme} (known: 0 = order-1, 1 = order-2)"
+        )));
+    }
+    Ok((scheme, tr & 0xFF))
+}
+
 fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
     // Lazy: the slot is only a transform for the ops that carry one —
     // EvictCorpus (code 11) reuses it for its age bound, so validation
@@ -139,12 +162,34 @@ fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
             depth: p1,
             transform: transform()?,
         }),
-        3 => Ok(Op::SigKernel {
-            lam1: p1,
-            lam2: p2,
-            transform: transform()?,
-        }),
-        4 => Ok(Op::SigKernelGrad { lam1: p1, lam2: p2 }),
+        3 => {
+            // Low byte: transform; high byte: Goursat scheme (see
+            // op_to_parts). Anything above two bytes is a malformed frame.
+            let (scheme, low) = split_scheme(tr)?;
+            let transform = u8::try_from(low)
+                .ok()
+                .filter(|&t| t <= 3)
+                .ok_or(SigError::BadTransform(low.min(255) as u8))?;
+            Ok(Op::SigKernel {
+                lam1: p1,
+                lam2: p2,
+                transform,
+                scheme,
+            })
+        }
+        4 => {
+            let (scheme, low) = split_scheme(tr)?;
+            if low != 0 {
+                return Err(SigError::Protocol(format!(
+                    "SigKernelGrad carries no transform; got nonzero low byte {low}"
+                )));
+            }
+            Ok(Op::SigKernelGrad {
+                lam1: p1,
+                lam2: p2,
+                scheme,
+            })
+        }
         5 => Ok(Op::Mmd2LowRank {
             rank: p1,
             nx: p2,
@@ -188,7 +233,7 @@ fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
             Ok(Op::Mmd2Window {
                 id: p1,
                 decay_bp: p2,
-                transform,
+                transform: transform()?,
             })
         }
         other => Err(SigError::Protocol(format!("unknown op code {other}"))),
@@ -529,6 +574,7 @@ mod tests {
                 lam1: 1,
                 lam2: 2,
                 transform: 1,
+                scheme: 1,
             },
             len: 4,
             dim: 2,
@@ -569,6 +615,7 @@ mod tests {
                 lam1: 0,
                 lam2: 0,
                 transform: 0,
+                scheme: 0,
             },
             dim: 1,
             lengths: vec![2, 3, 4, 2],
@@ -581,6 +628,45 @@ mod tests {
             ok_frame(&mut buf.as_slice()),
             RequestFrame::Ragged(frame)
         );
+    }
+
+    #[test]
+    fn scheme_byte_roundtrips_and_junk_is_rejected() {
+        // Both kernel ops carry the scheme in the high byte of the tr slot.
+        for op in [
+            Op::SigKernel {
+                lam1: 2,
+                lam2: 1,
+                transform: 3,
+                scheme: 1,
+            },
+            Op::SigKernelGrad {
+                lam1: 1,
+                lam2: 1,
+                scheme: 1,
+            },
+        ] {
+            let (code, p1, p2, tr) = op_to_parts(op);
+            assert_eq!(op_from_parts(code, p1, p2, tr).unwrap(), op);
+        }
+        // Unknown scheme byte, junk above the two defined bytes, and a
+        // transform smuggled into a grad frame all fail typed, not panic.
+        assert!(matches!(
+            op_from_parts(3, 0, 0, 2 << 8),
+            Err(SigError::Protocol(_))
+        ));
+        assert!(matches!(
+            op_from_parts(3, 0, 0, 1 << 16),
+            Err(SigError::Protocol(_))
+        ));
+        assert!(matches!(
+            op_from_parts(4, 0, 0, 7),
+            Err(SigError::Protocol(_))
+        ));
+        assert!(matches!(
+            op_from_parts(3, 0, 0, 9),
+            Err(SigError::BadTransform(9))
+        ));
     }
 
     #[test]
@@ -946,7 +1032,11 @@ mod tests {
         assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
         // Odd pair count for a kernel op.
         let frame = RaggedFrame {
-            op: Op::SigKernelGrad { lam1: 0, lam2: 0 },
+            op: Op::SigKernelGrad {
+                lam1: 0,
+                lam2: 0,
+                scheme: 0,
+            },
             dim: 1,
             lengths: vec![2, 3, 4],
             values: vec![0.0; 9],

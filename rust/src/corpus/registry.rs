@@ -42,7 +42,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::corpus::tiles::TileScheduler;
 use crate::engine::MAX_BATCH_OUT;
-use crate::kernel::border::{self, PairBorder};
+use crate::kernel::border::{self, SchemeBorder};
 use crate::kernel::delta::{delta_matrix, increments_into};
 use crate::kernel::lowrank::{feature_mean, FeatureMap, LowRankFeatures, LowRankSpec};
 use crate::kernel::{KernelOptions, SolverKind};
@@ -88,8 +88,10 @@ struct ExactCache {
     /// Retained Goursat borders keyed by ordered path pair `(i, j)`,
     /// populated lazily by the first `extend_path` that touches a pair.
     /// Queries never read them; appends keep them (old grids are
-    /// unchanged); evictions rekey the surviving suffix.
-    borders: HashMap<(usize, usize), PairBorder>,
+    /// unchanged); evictions rekey the surviving suffix. Under
+    /// `Scheme::Order2` each entry retains fine + coarse borders so strip
+    /// extensions continue the full scheme.
+    borders: HashMap<(usize, usize), SchemeBorder>,
 }
 
 /// Cached low-rank state for one (options, spec) pair.
@@ -1049,15 +1051,16 @@ fn extend_exact_cache(
                     let x_old = x_new.get(..l_old * dim).unwrap_or(&[]);
                     let (m1, n1, strip) =
                         delta_strip(x_old, sub, l_old, lx_sub, dim, tr, full_m, full_m)?;
-                    border::extend_cols(bd, &strip, m1, n1, lam1, lam2)?;
+                    border::extend_cols_scheme(bd, &strip, m1, n1, lam1, lam2)?;
                     let (m2, n2, strip) =
                         delta_strip(sub, x_new, lx_sub, l_new, dim, tr, full_m, full_m)?;
-                    border::extend_rows(bd, &strip, m2, n2, lam1, lam2)?;
+                    border::extend_rows_scheme(bd, &strip, m2, n2, lam1, lam2)?;
                     bd.terminal()
                 }
                 _ => {
                     let (m, nn, dl) = delta_matrix(x_new, x_new, l_new, l_new, dim, tr);
-                    let bd = border::solve_full_retain(&dl, m, nn, lam1, lam2)?;
+                    let bd =
+                        border::solve_full_retain_scheme(&dl, m, nn, lam1, lam2, opts.scheme)?;
                     let t = bd.terminal();
                     cache.borders.insert((k, k), bd);
                     t
@@ -1087,12 +1090,12 @@ fn extend_exact_cache(
             Some(bd) if stripable => {
                 let (m1, n1, strip) =
                     delta_strip(sub, y, lx_sub, ly, dim, tr, full_rows, full_cols)?;
-                border::extend_rows(bd, &strip, m1, n1, lam1, lam2)?;
+                border::extend_rows_scheme(bd, &strip, m1, n1, lam1, lam2)?;
                 bd.terminal()
             }
             _ => {
                 let (m, nn, dl) = delta_matrix(x_new, y, l_new, ly, dim, tr);
-                let bd = border::solve_full_retain(&dl, m, nn, lam1, lam2)?;
+                let bd = border::solve_full_retain_scheme(&dl, m, nn, lam1, lam2, opts.scheme)?;
                 let t = bd.terminal();
                 cache.borders.insert((k, j), bd);
                 t
@@ -1106,12 +1109,12 @@ fn extend_exact_cache(
             Some(bd) if stripable => {
                 let (m1, n1, strip) =
                     delta_strip(y, sub, ly, lx_sub, dim, tr, full_cols, full_rows)?;
-                border::extend_cols(bd, &strip, m1, n1, lam1, lam2)?;
+                border::extend_cols_scheme(bd, &strip, m1, n1, lam1, lam2)?;
                 bd.terminal()
             }
             _ => {
                 let (m, nn, dl) = delta_matrix(y, x_new, ly, l_new, dim, tr);
-                let bd = border::solve_full_retain(&dl, m, nn, lam1, lam2)?;
+                let bd = border::solve_full_retain_scheme(&dl, m, nn, lam1, lam2, opts.scheme)?;
                 let t = bd.terminal();
                 cache.borders.insert((j, k), bd);
                 t

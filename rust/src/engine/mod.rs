@@ -53,6 +53,9 @@ use crate::corpus::{CorpusId, CorpusRegistry};
 use crate::kernel::krr::KernelRidge;
 use crate::kernel::lanes::{self, LaneScratch};
 use crate::kernel::lowrank::{FeatureMap, LowRankFeatures, LowRankRidge, LowRankSpec};
+use crate::kernel::scheme::{
+    coarse_orders, order2_degenerate, resolve_target_eps, richardson_combine, Scheme,
+};
 use crate::kernel::{KernelOptions, SolverKind};
 use crate::path::{PathBatch, SigError, SigOptions};
 use crate::runtime::RuntimeHandle;
@@ -355,7 +358,19 @@ fn validate_lowrank_spec(
     Ok(())
 }
 
+/// Ops whose execution has no ε-adaptive path (ridge solves, low-rank
+/// features, corpus/window queries — their derived state is keyed on a
+/// *fixed* grid) must refuse a `target_eps` request at compile rather than
+/// silently ignore it.
+fn reject_target_eps(k: &KernelOptions, what: &'static str) -> Result<(), SigError> {
+    if k.target_eps.get().is_some() {
+        return Err(SigError::Invalid(what));
+    }
+    Ok(())
+}
+
 fn validate_kernel_spec(k: &KernelOptions, shape: &ShapeClass) -> Result<(), SigError> {
+    k.target_eps.validate()?;
     match shape.lens {
         LenProfile::Uniform(l) if l >= 2 => crate::kernel::check_grid_size(l, l, k),
         // Short or ragged classes: the refined-grid bound is re-checked
@@ -447,12 +462,14 @@ impl Plan {
             }
             OpSpec::Krr { opts, lambda, .. } => {
                 validate_kernel_spec(opts, &shape)?;
+                reject_target_eps(opts, "target_eps is not supported for ridge plans")?;
                 if !(*lambda > 0.0) {
                     return Err(SigError::NonFinite("ridge λ must be positive"));
                 }
             }
             OpSpec::GramLowRank { opts, lowrank } | OpSpec::Mmd2LowRank { opts, lowrank } => {
                 validate_kernel_spec(opts, &shape)?;
+                reject_target_eps(opts, "target_eps is not supported for low-rank plans")?;
                 validate_lowrank_spec(lowrank, opts, &shape)?;
             }
             OpSpec::KrrLowRank {
@@ -461,6 +478,7 @@ impl Plan {
                 lambda,
             } => {
                 validate_kernel_spec(opts, &shape)?;
+                reject_target_eps(opts, "target_eps is not supported for low-rank plans")?;
                 validate_lowrank_spec(lowrank, opts, &shape)?;
                 if !(*lambda > 0.0) {
                     return Err(SigError::NonFinite("ridge λ must be positive"));
@@ -477,6 +495,7 @@ impl Plan {
                 lowrank,
             } => {
                 validate_kernel_spec(opts, &shape)?;
+                reject_target_eps(opts, "target_eps is not supported for corpus plans")?;
                 if let Some(lr) = lowrank {
                     validate_lowrank_spec(lr, opts, &shape)?;
                 }
@@ -502,6 +521,7 @@ impl Plan {
                 decay,
             } => {
                 validate_kernel_spec(opts, &shape)?;
+                reject_target_eps(opts, "target_eps is not supported for window plans")?;
                 if !(decay.is_finite() && *decay > 0.0 && *decay <= 1.0) {
                     return Err(SigError::NonFinite("window decay must lie in (0, 1]"));
                 }
@@ -529,7 +549,11 @@ impl Plan {
                 Backend::Pjrt
             }
             (Some(_), OpSpec::SigKernel(k), LenProfile::Uniform(_))
-                if k.dyadic_x == 0 && k.dyadic_y == 0 && k.exec.transform == Transform::None =>
+                if k.dyadic_x == 0
+                    && k.dyadic_y == 0
+                    && k.exec.transform == Transform::None
+                    && k.scheme == Scheme::Order1
+                    && k.target_eps.get().is_none() =>
             {
                 Backend::Pjrt
             }
@@ -863,9 +887,18 @@ impl Plan {
                 return Ok(self.record(values, Some(x), Some(y), RecordState::None, false));
             }
         }
+        // Resolve an ε-adaptive request against this batch. Resolution is
+        // deterministic and idempotent, so `vjp_kernel` re-resolving from
+        // the same inputs lands on the same (scheme, λ).
+        let resolved = resolve_target_eps(x, y, k)?;
+        let k = &resolved;
         let tr = k.exec.transform;
         let dim = x.dim();
         let (lam1, lam2) = (k.dyadic_x, k.dyadic_y);
+        // Non-degenerate Order2 retains TWO grids per pair — fine at
+        // (λ1, λ2) and coarse at the coarsened orders, concatenated — so the
+        // backward can run both adjoint passes without a forward re-solve.
+        let order2 = k.scheme == Scheme::Order2 && !order2_degenerate(lam1, lam2);
         let retain = self.retain;
         // Per-pair geometry: transformed Δ dims, flat offsets for the shared
         // Δ (and, when retaining, grid) buffers.
@@ -898,6 +931,13 @@ impl Plan {
                     .checked_add(((m << lam1) + 1) * ((n << lam2) + 1))
                     .filter(|&t| t <= MAX_BATCH_OUT)
                     .ok_or(SigError::TooLarge("retained PDE grids"))?;
+                if order2 {
+                    let (c1, c2) = coarse_orders(lam1, lam2);
+                    gtot = gtot
+                        .checked_add(((m << c1) + 1) * ((n << c2) + 1))
+                        .filter(|&t| t <= MAX_BATCH_OUT)
+                        .ok_or(SigError::TooLarge("retained PDE grids"))?;
+                }
             }
             max_lx = max_lx.max(lx);
             max_ly = max_ly.max(ly);
@@ -969,27 +1009,49 @@ impl Plan {
                                 glen,
                             )
                         };
-                        crate::kernel::solver::solve_pde_grid_into(delta, m, n, lam1, lam2, grid);
+                        // Fine grid first; under non-degenerate Order2 the
+                        // coarse grid follows in the same retained region.
+                        let gf = if order2 {
+                            ((m << lam1) + 1) * ((n << lam2) + 1)
+                        } else {
+                            glen
+                        };
+                        let (gfine, gcoarse) = grid.split_at_mut(gf);
+                        crate::kernel::solver::solve_pde_grid_into(delta, m, n, lam1, lam2, gfine);
+                        if order2 {
+                            let (c1, c2) = coarse_orders(lam1, lam2);
+                            crate::kernel::solver::solve_pde_grid_into(
+                                delta, m, n, c1, c2, gcoarse,
+                            );
+                        }
                         slot[0] = match k.solver {
-                            SolverKind::Row => grid[glen - 1],
-                            SolverKind::Blocked => {
-                                crate::kernel::solve_pde_blocked(delta, m, n, lam1, lam2)
+                            SolverKind::Row => {
+                                let fine = gfine[gf - 1];
+                                if order2 {
+                                    richardson_combine(fine, gcoarse[gcoarse.len() - 1])
+                                } else {
+                                    fine
+                                }
                             }
+                            SolverKind::Blocked => crate::kernel::blocked::solve_pde_blocked_scheme(
+                                delta, m, n, lam1, lam2, k.scheme,
+                            ),
                         };
                     } else {
                         slot[0] = match k.solver {
-                            SolverKind::Row => crate::kernel::solver::solve_pde_with(
+                            SolverKind::Row => crate::kernel::solver::solve_pde_scheme(
                                 delta,
                                 m,
                                 n,
                                 lam1,
                                 lam2,
+                                k.scheme,
                                 &mut sc.prev,
                                 &mut sc.cur,
                             ),
-                            SolverKind::Blocked => {
-                                crate::kernel::solve_pde_blocked(delta, m, n, lam1, lam2)
-                            }
+                            SolverKind::Blocked => crate::kernel::blocked::solve_pde_blocked_scheme(
+                                delta, m, n, lam1, lam2, k.scheme,
+                            ),
                         };
                     }
                 },
@@ -1086,6 +1148,8 @@ impl Plan {
         y: &PathBatch<'_>,
         k: &KernelOptions,
     ) -> Result<ExecutionRecord, SigError> {
+        let resolved = resolve_target_eps(x, y, k)?;
+        let k = &resolved;
         let total = x
             .batch()
             .checked_mul(y.batch())
@@ -1115,6 +1179,8 @@ impl Plan {
         }
         // Same allocation guard as the Gram op — three Gram matrices back
         // one MMD² value.
+        let resolved = resolve_target_eps(x, y, k)?;
+        let k = &resolved;
         let gram_len = |a: usize, b: usize| -> Result<usize, SigError> {
             a.checked_mul(b)
                 .filter(|&t| t <= MAX_BATCH_OUT)
@@ -1796,6 +1862,12 @@ impl ExecutionRecord {
                 got: cotangent.len(),
             });
         }
+        // Re-resolve an ε-adaptive request from the same inputs the forward
+        // saw — resolution is deterministic, so this lands on exactly the
+        // (scheme, λ) the retained grids were solved at.
+        let resolved = resolve_target_eps(&self.x_batch(), &self.y_batch(), k)?;
+        let k = &resolved;
+        let order2 = k.scheme == Scheme::Order2 && !order2_degenerate(k.dyadic_x, k.dyadic_y);
         let RecordState::KernelPairs {
             deltas,
             delta_off,
@@ -1857,18 +1929,28 @@ impl ExecutionRecord {
                         let delta = &deltas[delta_off[i]..delta_off[i + 1]];
                         let grid = &grids[grid_off[i]..grid_off[i + 1]];
                         // Algorithm 4 straight from the retained forward
-                        // state: the adjoint sweep reads the stored grid, so
-                        // zero forward cells are re-solved here.
+                        // state: the adjoint sweep reads the stored grid(s),
+                        // so zero forward cells are re-solved here. Under
+                        // non-degenerate Order2 the retained region holds
+                        // fine grid then coarse grid, concatenated.
+                        let gf = if order2 {
+                            ((m << k.dyadic_x) + 1) * ((n << k.dyadic_y) + 1)
+                        } else {
+                            grid.len()
+                        };
+                        let (gfine, gcoarse) = grid.split_at(gf);
                         if d2.len() < m * n {
                             d2.resize(m * n, 0.0);
                         }
-                        crate::kernel::backward::sig_kernel_vjp_delta_into(
+                        crate::kernel::backward::sig_kernel_vjp_delta_scheme_into(
                             delta,
                             m,
                             n,
                             k.dyadic_x,
                             k.dyadic_y,
-                            grid,
+                            k.scheme,
+                            gfine,
+                            if order2 { Some(gcoarse) } else { None },
                             cotangent[i],
                             &mut d1a,
                             &mut d1b,
@@ -1919,6 +2001,10 @@ impl ExecutionRecord {
         let (bx, by) = (self.x_lengths.len(), self.y_lengths.len());
         let xb = self.x_batch();
         let yb = self.y_batch();
+        // The forward resolved ε against (x, y) once for all three Grams;
+        // resolve the same way here (inner re-resolution is then a no-op).
+        let resolved = resolve_target_eps(&xb, &yb, k)?;
+        let k = &resolved;
         // ∂/∂x_i [ (1/bx²)ΣΣ k(x_a,x_b) ] needs BOTH argument slots of the
         // Kxx term: (1/bx²)[Σ_b ∇₁k(x_i,x_b) + Σ_a ∇₂k(x_a,x_i)]. When the
         // dyadic orders agree the discretised kernel is symmetric in its
@@ -1963,6 +2049,9 @@ impl ExecutionRecord {
         let (bx, by) = (self.x_lengths.len(), self.y_lengths.len());
         let xb = self.x_batch();
         let yb = self.y_batch();
+        // Same (x, y) resolution as the forward — see `vjp_mmd2`.
+        let resolved = resolve_target_eps(&xb, &yb, k)?;
+        let k = &resolved;
         let wo = c / (bx * (bx - 1)) as f64;
         let mut wxx = vec![wo; bx * bx];
         for i in 0..bx {

@@ -73,6 +73,29 @@ pub fn sig_kernel_vjp_delta_into(
     d1_cur: &mut Vec<f64>,
     d2: &mut [f64],
 ) {
+    d2.fill(0.0);
+    sig_kernel_vjp_delta_acc(delta, m, n, lam1, lam2, grid, grad_out, d1_below, d1_cur, d2);
+}
+
+/// Accumulating form of [`sig_kernel_vjp_delta_into`]: identical adjoint
+/// sweep, but `d2` is **not** zeroed — contributions add to whatever is
+/// already there. This is the primitive the `Order2` backward composes:
+/// one zeroing fine sweep seeded with (4/3)·w followed by one accumulating
+/// coarse sweep seeded with (−1/3)·w, in that order everywhere (scalar,
+/// lanes, record replay) so all backward producers share one FP sequence.
+#[allow(clippy::too_many_arguments)]
+pub fn sig_kernel_vjp_delta_acc(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    grid: &[f64],
+    grad_out: f64,
+    d1_below: &mut Vec<f64>,
+    d1_cur: &mut Vec<f64>,
+    d2: &mut [f64],
+) {
     assert_eq!(delta.len(), m * n);
     let rows = m << lam1;
     let cols = n << lam2;
@@ -81,7 +104,6 @@ pub fn sig_kernel_vjp_delta_into(
     assert_eq!(d2.len(), m * n);
     let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
 
-    d2.fill(0.0);
     // Adjoint sweep, two live rows: d1_below = d1[s+1, ·], d1_cur = d1[s, ·].
     // (§Perf: a split vector-pass/serial-chain variant of this loop was
     // tried and reverted — ~20% slower here, same story as `solve_pde`.)
@@ -132,11 +154,57 @@ pub fn sig_kernel_vjp_delta_into(
     }
 }
 
+/// Scheme-dispatched Δ-vjp over **retained** grids (the engine's record
+/// replay): for `Order1` (or degenerate `Order2`), `grid_coarse` is unused
+/// and this is [`sig_kernel_vjp_delta_into`]; for `Order2`, the fine sweep
+/// is seeded with (4/3)·w and the coarse sweep — which requires
+/// `grid_coarse`, the retained forward grid at the coarsened orders —
+/// accumulates with (−1/3)·w. Every `Scheme` variant must stay dispatched
+/// here (siglint `scheme_exhaustive`).
+#[allow(clippy::too_many_arguments)]
+pub fn sig_kernel_vjp_delta_scheme_into(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    scheme: crate::kernel::scheme::Scheme,
+    grid: &[f64],
+    grid_coarse: Option<&[f64]>,
+    grad_out: f64,
+    d1_below: &mut Vec<f64>,
+    d1_cur: &mut Vec<f64>,
+    d2: &mut [f64],
+) {
+    use crate::kernel::scheme::{coarse_orders, order2_degenerate, order2_seeds, Scheme};
+    match scheme {
+        Scheme::Order1 => {
+            sig_kernel_vjp_delta_into(
+                delta, m, n, lam1, lam2, grid, grad_out, d1_below, d1_cur, d2,
+            );
+        }
+        Scheme::Order2 if order2_degenerate(lam1, lam2) => {
+            sig_kernel_vjp_delta_into(
+                delta, m, n, lam1, lam2, grid, grad_out, d1_below, d1_cur, d2,
+            );
+        }
+        Scheme::Order2 => {
+            let (sf, sc) = order2_seeds(grad_out);
+            let (c1, c2) = coarse_orders(lam1, lam2);
+            d2.fill(0.0);
+            sig_kernel_vjp_delta_acc(delta, m, n, lam1, lam2, grid, sf, d1_below, d1_cur, d2);
+            let coarse = grid_coarse.unwrap_or(&[]);
+            sig_kernel_vjp_delta_acc(delta, m, n, c1, c2, coarse, sc, d1_below, d1_cur, d2);
+        }
+    }
+}
+
 /// Typed, fallible exact vjp of the signature kernel with respect to both
 /// paths. Returns `(grad_x, grad_y)` in the paths' own `[len, dim]` layouts,
 /// already chained through the path transform in `opts.exec.transform`.
 /// A path with fewer than two points makes the kernel constant (1), so its
-/// gradient is zero.
+/// gradient is zero. Honours `opts.scheme`: the `Order2` backward runs the
+/// fine and coarse adjoint sweeps with the Richardson seeds.
 pub fn try_sig_kernel_vjp(
     x: crate::path::Path<'_>,
     y: crate::path::Path<'_>,
@@ -153,10 +221,50 @@ pub fn try_sig_kernel_vjp(
     if lx < 2 || ly < 2 {
         return Ok((vec![0.0; lx * dim], vec![0.0; ly * dim]));
     }
+    // Resolve an ε-adaptive request exactly as the plan/engine paths do, so
+    // the direct API and a compiled plan agree on (scheme, λ) for the same
+    // inputs.
+    let resolved;
+    let opts = if opts.target_eps.get().is_some() {
+        let xb = crate::path::PathBatch::uniform(x.data(), 1, lx, dim)?;
+        let yb = crate::path::PathBatch::uniform(y.data(), 1, ly, dim)?;
+        resolved = crate::kernel::scheme::resolve_target_eps(&xb, &yb, opts)?;
+        &resolved
+    } else {
+        opts
+    };
     crate::kernel::check_grid_size(lx, ly, opts)?;
     let (m, n, delta) = delta_matrix(x.data(), y.data(), lx, ly, dim, opts.exec.transform);
-    let grid = solve_pde_grid(&delta, m, n, opts.dyadic_x, opts.dyadic_y);
-    let d2 = sig_kernel_vjp_delta(&delta, m, n, opts.dyadic_x, opts.dyadic_y, &grid, grad_out);
+    let (lam1, lam2) = (opts.dyadic_x, opts.dyadic_y);
+    let grid = solve_pde_grid(&delta, m, n, lam1, lam2);
+    let coarse;
+    let grid_coarse = if opts.scheme == crate::kernel::scheme::Scheme::Order2
+        && !crate::kernel::scheme::order2_degenerate(lam1, lam2)
+    {
+        let (c1, c2) = crate::kernel::scheme::coarse_orders(lam1, lam2);
+        coarse = solve_pde_grid(&delta, m, n, c1, c2);
+        Some(coarse.as_slice())
+    } else {
+        None
+    };
+    let w = (n << lam2) + 1;
+    let mut d2 = vec![0.0; m * n];
+    let mut d1_below = vec![0.0; w];
+    let mut d1_cur = vec![0.0; w];
+    sig_kernel_vjp_delta_scheme_into(
+        &delta,
+        m,
+        n,
+        lam1,
+        lam2,
+        opts.scheme,
+        &grid,
+        grid_coarse,
+        grad_out,
+        &mut d1_below,
+        &mut d1_cur,
+        &mut d2,
+    );
     let mut gx = vec![0.0; lx * dim];
     let mut gy = vec![0.0; ly * dim];
     delta_vjp_to_paths(

@@ -12,6 +12,31 @@
 /// Rows processed per block — the warp width in the paper's CUDA kernel.
 pub const BLOCK_ROWS: usize = 32;
 
+/// Scheme-dispatched blocked solve: same combine convention as
+/// [`super::solver::solve_pde_scheme`], with both the fine and the coarse
+/// sweep on the blocked anti-diagonal schedule.
+pub fn solve_pde_blocked_scheme(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    scheme: crate::kernel::scheme::Scheme,
+) -> f64 {
+    use crate::kernel::scheme::{coarse_orders, order2_degenerate, richardson_combine, Scheme};
+    match scheme {
+        Scheme::Order1 => solve_pde_blocked(delta, m, n, lam1, lam2),
+        Scheme::Order2 => {
+            let fine = solve_pde_blocked(delta, m, n, lam1, lam2);
+            if order2_degenerate(lam1, lam2) {
+                return fine;
+            }
+            let (c1, c2) = coarse_orders(lam1, lam2);
+            richardson_combine(fine, solve_pde_blocked(delta, m, n, c1, c2))
+        }
+    }
+}
+
 /// Solve the Goursat PDE with the blocked anti-diagonal schedule.
 /// Same contract as [`super::solver::solve_pde`].
 pub fn solve_pde_blocked(delta: &[f64], m: usize, n: usize, lam1: u32, lam2: u32) -> f64 {

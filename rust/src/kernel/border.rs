@@ -249,6 +249,112 @@ pub fn extend_cols(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Scheme-aware borders: a streaming pair solved under `Scheme::Order2`
+// retains TWO borders — the fine grid's at (λ1, λ2) and the coarse grid's at
+// the coarsened orders — and every strip extension continues both sweeps, so
+// the Richardson-combined terminal stays bit-identical to a from-scratch
+// `solve_pde_scheme` after any append sequence.
+
+use crate::kernel::scheme::{coarse_orders, order2_degenerate, richardson_combine, Scheme};
+
+/// Retained border state of one streaming pair under a solver scheme.
+/// `Order1` (and degenerate `Order2` at λ = (0,0)) keep only the fine
+/// border; non-degenerate `Order2` also keeps the coarse grid's.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchemeBorder {
+    fine: PairBorder,
+    coarse: Option<PairBorder>,
+}
+
+impl SchemeBorder {
+    /// Terminal kernel value under the scheme the border was solved with:
+    /// the fine terminal alone, or the Richardson combine when a coarse
+    /// border is retained.
+    pub fn terminal(&self) -> f64 {
+        match &self.coarse {
+            None => self.fine.terminal(),
+            Some(c) => richardson_combine(self.fine.terminal(), c.terminal()),
+        }
+    }
+
+    /// Retained memory in f64 slots across both borders.
+    pub fn retained_len(&self) -> usize {
+        self.fine.retained_len() + self.coarse.as_ref().map_or(0, PairBorder::retained_len)
+    }
+
+    /// Refined row count of the fine grid.
+    pub fn rows(&self) -> usize {
+        self.fine.rows()
+    }
+
+    /// Refined column count of the fine grid.
+    pub fn cols(&self) -> usize {
+        self.fine.cols()
+    }
+}
+
+/// Whether `scheme` at (λ1, λ2) needs a second, coarse border.
+fn wants_coarse(scheme: Scheme, lam1: u32, lam2: u32) -> bool {
+    scheme == Scheme::Order2 && !order2_degenerate(lam1, lam2)
+}
+
+/// Scheme-aware [`solve_full_retain`]: one fine solve, plus the coarse
+/// solve when the scheme calls for it.
+pub fn solve_full_retain_scheme(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    scheme: Scheme,
+) -> Result<SchemeBorder, SigError> {
+    let fine = solve_full_retain(delta, m, n, lam1, lam2)?;
+    let coarse = if wants_coarse(scheme, lam1, lam2) {
+        let (c1, c2) = coarse_orders(lam1, lam2);
+        Some(solve_full_retain(delta, m, n, c1, c2)?)
+    } else {
+        None
+    };
+    Ok(SchemeBorder { fine, coarse })
+}
+
+/// Scheme-aware [`extend_rows`]: continues the fine sweep and, when
+/// retained, the coarse sweep over the same strip.
+pub fn extend_rows_scheme(
+    border: &mut SchemeBorder,
+    strip: &[f64],
+    m_add: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+) -> Result<(), SigError> {
+    extend_rows(&mut border.fine, strip, m_add, n, lam1, lam2)?;
+    if let Some(coarse) = border.coarse.as_mut() {
+        let (c1, c2) = coarse_orders(lam1, lam2);
+        extend_rows(coarse, strip, m_add, n, c1, c2)?;
+    }
+    Ok(())
+}
+
+/// Scheme-aware [`extend_cols`]: continues the fine sweep and, when
+/// retained, the coarse sweep over the same strip.
+pub fn extend_cols_scheme(
+    border: &mut SchemeBorder,
+    strip: &[f64],
+    m: usize,
+    n_add: usize,
+    lam1: u32,
+    lam2: u32,
+) -> Result<(), SigError> {
+    extend_cols(&mut border.fine, strip, m, n_add, lam1, lam2)?;
+    if let Some(coarse) = border.coarse.as_mut() {
+        let (c1, c2) = coarse_orders(lam1, lam2);
+        extend_cols(coarse, strip, m, n_add, c1, c2)?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +462,42 @@ mod tests {
         let solved = border_cells_solved() - before;
         assert_eq!(solved, ((add << 1) * (n << 1)) as u64);
         assert!(solved < ((m + add) << 1) as u64 * ((n << 1) as u64));
+    }
+
+    #[test]
+    fn scheme_border_extension_bitmatches_scheme_rescratch() {
+        // An Order-2 streaming pair extended by strips must land on exactly
+        // the terminal a from-scratch `solve_pde_scheme` produces — both
+        // retained sweeps continue, and the combine is the same expression.
+        check("scheme strips == scheme rescratch", 20, |g| {
+            let m = g.usize_in(1, 7);
+            let add = g.usize_in(1, 5);
+            let lam = g.usize_in(0, 2) as u32;
+            let nt = m + add;
+            let full: Vec<f64> = g.normal_vec(nt * nt).iter().map(|v| v * 0.3).collect();
+            let top_left: Vec<f64> =
+                (0..m).flat_map(|i| full[i * nt..i * nt + m].to_vec()).collect();
+            let col_strip: Vec<f64> =
+                (0..m).flat_map(|i| full[i * nt + m..(i + 1) * nt].to_vec()).collect();
+            let row_strip = full[m * nt..].to_vec();
+            for scheme in [Scheme::Order1, Scheme::Order2] {
+                let mut b = solve_full_retain_scheme(&top_left, m, m, lam, lam, scheme).unwrap();
+                extend_cols_scheme(&mut b, &col_strip, m, add, lam, lam).unwrap();
+                extend_rows_scheme(&mut b, &row_strip, add, nt, lam, lam).unwrap();
+                let want = solve_full_retain_scheme(&full, nt, nt, lam, lam, scheme).unwrap();
+                assert_eq!(b, want, "{scheme:?} m={m}+{add} λ={lam}");
+                let (mut sp, mut sc) = (Vec::new(), Vec::new());
+                let direct = crate::kernel::solver::solve_pde_scheme(
+                    &full, nt, nt, lam, lam, scheme, &mut sp, &mut sc,
+                );
+                assert_eq!(b.terminal(), direct, "{scheme:?} terminal m={m}+{add} λ={lam}");
+            }
+        });
+        // Degenerate Order2 at λ = (0,0) retains no coarse border.
+        let delta = vec![0.1; 9];
+        let b = solve_full_retain_scheme(&delta, 3, 3, 0, 0, Scheme::Order2).unwrap();
+        assert!(b.coarse.is_none());
+        assert_eq!(b.terminal(), solve_full_retain(&delta, 3, 3, 0, 0).unwrap().terminal());
     }
 
     #[test]

@@ -183,6 +183,11 @@ fn gram_vjp_with_lanes(
     opts: &KernelOptions,
     width: usize,
 ) -> Result<(Vec<f64>, Vec<f64>), SigError> {
+    // Resolve a `target_eps` request up front (deterministic, so the
+    // backward lands on exactly the grid the forward ran) — before
+    // `check_dims`/`clamp_vjp_width`, which size off the resolved λ.
+    let resolved = crate::kernel::scheme::resolve_target_eps(x, y, opts)?;
+    let opts = &resolved;
     check_dims(x, y, opts)?;
     let (bx, by) = (x.batch(), y.batch());
     if weights.len() != bx * by {
@@ -274,6 +279,10 @@ pub(crate) fn gram_vjp_sym_with_lanes(
     opts: &KernelOptions,
     width: usize,
 ) -> Result<(Vec<f64>, Vec<f64>), SigError> {
+    // Resolution picks a symmetric λ, so the transpose-reuse invariant
+    // (`dyadic_x == dyadic_y`) survives an ε-adaptive request.
+    let resolved = crate::kernel::scheme::resolve_target_eps(x, x, opts)?;
+    let opts = &resolved;
     debug_assert_eq!(opts.dyadic_x, opts.dyadic_y);
     check_dims(x, x, opts)?;
     let bx = x.batch();

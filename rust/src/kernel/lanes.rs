@@ -53,10 +53,13 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::kernel::backward::sig_kernel_vjp_delta_into;
+use crate::kernel::backward::{sig_kernel_vjp_delta_acc, sig_kernel_vjp_delta_into};
 use crate::kernel::delta::{
     apply_difference_adjoint, delta_matrix_into, fold_grad_delta, grad_increments_into,
     increments_into,
+};
+use crate::kernel::scheme::{
+    coarse_orders, order2_degenerate, order2_seeds, richardson_combine, Scheme,
 };
 use crate::kernel::solver::solve_pde_grid_into;
 use crate::kernel::{KernelOptions, SolverKind};
@@ -215,6 +218,39 @@ pub fn solve_pde_lanes<const W: usize>(
     let mut out = [0.0; W];
     out.copy_from_slice(&prev[cols * W..(cols + 1) * W]);
     out
+}
+
+/// Scheme-dispatched lane solve: same combine convention as
+/// [`solve_pde_scheme`](super::solver::solve_pde_scheme), applied per lane.
+///
+/// `Order2` runs the fine sweep at (λ1, λ2) and a second sweep at the
+/// coarsened orders, then Richardson-combines per lane with the exact
+/// scalar expression — so lane results stay bit-identical to W scalar
+/// [`solve_pde_scheme`] calls. `prev`/`cur` are reused across both sweeps
+/// ([`solve_pde_lanes`] resizes them itself).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_pde_lanes_scheme<const W: usize>(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    scheme: Scheme,
+    prev: &mut Vec<f64>,
+    cur: &mut Vec<f64>,
+) -> [f64; W] {
+    match scheme {
+        Scheme::Order1 => solve_pde_lanes::<W>(delta, m, n, lam1, lam2, prev, cur),
+        Scheme::Order2 => {
+            let fine = solve_pde_lanes::<W>(delta, m, n, lam1, lam2, prev, cur);
+            if order2_degenerate(lam1, lam2) {
+                return fine;
+            }
+            let (c1, c2) = coarse_orders(lam1, lam2);
+            let coarse = solve_pde_lanes::<W>(delta, m, n, c1, c2, prev, cur);
+            std::array::from_fn(|w| richardson_combine(fine[w], coarse[w]))
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -550,12 +586,13 @@ fn solve_group_into<const W: usize>(
         base,
         delta,
     );
-    let vals = solve_pde_lanes::<W>(
+    let vals = solve_pde_lanes_scheme::<W>(
         &delta[..mt * W * nt],
         mt,
         nt,
         opts.dyadic_x,
         opts.dyadic_y,
+        opts.scheme,
         prev,
         cur,
     );
@@ -602,18 +639,24 @@ fn scalar_entry(
         delta,
     );
     match opts.solver {
-        SolverKind::Row => crate::kernel::solver::solve_pde_with(
+        SolverKind::Row => crate::kernel::solver::solve_pde_scheme(
             &delta[..m * n],
             m,
             n,
             opts.dyadic_x,
             opts.dyadic_y,
+            opts.scheme,
             prev,
             cur,
         ),
-        SolverKind::Blocked => {
-            crate::kernel::solve_pde_blocked(&delta[..m * n], m, n, opts.dyadic_x, opts.dyadic_y)
-        }
+        SolverKind::Blocked => crate::kernel::blocked::solve_pde_blocked_scheme(
+            &delta[..m * n],
+            m,
+            n,
+            opts.dyadic_x,
+            opts.dyadic_y,
+            opts.scheme,
+        ),
     }
 }
 
@@ -707,6 +750,31 @@ pub fn vjp_pde_lanes<const W: usize>(
     d1_cur: &mut Vec<f64>,
     d2: &mut [f64],
 ) {
+    d2.fill(0.0);
+    vjp_pde_lanes_acc::<W>(
+        delta, m, n, lam1, lam2, grid, grad_out, d1_below, d1_cur, d2,
+    );
+}
+
+/// Accumulating form of [`vjp_pde_lanes`]: identical sweep, but `d2` is
+/// **added to** rather than zeroed — the lane-batched composition primitive
+/// for `Order2` backward, where the fine pass (seed `(4/3)·w̄`) and the
+/// coarse pass (seed `(−1/3)·w̄`) fold into one ∂F/∂Δ block. Mirrors
+/// [`sig_kernel_vjp_delta_acc`](crate::kernel::backward::sig_kernel_vjp_delta_acc)
+/// per lane, op for op.
+#[allow(clippy::too_many_arguments)]
+pub fn vjp_pde_lanes_acc<const W: usize>(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    grid: &[f64],
+    grad_out: &[f64; W],
+    d1_below: &mut Vec<f64>,
+    d1_cur: &mut Vec<f64>,
+    d2: &mut [f64],
+) {
     assert_eq!(delta.len(), m * W * n);
     let rows = m << lam1;
     let cols = n << lam2;
@@ -714,7 +782,6 @@ pub fn vjp_pde_lanes<const W: usize>(
     assert_eq!(grid.len(), (rows + 1) * gw * W);
     assert_eq!(d2.len(), m * W * n);
     let scale = 1.0 / (1u64 << (lam1 + lam2)) as f64;
-    d2.fill(0.0);
     d1_below.clear();
     d1_below.resize(gw * W, 0.0);
     d1_cur.clear();
@@ -1085,18 +1152,54 @@ fn vjp_group_into<const W: usize>(
     let delta = &fwd.delta[..mt * W * nt];
     let glen = ((mt << opts.dyadic_x) + 1) * ((nt << opts.dyadic_y) + 1) * W;
     solve_pde_grid_lanes::<W>(delta, mt, nt, opts.dyadic_x, opts.dyadic_y, &mut grid[..glen]);
-    vjp_pde_lanes::<W>(
-        delta,
-        mt,
-        nt,
-        opts.dyadic_x,
-        opts.dyadic_y,
-        &grid[..glen],
-        &seeds,
-        d1a,
-        d1b,
-        &mut d2[..mt * W * nt],
-    );
+    if opts.scheme == Scheme::Order2 && !order2_degenerate(opts.dyadic_x, opts.dyadic_y) {
+        // Order-2 adjoint: the fine pass is seeded with (4/3)·w̄ (and zeroes
+        // d2), then the coarse grid is re-solved into the same scratch
+        // prefix and its pass accumulates with seed (−1/3)·w̄ — per lane the
+        // exact scalar sequence of `sig_kernel_vjp_delta_scheme_into`.
+        let fine_seeds: [f64; W] = std::array::from_fn(|w| order2_seeds(seeds[w]).0);
+        vjp_pde_lanes::<W>(
+            delta,
+            mt,
+            nt,
+            opts.dyadic_x,
+            opts.dyadic_y,
+            &grid[..glen],
+            &fine_seeds,
+            d1a,
+            d1b,
+            &mut d2[..mt * W * nt],
+        );
+        let (c1, c2) = coarse_orders(opts.dyadic_x, opts.dyadic_y);
+        let clen = ((mt << c1) + 1) * ((nt << c2) + 1) * W;
+        solve_pde_grid_lanes::<W>(delta, mt, nt, c1, c2, &mut grid[..clen]);
+        let coarse_seeds: [f64; W] = std::array::from_fn(|w| order2_seeds(seeds[w]).1);
+        vjp_pde_lanes_acc::<W>(
+            delta,
+            mt,
+            nt,
+            c1,
+            c2,
+            &grid[..clen],
+            &coarse_seeds,
+            d1a,
+            d1b,
+            &mut d2[..mt * W * nt],
+        );
+    } else {
+        vjp_pde_lanes::<W>(
+            delta,
+            mt,
+            nt,
+            opts.dyadic_x,
+            opts.dyadic_y,
+            &grid[..glen],
+            &seeds,
+            d1a,
+            d1b,
+            &mut d2[..mt * W * nt],
+        );
+    }
     let (m, n) = (lx - 1, ly - 1);
     grad_block_lanes::<W>(
         &d2[..mt * W * nt],
@@ -1163,18 +1266,54 @@ fn scalar_vjp_entry(
     let delta = &fwd.delta[..mt * nt];
     let glen = ((mt << opts.dyadic_x) + 1) * ((nt << opts.dyadic_y) + 1);
     solve_pde_grid_into(delta, mt, nt, opts.dyadic_x, opts.dyadic_y, &mut grid[..glen]);
-    sig_kernel_vjp_delta_into(
-        delta,
-        mt,
-        nt,
-        opts.dyadic_x,
-        opts.dyadic_y,
-        &grid[..glen],
-        seed,
-        d1a,
-        d1b,
-        &mut d2[..mt * nt],
-    );
+    if opts.scheme == Scheme::Order2 && !order2_degenerate(opts.dyadic_x, opts.dyadic_y) {
+        // The scalar Order-2 composition: zero ∂F/∂Δ, fine pass at (4/3)·w̄,
+        // coarse grid re-solved into the same scratch prefix, coarse pass
+        // accumulated at (−1/3)·w̄ — the `sig_kernel_vjp_delta_scheme_into`
+        // sequence run against the shared scratch.
+        let (sf, sc2) = order2_seeds(seed);
+        d2[..mt * nt].fill(0.0);
+        sig_kernel_vjp_delta_acc(
+            delta,
+            mt,
+            nt,
+            opts.dyadic_x,
+            opts.dyadic_y,
+            &grid[..glen],
+            sf,
+            d1a,
+            d1b,
+            &mut d2[..mt * nt],
+        );
+        let (c1, c2) = coarse_orders(opts.dyadic_x, opts.dyadic_y);
+        let clen = ((mt << c1) + 1) * ((nt << c2) + 1);
+        solve_pde_grid_into(delta, mt, nt, c1, c2, &mut grid[..clen]);
+        sig_kernel_vjp_delta_acc(
+            delta,
+            mt,
+            nt,
+            c1,
+            c2,
+            &grid[..clen],
+            sc2,
+            d1a,
+            d1b,
+            &mut d2[..mt * nt],
+        );
+    } else {
+        sig_kernel_vjp_delta_into(
+            delta,
+            mt,
+            nt,
+            opts.dyadic_x,
+            opts.dyadic_y,
+            &grid[..glen],
+            seed,
+            d1a,
+            d1b,
+            &mut d2[..mt * nt],
+        );
+    }
     let (m, n) = (lx - 1, ly - 1);
     let gdt = fold_grad_delta(&d2[..mt * nt], m, n, opts.exec.transform, gd);
     grad_increments_into(gdt, m, n, dim, &fwd.dx, &fwd.dys, gdx, gdy);
@@ -1223,6 +1362,41 @@ mod tests {
         check("solve_pde_lanes == W × solve_pde", 20, |g| {
             check_lanes::<4>(g);
             check_lanes::<8>(g);
+        });
+    }
+
+    fn check_lanes_scheme<const W: usize>(g: &mut crate::util::prop::Gen) {
+        let m = g.usize_in(1, 9);
+        let n = g.usize_in(1, 9);
+        let lam1 = g.usize_in(0, 2) as u32;
+        let lam2 = g.usize_in(0, 2) as u32;
+        let deltas: Vec<Vec<f64>> = (0..W)
+            .map(|_| g.normal_vec(m * n).iter().map(|v| v * 0.3).collect())
+            .collect();
+        let block = interleave::<W>(&deltas, m, n);
+        let (mut prev, mut cur) = (Vec::new(), Vec::new());
+        for scheme in [Scheme::Order1, Scheme::Order2] {
+            let got = solve_pde_lanes_scheme::<W>(
+                &block, m, n, lam1, lam2, scheme, &mut prev, &mut cur,
+            );
+            for (w, d) in deltas.iter().enumerate() {
+                let (mut sp, mut sc) = (Vec::new(), Vec::new());
+                let want = crate::kernel::solver::solve_pde_scheme(
+                    d, m, n, lam1, lam2, scheme, &mut sp, &mut sc,
+                );
+                assert_eq!(
+                    got[w], want,
+                    "{scheme:?} lane {w} of {W} (m={m} n={n} λ=({lam1},{lam2}))"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_lanes_bitmatch_scalar_scheme_solver() {
+        check("solve_pde_lanes_scheme == W × solve_pde_scheme", 15, |g| {
+            check_lanes_scheme::<4>(g);
+            check_lanes_scheme::<8>(g);
         });
     }
 

@@ -16,12 +16,13 @@ pub mod lanes;
 pub mod lift;
 pub mod lowrank;
 pub mod pde_baseline;
+pub mod scheme;
 pub mod solver;
 
-pub use backward::{sig_kernel_vjp, sig_kernel_vjp_delta, sig_kernel_vjp_delta_into,
-    try_sig_kernel_vjp};
+pub use backward::{sig_kernel_vjp, sig_kernel_vjp_delta, sig_kernel_vjp_delta_acc,
+    sig_kernel_vjp_delta_into, sig_kernel_vjp_delta_scheme_into, try_sig_kernel_vjp};
 pub use blocked::solve_pde_blocked;
-pub use border::{border_cells_solved, PairBorder};
+pub use border::{border_cells_solved, PairBorder, SchemeBorder};
 pub use delta::{delta_matrix, delta_vjp_to_paths};
 pub use gram::{
     batch_kernel, batch_kernel_vjp, gram, gram_vjp, mmd2, mmd2_with_grad, try_batch_kernel,
@@ -30,7 +31,10 @@ pub use gram::{
 };
 pub(crate) use gram::gram_vjp_sym_with_lanes;
 pub use krr::KernelRidge;
-pub use lanes::{solve_pde_lanes, vjp_pde_lanes, LaneScratch, LaneStats};
+pub use lanes::{
+    solve_pde_lanes, solve_pde_lanes_scheme, vjp_pde_lanes, vjp_pde_lanes_acc, LaneScratch,
+    LaneStats,
+};
 pub use lowrank::{
     try_gram_lowrank, try_mmd2_lowrank, try_mmd2_lowrank_unbiased, try_mmd2_lowrank_with_grad,
     FeatureMap, LowRankFeatures, LowRankMethod, LowRankRidge, LowRankSpec, NystromFeatures,
@@ -38,7 +42,11 @@ pub use lowrank::{
 };
 pub use lift::{lifted_delta, sig_kernel_lifted, StaticKernel};
 pub use pde_baseline::sig_kernel_vjp_pde_approx;
-pub use solver::{pde_cells_solved, solve_pde, solve_pde_grid, solve_pde_grid_into, solve_pde_with};
+pub use scheme::{resolve_target_eps, Scheme, TargetEps};
+pub use solver::{
+    pde_cells_solved, solve_pde, solve_pde_grid, solve_pde_grid_into, solve_pde_scheme,
+    solve_pde_with,
+};
 
 pub use crate::path::KernelOptions;
 

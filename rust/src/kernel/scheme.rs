@@ -1,0 +1,361 @@
+//! Discretisation schemes and error-adaptive refinement for the Goursat
+//! solver ("Numerical Schemes for Signature Kernels": higher-order schemes
+//! reach the same accuracy on much coarser grids).
+//!
+//! Two user-facing knobs live here, both carried on
+//! [`KernelOptions`](crate::path::KernelOptions):
+//!
+//! * [`Scheme`] — `Order1` is the paper's Algorithm-3 update, unchanged bit
+//!   for bit. `Order2` is its Richardson extrapolation: solve the pair at
+//!   the requested orders (λ1, λ2) *and* at the coarsened orders
+//!   (λ1−1, λ2−1), then combine `k₂ = (4·k_fine − k_coarse)/3`, cancelling
+//!   the leading error term. The fine sweep runs the identical scalar FP
+//!   sequence as `Order1`, so the lanes/borders bit-identity lattice holds
+//!   per scheme. At λ = (0, 0) no coarser grid exists, so `Order2`
+//!   degenerates to the fine solve alone (returned directly — running the
+//!   combine on equal grids would perturb the value by one rounding).
+//! * [`TargetEps`] — an error target ε that **replaces** fixed λ: before a
+//!   full solve, [`resolve_target_eps`] probes a small subsample of pairs
+//!   on a dyadic ladder, estimates each candidate's discretisation error
+//!   from the λ vs λ+1 difference, and rewrites the options to the cheapest
+//!   (scheme, λ) meeting ε.
+//!
+//! Cost model (cells solved for an `[m, n]` Δ): `Order1` at λ costs
+//! `4^λ·mn`; `Order2` at λ costs `(4^λ + 4^{λ−1})·mn = 1.25·4^λ·mn` — so
+//! `Order2` at λ−1 costs `0.3125·4^λ·mn`, strictly fewer cells than
+//! `Order1` at λ, which is the accuracy-per-FLOP trade the bench gate
+//! (`benches/accuracy.rs` + `ci/check_accuracy.py`) measures and enforces.
+
+use crate::path::{KernelOptions, PathBatch, SigError};
+
+/// Which Goursat discretisation to run. Carried on
+/// [`KernelOptions`](crate::path::KernelOptions) and dispatched in the
+/// scalar solver, the lane engine, the blocked solver, border strips, and
+/// the Algorithm-4 backward (siglint's `scheme_exhaustive` rule keeps the
+/// dispatch sites total).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// The paper's order-1 update — every existing result is bit-identical
+    /// under this default.
+    #[default]
+    Order1,
+    /// Richardson extrapolation over (λ, λ−1): `(4·k_fine − k_coarse)/3`.
+    Order2,
+}
+
+impl Scheme {
+    /// Wire byte for this scheme.
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Scheme::Order1 => 0,
+            Scheme::Order2 => 1,
+        }
+    }
+
+    /// Decode a wire byte; `None` for unknown values.
+    pub fn from_u8(v: u8) -> Option<Scheme> {
+        match v {
+            0 => Some(Scheme::Order1),
+            1 => Some(Scheme::Order2),
+            _ => None,
+        }
+    }
+}
+
+/// The coarsened dyadic orders an `Order2` solve pairs with (λ1, λ2):
+/// one step down on each axis, saturating at zero.
+pub fn coarse_orders(lam1: u32, lam2: u32) -> (u32, u32) {
+    (lam1.saturating_sub(1), lam2.saturating_sub(1))
+}
+
+/// True when `Order2` has no coarser grid to extrapolate against and
+/// degenerates to the fine solve alone.
+pub fn order2_degenerate(lam1: u32, lam2: u32) -> bool {
+    lam1 == 0 && lam2 == 0
+}
+
+/// The Richardson combine. One expression, used verbatim by the scalar
+/// solver, every lane of the lane engine, borders, and the probe — so all
+/// producers agree bitwise.
+#[inline]
+pub fn richardson_combine(fine: f64, coarse: f64) -> f64 {
+    (4.0 * fine - coarse) / 3.0
+}
+
+/// Cotangent seeds for the two `Order2` adjoint sweeps: ∂k₂/∂k_fine = 4/3,
+/// ∂k₂/∂k_coarse = −1/3. One expression shared by the scalar and lane
+/// backward so their accumulation sequences match bitwise.
+#[inline]
+pub fn order2_seeds(w: f64) -> (f64, f64) {
+    (w * (4.0 / 3.0), w * (-1.0 / 3.0))
+}
+
+/// Relative cell cost of solving one `[m, n]` Δ under (scheme, λ1, λ2), in
+/// units of `m·n` cells. The resolver ranks candidates by this.
+pub fn cell_cost(scheme: Scheme, lam1: u32, lam2: u32) -> u128 {
+    let lam1 = lam1.min(63);
+    let lam2 = lam2.min(63);
+    let fine = 1u128 << (lam1 + lam2);
+    match scheme {
+        Scheme::Order1 => fine,
+        Scheme::Order2 if order2_degenerate(lam1, lam2) => fine,
+        Scheme::Order2 => {
+            let (c1, c2) = coarse_orders(lam1, lam2);
+            fine + (1u128 << (c1 + c2))
+        }
+    }
+}
+
+/// Error target carried on [`KernelOptions`](crate::path::KernelOptions).
+///
+/// `KernelOptions` is `Copy + Eq + Hash` (it keys plan and corpus caches),
+/// so the target is stored as raw `f64` bits with an explicit set flag —
+/// no sentinel value is stolen from the ε domain, which keeps hostile
+/// inputs (0, negative, NaN, ∞) representable and rejectable at plan
+/// compile instead of silently reinterpreted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TargetEps {
+    set: bool,
+    bits: u64,
+}
+
+impl TargetEps {
+    /// No target: the fixed (scheme, λ) in the options is used as-is.
+    pub const UNSET: TargetEps = TargetEps { set: false, bits: 0 };
+
+    /// Store a target (validated at plan compile, not here, so hostile
+    /// values surface as typed errors rather than panics).
+    pub fn new(eps: f64) -> TargetEps {
+        TargetEps {
+            set: true,
+            bits: eps.to_bits(),
+        }
+    }
+
+    /// The target, if one was set.
+    pub fn get(self) -> Option<f64> {
+        if self.set {
+            Some(f64::from_bits(self.bits))
+        } else {
+            None
+        }
+    }
+
+    /// Plan-compile validation: a set target must be a finite positive
+    /// number (0, negatives, NaN and ∞ are all rejected — ε = 0 is not
+    /// reachable by any finite grid).
+    pub fn validate(self) -> Result<(), SigError> {
+        match self.get() {
+            None => Ok(()),
+            Some(e) if e.is_finite() && e > 0.0 => Ok(()),
+            Some(_) => Err(SigError::NonFinite(
+                "target_eps must be a finite positive number",
+            )),
+        }
+    }
+}
+
+impl Default for TargetEps {
+    fn default() -> Self {
+        TargetEps::UNSET
+    }
+}
+
+/// Dyadic ladder ceiling for the probe (candidate λ ∈ 0..=MAX_ADAPT_LAMBDA).
+const MAX_ADAPT_LAMBDA: u32 = 6;
+
+/// Per-solve cell budget for one probe pair — candidates whose probe grid
+/// would exceed this are not evaluated (long paths refine less far, exactly
+/// the regime where coarse grids suffice).
+const PROBE_CELLS_MAX: u128 = 1 << 22;
+
+/// Probe pairs drawn from each side (diagonal-ish subsample).
+const PROBE_PAIRS: usize = 2;
+
+/// Resolve `target_eps`: when set, probe a subsample and rewrite the
+/// options to the cheapest (scheme, λ) whose estimated discretisation
+/// error meets ε; when unset, return the options unchanged.
+///
+/// The probe solves each subsampled pair's Δ once, then walks an order-1
+/// dyadic ladder `k₁(λ)` (Order-2 values derive from it for free:
+/// `k₂(λ) = (4·k₁(λ) − k₁(λ−1))/3`). A candidate's error estimate is the
+/// max over probe pairs of `|k(λ) − k(λ+1)| / max(1, |k(λ+1)|)`.
+/// Candidates are ranked by [`cell_cost`] and the first (cheapest) one
+/// meeting ε wins; if none does, the most accurate evaluated candidate is
+/// used. The procedure is **deterministic** in (x, y, opts) — forward and
+/// backward paths re-resolve independently and land on the same grid —
+/// and the returned options have the target cleared, so resolution is
+/// idempotent. Smaller ε can only move the choice to a costlier candidate
+/// (the feasible set shrinks), which is the monotonicity property
+/// `tests/props_scheme.rs` pins.
+pub fn resolve_target_eps(
+    x: &PathBatch<'_>,
+    y: &PathBatch<'_>,
+    opts: &KernelOptions,
+) -> Result<KernelOptions, SigError> {
+    let Some(eps) = opts.target_eps.get() else {
+        return Ok(*opts);
+    };
+    let mut resolved = *opts;
+    resolved.target_eps = TargetEps::UNSET;
+    if !(eps.is_finite() && eps > 0.0) {
+        return Err(SigError::NonFinite(
+            "target_eps must be a finite positive number",
+        ));
+    }
+    // Diagonal-ish subsample: pair i with i (mod the smaller side). Skip
+    // degenerate paths — their kernel is exactly 1 at every grid.
+    let (bx, by) = (x.batch(), y.batch());
+    let mut ladders: Vec<Vec<f64>> = Vec::new();
+    let mut evaluated_max = 0u32; // ladder length shared by all pairs
+    if bx > 0 && by > 0 {
+        // Ladder ceiling: largest λ any probe pair can afford, bounded by
+        // MAX_ADAPT_LAMBDA + 1 (the +1 supplies the λ vs λ+1 estimate at
+        // the top candidate).
+        evaluated_max = MAX_ADAPT_LAMBDA + 1;
+        for i in 0..bx.min(PROBE_PAIRS) {
+            let j = i % by;
+            let (lx, ly) = (x.len_of(i), y.len_of(j));
+            if lx < 2 || ly < 2 {
+                continue;
+            }
+            let tr = opts.exec.transform;
+            let (m, n, delta) =
+                crate::kernel::delta::delta_matrix(x.values_of(i), y.values_of(j), lx, ly,
+                    x.dim(), tr);
+            while evaluated_max > 0 {
+                let cells = (m as u128) * (n as u128) * (1u128 << (2 * evaluated_max));
+                if cells <= PROBE_CELLS_MAX {
+                    break;
+                }
+                evaluated_max -= 1;
+            }
+            let ladder: Vec<f64> = (0..=evaluated_max)
+                .map(|lam| crate::kernel::solver::solve_pde(&delta, m, n, lam, lam))
+                .collect();
+            ladders.push(ladder);
+        }
+    }
+    if ladders.is_empty() || evaluated_max == 0 {
+        // Nothing to probe (empty / degenerate subsample, or even λ = 1 is
+        // over budget): keep the options' own grid.
+        return Ok(resolved);
+    }
+    // Candidate value at (scheme, λ) for ladder `l` (λ < evaluated_max is
+    // guaranteed by the caller loop below).
+    let value_at = |l: &[f64], scheme: Scheme, lam: u32| -> f64 {
+        let lam = lam as usize;
+        match scheme {
+            Scheme::Order1 => l[lam],
+            Scheme::Order2 if lam == 0 => l[0],
+            Scheme::Order2 => richardson_combine(l[lam], l[lam - 1]),
+        }
+    };
+    let mut candidates: Vec<(u128, Scheme, u32, f64)> = Vec::new();
+    for lam in 0..evaluated_max {
+        for scheme in [Scheme::Order1, Scheme::Order2] {
+            if scheme == Scheme::Order2 && lam == 0 {
+                continue; // degenerate: identical to Order1 at λ = 0
+            }
+            let mut err = 0.0f64;
+            for l in &ladders {
+                let here = value_at(l, scheme, lam);
+                let next = value_at(l, scheme, lam + 1);
+                let e = (here - next).abs() / next.abs().max(1.0);
+                err = err.max(e);
+            }
+            candidates.push((cell_cost(scheme, lam, lam), scheme, lam, err));
+        }
+    }
+    // Cheapest first; ties broken by (scheme, λ) order of insertion, which
+    // is already deterministic.
+    candidates.sort_by(|a, b| (a.0, a.2, a.1.to_u8()).cmp(&(b.0, b.2, b.1.to_u8())));
+    let chosen = candidates
+        .iter()
+        .find(|c| c.3 <= eps)
+        .or_else(|| {
+            candidates
+                .iter()
+                .min_by(|a, b| a.3.partial_cmp(&b.3).unwrap_or(std::cmp::Ordering::Equal))
+        })
+        .copied();
+    if let Some((_, scheme, lam, _)) = chosen {
+        resolved.scheme = scheme;
+        resolved.dyadic_x = lam;
+        resolved.dyadic_y = lam;
+    }
+    Ok(resolved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn combine_and_seeds_are_consistent() {
+        let (f, c) = (1.25, 1.20);
+        let k2 = richardson_combine(f, c);
+        assert!((k2 - (4.0 * f - c) / 3.0).abs() == 0.0);
+        let (sf, sc) = order2_seeds(0.7);
+        assert!((sf - 0.7 * 4.0 / 3.0).abs() < 1e-15);
+        assert!((sc + 0.7 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cost_model_orders_correctly() {
+        // The acceptance claim: Order2 at λ−1 < Order1 at λ, strictly.
+        for lam in 1..8u32 {
+            assert!(cell_cost(Scheme::Order2, lam - 1, lam - 1) < cell_cost(Scheme::Order1, lam, lam));
+        }
+        assert_eq!(cell_cost(Scheme::Order1, 2, 2), 16);
+        assert_eq!(cell_cost(Scheme::Order2, 2, 2), 20);
+        assert_eq!(cell_cost(Scheme::Order2, 0, 0), 1);
+    }
+
+    #[test]
+    fn target_eps_validation() {
+        assert!(TargetEps::UNSET.validate().is_ok());
+        assert!(TargetEps::new(1e-4).validate().is_ok());
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert!(TargetEps::new(bad).validate().is_err(), "eps={bad}");
+        }
+    }
+
+    #[test]
+    fn scheme_wire_roundtrip() {
+        for s in [Scheme::Order1, Scheme::Order2] {
+            assert_eq!(Scheme::from_u8(s.to_u8()), Some(s));
+        }
+        assert_eq!(Scheme::from_u8(2), None);
+    }
+
+    #[test]
+    fn resolution_is_idempotent_and_clears_eps() {
+        let mut rng = Rng::new(91);
+        let (b, l, d) = (3, 8, 2);
+        let data = rng.brownian_batch(b, l, d, 0.4);
+        let xb = crate::path::PathBatch::uniform(&data, b, l, d).unwrap();
+        let opts = KernelOptions::default().target_eps(1e-3);
+        let r1 = resolve_target_eps(&xb, &xb, &opts).unwrap();
+        assert_eq!(r1.target_eps, TargetEps::UNSET);
+        let r2 = resolve_target_eps(&xb, &xb, &r1).unwrap();
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn looser_eps_never_costs_more() {
+        let mut rng = Rng::new(92);
+        let (b, l, d) = (2, 10, 2);
+        let data = rng.brownian_batch(b, l, d, 0.5);
+        let xb = crate::path::PathBatch::uniform(&data, b, l, d).unwrap();
+        let mut last_cost = u128::MAX;
+        for eps in [1e-7, 1e-5, 1e-3, 1e-1] {
+            let r = resolve_target_eps(&xb, &xb, &KernelOptions::default().target_eps(eps))
+                .unwrap();
+            let cost = cell_cost(r.scheme, r.dyadic_x, r.dyadic_y);
+            assert!(cost <= last_cost, "eps={eps}: cost {cost} > {last_cost}");
+            last_cost = cost;
+        }
+    }
+}

@@ -103,6 +103,38 @@ pub fn solve_pde_with(
     prev[cols]
 }
 
+/// Scheme-dispatched terminal solve: [`Scheme::Order1`] is
+/// [`solve_pde_with`] unchanged; [`Scheme::Order2`] runs the identical
+/// sweep at (λ1, λ2) and at the coarsened orders, then Richardson-combines
+/// the terminals (`(4·k_fine − k_coarse)/3`). At λ = (0, 0) the coarse grid
+/// coincides with the fine one, so the fine value is returned directly.
+/// The fine sweep's FP sequence is exactly the `Order1` sequence — the
+/// bit-identity anchor every lane/border/backward scheme path shares.
+pub fn solve_pde_scheme(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    lam1: u32,
+    lam2: u32,
+    scheme: crate::kernel::scheme::Scheme,
+    prev: &mut Vec<f64>,
+    cur: &mut Vec<f64>,
+) -> f64 {
+    use crate::kernel::scheme::{coarse_orders, order2_degenerate, richardson_combine, Scheme};
+    match scheme {
+        Scheme::Order1 => solve_pde_with(delta, m, n, lam1, lam2, prev, cur),
+        Scheme::Order2 => {
+            let fine = solve_pde_with(delta, m, n, lam1, lam2, prev, cur);
+            if order2_degenerate(lam1, lam2) {
+                return fine;
+            }
+            let (c1, c2) = coarse_orders(lam1, lam2);
+            let coarse = solve_pde_with(delta, m, n, c1, c2, prev, cur);
+            richardson_combine(fine, coarse)
+        }
+    }
+}
+
 /// Solve the PDE keeping the whole grid — needed by the exact backward pass
 /// (Algorithm 4). Returns the `[(rows+1) × (cols+1)]` grid row-major, where
 /// rows = m·2^λ1, cols = n·2^λ2.
@@ -242,6 +274,32 @@ mod tests {
             let reference = per_cell_reference(&delta, m, n, lam1, lam2);
             assert_eq!(hoisted, reference, "m={m} n={n} λ=({lam1},{lam2})");
         });
+    }
+
+    #[test]
+    fn order2_scheme_combines_fine_and_coarse() {
+        use crate::kernel::scheme::{richardson_combine, Scheme};
+        let delta = [0.3, -0.2, 0.15, 0.4, 0.05, -0.1];
+        let (m, n) = (2, 3);
+        let mut p = Vec::new();
+        let mut c = Vec::new();
+        // Order1 dispatch is the plain solver, bitwise.
+        assert_eq!(
+            solve_pde_scheme(&delta, m, n, 2, 1, Scheme::Order1, &mut p, &mut c),
+            solve_pde(&delta, m, n, 2, 1)
+        );
+        // Order2 is the documented combine of the two plain solves.
+        let fine = solve_pde(&delta, m, n, 2, 1);
+        let coarse = solve_pde(&delta, m, n, 1, 0);
+        assert_eq!(
+            solve_pde_scheme(&delta, m, n, 2, 1, Scheme::Order2, &mut p, &mut c),
+            richardson_combine(fine, coarse)
+        );
+        // Degenerate λ = (0,0): the fine value itself, no combine rounding.
+        assert_eq!(
+            solve_pde_scheme(&delta, m, n, 0, 0, Scheme::Order2, &mut p, &mut c),
+            solve_pde(&delta, m, n, 0, 0)
+        );
     }
 
     #[test]

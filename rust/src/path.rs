@@ -17,6 +17,7 @@
 //! length depends only on `dim` and `depth`), Gram matrices pair every length
 //! with every other, and gradients come back in the same ragged layout.
 
+use crate::kernel::scheme::{Scheme, TargetEps};
 use crate::kernel::SolverKind;
 use crate::sig::SigMethod;
 use crate::transforms::Transform;
@@ -404,6 +405,14 @@ pub struct KernelOptions {
     /// λ1 ≠ λ2 — useful when x and y have very different lengths.
     pub dyadic_y: u32,
     pub solver: SolverKind,
+    /// Goursat discretisation order ([`Scheme::Order1`] is the paper's
+    /// update; `Order2` Richardson-extrapolates against the (λ1−1, λ2−1)
+    /// grid for the same accuracy on coarser grids).
+    pub scheme: Scheme,
+    /// Optional error target replacing fixed λ: when set, solves probe a
+    /// subsample and pick the cheapest (scheme, λ) meeting ε (see
+    /// [`resolve_target_eps`](crate::kernel::scheme::resolve_target_eps)).
+    pub target_eps: TargetEps,
     pub exec: ExecOptions,
 }
 
@@ -413,6 +422,8 @@ impl Default for KernelOptions {
             dyadic_x: 0,
             dyadic_y: 0,
             solver: SolverKind::Row,
+            scheme: Scheme::Order1,
+            target_eps: TargetEps::UNSET,
             exec: ExecOptions::default(),
         }
     }
@@ -426,6 +437,16 @@ impl KernelOptions {
     }
     pub fn solver(mut self, s: SolverKind) -> Self {
         self.solver = s;
+        self
+    }
+    /// Select the Goursat discretisation scheme.
+    pub fn scheme(mut self, s: Scheme) -> Self {
+        self.scheme = s;
+        self
+    }
+    /// Set an error target ε; validated at plan compile (finite, > 0).
+    pub fn target_eps(mut self, eps: f64) -> Self {
+        self.target_eps = TargetEps::new(eps);
         self
     }
     pub fn transform(mut self, t: Transform) -> Self {

@@ -130,7 +130,16 @@ fn transform_and_grad_ops_over_the_wire() {
     let mut values = x.clone();
     values.extend_from_slice(&y);
     let resp = client
-        .call(Op::SigKernelGrad { lam1: 0, lam2: 0 }, 8, 2, values)
+        .call(
+            Op::SigKernelGrad {
+                lam1: 0,
+                lam2: 0,
+                scheme: 0,
+            },
+            8,
+            2,
+            values,
+        )
         .unwrap()
         .unwrap();
     assert_eq!(resp.len(), 2 * 8 * 2);

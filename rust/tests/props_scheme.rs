@@ -1,0 +1,214 @@
+//! Goursat-scheme properties (the PR's acceptance surface): the order-2
+//! Richardson scheme must converge to the same limit as order-1 and beat
+//! it at matched λ; lane-batched solves must reproduce the scalar path
+//! **bit for bit** under either scheme; the order-2 backward must match
+//! finite differences of the order-2 forward; and `target_eps` resolution
+//! must be deterministic, idempotent, and cost-monotone in ε — with
+//! hostile targets rejected as typed errors at plan compile.
+
+use pysiglib::engine::{OpSpec, Plan, ShapeClass};
+use pysiglib::kernel::scheme::cell_cost;
+use pysiglib::kernel::{
+    resolve_target_eps, try_gram_vjp_with_lanes, try_sig_kernel, try_sig_kernel_vjp,
+    KernelOptions, Scheme,
+};
+use pysiglib::transforms::Transform;
+use pysiglib::util::rng::Rng;
+use pysiglib::{Path, PathBatch};
+
+/// Relative error of `k` against `reference` (the accuracy bench's metric).
+fn rel_err(k: f64, reference: f64) -> f64 {
+    (k - reference).abs() / reference.abs().max(1.0)
+}
+
+fn kernel_at(x: &[f64], y: &[f64], lx: usize, ly: usize, d: usize, opts: KernelOptions) -> f64 {
+    let xp = Path::new(x, lx, d).unwrap();
+    let yp = Path::new(y, ly, d).unwrap();
+    try_sig_kernel(xp, yp, &opts).unwrap()
+}
+
+/// Order-2 and order-1 walk the same dyadic ladder toward the same limit:
+/// errors against a λ = 6 reference shrink with λ for both schemes, the
+/// Richardson combination is no worse than order-1 at matched λ, and at
+/// λ = (0, 0) the two schemes coincide bitwise (the degenerate guard).
+#[test]
+fn both_schemes_converge_to_the_same_limit() {
+    let mut rng = Rng::new(941);
+    let d = 2;
+    for len in [12usize, 20] {
+        let x = rng.brownian_path(len, d, 0.3);
+        let y = rng.brownian_path(len + 3, d, 0.3);
+        let at = |scheme: Scheme, lam: u32| {
+            kernel_at(
+                &x,
+                &y,
+                len,
+                len + 3,
+                d,
+                KernelOptions::default().dyadic(lam, lam).scheme(scheme),
+            )
+        };
+        let reference = at(Scheme::Order1, 6);
+        let e1 = |lam| rel_err(at(Scheme::Order1, lam), reference);
+        let e2 = |lam| rel_err(at(Scheme::Order2, lam), reference);
+        // Convergence: both schemes tighten by λ = 4 relative to λ = 1.
+        assert!(e1(4) < e1(1), "order1 not converging: {} vs {}", e1(4), e1(1));
+        assert!(e2(4) < e2(1), "order2 not converging: {} vs {}", e2(4), e2(1));
+        // Same limit: both land close to the reference by λ = 5.
+        assert!(e1(5) < 5e-3, "order1 off the limit: {}", e1(5));
+        assert!(e2(5) < 5e-3, "order2 off the limit: {}", e2(5));
+        // Richardson is no worse than order-1 at matched λ.
+        for lam in [2u32, 3, 4] {
+            assert!(
+                e2(lam) <= e1(lam) + 1e-12,
+                "order2@{lam} = {} worse than order1@{lam} = {}",
+                e2(lam),
+                e1(lam)
+            );
+        }
+        // λ = (0, 0) is degenerate: the coarse grid coincides with the fine
+        // one, so order-2 must return the order-1 value exactly.
+        assert_eq!(at(Scheme::Order2, 0), at(Scheme::Order1, 0));
+    }
+}
+
+/// Lane widths 0 / 4 / 8 must reproduce the scalar Gram bitwise under both
+/// schemes (forward and weighted backward): lane batching is pure schedule,
+/// independent of the Goursat discretisation order.
+#[test]
+fn lanes_bitmatch_scalar_for_every_width_and_scheme() {
+    let mut rng = Rng::new(942);
+    let d = 2;
+    let xu = rng.brownian_batch(9, 7, d, 0.4);
+    let yu = rng.brownian_batch(11, 6, d, 0.4);
+    let xb = PathBatch::uniform(&xu, 9, 7, d).unwrap();
+    let yb = PathBatch::uniform(&yu, 11, 6, d).unwrap();
+    let mut w = vec![0.0; 9 * 11];
+    rng.fill_normal(&mut w);
+    let opts_matrix = [
+        KernelOptions::default().dyadic(1, 1).scheme(Scheme::Order1),
+        KernelOptions::default().scheme(Scheme::Order2), // degenerate λ = (0, 0)
+        KernelOptions::default().dyadic(1, 1).scheme(Scheme::Order2),
+        KernelOptions::default().dyadic(2, 1).scheme(Scheme::Order2),
+        KernelOptions::default()
+            .dyadic(1, 1)
+            .scheme(Scheme::Order2)
+            .transform(Transform::TimeAug),
+    ];
+    for opts in opts_matrix {
+        let shape = ShapeClass::for_pair(&xb, &yb);
+        let scalar = Plan::compile_forward(OpSpec::Gram(opts), shape)
+            .unwrap()
+            .with_lane_width(0);
+        let want = scalar.execute_pair(&xb, &yb).unwrap().into_values();
+        let want_grad = try_gram_vjp_with_lanes(&xb, &yb, &w, &opts, 0).unwrap();
+        for width in [4usize, 8] {
+            let plan = Plan::compile_forward(OpSpec::Gram(opts), shape)
+                .unwrap()
+                .with_lane_width(width);
+            let got = plan.execute_pair(&xb, &yb).unwrap().into_values();
+            assert_eq!(got, want, "forward width={width} opts={opts:?}");
+            let got_grad = try_gram_vjp_with_lanes(&xb, &yb, &w, &opts, width).unwrap();
+            assert_eq!(got_grad, want_grad, "backward width={width} opts={opts:?}");
+        }
+    }
+}
+
+/// The order-2 backward (fine + coarse adjoint sweeps with Richardson
+/// seeds) must match central finite differences of the order-2 forward in
+/// every path coordinate.
+#[test]
+fn order2_backward_matches_finite_differences() {
+    let mut rng = Rng::new(943);
+    let d = 2;
+    let (lx, ly) = (7usize, 6usize);
+    let x = rng.brownian_path(lx, d, 0.4);
+    let y = rng.brownian_path(ly, d, 0.4);
+    let opts = KernelOptions::default().dyadic(2, 1).scheme(Scheme::Order2);
+    let gout = 1.3;
+    let xp = Path::new(&x, lx, d).unwrap();
+    let yp = Path::new(&y, ly, d).unwrap();
+    let (gx, gy) = try_sig_kernel_vjp(xp, yp, &opts, gout).unwrap();
+    let eps = 1e-6;
+    for i in 0..lx * d {
+        let mut xp1 = x.clone();
+        let mut xm1 = x.clone();
+        xp1[i] += eps;
+        xm1[i] -= eps;
+        let fd = gout * (kernel_at(&xp1, &y, lx, ly, d, opts) - kernel_at(&xm1, &y, lx, ly, d, opts))
+            / (2.0 * eps);
+        assert!(
+            (fd - gx[i]).abs() < 1e-4 * (1.0 + fd.abs()),
+            "x[{i}]: fd={fd} vjp={}",
+            gx[i]
+        );
+    }
+    for j in 0..ly * d {
+        let mut yp1 = y.clone();
+        let mut ym1 = y.clone();
+        yp1[j] += eps;
+        ym1[j] -= eps;
+        let fd = gout * (kernel_at(&x, &yp1, lx, ly, d, opts) - kernel_at(&x, &ym1, lx, ly, d, opts))
+            / (2.0 * eps);
+        assert!(
+            (fd - gy[j]).abs() < 1e-4 * (1.0 + fd.abs()),
+            "y[{j}]: fd={fd} vjp={}",
+            gy[j]
+        );
+    }
+}
+
+/// ε-resolution is deterministic and idempotent, and tightening ε can only
+/// move the choice to an equal-or-costlier (scheme, λ): the feasible set
+/// shrinks as ε falls, and candidates are ranked cheapest-first.
+#[test]
+fn target_eps_resolution_is_monotone_and_idempotent() {
+    let mut rng = Rng::new(944);
+    let d = 2;
+    let xu = rng.brownian_batch(6, 14, d, 0.3);
+    let yu = rng.brownian_batch(5, 12, d, 0.3);
+    let xb = PathBatch::uniform(&xu, 6, 14, d).unwrap();
+    let yb = PathBatch::uniform(&yu, 5, 12, d).unwrap();
+    let mut last_cost = 0u128;
+    for eps in [0.5, 0.1, 0.02, 5e-3, 1e-3, 1e-4, 1e-5, 1e-6] {
+        let opts = KernelOptions::default().target_eps(eps);
+        let resolved = resolve_target_eps(&xb, &yb, &opts).unwrap();
+        // Deterministic: a second resolution of the same request agrees.
+        assert_eq!(resolved, resolve_target_eps(&xb, &yb, &opts).unwrap());
+        // Idempotent: the resolved options carry no target, so resolving
+        // them again is the identity.
+        assert_eq!(resolved.target_eps.get(), None);
+        assert_eq!(resolved, resolve_target_eps(&xb, &yb, &resolved).unwrap());
+        let cost = cell_cost(resolved.scheme, resolved.dyadic_x, resolved.dyadic_y);
+        assert!(
+            cost >= last_cost,
+            "eps={eps}: cost {cost} fell below the looser target's {last_cost}"
+        );
+        last_cost = cost;
+    }
+}
+
+/// Hostile ε values (zero, negative, NaN, ∞) must surface as typed errors
+/// at plan compile — on the adaptive-capable specs — and the fixed-grid
+/// specs must refuse any target at all rather than silently ignore it.
+#[test]
+fn hostile_target_eps_is_rejected_at_plan_compile() {
+    let mut rng = Rng::new(945);
+    let d = 2;
+    let xu = rng.brownian_batch(3, 6, d, 0.3);
+    let xb = PathBatch::uniform(&xu, 3, 6, d).unwrap();
+    let shape = ShapeClass::for_pair(&xb, &xb);
+    for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let opts = KernelOptions::default().target_eps(bad);
+        for spec in [OpSpec::SigKernel(opts), OpSpec::Gram(opts)] {
+            assert!(
+                Plan::compile_forward(spec, shape).is_err(),
+                "eps={bad} accepted by {spec:?}"
+            );
+        }
+    }
+    // A well-formed target still compiles on the adaptive specs.
+    let good = KernelOptions::default().target_eps(1e-3);
+    assert!(Plan::compile_forward(OpSpec::SigKernel(good), shape).is_ok());
+    assert!(Plan::compile_forward(OpSpec::Gram(good), shape).is_ok());
+}
