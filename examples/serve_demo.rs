@@ -33,6 +33,7 @@ fn main() {
         BatcherConfig {
             max_batch: 64,
             max_wait: Duration::from_micros(800),
+            ..BatcherConfig::default()
         },
     ));
     let handle = serve("127.0.0.1:0", batcher.clone()).expect("bind");

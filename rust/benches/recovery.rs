@@ -1,0 +1,62 @@
+//! Restart latency: restoring a corpus registry from a snapshot vs
+//! rebuilding it cold. A cold start pays path registration plus the full
+//! O(n²) corpus self-Gram on the first MMD² query; a restore reads the
+//! snapshot's serialized exact cache (and low-rank features when present)
+//! and answers the same query warm. The derived `restore_vs_cold_x` row
+//! records the headline ratio (restore is expected ≥5× faster than cold at
+//! n = 256) into `bench_results/BENCH_recovery.json`.
+
+use pysiglib::bench::{bench_runs, Suite};
+use pysiglib::corpus::CorpusRegistry;
+use pysiglib::kernel::KernelOptions;
+use pysiglib::util::rng::Rng;
+use pysiglib::PathBatch;
+
+fn main() {
+    let runs = bench_runs(3);
+    let (l, d, q) = (16usize, 3usize, 16usize);
+    let opts = KernelOptions::default();
+    let dir = std::env::temp_dir().join(format!("pysiglib-bench-recovery-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench snapshot dir");
+    let mut suite = Suite::new("recovery");
+    for n in [64usize, 256] {
+        let tag = format!("n{n}");
+        let mut rng = Rng::new(95);
+        let corpus = rng.brownian_batch(n, l, d, 0.3);
+        let query = rng.brownian_batch(q, l, d, 0.35);
+        let qb = PathBatch::uniform(&query, q, l, d).unwrap();
+
+        // Cold: register + first query (builds the n×n self-Gram).
+        suite.time(&format!("{tag}/cold"), runs, || {
+            let reg = CorpusRegistry::new();
+            let cb = PathBatch::uniform(&corpus, n, l, d).unwrap();
+            let id = reg.register(&cb).unwrap();
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, None).unwrap());
+        });
+
+        // Snapshot a warmed registry once; restoring is read-only, so one
+        // file serves every timed run.
+        let file = dir.join(format!("{tag}.snapshot"));
+        {
+            let reg = CorpusRegistry::new();
+            let cb = PathBatch::uniform(&corpus, n, l, d).unwrap();
+            let id = reg.register(&cb).unwrap();
+            reg.mmd2_query(id, &qb, &opts, None).unwrap();
+            reg.snapshot_to(&file).unwrap();
+        }
+
+        // Restore: deserialize the corpus + its exact cache, answer warm.
+        suite.time(&format!("{tag}/restore"), runs, || {
+            let reg = CorpusRegistry::restore_from(&file).unwrap();
+            let id = reg.ids().pop().expect("snapshot holds one corpus");
+            std::hint::black_box(reg.mmd2_query(id, &qb, &opts, None).unwrap());
+        });
+
+        if let (Some(cold), Some(restore)) =
+            (suite.get(&format!("{tag}/cold")), suite.get(&format!("{tag}/restore")))
+        {
+            suite.record(&format!("{tag}/restore_vs_cold_x"), cold / restore);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

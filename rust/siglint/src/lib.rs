@@ -67,6 +67,11 @@ pub const RULES: &[(&str, &str)] = &[
         "every Scheme variant dispatched in the scalar, lane and backward Goursat dispatchers",
     ),
     ("no_unsafe", "tests and benches stay unsafe-free (library unsafe is reviewed in-tree)"),
+    (
+        "failpoint_release_free",
+        "failpoint arming calls live in test code only — fault injection stays unreachable \
+         in release builds",
+    ),
 ];
 
 /// Lint a set of files; returns findings sorted by (path, line).
@@ -85,6 +90,7 @@ pub fn lint(files: &[SourceFile]) -> Vec<Finding> {
         rules::env_discipline(&ctx, &mut raw);
         rules::atomics_hygiene(&ctx, &mut raw);
         rules::no_unsafe(&ctx, &mut raw);
+        rules::failpoint_release_free(&ctx, &mut raw);
     }
     rules::wire_exhaustive(&scrubbed, &mut raw);
     rules::scheme_exhaustive(&scrubbed, &mut raw);

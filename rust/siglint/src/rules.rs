@@ -100,6 +100,7 @@ fn panic_scope(path: &str) -> bool {
     path.starts_with("src/coordinator/")
         || path == "src/corpus/registry.rs"
         || path == "src/corpus/stream.rs"
+        || path == "src/corpus/persist.rs"
         || path == "src/kernel/border.rs"
 }
 
@@ -842,5 +843,34 @@ pub fn no_unsafe(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
             rule: "no_unsafe",
             message: "`unsafe` in tests/benches — keep unsafety inside the library".to_string(),
         });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: failpoint_release_free
+// ---------------------------------------------------------------------------
+
+/// Failpoint *arming* (`failpoint::arm` / `failpoint::arm_times`) is a test
+/// facility: armed sites change control flow, so an arming call reachable
+/// from non-test code would let fault injection fire in production. The
+/// `failpoint!` macro and `failpoint::eval` stay legal everywhere — they are
+/// inert unless something arms them. The facility's own module is exempt
+/// (it defines `arm`), as are integration tests under `tests/`.
+pub fn failpoint_release_free(ctx: &FileCtx<'_>, findings: &mut Vec<Finding>) {
+    if ctx.path == "src/util/failpoint.rs" || ctx.path.starts_with("tests/") {
+        return;
+    }
+    let sc = ctx.scrubbed;
+    for (at, _) in sc.code.match_indices("failpoint::arm") {
+        if !sc.in_test(at) {
+            findings.push(Finding {
+                path: ctx.path.to_string(),
+                line: sc.line_of(at),
+                rule: "failpoint_release_free",
+                message: "failpoint arming outside test code — fault injection must stay \
+                          unreachable in release builds"
+                    .to_string(),
+            });
+        }
     }
 }

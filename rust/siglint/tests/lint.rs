@@ -204,11 +204,36 @@ fn a_missing_designated_backward_fn_is_itself_a_finding() {
 
 #[test]
 fn the_streaming_files_are_in_the_panic_freedom_scope() {
-    for path in ["src/corpus/stream.rs", "src/kernel/border.rs"] {
+    for path in [
+        "src/corpus/stream.rs",
+        "src/kernel/border.rs",
+        "src/corpus/persist.rs",
+    ] {
         let f = one(path, "pub fn f(v: &[f64]) -> f64 {\n    v[0]\n}\n");
         only_rule(&f, "panic_freedom");
         assert_eq!(f.len(), 1, "{path}: {f:?}");
     }
+}
+
+#[test]
+fn failpoint_release_free_fixture() {
+    let f = one(
+        "src/engine/fault.rs",
+        include_str!("fixtures/failpoint_release_free.rs"),
+    );
+    only_rule(&f, "failpoint_release_free");
+    // Only the non-test arming call; `eval` and the in-test arming pass.
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].line, 6, "{f:?}");
+}
+
+#[test]
+fn the_failpoint_module_itself_may_define_arming() {
+    let f = one(
+        "src/util/failpoint.rs",
+        "pub fn arm(name: &str, v: u64) {\n    super::failpoint::arm_impl(name, v);\n}\n",
+    );
+    assert!(f.is_empty(), "{f:?}");
 }
 
 #[test]

@@ -64,8 +64,17 @@ COMMANDS:
              extends a reference path in place and prints the Goursat
              border-strip occupancy (O(L_new·L) cells, not O(L²)); with
              --addr the windows are scored over the wire instead
+             corpus snapshot --addr A  ask the server to snapshot every
+             registered corpus (paths + warm derived state) to its
+             configured --snapshot-dir; prints the number written
   serve      run the serving coordinator
              --bind ADDR --max-batch N --max-wait-us U --pjrt --config FILE
+             --queue-cap N --global-cap N  bounded admission: excess load is
+                        shed with a typed Overloaded + retry hint
+             --deadline-us U  per-request deadline (0 = none); expired work
+                        is answered DeadlineExceeded, never computed
+             --snapshot-dir D  restore corpora from D on start, snapshot to
+                        D on drain (and on `corpus snapshot`)
   client     demo client: fires requests at a running server
              --addr ADDR --requests N --len L --dim D
   artifacts  list + compile + smoke-run the AOT artifacts  --dir PATH
@@ -626,6 +635,11 @@ fn cmd_corpus(pos: &[String], flags: &HashMap<String, String>) -> i32 {
                 .map_err(|e| e.to_string())
                 .and_then(|r| r)
                 .map(|total| format!("appended {batch} paths to id={id}; total={total}")),
+            "snapshot" => client
+                .snapshot_corpus()
+                .map_err(|e| e.to_string())
+                .and_then(|r| r)
+                .map(|n| format!("snapshotted {n} corpora to the server's snapshot dir")),
             "mmd" => {
                 let repeat = flag_usize(flags, "repeat", 1).max(1);
                 let t = std::time::Instant::now();
@@ -650,7 +664,8 @@ fn cmd_corpus(pos: &[String], flags: &HashMap<String, String>) -> i32 {
             }
             other => {
                 eprintln!(
-                    "unknown corpus subcommand '{other}' (expected register|append|mmd|watch)"
+                    "unknown corpus subcommand '{other}' \
+                     (expected register|append|mmd|snapshot|watch)"
                 );
                 return 2;
             }
@@ -925,6 +940,18 @@ fn build_config(flags: &HashMap<String, String>) -> Result<Config, String> {
     if let Some(v) = flags.get("max-wait-us") {
         cfg.set("max_wait_us", v).map_err(|e| e.to_string())?;
     }
+    if let Some(v) = flags.get("queue-cap") {
+        cfg.set("queue_cap", v).map_err(|e| e.to_string())?;
+    }
+    if let Some(v) = flags.get("global-cap") {
+        cfg.set("global_cap", v).map_err(|e| e.to_string())?;
+    }
+    if let Some(v) = flags.get("deadline-us") {
+        cfg.set("deadline_us", v).map_err(|e| e.to_string())?;
+    }
+    if let Some(v) = flags.get("snapshot-dir") {
+        cfg.snapshot_dir = v.clone();
+    }
     if flags.contains_key("pjrt") {
         cfg.use_pjrt = true;
     }
@@ -942,7 +969,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
-    let router = if cfg.use_pjrt {
+    let mut router = if cfg.use_pjrt {
         match crate::runtime::RuntimeHandle::spawn(&cfg.artifacts_dir) {
             Ok(rt) => {
                 println!("PJRT runtime on {} ({} artifacts)", rt.platform(), rt.manifest().len());
@@ -956,11 +983,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     } else {
         Router::native_only()
     };
+    if !cfg.snapshot_dir.is_empty() {
+        router = router.with_snapshot_dir(std::path::PathBuf::from(&cfg.snapshot_dir));
+        match router.restore_corpora() {
+            Ok(0) => {}
+            Ok(n) => println!("restored {n} corpora from {}", cfg.snapshot_dir),
+            Err(e) => eprintln!("warning: corpus snapshot not restored ({e}); starting cold"),
+        }
+    }
     let batcher = Arc::new(Batcher::start(
         Arc::new(router),
         BatcherConfig {
             max_batch: cfg.max_batch,
             max_wait: cfg.max_wait,
+            queue_cap: cfg.queue_cap,
+            global_cap: cfg.global_cap,
+            deadline: cfg.deadline,
         },
     ));
     let handle = match serve(cfg.bind.as_str(), batcher.clone()) {

@@ -61,6 +61,17 @@ pub struct Config {
     pub max_batch: usize,
     /// Dynamic batcher: flush a group when its head has waited this long.
     pub max_wait: Duration,
+    /// Dynamic batcher: admission cap per shape group; requests beyond it
+    /// are shed with a typed `Overloaded` response.
+    pub queue_cap: usize,
+    /// Dynamic batcher: admission cap across all groups together.
+    pub global_cap: usize,
+    /// Per-request deadline, measured from enqueue (`None` = no deadline).
+    /// Work past its deadline is answered `DeadlineExceeded`, not computed.
+    pub deadline: Option<Duration>,
+    /// Directory for corpus snapshots (empty = persistence disabled). The
+    /// server snapshots here on drain and restores from here on start.
+    pub snapshot_dir: String,
     /// TCP bind address for `serve`.
     pub bind: String,
     /// Artifact directory for the PJRT runtime.
@@ -79,6 +90,10 @@ impl Default for Config {
             threads: 0,
             max_batch: 128,
             max_wait: Duration::from_millis(2),
+            queue_cap: 4096,
+            global_cap: 65536,
+            deadline: None,
+            snapshot_dir: String::new(),
             bind: "127.0.0.1:7462".to_string(),
             artifacts_dir: "artifacts".to_string(),
             use_pjrt: false,
@@ -137,6 +152,10 @@ impl Config {
             ("PYSIGLIB_THREADS", "threads"),
             ("PYSIGLIB_MAX_BATCH", "max_batch"),
             ("PYSIGLIB_MAX_WAIT_US", "max_wait_us"),
+            ("PYSIGLIB_QUEUE_CAP", "queue_cap"),
+            ("PYSIGLIB_GLOBAL_QUEUE_CAP", "global_cap"),
+            ("PYSIGLIB_DEADLINE_US", "deadline_us"),
+            ("PYSIGLIB_SNAPSHOT_DIR", "snapshot_dir"),
             ("PYSIGLIB_BIND", "bind"),
             ("PYSIGLIB_ARTIFACTS", "artifacts_dir"),
             ("PYSIGLIB_USE_PJRT", "use_pjrt"),
@@ -167,6 +186,24 @@ impl Config {
                 let us: u64 = value.parse().map_err(|_| bad("not an integer"))?;
                 self.max_wait = Duration::from_micros(us);
             }
+            "queue_cap" => {
+                self.queue_cap = value.parse().map_err(|_| bad("not an integer"))?;
+                if self.queue_cap == 0 {
+                    return Err(bad("must be >= 1"));
+                }
+            }
+            "global_cap" => {
+                self.global_cap = value.parse().map_err(|_| bad("not an integer"))?;
+                if self.global_cap == 0 {
+                    return Err(bad("must be >= 1"));
+                }
+            }
+            "deadline_us" => {
+                let us: u64 = value.parse().map_err(|_| bad("not an integer"))?;
+                // 0 disables the deadline rather than rejecting everything.
+                self.deadline = (us > 0).then(|| Duration::from_micros(us));
+            }
+            "snapshot_dir" => self.snapshot_dir = value.to_string(),
             "bind" => self.bind = value.to_string(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "use_pjrt" => {
@@ -229,5 +266,21 @@ mod tests {
         let mut c = Config::default();
         c.set("max_wait_us", "1500").unwrap();
         assert_eq!(c.max_wait, Duration::from_micros(1500));
+    }
+
+    #[test]
+    fn admission_and_snapshot_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        c.apply_file_text("queue_cap=8\nglobal_cap=32\ndeadline_us=2500\nsnapshot_dir=/tmp/snaps\n")
+            .unwrap();
+        assert_eq!(c.queue_cap, 8);
+        assert_eq!(c.global_cap, 32);
+        assert_eq!(c.deadline, Some(Duration::from_micros(2500)));
+        assert_eq!(c.snapshot_dir, "/tmp/snaps");
+        // 0 disables the deadline instead of instantly expiring everything.
+        c.set("deadline_us", "0").unwrap();
+        assert_eq!(c.deadline, None);
+        assert!(c.set("queue_cap", "0").is_err());
+        assert!(c.set("global_cap", "x").is_err());
     }
 }

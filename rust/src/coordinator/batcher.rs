@@ -7,8 +7,22 @@
 //! The same policy (batch by shape, bound queueing delay) is what dynamic
 //! batchers in LLM inference routers do; here the "model" is the signature /
 //! signature-kernel computation.
+//!
+//! Admission is bounded, not best-effort. Each group queue holds at most
+//! [`BatcherConfig::queue_cap`] requests and the batcher as a whole at most
+//! [`BatcherConfig::global_cap`]; a request that would exceed either is
+//! answered immediately with [`Response::Overloaded`] carrying a retry
+//! hint, so overload degrades to fast rejections instead of unbounded
+//! memory growth and collapsing tail latency. An optional per-request
+//! [`deadline`](BatcherConfig::deadline) is enforced twice: at enqueue, and
+//! again when the group flushes — a request whose deadline passed while it
+//! queued gets [`Response::DeadlineExceeded`] and is *never* computed.
+//! [`Batcher::drain`] flips the admission gate **before** touching the
+//! queues (late arrivals get [`Response::ShuttingDown`], none are
+//! stranded), then flushes everything already admitted.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -22,6 +36,15 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Flush a group when its oldest item has waited this long.
     pub max_wait: Duration,
+    /// Admission cap per shape group; an arriving request that would make a
+    /// group exceed this is shed with [`Response::Overloaded`].
+    pub queue_cap: usize,
+    /// Admission cap across all groups together.
+    pub global_cap: usize,
+    /// Per-request deadline, measured from enqueue. `None` disables the
+    /// check. A request past its deadline at flush time is answered with
+    /// [`Response::DeadlineExceeded`] instead of being computed.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for BatcherConfig {
@@ -29,6 +52,9 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_batch: 128,
             max_wait: Duration::from_millis(2),
+            queue_cap: 4096,
+            global_cap: 65536,
+            deadline: None,
         }
     }
 }
@@ -50,6 +76,12 @@ struct Shared {
     queues: Mutex<HashMap<GroupKey, Vec<Pending>>>,
     wake: Condvar,
     shutdown: Mutex<bool>,
+    /// Admission gate: flipped off *before* the final flush on drain, so a
+    /// request observes either an open gate (and is flushed) or a typed
+    /// shutdown rejection — never a silently dropped queue entry.
+    accepting: AtomicBool,
+    /// Requests admitted and not yet flushed, across all groups.
+    depth: AtomicU64,
 }
 
 /// The dynamic batcher. Submissions are non-blocking; a background flusher
@@ -69,6 +101,8 @@ impl Batcher {
             queues: Mutex::new(HashMap::new()),
             wake: Condvar::new(),
             shutdown: Mutex::new(false),
+            accepting: AtomicBool::new(true),
+            depth: AtomicU64::new(0),
         });
         let metrics = Arc::new(Metrics::new());
         let flusher = {
@@ -86,22 +120,41 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a request. The response arrives on `req.reply`.
+    /// Enqueue a request. The response arrives on `req.reply` — immediately
+    /// for admission rejections ([`Response::ShuttingDown`],
+    /// [`Response::Overloaded`], [`Response::DeadlineExceeded`]), after the
+    /// group flushes otherwise.
     pub fn submit(&self, req: Request) {
         self.metrics.record_request();
         self.metrics.record_op(req.op.code());
+        if !self.shared.accepting.load(Ordering::Acquire) {
+            self.shed(req, Response::ShuttingDown);
+            return;
+        }
+        let enqueued = Instant::now();
+        if past_deadline(enqueued, self.config.deadline) {
+            self.shed(req, Response::DeadlineExceeded);
+            return;
+        }
         let key = GroupKey {
             op: req.op,
             len: req.len,
             dim: req.dim,
         };
+        let admit_fail = crate::failpoint!("batcher.enqueue_full").is_some();
         let flush_now = {
             let mut queues = lock_unpoisoned(&self.shared.queues);
             let q = queues.entry(key).or_default();
-            q.push(Pending {
-                req,
-                enqueued: Instant::now(),
-            });
+            let global = self.shared.depth.load(Ordering::Relaxed) as usize;
+            let full = q.len() >= self.config.queue_cap || global >= self.config.global_cap;
+            if admit_fail || full {
+                drop(queues);
+                self.shed(req, self.overloaded());
+                return;
+            }
+            q.push(Pending { req, enqueued });
+            let depth = self.shared.depth.fetch_add(1, Ordering::Relaxed) + 1;
+            self.metrics.set_queue_depth(depth);
             q.len() >= self.config.max_batch
         };
         if flush_now {
@@ -112,11 +165,31 @@ impl Batcher {
                 queues.remove(&key)
             };
             if let Some(batch) = batch {
-                execute_group(&self.router, &self.metrics, key, batch);
+                self.settle_depth(batch.len());
+                execute_group(&self.router, &self.metrics, &self.config, key, batch);
             }
         } else {
             self.shared.wake.notify_one();
         }
+    }
+
+    /// Answer `req` with an admission rejection, counting it as shed.
+    fn shed(&self, req: Request, resp: Response) {
+        self.metrics.record_shed();
+        self.metrics.record_response(0, 0, true);
+        let _ = req.reply.send(resp);
+    }
+
+    fn overloaded(&self) -> Response {
+        Response::Overloaded {
+            retry_after_ms: (self.config.max_wait.as_millis() as u64).max(1),
+        }
+    }
+
+    fn settle_depth(&self, flushed: usize) {
+        let before = self.shared.depth.fetch_sub(flushed as u64, Ordering::Relaxed);
+        self.metrics
+            .set_queue_depth(before.saturating_sub(flushed as u64));
     }
 
     /// Execute a ragged-batch frame synchronously on the compute backend.
@@ -146,20 +219,50 @@ impl Batcher {
         result
     }
 
-    /// Flush everything immediately (used by tests and shutdown).
+    /// Whether the batcher is still admitting work.
+    pub fn accepting(&self) -> bool {
+        self.shared.accepting.load(Ordering::Acquire)
+    }
+
+    /// The router this batcher executes on (the server uses it to snapshot
+    /// corpora during shutdown, after `drain`).
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Stop admitting and flush everything already admitted. The gate flips
+    /// **first** (with the queue lock held, so no submit can slip between
+    /// the gate check and its enqueue), which closes the shutdown race
+    /// where requests enqueued during the final flush were stranded: a late
+    /// arrival now gets [`Response::ShuttingDown`] instead of silence.
+    pub fn drain(&self) {
+        {
+            let _queues = lock_unpoisoned(&self.shared.queues);
+            self.shared.accepting.store(false, Ordering::Release);
+        }
+        self.flush_all();
+    }
+
+    /// Flush everything immediately (used by tests, drain and shutdown).
     pub fn flush_all(&self) {
         let drained: Vec<(GroupKey, Vec<Pending>)> = {
             let mut queues = lock_unpoisoned(&self.shared.queues);
             queues.drain().collect()
         };
         for (key, batch) in drained {
-            execute_group(&self.router, &self.metrics, key, batch);
+            self.settle_depth(batch.len());
+            execute_group(&self.router, &self.metrics, &self.config, key, batch);
         }
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
+        // Same ordering as `drain`: close the gate before the final flush.
+        {
+            let _queues = lock_unpoisoned(&self.shared.queues);
+            self.shared.accepting.store(false, Ordering::Release);
+        }
         *lock_unpoisoned(&self.shared.shutdown) = true;
         self.shared.wake.notify_all();
         if let Some(h) = self.flusher.take() {
@@ -167,6 +270,16 @@ impl Drop for Batcher {
         }
         self.flush_all();
     }
+}
+
+/// Deadline check, shared by the enqueue and flush sides. The
+/// `batcher.flush_late` failpoint forces lateness so tests can drive the
+/// expiry path without real clock pressure.
+fn past_deadline(enqueued: Instant, deadline: Option<Duration>) -> bool {
+    if crate::failpoint!("batcher.flush_late").is_some() {
+        return true;
+    }
+    deadline.is_some_and(|d| enqueued.elapsed() >= d)
 }
 
 fn flusher_loop(
@@ -195,6 +308,8 @@ fn flusher_loop(
                 .collect();
             for k in keys {
                 if let Some(q) = queues.remove(&k) {
+                    let before = shared.depth.fetch_sub(q.len() as u64, Ordering::Relaxed);
+                    metrics.set_queue_depth(before.saturating_sub(q.len() as u64));
                     due.push((k, q));
                 }
             }
@@ -218,25 +333,47 @@ fn flusher_loop(
             }
         }
         for (key, batch) in due {
-            execute_group(&router, &metrics, key, batch);
+            execute_group(&router, &metrics, &config, key, batch);
         }
     }
 }
 
 /// Run one flushed group on the compute backend and fan results back.
-fn execute_group(router: &Router, metrics: &Metrics, key: GroupKey, batch: Vec<Pending>) {
-    metrics.record_batch(batch.len());
+/// Requests whose deadline expired while queued are answered with
+/// [`Response::DeadlineExceeded`] up front and excluded from the batch —
+/// past-deadline work is shed, never silently computed.
+fn execute_group(
+    router: &Router,
+    metrics: &Metrics,
+    config: &BatcherConfig,
+    key: GroupKey,
+    batch: Vec<Pending>,
+) {
+    let mut live = Vec::with_capacity(batch.len());
+    for p in batch {
+        if past_deadline(p.enqueued, config.deadline) {
+            metrics.record_shed();
+            metrics.record_response(0, 0, true);
+            let _ = p.req.reply.send(Response::DeadlineExceeded);
+        } else {
+            live.push(p);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    metrics.record_batch(live.len());
     let started = Instant::now();
-    let queue_us: Vec<u64> = batch
+    let queue_us: Vec<u64> = live
         .iter()
         .map(|p| started.duration_since(p.enqueued).as_micros() as u64)
         .collect();
-    let reqs: Vec<&Request> = batch.iter().map(|p| &p.req).collect();
+    let reqs: Vec<&Request> = live.iter().map(|p| &p.req).collect();
     let results = router.execute_batch(key.op, key.len, key.dim, &reqs);
     metrics.set_plan_cache(router.plan_cache_stats());
     metrics.set_lanes(crate::kernel::lanes::stats());
     let compute_us = started.elapsed().as_micros() as u64;
-    for ((p, result), q_us) in batch.iter().zip(results).zip(queue_us) {
+    for ((p, result), q_us) in live.iter().zip(results).zip(queue_us) {
         let is_err = matches!(result, Response::Error(_));
         metrics.record_response(q_us + compute_us, q_us, is_err);
         let _ = p.req.reply.send(result);
@@ -248,6 +385,7 @@ mod tests {
     use super::*;
     use crate::coordinator::transform_to_u8;
     use crate::transforms::Transform;
+    use crate::util::failpoint;
     use crate::util::rng::Rng;
     use std::sync::mpsc;
 
@@ -277,14 +415,31 @@ mod tests {
         rx
     }
 
+    /// Config whose flusher never fires on its own — admission tests need
+    /// queues that sit still.
+    fn parked(queue_cap: usize, global_cap: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch: 1000,
+            max_wait: Duration::from_secs(30),
+            queue_cap,
+            global_cap,
+            deadline: None,
+        }
+    }
+
+    // Every test here holds `serial_guard`: the batcher contains failpoint
+    // sites, and an armed site would leak into a concurrently running test.
+
     #[test]
     fn every_request_gets_exactly_one_response() {
+        let _g = failpoint::serial_guard();
         let router = Arc::new(Router::native_only());
         let batcher = Batcher::start(
             router,
             BatcherConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
         );
         let op = Op::Signature {
@@ -297,7 +452,7 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(5)).expect("response");
             match resp {
                 Response::Values(v) => assert_eq!(v.len(), crate::sig::sig_length(2, 3)),
-                Response::Error(e) => panic!("unexpected error: {e}"),
+                other => panic!("unexpected response: {other:?}"),
             }
         }
         assert_eq!(
@@ -311,6 +466,7 @@ mod tests {
 
     #[test]
     fn different_shapes_batch_separately_but_all_complete() {
+        let _g = failpoint::serial_guard();
         let router = Arc::new(Router::native_only());
         let batcher = Batcher::start(router, BatcherConfig::default());
         let op = Op::SigKernel {
@@ -326,19 +482,21 @@ mod tests {
         for rx in [rx1, rx2] {
             match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
                 Response::Values(v) => assert_eq!(v.len(), 1),
-                Response::Error(e) => panic!("{e}"),
+                other => panic!("{other:?}"),
             }
         }
     }
 
     #[test]
     fn timeout_flush_fires_without_filling_batch() {
+        let _g = failpoint::serial_guard();
         let router = Arc::new(Router::native_only());
         let batcher = Batcher::start(
             router,
             BatcherConfig {
                 max_batch: 1000,
                 max_wait: Duration::from_millis(5),
+                ..BatcherConfig::default()
             },
         );
         let op = Op::Signature {
@@ -354,12 +512,14 @@ mod tests {
 
     #[test]
     fn batch_results_match_direct_computation() {
+        let _g = failpoint::serial_guard();
         let router = Arc::new(Router::native_only());
         let batcher = Batcher::start(
             router,
             BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
         );
         let op = Op::Signature {
@@ -389,8 +549,176 @@ mod tests {
                     let want = crate::sig::sig(p, 9, 2, 4);
                     assert!(crate::util::linalg::max_abs_diff(&v, &want) < 1e-12);
                 }
-                Response::Error(e) => panic!("{e}"),
+                other => panic!("{other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn full_group_queue_sheds_with_a_retry_hint() {
+        let _g = failpoint::serial_guard();
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(router, parked(2, 1000));
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(5);
+        let rx1 = submit_one(&batcher, op, 6, 2, &mut rng);
+        let rx2 = submit_one(&batcher, op, 6, 2, &mut rng);
+        let rx3 = submit_one(&batcher, op, 6, 2, &mut rng);
+        match rx3.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Response::Overloaded { retry_after_ms } => assert!(retry_after_ms >= 1),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(
+            batcher
+                .metrics
+                .shed_total
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        assert_eq!(
+            batcher
+                .metrics
+                .queue_depth
+                .load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
+        batcher.flush_all();
+        assert_eq!(
+            batcher
+                .metrics
+                .queue_depth
+                .load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
+        for rx in [rx1, rx2] {
+            assert!(matches!(
+                rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+                Response::Values(_)
+            ));
+        }
+    }
+
+    #[test]
+    fn global_cap_sheds_across_groups() {
+        let _g = failpoint::serial_guard();
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(router, parked(1000, 2));
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(6);
+        let _rx1 = submit_one(&batcher, op, 6, 2, &mut rng);
+        let _rx2 = submit_one(&batcher, op, 7, 2, &mut rng);
+        // Third request targets a *fresh* group; only the global cap stops it.
+        let rx3 = submit_one(&batcher, op, 8, 2, &mut rng);
+        assert!(matches!(
+            rx3.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::Overloaded { .. }
+        ));
+        batcher.flush_all();
+    }
+
+    #[test]
+    fn enqueue_full_failpoint_forces_shedding() {
+        let _g = failpoint::serial_guard();
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(router, parked(1000, 1000));
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(7);
+        failpoint::arm_times("batcher.enqueue_full", 1, 1);
+        let rx = submit_one(&batcher, op, 6, 2, &mut rng);
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::Overloaded { .. }
+        ));
+        failpoint::disarm("batcher.enqueue_full");
+        let rx = submit_one(&batcher, op, 6, 2, &mut rng);
+        batcher.flush_all();
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::Values(_)
+        ));
+    }
+
+    #[test]
+    fn expired_requests_are_answered_not_computed() {
+        let _g = failpoint::serial_guard();
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(router, parked(1000, 1000));
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(8);
+        // Admitted with the failpoint quiet...
+        let rx = submit_one(&batcher, op, 6, 2, &mut rng);
+        // ...then expired at flush time.
+        failpoint::arm("batcher.flush_late", 1);
+        batcher.flush_all();
+        failpoint::disarm("batcher.flush_late");
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::DeadlineExceeded
+        ));
+        let m = &batcher.metrics;
+        assert_eq!(m.shed_total.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(
+            m.batches_total.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "an all-expired flush must not run a batch"
+        );
+    }
+
+    #[test]
+    fn zero_deadline_rejects_at_enqueue() {
+        let _g = failpoint::serial_guard();
+        let router = Arc::new(Router::native_only());
+        let mut cfg = parked(1000, 1000);
+        cfg.deadline = Some(Duration::ZERO);
+        let batcher = Batcher::start(router, cfg);
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(9);
+        let rx = submit_one(&batcher, op, 6, 2, &mut rng);
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::DeadlineExceeded
+        ));
+    }
+
+    #[test]
+    fn drain_flushes_admitted_work_and_rejects_late_arrivals() {
+        let _g = failpoint::serial_guard();
+        let router = Arc::new(Router::native_only());
+        let batcher = Batcher::start(router, parked(1000, 1000));
+        let op = Op::Signature {
+            depth: 2,
+            transform: 0,
+        };
+        let mut rng = Rng::new(10);
+        let admitted = submit_one(&batcher, op, 6, 2, &mut rng);
+        assert!(batcher.accepting());
+        batcher.drain();
+        assert!(!batcher.accepting());
+        // Admitted before the gate closed: flushed with a real answer.
+        assert!(matches!(
+            admitted.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::Values(_)
+        ));
+        // Arrived after: typed shutdown rejection, never stranded.
+        let late = submit_one(&batcher, op, 6, 2, &mut rng);
+        assert!(matches!(
+            late.recv_timeout(Duration::from_secs(5)).unwrap(),
+            Response::ShuttingDown
+        ));
     }
 }

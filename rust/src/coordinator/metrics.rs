@@ -12,6 +12,13 @@ pub struct Metrics {
     pub errors_total: AtomicU64,
     pub batches_total: AtomicU64,
     pub batched_items_total: AtomicU64,
+    /// Requests currently waiting in batcher queues (gauge, set by the
+    /// batcher on every enqueue/flush) and requests shed at admission or
+    /// expiry (counter: queue caps, drain rejections, missed deadlines).
+    /// Watch them as a pair — depth pinned at the cap plus a climbing shed
+    /// count is the saturation signature.
+    pub queue_depth: AtomicU64,
+    pub shed_total: AtomicU64,
     /// Sum of request latencies (µs) and max, for mean/max reporting.
     lat_sum_us: AtomicU64,
     lat_max_us: AtomicU64,
@@ -65,6 +72,8 @@ impl Default for Metrics {
             errors_total: AtomicU64::new(0),
             batches_total: AtomicU64::new(0),
             batched_items_total: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            shed_total: AtomicU64::new(0),
             lat_sum_us: AtomicU64::new(0),
             lat_max_us: AtomicU64::new(0),
             queue_sum_us: AtomicU64::new(0),
@@ -110,6 +119,16 @@ impl Metrics {
             .get((code as usize).wrapping_sub(1))
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
+    }
+
+    /// Gauge: requests currently queued in the batcher.
+    pub fn set_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Count one request shed without compute (overload, drain, deadline).
+    pub fn record_shed(&self) {
+        self.shed_total.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, items: usize) {
@@ -203,11 +222,13 @@ impl Metrics {
             .map(|c| format!("op{c}={}", self.op_count(c)))
             .collect();
         format!(
-            "requests={} responses={} errors={} batches={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={} corpus_warm={} corpus_cold={} tiles={} lane_groups={} lane_scalar={} vjp_groups={} vjp_scalar={} [{}]",
+            "requests={} responses={} errors={} batches={} queue_depth={} shed={} mean_batch={:.2} mean_latency_us={:.0} max_latency_us={} mean_queue_us={:.0} plan_hits={} plan_misses={} plan_evictions={} corpus_warm={} corpus_cold={} tiles={} lane_groups={} lane_scalar={} vjp_groups={} vjp_scalar={} [{}]",
             self.requests_total.load(Ordering::Relaxed),
             self.responses_total.load(Ordering::Relaxed),
             self.errors_total.load(Ordering::Relaxed),
             self.batches_total.load(Ordering::Relaxed),
+            self.queue_depth.load(Ordering::Relaxed),
+            self.shed_total.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.mean_latency_us(),
             self.max_latency_us(),
@@ -246,6 +267,21 @@ mod tests {
         assert_eq!(m.max_latency_us(), 300);
         assert_eq!(m.mean_queue_us(), 50.0);
         assert!(m.summary().contains("batches=1"));
+    }
+
+    #[test]
+    fn queue_depth_and_shed_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.set_queue_depth(17);
+        m.record_shed();
+        m.record_shed();
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 17);
+        assert_eq!(m.shed_total.load(Ordering::Relaxed), 2);
+        let s = m.summary();
+        assert!(s.contains("queue_depth=17"), "{s}");
+        assert!(s.contains("shed=2"), "{s}");
+        m.set_queue_depth(0);
+        assert!(m.summary().contains("queue_depth=0"));
     }
 
     #[test]

@@ -18,6 +18,16 @@
 //! [`CorpusRegistry`](crate::corpus::CorpusRegistry), which caches
 //! corpus-side Gram/feature state so warm re-queries pay only query-side
 //! cost (see [`corpus`](crate::corpus)).
+//!
+//! The batcher admits rather than accumulates: queues are bounded
+//! (per-group and globally), overload answers immediately with
+//! [`Response::Overloaded`] and a retry hint instead of queueing without
+//! limit, per-request deadlines are enforced at enqueue *and* at flush
+//! ([`Response::DeadlineExceeded`] — expired work is never computed), and
+//! shutdown drains: the server stops admitting
+//! ([`Response::ShuttingDown`]), flushes what it accepted, and snapshots
+//! registered corpora to disk (see
+//! [`corpus::persist`](crate::corpus::persist)) so a restart resumes warm.
 
 pub mod batcher;
 pub mod metrics;
@@ -28,8 +38,8 @@ pub mod wire;
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use router::Router;
-pub use server::{serve, Client};
-pub use wire::{Frame, RaggedFrame, RequestFrame};
+pub use server::{serve, Client, RetryPolicy, ServerHandle};
+pub use wire::{Frame, RaggedFrame, RequestFrame, WireResponse};
 
 use crate::transforms::Transform;
 
@@ -93,6 +103,12 @@ pub enum Op {
     /// (1..=10000; 10000 → uniform weights). Exact kernel only. Ragged
     /// frames only.
     Mmd2Window { id: u32, decay_bp: u32, transform: u8 },
+    /// Snapshot every registered corpus (paths + warm derived state) to the
+    /// server's configured snapshot path (see
+    /// [`Router::with_snapshot_dir`](router::Router::with_snapshot_dir));
+    /// responds with the number of corpora written. The frame carries no
+    /// paths. Ragged frames only.
+    SnapshotCorpus,
 }
 
 impl Op {
@@ -110,13 +126,14 @@ impl Op {
             Op::ExtendPath { .. } => 10,
             Op::EvictCorpus { .. } => 11,
             Op::Mmd2Window { .. } => 12,
+            Op::SnapshotCorpus => 13,
         }
     }
 }
 
 /// Number of wire op codes (codes are 1-based and dense) — sizes the
 /// per-op metrics counters.
-pub const OP_CODE_COUNT: usize = 12;
+pub const OP_CODE_COUNT: usize = 13;
 
 /// Decode the transform byte used on the wire.
 pub fn transform_from_u8(v: u8) -> Option<Transform> {
@@ -156,6 +173,15 @@ pub struct Request {
 pub enum Response {
     Values(Vec<f64>),
     Error(String),
+    /// Load was shed at admission: a queue cap was hit. Carries the
+    /// server's backoff hint; clients should retry after roughly this long
+    /// (the bundled [`Client`] does, with capped exponential backoff).
+    Overloaded { retry_after_ms: u64 },
+    /// The request's deadline passed before compute started — the batcher
+    /// never runs work whose requester has already given up on it.
+    DeadlineExceeded,
+    /// The server is draining for shutdown and no longer admits work.
+    ShuttingDown,
 }
 
 #[cfg(test)]
@@ -225,6 +251,7 @@ mod tests {
                 decay_bp: 10000,
                 transform: 0,
             },
+            Op::SnapshotCorpus,
         ];
         let codes: std::collections::HashSet<u32> = ops.iter().map(|o| o.code()).collect();
         assert_eq!(codes.len(), ops.len());

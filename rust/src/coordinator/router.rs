@@ -25,6 +25,9 @@ use crate::sig::SigOptions;
 /// classes is far beyond any realistic concurrent working set).
 const PLAN_CACHE_CAPACITY: usize = 64;
 
+/// File name snapshots use inside a configured snapshot directory.
+const SNAPSHOT_FILE: &str = "corpus.snapshot";
+
 /// Compute backend selection per batch.
 pub struct Router {
     /// Optional PJRT runtime over `artifacts/`; `None` = native only.
@@ -33,6 +36,9 @@ pub struct Router {
     plans: PlanCache,
     /// Registered reference corpora served by the corpus wire ops.
     corpus: Arc<CorpusRegistry>,
+    /// Directory corpus snapshots are written to / restored from (the
+    /// `SnapshotCorpus` wire op and server drain need it configured).
+    snapshot_dir: Option<std::path::PathBuf>,
 }
 
 impl Router {
@@ -42,6 +48,7 @@ impl Router {
             runtime: None,
             plans: PlanCache::new(PLAN_CACHE_CAPACITY),
             corpus: Arc::new(CorpusRegistry::new()),
+            snapshot_dir: None,
         }
     }
 
@@ -51,7 +58,44 @@ impl Router {
             runtime: Some(runtime),
             plans: PlanCache::new(PLAN_CACHE_CAPACITY),
             corpus: Arc::new(CorpusRegistry::new()),
+            snapshot_dir: None,
         }
+    }
+
+    /// Configure the directory corpus snapshots live in (`corpus.snapshot`
+    /// inside it). Enables the `SnapshotCorpus` wire op and the server's
+    /// snapshot-on-drain.
+    pub fn with_snapshot_dir(mut self, dir: std::path::PathBuf) -> Router {
+        self.snapshot_dir = Some(dir);
+        self
+    }
+
+    /// Write all registered corpora to the configured snapshot file.
+    /// Returns the number of corpora written.
+    pub fn snapshot_corpora(&self) -> Result<usize, SigError> {
+        let dir = self
+            .snapshot_dir
+            .as_ref()
+            .ok_or(SigError::Invalid("no snapshot path configured"))?;
+        self.corpus.snapshot_to(&dir.join(SNAPSHOT_FILE))
+    }
+
+    /// Replace the registry with one restored from the configured snapshot
+    /// file, if that file exists. Returns the number of corpora restored
+    /// (0 when there is no snapshot yet — a cold start is not an error).
+    pub fn restore_corpora(&mut self) -> Result<usize, SigError> {
+        let dir = self
+            .snapshot_dir
+            .as_ref()
+            .ok_or(SigError::Invalid("no snapshot path configured"))?;
+        let file = dir.join(SNAPSHOT_FILE);
+        if !file.exists() {
+            return Ok(0);
+        }
+        let reg = CorpusRegistry::restore_from(&file)?;
+        let n = reg.ids().len();
+        self.corpus = Arc::new(reg);
+        Ok(n)
     }
 
     pub fn has_runtime(&self) -> bool {
@@ -154,7 +198,8 @@ impl Router {
             | Op::Mmd2Corpus { .. }
             | Op::ExtendPath { .. }
             | Op::EvictCorpus { .. }
-            | Op::Mmd2Window { .. } => Err(SigError::Invalid(
+            | Op::Mmd2Window { .. }
+            | Op::SnapshotCorpus => Err(SigError::Invalid(
                 "corpus ops are served by the corpus route",
             )),
         }
@@ -333,7 +378,8 @@ impl Router {
             | Op::Mmd2Corpus { .. }
             | Op::ExtendPath { .. }
             | Op::EvictCorpus { .. }
-            | Op::Mmd2Window { .. } => Err(SigError::Invalid(
+            | Op::Mmd2Window { .. }
+            | Op::SnapshotCorpus => Err(SigError::Invalid(
                 "corpus ops are served by the corpus route",
             )),
             Op::Mmd2LowRank { nx, .. } | Op::GramLowRank { nx, .. } => {
@@ -458,6 +504,10 @@ impl Router {
                 let plan = self.plans.get_or_compile_corpus(spec, shape, &self.corpus)?;
                 Ok(Some(plan.execute(&pb)?.into_values()))
             }
+            Op::SnapshotCorpus => {
+                let n = self.snapshot_corpora()?;
+                Ok(Some(vec![n as f64]))
+            }
             _ => Ok(None),
         }
     }
@@ -575,7 +625,8 @@ impl Router {
             | Op::Mmd2Corpus { .. }
             | Op::ExtendPath { .. }
             | Op::EvictCorpus { .. }
-            | Op::Mmd2Window { .. } => {
+            | Op::Mmd2Window { .. }
+            | Op::SnapshotCorpus => {
                 // Same guard for the corpus lifecycle ops.
                 errs("corpus ops require a ragged-batch frame".to_string())
             }
@@ -676,7 +727,7 @@ mod tests {
                     let want = crate::sig::sig(&r.data, 8, 2, 3);
                     assert!(crate::util::linalg::max_abs_diff(v, &want) < 1e-12);
                 }
-                Response::Error(e) => panic!("{e}"),
+                other => panic!("{other:?}"),
             }
         }
     }
@@ -696,7 +747,7 @@ mod tests {
         for o in &out {
             match o {
                 Response::Values(v) => assert_eq!(v.len(), 2 * 6 * 2),
-                Response::Error(e) => panic!("{e}"),
+                other => panic!("{other:?}"),
             }
         }
     }
@@ -807,7 +858,7 @@ mod tests {
                     crate::sig::log_signature(&r.data, 7, 2, 3, crate::transforms::Transform::None);
                 assert!(crate::util::linalg::max_abs_diff(v, &want) < 1e-12);
             }
-            Response::Error(e) => panic!("{e}"),
+            other => panic!("{other:?}"),
         }
     }
 
@@ -1206,6 +1257,74 @@ mod tests {
             .unwrap();
         assert_eq!(kept, 1);
         assert_eq!(router.corpus_registry().path_count(CorpusId(id)), Some(1));
+    }
+
+    /// The snapshot wire op writes through the configured directory, and a
+    /// restored router answers corpus queries bit-identically.
+    #[test]
+    fn snapshot_op_roundtrips_through_the_router() {
+        let dir = std::env::temp_dir().join(format!("pysiglib-router-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Without a configured directory, the op is a typed error.
+        let bare = Router::native_only();
+        let snap_frame = RaggedFrame {
+            op: Op::SnapshotCorpus,
+            dim: 1,
+            lengths: vec![],
+            values: vec![],
+        };
+        assert!(matches!(
+            bare.execute_ragged(&snap_frame),
+            Err(SigError::Invalid(_))
+        ));
+        let router = Router::native_only().with_snapshot_dir(dir.clone());
+        let mut rng = Rng::new(16);
+        let d = 2;
+        let lens = [5usize, 4, 6];
+        let mut values = Vec::new();
+        for &l in &lens {
+            values.extend(rng.brownian_path(l, d, 0.4));
+        }
+        let id = router
+            .execute_ragged(&RaggedFrame {
+                op: Op::RegisterCorpus,
+                dim: d,
+                lengths: lens.to_vec(),
+                values: values.clone(),
+            })
+            .unwrap()[0] as u32;
+        // Warm the exact cache, then snapshot.
+        let q_lens = [4usize];
+        let q_values = rng.brownian_path(4, d, 0.4);
+        let qframe = RaggedFrame {
+            op: Op::Mmd2Corpus {
+                id,
+                rank: 0,
+                transform: 0,
+            },
+            dim: d,
+            lengths: q_lens.to_vec(),
+            values: q_values.clone(),
+        };
+        let before = router.execute_ragged(&qframe).unwrap();
+        let wrote = router.execute_ragged(&snap_frame).unwrap();
+        assert_eq!(wrote, vec![1.0]);
+        // A restored router serves the same answer, warm.
+        let mut restored = Router::native_only().with_snapshot_dir(dir.clone());
+        assert_eq!(restored.restore_corpora().unwrap(), 1);
+        let after = restored.execute_ragged(&qframe).unwrap();
+        assert_eq!(before, after, "restored corpus must answer bit-identically");
+        let st = restored.corpus_stats();
+        assert!(st.warm_hits >= 1, "restored cache serves warm");
+        assert_eq!(st.cold_builds, 0, "restore must not pay a cold rebuild");
+        // Restoring with no snapshot file present is a clean cold start.
+        let empty =
+            std::env::temp_dir().join(format!("pysiglib-router-none-{}", std::process::id()));
+        std::fs::create_dir_all(&empty).unwrap();
+        let mut cold = Router::native_only().with_snapshot_dir(empty.clone());
+        assert_eq!(cold.restore_corpora().unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&empty).ok();
     }
 
     #[test]

@@ -6,34 +6,59 @@
 //! Malformed-but-framed requests (validated at wire decode) are answered
 //! with an `Err` response and the connection keeps serving; only
 //! framing-destroying input (bad magic, absurd sizes) drops the connection.
+//!
+//! Admission rejections cross the wire typed: [`Response::Overloaded`]
+//! becomes wire status 2 (with a `retry_after_ms` backoff hint in the
+//! payload) and [`Response::DeadlineExceeded`] status 3, so clients can
+//! tell "back off" from "your request was bad". The bundled [`Client`]
+//! honours the hint with capped exponential backoff and deterministic
+//! seeded jitter (see [`RetryPolicy`]). Shutdown drains rather than drops:
+//! [`ServerHandle::stop`] closes the admission gate, flushes everything
+//! already accepted, then snapshots registered corpora through the router
+//! (see [`Router::with_snapshot_dir`](crate::coordinator::Router)) so the
+//! next process starts warm.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use crate::coordinator::wire::{
-    read_request, read_response, write_ragged_request, write_request, write_response, Frame,
-    RaggedFrame, RequestFrame,
+    read_request, read_response, read_typed_response, write_ragged_request, write_request,
+    write_typed_response, Frame, RaggedFrame, RequestFrame, WireResponse,
 };
 use crate::coordinator::{Batcher, Op, Request, Response};
+use crate::util::rng::Rng;
 
 /// Handle to a running server (drop or call `stop()` to shut down).
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    batcher: Option<Arc<Batcher>>,
 }
 
 impl ServerHandle {
     pub fn stop(mut self) {
         self.shutdown();
     }
+    /// Shutdown is a drain, not a drop: stop accepting connections, close
+    /// the batcher's admission gate and flush what it already accepted
+    /// (late arrivals get a typed rejection), then snapshot registered
+    /// corpora if the router has a snapshot path configured.
     fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Nudge the accept loop awake.
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
+        }
+        if let Some(batcher) = self.batcher.take() {
+            batcher.drain();
+            // No snapshot path configured is the common case and not an
+            // error; a failed write is best-effort at this point (the
+            // process is exiting) and must not panic the drop.
+            let _ = batcher.router().snapshot_corpora();
         }
     }
 }
@@ -51,6 +76,7 @@ pub fn serve(addr: impl ToSocketAddrs, batcher: Arc<Batcher>) -> std::io::Result
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
+    let accept_batcher = batcher.clone();
     let accept_thread = std::thread::spawn(move || {
         for conn in listener.incoming() {
             if stop2.load(Ordering::SeqCst) {
@@ -58,7 +84,7 @@ pub fn serve(addr: impl ToSocketAddrs, batcher: Arc<Batcher>) -> std::io::Result
             }
             match conn {
                 Ok(stream) => {
-                    let batcher = batcher.clone();
+                    let batcher = accept_batcher.clone();
                     std::thread::spawn(move || {
                         let _ = handle_connection(stream, batcher);
                     });
@@ -71,6 +97,7 @@ pub fn serve(addr: impl ToSocketAddrs, batcher: Arc<Batcher>) -> std::io::Result
         addr: local,
         stop,
         accept_thread: Some(accept_thread),
+        batcher: Some(batcher),
     })
 }
 
@@ -102,8 +129,11 @@ fn split_payload(frame: &Frame) -> Result<(Vec<f64>, Option<Vec<f64>>), String> 
     }
 }
 
-fn handle_single(frame: Frame, batcher: &Batcher) -> Result<Vec<f64>, String> {
-    let (data, data2) = split_payload(&frame)?;
+fn handle_single(frame: Frame, batcher: &Batcher) -> WireResponse {
+    let (data, data2) = match split_payload(&frame) {
+        Ok(p) => p,
+        Err(e) => return WireResponse::Error(e),
+    };
     let (tx, rx) = mpsc::channel();
     batcher.submit(Request {
         op: frame.op,
@@ -114,40 +144,174 @@ fn handle_single(frame: Frame, batcher: &Batcher) -> Result<Vec<f64>, String> {
         reply: tx,
     });
     match rx.recv() {
-        Ok(Response::Values(v)) => Ok(v),
-        Ok(Response::Error(e)) => Err(e),
-        Err(_) => Err("server shutting down".to_string()),
+        Ok(Response::Values(v)) => WireResponse::Values(v),
+        Ok(Response::Error(e)) => WireResponse::Error(e),
+        Ok(Response::Overloaded { retry_after_ms }) => WireResponse::Overloaded { retry_after_ms },
+        Ok(Response::DeadlineExceeded) => WireResponse::DeadlineExceeded,
+        Ok(Response::ShuttingDown) | Err(_) => {
+            WireResponse::Error("server shutting down".to_string())
+        }
     }
 }
 
 fn handle_connection(mut stream: TcpStream, batcher: Arc<Batcher>) -> std::io::Result<()> {
     let mut out = stream.try_clone()?;
     while let Some(decoded) = read_request(&mut stream)? {
-        let result: Result<Vec<f64>, String> = match decoded {
+        let resp: WireResponse = match decoded {
             // Malformed but framed: answer with the decode error and keep
             // the connection alive.
-            Err(e) => Err(e.to_string()),
+            Err(e) => WireResponse::Error(e.to_string()),
             Ok(RequestFrame::Single(frame)) => handle_single(frame, &batcher),
-            // A ragged frame is already a batch: run it directly.
+            // A ragged frame is already a batch: run it directly — unless
+            // the server is draining (ragged frames bypass the batcher's
+            // queues, so the admission gate is checked here).
             Ok(RequestFrame::Ragged(frame)) => {
-                batcher.execute_ragged(&frame).map_err(|e| e.to_string())
+                if !batcher.accepting() {
+                    WireResponse::Error("server shutting down".to_string())
+                } else {
+                    match batcher.execute_ragged(&frame) {
+                        Ok(v) => WireResponse::Values(v),
+                        Err(e) => WireResponse::Error(e.to_string()),
+                    }
+                }
             }
         };
-        write_response(&mut out, &result)?;
+        write_typed_response(&mut out, &resp)?;
     }
     Ok(())
+}
+
+/// Client-side retry policy for [`WireResponse::Overloaded`] rejections:
+/// capped exponential backoff with deterministic seeded jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). 1 disables retrying.
+    pub max_attempts: u32,
+    /// Backoff before the first retry, in milliseconds; doubles per retry.
+    pub base_ms: u64,
+    /// Ceiling on the exponential term (the jitter rides on top).
+    pub cap_ms: u64,
+    /// Jitter seed. Two clients with different seeds desynchronise their
+    /// retries; the same seed replays the same delays, which is what the
+    /// fault-injection tests pin down.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_ms: 1,
+            cap_ms: 100,
+            seed: 0x5e11,
+        }
+    }
+}
+
+/// Next backoff delay in ms. The exponential term honours the server's
+/// `retry_after_ms` hint as a floor and `cap_ms` as a ceiling; jitter adds
+/// up to half the delay on top; and the result is clamped strictly above
+/// the previous delay, so the sequence is monotonically increasing even
+/// once the cap is reached.
+fn next_backoff(
+    policy: &RetryPolicy,
+    attempt: u32,
+    hint_ms: u64,
+    prev_ms: u64,
+    rng: &mut Rng,
+) -> u64 {
+    let exp = policy
+        .base_ms
+        .saturating_mul(1u64 << attempt.min(20))
+        .max(hint_ms)
+        .min(policy.cap_ms.max(1));
+    let jitter = rng.next_u64() % (exp / 2 + 1);
+    (exp + jitter).max(prev_ms + 1)
 }
 
 /// Blocking client for the wire protocol.
 pub struct Client {
     stream: TcpStream,
+    retry: RetryPolicy,
+    rng: Rng,
+    backoffs: Vec<u64>,
 }
 
 impl Client {
     pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let retry = RetryPolicy::default();
         Ok(Client {
             stream: TcpStream::connect(addr)?,
+            retry,
+            rng: Rng::new(retry.seed),
+            backoffs: Vec::new(),
         })
+    }
+
+    /// Replace the retry policy (and reseed the jitter stream from it).
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Client {
+        self.retry = policy;
+        self.rng = Rng::new(policy.seed);
+        self
+    }
+
+    /// Backoff delays (ms) slept so far across every retried call, in
+    /// order — observability for tests and callers tuning the policy.
+    pub fn backoffs_ms(&self) -> &[u64] {
+        &self.backoffs
+    }
+
+    /// Send one request and read the typed response (overload and deadline
+    /// rejections stay distinguishable from errors). No retrying.
+    pub fn call_typed(
+        &mut self,
+        op: Op,
+        len: usize,
+        dim: usize,
+        values: Vec<f64>,
+    ) -> std::io::Result<WireResponse> {
+        write_request(
+            &mut self.stream,
+            &Frame {
+                op,
+                len,
+                dim,
+                values,
+            },
+        )?;
+        read_typed_response(&mut self.stream)
+    }
+
+    /// Like [`call_typed`](Client::call_typed), but on
+    /// [`WireResponse::Overloaded`] the client sleeps out the backoff
+    /// (policy delay, floored by the server's hint) and retries, up to
+    /// [`RetryPolicy::max_attempts`]. Any other response returns
+    /// immediately; exhausting the attempts returns the last rejection.
+    pub fn call_with_retry(
+        &mut self,
+        op: Op,
+        len: usize,
+        dim: usize,
+        values: &[f64],
+    ) -> std::io::Result<WireResponse> {
+        let attempts = self.retry.max_attempts.max(1);
+        let mut prev_ms = 0u64;
+        let mut attempt = 0u32;
+        loop {
+            let resp = self.call_typed(op, len, dim, values.to_vec())?;
+            let hint = match resp {
+                WireResponse::Overloaded { retry_after_ms } if attempt + 1 < attempts => {
+                    retry_after_ms
+                }
+                other => return Ok(other),
+            };
+            let policy = self.retry;
+            let delay = next_backoff(&policy, attempt, hint, prev_ms, &mut self.rng);
+            prev_ms = delay;
+            self.backoffs.push(delay);
+            std::thread::sleep(Duration::from_millis(delay));
+            attempt += 1;
+        }
     }
 
     /// Send one request and wait for its response.
@@ -423,6 +587,14 @@ impl Client {
         Ok(r.map(|v| v.first().copied().unwrap_or(0.0) as usize))
     }
 
+    /// Convenience: snapshot every registered corpus (paths + warm derived
+    /// state) to the server's configured snapshot path; returns the number
+    /// of corpora written. Errors if the server has no snapshot path.
+    pub fn snapshot_corpus(&mut self) -> std::io::Result<Result<usize, String>> {
+        let r = self.call_ragged(Op::SnapshotCorpus, 1, vec![], vec![])?;
+        Ok(r.map(|v| v.first().copied().unwrap_or(0.0) as usize))
+    }
+
     /// Convenience: exponentially-weighted MMD² between a query window
     /// (oldest path first, newest last) and a registered corpus. `decay_bp`
     /// is the per-step weight decay in basis points (1..=10000; 10000 →
@@ -474,5 +646,46 @@ impl Client {
             lengths,
             values,
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_monotone_capped_and_deterministic() {
+        let policy = RetryPolicy {
+            max_attempts: 8,
+            base_ms: 1,
+            cap_ms: 16,
+            seed: 42,
+        };
+        let run = |seed: u64| -> Vec<u64> {
+            let mut rng = Rng::new(seed);
+            let mut prev = 0u64;
+            (0..8)
+                .map(|attempt| {
+                    let d = next_backoff(&policy, attempt, 0, prev, &mut rng);
+                    prev = d;
+                    d
+                })
+                .collect()
+        };
+        let delays = run(policy.seed);
+        for w in delays.windows(2) {
+            assert!(w[1] > w[0], "backoff must increase: {delays:?}");
+        }
+        // Cap + max jitter (half the cap) bounds every delay... except where
+        // the strictly-monotone clamp has to step past it, which adds at
+        // most 1 per attempt.
+        for (i, d) in delays.iter().enumerate() {
+            assert!(*d <= policy.cap_ms + policy.cap_ms / 2 + i as u64 + 1, "{delays:?}");
+        }
+        // Same seed, same delays; the server hint floors the exponential.
+        assert_eq!(delays, run(policy.seed));
+        let mut rng = Rng::new(7);
+        let hinted = next_backoff(&policy, 0, 9, 0, &mut rng);
+        assert!(hinted >= 9, "hint is a floor: {hinted}");
     }
 }

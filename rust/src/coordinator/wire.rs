@@ -14,8 +14,12 @@
 //! (x_i, y_i) pairs, so n_lengths must be even for them.
 //!
 //! Response frame:
-//!   u32 status (0 = ok, 1 = error) | u32 n | payload
-//!   (ok: n × f64; error: n utf-8 bytes).
+//!   u32 status | u32 n | payload
+//!   status 0 = ok (payload: n × f64). Every other status carries n utf-8
+//!   bytes: 1 = error, 2 = overloaded (the text embeds a
+//!   `retry_after_ms=<n>` backoff hint), 3 = deadline exceeded. Peers that
+//!   predate statuses 2/3 read any nonzero status as a generic error
+//!   string, so new servers degrade gracefully against old clients.
 //!
 //! **Headers are validated on decode.** A malformed-but-framed request
 //! (unknown op, zero dim, `n_values` disagreeing with the declared shape, …)
@@ -122,6 +126,7 @@ fn op_to_parts(op: Op) -> (u32, u32, u32, u32) {
             decay_bp,
             transform,
         } => (12, id, decay_bp, transform as u32),
+        Op::SnapshotCorpus => (13, 0, 0, 0),
     }
 }
 
@@ -236,6 +241,7 @@ fn op_from_parts(code: u32, p1: u32, p2: u32, tr: u32) -> Result<Op, SigError> {
                 transform: transform()?,
             })
         }
+        13 => Ok(Op::SnapshotCorpus),
         other => Err(SigError::Protocol(format!("unknown op code {other}"))),
     }
 }
@@ -341,6 +347,7 @@ fn validate_single(op: Op, len: usize, dim: usize, n_values: usize) -> Result<()
             | Op::ExtendPath { .. }
             | Op::EvictCorpus { .. }
             | Op::Mmd2Window { .. }
+            | Op::SnapshotCorpus
     ) {
         return Err(SigError::Protocol(
             "corpus ops take a ragged-batch frame, not a single-path frame".to_string(),
@@ -406,9 +413,9 @@ fn validate_ragged(
             lengths.len()
         )));
     }
-    if matches!(op, Op::EvictCorpus { .. }) && !lengths.is_empty() {
+    if matches!(op, Op::EvictCorpus { .. } | Op::SnapshotCorpus) && !lengths.is_empty() {
         return Err(SigError::Protocol(format!(
-            "EvictCorpus is pure control; the frame must carry no paths, got {}",
+            "pure-control corpus ops carry no paths; the frame has {}",
             lengths.len()
         )));
     }
@@ -557,6 +564,91 @@ pub fn read_response<R: Read>(r: &mut R) -> std::io::Result<Result<Vec<f64>, Str
         r.read_exact(&mut data)?;
         Ok(Err(String::from_utf8_lossy(&data).into_owned()))
     }
+}
+
+/// Response statuses. 0 and 1 predate the admission-control statuses; every
+/// nonzero status carries a utf-8 payload so peers that only know 0/1 read
+/// statuses 2/3 as a generic error string instead of desyncing the stream.
+pub const STATUS_OK: u32 = 0;
+pub const STATUS_ERR: u32 = 1;
+pub const STATUS_OVERLOADED: u32 = 2;
+pub const STATUS_DEADLINE: u32 = 3;
+
+/// A decoded response that preserves the typed overload / deadline statuses
+/// which the legacy [`read_response`] flattens into `Err(String)`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireResponse {
+    Values(Vec<f64>),
+    Error(String),
+    /// Status 2. The payload text embeds `retry_after_ms=<n>`, which doubles
+    /// as a human-readable message for old peers and a machine-parsable
+    /// backoff hint for new ones.
+    Overloaded { retry_after_ms: u64 },
+    /// Status 3: the request's deadline passed before compute started.
+    DeadlineExceeded,
+}
+
+fn write_status_text<W: Write>(w: &mut W, status: u32, text: &str) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(8 + text.len());
+    buf.extend_from_slice(&status.to_le_bytes());
+    buf.extend_from_slice(&(text.len() as u32).to_le_bytes());
+    buf.extend_from_slice(text.as_bytes());
+    w.write_all(&buf)
+}
+
+pub fn write_typed_response<W: Write>(w: &mut W, resp: &WireResponse) -> std::io::Result<()> {
+    match resp {
+        WireResponse::Values(values) => {
+            let mut buf = Vec::with_capacity(8 + values.len() * 8);
+            buf.extend_from_slice(&STATUS_OK.to_le_bytes());
+            buf.extend_from_slice(&(values.len() as u32).to_le_bytes());
+            for v in values {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(&buf)
+        }
+        WireResponse::Error(msg) => write_status_text(w, STATUS_ERR, msg),
+        WireResponse::Overloaded { retry_after_ms } => write_status_text(
+            w,
+            STATUS_OVERLOADED,
+            &format!("server overloaded; retry_after_ms={retry_after_ms}"),
+        ),
+        WireResponse::DeadlineExceeded => {
+            write_status_text(w, STATUS_DEADLINE, "deadline exceeded")
+        }
+    }
+}
+
+pub fn read_typed_response<R: Read>(r: &mut R) -> std::io::Result<WireResponse> {
+    let mut header = [0u8; 8];
+    r.read_exact(&mut header)?;
+    let (sb, nb) = header.split_at(4);
+    let status = u32::from_le_bytes(le_array(sb));
+    let n = u32::from_le_bytes(le_array(nb)) as usize;
+    if status == STATUS_OK {
+        let mut data = vec![0u8; n * 8];
+        r.read_exact(&mut data)?;
+        return Ok(WireResponse::Values(
+            data.chunks_exact(8)
+                .map(|c| f64::from_le_bytes(le_array(c)))
+                .collect(),
+        ));
+    }
+    let mut data = vec![0u8; n];
+    r.read_exact(&mut data)?;
+    let text = String::from_utf8_lossy(&data).into_owned();
+    Ok(match status {
+        STATUS_OVERLOADED => WireResponse::Overloaded {
+            // A hint, not a contract: a mangled payload degrades to the
+            // minimum backoff rather than an error.
+            retry_after_ms: text
+                .split_once("retry_after_ms=")
+                .and_then(|(_, t)| t.trim().parse().ok())
+                .unwrap_or(1),
+        },
+        STATUS_DEADLINE => WireResponse::DeadlineExceeded,
+        _ => WireResponse::Error(text),
+    })
 }
 
 #[cfg(test)]
@@ -752,9 +844,9 @@ mod tests {
 
     #[test]
     fn unknown_op_and_bad_transform_are_soft_errors() {
-        // Unknown op code 13 (codes 1..=12 are assigned).
+        // Unknown op code 14 (codes 1..=13 are assigned).
         let mut buf = Vec::new();
-        for h in [MAGIC, 13, 0, 0, 0, 2, 1, 2u32] {
+        for h in [MAGIC, 14, 0, 0, 0, 2, 1, 2u32] {
             buf.extend_from_slice(&h.to_le_bytes());
         }
         buf.extend_from_slice(&1.0f64.to_le_bytes());
@@ -1013,6 +1105,89 @@ mod tests {
         write_request(&mut buf, &f).unwrap();
         let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
         assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+    }
+
+    #[test]
+    fn snapshot_op_is_pure_control() {
+        // Round-trips with an empty frame.
+        let frame = RaggedFrame {
+            op: Op::SnapshotCorpus,
+            dim: 1,
+            lengths: vec![],
+            values: vec![],
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        assert_eq!(ok_frame(&mut buf.as_slice()), RequestFrame::Ragged(frame));
+        // Carrying paths is a soft error.
+        let frame = RaggedFrame {
+            op: Op::SnapshotCorpus,
+            dim: 1,
+            lengths: vec![2],
+            values: vec![0.0; 2],
+        };
+        let mut buf = Vec::new();
+        write_ragged_request(&mut buf, &frame).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+        // So is a single-path frame.
+        let f = Frame {
+            op: Op::SnapshotCorpus,
+            len: 2,
+            dim: 1,
+            values: vec![0.0, 1.0],
+        };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &f).unwrap();
+        let got = read_request(&mut buf.as_slice()).unwrap().unwrap();
+        assert!(matches!(got, Err(SigError::Protocol(_))), "{got:?}");
+    }
+
+    #[test]
+    fn typed_responses_roundtrip_and_degrade_for_old_peers() {
+        let cases = [
+            WireResponse::Values(vec![1.5, -2.0]),
+            WireResponse::Error("bad frame".to_string()),
+            WireResponse::Overloaded { retry_after_ms: 7 },
+            WireResponse::DeadlineExceeded,
+        ];
+        for resp in &cases {
+            let mut buf = Vec::new();
+            write_typed_response(&mut buf, resp).unwrap();
+            assert_eq!(&read_typed_response(&mut buf.as_slice()).unwrap(), resp);
+        }
+        // A peer that predates statuses 2/3 reads them through the legacy
+        // decoder as generic error strings — readable, and the stream stays
+        // in sync because the payload length is honest.
+        let mut buf = Vec::new();
+        write_typed_response(&mut buf, &WireResponse::Overloaded { retry_after_ms: 7 }).unwrap();
+        write_typed_response(&mut buf, &WireResponse::DeadlineExceeded).unwrap();
+        let mut r = buf.as_slice();
+        let first = read_response(&mut r).unwrap().unwrap_err();
+        assert!(first.contains("retry_after_ms=7"), "{first}");
+        let second = read_response(&mut r).unwrap().unwrap_err();
+        assert!(second.contains("deadline"), "{second}");
+        assert!(r.is_empty());
+        // And the legacy encoder's frames decode through the typed reader.
+        let mut buf = Vec::new();
+        write_response(&mut buf, &Ok(vec![3.0])).unwrap();
+        write_response(&mut buf, &Err("boom".to_string())).unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(
+            read_typed_response(&mut r).unwrap(),
+            WireResponse::Values(vec![3.0])
+        );
+        assert_eq!(
+            read_typed_response(&mut r).unwrap(),
+            WireResponse::Error("boom".to_string())
+        );
+        // A mangled overload payload degrades to the minimum backoff hint.
+        let mut buf = Vec::new();
+        write_status_text(&mut buf, STATUS_OVERLOADED, "???").unwrap();
+        assert_eq!(
+            read_typed_response(&mut buf.as_slice()).unwrap(),
+            WireResponse::Overloaded { retry_after_ms: 1 }
+        );
     }
 
     #[test]

@@ -41,6 +41,15 @@
 //!   MMD² drift alarm with exponentially-decayed window weights
 //!   ([`CorpusRegistry::mmd2_window`]).
 //!
+//! * **Persistence** ([`persist`]) — [`CorpusRegistry::snapshot_to`]
+//!   serialises every corpus *and* its warm derived state to a versioned,
+//!   per-section-checksummed file (written atomically: temp + rename), and
+//!   [`CorpusRegistry::restore_from`] rebuilds a registry that answers every
+//!   query bit-identically to the original. Corrupt path sections fail the
+//!   load with [`SigError::SnapshotCorrupt`](crate::SigError::SnapshotCorrupt);
+//!   corrupt derived sections are dropped and rebuilt lazily, so a damaged
+//!   snapshot degrades to a cold cache, never to wrong answers.
+//!
 //! The engine exposes corpora as first-class plans —
 //! [`OpSpec::GramCorpus`](crate::engine::OpSpec::GramCorpus) /
 //! [`OpSpec::Mmd2Corpus`](crate::engine::OpSpec::Mmd2Corpus) /
@@ -68,6 +77,7 @@
 //! # Ok::<(), pysiglib::SigError>(())
 //! ```
 
+pub mod persist;
 pub mod registry;
 pub mod stream;
 pub mod tiles;

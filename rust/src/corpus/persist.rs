@@ -1,0 +1,803 @@
+//! Versioned, checksummed corpus snapshots — restart without the cold
+//! rebuild.
+//!
+//! A registry snapshot serialises every registered corpus (paths, birth
+//! ticks, content hash) **and** its warm derived state (exact self-Grams,
+//! retained Goursat pair borders, low-rank feature matrices), so a
+//! restarted coordinator restores in O(bytes) instead of re-paying the
+//! O(n²·L²) corpus-side solves. The format is deliberately dumb: fixed
+//! little-endian `u64`/`f64` words, no compression, every section
+//! independently checksummed.
+//!
+//! ## Format (version 1)
+//!
+//! | field            | size      | meaning                                    |
+//! |------------------|-----------|--------------------------------------------|
+//! | magic            | u64       | `0x5349_474c_534e_4150` ("SIGLSNAP")       |
+//! | version          | u64       | format version (currently 1)               |
+//! | section count    | u64       | number of sections that follow             |
+//! | per section: tag | u64       | 1 = paths, 2 = exact cache, 3 = low-rank   |
+//! | body length      | u64       | section body size in bytes                 |
+//! | body hash        | u64       | FNV-1a over the body bytes                 |
+//! | body             | length    | tag-specific payload                       |
+//!
+//! **Paths** sections (tag 1) are mandatory: a checksum or decode failure
+//! fails the whole load with [`SigError::SnapshotCorrupt`] — serving wrong
+//! path data is never acceptable. **Derived** sections (tags 2–3, and any
+//! unknown tag from a future writer) are an optimisation: a corrupt one is
+//! dropped and the registry rebuilds that state lazily on the next query,
+//! exactly as if it had never been cached. Low-rank sections carry the
+//! corpus feature matrix `Φ_c` but not the feature map itself — the map is
+//! rebuilt deterministically from its seeded landmark pool on restore, which
+//! keeps sketch matrices out of the file without giving up bit-identity.
+//!
+//! Writes are atomic: the encoded bytes land in a same-directory temp file
+//! (synced) which is then renamed over the target, so a crash mid-write
+//! leaves any previous snapshot intact. The `snapshot.torn_write` /
+//! `snapshot.short_read` [failpoints](crate::util::failpoint) truncate the
+//! byte stream at either seam to drive the recovery tests.
+
+use std::path::Path;
+
+use crate::kernel::border::{PairBorder, SchemeBorder};
+use crate::kernel::lowrank::LowRankSpec;
+use crate::kernel::scheme::{Scheme, TargetEps};
+use crate::kernel::{KernelOptions, LowRankMethod, SolverKind};
+use crate::kernel::lowrank::SketchKind;
+use crate::path::SigError;
+use crate::transforms::Transform;
+
+const MAGIC: u64 = 0x5349_474c_534e_4150; // "SIGLSNAP" big-endian byte order
+const VERSION: u64 = 1;
+const TAG_PATHS: u64 = 1;
+const TAG_EXACT: u64 = 2;
+const TAG_LOWRANK: u64 = 3;
+
+/// Plain-data view of one registered corpus — the exchange type between the
+/// registry's locked internals and this module's byte format.
+pub(crate) struct CorpusExport {
+    pub id: u32,
+    pub dim: usize,
+    pub tick: u64,
+    pub hash: u64,
+    pub lengths: Vec<usize>,
+    pub born: Vec<u64>,
+    pub data: Vec<f64>,
+    pub exact: Vec<ExactExport>,
+    pub lowrank: Vec<LowRankExport>,
+}
+
+/// One exact-kernel cache: the self-Gram plus retained pair borders.
+pub(crate) struct ExactExport {
+    pub opts: KernelOptions,
+    pub kcc: Vec<f64>,
+    pub borders: Vec<BorderExport>,
+}
+
+/// One retained Goursat border, keyed by its ordered path pair.
+pub(crate) struct BorderExport {
+    pub i: usize,
+    pub j: usize,
+    pub border: SchemeBorder,
+}
+
+/// One low-rank cache: spec, landmark-pool size and the feature matrix.
+pub(crate) struct LowRankExport {
+    pub opts: KernelOptions,
+    pub spec: LowRankSpec,
+    pub pool: usize,
+    pub phi: Vec<f64>,
+}
+
+fn corrupt(msg: &str) -> SigError {
+    SigError::SnapshotCorrupt(msg.to_string())
+}
+
+/// FNV-1a over raw bytes — same constants as the registry's content hash.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian word writer / checked reader.
+
+#[derive(Default)]
+struct Buf {
+    bytes: Vec<u8>,
+}
+
+impl Buf {
+    fn u64(&mut self, v: u64) {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn f64s(&mut self, vs: &[f64]) {
+        self.bytes.reserve(vs.len() * 8);
+        for &v in vs {
+            self.bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    fn u64s(&mut self, vs: &[u64]) {
+        self.bytes.reserve(vs.len() * 8);
+        for &v in vs {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Bounds-checked reader over a byte slice: every overrun is a typed
+/// truncation error, and counted reads verify the bytes exist *before*
+/// allocating — a hostile length word cannot trigger a huge allocation.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Cursor<'a> {
+        Cursor { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, len: usize) -> Result<&'a [u8], SigError> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .ok_or_else(|| corrupt("section length overflows"))?;
+        let out = self
+            .bytes
+            .get(self.pos..end)
+            .ok_or_else(|| corrupt("truncated snapshot"))?;
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u64(&mut self) -> Result<u64, SigError> {
+        let raw = self.take(8)?;
+        let mut le = [0u8; 8];
+        le.copy_from_slice(raw);
+        Ok(u64::from_le_bytes(le))
+    }
+
+    fn usize(&mut self) -> Result<usize, SigError> {
+        usize::try_from(self.u64()?).map_err(|_| corrupt("count exceeds this platform"))
+    }
+
+    fn u64s(&mut self, count: usize) -> Result<Vec<u64>, SigError> {
+        let raw = self.take(count.checked_mul(8).ok_or_else(|| corrupt("count overflows"))?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| {
+                let mut le = [0u8; 8];
+                le.copy_from_slice(c);
+                u64::from_le_bytes(le)
+            })
+            .collect())
+    }
+
+    fn usizes(&mut self, count: usize) -> Result<Vec<usize>, SigError> {
+        self.u64s(count)?
+            .into_iter()
+            .map(|v| usize::try_from(v).map_err(|_| corrupt("count exceeds this platform")))
+            .collect()
+    }
+
+    fn f64s(&mut self, count: usize) -> Result<Vec<f64>, SigError> {
+        Ok(self
+            .u64s(count)?
+            .into_iter()
+            .map(f64::from_bits)
+            .collect())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Options / spec encoding (fixed-width, decode-validated).
+
+fn transform_code(t: Transform) -> u64 {
+    match t {
+        Transform::None => 0,
+        Transform::TimeAug => 1,
+        Transform::LeadLag => 2,
+        Transform::LeadLagTimeAug => 3,
+    }
+}
+
+fn transform_from_code(v: u64) -> Option<Transform> {
+    match v {
+        0 => Some(Transform::None),
+        1 => Some(Transform::TimeAug),
+        2 => Some(Transform::LeadLag),
+        3 => Some(Transform::LeadLagTimeAug),
+        _ => None,
+    }
+}
+
+fn put_opts(buf: &mut Buf, o: &KernelOptions) {
+    buf.u64(o.dyadic_x as u64);
+    buf.u64(o.dyadic_y as u64);
+    buf.u64(match o.solver {
+        SolverKind::Row => 0,
+        SolverKind::Blocked => 1,
+    });
+    buf.u64(o.scheme.to_u8() as u64);
+    match o.target_eps.get() {
+        Some(eps) => {
+            buf.u64(1);
+            buf.u64(eps.to_bits());
+        }
+        None => {
+            buf.u64(0);
+            buf.u64(0);
+        }
+    }
+    buf.u64(transform_code(o.exec.transform));
+    buf.u64(o.exec.parallel as u64);
+}
+
+fn get_opts(c: &mut Cursor<'_>) -> Result<KernelOptions, SigError> {
+    let dyadic_x = u32::try_from(c.u64()?).map_err(|_| corrupt("dyadic order out of range"))?;
+    let dyadic_y = u32::try_from(c.u64()?).map_err(|_| corrupt("dyadic order out of range"))?;
+    let solver = match c.u64()? {
+        0 => SolverKind::Row,
+        1 => SolverKind::Blocked,
+        _ => return Err(corrupt("unknown solver code")),
+    };
+    let scheme_byte = u8::try_from(c.u64()?).map_err(|_| corrupt("scheme code out of range"))?;
+    let scheme = Scheme::from_u8(scheme_byte).ok_or_else(|| corrupt("unknown scheme code"))?;
+    let eps_set = c.u64()?;
+    let eps_bits = c.u64()?;
+    let target_eps = match eps_set {
+        0 => TargetEps::UNSET,
+        1 => TargetEps::new(f64::from_bits(eps_bits)),
+        _ => return Err(corrupt("bad target-eps flag")),
+    };
+    let transform =
+        transform_from_code(c.u64()?).ok_or_else(|| corrupt("unknown transform code"))?;
+    let parallel = match c.u64()? {
+        0 => false,
+        1 => true,
+        _ => return Err(corrupt("bad parallel flag")),
+    };
+    let mut opts = KernelOptions::default()
+        .dyadic(dyadic_x, dyadic_y)
+        .solver(solver)
+        .scheme(scheme)
+        .transform(transform);
+    opts.target_eps = target_eps;
+    opts.exec.parallel = parallel;
+    Ok(opts)
+}
+
+fn put_spec(buf: &mut Buf, s: &LowRankSpec) {
+    match s.method {
+        LowRankMethod::Nystrom => {
+            buf.u64(0);
+            buf.u64(0); // depth (unused)
+            buf.u64(0); // sketch (unused)
+        }
+        LowRankMethod::RandomSig { depth, sketch } => {
+            buf.u64(1);
+            buf.usize(depth);
+            buf.u64(match sketch {
+                SketchKind::Gaussian => 0,
+                SketchKind::Rademacher => 1,
+            });
+        }
+    }
+    buf.usize(s.rank);
+    buf.u64(s.seed);
+}
+
+fn get_spec(c: &mut Cursor<'_>) -> Result<LowRankSpec, SigError> {
+    let method_tag = c.u64()?;
+    let depth = c.usize()?;
+    let sketch_tag = c.u64()?;
+    let method = match method_tag {
+        0 => LowRankMethod::Nystrom,
+        1 => {
+            let sketch = match sketch_tag {
+                0 => SketchKind::Gaussian,
+                1 => SketchKind::Rademacher,
+                _ => return Err(corrupt("unknown sketch code")),
+            };
+            LowRankMethod::RandomSig { depth, sketch }
+        }
+        _ => return Err(corrupt("unknown low-rank method code")),
+    };
+    let rank = c.usize()?;
+    let seed = c.u64()?;
+    Ok(LowRankSpec { method, rank, seed })
+}
+
+// ---------------------------------------------------------------------------
+// Section bodies.
+
+fn encode_paths(exp: &CorpusExport) -> Vec<u8> {
+    let mut b = Buf::default();
+    b.u64(exp.id as u64);
+    b.usize(exp.dim);
+    b.u64(exp.tick);
+    b.u64(exp.hash);
+    b.usize(exp.lengths.len());
+    for &l in &exp.lengths {
+        b.usize(l);
+    }
+    b.u64s(&exp.born);
+    b.usize(exp.data.len());
+    b.f64s(&exp.data);
+    b.bytes
+}
+
+fn decode_paths(body: &[u8]) -> Result<CorpusExport, SigError> {
+    let mut c = Cursor::new(body);
+    let id = u32::try_from(c.u64()?).map_err(|_| corrupt("corpus id out of range"))?;
+    let dim = c.usize()?;
+    let tick = c.u64()?;
+    let hash = c.u64()?;
+    let n = c.usize()?;
+    let lengths = c.usizes(n)?;
+    let born = c.u64s(n)?;
+    let values = c.usize()?;
+    let data = c.f64s(values)?;
+    if !c.done() {
+        return Err(corrupt("path section has trailing bytes"));
+    }
+    Ok(CorpusExport {
+        id,
+        dim,
+        tick,
+        hash,
+        lengths,
+        born,
+        data,
+        exact: Vec::new(),
+        lowrank: Vec::new(),
+    })
+}
+
+fn put_border(b: &mut Buf, pb: &PairBorder) {
+    let (bottom, right) = pb.parts();
+    b.usize(bottom.len());
+    b.f64s(bottom);
+    b.usize(right.len());
+    b.f64s(right);
+}
+
+fn get_border(c: &mut Cursor<'_>) -> Result<PairBorder, SigError> {
+    let bl = c.usize()?;
+    let bottom = c.f64s(bl)?;
+    let rl = c.usize()?;
+    let right = c.f64s(rl)?;
+    PairBorder::from_parts(bottom, right)
+        .map_err(|_| corrupt("border section violates the corner invariants"))
+}
+
+fn encode_exact(id: u32, ex: &ExactExport) -> Vec<u8> {
+    let mut b = Buf::default();
+    b.u64(id as u64);
+    put_opts(&mut b, &ex.opts);
+    b.usize(ex.kcc.len());
+    b.f64s(&ex.kcc);
+    b.usize(ex.borders.len());
+    for bd in &ex.borders {
+        b.usize(bd.i);
+        b.usize(bd.j);
+        put_border(&mut b, bd.border.fine());
+        match bd.border.coarse() {
+            Some(coarse) => {
+                b.u64(1);
+                put_border(&mut b, coarse);
+            }
+            None => b.u64(0),
+        }
+    }
+    b.bytes
+}
+
+fn decode_exact(body: &[u8]) -> Result<(u32, ExactExport), SigError> {
+    let mut c = Cursor::new(body);
+    let id = u32::try_from(c.u64()?).map_err(|_| corrupt("corpus id out of range"))?;
+    let opts = get_opts(&mut c)?;
+    let kcc_len = c.usize()?;
+    let kcc = c.f64s(kcc_len)?;
+    let nb = c.usize()?;
+    let mut borders = Vec::with_capacity(nb.min(1024));
+    for _ in 0..nb {
+        let i = c.usize()?;
+        let j = c.usize()?;
+        let fine = get_border(&mut c)?;
+        let coarse = match c.u64()? {
+            0 => None,
+            1 => Some(get_border(&mut c)?),
+            _ => return Err(corrupt("bad coarse-border flag")),
+        };
+        borders.push(BorderExport {
+            i,
+            j,
+            border: SchemeBorder::from_parts(fine, coarse),
+        });
+    }
+    if !c.done() {
+        return Err(corrupt("exact section has trailing bytes"));
+    }
+    Ok((id, ExactExport { opts, kcc, borders }))
+}
+
+fn encode_lowrank(id: u32, lr: &LowRankExport) -> Vec<u8> {
+    let mut b = Buf::default();
+    b.u64(id as u64);
+    put_opts(&mut b, &lr.opts);
+    put_spec(&mut b, &lr.spec);
+    b.usize(lr.pool);
+    b.usize(lr.phi.len());
+    b.f64s(&lr.phi);
+    b.bytes
+}
+
+fn decode_lowrank(body: &[u8]) -> Result<(u32, LowRankExport), SigError> {
+    let mut c = Cursor::new(body);
+    let id = u32::try_from(c.u64()?).map_err(|_| corrupt("corpus id out of range"))?;
+    let opts = get_opts(&mut c)?;
+    let spec = get_spec(&mut c)?;
+    let pool = c.usize()?;
+    let phi_len = c.usize()?;
+    let phi = c.f64s(phi_len)?;
+    if !c.done() {
+        return Err(corrupt("low-rank section has trailing bytes"));
+    }
+    Ok((
+        id,
+        LowRankExport {
+            opts,
+            spec,
+            pool,
+            phi,
+        },
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Whole-file encode / decode.
+
+fn encode_snapshot(exports: &[CorpusExport]) -> Vec<u8> {
+    let mut sections: Vec<(u64, Vec<u8>)> = Vec::new();
+    // Path sections first: the reader installs corpora before derived state.
+    for exp in exports {
+        sections.push((TAG_PATHS, encode_paths(exp)));
+    }
+    for exp in exports {
+        for ex in &exp.exact {
+            sections.push((TAG_EXACT, encode_exact(exp.id, ex)));
+        }
+        for lr in &exp.lowrank {
+            sections.push((TAG_LOWRANK, encode_lowrank(exp.id, lr)));
+        }
+    }
+    let mut out = Buf::default();
+    out.u64(MAGIC);
+    out.u64(VERSION);
+    out.usize(sections.len());
+    for (tag, body) in &sections {
+        out.u64(*tag);
+        out.usize(body.len());
+        out.u64(fnv1a(body));
+        out.bytes.extend_from_slice(body);
+    }
+    out.bytes
+}
+
+/// Decode snapshot bytes into per-corpus exports. Header problems and
+/// corrupt path sections fail the load; corrupt derived sections (and
+/// sections for unknown corpora or future tags) are silently dropped.
+fn decode_snapshot(bytes: &[u8]) -> Result<Vec<CorpusExport>, SigError> {
+    let mut c = Cursor::new(bytes);
+    let magic = c
+        .u64()
+        .map_err(|_| corrupt("file too short for a snapshot header"))?;
+    if magic != MAGIC {
+        return Err(corrupt("bad magic — not a pysiglib corpus snapshot"));
+    }
+    let version = c.u64()?;
+    if version != VERSION {
+        return Err(SigError::SnapshotCorrupt(format!(
+            "unsupported snapshot format version {version} (this build reads {VERSION})"
+        )));
+    }
+    let count = c.usize()?;
+    let mut raw: Vec<(u64, &[u8], bool)> = Vec::with_capacity(count.min(1024));
+    for _ in 0..count {
+        let tag = c.u64()?;
+        let len = c.usize()?;
+        let hash = c.u64()?;
+        let body = c.take(len)?;
+        raw.push((tag, body, fnv1a(body) == hash));
+    }
+    if !c.done() {
+        return Err(corrupt("trailing bytes after the last section"));
+    }
+    let mut exports: Vec<CorpusExport> = Vec::new();
+    for (_, body, hash_ok) in raw.iter().filter(|(tag, ..)| *tag == TAG_PATHS) {
+        if !*hash_ok {
+            return Err(corrupt("corpus path section failed its checksum"));
+        }
+        let exp = decode_paths(body)?;
+        if exports.iter().any(|e| e.id == exp.id) {
+            return Err(corrupt("duplicate corpus id across path sections"));
+        }
+        exports.push(exp);
+    }
+    for (tag, body, hash_ok) in raw {
+        if !hash_ok || tag == TAG_PATHS {
+            continue; // corrupt derived state: drop, rebuild lazily
+        }
+        match tag {
+            TAG_EXACT => {
+                if let Ok((id, ex)) = decode_exact(body) {
+                    if let Some(e) = exports.iter_mut().find(|e| e.id == id) {
+                        e.exact.push(ex);
+                    }
+                }
+            }
+            TAG_LOWRANK => {
+                if let Ok((id, lr)) = decode_lowrank(body) {
+                    if let Some(e) = exports.iter_mut().find(|e| e.id == id) {
+                        e.lowrank.push(lr);
+                    }
+                }
+            }
+            _ => {} // a future writer's section kind: ignore
+        }
+    }
+    Ok(exports)
+}
+
+/// Encode `exports` and write them atomically to `path` (same-directory
+/// temp file, synced, then renamed). I/O failures are
+/// [`SigError::Backend`]; nothing here panics.
+pub(crate) fn write_snapshot(exports: &[CorpusExport], path: &Path) -> Result<(), SigError> {
+    let mut bytes = encode_snapshot(exports);
+    if let Some(cut) = crate::failpoint!("snapshot.torn_write") {
+        bytes.truncate(cut as usize);
+    }
+    let io =
+        |e: std::io::Error| SigError::Backend(format!("snapshot write {}: {e}", path.display()));
+    let mut tmp_name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("corpus.snapshot"));
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    let tmp = path.with_file_name(tmp_name);
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp).map_err(io)?;
+        f.write_all(&bytes).map_err(io)?;
+        f.sync_all().map_err(io)?;
+    }
+    std::fs::rename(&tmp, path).map_err(io)
+}
+
+/// Read and decode a snapshot file. Missing/unreadable files are
+/// [`SigError::Backend`]; malformed content is
+/// [`SigError::SnapshotCorrupt`] (see [`decode_snapshot`] for what is fatal
+/// versus dropped).
+pub(crate) fn read_snapshot(path: &Path) -> Result<Vec<CorpusExport>, SigError> {
+    let mut bytes = std::fs::read(path)
+        .map_err(|e| SigError::Backend(format!("snapshot read {}: {e}", path.display())))?;
+    if let Some(cut) = crate::failpoint!("snapshot.short_read") {
+        bytes.truncate(cut as usize);
+    }
+    decode_snapshot(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_export() -> CorpusExport {
+        let lengths = vec![3usize, 2];
+        let data: Vec<f64> = (0..10).map(|v| v as f64 * 0.25).collect();
+        CorpusExport {
+            id: 7,
+            dim: 2,
+            tick: 1,
+            hash: 0xdead_beef,
+            lengths,
+            born: vec![0, 1],
+            data,
+            exact: vec![ExactExport {
+                opts: KernelOptions::default().dyadic(1, 1),
+                kcc: vec![1.0, 0.5, 0.5, 1.0],
+                borders: Vec::new(),
+            }],
+            lowrank: vec![LowRankExport {
+                opts: KernelOptions::default(),
+                spec: LowRankSpec::nystrom(2, 9),
+                pool: 2,
+                phi: vec![0.1, 0.2, 0.3, 0.4],
+            }],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let exp = sample_export();
+        let bytes = encode_snapshot(&[exp]);
+        let back = decode_snapshot(&bytes).unwrap();
+        assert_eq!(back.len(), 1);
+        let b = &back[0];
+        assert_eq!(b.id, 7);
+        assert_eq!(b.lengths, vec![3, 2]);
+        assert_eq!(b.born, vec![0, 1]);
+        assert_eq!(b.exact.len(), 1);
+        assert_eq!(b.exact[0].kcc, vec![1.0, 0.5, 0.5, 1.0]);
+        assert_eq!(b.exact[0].opts, KernelOptions::default().dyadic(1, 1));
+        assert_eq!(b.lowrank.len(), 1);
+        assert_eq!(b.lowrank[0].spec, LowRankSpec::nystrom(2, 9));
+        assert_eq!(b.lowrank[0].phi, vec![0.1, 0.2, 0.3, 0.4]);
+    }
+
+    #[test]
+    fn options_and_spec_encodings_round_trip_every_field() {
+        let mut opts = KernelOptions::default()
+            .dyadic(3, 2)
+            .solver(SolverKind::Blocked)
+            .scheme(Scheme::Order2)
+            .target_eps(1e-4)
+            .transform(Transform::LeadLagTimeAug);
+        opts.exec.parallel = false;
+        let mut b = Buf::default();
+        put_opts(&mut b, &opts);
+        let mut c = Cursor::new(&b.bytes);
+        assert_eq!(get_opts(&mut c).unwrap(), opts);
+        assert!(c.done());
+        for spec in [
+            LowRankSpec::nystrom(5, 11),
+            LowRankSpec::random_sig(4, 3, 13),
+            LowRankSpec {
+                method: LowRankMethod::RandomSig {
+                    depth: 2,
+                    sketch: SketchKind::Gaussian,
+                },
+                rank: 6,
+                seed: 17,
+            },
+        ] {
+            let mut b = Buf::default();
+            put_spec(&mut b, &spec);
+            let mut c = Cursor::new(&b.bytes);
+            assert_eq!(get_spec(&mut c).unwrap(), spec);
+            assert!(c.done());
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed_errors() {
+        let exp = sample_export();
+        let mut bytes = encode_snapshot(&[exp]);
+        let good = bytes.clone();
+        bytes[0] ^= 0xff;
+        assert!(matches!(
+            decode_snapshot(&bytes),
+            Err(SigError::SnapshotCorrupt(_))
+        ));
+        let mut vbad = good.clone();
+        vbad[8] = 99;
+        assert!(matches!(
+            decode_snapshot(&vbad),
+            Err(SigError::SnapshotCorrupt(_))
+        ));
+        assert!(decode_snapshot(&good).is_ok());
+    }
+
+    #[test]
+    fn every_truncation_point_is_a_typed_error_or_a_clean_drop() {
+        let exp = sample_export();
+        let bytes = encode_snapshot(&[exp]);
+        for cut in 0..bytes.len() {
+            match decode_snapshot(&bytes[..cut]) {
+                Err(SigError::SnapshotCorrupt(_)) => {}
+                Err(e) => panic!("cut at {cut}: unexpected error kind {e}"),
+                Ok(_) => panic!("cut at {cut}: truncated snapshot decoded"),
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_derived_sections_drop_but_corrupt_paths_fail() {
+        let exp = sample_export();
+        let bytes = encode_snapshot(&[exp]);
+        // Flip one byte at every offset: the decode must either succeed with
+        // derived state possibly dropped, or fail with the typed error —
+        // never panic, never mis-decode a checksummed section.
+        for at in 0..bytes.len() {
+            let mut b = bytes.clone();
+            b[at] ^= 0x01;
+            match decode_snapshot(&b) {
+                Ok(exports) => {
+                    // A flip that decodes cleanly must not have touched the
+                    // (checksummed) path payload.
+                    if let Some(e) = exports.first() {
+                        assert_eq!(e.lengths, vec![3, 2], "flip at {at}");
+                    }
+                }
+                Err(SigError::SnapshotCorrupt(_)) => {}
+                Err(e) => panic!("flip at {at}: unexpected error kind {e}"),
+            }
+        }
+        // A flip inside the exact-cache body specifically: load succeeds,
+        // derived state is gone, paths intact.
+        let paths_body = encode_paths(&sample_export());
+        let header = 3 * 8; // magic, version, count
+        let sec_hdr = 3 * 8; // tag, len, hash
+        let exact_at = header + sec_hdr + paths_body.len() + sec_hdr + 12;
+        let mut b = bytes.clone();
+        b[exact_at] ^= 0xff;
+        let exports = decode_snapshot(&b).unwrap();
+        assert_eq!(exports.len(), 1);
+        assert!(exports[0].exact.is_empty(), "corrupt exact section dropped");
+        assert_eq!(exports[0].lowrank.len(), 1, "other sections survive");
+    }
+
+    #[test]
+    fn derived_sections_for_unknown_corpora_are_dropped() {
+        let mut exp = sample_export();
+        let stray = encode_exact(99, &exp.exact[0]);
+        exp.exact.clear();
+        exp.lowrank.clear();
+        let mut bytes = Buf::default();
+        bytes.u64(MAGIC);
+        bytes.u64(VERSION);
+        bytes.usize(2);
+        let paths = encode_paths(&exp);
+        for body in [&paths, &stray] {
+            bytes.u64(if std::ptr::eq(body, &paths) { TAG_PATHS } else { TAG_EXACT });
+            bytes.usize(body.len());
+            bytes.u64(fnv1a(body));
+            bytes.bytes.extend_from_slice(body);
+        }
+        let exports = decode_snapshot(&bytes.bytes).unwrap();
+        assert_eq!(exports.len(), 1);
+        assert!(exports[0].exact.is_empty());
+    }
+
+    #[test]
+    fn torn_write_failpoint_truncates_and_restore_rejects() {
+        let _g = crate::util::failpoint::serial_guard();
+        let dir = std::env::temp_dir().join(format!("pysiglib-persist-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("torn.snapshot");
+        crate::util::failpoint::arm("snapshot.torn_write", 40);
+        write_snapshot(&[sample_export()], &file).unwrap();
+        crate::util::failpoint::disarm("snapshot.torn_write");
+        assert_eq!(std::fs::metadata(&file).unwrap().len(), 40);
+        assert!(matches!(
+            read_snapshot(&file),
+            Err(SigError::SnapshotCorrupt(_))
+        ));
+        // A clean rewrite replaces the torn file atomically.
+        write_snapshot(&[sample_export()], &file).unwrap();
+        assert_eq!(read_snapshot(&file).unwrap().len(), 1);
+        // Short reads are typed errors too.
+        crate::util::failpoint::arm("snapshot.short_read", 16);
+        assert!(matches!(
+            read_snapshot(&file),
+            Err(SigError::SnapshotCorrupt(_))
+        ));
+        crate::util::failpoint::disarm("snapshot.short_read");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -40,6 +40,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::corpus::persist::{self, BorderExport, CorpusExport, ExactExport, LowRankExport};
 use crate::corpus::tiles::TileScheduler;
 use crate::engine::MAX_BATCH_OUT;
 use crate::kernel::border::{self, SchemeBorder};
@@ -824,6 +825,184 @@ impl CorpusRegistry {
             .ok_or(SigError::Invalid("unknown corpus id"))
     }
 
+    /// Serialise every registered corpus — path data *and* warm derived
+    /// state (self-Grams, retained Goursat borders, low-rank features) — to
+    /// `path` in the versioned, checksummed snapshot format of
+    /// [`persist`](crate::corpus::persist). The write is atomic (temp file
+    /// in the same directory + rename), so a crash mid-write leaves any
+    /// previous snapshot intact. Returns the number of corpora written.
+    pub fn snapshot_to(&self, path: &std::path::Path) -> Result<usize, SigError> {
+        let exports = self.export_all();
+        let n = exports.len();
+        persist::write_snapshot(&exports, path)?;
+        Ok(n)
+    }
+
+    /// Rebuild a registry from a snapshot written by
+    /// [`snapshot_to`](CorpusRegistry::snapshot_to). Every section's
+    /// content hash is re-verified: a corrupt **path** section (or a
+    /// damaged header / truncated file) fails the whole load with
+    /// [`SigError::SnapshotCorrupt`]; a corrupt or shape-inconsistent
+    /// **derived-state** section is dropped silently and rebuilt lazily by
+    /// the next query that needs it. A restored registry answers every
+    /// query path bit-identically to the one that was snapshotted
+    /// (property-tested in `tests/props_persist.rs`).
+    pub fn restore_from(path: &std::path::Path) -> Result<CorpusRegistry, SigError> {
+        let exports = persist::read_snapshot(path)?;
+        let reg = CorpusRegistry::new();
+        for exp in exports {
+            reg.import(exp)?;
+        }
+        Ok(reg)
+    }
+
+    /// Plain-data view of every entry for the snapshot writer. Ids are
+    /// exported ascending; per-entry locks are taken one at a time (shared),
+    /// so queries keep flowing while a snapshot streams out.
+    fn export_all(&self) -> Vec<CorpusExport> {
+        let arcs: Vec<(u32, Arc<RwLock<CorpusEntry>>)> = {
+            let entries = lock_unpoisoned(&self.entries);
+            let mut v: Vec<_> = entries.iter().map(|(&id, a)| (id, a.clone())).collect();
+            v.sort_unstable_by_key(|(id, _)| *id);
+            v
+        };
+        let mut out = Vec::with_capacity(arcs.len());
+        for (id, arc) in arcs {
+            let e = read_unpoisoned(&arc);
+            let exact = e
+                .exact
+                .iter()
+                .map(|(opts, c)| {
+                    let mut borders: Vec<BorderExport> = c
+                        .borders
+                        .iter()
+                        .map(|(&(i, j), b)| BorderExport {
+                            i,
+                            j,
+                            border: b.clone(),
+                        })
+                        .collect();
+                    borders.sort_unstable_by_key(|b| (b.i, b.j));
+                    ExactExport {
+                        opts: *opts,
+                        kcc: c.kcc.clone(),
+                        borders,
+                    }
+                })
+                .collect();
+            let lowrank = e
+                .lowrank
+                .iter()
+                .map(|(&(opts, spec), c)| LowRankExport {
+                    opts,
+                    spec,
+                    pool: c.pool,
+                    phi: c.phi.clone(),
+                })
+                .collect();
+            out.push(CorpusExport {
+                id,
+                dim: e.dim,
+                tick: e.tick,
+                hash: e.hash,
+                lengths: e.lengths.clone(),
+                born: e.born.clone(),
+                data: e.data.clone(),
+                exact,
+                lowrank,
+            });
+        }
+        out
+    }
+
+    /// Install one decoded corpus. The path payload is re-validated
+    /// end-to-end (shape, birth-tick monotonicity, content hash) — any
+    /// mismatch is [`SigError::SnapshotCorrupt`]. Derived state that does
+    /// not fit the restored paths is dropped, never installed stale.
+    fn import(&self, exp: CorpusExport) -> Result<(), SigError> {
+        let CorpusExport {
+            id,
+            dim,
+            tick,
+            hash,
+            lengths,
+            born,
+            data,
+            exact,
+            lowrank,
+        } = exp;
+        let corrupt = |m: &str| SigError::SnapshotCorrupt(m.to_string());
+        if lengths.is_empty() || born.len() != lengths.len() {
+            return Err(corrupt("corpus section: lengths/born tables disagree"));
+        }
+        let births_sorted = born.windows(2).all(|w| match w {
+            [a, b] => a <= b,
+            _ => true,
+        });
+        if !births_sorted || born.last().copied().unwrap_or(0) > tick {
+            return Err(corrupt("corpus section: birth ticks out of order"));
+        }
+        let n = lengths.len();
+        let (exact_map, lr_map) = {
+            let cb = PathBatch::ragged(&data, &lengths, dim)
+                .map_err(|e| SigError::SnapshotCorrupt(format!("corpus section: {e}")))?;
+            if content_hash(dim, &lengths, &data) != hash {
+                return Err(corrupt("corpus section: content hash mismatch"));
+            }
+            let mut exact_map = HashMap::new();
+            for ex in exact {
+                let want = n.checked_mul(n).filter(|&t| t <= MAX_BATCH_OUT);
+                if want != Some(ex.kcc.len()) {
+                    continue; // dropped: wrong shape for the restored corpus
+                }
+                let mut borders = HashMap::new();
+                let fits = ex.borders.iter().all(|b| b.i < n && b.j < n);
+                if !fits {
+                    continue;
+                }
+                for b in ex.borders {
+                    borders.insert((b.i, b.j), b.border);
+                }
+                exact_map.insert(
+                    ex.opts,
+                    ExactCache {
+                        kcc: ex.kcc,
+                        borders,
+                    },
+                );
+            }
+            let mut lr_map = HashMap::new();
+            for lr in lowrank {
+                if let Ok(cache) = restore_lowrank(&cb, &lr.opts, &lr.spec, lr.pool, lr.phi) {
+                    lr_map.insert((lr.opts, lr.spec), cache);
+                }
+            }
+            (exact_map, lr_map)
+        };
+        let entry = CorpusEntry {
+            dim,
+            data,
+            lengths,
+            hash,
+            tick,
+            born,
+            exact: exact_map,
+            lowrank: lr_map,
+        };
+        {
+            let mut by_hash = lock_unpoisoned(&self.by_hash);
+            let mut entries = lock_unpoisoned(&self.entries);
+            if entries.contains_key(&id) {
+                return Err(corrupt("corpus section: duplicate corpus id"));
+            }
+            entries.insert(id, Arc::new(RwLock::new(entry)));
+            by_hash.insert(hash, id);
+        }
+        self.next_id.fetch_max(id.saturating_add(1), Ordering::Relaxed);
+        self.registered.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// Run `body` with the (warm or freshly built) low-rank state for
     /// (opts, spec), updating the warm/cold counters.
     fn with_lowrank<R>(
@@ -1231,5 +1410,50 @@ fn build_lowrank(
     let pool_batch = PathBatch::ragged(data, &pool_lens, cb.dim())?;
     let map = Arc::new(FeatureMap::try_build(spec, opts, &pool_batch)?);
     let phi = map.try_features(cb)?;
+    Ok(LowRankCache { map, phi, pool })
+}
+
+/// Restore a low-rank cache from snapshotted state: the feature matrix
+/// `Φ_c` travels in the snapshot (it is the expensive O(n) part), while the
+/// feature map is rebuilt deterministically from the landmark pool — the
+/// same seeded construction as [`build_lowrank`], so the restored map is
+/// bit-identical to the snapshotted one. Any shape disagreement with the
+/// restored corpus is an error; the caller drops the section and the next
+/// query rebuilds from scratch.
+fn restore_lowrank(
+    cb: &PathBatch<'_>,
+    opts: &KernelOptions,
+    spec: &LowRankSpec,
+    pool: usize,
+    phi: Vec<f64>,
+) -> Result<LowRankCache, SigError> {
+    spec.validate()?;
+    let n = cb.batch();
+    if pool != spec.rank.min(n) {
+        return Err(SigError::Invalid(
+            "restored landmark pool does not match the corpus",
+        ));
+    }
+    let pool_lens: Vec<usize> = (0..pool).map(|i| cb.len_of(i)).collect();
+    let split = cb
+        .offsets()
+        .get(pool)
+        .copied()
+        .ok_or(SigError::Invalid("internal: landmark pool out of bounds"))?
+        * cb.dim();
+    let data = cb
+        .data()
+        .get(..split)
+        .ok_or(SigError::Invalid("internal: landmark split exceeds corpus data"))?;
+    let pool_batch = PathBatch::ragged(data, &pool_lens, cb.dim())?;
+    let map = Arc::new(FeatureMap::try_build(spec, opts, &pool_batch)?);
+    let want = n
+        .checked_mul(map.rank())
+        .ok_or(SigError::TooLarge("restored feature matrix"))?;
+    if phi.len() != want {
+        return Err(SigError::Invalid(
+            "restored feature matrix has the wrong shape",
+        ));
+    }
     Ok(LowRankCache { map, phi, pool })
 }

@@ -76,6 +76,30 @@ impl PairBorder {
     pub fn retained_len(&self) -> usize {
         self.bottom.len() + self.right.len()
     }
+
+    /// The retained `(bottom, right)` vectors — the snapshot serialiser's
+    /// view of the border state.
+    pub fn parts(&self) -> (&[f64], &[f64]) {
+        (&self.bottom, &self.right)
+    }
+
+    /// Reassemble a border from its retained vectors (snapshot restore).
+    /// Validates the structural invariants — both vectors non-empty, both
+    /// starting at the 1.0 boundary corner, and sharing their terminal
+    /// value bit-for-bit — so a corrupt snapshot section cannot smuggle a
+    /// malformed border into the strip-extension sweeps.
+    pub fn from_parts(bottom: Vec<f64>, right: Vec<f64>) -> Result<PairBorder, SigError> {
+        let corners_ok = matches!((bottom.first(), right.first()), (Some(&b0), Some(&r0))
+            if b0.to_bits() == 1.0f64.to_bits() && r0.to_bits() == 1.0f64.to_bits());
+        let terminal_ok = matches!((bottom.last(), right.last()), (Some(&bl), Some(&rl))
+            if bl.to_bits() == rl.to_bits());
+        if !corners_ok || !terminal_ok {
+            return Err(SigError::Invalid(
+                "border parts must start at the 1.0 corner and share a terminal",
+            ));
+        }
+        Ok(PairBorder { bottom, right })
+    }
 }
 
 /// Refined grid extents and the shared p-scale for a `[m, n]` delta at
@@ -291,6 +315,21 @@ impl SchemeBorder {
     /// Refined column count of the fine grid.
     pub fn cols(&self) -> usize {
         self.fine.cols()
+    }
+
+    /// The fine-grid border (snapshot serialisation).
+    pub fn fine(&self) -> &PairBorder {
+        &self.fine
+    }
+
+    /// The coarse-grid border, when the scheme retained one.
+    pub fn coarse(&self) -> Option<&PairBorder> {
+        self.coarse.as_ref()
+    }
+
+    /// Reassemble from validated pair borders (snapshot restore).
+    pub fn from_parts(fine: PairBorder, coarse: Option<PairBorder>) -> SchemeBorder {
+        SchemeBorder { fine, coarse }
     }
 }
 

@@ -58,6 +58,11 @@ pub enum SigError {
     Protocol(String),
     /// Compute-backend failure (e.g. PJRT execution).
     Backend(String),
+    /// A corpus snapshot failed validation (bad magic/version, truncated
+    /// file, or a mandatory section whose content hash does not match).
+    /// Corrupt *derived-state* sections never raise this — they are dropped
+    /// and rebuilt lazily (see [`corpus::persist`](crate::corpus::persist)).
+    SnapshotCorrupt(String),
 }
 
 impl std::fmt::Display for SigError {
@@ -87,6 +92,7 @@ impl std::fmt::Display for SigError {
             SigError::NonFinite(what) => write!(f, "numerical failure: {what}"),
             SigError::Protocol(msg) => write!(f, "protocol error: {msg}"),
             SigError::Backend(msg) => write!(f, "backend error: {msg}"),
+            SigError::SnapshotCorrupt(msg) => write!(f, "snapshot corrupt: {msg}"),
         }
     }
 }

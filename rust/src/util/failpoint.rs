@@ -1,0 +1,159 @@
+//! Deterministic fault injection at I/O and queue seams.
+//!
+//! A **failpoint** is a named site compiled into the code as
+//! `failpoint!("name")`, which evaluates to the site's configured `u64`
+//! payload when armed and `None` otherwise. In a release build without the
+//! `failpoints` feature the macro is a constant `None` — the optimiser
+//! erases the site entirely, so production binaries carry zero overhead and
+//! zero reachable fault paths (enforced by siglint's
+//! `failpoint_release_free` rule: arming calls may only appear in test code
+//! or behind `#[cfg(any(test, feature = "failpoints"))]`).
+//!
+//! Sites are armed per-name through a process-wide registry:
+//!
+//! ```ignore
+//! failpoint::arm("snapshot.torn_write", 32);   // payload = byte cut point
+//! // ... exercise the seam ...
+//! failpoint::disarm("snapshot.torn_write");
+//! ```
+//!
+//! The payload is site-defined: torn writes and short reads use it as a
+//! truncation length, queue seams ignore it and treat any armed value as
+//! "inject now". `arm_times` arms a site for a bounded number of hits so a
+//! test can inject exactly N faults and then observe recovery. Tests that
+//! arm failpoints should hold [`serial_guard`] — the registry is
+//! process-global and `cargo test` runs tests concurrently.
+
+#![cfg_attr(not(any(test, feature = "failpoints")), allow(dead_code))]
+
+#[cfg(any(test, feature = "failpoints"))]
+mod active {
+    use crate::util::sync::lock_unpoisoned;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Armed state of one site: the payload and an optional remaining-hit
+    /// budget (`None` = armed until disarmed).
+    struct Arm {
+        value: u64,
+        remaining: Option<u64>,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<&'static str, Arm>> {
+        static REGISTRY: OnceLock<Mutex<HashMap<&'static str, Arm>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Arm `name` with `value` until [`disarm`]ed.
+    pub fn arm(name: &'static str, value: u64) {
+        lock_unpoisoned(registry()).insert(
+            name,
+            Arm {
+                value,
+                remaining: None,
+            },
+        );
+    }
+
+    /// Arm `name` for exactly `times` hits, then auto-disarm.
+    pub fn arm_times(name: &'static str, times: u64, value: u64) {
+        lock_unpoisoned(registry()).insert(
+            name,
+            Arm {
+                value,
+                remaining: Some(times),
+            },
+        );
+    }
+
+    /// Disarm one site (no-op if not armed).
+    pub fn disarm(name: &str) {
+        lock_unpoisoned(registry()).remove(name);
+    }
+
+    /// Disarm every site.
+    pub fn disarm_all() {
+        lock_unpoisoned(registry()).clear();
+    }
+
+    /// Site hook: the armed payload, decrementing a bounded budget.
+    pub fn eval(name: &str) -> Option<u64> {
+        let mut reg = lock_unpoisoned(registry());
+        let arm = reg.get_mut(name)?;
+        let value = arm.value;
+        match arm.remaining.as_mut() {
+            None => Some(value),
+            Some(0) => {
+                reg.remove(name);
+                None
+            }
+            Some(n) => {
+                *n -= 1;
+                if *n == 0 {
+                    // Last hit: deliver it, then disarm.
+                    reg.remove(name);
+                }
+                Some(value)
+            }
+        }
+    }
+
+    /// Serialise tests that arm failpoints (the registry is process-wide).
+    pub fn serial_guard() -> MutexGuard<'static, ()> {
+        static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+        lock_unpoisoned(GUARD.get_or_init(|| Mutex::new(())))
+    }
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+pub use active::{arm, arm_times, disarm, disarm_all, eval, serial_guard};
+
+/// Site hook — release builds without the `failpoints` feature compile to a
+/// constant `None` and the optimiser removes the site.
+#[cfg(not(any(test, feature = "failpoints")))]
+#[inline(always)]
+pub fn eval(_name: &str) -> Option<u64> {
+    None
+}
+
+/// Evaluate a failpoint site: `Some(payload)` when armed, `None` otherwise.
+/// See the [module docs](crate::util::failpoint) for payload semantics.
+#[macro_export]
+macro_rules! failpoint {
+    ($name:expr) => {
+        $crate::util::failpoint::eval($name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_sites_are_silent() {
+        let _g = serial_guard();
+        assert_eq!(failpoint!("failpoint.test.never_armed"), None);
+    }
+
+    #[test]
+    fn arm_and_disarm_round_trip() {
+        let _g = serial_guard();
+        arm("failpoint.test.rt", 42);
+        assert_eq!(failpoint!("failpoint.test.rt"), Some(42));
+        assert_eq!(failpoint!("failpoint.test.rt"), Some(42), "sticky until disarmed");
+        disarm("failpoint.test.rt");
+        assert_eq!(failpoint!("failpoint.test.rt"), None);
+    }
+
+    #[test]
+    fn bounded_arming_expires_after_its_budget() {
+        let _g = serial_guard();
+        arm_times("failpoint.test.bounded", 2, 7);
+        assert_eq!(failpoint!("failpoint.test.bounded"), Some(7));
+        assert_eq!(failpoint!("failpoint.test.bounded"), Some(7));
+        assert_eq!(failpoint!("failpoint.test.bounded"), None, "budget spent");
+        arm("failpoint.test.bounded", 1);
+        disarm_all();
+        assert_eq!(failpoint!("failpoint.test.bounded"), None);
+    }
+}

@@ -6,6 +6,7 @@
 //! needs, with the same observable semantics.
 
 pub mod error;
+pub mod failpoint;
 pub mod rng;
 pub mod pool;
 pub mod timing;

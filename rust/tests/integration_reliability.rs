@@ -1,0 +1,155 @@
+//! End-to-end reliability tests: admission control and crash recovery over
+//! real TCP. Overload and deadline rejections must arrive **typed** (wire
+//! statuses 2 and 3, never a silent compute or a dropped connection), the
+//! retrying client must back off with strictly increasing delays, and a
+//! drained server must leave a snapshot a fresh process restores
+//! bit-identically.
+//!
+//! Overload here is driven by real queue caps (`queue_cap`/`global_cap` of
+//! 1 and a parked flush window), not failpoints: integration tests link the
+//! library without `cfg(test)`, exactly like a release build, so these
+//! tests double as proof that the admission path needs no test-only hooks.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pysiglib::coordinator::{
+    serve, Batcher, BatcherConfig, Client, Op, RetryPolicy, Router, WireResponse,
+};
+use pysiglib::util::rng::Rng;
+
+fn start_server(config: BatcherConfig, router: Router) -> pysiglib::coordinator::ServerHandle {
+    let batcher = Arc::new(Batcher::start(Arc::new(router), config));
+    serve("127.0.0.1:0", batcher).expect("bind")
+}
+
+/// One queue slot, one global slot, and a flush window far longer than the
+/// test: the first submitted request parks and every later one is shed.
+fn single_slot_config() -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 1000,
+        max_wait: Duration::from_secs(30),
+        queue_cap: 1,
+        global_cap: 1,
+        deadline: None,
+    }
+}
+
+#[test]
+fn overload_is_typed_and_the_client_backs_off_monotonically() {
+    let handle = start_server(single_slot_config(), Router::native_only());
+    let addr = handle.addr;
+    let mut rng = Rng::new(300);
+    let path = rng.brownian_path(8, 2, 0.5);
+
+    // Park one request in the queue's single slot from a helper thread (it
+    // blocks awaiting its response until the server drains on shutdown).
+    let parked_path = path.clone();
+    let parked = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.signature(&parked_path, 8, 2, 3).unwrap()
+    });
+    // Wait until the parked request owns the slot.
+    std::thread::sleep(Duration::from_millis(50));
+
+    let mut client = Client::connect(addr)
+        .unwrap()
+        .with_retry(RetryPolicy {
+            max_attempts: 4,
+            base_ms: 1,
+            cap_ms: 8,
+            seed: 7,
+        });
+    let op = Op::Signature {
+        depth: 3,
+        transform: 0,
+    };
+    let resp = client.call_with_retry(op, 8, 2, &path).unwrap();
+    assert!(
+        matches!(resp, WireResponse::Overloaded { retry_after_ms } if retry_after_ms >= 1),
+        "expected a typed overload after exhausting retries, got {resp:?}"
+    );
+    let backoffs = client.backoffs_ms();
+    assert_eq!(backoffs.len(), 3, "max_attempts 4 = 3 slept backoffs: {backoffs:?}");
+    for w in backoffs.windows(2) {
+        assert!(w[1] > w[0], "backoff must increase monotonically: {backoffs:?}");
+    }
+
+    // Shutdown drains: the parked request is flushed, not dropped.
+    handle.stop();
+    let parked_resp = parked.join().expect("parked client thread").unwrap();
+    let want = pysiglib::sig::sig(&path, 8, 2, 3);
+    let err = pysiglib::util::linalg::max_abs_diff(&parked_resp, &want);
+    assert!(err < 1e-12, "drained request must still compute: {err}");
+}
+
+#[test]
+fn an_expired_deadline_is_a_typed_rejection_not_a_silent_compute() {
+    let config = BatcherConfig {
+        deadline: Some(Duration::ZERO),
+        ..BatcherConfig::default()
+    };
+    let handle = start_server(config, Router::native_only());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let mut rng = Rng::new(301);
+    let path = rng.brownian_path(8, 2, 0.5);
+    let op = Op::Signature {
+        depth: 3,
+        transform: 0,
+    };
+    let resp = client.call_typed(op, 8, 2, path).unwrap();
+    assert_eq!(resp, WireResponse::DeadlineExceeded, "{resp:?}");
+    handle.stop();
+}
+
+#[test]
+fn snapshot_rpc_without_a_configured_path_is_an_error_not_a_panic() {
+    let handle = start_server(BatcherConfig::default(), Router::native_only());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let err = client.snapshot_corpus().unwrap().unwrap_err();
+    assert!(err.contains("no snapshot path"), "{err}");
+    handle.stop();
+}
+
+#[test]
+fn a_drained_server_leaves_a_snapshot_a_fresh_server_restores_bit_identically() {
+    let dir = std::env::temp_dir().join(format!("pysiglib-reliability-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut rng = Rng::new(302);
+    let d = 2;
+    let corpus: Vec<Vec<f64>> = (0..6).map(|_| rng.brownian_path(10, d, 0.35)).collect();
+    let corpus_refs: Vec<&[f64]> = corpus.iter().map(|p| p.as_slice()).collect();
+    let queries: Vec<Vec<f64>> = (0..3).map(|_| rng.brownian_path(8, d, 0.4)).collect();
+    let query_refs: Vec<&[f64]> = queries.iter().map(|p| p.as_slice()).collect();
+
+    // First life: register, warm the corpus caches, snapshot over the wire,
+    // then drain (which snapshots again — the shutdown path must overwrite
+    // cleanly rather than corrupt the explicit snapshot).
+    let (id, live_mmd) = {
+        let router = Router::native_only().with_snapshot_dir(dir.clone());
+        let handle = start_server(BatcherConfig::default(), router);
+        let mut client = Client::connect(handle.addr).unwrap();
+        let id = client.register_corpus(&corpus_refs, d).unwrap().unwrap();
+        let mmd = client.mmd2_corpus(id, &query_refs, d, 0).unwrap().unwrap();
+        assert_eq!(client.snapshot_corpus().unwrap().unwrap(), 1);
+        handle.stop();
+        (id, mmd)
+    };
+    let file = dir.join("corpus.snapshot");
+    assert!(file.exists(), "drain must leave the snapshot in place");
+
+    // Second life: restore before serving, then answer the same query
+    // without re-registering — bit-identical to the first life.
+    let mut router = Router::native_only().with_snapshot_dir(dir.clone());
+    assert_eq!(router.restore_corpora().unwrap(), 1);
+    let handle = start_server(BatcherConfig::default(), router);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let restored_mmd = client.mmd2_corpus(id, &query_refs, d, 0).unwrap().unwrap();
+    assert!(
+        live_mmd.to_bits() == restored_mmd.to_bits(),
+        "restored server diverged: {live_mmd:?} vs {restored_mmd:?}"
+    );
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}

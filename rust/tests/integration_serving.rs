@@ -22,6 +22,7 @@ fn start_server(
         BatcherConfig {
             max_batch,
             max_wait: Duration::from_micros(max_wait_us),
+            ..BatcherConfig::default()
         },
     ));
     let handle = serve("127.0.0.1:0", batcher.clone()).expect("bind");

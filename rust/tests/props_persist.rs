@@ -1,0 +1,261 @@
+//! Property tests for corpus snapshot persistence — the acceptance bar for
+//! crash recovery: a registry restored from a snapshot is **bit-identical**
+//! to the live registry it was taken from, on every query path (MMD² and
+//! Gram, exact and low-rank, Nyström and random-signature features, uniform
+//! and ragged corpora), and answers those queries warm (zero cold rebuilds).
+//! Hostile snapshot files — truncations, flipped bytes, wrong magic or
+//! version — must produce the typed [`SigError::SnapshotCorrupt`] (or a
+//! clean derived-state drop) and never a panic.
+
+use pysiglib::corpus::CorpusRegistry;
+use pysiglib::kernel::{KernelOptions, LowRankSpec};
+use pysiglib::util::rng::Rng;
+use pysiglib::{PathBatch, SigError};
+
+/// Fresh per-test scratch directory (removed by each test on success).
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("pysiglib-props-persist-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Build a ragged batch's backing store.
+fn ragged(rng: &mut Rng, lens: &[usize], d: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut data = Vec::new();
+    for &l in lens {
+        data.extend(rng.brownian_path(l, d, 0.35));
+    }
+    (data, lens.to_vec())
+}
+
+/// Register `corpus`, warm both query families, snapshot, restore — and
+/// require the restored registry to answer both queries bit-identically
+/// and warm (its caches came from the file, not a rebuild).
+fn check_restore_is_bitwise(
+    d: usize,
+    corpus: (&[f64], &[usize]),
+    query: (&[f64], &[usize]),
+    spec: Option<&LowRankSpec>,
+    label: &str,
+) {
+    let opts = KernelOptions::default();
+    let cb = PathBatch::ragged(corpus.0, corpus.1, d).unwrap();
+    let qb = PathBatch::ragged(query.0, query.1, d).unwrap();
+
+    let live = CorpusRegistry::new();
+    let id = live.register(&cb).unwrap();
+    let live_mmd = live.mmd2_query(id, &qb, &opts, spec).unwrap();
+    let live_gram = live.gram_query(id, &qb, &opts, spec).unwrap();
+
+    let dir = scratch(label);
+    let file = dir.join("corpus.snapshot");
+    assert_eq!(live.snapshot_to(&file).unwrap(), 1, "{label}");
+
+    let restored = CorpusRegistry::restore_from(&file).unwrap();
+    let rid = restored.ids().pop().unwrap();
+    assert_eq!(rid, id, "{label}: restore must preserve corpus ids");
+    let rest_mmd = restored.mmd2_query(rid, &qb, &opts, spec).unwrap();
+    let rest_gram = restored.gram_query(rid, &qb, &opts, spec).unwrap();
+
+    assert!(
+        live_mmd.to_bits() == rest_mmd.to_bits(),
+        "{label}: mmd2 {live_mmd:?} vs {rest_mmd:?}"
+    );
+    assert_eq!(live_gram.len(), rest_gram.len(), "{label}");
+    for (i, (a, b)) in live_gram.iter().zip(rest_gram.iter()).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "{label}: gram[{i}] {a:?} vs {b:?}");
+    }
+    let stats = restored.stats();
+    assert_eq!(stats.cold_builds, 0, "{label}: restored queries must be warm");
+    assert!(stats.warm_hits >= 2, "{label}: stats {stats:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restore_is_bitwise_exact_uniform() {
+    let mut rng = Rng::new(910);
+    let d = 3;
+    let (c, lc) = ragged(&mut rng, &[12; 8], d);
+    let (q, lq) = ragged(&mut rng, &[12; 4], d);
+    check_restore_is_bitwise(d, (&c, &lc), (&q, &lq), None, "exact-uniform");
+}
+
+#[test]
+fn restore_is_bitwise_exact_ragged() {
+    let mut rng = Rng::new(911);
+    let d = 2;
+    let (c, lc) = ragged(&mut rng, &[5, 13, 8, 21, 3, 9], d);
+    let (q, lq) = ragged(&mut rng, &[7, 11, 4], d);
+    check_restore_is_bitwise(d, (&c, &lc), (&q, &lq), None, "exact-ragged");
+}
+
+#[test]
+fn restore_is_bitwise_nystrom() {
+    let mut rng = Rng::new(912);
+    let d = 3;
+    let (c, lc) = ragged(&mut rng, &[10, 6, 14, 10, 8, 10, 12, 9], d);
+    let (q, lq) = ragged(&mut rng, &[9, 12, 6], d);
+    let spec = LowRankSpec::nystrom(6, 41);
+    check_restore_is_bitwise(d, (&c, &lc), (&q, &lq), Some(&spec), "nystrom");
+}
+
+#[test]
+fn restore_is_bitwise_random_sig() {
+    let mut rng = Rng::new(913);
+    let d = 2;
+    let (c, lc) = ragged(&mut rng, &[8, 12, 6, 10, 9, 7], d);
+    let (q, lq) = ragged(&mut rng, &[8, 10], d);
+    let spec = LowRankSpec::random_sig(8, 3, 57);
+    check_restore_is_bitwise(d, (&c, &lc), (&q, &lq), Some(&spec), "random-sig");
+}
+
+#[test]
+fn restore_carries_every_registered_corpus() {
+    let mut rng = Rng::new(914);
+    let d = 2;
+    let opts = KernelOptions::default();
+    let (a, la) = ragged(&mut rng, &[9, 7, 11], d);
+    let (b, lb) = ragged(&mut rng, &[6, 6, 6, 6], d);
+    let (q, lq) = ragged(&mut rng, &[8, 5], d);
+    let qb = PathBatch::ragged(&q, &lq, d).unwrap();
+
+    let live = CorpusRegistry::new();
+    let ida = live.register(&PathBatch::ragged(&a, &la, d).unwrap()).unwrap();
+    let idb = live.register(&PathBatch::ragged(&b, &lb, d).unwrap()).unwrap();
+    let ma = live.mmd2_query(ida, &qb, &opts, None).unwrap();
+    let mb = live.mmd2_query(idb, &qb, &opts, None).unwrap();
+
+    let dir = scratch("multi");
+    let file = dir.join("corpus.snapshot");
+    assert_eq!(live.snapshot_to(&file).unwrap(), 2);
+    let restored = CorpusRegistry::restore_from(&file).unwrap();
+    assert_eq!(restored.ids(), vec![ida, idb]);
+    let ra = restored.mmd2_query(ida, &qb, &opts, None).unwrap();
+    let rb = restored.mmd2_query(idb, &qb, &opts, None).unwrap();
+    assert!(ma.to_bits() == ra.to_bits() && mb.to_bits() == rb.to_bits());
+    assert_eq!(restored.stats().cold_builds, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Hostile inputs: every corruption is a typed error or a clean drop.
+
+fn u64_at(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
+}
+
+/// Walk the snapshot's section table: (tag, body_start, body_len).
+fn sections(bytes: &[u8]) -> Vec<(u64, usize, usize)> {
+    let count = u64_at(bytes, 16) as usize;
+    let mut out = Vec::new();
+    let mut at = 24;
+    for _ in 0..count {
+        let tag = u64_at(bytes, at);
+        let len = u64_at(bytes, at + 8) as usize;
+        out.push((tag, at + 24, len));
+        at += 24 + len;
+    }
+    assert_eq!(at, bytes.len(), "section table must span the file");
+    out
+}
+
+/// A warmed single-corpus snapshot (exact + Nyström caches) plus the query
+/// it was warmed with and the live answer, for corruption experiments.
+fn warm_snapshot_bytes(dir: &std::path::Path) -> (Vec<u8>, Vec<f64>, Vec<usize>, f64) {
+    let mut rng = Rng::new(915);
+    let d = 2;
+    let (c, lc) = ragged(&mut rng, &[8, 10, 6, 9], d);
+    let (q, lq) = ragged(&mut rng, &[7, 5], d);
+    let cb = PathBatch::ragged(&c, &lc, d).unwrap();
+    let qb = PathBatch::ragged(&q, &lq, d).unwrap();
+    let opts = KernelOptions::default();
+    let spec = LowRankSpec::nystrom(4, 23);
+    let live = CorpusRegistry::new();
+    let id = live.register(&cb).unwrap();
+    let mmd = live.mmd2_query(id, &qb, &opts, None).unwrap();
+    live.mmd2_query(id, &qb, &opts, Some(&spec)).unwrap();
+    let file = dir.join("corpus.snapshot");
+    live.snapshot_to(&file).unwrap();
+    (std::fs::read(&file).unwrap(), q, lq, mmd)
+}
+
+#[test]
+fn truncated_snapshots_are_typed_errors() {
+    let dir = scratch("truncate");
+    let (bytes, ..) = warm_snapshot_bytes(&dir);
+    let file = dir.join("cut.snapshot");
+    for cut in [0, 7, 8, 23, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&file, &bytes[..cut]).unwrap();
+        match CorpusRegistry::restore_from(&file) {
+            Err(SigError::SnapshotCorrupt(_)) => {}
+            other => panic!("cut at {cut}: expected SnapshotCorrupt, got {other:?}"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_magic_and_version_are_typed_errors() {
+    let dir = scratch("header");
+    let (bytes, ..) = warm_snapshot_bytes(&dir);
+    let file = dir.join("bad.snapshot");
+    let mut magic = bytes.clone();
+    magic[0] ^= 0xff;
+    std::fs::write(&file, &magic).unwrap();
+    match CorpusRegistry::restore_from(&file) {
+        Err(SigError::SnapshotCorrupt(msg)) => assert!(msg.contains("magic"), "{msg}"),
+        other => panic!("expected SnapshotCorrupt, got {other:?}"),
+    }
+    let mut version = bytes.clone();
+    version[8] = 99;
+    std::fs::write(&file, &version).unwrap();
+    match CorpusRegistry::restore_from(&file) {
+        Err(SigError::SnapshotCorrupt(msg)) => assert!(msg.contains("version"), "{msg}"),
+        other => panic!("expected SnapshotCorrupt, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn a_flipped_byte_in_each_section_drops_derived_state_but_fails_paths() {
+    let dir = scratch("flip");
+    let (bytes, q, lq, live_mmd) = warm_snapshot_bytes(&dir);
+    let qb = PathBatch::ragged(&q, &lq, 2).unwrap();
+    let opts = KernelOptions::default();
+    let file = dir.join("flipped.snapshot");
+    let secs = sections(&bytes);
+    assert!(secs.iter().any(|&(tag, ..)| tag == 2), "exact section present");
+    assert!(secs.iter().any(|&(tag, ..)| tag == 3), "low-rank section present");
+    for &(tag, start, len) in &secs {
+        let mut b = bytes.clone();
+        b[start + len / 2] ^= 0x20;
+        std::fs::write(&file, &b).unwrap();
+        match (tag, CorpusRegistry::restore_from(&file)) {
+            // Tag 1 = paths: mandatory, a checksum failure fails the load.
+            (1, Err(SigError::SnapshotCorrupt(msg))) => {
+                assert!(msg.contains("checksum"), "{msg}")
+            }
+            // Tags 2-3 = derived caches: dropped, rebuilt lazily — and the
+            // rebuilt answer still matches the live registry bit-for-bit.
+            (2 | 3, Ok(restored)) => {
+                let rid = restored.ids().pop().unwrap();
+                let m = restored.mmd2_query(rid, &qb, &opts, None).unwrap();
+                assert!(m.to_bits() == live_mmd.to_bits(), "section {tag}");
+            }
+            (tag, other) => panic!("section {tag}: unexpected outcome {other:?}"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_snapshot_is_a_backend_error_not_a_panic() {
+    let dir = scratch("missing");
+    let gone = dir.join("never-written.snapshot");
+    match CorpusRegistry::restore_from(&gone) {
+        Err(SigError::Backend(_)) => {}
+        other => panic!("expected Backend error, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
